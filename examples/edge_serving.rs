@@ -1,0 +1,76 @@
+//! **End-to-end serving driver** (the DESIGN.md §5 e2e validation): load the
+//! build-time-trained tiny LM, start the coordinator (continuous batching,
+//! bounded-queue admission), replay a Poisson/Zipf request trace against it
+//! under two attention backends, and report latency/throughput — recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example edge_serving
+//! ```
+
+use intattention::attention::PipelineKind;
+use intattention::coordinator::batcher::BatchPolicy;
+use intattention::coordinator::{Engine, EngineOptions};
+use intattention::harness::experiments::load_or_random_weights;
+use intattention::harness::workload::request_trace;
+use intattention::model::tokenizer;
+use intattention::util::prng::Pcg64;
+
+fn main() {
+    let weights = load_or_random_weights();
+    let cfg = weights.cfg;
+    let n_requests: usize = std::env::var("REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+
+    // Prompts drawn from the training corpus distribution.
+    let corpus = intattention::harness::fidelity::synthetic_corpus(8192, 5);
+    let corpus_tokens = tokenizer::encode(&corpus);
+
+    for kind in [PipelineKind::QuantOnly, PipelineKind::IntAttention] {
+        let mut rng = Pcg64::seed_from_u64(99);
+        let trace = request_trace(&mut rng, n_requests, 12.0, &[24, 64, 120], 16);
+        let opts = EngineOptions {
+            attention: kind,
+            policy: BatchPolicy { max_active: 6, ..Default::default() },
+            max_queue: 64,
+            threads: 1,
+        };
+        let handle = Engine::start_bounded(weights.clone(), opts);
+        let t0 = std::time::Instant::now();
+        let mut receivers = Vec::new();
+        let mut rejected = 0;
+        for r in &trace {
+            if let Some(sleep) =
+                std::time::Duration::from_micros(r.arrival_us).checked_sub(t0.elapsed())
+            {
+                std::thread::sleep(sleep);
+            }
+            let plen = r.prompt_len.min(cfg.max_seq.saturating_sub(r.gen_len + 1)).max(1);
+            let start = (r.arrival_us as usize) % (corpus_tokens.len() - plen - 1);
+            let prompt = corpus_tokens[start..start + plen].to_vec();
+            match handle.submit(prompt, r.gen_len, 0.7, 12) {
+                Ok(rx) => receivers.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        let mut ttfts = Vec::new();
+        for rx in receivers {
+            if let Ok(resp) = rx.recv() {
+                ttfts.push(resp.ttft_us() as f64 / 1e3);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = handle.shutdown();
+        println!("=== backend {} ===", kind.name());
+        println!("  {}", snap.render());
+        println!(
+            "  wall {:.2}s | {} rejected | ttft mean {:.1} ms | p99 {:.1} ms",
+            wall,
+            rejected,
+            intattention::util::stats::mean(&ttfts),
+            intattention::util::stats::percentile(&ttfts, 99.0),
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Generate text with the build-time-trained tiny LM under each attention
+//! pipeline, and report per-pipeline perplexity on the held-out corpus —
+//! the qualitative version of the Table 1 reproduction.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example llm_generate
+//! ```
+
+use intattention::attention::PipelineKind;
+use intattention::harness::experiments::load_or_random_weights;
+use intattention::harness::fidelity::{eval_lm_fidelity, eval_sequences};
+use intattention::model::lm::TinyLm;
+use intattention::model::tokenizer;
+use intattention::util::prng::Pcg64;
+
+fn main() {
+    let weights = load_or_random_weights();
+    let cfg = weights.cfg;
+    println!(
+        "tiny LM: {} layers, d_model {}, {} heads, {} params\n",
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.param_count()
+    );
+
+    let prompt = "3 + 4 = ";
+    for kind in [PipelineKind::Fp32, PipelineKind::QuantOnly, PipelineKind::IntAttention] {
+        let mut lm = TinyLm::new(weights.clone(), kind);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let out = lm.generate(&tokenizer::encode(prompt), 48, 0.7, 12, &mut rng);
+        println!("[{:>12}] {prompt}{}", kind.name(), tokenizer::decode(&out).replace('\n', " "));
+    }
+
+    println!("\nheld-out fidelity (paper Table 1 shape):");
+    let dir = intattention::runtime::default_artifacts_dir();
+    let seqs = eval_sequences(&dir, 6, 160.min(cfg.max_seq), cfg.vocab);
+    println!(
+        "{:>13} | {:>10} | {:>18} | {:>9}",
+        "pipeline", "perplexity", "top1-agree vs FP32", "loss MAD"
+    );
+    for kind in [
+        PipelineKind::Fp32,
+        PipelineKind::Fp16,
+        PipelineKind::QuantOnly,
+        PipelineKind::IntAttention,
+    ] {
+        let f = eval_lm_fidelity(&weights, kind, &seqs);
+        println!(
+            "{:>13} | {:>10.3} | {:>18.3} | {:>9.4}",
+            f.pipeline, f.perplexity, f.top1_agreement, f.loss_mad
+        );
+    }
+}

@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compiler_ir('hlo')`` protos or ``.serialize()``) is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects; converting the stablehlo
+module to an XlaComputation and dumping ``as_hlo_text`` reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).  All functions are
+lowered with ``return_tuple=True``; the Rust side unwraps with
+``decompose_tuple``.
+
+Artifacts produced (all f32-typed interfaces so the Rust runtime's
+``run_f32`` covers them):
+
+  int_attention_head_l{L}_d{D}.hlo.txt   full IntAttention head (Pallas L1)
+  index_softmax_l{L}.hlo.txt             IndexSoftmax on (scaled) f32 logits
+  float_attention_head_l{L}_d{D}.hlo.txt FP32 oracle head (parity checks)
+  tiny_lm_logits_t{T}.hlo.txt            trained-LM forward, weights inlined
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import int_attention as ka
+from .kernels import index_softmax as ks
+from .kernels import ref as kref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer elides arrays beyond a
+    # few elements as "{...}", which the crate-side text parser silently
+    # accepts and mis-executes (the LUT came back as garbage). Cost: bigger
+    # .hlo.txt files; correctness: non-negotiable.
+    return comp.as_hlo_text(True)
+
+
+def write(out_dir: pathlib.Path, name: str, lowered) -> None:
+    text = to_hlo_text(lowered)
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    print(f"  {path.name}: {len(text) / 1e3:.0f} kB")
+
+
+def int_attention_f32(q, k, v):
+    """f32-interface IntAttention head (quantize inside, Pallas kernel for
+    the O(L^2) core)."""
+    return (ka.int_attention(q, k, v),)
+
+
+def float_attention_f32(q, k, v):
+    return (kref.float_attention_ref(q, k, v),)
+
+
+def index_softmax_f32(logits, alpha):
+    """f32-interface IndexSoftmax: logits are alpha-scaled back to ints on
+    the way in (the Rust caller holds INT32 logits; f32 carries them exactly
+    up to 2^24, ample for the demo shapes)."""
+    li = jnp.round(logits).astype(jnp.int32)
+    p = ks.index_softmax(li, alpha[0])
+    return (p.astype(jnp.float32) / 255.0,)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--head-shapes", default="64x32,256x64",
+                    help="comma list of LxD attention-head shapes")
+    ap.add_argument("--lm-t", type=int, default=32)
+    ap.add_argument("--skip-lm", action="store_true")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    print(f"lowering artifacts into {out}")
+
+    for shape in args.head_shapes.split(","):
+        l, d = (int(x) for x in shape.strip().split("x"))
+        spec = jax.ShapeDtypeStruct((l, d), jnp.float32)
+        write(out, f"int_attention_head_l{l}_d{d}",
+              jax.jit(int_attention_f32).lower(spec, spec, spec))
+        write(out, f"float_attention_head_l{l}_d{d}",
+              jax.jit(float_attention_f32).lower(spec, spec, spec))
+        logits_spec = jax.ShapeDtypeStruct((l, l), jnp.float32)
+        alpha_spec = jax.ShapeDtypeStruct((1,), jnp.float32)
+        write(out, f"index_softmax_l{l}",
+              jax.jit(index_softmax_f32).lower(logits_spec, alpha_spec))
+
+    if not args.skip_lm:
+        # Trained-LM forward with weights inlined as constants: the
+        # self-contained artifact the compose example serves through PJRT.
+        weights_bin = out / "weights.bin"
+        if weights_bin.exists():
+            flat = np.frombuffer(weights_bin.read_bytes(), dtype="<f4")
+            params = unflatten(flat, model.CONFIG)
+            t = args.lm_t
+
+            def lm_logits(tokens_f32):
+                tokens = jnp.clip(tokens_f32.astype(jnp.int32), 0,
+                                  model.CONFIG["vocab"] - 1)
+                return (model.forward(params, tokens, attention="float"),)
+
+            spec = jax.ShapeDtypeStruct((t,), jnp.float32)
+            write(out, f"tiny_lm_logits_t{t}", jax.jit(lm_logits).lower(spec))
+        else:
+            print("  (skipping tiny_lm artifact: run train.py first)")
+
+
+def unflatten(flat, cfg):
+    """Inverse of model.to_flat -- must track rust weights.rs order."""
+    d, dm = cfg["d_model"], cfg["mlp_mult"] * cfg["d_model"]
+    pos = [0]
+
+    def take(*shape):
+        n = int(np.prod(shape))
+        a = jnp.asarray(flat[pos[0]:pos[0] + n]).reshape(shape)
+        pos[0] += n
+        return a
+
+    params = {"tok_emb": take(cfg["vocab"], d),
+              "pos_emb": take(cfg["max_seq"], d), "blocks": []}
+    for _ in range(cfg["n_layers"]):
+        params["blocks"].append({
+            "ln1_g": take(d), "ln1_b": take(d),
+            "wq": take(d, d), "wk": take(d, d),
+            "wv": take(d, d), "wo": take(d, d),
+            "ln2_g": take(d), "ln2_b": take(d),
+            "w1": take(dm, d), "b1": take(dm),
+            "w2": take(d, dm), "b2": take(d),
+        })
+    params["ln_f_g"] = take(d)
+    params["ln_f_b"] = take(d)
+    assert pos[0] == flat.size, (pos[0], flat.size)
+    return params
+
+
+if __name__ == "__main__":
+    main()

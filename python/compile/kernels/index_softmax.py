@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: **IndexSoftmax** (paper eq. 7-15).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles rows
+across NEON lanes; on TPU we tile `block_q` logit rows per grid step so the
+INT32 tile, the 32-byte LUT and the UINT8 output tile live in VMEM, with
+row-max / row-sum as intra-tile VPU reductions. `interpret=True` everywhere
+on this host — real-TPU lowering emits a Mosaic custom-call the CPU PJRT
+plugin cannot execute (see /opt/xla-example/README.md).
+
+The kernel is bit-exact against `ref.index_softmax_ref`: same integer
+rounding `(2·num + den) // (2·den)` on nonnegative numerators.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _index_softmax_kernel(logits_ref, lut_ref, c_int_ref, out_ref, *, n1,
+                          block_q, causal):
+    """One grid step: a (block_q, L) tile of INT32 logits → UINT8 P̂ tile."""
+    logits = logits_ref[...].astype(jnp.int64)
+    lut = lut_ref[...].astype(jnp.int32)
+    c_int = c_int_ref[0].astype(jnp.int64)
+    l = logits.shape[1]
+
+    if causal:
+        # Global row index of each tile row → decoder prefill mask.
+        row0 = pl.program_id(0) * block_q
+        rows = row0 + jnp.arange(block_q)[:, None]
+        valid = jnp.arange(l)[None, :] <= rows
+        neg = jnp.iinfo(jnp.int32).min
+        logits = jnp.where(valid, logits, neg)
+
+    # eq. 7: row-wise max-subtraction (the m − A sign convention).
+    row_max = jnp.max(logits, axis=1, keepdims=True)
+    delta = row_max - logits
+    # eq. 9: integer-domain clipping (sparsity-aware pruning); masked-out
+    # entries have huge delta and land in the LUT's zero bucket.
+    clipped = jnp.minimum(delta, c_int)
+    # eq. 11: index mapping, round-half-away on nonnegative ints.
+    idx = ((2 * clipped * n1 + c_int) // (2 * c_int)).astype(jnp.int32)
+    # eq. 14: LUT gather (32-entry UINT8 table broadcast in VMEM).
+    e = ref.lut_lookup(lut, idx)
+    if causal:
+        e = jnp.where(valid, e, 0)
+    # eq. 15: integer scale normalization with a widened accumulator.
+    s = jnp.sum(e, axis=1, keepdims=True)
+    s = jnp.maximum(s, 1)  # padded rows (beyond M) are all-invalid  # padded rows (beyond M) are all-invalid
+    p = (2 * 255 * e + s) // (2 * s)
+    out_ref[...] = p.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "c", "block_q", "causal"))
+def index_softmax(logits_i32, alpha, b: int = ref.DEFAULT_B,
+                  c: float = ref.DEFAULT_C, block_q: int = 128,
+                  causal: bool = False):
+    """IndexSoftmax over INT32 logits `[M, L]` → UINT8 `[M, L]`.
+
+    `alpha = s_Q·s_K/√d` enters only through the scalar `c_int` (eq. 8);
+    everything per-element is integer.
+    """
+    m, l = logits_i32.shape
+    n1 = (1 << b) - 1
+    lut = ref.build_lut_u8(b, c)
+    c_int = ref.c_int_of(alpha, c).reshape((1,)).astype(jnp.int64)
+
+    block_q = min(block_q, m)
+    # Pad M to a multiple of block_q so the grid is exact.
+    pad = (-m) % block_q
+    if pad:
+        logits_i32 = jnp.pad(logits_i32, ((0, pad), (0, 0)))
+    grid = (logits_i32.shape[0] // block_q,)
+
+    out = pl.pallas_call(
+        functools.partial(_index_softmax_kernel, n1=n1, block_q=block_q,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            # (block_q, L) INT32 tile staged in VMEM per grid step.
+            pl.BlockSpec((block_q, l), lambda i: (i, 0)),
+            # The 2^b-entry LUT: broadcast to every step (fits registers).
+            pl.BlockSpec((lut.shape[0],), lambda i: (0,)),
+            # Scalar c_int.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((logits_i32.shape[0], l), jnp.uint8),
+        interpret=True,
+    )(logits_i32, lut, c_int)
+    return out[:m]
+
+
+def vmem_bytes_estimate(block_q: int, l: int, b: int = ref.DEFAULT_B) -> int:
+    """Per-grid-step VMEM footprint (DESIGN.md §Perf L1 target ≤ ~1 MiB):
+    INT32 logits tile + i64 staging + UINT8 out tile + LUT."""
+    return block_q * l * 4 + block_q * l * 8 + block_q * l + (1 << b)

@@ -1,0 +1,131 @@
+"""L1 Pallas kernel: the full **IntAttention** head (paper §3, Figure 3).
+
+One kernel = one attention head: INT8 Q̂/K̂/V̂ tiles in VMEM, the Q̂K̂ᵀ and
+P̂V̂ matmuls on the MXU int8 path (`preferred_element_type=int32` — the TPU
+analogue of the paper's NEON SDOT/I8MM), IndexSoftmax on the VPU between
+them, and a single f32 rescale at the end. No dequantize→softmax→requantize
+detour exists in the lowered module — inspect the HLO text in artifacts/.
+
+Grid: `block_q` query rows per step; K̂/V̂ are resident across steps (their
+VMEM cost is L·d bytes each — at L=4096, d=128 that is 512 KiB + 512 KiB,
+inside the ~1 MiB/core budget with the logits tile streamed).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _int_attention_kernel(q_ref, k_ref, v_ref, lut_ref, c_int_ref, sv_ref,
+                          out_ref, *, n1, block_q, causal):
+    q8 = q_ref[...].astype(jnp.int32)
+    k8 = k_ref[...].astype(jnp.int32)
+    v8 = v_ref[...].astype(jnp.int32)
+    lut = lut_ref[...].astype(jnp.int32)
+    c_int = c_int_ref[0].astype(jnp.int64)
+    sv = sv_ref[0]
+
+    # Q̂K̂ᵀ with INT32 accumulation (eq. 4) — MXU int8 mode on real TPU.
+    logits = jnp.matmul(q8, k8.T, preferred_element_type=jnp.int32)
+
+    # IndexSoftmax (eq. 7-15), integer end to end.
+    logits64 = logits.astype(jnp.int64)
+    if causal:
+        row0 = pl.program_id(0) * block_q
+        rows = row0 + jnp.arange(logits64.shape[0])[:, None]
+        valid = jnp.arange(logits64.shape[1])[None, :] <= rows
+        logits64 = jnp.where(valid, logits64, jnp.iinfo(jnp.int32).min)
+    row_max = jnp.max(logits64, axis=1, keepdims=True)
+    delta = row_max - logits64
+    clipped = jnp.minimum(delta, c_int)
+    idx = ((2 * clipped * n1 + c_int) // (2 * c_int)).astype(jnp.int32)
+    e = ref.lut_lookup(lut, idx)  # eq. 14 LUT gather
+    if causal:
+        e = jnp.where(valid, e, 0)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    s = jnp.maximum(s, 1)  # padded rows (beyond M) are all-invalid
+    # Materialize P̂ as UINT8 (the paper's ×255 unsigned formulation) before
+    # the aggregation GEMM — the u8 tensor is visible in the lowered HLO.
+    p_u8 = ((2 * 255 * e + s) // (2 * s)).astype(jnp.uint8)
+    p = p_u8.astype(jnp.int32)
+
+    # P̂V̂ with INT32 accumulation (§3.2), then the single output rescale
+    # O = (s_V/255)·(P̂V̂) (eq. 5 + eq. 15 scale).
+    acc = jnp.matmul(p, v8, preferred_element_type=jnp.int32)
+    out_ref[...] = acc.astype(jnp.float32) * (sv / 255.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b", "c", "block_q", "causal"))
+def int_attention_quantized(q8, k8, v8, alpha, sv, b: int = ref.DEFAULT_B,
+                            c: float = ref.DEFAULT_C, block_q: int = 128,
+                            causal: bool = False):
+    """IntAttention on pre-quantized INT8 inputs.
+
+    `q8`: [M, d] int8; `k8`, `v8`: [L, d] int8; `alpha = s_Q·s_K/√d`;
+    `sv` = s_V. Returns f32 `[M, d]`.
+    """
+    m, d = q8.shape
+    l = k8.shape[0]
+    n1 = (1 << b) - 1
+    lut = ref.build_lut_u8(b, c)
+    c_int = ref.c_int_of(alpha, c).reshape((1,)).astype(jnp.int64)
+    sv_arr = jnp.asarray(sv, dtype=jnp.float32).reshape((1,))
+
+    block_q = min(block_q, m)
+    pad = (-m) % block_q
+    if pad:
+        q8 = jnp.pad(q8, ((0, pad), (0, 0)))
+    grid = (q8.shape[0] // block_q,)
+
+    out = pl.pallas_call(
+        functools.partial(_int_attention_kernel, n1=n1, block_q=block_q,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),   # Q̂ tile
+            pl.BlockSpec((l, d), lambda i: (0, 0)),          # K̂ resident
+            pl.BlockSpec((l, d), lambda i: (0, 0)),          # V̂ resident
+            pl.BlockSpec((lut.shape[0],), lambda i: (0,)),   # LUT
+            pl.BlockSpec((1,), lambda i: (0,)),              # c_int
+            pl.BlockSpec((1,), lambda i: (0,)),              # s_V
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q8.shape[0], d), jnp.float32),
+        interpret=True,
+    )(q8, k8, v8, lut, c_int, sv_arr)
+    return out[:m]
+
+
+def int_attention(q, k, v, b: int = ref.DEFAULT_B, c: float = ref.DEFAULT_C,
+                  block_q: int = 128, causal: bool = False):
+    """Convenience wrapper: f32 in → dynamic quantization (eq. 2-3) → kernel.
+
+    The quantization happens in plain jnp (it is O(L·d), not the hot spot);
+    the O(L²) work runs inside the Pallas kernel.
+    """
+    d = q.shape[-1]
+    q8, sq = ref.quantize_i8_ref(q)
+    k8, sk = ref.quantize_i8_ref(k)
+    v8, sv = ref.quantize_i8_ref(v)
+    alpha = sq * sk / jnp.sqrt(jnp.float32(d))
+    return int_attention_quantized(q8, k8, v8, alpha, sv, b, c, block_q,
+                                   causal)
+
+
+def mxu_utilization_estimate(m: int, l: int, d: int, block_q: int = 128) -> dict:
+    """Static MXU/VMEM analysis for DESIGN.md §Perf (interpret=True gives no
+    hardware timing): int8 MACs routed to the MXU vs VPU element ops."""
+    mxu_macs = m * l * d * 2           # both GEMMs
+    vpu_ops = m * l * 6                # max/sub/clip/idx/gather/sum per logit
+    vmem = block_q * d + 2 * l * d + block_q * l * 4  # q + k/v + logits tile
+    return {
+        "mxu_macs": mxu_macs,
+        "vpu_ops": vpu_ops,
+        "mxu_fraction": mxu_macs / (mxu_macs + vpu_ops),
+        "vmem_bytes": vmem,
+    }

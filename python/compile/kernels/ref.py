@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+Two layers of reference:
+
+* ``*_ref`` -- bit-exact integer semantics of the paper's equations (2-3,
+  7-15), written with plain jnp integer ops.  The Pallas kernels are tested
+  against these for exact equality.
+* ``float_attention_ref`` -- the FP32 softmax attention (eq. 1 + 6), the
+  end-to-end numerical oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+DEFAULT_B = 5
+DEFAULT_C = 6.6
+
+
+def quantize_i8_ref(x):
+    """Per-tensor symmetric INT8 (paper eq. 2-3). Returns (x_i8, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax == 0.0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def build_lut_u8(b: int = DEFAULT_B, c: float = DEFAULT_C):
+    """UINT8 exponential LUT (paper eq. 10 + 13): 2^b entries, last is 0.
+
+    Built with *numpy* so that inside a jit trace the table is a literal
+    constant — the lowered HLO contains the 32 bytes, not exp() ops (the
+    whole point of the paper: no exponential on the runtime path).
+    """
+    n = 1 << b
+    i = np.arange(n, dtype=np.float32)
+    vals = np.exp(-c * i / (n - 1))
+    vals[n - 1] = 0.0
+    return jnp.asarray(np.round(255.0 * vals).astype(np.uint8))
+
+
+def lut_lookup(lut, idx):
+    """32-entry LUT gather (paper eq. 14)."""
+    return jnp.take(lut, idx, axis=0)
+
+
+def c_int_of(alpha, c: float = DEFAULT_C):
+    """Quantization-aligned integer clipping threshold (eq. 8), >= 1."""
+    return jnp.maximum(jnp.round(c / alpha), 1.0).astype(jnp.int64)
+
+
+def index_softmax_ref(logits_i32, alpha, b: int = DEFAULT_B, c: float = DEFAULT_C,
+                      causal: bool = False):
+    """Bit-exact IndexSoftmax (paper eq. 7-15) on INT32 logits.
+
+    Returns the UINT8 probability matrix P-hat.  All arithmetic below is
+    integer except the one-off scalar ``c_int`` derivation, mirroring the
+    rust implementation exactly (round-half-away-from-zero on nonnegative
+    numerators via ``(2*num + den) // (2*den)``).
+    """
+    logits = logits_i32.astype(jnp.int64)
+    m, l = logits.shape
+    n1 = (1 << b) - 1
+    lut = build_lut_u8(b, c).astype(jnp.int32)
+    c_int = c_int_of(alpha, c)
+
+    if causal:
+        col = jnp.arange(l)[None, :]
+        row = jnp.arange(m)[:, None]
+        valid = col <= row
+    else:
+        valid = jnp.ones((m, l), dtype=bool)
+
+    neg = jnp.iinfo(jnp.int64).min
+    masked = jnp.where(valid, logits, neg)
+    row_max = jnp.max(masked, axis=1, keepdims=True)
+    delta = row_max - logits  # eq. 7 (m - A), >= 0 on valid entries
+
+    # eq. 9 + 11: clip, then round(delta * n1 / c_int) in integers
+    clipped = jnp.minimum(delta, c_int)
+    idx = ((2 * clipped * n1 + c_int) // (2 * c_int)).astype(jnp.int32)
+    e = jnp.where(valid, lut_lookup(lut, idx), 0)  # eq. 14
+
+    s = jnp.sum(e, axis=1, keepdims=True)  # eq. 15 widened accumulator
+    p = (2 * 255 * e + s) // (2 * s)
+    return jnp.where(valid, p, 0).astype(jnp.uint8)
+
+
+def int_attention_ref(q, k, v, b: int = DEFAULT_B, c: float = DEFAULT_C,
+                      causal: bool = False):
+    """Full IntAttention pipeline oracle (paper Sec. 3): f32 in, f32 out.
+
+    quantize -> i8 GEMM -> IndexSoftmax -> u8*i8 GEMM -> single rescale.
+    """
+    d = q.shape[-1]
+    q8, sq = quantize_i8_ref(q)
+    k8, sk = quantize_i8_ref(k)
+    v8, sv = quantize_i8_ref(v)
+    logits = jnp.matmul(
+        q8.astype(jnp.int32), k8.astype(jnp.int32).T,
+        preferred_element_type=jnp.int32)
+    alpha = sq * sk / jnp.sqrt(jnp.float32(d))
+    p = index_softmax_ref(logits, alpha, b, c, causal)
+    acc = jnp.matmul(
+        p.astype(jnp.int32), v8.astype(jnp.int32),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (sv / 255.0)
+
+
+def float_attention_ref(q, k, v, causal: bool = False):
+    """FP32 scaled-dot-product attention (paper eq. 1 + 6)."""
+    d = q.shape[-1]
+    logits = jnp.matmul(q, k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        m, l = logits.shape
+        mask = jnp.arange(l)[None, :] <= jnp.arange(m)[:, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.matmul(p, v)

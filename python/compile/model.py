@@ -1,0 +1,147 @@
+"""L2: the tiny transformer LM in JAX.
+
+Mirrors `rust/src/model/` exactly -- same pre-norm GPT block, same weight
+layout (projections stored output-major, i.e. the transpose of the usual
+jax `x @ W` convention), same tied LM head -- so weights trained here load
+bit-for-bit into the Rust engine via the canonical flat order documented in
+`rust/src/model/weights.rs`.
+
+Two attention modes:
+
+* ``attention="float"`` -- FP32 softmax attention (eq. 1+6); differentiable,
+  used for build-time training.
+* ``attention="int"``   -- the L1 Pallas IntAttention kernel per head; used
+  for AOT export and for parity checks against the Rust pipeline.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import int_attention as ka
+from .kernels import ref as kref
+
+CONFIG = dict(vocab=256, d_model=128, n_layers=4, n_heads=4, max_seq=256,
+              mlp_mult=4)
+
+
+def d_head(cfg=None):
+    cfg = cfg or CONFIG
+    return cfg["d_model"] // cfg["n_heads"]
+
+
+def init_params(key, cfg=None):
+    """Random init; layout matches rust Weights::random."""
+    cfg = cfg or CONFIG
+    d, dm = cfg["d_model"], cfg["mlp_mult"] * cfg["d_model"]
+    std = max(0.02, 1.0 / d ** 0.5)
+    keys = jax.random.split(key, 2 + 6 * cfg["n_layers"])
+    ki = iter(range(len(keys)))
+
+    def mat(k, r, c):
+        return std * jax.random.normal(keys[k], (r, c), dtype=jnp.float32)
+
+    params = {
+        "tok_emb": mat(next(ki), cfg["vocab"], d),
+        "pos_emb": mat(next(ki), cfg["max_seq"], d),
+        "blocks": [],
+        "ln_f_g": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+    }
+    for _ in range(cfg["n_layers"]):
+        params["blocks"].append({
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            # output-major: row o holds the weights producing output o
+            "wq": mat(next(ki), d, d),
+            "wk": mat(next(ki), d, d),
+            "wv": mat(next(ki), d, d),
+            "wo": mat(next(ki), d, d),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            "w1": mat(next(ki), dm, d),
+            "b1": jnp.zeros((dm,), jnp.float32),
+            "w2": mat(next(ki), d, dm),
+            "b2": jnp.zeros((d,), jnp.float32),
+        })
+    return params
+
+
+def layer_norm(x, g, b):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def linear(x, w, b=None):
+    """Output-major linear: y = x @ w.T (+ b)."""
+    y = x @ w.T
+    return y if b is None else y + b
+
+
+def _heads(x, n_heads):
+    t, d = x.shape
+    return x.reshape(t, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def attention_block(xn, blk, cfg, attention="float"):
+    q = linear(xn, blk["wq"])
+    k = linear(xn, blk["wk"])
+    v = linear(xn, blk["wv"])
+    nh = cfg["n_heads"]
+    qs, ks, vs = _heads(q, nh), _heads(k, nh), _heads(v, nh)
+    outs = []
+    for h in range(nh):
+        if attention == "int":
+            outs.append(ka.int_attention(qs[h], ks[h], vs[h], causal=True))
+        else:
+            outs.append(kref.float_attention_ref(qs[h], ks[h], vs[h], causal=True))
+    att = jnp.stack(outs, axis=0).transpose(1, 0, 2).reshape(xn.shape)
+    return linear(att, blk["wo"])
+
+
+def forward(params, tokens, cfg=None, attention="float"):
+    """Token ids [T] -> logits [T, vocab]; causal."""
+    cfg = cfg or CONFIG
+    t = tokens.shape[0]
+    pos = jnp.minimum(jnp.arange(t), cfg["max_seq"] - 1)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]
+    for blk in params["blocks"]:
+        xn = layer_norm(x, blk["ln1_g"], blk["ln1_b"])
+        x = x + attention_block(xn, blk, cfg, attention)
+        xn2 = layer_norm(x, blk["ln2_g"], blk["ln2_b"])
+        h = jax.nn.gelu(linear(xn2, blk["w1"], blk["b1"]), approximate=True)
+        x = x + linear(h, blk["w2"], blk["b2"])
+    xf = layer_norm(x, params["ln_f_g"], params["ln_f_b"])
+    return xf @ params["tok_emb"].T  # tied head
+
+
+def loss_fn(params, tokens, cfg=None):
+    """Mean next-token cross entropy (nats)."""
+    logits = forward(params, tokens, cfg, attention="float")
+    targets = tokens[1:]
+    lp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, targets[:, None], axis=-1))
+
+
+def batched_loss(params, batch, cfg=None):
+    return jnp.mean(jax.vmap(lambda t: loss_fn(params, t, cfg))(batch))
+
+
+def to_flat(params, cfg=None):
+    """Serialize to the canonical flat f32 order of rust weights.rs."""
+    cfg = cfg or CONFIG
+    parts = [params["tok_emb"].ravel(), params["pos_emb"].ravel()]
+    for blk in params["blocks"]:
+        for name in ("ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+                     "ln2_g", "ln2_b", "w1", "b1", "w2", "b2"):
+            parts.append(blk[name].ravel())
+    parts += [params["ln_f_g"].ravel(), params["ln_f_b"].ravel()]
+    return jnp.concatenate(parts).astype(jnp.float32)
+
+
+def param_count(cfg=None):
+    cfg = cfg or CONFIG
+    d, dm = cfg["d_model"], cfg["mlp_mult"] * cfg["d_model"]
+    emb = cfg["vocab"] * d + cfg["max_seq"] * d
+    per = 4 * d * d + 4 * d + 2 * d * dm + dm + d
+    return emb + cfg["n_layers"] * per + 2 * d

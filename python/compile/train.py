@@ -1,0 +1,135 @@
+"""Build-time trainer for the tiny byte-level LM (the Table 1/3/5/10
+substitution model, DESIGN.md Sec. 2).
+
+Trains on a synthetic structured corpus (arithmetic + word-bigram +
+counting patterns -- learnable but non-trivial), then exports:
+
+  artifacts/weights.bin        flat little-endian f32, rust canonical order
+  artifacts/model_meta.json    config + param_count (rust loader validates)
+  artifacts/corpus_train.txt   the training text
+  artifacts/corpus_eval.txt    held-out text (rust fidelity evals read this)
+  artifacts/train_log.json     loss curve (EXPERIMENTS.md e2e record)
+
+Python runs once at build time; nothing here is on the serve path.
+"""
+
+import argparse
+import json
+import pathlib
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+WORDS = ["edge", "device", "tensor", "integer", "attention", "softmax",
+         "kernel", "lookup", "table", "quantize", "latency", "energy",
+         "pipeline", "index"]
+
+
+def synthetic_corpus(chars: int, seed: int) -> str:
+    """Structured text; same pattern family as rust fidelity::synthetic_corpus
+    (the texts need not be byte-identical -- rust reads the file we write)."""
+    rng = random.Random(seed)
+    out = []
+    n = 0
+    while n < chars:
+        a, b = rng.randrange(10), rng.randrange(10)
+        kind = rng.randrange(3)
+        if kind == 0:
+            s = f"{a} + {b} = {a + b} . "
+        elif kind == 1:
+            w = rng.choice(WORDS)
+            s = f"{w} {WORDS[(WORDS.index(w) + 1) % len(WORDS)]} . "
+        else:
+            s = f"{a} {(a + 1) % 10} {(a + 2) % 10} . "
+        out.append(s)
+        n += len(s)
+    return "".join(out)[:chars]
+
+
+def encode(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=3e-4, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t)
+    vhat_scale = 1.0 / (1 - b2 ** t)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) /
+        (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    cfg = model.CONFIG
+
+    train_text = synthetic_corpus(200_000, seed=args.seed + 1)
+    eval_text = synthetic_corpus(20_000, seed=args.seed + 2)
+    (out / "corpus_train.txt").write_text(train_text)
+    (out / "corpus_eval.txt").write_text(eval_text)
+    data = encode(train_text)
+    eval_data = encode(eval_text)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init_params(key, cfg)
+    opt = adam_init(params)
+
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda p, b: model.batched_loss(p, b, cfg)))
+    eval_loss = jax.jit(lambda p, b: model.batched_loss(p, b, cfg))
+
+    rng = np.random.default_rng(args.seed)
+
+    def sample_batch(src):
+        starts = rng.integers(0, len(src) - args.seq - 1, size=args.batch)
+        return jnp.stack([jnp.asarray(src[s:s + args.seq]) for s in starts])
+
+    log = []
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = sample_batch(data)
+        loss, grads = loss_grad(params, batch)
+        params, opt = adam_update(params, grads, opt)
+        if step % 20 == 0 or step == args.steps - 1:
+            ev = float(eval_loss(params, sample_batch(eval_data)))
+            log.append({"step": step, "train_loss": float(loss),
+                        "eval_loss": ev, "eval_ppl": float(np.exp(ev)),
+                        "elapsed_s": round(time.time() - t0, 1)})
+            print(f"step {step:4d} | train {float(loss):.4f} | "
+                  f"eval {ev:.4f} (ppl {np.exp(ev):.2f})")
+
+    flat = np.asarray(model.to_flat(params, cfg), dtype="<f4")
+    assert flat.size == model.param_count(cfg), (flat.size, model.param_count(cfg))
+    (out / "weights.bin").write_bytes(flat.tobytes())
+    meta = dict(cfg)
+    meta["param_count"] = int(flat.size)
+    (out / "model_meta.json").write_text(json.dumps(meta))
+    (out / "train_log.json").write_text(json.dumps(log, indent=1))
+    print(f"wrote {flat.size} params ({flat.size * 4 / 1e6:.1f} MB) to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Pallas kernels vs pure-jnp oracles -- the core L1 correctness signal.
+
+The IndexSoftmax/IntAttention kernels must be *bit-exact* against the
+integer reference (same eq. 7-15 arithmetic), and the full pipeline must
+track the FP32 attention oracle closely. Hypothesis sweeps shapes, dtypes
+ranges and hyperparameters.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import index_softmax as ks
+from compile.kernels import int_attention as ka
+from compile.kernels import ref
+
+
+def rand_logits(rng, m, l, spread):
+    return jnp.asarray(rng.integers(-spread, spread + 1, size=(m, l)),
+                       dtype=jnp.int32)
+
+
+class TestLut:
+    def test_default_lut_is_32_bytes(self):
+        lut = ref.build_lut_u8()
+        assert lut.shape == (32,)
+        assert lut.dtype == jnp.uint8
+        assert int(lut[0]) == 255 and int(lut[-1]) == 0
+
+    def test_lut_monotone(self):
+        lut = np.asarray(ref.build_lut_u8())
+        assert (np.diff(lut.astype(np.int32)) <= 0).all()
+
+    @pytest.mark.parametrize("b", [2, 3, 4, 5, 6, 8])
+    def test_lut_matches_formula(self, b):
+        lut = np.asarray(ref.build_lut_u8(b=b))
+        n = 1 << b
+        for i in range(n - 1):
+            expect = round(255 * np.exp(-6.6 * i / (n - 1)))
+            assert lut[i] == expect
+
+
+class TestQuantize:
+    def test_scale_formula(self):
+        x = jnp.array([[0.0, -2.54, 1.0]])
+        q, s = ref.quantize_i8_ref(x)
+        assert abs(float(s) - 2.54 / 127.0) < 1e-7
+        assert int(q[0, 1]) == -127
+
+    def test_zero_tensor(self):
+        q, s = ref.quantize_i8_ref(jnp.zeros((4, 4)))
+        assert float(s) == 1.0
+        assert not np.asarray(q).any()
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_error_half_step(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(8, 16)), dtype=jnp.float32)
+        q, s = ref.quantize_i8_ref(x)
+        back = q.astype(jnp.float32) * s
+        assert float(jnp.max(jnp.abs(x - back))) <= float(s) / 2 + 1e-6
+
+
+class TestIndexSoftmaxKernel:
+    """Pallas kernel == integer reference, bit for bit."""
+
+    @given(
+        m=st.integers(1, 48),
+        l=st.integers(1, 96),
+        spread=st.integers(1, 50_000),
+        alpha=st.floats(1e-5, 0.3),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_bit_exact_vs_ref(self, m, l, spread, alpha, seed):
+        rng = np.random.default_rng(seed)
+        logits = rand_logits(rng, m, l, spread)
+        got = ks.index_softmax(logits, jnp.float32(alpha))
+        want = ref.index_softmax_ref(logits, jnp.float32(alpha))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("b,c", [(2, 6.6), (4, 4.4), (5, 6.6), (6, 8.8)])
+    def test_hyperparameters_sweep(self, b, c):
+        rng = np.random.default_rng(7)
+        logits = rand_logits(rng, 16, 64, 10_000)
+        got = ks.index_softmax(logits, jnp.float32(0.002), b=b, c=c)
+        want = ref.index_softmax_ref(logits, jnp.float32(0.002), b=b, c=c)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_blocking_invariance(self):
+        """Different block_q grids must not change the result."""
+        rng = np.random.default_rng(3)
+        logits = rand_logits(rng, 100, 64, 20_000)
+        a = ks.index_softmax(logits, jnp.float32(0.001), block_q=16)
+        b = ks.index_softmax(logits, jnp.float32(0.001), block_q=128)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_rows_sum_near_255(self):
+        rng = np.random.default_rng(5)
+        logits = rand_logits(rng, 32, 128, 20_000)
+        p = np.asarray(ks.index_softmax(logits, jnp.float32(0.001)))
+        sums = p.astype(np.int32).sum(axis=1)
+        assert (np.abs(sums - 255) <= 16).all(), sums
+
+    def test_uniform_rows(self):
+        logits = jnp.full((2, 8), 42, dtype=jnp.int32)
+        p = np.asarray(ks.index_softmax(logits, jnp.float32(0.001)))
+        assert (p == p[0, 0]).all()
+        assert abs(int(p[0, 0]) - 32) <= 1
+
+    def test_clipped_tail_is_zero(self):
+        # alpha=0.01 -> c_int=660; delta=1000 clipped to the zero bucket.
+        logits = jnp.array([[1000, 900, 0]], dtype=jnp.int32)
+        p = np.asarray(ks.index_softmax(logits, jnp.float32(0.01)))
+        assert p[0, 2] == 0
+        assert p[0, 0] == 255 - p[0, 1]  # renormalized over survivors
+
+    def test_approximates_float_softmax(self):
+        rng = np.random.default_rng(11)
+        # Gaussian logits (realistic peaked rows); near-uniform rows bottom
+        # out at the u8 resolution floor and are tested separately above.
+        logits = jnp.asarray(rng.normal(0.0, 400.0, size=(8, 256)),
+                             dtype=jnp.int32)
+        alpha = jnp.float32(0.004)
+        p = np.asarray(ks.index_softmax(logits, alpha)).astype(np.float64) / 255.0
+        f = np.asarray(logits, dtype=np.float64) * 0.004
+        e = np.exp(f - f.max(axis=1, keepdims=True))
+        pref = e / e.sum(axis=1, keepdims=True)
+        cos = (p * pref).sum() / (np.linalg.norm(p) * np.linalg.norm(pref))
+        assert cos > 0.98, cos
+
+
+class TestIntAttentionKernel:
+    @given(
+        m=st.integers(1, 40),
+        l=st.integers(1, 64),
+        d=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_bit_exact_vs_ref(self, m, l, d, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(m, d)), dtype=jnp.float32)
+        k = jnp.asarray(rng.normal(size=(l, d)), dtype=jnp.float32)
+        v = jnp.asarray(rng.normal(size=(l, d)), dtype=jnp.float32)
+        got = ka.int_attention(q, k, v)
+        want = ref.int_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0, atol=1e-6)
+
+    def test_close_to_float_attention(self):
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.normal(size=(32, 32)), dtype=jnp.float32)
+        k = jnp.asarray(rng.normal(size=(64, 32)), dtype=jnp.float32)
+        v = jnp.asarray(rng.normal(size=(64, 32)), dtype=jnp.float32)
+        got = np.asarray(ka.int_attention(q, k, v)).ravel()
+        want = np.asarray(ref.float_attention_ref(q, k, v)).ravel()
+        cos = (got * want).sum() / (np.linalg.norm(got) * np.linalg.norm(want))
+        assert cos > 0.99, cos
+
+    def test_blocking_invariance(self):
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.normal(size=(70, 16)), dtype=jnp.float32)
+        k = jnp.asarray(rng.normal(size=(48, 16)), dtype=jnp.float32)
+        v = jnp.asarray(rng.normal(size=(48, 16)), dtype=jnp.float32)
+        a = ka.int_attention(q, k, v, block_q=16)
+        b = ka.int_attention(q, k, v, block_q=128)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_vmem_estimate_within_budget(self):
+        est = ka.mxu_utilization_estimate(4096, 4096, 128, block_q=128)
+        assert est["vmem_bytes"] <= 4 * 1024 * 1024
+        assert est["mxu_fraction"] > 0.9  # GEMMs dominate the op mix
+
+
+class TestCausal:
+    def test_index_softmax_ref_causal(self):
+        rng = np.random.default_rng(6)
+        logits = rand_logits(rng, 6, 6, 10_000)
+        p = np.asarray(ref.index_softmax_ref(logits, jnp.float32(0.001),
+                                             causal=True))
+        assert (np.triu(p, 1) == 0).all()
+        assert p[0, 0] == 255
+
+    def test_int_attention_ref_causal_first_row(self):
+        rng = np.random.default_rng(8)
+        q = jnp.asarray(rng.normal(size=(8, 8)), dtype=jnp.float32)
+        k = jnp.asarray(rng.normal(size=(8, 8)), dtype=jnp.float32)
+        v = jnp.asarray(rng.normal(size=(8, 8)), dtype=jnp.float32)
+        out = np.asarray(ref.int_attention_ref(q, k, v, causal=True))
+        # First row attends only to itself: output ~ dequantized v[0].
+        v8, sv = ref.quantize_i8_ref(v)
+        expect = np.asarray(v8[0], dtype=np.float32) * float(sv)
+        np.testing.assert_allclose(out[0], expect, atol=float(sv))

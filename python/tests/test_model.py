@@ -1,0 +1,80 @@
+"""L2 model tests: shapes, causality, layout parity with the Rust loader."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+SMALL = dict(vocab=32, d_model=16, n_layers=2, n_heads=2, max_seq=32,
+             mlp_mult=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), SMALL)
+
+
+class TestForward:
+    def test_shapes(self, params):
+        tokens = jnp.arange(8) % 32
+        logits = model.forward(params, tokens, SMALL)
+        assert logits.shape == (8, 32)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_causality(self, params):
+        """Changing a future token must not change earlier logits."""
+        t1 = jnp.array([1, 2, 3, 4, 5])
+        t2 = jnp.array([1, 2, 3, 4, 29])
+        l1 = model.forward(params, t1, SMALL)
+        l2 = model.forward(params, t2, SMALL)
+        np.testing.assert_allclose(np.asarray(l1[:4]), np.asarray(l2[:4]),
+                                   atol=1e-5)
+        assert not np.allclose(np.asarray(l1[4]), np.asarray(l2[4]))
+
+    def test_int_attention_mode_close_to_float(self, params):
+        tokens = jnp.arange(12) % 32
+        lf = np.asarray(model.forward(params, tokens, SMALL, attention="float"))
+        li = np.asarray(model.forward(params, tokens, SMALL, attention="int"))
+        cos = (lf * li).sum() / (np.linalg.norm(lf) * np.linalg.norm(li))
+        assert cos > 0.98, cos
+
+    def test_loss_positive_and_near_uniform_at_init(self, params):
+        tokens = jnp.arange(16) % 32
+        loss = float(model.loss_fn(params, tokens, SMALL))
+        assert 1.0 < loss < 6.0  # ln(32) = 3.47 for uniform
+
+    def test_gradients_flow(self, params):
+        tokens = jnp.arange(10) % 32
+        grads = jax.grad(model.loss_fn)(params, tokens, SMALL)
+        gnorm = float(jnp.sqrt(sum(
+            jnp.sum(g * g) for g in jax.tree.leaves(grads))))
+        assert gnorm > 0.0 and np.isfinite(gnorm)
+
+
+class TestLayout:
+    def test_param_count_matches_flat(self, params):
+        flat = model.to_flat(params, SMALL)
+        assert flat.shape[0] == model.param_count(SMALL)
+
+    def test_flat_order_starts_with_embeddings(self, params):
+        flat = np.asarray(model.to_flat(params, SMALL))
+        emb = np.asarray(params["tok_emb"]).ravel()
+        np.testing.assert_array_equal(flat[:emb.size], emb)
+
+    def test_unflatten_roundtrip(self, params):
+        from compile.aot import unflatten
+        flat = np.asarray(model.to_flat(params, SMALL))
+        back = unflatten(flat, SMALL)
+        for k in ("tok_emb", "pos_emb", "ln_f_g"):
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(params[k]))
+        np.testing.assert_array_equal(
+            np.asarray(back["blocks"][1]["w2"]),
+            np.asarray(params["blocks"][1]["w2"]))
+
+    def test_default_config_param_count(self):
+        # ~0.9M params for the shipped tiny config.
+        n = model.param_count(model.CONFIG)
+        assert 800_000 < n < 1_200_000, n

@@ -1,0 +1,12 @@
+//! Regenerates paper Figure 2: share of the dequantize→softmax→requantize
+//! path per precision across sequence lengths.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let lens = exp::default_seq_lens();
+    let rows = exp::fig2_breakdown(&lens, exp::HEAD_DIM, 1);
+    let table = exp::render_fig2(&rows);
+    table.print();
+    let _ = write_report("fig2_breakdown", &table.render(), None);
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Figure 4: softmax mass concentration in top logits.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let rows = exp::fig4_sparsity(512, 64);
+    let table = exp::render_fig4(&rows);
+    table.print();
+    let _ = write_report("fig4_sparsity", &table.render(), None);
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Figure 5: LUT fidelity under a 32-byte budget
+//! (IndexSoftmax 32×u8 vs EXAQ INT3/INT2).
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let rows = exp::fig5_lut_resolution();
+    let table = exp::render_fig5(&rows);
+    table.print();
+    let _ = write_report("fig5_lut_resolution", &table.render(), None);
+}

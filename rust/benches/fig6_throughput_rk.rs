@@ -1,0 +1,12 @@
+//! Regenerates paper Figure 6: attention throughput sweep, platform config A
+//! (single thread — the RK3588S2 stand-in; see DESIGN.md §2).
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let lens = exp::default_seq_lens();
+    let rows = exp::speed_sweep(&lens, exp::HEAD_DIM, 1);
+    let table = exp::render_speed(&rows, "Figure 6 — throughput, cfg-A (1 thread)");
+    table.print();
+    let _ = write_report("fig6_throughput_rk", &table.render(), None);
+}

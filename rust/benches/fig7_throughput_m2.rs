@@ -1,0 +1,13 @@
+//! Regenerates paper Figure 7: attention throughput sweep, platform config B
+//! (all host threads — the Apple M2 stand-in; see DESIGN.md §2).
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+use intattention::util::threadpool::default_threads;
+
+fn main() {
+    let lens = exp::default_seq_lens();
+    let rows = exp::speed_sweep(&lens, exp::HEAD_DIM, default_threads());
+    let table = exp::render_speed(&rows, "Figure 7 — throughput, cfg-B (all threads)");
+    table.print();
+    let _ = write_report("fig7_throughput_m2", &table.render(), None);
+}

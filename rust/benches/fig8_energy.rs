@@ -1,0 +1,12 @@
+//! Regenerates paper Figure 8: modeled energy per attention iteration,
+//! normalized to FP16 (analytic op-count model; DESIGN.md §2 substitution).
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let lens = exp::default_seq_lens();
+    let rows = exp::fig8_energy(&lens, exp::HEAD_DIM);
+    let table = exp::render_fig8(&rows);
+    table.print();
+    let _ = write_report("fig8_energy", &table.render(), None);
+}

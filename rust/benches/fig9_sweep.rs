@@ -1,0 +1,11 @@
+//! Regenerates paper Figure 9: (b, c) hyperparameter sensitivity of
+//! IndexSoftmax — the plateau for b ≥ 4, c ∈ [5.5, 7.7].
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let cells = exp::fig9_sweep(&[2, 3, 4, 5, 6, 8], &[4.4, 5.5, 6.6, 7.7, 8.8], 192, 64);
+    let table = exp::render_fig9(&cells);
+    table.print();
+    let _ = write_report("fig9_sweep", &table.render(), None);
+}

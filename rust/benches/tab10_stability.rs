@@ -1,0 +1,12 @@
+//! Regenerates paper Table 10: token-loss stress test at long context —
+//! max token loss, loss std-dev, NaN/Inf events (FP16 vs IndexSoftmax).
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let w = exp::load_or_random_weights();
+    let rows = exp::tab10_stability(&w, 256, 4);
+    let table = exp::render_tab10(&rows);
+    table.print();
+    let _ = write_report("tab10_stability", &table.render(), None);
+}

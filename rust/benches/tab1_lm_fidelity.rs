@@ -1,0 +1,12 @@
+//! Regenerates paper Table 1 (substituted per DESIGN.md §2): end-to-end LM
+//! fidelity — perplexity + top-1 agreement per pipeline on the tiny LM.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let w = exp::load_or_random_weights();
+    let rows = exp::tab1_lm_fidelity(&w, 6, 160);
+    let table = exp::render_lm_fidelity(&rows, "Table 1 — end-to-end LM fidelity");
+    table.print();
+    let _ = write_report("tab1_lm_fidelity", &table.render(), None);
+}

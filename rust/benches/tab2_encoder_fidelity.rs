@@ -1,0 +1,11 @@
+//! Regenerates paper Table 2 (substituted): encoder-mode (vision-like,
+//! bidirectional) output fidelity per pipeline vs the FP32 reference.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let rows = exp::tab2_encoder_fidelity(192, 64, 4);
+    let table = exp::render_tab2(&rows);
+    table.print();
+    let _ = write_report("tab2_encoder_fidelity", &table.render(), None);
+}

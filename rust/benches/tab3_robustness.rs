@@ -1,0 +1,15 @@
+//! Regenerates paper Table 3/7 (substituted): long-context robustness —
+//! perplexity at growing context lengths per pipeline.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let w = exp::load_or_random_weights();
+    let mut out = String::new();
+    for (ctx, rows) in exp::tab3_long_context(&w, &[64, 128, 256], 4) {
+        let t = exp::render_lm_fidelity(&rows, &format!("Table 3 — long-context fidelity @ ctx={ctx}"));
+        t.print();
+        out.push_str(&t.render());
+    }
+    let _ = write_report("tab3_robustness", &out, None);
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Tables 4/5/6 (substituted): softmax-only ablation —
+//! IndexSoftmax vs EXAQ INT2/INT3 inside the same integer pipeline.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let w = exp::load_or_random_weights();
+    let rows = exp::tab5_softmax_ablation(&w, 6, 160);
+    let table = exp::render_lm_fidelity(&rows, "Table 5 — softmax-only ablation");
+    table.print();
+    let _ = write_report("tab5_softmax_ablation", &table.render(), None);
+}

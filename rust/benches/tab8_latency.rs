@@ -1,0 +1,14 @@
+//! Regenerates paper Table 8: end-to-end attention latency (ms) per
+//! pipeline × sequence length on both platform configs.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+use intattention::util::threadpool::default_threads;
+
+fn main() {
+    let lens = exp::default_seq_lens();
+    let a = exp::speed_sweep(&lens, exp::HEAD_DIM, 1);
+    let b = exp::speed_sweep(&lens, exp::HEAD_DIM, default_threads());
+    let table = exp::render_tab8(&a, &b);
+    table.print();
+    let _ = write_report("tab8_latency", &table.render(), None);
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Table 9: INT8(×127) vs UINT8(×255) quantization of the
+//! probability matrix P — CosSim / relative-L1 / RMSE vs FP32.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::write_report;
+
+fn main() {
+    let (i8f, u8f) = exp::tab9_p_quant(512, 64, 6);
+    let table = exp::render_tab9(&i8f, &u8f);
+    table.print();
+    let _ = write_report("tab9_p_quant", &table.render(), None);
+}

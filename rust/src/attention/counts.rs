@@ -1,0 +1,184 @@
+//! Op-count builders shared by the pipelines: given the shape of a forward
+//! pass, produce the [`OpCounts`] each stage contributes. Centralizing the
+//! accounting keeps the Figure 8 energy comparison consistent across
+//! pipelines.
+
+use crate::energy::OpCounts;
+use crate::softmax::index_softmax::Mask;
+
+/// Number of (row, col) pairs the mask admits for an `m×l` logit matrix.
+pub fn valid_positions(m: usize, l: usize, mask: Mask) -> u64 {
+    match mask {
+        Mask::None => (m * l) as u64,
+        Mask::Causal => {
+            debug_assert_eq!(m, l);
+            (l as u64 * (l as u64 + 1)) / 2
+        }
+    }
+}
+
+/// Dynamic INT8 quantization of Q, K, V (eq. 2–3): one abs-max scan plus one
+/// scale-and-round per element of each tensor.
+pub fn quantize_qkv(m: usize, l: usize, d: usize) -> OpCounts {
+    let elems = ((m + 2 * l) * d) as u64;
+    OpCounts {
+        fp32_alu: 2 * elems,          // abs+max scan, then mul-by-inv-scale
+        dtype_conv: elems,            // round+cast to i8
+        mem_bytes: elems * (4 + 1),   // read f32, write i8
+        ..Default::default()
+    }
+}
+
+/// FP16 encode of Q, K, V.
+pub fn encode_qkv_f16(m: usize, l: usize, d: usize) -> OpCounts {
+    let elems = ((m + 2 * l) * d) as u64;
+    OpCounts {
+        dtype_conv: elems,
+        mem_bytes: elems * (4 + 2),
+        ..Default::default()
+    }
+}
+
+/// The `Q·Kᵀ` GEMM over all `m×l` outputs (both pipelines compute the full
+/// rectangle; causal skipping is a later optimization in both the paper's
+/// kernels and ours).
+pub fn qk_gemm(m: usize, l: usize, d: usize, elem_bytes: u64, out_bytes: u64) -> OpCounts {
+    let macs = (m * l * d) as u64;
+    OpCounts {
+        mem_bytes: ((m + l) * d) as u64 * elem_bytes + (m * l) as u64 * out_bytes,
+        ..Default::default()
+    }
+    .with_macs(macs, elem_bytes)
+}
+
+/// The `P·V` GEMM; `nnz` is the number of probability entries actually
+/// aggregated (IntAttention skips exact zeros — the §3.1 sparsity).
+pub fn pv_gemm(nnz: u64, l: usize, d: usize, elem_bytes: u64, out_bytes: u64) -> OpCounts {
+    let macs = nnz * d as u64;
+    OpCounts {
+        mem_bytes: (l * d) as u64 * elem_bytes + nnz + (l * d) as u64 * out_bytes,
+        ..Default::default()
+    }
+    .with_macs(macs, elem_bytes)
+}
+
+impl OpCounts {
+    fn with_macs(mut self, macs: u64, elem_bytes: u64) -> OpCounts {
+        match elem_bytes {
+            1 => self.int8_mac += macs,
+            2 => self.fp16_mac += macs,
+            _ => self.fp32_mac += macs,
+        }
+        self
+    }
+}
+
+/// FP32 softmax over `valid` positions in `rows` rows (eq. 6): max scan,
+/// subtract, exp, sum, divide-by-row.
+pub fn fp32_softmax(valid: u64, rows: u64) -> OpCounts {
+    OpCounts {
+        fp32_alu: 4 * valid,      // max cmp + sub + sum-add + scale-mul
+        fp32_exp: valid,
+        fp32_div: rows,           // one reciprocal per row
+        mem_bytes: valid * 8,     // read + write f32
+        ..Default::default()
+    }
+}
+
+/// Dequantize INT32 logits → FP32 (the detour's first conversion).
+pub fn dequantize_logits(valid: u64) -> OpCounts {
+    OpCounts {
+        dtype_conv: valid,
+        fp32_alu: valid,          // ×α
+        mem_bytes: valid * 8,     // read i32, write f32
+        ..Default::default()
+    }
+}
+
+/// Requantize FP32 probabilities → INT8/UINT8 (the detour's second conversion).
+pub fn requantize_probs(valid: u64) -> OpCounts {
+    OpCounts {
+        dtype_conv: valid,
+        fp32_alu: valid,          // ×127 or ×255
+        mem_bytes: valid * 5,     // read f32, write 8-bit
+        ..Default::default()
+    }
+}
+
+/// IndexSoftmax over `valid` positions (§3.1–3.2): max scan + subtract +
+/// clip (int32 ALU), multiply–shift index (int32 mul), LUT gather, sum add
+/// (int32 ALU), and one multiply–shift normalize per element.
+pub fn index_softmax(valid: u64, _rows: u64) -> OpCounts {
+    OpCounts {
+        int32_alu: 4 * valid,     // max cmp + sub + clip + sum
+        int32_mul: 2 * valid,     // index mul-shift + normalize mul-shift
+        lut_gather: valid,
+        mem_bytes: valid * 6,     // read i32, write u8 (+ staging u8)
+        ..Default::default()
+    }
+}
+
+/// EXAQ softmax: integer max/sub + gather like IndexSoftmax, but an extra
+/// global statistics pass (mean/var) and float normalization per element.
+pub fn exaq_softmax(valid: u64, rows: u64) -> OpCounts {
+    OpCounts {
+        int32_alu: 2 * valid,
+        fp32_alu: 3 * valid + 2 * valid, // stats pass + normalize mul
+        lut_gather: valid,
+        fp32_div: rows,
+        dtype_conv: valid,               // ×255 requantize of P
+        mem_bytes: valid * 10,
+        ..Default::default()
+    }
+}
+
+/// Final output rescale (`s_V/255 · P̂V̂` or f16→f32 restore).
+pub fn output_rescale(m: usize, d: usize) -> OpCounts {
+    let elems = (m * d) as u64;
+    OpCounts {
+        dtype_conv: elems,
+        fp32_alu: elems,
+        mem_bytes: elems * 8,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_positions_modes() {
+        assert_eq!(valid_positions(4, 8, Mask::None), 32);
+        assert_eq!(valid_positions(4, 4, Mask::Causal), 10);
+    }
+
+    #[test]
+    fn qk_gemm_counts_macs_by_dtype() {
+        let c8 = qk_gemm(16, 16, 64, 1, 4);
+        assert_eq!(c8.int8_mac, 16 * 16 * 64);
+        assert_eq!(c8.fp32_mac, 0);
+        let c32 = qk_gemm(16, 16, 64, 4, 4);
+        assert_eq!(c32.fp32_mac, 16 * 16 * 64);
+        let c16 = qk_gemm(16, 16, 64, 2, 4);
+        assert_eq!(c16.fp16_mac, 16 * 16 * 64);
+    }
+
+    #[test]
+    fn softmax_detour_has_conversions_but_index_softmax_does_not() {
+        let v = 1000;
+        let detour_convs =
+            dequantize_logits(v).dtype_conv + requantize_probs(v).dtype_conv;
+        assert_eq!(detour_convs, 2 * v);
+        assert_eq!(index_softmax(v, 10).dtype_conv, 0);
+        assert_eq!(index_softmax(v, 10).fp32_exp, 0);
+        assert_eq!(fp32_softmax(v, 10).fp32_exp, v);
+    }
+
+    #[test]
+    fn pv_sparsity_reduces_macs() {
+        let dense = pv_gemm(1000, 100, 64, 1, 4);
+        let sparse = pv_gemm(400, 100, 64, 1, 4);
+        assert!(sparse.int8_mac < dense.int8_mac);
+    }
+}

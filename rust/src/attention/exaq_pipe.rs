@@ -1,0 +1,160 @@
+//! EXAQ-softmax pipeline: the integer GEMM skeleton of IntAttention with the
+//! softmax stage swapped for the EXAQ operator — exactly the substitution of
+//! the paper's ablation (Tables 4–7). EXAQ's dynamic statistics pass and
+//! float normalization show up in the Softmax stage timing; its probability
+//! output is requantized to UINT8 to keep the PV stage integer.
+
+use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::energy::OpCounts;
+use crate::gemm::{gemm_u8i8, par_gemm_i8};
+use crate::quant::quantize_i8;
+use crate::softmax::exaq::{ExaqConfig, ExaqSoftmax};
+use crate::tensor::{MatF32, MatI32};
+use crate::util::timer::{Stage, StageTimes};
+
+pub struct ExaqAttention {
+    cfg: AttentionConfig,
+    softmax: ExaqSoftmax,
+    times: StageTimes,
+    ops: OpCounts,
+}
+
+impl ExaqAttention {
+    pub fn new(cfg: AttentionConfig, exaq: ExaqConfig) -> Self {
+        ExaqAttention {
+            cfg,
+            softmax: ExaqSoftmax::new(exaq),
+            times: StageTimes::new(),
+            ops: OpCounts::default(),
+        }
+    }
+}
+
+impl AttentionPipeline for ExaqAttention {
+    fn kind(&self) -> PipelineKind {
+        if self.softmax.cfg.bits == 2 {
+            PipelineKind::ExaqInt2
+        } else {
+            PipelineKind::ExaqInt3
+        }
+    }
+
+    fn config(&self) -> &AttentionConfig {
+        &self.cfg
+    }
+
+    fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_shapes(&self.cfg, q, k, v);
+        let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
+        let threads = self.cfg.threads;
+
+        let (qq, kq, vq) = self.times.measure(Stage::Quantize, || {
+            (quantize_i8(q), quantize_i8(k), quantize_i8(v))
+        });
+        self.ops.add(&counts::quantize_qkv(m, l, d));
+        let alpha = qq.scale * kq.scale / (d as f32).sqrt();
+
+        let mut logits = MatI32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_i8(&qq.data, &kq.data, &mut logits, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+
+        // EXAQ softmax (dynamic clipping stats + LUT + float normalization).
+        let p = self
+            .times
+            .measure(Stage::Softmax, || self.softmax.forward(&logits, alpha, self.cfg.mask));
+        let valid = counts::valid_positions(m, l, self.cfg.mask);
+        self.ops.add(&counts::exaq_softmax(valid, m as u64));
+
+        let mut acc = MatI32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            gemm_u8i8(&p, &vq.data, &mut acc);
+        });
+        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+        self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+        let out_scale = vq.scale / 255.0;
+        let o = self
+            .times
+            .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    fn stage_times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    fn op_counts(&self) -> &OpCounts {
+        &self.ops
+    }
+
+    fn reset_stats(&mut self) {
+        self.times.reset();
+        self.ops = OpCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::fp32::reference_attention;
+    use crate::attention::int_attention::IntAttention;
+    use crate::softmax::index_softmax::Mask;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn int3_tracks_reference_reasonably() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let cfg = AttentionConfig::new(64, 32);
+        let q = rand_mat(&mut rng, 32, 32);
+        let k = rand_mat(&mut rng, 64, 32);
+        let v = rand_mat(&mut rng, 64, 32);
+        let got = ExaqAttention::new(cfg, ExaqConfig::int3()).forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::None);
+        let cos = crate::util::stats::cosine_similarity(got.as_slice(), want.as_slice());
+        assert!(cos > 0.97, "cos={cos}");
+    }
+
+    #[test]
+    fn fidelity_order_int2_lt_int3_lt_intattention() {
+        // The Table 5–7 ordering at pipeline level, averaged across trials.
+        let mut rng = Pcg64::seed_from_u64(2);
+        let cfg = AttentionConfig::new(128, 32);
+        let mut e2 = 0.0;
+        let mut e3 = 0.0;
+        let mut ei = 0.0;
+        for _ in 0..8 {
+            let q = rand_mat(&mut rng, 64, 32);
+            let k = rand_mat(&mut rng, 128, 32);
+            let v = rand_mat(&mut rng, 128, 32);
+            let want = reference_attention(&q, &k, &v, Mask::None);
+            let g2 = ExaqAttention::new(cfg, ExaqConfig::int2()).forward(&q, &k, &v);
+            let g3 = ExaqAttention::new(cfg, ExaqConfig::int3()).forward(&q, &k, &v);
+            let gi = IntAttention::new(cfg).forward(&q, &k, &v);
+            e2 += crate::util::stats::rmse(want.as_slice(), g2.as_slice());
+            e3 += crate::util::stats::rmse(want.as_slice(), g3.as_slice());
+            ei += crate::util::stats::rmse(want.as_slice(), gi.as_slice());
+        }
+        assert!(e3 < e2, "INT3 rmse {e3} !< INT2 rmse {e2}");
+        assert!(ei < e3, "IntAttention rmse {ei} !< INT3 rmse {e3}");
+    }
+
+    #[test]
+    fn kind_reflects_bits() {
+        let cfg = AttentionConfig::new(8, 4);
+        assert_eq!(
+            ExaqAttention::new(cfg, ExaqConfig::int2()).kind(),
+            PipelineKind::ExaqInt2
+        );
+        assert_eq!(
+            ExaqAttention::new(cfg, ExaqConfig::int3()).kind(),
+            PipelineKind::ExaqInt3
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! FP16 baseline attention: operands stored as binary16, arithmetic in f32
+//! (software-f16 substitution, DESIGN.md §2). The pipeline pays real
+//! conversion costs at each boundary — matching the dataflow, if not the ALU
+//! economics, of a native FP16 edge path. Energy accounting prices the GEMMs
+//! at fp16-MAC cost, which is where the real-hardware advantage lives.
+
+use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::energy::OpCounts;
+use crate::gemm::gemm_f16;
+use crate::softmax::float_softmax::softmax_rows_f16;
+use crate::tensor::MatF32;
+use crate::util::f16::{encode_slice, F16};
+use crate::util::timer::{Stage, StageTimes};
+
+pub struct Fp16Attention {
+    cfg: AttentionConfig,
+    times: StageTimes,
+    ops: OpCounts,
+}
+
+impl Fp16Attention {
+    pub fn new(cfg: AttentionConfig) -> Self {
+        Fp16Attention { cfg, times: StageTimes::new(), ops: OpCounts::default() }
+    }
+}
+
+impl AttentionPipeline for Fp16Attention {
+    fn kind(&self) -> PipelineKind {
+        PipelineKind::Fp16
+    }
+
+    fn config(&self) -> &AttentionConfig {
+        &self.cfg
+    }
+
+    fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_shapes(&self.cfg, q, k, v);
+        let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // Encode inputs to f16 storage.
+        let (qh, kh) = self.times.measure(Stage::Quantize, || {
+            (encode_slice(q.as_slice()), encode_slice(k.as_slice()))
+        });
+        self.ops.add(&counts::encode_qkv_f16(m, l, d));
+
+        // QKᵀ in f16 storage.
+        let mut a = MatF32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            gemm_f16(&qh, &kh, m, l, d, a.as_mut_slice());
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 2, 2));
+
+        // Scale (kept in f32 — the f16 rounding happens after the stable
+        // max subtraction inside softmax_rows_f16, matching real FP16
+        // kernels and keeping huge logits finite) + f16-precision softmax.
+        self.times.measure(Stage::Softmax, || {
+            for x in a.as_mut_slice() {
+                *x *= scale;
+            }
+            softmax_rows_f16(&mut a, self.cfg.mask);
+        });
+        let valid = counts::valid_positions(m, l, self.cfg.mask);
+        self.ops.add(&counts::fp32_softmax(valid, m as u64)); // same op mix, f16 units
+
+        // PV in f16 storage: encode P, multiply against V-f16.
+        let mut o = MatF32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            let ph: Vec<F16> = encode_slice(a.as_slice());
+            // V must be transposed for gemm_f16's bt layout.
+            let vt = crate::tensor::MatF32::from_vec(l, d, v.as_slice().to_vec()).transpose();
+            let vth = encode_slice(vt.as_slice());
+            gemm_f16(&ph, &vth, m, d, l, o.as_mut_slice());
+        });
+        self.ops.add(&counts::pv_gemm(valid, l, d, 2, 2));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    fn stage_times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    fn op_counts(&self) -> &OpCounts {
+        &self.ops
+    }
+
+    fn reset_stats(&mut self) {
+        self.times.reset();
+        self.ops = OpCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::fp32::reference_attention;
+    use crate::softmax::index_softmax::Mask;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn close_to_fp32_reference() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let cfg = AttentionConfig::new(32, 16);
+        let q = rand_mat(&mut rng, 16, 16);
+        let k = rand_mat(&mut rng, 32, 16);
+        let v = rand_mat(&mut rng, 32, 16);
+        let mut pipe = Fp16Attention::new(cfg);
+        let got = pipe.forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::None);
+        // f16 has ~3 decimal digits; attention outputs are O(1).
+        assert!(got.allclose(&want, 5e-3, 2e-2), "fp16 deviates too much");
+    }
+
+    #[test]
+    fn causal_supported() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let cfg = AttentionConfig::new(16, 8).causal();
+        let q = rand_mat(&mut rng, 16, 8);
+        let k = rand_mat(&mut rng, 16, 8);
+        let v = rand_mat(&mut rng, 16, 8);
+        let got = Fp16Attention::new(cfg).forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::Causal);
+        assert!(got.allclose(&want, 5e-3, 2e-2));
+    }
+
+    #[test]
+    fn counts_use_fp16_macs() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let cfg = AttentionConfig::new(16, 8);
+        let q = rand_mat(&mut rng, 16, 8);
+        let k = rand_mat(&mut rng, 16, 8);
+        let v = rand_mat(&mut rng, 16, 8);
+        let mut pipe = Fp16Attention::new(cfg);
+        let _ = pipe.forward(&q, &k, &v);
+        assert_eq!(pipe.op_counts().fp16_mac, 2 * 16 * 16 * 8);
+        assert_eq!(pipe.op_counts().fp32_mac, 0);
+        assert!(pipe.op_counts().dtype_conv > 0);
+    }
+}

@@ -1,0 +1,185 @@
+//! FP32 baseline attention (paper eq. 1 + eq. 6): `A = QKᵀ/√d`,
+//! `P = softmax(A)`, `O = PV`, everything in f32.
+
+use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::energy::OpCounts;
+use crate::gemm::par_gemm_f32;
+use crate::softmax::float_softmax::softmax_rows;
+use crate::tensor::MatF32;
+use crate::util::timer::{Stage, StageTimes};
+
+pub struct Fp32Attention {
+    cfg: AttentionConfig,
+    times: StageTimes,
+    ops: OpCounts,
+}
+
+impl Fp32Attention {
+    pub fn new(cfg: AttentionConfig) -> Self {
+        Fp32Attention { cfg, times: StageTimes::new(), ops: OpCounts::default() }
+    }
+}
+
+impl AttentionPipeline for Fp32Attention {
+    fn kind(&self) -> PipelineKind {
+        PipelineKind::Fp32
+    }
+
+    fn config(&self) -> &AttentionConfig {
+        &self.cfg
+    }
+
+    fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_shapes(&self.cfg, q, k, v);
+        let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
+        let scale = 1.0 / (d as f32).sqrt();
+        let threads = self.cfg.threads;
+
+        // QKᵀ — K is already in "transposed" (keys-as-rows) layout.
+        let mut a = MatF32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_f32(q, k, &mut a, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 4, 4));
+
+        // Scale + stable softmax.
+        self.times.measure(Stage::Softmax, || {
+            for x in a.as_mut_slice() {
+                *x *= scale;
+            }
+            softmax_rows(&mut a, self.cfg.mask);
+        });
+        let valid = counts::valid_positions(m, l, self.cfg.mask);
+        self.ops.add(&counts::fp32_softmax(valid, m as u64));
+
+        // PV: transpose V once (O(L·d)) so the aggregation runs as blocked
+        // dot products — an order faster than the branchy SAXPY form on
+        // dense float probability rows.
+        let mut o = MatF32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            let vt = v.transpose();
+            par_gemm_f32(&a, &vt, &mut o, threads);
+        });
+        self.ops.add(&counts::pv_gemm(valid, l, d, 4, 4));
+        o
+    }
+
+    fn stage_times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    fn op_counts(&self) -> &OpCounts {
+        &self.ops
+    }
+
+    fn reset_stats(&mut self) {
+        self.times.reset();
+        self.ops = OpCounts::default();
+    }
+}
+
+/// Scalar textbook reference (no blocking, no instrumentation) used as the
+/// numerical oracle by the cross-pipeline tests.
+pub fn reference_attention(q: &MatF32, k: &MatF32, v: &MatF32, mask: crate::softmax::index_softmax::Mask) -> MatF32 {
+    let (m, d) = (q.rows(), q.cols());
+    let l = k.rows();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = MatF32::zeros(m, d);
+    for i in 0..m {
+        let valid = mask.valid_cols(i, l);
+        // logits
+        let mut logits = vec![0f32; valid];
+        for (j, lg) in logits.iter_mut().enumerate() {
+            let mut s = 0f32;
+            for c in 0..d {
+                s += q.get(i, c) * k.get(j, c);
+            }
+            *lg = s * scale;
+        }
+        // softmax
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        for lg in logits.iter_mut() {
+            *lg = (*lg - mx).exp();
+            z += *lg;
+        }
+        // aggregate
+        for (j, &p) in logits.iter().enumerate() {
+            let w = p / z;
+            for c in 0..d {
+                let cur = out.get(i, c);
+                out.set(i, c, cur + w * v.get(j, c));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::index_softmax::Mask;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn matches_reference() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let cfg = AttentionConfig::new(32, 16);
+        let q = rand_mat(&mut rng, 8, 16);
+        let k = rand_mat(&mut rng, 32, 16);
+        let v = rand_mat(&mut rng, 32, 16);
+        let mut pipe = Fp32Attention::new(cfg);
+        let got = pipe.forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::None);
+        assert!(got.allclose(&want, 1e-5, 1e-4));
+    }
+
+    #[test]
+    fn causal_matches_reference() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let cfg = AttentionConfig::new(24, 8).causal();
+        let q = rand_mat(&mut rng, 24, 8);
+        let k = rand_mat(&mut rng, 24, 8);
+        let v = rand_mat(&mut rng, 24, 8);
+        let mut pipe = Fp32Attention::new(cfg);
+        let got = pipe.forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::Causal);
+        assert!(got.allclose(&want, 1e-5, 1e-4));
+    }
+
+    #[test]
+    fn stage_times_and_ops_populated() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let cfg = AttentionConfig::new(64, 32);
+        let q = rand_mat(&mut rng, 64, 32);
+        let k = rand_mat(&mut rng, 64, 32);
+        let v = rand_mat(&mut rng, 64, 32);
+        let mut pipe = Fp32Attention::new(cfg);
+        let _ = pipe.forward(&q, &k, &v);
+        assert!(pipe.stage_times().get_ns(Stage::QkGemm) > 0);
+        assert!(pipe.stage_times().get_ns(Stage::Softmax) > 0);
+        assert_eq!(pipe.stage_times().get_ns(Stage::Dequantize), 0);
+        assert_eq!(pipe.op_counts().fp32_mac, 2 * 64 * 64 * 32);
+        assert_eq!(pipe.op_counts().fp32_exp, 64 * 64);
+        pipe.reset_stats();
+        assert_eq!(pipe.stage_times().total_ns(), 0);
+    }
+
+    #[test]
+    fn first_row_of_causal_attends_itself_only() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let cfg = AttentionConfig::new(8, 4).causal();
+        let q = rand_mat(&mut rng, 8, 4);
+        let k = rand_mat(&mut rng, 8, 4);
+        let v = rand_mat(&mut rng, 8, 4);
+        let mut pipe = Fp32Attention::new(cfg);
+        let got = pipe.forward(&q, &k, &v);
+        for c in 0..4 {
+            assert!((got.get(0, c) - v.get(0, c)).abs() < 1e-6);
+        }
+    }
+}

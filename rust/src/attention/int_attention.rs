@@ -1,0 +1,268 @@
+//! **IntAttention** — the paper's contribution (§3, Figure 3): a contiguous
+//! integer dataflow from the `Q̂K̂ᵀ` logits to the `P̂V̂` aggregation.
+//!
+//! Stage structure (contrast with `quant_only.rs` — the Dequantize and
+//! Requantize stages are *gone*):
+//!   1. Quantize — dynamic per-tensor INT8 of Q, K, V (eq. 2–3)
+//!   2. QkGemm   — `Â = Q̂K̂ᵀ` in i8×i8→i32 (eq. 4)
+//!   3. Softmax  — **IndexSoftmax** (eq. 7–15): integer clipping, 32-entry
+//!                 UINT8 LUT, integer normalization → UINT8 `P̂`
+//!   4. PvGemm   — `P̂·V̂` in u8×i8→i32, skipping clipped-to-zero entries
+//!   5. Output   — `O = (s_V/255)·(P̂V̂)` (the only float op, once per output
+//!                 element, outside the attention loop — eq. 5 + eq. 15 scale)
+//!
+//! Supports per-tensor (default) and grouped (§3.3) quantization of Q.
+
+use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::energy::OpCounts;
+use crate::gemm::{gemm_u8i8, par_gemm_i8};
+use crate::quant::{quantize_grouped_i8, quantize_i8, GroupScheme};
+use crate::softmax::index_softmax::IndexSoftmax;
+use crate::tensor::{MatF32, MatI32, MatU8};
+use crate::util::timer::{Stage, StageTimes};
+
+pub struct IntAttention {
+    cfg: AttentionConfig,
+    softmax: IndexSoftmax,
+    /// Quantization granularity for Q (K and V stay per-tensor; §3.3 notes
+    /// only the Q/K scales enter `c_int`, and per-row Q is the common
+    /// fine-grained deployment).
+    pub q_scheme: GroupScheme,
+    times: StageTimes,
+    ops: OpCounts,
+}
+
+impl IntAttention {
+    pub fn new(cfg: AttentionConfig) -> Self {
+        IntAttention {
+            softmax: IndexSoftmax::new(cfg.isx),
+            cfg,
+            q_scheme: GroupScheme::PerTensor,
+            times: StageTimes::new(),
+            ops: OpCounts::default(),
+        }
+    }
+
+    /// Enable grouped Q quantization (per-row or per-row-block, §3.3).
+    pub fn with_q_scheme(mut self, scheme: GroupScheme) -> Self {
+        self.q_scheme = scheme;
+        self
+    }
+
+    /// The UINT8 probability matrix of the last forward (for fidelity
+    /// evaluations like Table 9); recomputed on demand.
+    pub fn probabilities(&self, q: &MatF32, k: &MatF32) -> MatU8 {
+        let d = self.cfg.head_dim;
+        let qq = quantize_i8(q);
+        let kq = quantize_i8(k);
+        let mut logits = MatI32::zeros(q.rows(), k.rows());
+        par_gemm_i8(&qq.data, &kq.data, &mut logits, self.cfg.threads);
+        let alpha = qq.scale * kq.scale / (d as f32).sqrt();
+        self.softmax.forward(&logits, alpha, self.cfg.mask)
+    }
+}
+
+impl AttentionPipeline for IntAttention {
+    fn kind(&self) -> PipelineKind {
+        PipelineKind::IntAttention
+    }
+
+    fn config(&self) -> &AttentionConfig {
+        &self.cfg
+    }
+
+    fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_shapes(&self.cfg, q, k, v);
+        let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
+        let threads = self.cfg.threads;
+        let sqrt_d = (d as f32).sqrt();
+
+        // (1) dynamic quantization (grouped for Q if configured).
+        enum QQuant {
+            PerTensor(crate::quant::QuantizedI8),
+            Grouped(crate::quant::GroupQuantizedI8),
+        }
+        let (qq, kq, vq) = self.times.measure(Stage::Quantize, || {
+            let qq = match self.q_scheme {
+                GroupScheme::PerTensor => QQuant::PerTensor(quantize_i8(q)),
+                s => QQuant::Grouped(quantize_grouped_i8(q, s)),
+            };
+            (qq, quantize_i8(k), quantize_i8(v))
+        });
+        self.ops.add(&counts::quantize_qkv(m, l, d));
+
+        // (2) integer similarity GEMM.
+        let qdata = match &qq {
+            QQuant::PerTensor(t) => &t.data,
+            QQuant::Grouped(g) => &g.data,
+        };
+        let mut logits = MatI32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_i8(qdata, &kq.data, &mut logits, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+
+        // (3) IndexSoftmax — integer in, UINT8 out. No Dequantize stage,
+        // no Requantize stage: this is the paper's point.
+        let p = self.times.measure(Stage::Softmax, || match &qq {
+            QQuant::PerTensor(t) => {
+                let alpha = t.scale * kq.scale / sqrt_d;
+                self.softmax.forward(&logits, alpha, self.cfg.mask)
+            }
+            QQuant::Grouped(g) => {
+                let alphas: Vec<f32> =
+                    g.scales.iter().map(|&s| s * kq.scale / sqrt_d).collect();
+                let scheme = g.scheme;
+                self.softmax.forward_grouped(
+                    &logits,
+                    move |r| match scheme {
+                        GroupScheme::PerTensor => 0,
+                        GroupScheme::PerRow => r,
+                        GroupScheme::PerRowBlock(b) => r / b,
+                    },
+                    &alphas,
+                    self.cfg.mask,
+                )
+            }
+        });
+        let valid = counts::valid_positions(m, l, self.cfg.mask);
+        self.ops.add(&counts::index_softmax(valid, m as u64));
+
+        // (4) integer aggregation GEMM (u8 × i8 → i32), zero-skipping.
+        let mut acc = MatI32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            gemm_u8i8(&p, &vq.data, &mut acc);
+        });
+        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+        self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+        // (5) single output rescale: s_V/255 (eq. 5 with the ×255 P scale).
+        let out_scale = vq.scale / 255.0;
+        let o = self
+            .times
+            .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    fn stage_times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    fn op_counts(&self) -> &OpCounts {
+        &self.ops
+    }
+
+    fn reset_stats(&mut self) {
+        self.times.reset();
+        self.ops = OpCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::fp32::reference_attention;
+    use crate::softmax::index_softmax::Mask;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn close_to_fp32_reference() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let cfg = AttentionConfig::new(64, 32);
+        let q = rand_mat(&mut rng, 32, 32);
+        let k = rand_mat(&mut rng, 64, 32);
+        let v = rand_mat(&mut rng, 64, 32);
+        let got = IntAttention::new(cfg).forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::None);
+        let cos = crate::util::stats::cosine_similarity(got.as_slice(), want.as_slice());
+        assert!(cos > 0.99, "cos={cos}");
+    }
+
+    #[test]
+    fn causal_close_to_reference() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let cfg = AttentionConfig::new(48, 16).causal();
+        let q = rand_mat(&mut rng, 48, 16);
+        let k = rand_mat(&mut rng, 48, 16);
+        let v = rand_mat(&mut rng, 48, 16);
+        let got = IntAttention::new(cfg).forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::Causal);
+        let cos = crate::util::stats::cosine_similarity(got.as_slice(), want.as_slice());
+        assert!(cos > 0.99, "cos={cos}");
+    }
+
+    #[test]
+    fn no_detour_stages() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let cfg = AttentionConfig::new(64, 32);
+        let q = rand_mat(&mut rng, 64, 32);
+        let k = rand_mat(&mut rng, 64, 32);
+        let v = rand_mat(&mut rng, 64, 32);
+        let mut pipe = IntAttention::new(cfg);
+        let _ = pipe.forward(&q, &k, &v);
+        // No dequantize, no requantize — the defining property.
+        assert_eq!(pipe.stage_times().get_ns(Stage::Dequantize), 0);
+        assert_eq!(pipe.stage_times().get_ns(Stage::Requantize), 0);
+        assert!(pipe.stage_times().get_ns(Stage::Softmax) > 0);
+        // No float exponentials in the op mix.
+        assert_eq!(pipe.op_counts().fp32_exp, 0);
+        assert!(pipe.op_counts().lut_gather > 0);
+    }
+
+    #[test]
+    fn grouped_q_still_accurate() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let cfg = AttentionConfig::new(32, 16);
+        let q = rand_mat(&mut rng, 32, 16);
+        let k = rand_mat(&mut rng, 32, 16);
+        let v = rand_mat(&mut rng, 32, 16);
+        let want = reference_attention(&q, &k, &v, Mask::None);
+        for scheme in [GroupScheme::PerRow, GroupScheme::PerRowBlock(8)] {
+            let got = IntAttention::new(cfg).with_q_scheme(scheme).forward(&q, &k, &v);
+            let cos = crate::util::stats::cosine_similarity(got.as_slice(), want.as_slice());
+            assert!(cos > 0.99, "{scheme:?}: cos={cos}");
+        }
+    }
+
+    #[test]
+    fn grouped_q_helps_with_row_outliers() {
+        // A Q with one extreme-magnitude row: per-row scales must beat
+        // per-tensor on the *other* rows' outputs (the §3.3 motivation).
+        let mut rng = Pcg64::seed_from_u64(5);
+        let cfg = AttentionConfig::new(32, 16);
+        let mut q = rand_mat(&mut rng, 32, 16);
+        for x in q.row_mut(0) {
+            *x *= 500.0;
+        }
+        let k = rand_mat(&mut rng, 32, 16);
+        let v = rand_mat(&mut rng, 32, 16);
+        let want = reference_attention(&q, &k, &v, Mask::None);
+        let got_pt = IntAttention::new(cfg).forward(&q, &k, &v);
+        let got_pr = IntAttention::new(cfg)
+            .with_q_scheme(GroupScheme::PerRow)
+            .forward(&q, &k, &v);
+        let tail = |m: &MatF32| m.as_slice()[16..].to_vec(); // rows 1.. only
+        let err_pt = crate::util::stats::rmse(&tail(&want), &tail(&got_pt));
+        let err_pr = crate::util::stats::rmse(&tail(&want), &tail(&got_pr));
+        assert!(err_pr < err_pt, "per-row {err_pr} !< per-tensor {err_pt}");
+    }
+
+    #[test]
+    fn probabilities_rows_normalized() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let cfg = AttentionConfig::new(24, 8);
+        let q = rand_mat(&mut rng, 12, 8);
+        let k = rand_mat(&mut rng, 24, 8);
+        let pipe = IntAttention::new(cfg);
+        let p = pipe.probabilities(&q, &k);
+        for r in 0..12 {
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            assert!((s - 255).abs() <= 16, "row {r} sum {s}");
+        }
+    }
+}

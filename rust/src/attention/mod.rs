@@ -1,0 +1,219 @@
+//! The five attention pipelines the paper evaluates (§4.1: FP32, FP16,
+//! INT8 Quant-Only, IntAttention) plus the EXAQ ablation pipelines.
+//!
+//! Every pipeline implements [`AttentionPipeline`]: FP32 in/out (`Q, K, V`
+//! are `M×d` / `L×d` / `L×d` row-major, `O` is `M×d`), with the internal
+//! dataflow of the respective method. Each forward pass is instrumented
+//! with per-stage wall-clock ([`StageTimes`]) and op counters
+//! ([`OpCounts`]) — the raw data for Figure 2, Figure 8 and Table 8.
+
+pub mod counts;
+pub mod fp32;
+pub mod fp16;
+pub mod quant_only;
+pub mod int_attention;
+pub mod exaq_pipe;
+
+use crate::energy::OpCounts;
+use crate::softmax::index_softmax::{IndexSoftmaxConfig, Mask};
+use crate::tensor::MatF32;
+use crate::util::timer::StageTimes;
+
+pub use crate::softmax::index_softmax::Mask as AttentionMask;
+
+/// Static configuration of an attention head computation.
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionConfig {
+    /// Number of key/value positions `L`.
+    pub seq_len: usize,
+    /// Head dimension `d`.
+    pub head_dim: usize,
+    /// Masking mode (causal for decoder prefill, none for encoders/decode).
+    pub mask: Mask,
+    /// Worker threads for the GEMM drivers.
+    pub threads: usize,
+    /// IndexSoftmax hyperparameters (used by the IntAttention pipeline).
+    pub isx: IndexSoftmaxConfig,
+}
+
+impl AttentionConfig {
+    pub fn new(seq_len: usize, head_dim: usize) -> Self {
+        AttentionConfig {
+            seq_len,
+            head_dim,
+            mask: Mask::None,
+            threads: 1,
+            isx: IndexSoftmaxConfig::default(),
+        }
+    }
+
+    pub fn causal(mut self) -> Self {
+        self.mask = Mask::Causal;
+        self
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+
+    pub fn with_isx(mut self, isx: IndexSoftmaxConfig) -> Self {
+        self.isx = isx;
+        self
+    }
+
+    /// FLOP count of the two GEMMs (the normalization used for the GFLOP/s
+    /// plots, Figures 6–7): `2·2·L_q·L_k·d`.
+    pub fn gemm_flops(&self, q_rows: usize) -> u64 {
+        2 * 2 * q_rows as u64 * self.seq_len as u64 * self.head_dim as u64
+    }
+}
+
+/// Which pipeline (paper §4.1 naming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PipelineKind {
+    Fp32,
+    Fp16,
+    QuantOnly,
+    IntAttention,
+    /// EXAQ softmax inside the integer pipeline, INT2 LUT.
+    ExaqInt2,
+    /// EXAQ softmax inside the integer pipeline, INT3 LUT.
+    ExaqInt3,
+}
+
+impl PipelineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PipelineKind::Fp32 => "FP32",
+            PipelineKind::Fp16 => "FP16",
+            PipelineKind::QuantOnly => "Quant-Only",
+            PipelineKind::IntAttention => "IntAttention",
+            PipelineKind::ExaqInt2 => "EXAQ(INT2)",
+            PipelineKind::ExaqInt3 => "EXAQ(INT3)",
+        }
+    }
+
+    /// The four headline pipelines of Figures 6–8 / Table 8.
+    pub fn headline() -> [PipelineKind; 4] {
+        [
+            PipelineKind::Fp32,
+            PipelineKind::Fp16,
+            PipelineKind::QuantOnly,
+            PipelineKind::IntAttention,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<PipelineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" => Some(PipelineKind::Fp32),
+            "fp16" => Some(PipelineKind::Fp16),
+            "quant-only" | "quantonly" | "int8" => Some(PipelineKind::QuantOnly),
+            "intattention" | "int" | "intattn" => Some(PipelineKind::IntAttention),
+            "exaq2" | "exaq-int2" => Some(PipelineKind::ExaqInt2),
+            "exaq3" | "exaq-int3" => Some(PipelineKind::ExaqInt3),
+            _ => None,
+        }
+    }
+}
+
+/// One attention head computation with instrumentation.
+pub trait AttentionPipeline: Send {
+    fn kind(&self) -> PipelineKind;
+
+    fn config(&self) -> &AttentionConfig;
+
+    /// Compute `O = Attention(Q, K, V)` with the configured mask.
+    /// `q` is `M×d`; `k`, `v` are `L×d` with `L == config().seq_len`.
+    fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32;
+
+    /// Per-stage wall clock accumulated since the last [`reset_stats`].
+    fn stage_times(&self) -> &StageTimes;
+
+    /// Op counters accumulated since the last [`reset_stats`].
+    fn op_counts(&self) -> &OpCounts;
+
+    fn reset_stats(&mut self);
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+}
+
+/// Factory for a pipeline of the given kind.
+pub fn build_pipeline(kind: PipelineKind, cfg: AttentionConfig) -> Box<dyn AttentionPipeline> {
+    match kind {
+        PipelineKind::Fp32 => Box::new(fp32::Fp32Attention::new(cfg)),
+        PipelineKind::Fp16 => Box::new(fp16::Fp16Attention::new(cfg)),
+        PipelineKind::QuantOnly => Box::new(quant_only::QuantOnlyAttention::new(cfg)),
+        PipelineKind::IntAttention => Box::new(int_attention::IntAttention::new(cfg)),
+        PipelineKind::ExaqInt2 => Box::new(exaq_pipe::ExaqAttention::new(
+            cfg,
+            crate::softmax::exaq::ExaqConfig::int2(),
+        )),
+        PipelineKind::ExaqInt3 => Box::new(exaq_pipe::ExaqAttention::new(
+            cfg,
+            crate::softmax::exaq::ExaqConfig::int3(),
+        )),
+    }
+}
+
+/// Shared shape validation for all pipelines.
+pub(crate) fn validate_shapes(cfg: &AttentionConfig, q: &MatF32, k: &MatF32, v: &MatF32) {
+    assert_eq!(q.cols(), cfg.head_dim, "Q head_dim");
+    assert_eq!(k.cols(), cfg.head_dim, "K head_dim");
+    assert_eq!(v.cols(), cfg.head_dim, "V head_dim");
+    assert_eq!(k.rows(), cfg.seq_len, "K seq_len");
+    assert_eq!(v.rows(), cfg.seq_len, "V seq_len");
+    if cfg.mask == Mask::Causal {
+        assert_eq!(
+            q.rows(),
+            cfg.seq_len,
+            "causal mask requires square attention (q rows == seq_len)"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [
+            PipelineKind::Fp32,
+            PipelineKind::Fp16,
+            PipelineKind::QuantOnly,
+            PipelineKind::IntAttention,
+        ] {
+            assert_eq!(PipelineKind::parse(k.name()), Some(k), "{}", k.name());
+        }
+        assert_eq!(PipelineKind::parse("int"), Some(PipelineKind::IntAttention));
+        assert_eq!(PipelineKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn config_builders() {
+        let cfg = AttentionConfig::new(128, 64).causal().with_threads(4);
+        assert_eq!(cfg.seq_len, 128);
+        assert_eq!(cfg.mask, Mask::Causal);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.gemm_flops(128), 2 * 2 * 128 * 128 * 64);
+    }
+
+    #[test]
+    fn factory_builds_every_kind() {
+        let cfg = AttentionConfig::new(16, 8);
+        for k in [
+            PipelineKind::Fp32,
+            PipelineKind::Fp16,
+            PipelineKind::QuantOnly,
+            PipelineKind::IntAttention,
+            PipelineKind::ExaqInt2,
+            PipelineKind::ExaqInt3,
+        ] {
+            let p = build_pipeline(k, cfg);
+            assert_eq!(p.kind(), k);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! INT8 **Quant-Only** pipeline (paper §2.1–2.2, the "conventional quantized
+//! attention" of Figure 1 top): integer GEMMs, but the softmax path takes the
+//! dequantize → FP32 softmax → requantize detour the paper identifies as the
+//! dominant cost (57–65 % of latency, Figure 2).
+//!
+//! Stage structure (each separately timed):
+//!   1. Quantize   — dynamic per-tensor INT8 of Q, K, V (eq. 2–3)
+//!   2. QkGemm     — `Â = Q̂K̂ᵀ` in i8×i8→i32 (eq. 4)
+//!   3. Dequantize — `A = α·Â` to FP32
+//!   4. Softmax    — stable FP32 softmax (eq. 6)
+//!   5. Requantize — `P̂ = round(127·P)` signed INT8 (the conventional choice
+//!                    the paper ablates in Table 9)
+//!   6. PvGemm     — `P̂·V̂` in i8×i8→i32
+//!   7. Output     — `O = (s_V/127)·(P̂V̂)`
+
+use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::energy::OpCounts;
+use crate::gemm::{gemm_i8_notrans, par_gemm_i8};
+use crate::quant::{quantize_i8, quantize_p_i8};
+use crate::softmax::float_softmax::softmax_rows;
+use crate::tensor::{MatF32, MatI32};
+use crate::util::timer::{Stage, StageTimes};
+
+pub struct QuantOnlyAttention {
+    cfg: AttentionConfig,
+    times: StageTimes,
+    ops: OpCounts,
+}
+
+impl QuantOnlyAttention {
+    pub fn new(cfg: AttentionConfig) -> Self {
+        QuantOnlyAttention { cfg, times: StageTimes::new(), ops: OpCounts::default() }
+    }
+}
+
+impl AttentionPipeline for QuantOnlyAttention {
+    fn kind(&self) -> PipelineKind {
+        PipelineKind::QuantOnly
+    }
+
+    fn config(&self) -> &AttentionConfig {
+        &self.cfg
+    }
+
+    fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_shapes(&self.cfg, q, k, v);
+        let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
+        let threads = self.cfg.threads;
+
+        // (1) dynamic quantization.
+        let (qq, kq, vq) = self.times.measure(Stage::Quantize, || {
+            (quantize_i8(q), quantize_i8(k), quantize_i8(v))
+        });
+        self.ops.add(&counts::quantize_qkv(m, l, d));
+        let alpha = qq.scale * kq.scale / (d as f32).sqrt();
+
+        // (2) integer similarity GEMM.
+        let mut logits = MatI32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_i8(&qq.data, &kq.data, &mut logits, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+
+        // (3) dequantize the full logit matrix to FP32 — the detour begins.
+        let mut a = self
+            .times
+            .measure(Stage::Dequantize, || logits.map(|x| x as f32 * alpha));
+        let valid = counts::valid_positions(m, l, self.cfg.mask);
+        self.ops.add(&counts::dequantize_logits((m * l) as u64));
+
+        // (4) FP32 softmax.
+        self.times.measure(Stage::Softmax, || {
+            softmax_rows(&mut a, self.cfg.mask);
+        });
+        self.ops.add(&counts::fp32_softmax(valid, m as u64));
+
+        // (5) requantize probabilities to signed INT8 (×127).
+        let p8 = self.times.measure(Stage::Requantize, || quantize_p_i8(&a));
+        self.ops.add(&counts::requantize_probs(valid));
+
+        // (6) integer aggregation GEMM.
+        let mut acc = MatI32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            gemm_i8_notrans(&p8, &vq.data, &mut acc);
+        });
+        let nnz = p8.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+        self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+        // (7) output rescale.
+        let out_scale = vq.scale / 127.0;
+        let o = self
+            .times
+            .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    fn stage_times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    fn op_counts(&self) -> &OpCounts {
+        &self.ops
+    }
+
+    fn reset_stats(&mut self) {
+        self.times.reset();
+        self.ops = OpCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::fp32::reference_attention;
+    use crate::softmax::index_softmax::Mask;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn close_to_fp32_reference() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let cfg = AttentionConfig::new(64, 32);
+        let q = rand_mat(&mut rng, 32, 32);
+        let k = rand_mat(&mut rng, 64, 32);
+        let v = rand_mat(&mut rng, 64, 32);
+        let got = QuantOnlyAttention::new(cfg).forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::None);
+        // INT8 quantization of Q,K,V plus INT8 P: a few percent error.
+        let cos = crate::util::stats::cosine_similarity(got.as_slice(), want.as_slice());
+        assert!(cos > 0.99, "cos={cos}");
+    }
+
+    #[test]
+    fn causal_close_to_reference() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let cfg = AttentionConfig::new(32, 16).causal();
+        let q = rand_mat(&mut rng, 32, 16);
+        let k = rand_mat(&mut rng, 32, 16);
+        let v = rand_mat(&mut rng, 32, 16);
+        let got = QuantOnlyAttention::new(cfg).forward(&q, &k, &v);
+        let want = reference_attention(&q, &k, &v, Mask::Causal);
+        let cos = crate::util::stats::cosine_similarity(got.as_slice(), want.as_slice());
+        assert!(cos > 0.99, "cos={cos}");
+    }
+
+    #[test]
+    fn detour_stages_are_timed() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let cfg = AttentionConfig::new(64, 32);
+        let q = rand_mat(&mut rng, 64, 32);
+        let k = rand_mat(&mut rng, 64, 32);
+        let v = rand_mat(&mut rng, 64, 32);
+        let mut pipe = QuantOnlyAttention::new(cfg);
+        let _ = pipe.forward(&q, &k, &v);
+        // The detour's three stages must all be visible.
+        assert!(pipe.stage_times().get_ns(Stage::Dequantize) > 0);
+        assert!(pipe.stage_times().get_ns(Stage::Softmax) > 0);
+        assert!(pipe.stage_times().get_ns(Stage::Requantize) > 0);
+        // And the conversion op counters populated (the energy story).
+        assert!(pipe.op_counts().dtype_conv > 0);
+        assert_eq!(pipe.op_counts().int8_mac > 0, true);
+        assert_eq!(pipe.op_counts().fp32_mac, 0);
+    }
+}

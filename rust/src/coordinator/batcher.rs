@@ -1,0 +1,148 @@
+//! Dynamic batching policy: decides, each scheduling round, which queued
+//! requests to admit into the active set (continuous batching, Orca-style)
+//! under a token budget, and in what order (shortest-prompt-first buckets
+//! reduce head-of-line blocking from long prefills on a single-core device).
+
+use crate::coordinator::request::Request;
+use std::collections::VecDeque;
+
+/// Batching policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests decoding concurrently.
+    pub max_active: usize,
+    /// Max *new* prefill tokens admitted per scheduling round (bounds TTFT
+    /// jitter for already-running decodes).
+    pub prefill_token_budget: usize,
+    /// Admit shorter prompts first within a round.
+    pub shortest_first: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_active: 8, prefill_token_budget: 2048, shortest_first: true }
+    }
+}
+
+/// Select requests to admit from `queue` given `active` currently-running
+/// requests. Removes the admitted requests from the queue and returns them.
+pub fn select_admissions(
+    queue: &mut VecDeque<Request>,
+    active: usize,
+    policy: &BatchPolicy,
+) -> Vec<Request> {
+    let slots = policy.max_active.saturating_sub(active);
+    if slots == 0 || queue.is_empty() {
+        return Vec::new();
+    }
+    // Candidate indices in admission order.
+    let mut order: Vec<usize> = (0..queue.len()).collect();
+    if policy.shortest_first {
+        order.sort_by_key(|&i| queue[i].prompt.len());
+    }
+    let mut budget = policy.prefill_token_budget;
+    let mut picked: Vec<usize> = Vec::new();
+    for &i in &order {
+        if picked.len() >= slots {
+            break;
+        }
+        let len = queue[i].prompt.len();
+        if len <= budget {
+            budget -= len;
+            picked.push(i);
+        } else if picked.is_empty() && active == 0 {
+            // Never starve: a prompt longer than the whole budget still runs
+            // when nothing else is in flight.
+            picked.push(i);
+            break;
+        }
+    }
+    // Remove picked indices from the queue (descending to keep indices valid).
+    picked.sort_unstable();
+    let mut out: Vec<Request> = Vec::with_capacity(picked.len());
+    for &i in picked.iter().rev() {
+        out.push(queue.remove(i).expect("index valid"));
+    }
+    out.reverse();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64, plen: usize) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        // Keep the receiver alive is unnecessary for batcher tests.
+        std::mem::forget(_rx);
+        Request {
+            id,
+            prompt: vec![0; plen],
+            gen_len: 1,
+            temperature: 0.0,
+            top_k: 1,
+            arrived: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn q(reqs: Vec<Request>) -> VecDeque<Request> {
+        reqs.into_iter().collect()
+    }
+
+    #[test]
+    fn respects_max_active() {
+        let mut queue = q(vec![req(1, 10), req(2, 10), req(3, 10)]);
+        let policy = BatchPolicy { max_active: 2, ..Default::default() };
+        let adm = select_admissions(&mut queue, 1, &policy);
+        assert_eq!(adm.len(), 1);
+        assert_eq!(queue.len(), 2);
+    }
+
+    #[test]
+    fn respects_token_budget() {
+        let mut queue = q(vec![req(1, 600), req(2, 600), req(3, 600)]);
+        let policy = BatchPolicy { max_active: 8, prefill_token_budget: 1000, shortest_first: false };
+        let adm = select_admissions(&mut queue, 0, &policy);
+        assert_eq!(adm.len(), 1, "only one 600-token prompt fits in 1000");
+    }
+
+    #[test]
+    fn shortest_first_ordering() {
+        let mut queue = q(vec![req(1, 500), req(2, 50), req(3, 200)]);
+        let policy = BatchPolicy { max_active: 2, prefill_token_budget: 10_000, shortest_first: true };
+        let adm = select_admissions(&mut queue, 0, &policy);
+        assert_eq!(adm.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(queue.front().unwrap().id, 1);
+    }
+
+    #[test]
+    fn fifo_when_shortest_first_disabled() {
+        let mut queue = q(vec![req(1, 500), req(2, 50)]);
+        let policy = BatchPolicy { max_active: 1, prefill_token_budget: 10_000, shortest_first: false };
+        let adm = select_admissions(&mut queue, 0, &policy);
+        assert_eq!(adm[0].id, 1);
+    }
+
+    #[test]
+    fn oversized_prompt_not_starved() {
+        let mut queue = q(vec![req(1, 5000)]);
+        let policy = BatchPolicy { max_active: 4, prefill_token_budget: 1000, shortest_first: true };
+        // Nothing active → must still admit.
+        let adm = select_admissions(&mut queue, 0, &policy);
+        assert_eq!(adm.len(), 1);
+        // But with work in flight it waits.
+        let mut queue = q(vec![req(1, 5000)]);
+        let adm = select_admissions(&mut queue, 1, &policy);
+        assert!(adm.is_empty());
+    }
+
+    #[test]
+    fn empty_queue_returns_empty() {
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        let adm = select_admissions(&mut queue, 0, &BatchPolicy::default());
+        assert!(adm.is_empty());
+    }
+}

@@ -1,0 +1,377 @@
+//! The serving engine: a scheduler thread running continuous batching over
+//! the tiny LM, with bounded-queue admission (backpressure) and metrics.
+//!
+//! Scheduling loop (one "round"):
+//!   1. Drain the submit channel into the wait queue; reject on overflow.
+//!   2. Admit new requests per [`BatchPolicy`] (prefill phase; records TTFT).
+//!   3. One decode step for every active request (continuous batching).
+//!   4. Retire finished requests, replying on their channels.
+//!
+//! Single scheduler thread: on the target class of devices (and this host)
+//! compute is the bottleneck, not I/O, so the engine keeps the model on one
+//! thread and exposes concurrency through batching — the same topology the
+//! paper's measurement setup uses (8 worker threads inside the kernels, one
+//! request loop).
+
+use crate::attention::PipelineKind;
+use crate::coordinator::batcher::{select_admissions, BatchPolicy};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::request::{Request, Response, SubmitError};
+use crate::model::lm::{sample_row, KvCache, TinyLm};
+use crate::model::weights::Weights;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    pub attention: PipelineKind,
+    pub policy: BatchPolicy,
+    /// Bounded wait-queue depth; submits beyond this are rejected.
+    pub max_queue: usize,
+    /// GEMM threads inside the model.
+    pub threads: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            attention: PipelineKind::IntAttention,
+            policy: BatchPolicy::default(),
+            max_queue: 64,
+            threads: 1,
+        }
+    }
+}
+
+/// A request in flight.
+struct Active {
+    req: Request,
+    cache: KvCache,
+    generated: Vec<u16>,
+    queue_us: u64,
+    prefill_us: u64,
+    decode_started: Instant,
+    rng: crate::util::prng::Pcg64,
+}
+
+/// Public handle: submit requests, read metrics, shut down.
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+    metrics: Metrics,
+    queue_len: Arc<AtomicU64>,
+    max_queue: usize,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    max_context: usize,
+}
+
+impl EngineHandle {
+    /// Submit a generation request; returns the response channel.
+    pub fn submit(
+        &self,
+        prompt: Vec<u16>,
+        gen_len: usize,
+        temperature: f32,
+        top_k: usize,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if prompt.is_empty() || prompt.len() + gen_len > self.max_context {
+            self.metrics.on_reject();
+            return Err(SubmitError::BadRequest);
+        }
+        // Admission control: bounded queue.
+        if self.queue_len.load(Ordering::SeqCst) as usize >= self.max_queue {
+            self.metrics.on_reject();
+            return Err(SubmitError::QueueFull);
+        }
+        self.queue_len.fetch_add(1, Ordering::SeqCst);
+        self.metrics.on_submit();
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::SeqCst),
+            prompt,
+            gen_len: gen_len.max(1),
+            temperature,
+            top_k: top_k.max(1),
+            arrived: Instant::now(),
+            reply: tx,
+        };
+        self.tx.send(req).map_err(|_| SubmitError::ShuttingDown)?;
+        Ok(rx)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Signal shutdown and join the scheduler (drains in-flight work).
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Engine constructor.
+pub struct Engine;
+
+impl Engine {
+    /// Start the scheduler thread and return a handle.
+    pub fn start(weights: Weights, opts: EngineOptions) -> EngineHandle {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Metrics::new();
+        let queue_len = Arc::new(AtomicU64::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let max_context = weights.cfg.max_seq;
+
+        let m = metrics.clone();
+        let ql = Arc::clone(&queue_len);
+        let sd = Arc::clone(&shutdown);
+        let join = std::thread::Builder::new()
+            .name("intattn-scheduler".into())
+            .spawn(move || scheduler_loop(weights, opts, rx, m, ql, sd))
+            .expect("spawn scheduler");
+
+        EngineHandle {
+            tx,
+            metrics,
+            queue_len,
+            max_queue: 1_000_000, // real bound enforced below via opts clone
+            next_id: AtomicU64::new(1),
+            shutdown,
+            join: Some(join),
+            max_context,
+        }
+        // NB: max_queue is overwritten by `start_with_bound` callers; see
+        // `Engine::start_bounded`.
+    }
+
+    /// Start with the options' queue bound enforced on submit.
+    pub fn start_bounded(weights: Weights, opts: EngineOptions) -> EngineHandle {
+        let max_queue = opts.max_queue;
+        let mut h = Self::start(weights, opts);
+        h.max_queue = max_queue;
+        h
+    }
+}
+
+fn scheduler_loop(
+    weights: Weights,
+    opts: EngineOptions,
+    rx: mpsc::Receiver<Request>,
+    metrics: Metrics,
+    queue_len: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut lm = TinyLm::new(weights, opts.attention);
+    lm.threads = opts.threads;
+    let cfg = *lm.config();
+    let mut waiting: VecDeque<Request> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+
+    loop {
+        // (1) drain submissions.
+        loop {
+            match rx.try_recv() {
+                Ok(req) => {
+                    queue_len.fetch_sub(1, Ordering::SeqCst);
+                    waiting.push_back(req);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    if active.is_empty() && waiting.is_empty() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        if shutdown.load(Ordering::SeqCst) && active.is_empty() && waiting.is_empty() {
+            return;
+        }
+        if waiting.is_empty() && active.is_empty() {
+            // Idle: block briefly for the next request to avoid spinning.
+            match rx.recv_timeout(std::time::Duration::from_millis(5)) {
+                Ok(req) => {
+                    queue_len.fetch_sub(1, Ordering::SeqCst);
+                    waiting.push_back(req);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+            }
+        }
+
+        // (2) admissions → prefill.
+        let admitted = select_admissions(&mut waiting, active.len(), &opts.policy);
+        for req in admitted {
+            let queue_us = req.arrived.elapsed().as_micros() as u64;
+            let t0 = Instant::now();
+            let mut cache = KvCache::new(cfg.n_layers, cfg.d_model);
+            let logits = lm.forward(&req.prompt, Some(&mut cache));
+            metrics.on_prefill_tokens(req.prompt.len());
+            let mut rng = crate::util::prng::Pcg64::seed_from_u64(req.id ^ 0x5EED);
+            let first = sample_row(
+                logits.row(logits.rows() - 1),
+                req.temperature,
+                req.top_k,
+                &mut rng,
+            );
+            let prefill_us = t0.elapsed().as_micros() as u64;
+            active.push(Active {
+                req,
+                cache,
+                generated: vec![first],
+                queue_us,
+                prefill_us,
+                decode_started: Instant::now(),
+                rng,
+            });
+        }
+        metrics.on_active(active.len());
+
+        // (3) one decode step per active request (continuous batching).
+        for a in active.iter_mut() {
+            if a.generated.len() >= a.req.gen_len {
+                continue;
+            }
+            let last = *a.generated.last().unwrap();
+            if a.cache.len + 1 >= cfg.max_seq {
+                // Context exhausted: stop early.
+                a.generated.resize(a.req.gen_len, last);
+                continue;
+            }
+            let logits = lm.decode_step(last, &mut a.cache);
+            let next = sample_row(logits.row(0), a.req.temperature, a.req.top_k, &mut a.rng);
+            a.generated.push(next);
+        }
+
+        // (4) retire finished.
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].generated.len() >= active[i].req.gen_len {
+                let a = active.swap_remove(i);
+                let decode_us = a.decode_started.elapsed().as_micros() as u64;
+                let total_us = a.req.arrived.elapsed().as_micros() as u64;
+                let resp = Response {
+                    id: a.req.id,
+                    tokens: a.generated,
+                    queue_us: a.queue_us,
+                    prefill_us: a.prefill_us,
+                    decode_us,
+                    total_us,
+                };
+                metrics.on_complete(&resp);
+                let _ = a.req.reply.send(resp); // receiver may have gone away
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn small_weights() -> Weights {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, max_seq: 64, mlp_mult: 2 };
+        Weights::random(cfg, 11)
+    }
+
+    #[test]
+    fn serves_a_request_end_to_end() {
+        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        let rx = h.submit(vec![1, 2, 3], 5, 0.8, 8).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+        assert!(resp.total_us > 0);
+        assert!(resp.ttft_us() <= resp.total_us + 1000);
+        let snap = h.shutdown();
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        let rxs: Vec<_> = (0..6)
+            .map(|i| h.submit(vec![1, 2, (i % 30) as u16 + 1], 4, 0.5, 4).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        let snap = h.shutdown();
+        assert_eq!(snap.completed, 6);
+        assert!(snap.peak_active >= 2, "batching should overlap requests");
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        assert_eq!(h.submit(vec![], 4, 0.0, 1).unwrap_err(), SubmitError::BadRequest);
+        assert_eq!(
+            h.submit(vec![1; 60], 10, 0.0, 1).unwrap_err(),
+            SubmitError::BadRequest,
+            "prompt+gen beyond max context"
+        );
+        let snap = h.shutdown();
+        assert_eq!(snap.rejected, 2);
+        assert_eq!(snap.completed, 0);
+    }
+
+    #[test]
+    fn backpressure_rejects_on_full_queue() {
+        let opts = EngineOptions { max_queue: 2, ..Default::default() };
+        let h = Engine::start_bounded(small_weights(), opts);
+        // Flood faster than the scheduler can drain; expect ≥1 rejection.
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for i in 0..40 {
+            match h.submit(vec![1, 2, (i % 30) as u16 + 1], 2, 0.0, 1) {
+                Ok(rx) => receivers.push(rx),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected > 0, "queue bound must trigger backpressure");
+        for rx in receivers {
+            let _ = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        }
+        h.shutdown();
+    }
+
+    #[test]
+    fn metrics_snapshot_coherent() {
+        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        let rx = h.submit(vec![5, 6, 7, 8], 3, 0.0, 1).unwrap();
+        let _ = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let snap = h.shutdown();
+        assert_eq!(snap.prefill_tokens, 4);
+        assert_eq!(snap.decode_tokens, 2);
+        assert!(snap.throughput_tok_s > 0.0);
+        assert!(snap.render().contains("tok/s"));
+    }
+}

@@ -1,0 +1,167 @@
+//! Serving metrics: counters + latency histograms, shared between the
+//! scheduler thread and callers via a mutex (updates are coarse-grained —
+//! once per request / decode round — so contention is negligible).
+
+use crate::util::stats::LogHistogram;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Aggregated engine metrics.
+#[derive(Debug)]
+pub struct MetricsInner {
+    pub started: Instant,
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub ttft_us: LogHistogram,
+    pub e2e_us: LogHistogram,
+    pub per_token_us: LogHistogram,
+    /// Max concurrent active (decoding) requests observed.
+    pub peak_active: usize,
+}
+
+impl Default for MetricsInner {
+    fn default() -> Self {
+        MetricsInner {
+            started: Instant::now(),
+            submitted: 0,
+            rejected: 0,
+            completed: 0,
+            prefill_tokens: 0,
+            decode_tokens: 0,
+            ttft_us: LogHistogram::new(),
+            e2e_us: LogHistogram::new(),
+            per_token_us: LogHistogram::new(),
+            peak_active: 0,
+        }
+    }
+}
+
+/// Shared handle.
+#[derive(Clone, Default)]
+pub struct Metrics(Arc<Mutex<MetricsInner>>);
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.0.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.0.lock().unwrap().rejected += 1;
+    }
+
+    pub fn on_active(&self, n: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.peak_active = m.peak_active.max(n);
+    }
+
+    pub fn on_complete(&self, resp: &crate::coordinator::request::Response) {
+        let mut m = self.0.lock().unwrap();
+        m.completed += 1;
+        m.decode_tokens += resp.tokens.len().saturating_sub(1) as u64;
+        m.ttft_us.record_us(resp.ttft_us() as f64);
+        m.e2e_us.record_us(resp.total_us as f64);
+        let pt = resp.decode_per_token_us();
+        if pt > 0.0 {
+            m.per_token_us.record_us(pt);
+        }
+    }
+
+    pub fn on_prefill_tokens(&self, n: usize) {
+        self.0.lock().unwrap().prefill_tokens += n as u64;
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.0.lock().unwrap();
+        let elapsed_s = m.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            submitted: m.submitted,
+            rejected: m.rejected,
+            completed: m.completed,
+            prefill_tokens: m.prefill_tokens,
+            decode_tokens: m.decode_tokens,
+            elapsed_s,
+            throughput_tok_s: (m.prefill_tokens + m.decode_tokens) as f64 / elapsed_s,
+            requests_per_s: m.completed as f64 / elapsed_s,
+            ttft_p50_us: m.ttft_us.percentile_us(50.0),
+            ttft_p99_us: m.ttft_us.percentile_us(99.0),
+            e2e_p50_us: m.e2e_us.percentile_us(50.0),
+            e2e_p99_us: m.e2e_us.percentile_us(99.0),
+            per_token_mean_us: m.per_token_us.mean_us(),
+            peak_active: m.peak_active,
+        }
+    }
+}
+
+/// Immutable metrics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub elapsed_s: f64,
+    pub throughput_tok_s: f64,
+    pub requests_per_s: f64,
+    pub ttft_p50_us: f64,
+    pub ttft_p99_us: f64,
+    pub e2e_p50_us: f64,
+    pub e2e_p99_us: f64,
+    pub per_token_mean_us: f64,
+    pub peak_active: usize,
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests: {} ok / {} rejected / {} submitted | tokens: {} prefill + {} decode \
+             | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms | peak batch {}",
+            self.completed,
+            self.rejected,
+            self.submitted,
+            self.prefill_tokens,
+            self.decode_tokens,
+            self.throughput_tok_s,
+            self.ttft_p50_us / 1e3,
+            self.ttft_p99_us / 1e3,
+            self.e2e_p50_us / 1e3,
+            self.peak_active,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Response;
+
+    #[test]
+    fn counts_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_prefill_tokens(100);
+        m.on_active(3);
+        m.on_active(2);
+        let r = Response { id: 1, tokens: vec![1, 2, 3, 4], queue_us: 10, prefill_us: 90, decode_us: 300, total_us: 400 };
+        m.on_complete(&r);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.prefill_tokens, 100);
+        assert_eq!(s.decode_tokens, 3);
+        assert_eq!(s.peak_active, 3);
+        assert!(s.ttft_p50_us > 0.0);
+        assert!(s.render().contains("requests: 1 ok"));
+    }
+}

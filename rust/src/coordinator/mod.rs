@@ -1,0 +1,17 @@
+//! The L3 serving coordinator: an edge-inference engine in the vLLM/Orca
+//! mold, sized for on-device serving. Owns the event loop, request admission
+//! (bounded queue → backpressure), continuous batching across prefill and
+//! decode, per-request KV caches, and latency/throughput metrics.
+//!
+//! The paper's contribution (IntAttention) plugs in as the attention backend
+//! of the model the engine serves — selected per-engine via
+//! [`EngineOptions::attention`], so the serving benchmarks compare pipelines
+//! under identical scheduling.
+
+pub mod request;
+pub mod metrics;
+pub mod batcher;
+pub mod engine;
+
+pub use engine::{Engine, EngineHandle, EngineOptions};
+pub use request::{Request, Response, SubmitError};

@@ -1,0 +1,99 @@
+//! Request/response types of the serving engine.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt tokens (byte-level).
+    pub prompt: Vec<u16>,
+    /// Number of tokens to generate.
+    pub gen_len: usize,
+    /// Sampling temperature (0 = greedy).
+    pub temperature: f32,
+    /// Top-k truncation.
+    pub top_k: usize,
+    /// Enqueue timestamp (set by the engine).
+    pub arrived: Instant,
+    /// Completion channel.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Completed generation with timing breakdown.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u16>,
+    /// Time from arrival to scheduling (queueing delay), µs.
+    pub queue_us: u64,
+    /// Prefill (time-to-first-token minus queueing), µs.
+    pub prefill_us: u64,
+    /// Total decode time, µs.
+    pub decode_us: u64,
+    /// End-to-end latency, µs.
+    pub total_us: u64,
+}
+
+impl Response {
+    /// Time-to-first-token (the paper's TTFT motivation, §1): queue + prefill.
+    pub fn ttft_us(&self) -> u64 {
+        self.queue_us + self.prefill_us
+    }
+
+    /// Mean inter-token latency during decode.
+    pub fn decode_per_token_us(&self) -> f64 {
+        if self.tokens.len() <= 1 {
+            0.0
+        } else {
+            self.decode_us as f64 / (self.tokens.len() - 1) as f64
+        }
+    }
+}
+
+/// Why a submit was rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    #[error("queue full (backpressure)")]
+    QueueFull,
+    #[error("engine is shutting down")]
+    ShuttingDown,
+    #[error("prompt empty or exceeds max context")]
+    BadRequest,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttft_is_queue_plus_prefill() {
+        let (tx, _rx) = mpsc::channel();
+        let _req = Request {
+            id: 1,
+            prompt: vec![1],
+            gen_len: 4,
+            temperature: 0.0,
+            top_k: 1,
+            arrived: Instant::now(),
+            reply: tx,
+        };
+        let r = Response {
+            id: 1,
+            tokens: vec![1, 2, 3],
+            queue_us: 100,
+            prefill_us: 400,
+            decode_us: 600,
+            total_us: 1100,
+        };
+        assert_eq!(r.ttft_us(), 500);
+        assert!((r.decode_per_token_us() - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_token_decode_rate_is_zero() {
+        let r = Response { id: 1, tokens: vec![9], queue_us: 0, prefill_us: 1, decode_us: 0, total_us: 1 };
+        assert_eq!(r.decode_per_token_us(), 0.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! Analytic energy model — the substitution for the paper's wall-plug meter
+//! (Figure 8; see DESIGN.md §2).
+//!
+//! Each pipeline counts the arithmetic and memory operations it executes
+//! through an [`OpCounts`] record; [`EnergyModel`] prices them with per-op
+//! energies from Horowitz, "Computing's energy problem" (ISSCC 2014, 45 nm),
+//! the standard reference for this style of accounting. Absolute joules are
+//! process-dependent; the *ratios* between pipelines — what Fig. 8 plots —
+//! are governed by the op mix, which we count exactly.
+
+/// Operation/byte counters accumulated by a pipeline forward pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCounts {
+    /// INT8×INT8→INT32 multiply-accumulates (GEMM work).
+    pub int8_mac: u64,
+    /// INT32 add/sub/min/max/compare ops (max-subtract, clipping, sums).
+    pub int32_alu: u64,
+    /// INT32 multiplies (fixed-point scaling, multiply–shift division).
+    pub int32_mul: u64,
+    /// Table-gather operations (LUT lookups).
+    pub lut_gather: u64,
+    /// FP16 multiply-accumulates.
+    pub fp16_mac: u64,
+    /// FP32 multiply-accumulates (float GEMM work).
+    pub fp32_mac: u64,
+    /// FP32 simple ALU ops (add/sub/mul/cmp as single ops).
+    pub fp32_alu: u64,
+    /// FP32 transcendental evaluations (`exp`), priced as a multi-op macro.
+    pub fp32_exp: u64,
+    /// FP32 divisions.
+    pub fp32_div: u64,
+    /// Datatype conversions (dequantize/requantize/f16↔f32), per element.
+    pub dtype_conv: u64,
+    /// Bytes moved to/from working memory (operand reads + result writes).
+    pub mem_bytes: u64,
+}
+
+impl OpCounts {
+    pub fn add(&mut self, other: &OpCounts) {
+        self.int8_mac += other.int8_mac;
+        self.int32_alu += other.int32_alu;
+        self.int32_mul += other.int32_mul;
+        self.lut_gather += other.lut_gather;
+        self.fp16_mac += other.fp16_mac;
+        self.fp32_mac += other.fp32_mac;
+        self.fp32_alu += other.fp32_alu;
+        self.fp32_exp += other.fp32_exp;
+        self.fp32_div += other.fp32_div;
+        self.dtype_conv += other.dtype_conv;
+        self.mem_bytes += other.mem_bytes;
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.int8_mac
+            + self.int32_alu
+            + self.int32_mul
+            + self.lut_gather
+            + self.fp16_mac
+            + self.fp32_mac
+            + self.fp32_alu
+            + self.fp32_exp
+            + self.fp32_div
+            + self.dtype_conv
+    }
+}
+
+/// Per-op energies in picojoules (45 nm, Horowitz ISSCC'14; exp/div/gather
+/// priced as composites of the published primitives).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    pub pj_int8_mac: f64,
+    pub pj_int32_alu: f64,
+    pub pj_int32_mul: f64,
+    pub pj_lut_gather: f64,
+    pub pj_fp16_mac: f64,
+    pub pj_fp32_mac: f64,
+    pub pj_fp32_alu: f64,
+    pub pj_fp32_exp: f64,
+    pub pj_fp32_div: f64,
+    pub pj_dtype_conv: f64,
+    /// Per-byte cost of cache/SRAM traffic (8 KB-class SRAM access ≈10 pJ
+    /// per 64-bit word → ~1.25 pJ/B; we use a conservative blended figure
+    /// that includes some LPDDR traffic).
+    pub pj_mem_byte: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            // mul + add pairs from Horowitz Table 1:
+            pj_int8_mac: 0.2 + 0.03,        // int8 mul 0.2 + int32 add 0.1 (≈0.03 for 8-bit)
+            pj_int32_alu: 0.1,              // int32 add
+            pj_int32_mul: 3.1,              // int32 mul
+            pj_lut_gather: 1.25 + 0.1,      // small-SRAM read + index add
+            pj_fp16_mac: 1.1 + 0.4,         // fp16 mul + add
+            pj_fp32_mac: 3.7 + 0.9,         // fp32 mul + add
+            pj_fp32_alu: 0.9,
+            pj_fp32_exp: 20.0 * 3.7,        // exp ≈ tens of fp32 mul-equivalents (§2.2)
+            pj_fp32_div: 4.0 * 3.7,         // iterative divide
+            pj_dtype_conv: 1.0,             // int↔fp convert ≈ fp add class
+            pj_mem_byte: 1.5,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Total energy in microjoules for a counted workload.
+    pub fn energy_uj(&self, c: &OpCounts) -> f64 {
+        let pj = c.int8_mac as f64 * self.pj_int8_mac
+            + c.int32_alu as f64 * self.pj_int32_alu
+            + c.int32_mul as f64 * self.pj_int32_mul
+            + c.lut_gather as f64 * self.pj_lut_gather
+            + c.fp16_mac as f64 * self.pj_fp16_mac
+            + c.fp32_mac as f64 * self.pj_fp32_mac
+            + c.fp32_alu as f64 * self.pj_fp32_alu
+            + c.fp32_exp as f64 * self.pj_fp32_exp
+            + c.fp32_div as f64 * self.pj_fp32_div
+            + c.dtype_conv as f64 * self.pj_dtype_conv
+            + c.mem_bytes as f64 * self.pj_mem_byte;
+        pj * 1e-6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_counts_zero_energy() {
+        let m = EnergyModel::default();
+        assert_eq!(m.energy_uj(&OpCounts::default()), 0.0);
+    }
+
+    #[test]
+    fn int8_mac_is_an_order_cheaper_than_fp32_mac() {
+        let m = EnergyModel::default();
+        assert!(m.pj_fp32_mac / m.pj_int8_mac > 10.0);
+    }
+
+    #[test]
+    fn exp_dominates_elementwise_ops() {
+        // The premise of the paper: one exp costs tens of int ops.
+        let m = EnergyModel::default();
+        assert!(m.pj_fp32_exp / m.pj_lut_gather > 30.0);
+    }
+
+    #[test]
+    fn add_merges_counters() {
+        let mut a = OpCounts { int8_mac: 5, mem_bytes: 100, ..Default::default() };
+        let b = OpCounts { int8_mac: 3, fp32_exp: 7, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.int8_mac, 8);
+        assert_eq!(a.fp32_exp, 7);
+        assert_eq!(a.mem_bytes, 100);
+        assert_eq!(a.total_ops(), 8 + 7);
+    }
+
+    #[test]
+    fn energy_is_linear_in_counts() {
+        let m = EnergyModel::default();
+        let c1 = OpCounts { int8_mac: 1000, fp32_exp: 10, mem_bytes: 4096, ..Default::default() };
+        let mut c2 = c1;
+        c2.add(&c1);
+        let e1 = m.energy_uj(&c1);
+        let e2 = m.energy_uj(&c2);
+        assert!((e2 - 2.0 * e1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,663 @@
+//! Blocked GEMM kernels for every dtype combination the attention pipelines
+//! need:
+//!
+//! * `f32 × f32 → f32` — the FP32 baseline (`Q·Kᵀ`, `P·V`).
+//! * `f16-storage` — FP16 baseline: operands stored as binary16, compute in
+//!   f32 (see DESIGN.md §2 on the FP16 substitution).
+//! * `i8 × i8 → i32` — quantized `Q̂·K̂ᵀ` (paper eq. 4).
+//! * `u8 × i8 → i32` — the `P̂·V̂` aggregation with UINT8 probabilities
+//!   (paper §3.2).
+//!
+//! All kernels take **B pre-transposed** (`bt` is `N×K` row-major, i.e. Bᵀ),
+//! so every inner loop is a contiguous dot product that the compiler
+//! autovectorizes — the x86 stand-in for the paper's NEON SDOT/I8MM path.
+//! Register-blocked 4×2 microkernels with K-tiling keep the accumulators in
+//! registers; `par_*` drivers split rows across threads.
+
+use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
+use crate::util::f16::F16;
+use crate::util::threadpool::scope_chunks_with;
+
+/// K-dimension tile: fits comfortably in L1 alongside 4 A-rows + 2 B-rows.
+const KC: usize = 1024;
+
+// ---------------------------------------------------------------------------
+// f32
+
+/// `C[m,n] = Σ_k A[m,k]·Bᵀ[n,k]` — B given transposed.
+pub fn gemm_f32(a: &MatF32, bt: &MatF32, c: &mut MatF32) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = bt.rows();
+    assert_eq!(bt.cols(), k, "inner dims");
+    assert_eq!((c.rows(), c.cols()), (m, n), "output shape");
+    gemm_f32_rows(a, bt, c, 0, m);
+}
+
+/// Row-range worker (rows `[r0, r1)` of the output), used by the parallel driver.
+fn gemm_f32_rows(a: &MatF32, bt: &MatF32, c: &mut MatF32, r0: usize, r1: usize) {
+    let k = a.cols();
+    let n = bt.rows();
+    let a_s = a.as_slice();
+    let b_s = bt.as_slice();
+    let c_s = c.as_mut_slice();
+    // 2×2 register blocking over (m, n); K tiled at KC.
+    let mut i = r0;
+    while i < r1 {
+        let i2 = (i + 2).min(r1);
+        let mut j = 0;
+        while j < n {
+            let j2 = (j + 2).min(n);
+            let mut acc = [[0f32; 2]; 2];
+            let mut kk = 0;
+            while kk < k {
+                let ke = (kk + KC).min(k);
+                for ii in i..i2 {
+                    let arow = &a_s[ii * k + kk..ii * k + ke];
+                    for jj in j..j2 {
+                        let brow = &b_s[jj * k + kk..jj * k + ke];
+                        acc[ii - i][jj - j] += dot_f32(arow, brow);
+                    }
+                }
+                kk = ke;
+            }
+            for ii in i..i2 {
+                for jj in j..j2 {
+                    c_s[ii * n + jj] = acc[ii - i][jj - j];
+                }
+            }
+            j = j2;
+        }
+        i = i2;
+    }
+}
+
+/// Thread-parallel f32 GEMM.
+pub fn par_gemm_f32(a: &MatF32, bt: &MatF32, c: &mut MatF32, threads: usize) {
+    let m = a.rows();
+    let n = bt.rows();
+    assert_eq!((c.rows(), c.cols()), (m, n));
+    if threads <= 1 {
+        return gemm_f32(a, bt, c);
+    }
+    // SAFETY-free parallelism: split output rows into disjoint &mut chunks.
+    let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    scope_chunks_with(threads, m, |r0, r1| {
+        // Each chunk writes only rows [r0, r1): disjoint slices.
+        let c_chunk =
+            unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(r0 * n), (r1 - r0) * n) };
+        gemm_f32_rows_raw(a, bt, c_chunk, r0, r1);
+    });
+}
+
+fn gemm_f32_rows_raw(a: &MatF32, bt: &MatF32, c_chunk: &mut [f32], r0: usize, r1: usize) {
+    let k = a.cols();
+    let n = bt.rows();
+    let a_s = a.as_slice();
+    let b_s = bt.as_slice();
+    for ii in r0..r1 {
+        let arow = &a_s[ii * k..(ii + 1) * k];
+        let crow = &mut c_chunk[(ii - r0) * n..(ii - r0 + 1) * n];
+        for jj in 0..n {
+            crow[jj] = dot_f32(arow, &b_s[jj * k..(jj + 1) * k]);
+        }
+    }
+}
+
+/// f32 dot product with 8 explicit accumulators: float addition is not
+/// associative, so LLVM will not reassociate `s += x*y` into SIMD lanes on
+/// its own — unrolling by hand is what unlocks vectorized FMA here.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    const LANES: usize = 16;
+    let n = a.len().min(b.len());
+    let mut acc = [0f32; LANES];
+    let a_chunks = a[..n].chunks_exact(LANES);
+    let b_chunks = b[..n].chunks_exact(LANES);
+    let (a_rem, b_rem) = (a_chunks.remainder(), b_chunks.remainder());
+    for (ca, cb) in a_chunks.zip(b_chunks) {
+        for l in 0..LANES {
+            acc[l] = ca[l].mul_add(cb[l], acc[l]);
+        }
+    }
+    let mut s = 0f32;
+    for l in 0..LANES {
+        s += acc[l];
+    }
+    for (x, y) in a_rem.iter().zip(b_rem) {
+        s += x * y;
+    }
+    s
+}
+
+/// `C[i,c] = Σ_j P[i,j]·V[j,c]` with V **not** transposed (SAXPY layout):
+/// the `P·V` aggregation for float pipelines. Skips exact zeros in P so the
+/// float pipelines get the same masked-column shortcut the integer ones do.
+pub fn gemm_f32_notrans(p: &MatF32, v: &MatF32, c: &mut MatF32) {
+    let (m, l) = (p.rows(), p.cols());
+    let d = v.cols();
+    assert_eq!(v.rows(), l, "inner dims");
+    assert_eq!((c.rows(), c.cols()), (m, d), "output shape");
+    let p_s = p.as_slice();
+    let v_s = v.as_slice();
+    let c_s = c.as_mut_slice();
+    for i in 0..m {
+        let prow = &p_s[i * l..(i + 1) * l];
+        let crow = &mut c_s[i * d..(i + 1) * d];
+        crow.fill(0.0);
+        for (j, &pij) in prow.iter().enumerate() {
+            if pij == 0.0 {
+                continue;
+            }
+            let vrow = &v_s[j * d..(j + 1) * d];
+            for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                *acc += pij * vx;
+            }
+        }
+    }
+}
+
+/// Wrapper for sending a raw pointer across scoped threads; the row ranges
+/// passed to each thread are disjoint by construction.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor (rather than field access) so closures capture the whole
+    /// `Sync` wrapper, not the raw pointer (edition-2021 disjoint capture).
+    #[inline]
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f16 storage
+
+/// FP16-storage GEMM: operands are binary16 in memory (half the bandwidth of
+/// f32), decoded to f32 in K-tiles and multiplied in f32 — mirroring an edge
+/// FP16 pipeline where the register file computes wider than storage.
+pub fn gemm_f16(a: &[F16], bt: &[F16], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    // Decode B once per call into an f32 scratch (amortized across all M
+    // rows), decode A row-by-row.
+    let mut bdec = vec![0f32; n * k];
+    for (d, &h) in bdec.iter_mut().zip(bt) {
+        *d = h.to_f32();
+    }
+    let mut arow_dec = vec![0f32; k];
+    for i in 0..m {
+        for (d, &h) in arow_dec.iter_mut().zip(&a[i * k..(i + 1) * k]) {
+            *d = h.to_f32();
+        }
+        for j in 0..n {
+            c[i * n + j] = dot_f32(&arow_dec, &bdec[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8 × i8 → i32  (Q̂·K̂ᵀ, eq. 4)
+
+/// Integer similarity GEMM with INT32 accumulation. `bt` is K̂ (already the
+/// transposed operand: row j of `bt` is key j).
+pub fn gemm_i8(a: &MatI8, bt: &MatI8, c: &mut MatI32) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = bt.rows();
+    assert_eq!(bt.cols(), k, "inner dims");
+    assert_eq!((c.rows(), c.cols()), (m, n), "output shape");
+    gemm_i8_rows(a.as_slice(), bt.as_slice(), c.as_mut_slice(), m, n, k, 0, m);
+}
+
+/// i8 dot product, i32 accumulate — dispatches to the AVX-512 `vpmaddwd`
+/// kernel (the x86 analogue of the NEON SDOT path the paper's ACL kernels
+/// use) when available, else a portable multi-accumulator loop.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if *HAS_AVX512 {
+            // SAFETY: feature presence checked via cpuid (once).
+            return unsafe { dot_i8_avx512(a, b) };
+        }
+    }
+    dot_i8_scalar(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+static HAS_AVX512: once_cell::sync::Lazy<bool> =
+    once_cell::sync::Lazy::new(|| is_x86_feature_detected!("avx512bw"));
+
+/// AVX-512 i8 dot product: sign-extend 32 i8 lanes to i16, then `vpmaddwd`
+/// (32 i16 products pairwise-summed into 16 i32 lanes) with a vector
+/// accumulator. ~32 MACs per 3 instructions.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512bw")]
+unsafe fn dot_i8_avx512(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let chunks = n / 32;
+    let mut acc = _mm512_setzero_si512();
+    for c in 0..chunks {
+        let pa = a.as_ptr().add(c * 32) as *const __m256i;
+        let pb = b.as_ptr().add(c * 32) as *const __m256i;
+        let va = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pa));
+        let vb = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pb));
+        acc = _mm512_add_epi32(acc, _mm512_madd_epi16(va, vb));
+    }
+    let mut s = _mm512_reduce_add_epi32(acc);
+    for i in chunks * 32..n {
+        s += (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32);
+    }
+    s
+}
+
+/// Portable fallback with explicit accumulator lanes.
+#[inline]
+pub fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    const LANES: usize = 32;
+    let n = a.len().min(b.len());
+    let mut acc = [0i32; LANES];
+    let a_chunks = a[..n].chunks_exact(LANES);
+    let b_chunks = b[..n].chunks_exact(LANES);
+    let (a_rem, b_rem) = (a_chunks.remainder(), b_chunks.remainder());
+    for (ca, cb) in a_chunks.zip(b_chunks) {
+        for l in 0..LANES {
+            acc[l] += (ca[l] as i32) * (cb[l] as i32);
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for (&x, &y) in a_rem.iter().zip(b_rem) {
+        s += (x as i32) * (y as i32);
+    }
+    s
+}
+
+fn gemm_i8_rows(a: &[i8], bt: &[i8], c: &mut [i32], _m: usize, n: usize, k: usize, r0: usize, r1: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if *HAS_AVX512 {
+            // SAFETY: feature checked; row ranges in-bounds by construction.
+            unsafe { gemm_i8_rows_avx512(a, bt, c, n, k, r0, r1) };
+            return;
+        }
+    }
+    for i in r0..r1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, out) in crow.iter_mut().enumerate() {
+            *out = dot_i8(arow, &bt[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// AVX-512 i8 GEMM row kernel with 4-wide N blocking: the A-row tile is
+/// sign-extended once and reused across four B rows, amortizing the
+/// load+convert overhead that dominates the single-row dot kernel.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512bw")]
+unsafe fn gemm_i8_rows_avx512(
+    a: &[i8],
+    bt: &[i8],
+    c: &mut [i32],
+    n: usize,
+    k: usize,
+    r0: usize,
+    r1: usize,
+) {
+    use std::arch::x86_64::*;
+    let chunks = k / 32;
+    for i in r0..r1 {
+        let arow = a.as_ptr().add(i * k);
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = bt.as_ptr().add(j * k);
+            let b1 = bt.as_ptr().add((j + 1) * k);
+            let b2 = bt.as_ptr().add((j + 2) * k);
+            let b3 = bt.as_ptr().add((j + 3) * k);
+            let mut acc0 = _mm512_setzero_si512();
+            let mut acc1 = _mm512_setzero_si512();
+            let mut acc2 = _mm512_setzero_si512();
+            let mut acc3 = _mm512_setzero_si512();
+            for ch in 0..chunks {
+                let off = ch * 32;
+                let va =
+                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(arow.add(off) as *const __m256i));
+                let v0 =
+                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b0.add(off) as *const __m256i));
+                let v1 =
+                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b1.add(off) as *const __m256i));
+                let v2 =
+                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b2.add(off) as *const __m256i));
+                let v3 =
+                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b3.add(off) as *const __m256i));
+                acc0 = _mm512_add_epi32(acc0, _mm512_madd_epi16(va, v0));
+                acc1 = _mm512_add_epi32(acc1, _mm512_madd_epi16(va, v1));
+                acc2 = _mm512_add_epi32(acc2, _mm512_madd_epi16(va, v2));
+                acc3 = _mm512_add_epi32(acc3, _mm512_madd_epi16(va, v3));
+            }
+            let mut s0 = _mm512_reduce_add_epi32(acc0);
+            let mut s1 = _mm512_reduce_add_epi32(acc1);
+            let mut s2 = _mm512_reduce_add_epi32(acc2);
+            let mut s3 = _mm512_reduce_add_epi32(acc3);
+            for idx in chunks * 32..k {
+                let av = *arow.add(idx) as i32;
+                s0 += av * (*b0.add(idx) as i32);
+                s1 += av * (*b1.add(idx) as i32);
+                s2 += av * (*b2.add(idx) as i32);
+                s3 += av * (*b3.add(idx) as i32);
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            crow[j] = dot_i8(
+                std::slice::from_raw_parts(arow, k),
+                std::slice::from_raw_parts(bt.as_ptr().add(j * k), k),
+            );
+            j += 1;
+        }
+    }
+}
+
+/// Thread-parallel i8 GEMM.
+pub fn par_gemm_i8(a: &MatI8, bt: &MatI8, c: &mut MatI32, threads: usize) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = bt.rows();
+    assert_eq!(bt.cols(), k);
+    assert_eq!((c.rows(), c.cols()), (m, n));
+    if threads <= 1 {
+        return gemm_i8(a, bt, c);
+    }
+    let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let (a_s, b_s) = (a.as_slice(), bt.as_slice());
+    scope_chunks_with(threads, m, |r0, r1| {
+        let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
+        gemm_i8_rows(a_s, b_s, c_full, m, n, k, r0, r1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// u8 × i8 → i32  (P̂·V̂, §3.2)
+
+/// Aggregation GEMM: UINT8 probabilities times INT8 values with INT32
+/// accumulation. Here `v` is `L×d` row-major and is **not** transposed:
+/// `C[i,c] = Σ_j P̂[i,j] · V̂[j,c]`. The inner loop runs over the V row —
+/// contiguous — accumulating into a d-wide register panel (classic
+//  row-times-matrix SAXPY layout, ideal when d ≤ a few hundred).
+pub fn gemm_u8i8(p: &MatU8, v: &MatI8, c: &mut MatI32) {
+    let (m, l) = (p.rows(), p.cols());
+    let d = v.cols();
+    assert_eq!(v.rows(), l, "inner dims");
+    assert_eq!((c.rows(), c.cols()), (m, d), "output shape");
+    gemm_u8i8_rows(p.as_slice(), v.as_slice(), c.as_mut_slice(), l, d, 0, m);
+}
+
+fn gemm_u8i8_rows(p: &[u8], v: &[i8], c: &mut [i32], l: usize, d: usize, r0: usize, r1: usize) {
+    for i in r0..r1 {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0);
+        for (j, &pij) in prow.iter().enumerate() {
+            if pij == 0 {
+                // IndexSoftmax clips most of the row to the LUT's zero entry;
+                // skipping zero rows is the sparsity the paper exploits (§3.1).
+                continue;
+            }
+            let pv = pij as i32;
+            let vrow = &v[j * d..(j + 1) * d];
+            for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                *acc += pv * (vx as i32);
+            }
+        }
+    }
+}
+
+/// Thread-parallel u8×i8 GEMM.
+pub fn par_gemm_u8i8(p: &MatU8, v: &MatI8, c: &mut MatI32, threads: usize) {
+    let (m, l) = (p.rows(), p.cols());
+    let d = v.cols();
+    assert_eq!(v.rows(), l);
+    assert_eq!((c.rows(), c.cols()), (m, d));
+    if threads <= 1 {
+        return gemm_u8i8(p, v, c);
+    }
+    let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
+    let (p_s, v_s) = (p.as_slice(), v.as_slice());
+    scope_chunks_with(threads, m, |r0, r1| {
+        let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * d) };
+        gemm_u8i8_rows(p_s, v_s, c_full, l, d, r0, r1);
+    });
+}
+
+/// i8 × i8 → i32 with V not transposed (same SAXPY layout as [`gemm_u8i8`]);
+/// used by the Quant-Only pipeline whose requantized P is signed INT8.
+pub fn gemm_i8_notrans(p: &MatI8, v: &MatI8, c: &mut MatI32) {
+    let (m, l) = (p.rows(), p.cols());
+    let d = v.cols();
+    assert_eq!(v.rows(), l, "inner dims");
+    assert_eq!((c.rows(), c.cols()), (m, d), "output shape");
+    let p_s = p.as_slice();
+    let v_s = v.as_slice();
+    let c_s = c.as_mut_slice();
+    for i in 0..m {
+        let prow = &p_s[i * l..(i + 1) * l];
+        let crow = &mut c_s[i * d..(i + 1) * d];
+        crow.fill(0);
+        for (j, &pij) in prow.iter().enumerate() {
+            if pij == 0 {
+                continue;
+            }
+            let pv = pij as i32;
+            let vrow = &v_s[j * d..(j + 1) * d];
+            for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                *acc += pv * (vx as i32);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference (naive) implementations for testing
+
+/// Naive triple loop, f32 — the oracle the blocked kernels are tested against.
+pub fn gemm_f32_naive(a: &MatF32, bt: &MatF32, c: &mut MatF32) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = bt.rows();
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0f32;
+            for x in 0..k {
+                s += a.get(i, x) * bt.get(j, x);
+            }
+            c.set(i, j, s);
+        }
+    }
+}
+
+/// Naive i8 oracle.
+pub fn gemm_i8_naive(a: &MatI8, bt: &MatI8, c: &mut MatI32) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = bt.rows();
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0i32;
+            for x in 0..k {
+                s += a.get(i, x) as i32 * bt.get(j, x) as i32;
+            }
+            c.set(i, j, s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn rand_f32(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    fn rand_i8(rng: &mut Pcg64, r: usize, c: usize) -> MatI8 {
+        MatI8::from_vec(r, c, (0..r * c).map(|_| rng.range_i64(-127, 128) as i8).collect())
+    }
+
+    fn rand_u8(rng: &mut Pcg64, r: usize, c: usize) -> MatU8 {
+        MatU8::from_vec(r, c, (0..r * c).map(|_| rng.below(256) as u8).collect())
+    }
+
+    #[test]
+    fn f32_matches_naive_various_shapes() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (8, 8, 8), (17, 13, 31), (2, 64, 128)] {
+            let a = rand_f32(&mut rng, m, k);
+            let bt = rand_f32(&mut rng, n, k);
+            let mut c = MatF32::zeros(m, n);
+            let mut c_ref = MatF32::zeros(m, n);
+            gemm_f32(&a, &bt, &mut c);
+            gemm_f32_naive(&a, &bt, &mut c_ref);
+            assert!(c.allclose(&c_ref, 1e-4, 1e-4), "shape {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn f32_parallel_matches_serial() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = rand_f32(&mut rng, 33, 64);
+        let bt = rand_f32(&mut rng, 29, 64);
+        let mut c1 = MatF32::zeros(33, 29);
+        let mut c4 = MatF32::zeros(33, 29);
+        gemm_f32(&a, &bt, &mut c1);
+        par_gemm_f32(&a, &bt, &mut c4, 4);
+        assert!(c1.allclose(&c4, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn i8_matches_naive_exactly() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for &(m, n, k) in &[(1, 1, 1), (4, 6, 9), (16, 16, 64), (7, 31, 128), (5, 2, 3)] {
+            let a = rand_i8(&mut rng, m, k);
+            let bt = rand_i8(&mut rng, n, k);
+            let mut c = MatI32::zeros(m, n);
+            let mut c_ref = MatI32::zeros(m, n);
+            gemm_i8(&a, &bt, &mut c);
+            gemm_i8_naive(&a, &bt, &mut c_ref);
+            assert_eq!(c, c_ref, "shape {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn i8_parallel_matches_serial_exactly() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let a = rand_i8(&mut rng, 37, 96);
+        let bt = rand_i8(&mut rng, 23, 96);
+        let mut c1 = MatI32::zeros(37, 23);
+        let mut c4 = MatI32::zeros(37, 23);
+        gemm_i8(&a, &bt, &mut c1);
+        par_gemm_i8(&a, &bt, &mut c4, 3);
+        assert_eq!(c1, c4);
+    }
+
+    #[test]
+    fn i8_accumulator_never_overflows_for_supported_dims() {
+        // Worst case |a|=|b|=127: per-element 16129; i32 holds k ≤ 133k at
+        // worst case — far above d=128 head dims. Verify at the extreme.
+        let k = 4096;
+        let a = MatI8::from_vec(1, k, vec![127; k]);
+        let bt = MatI8::from_vec(1, k, vec![127; k]);
+        let mut c = MatI32::zeros(1, 1);
+        gemm_i8(&a, &bt, &mut c);
+        assert_eq!(c.get(0, 0), 127 * 127 * k as i32);
+    }
+
+    #[test]
+    fn u8i8_matches_scalar_reference() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let (m, l, d) = (9, 33, 16);
+        let p = rand_u8(&mut rng, m, l);
+        let v = rand_i8(&mut rng, l, d);
+        let mut c = MatI32::zeros(m, d);
+        gemm_u8i8(&p, &v, &mut c);
+        for i in 0..m {
+            for cc in 0..d {
+                let mut s = 0i32;
+                for j in 0..l {
+                    s += p.get(i, j) as i32 * v.get(j, cc) as i32;
+                }
+                assert_eq!(c.get(i, cc), s, "({i},{cc})");
+            }
+        }
+    }
+
+    #[test]
+    fn u8i8_parallel_matches_serial() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let p = rand_u8(&mut rng, 41, 64);
+        let v = rand_i8(&mut rng, 64, 32);
+        let mut c1 = MatI32::zeros(41, 32);
+        let mut c2 = MatI32::zeros(41, 32);
+        gemm_u8i8(&p, &v, &mut c1);
+        par_gemm_u8i8(&p, &v, &mut c2, 5);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn u8i8_zero_rows_are_skipped_correctly() {
+        // All-zero P row must produce a zero output row (sparsity path).
+        let p = MatU8::from_vec(2, 3, vec![0, 0, 0, 1, 2, 3]);
+        let v = MatI8::from_vec(3, 2, vec![1, -1, 2, -2, 3, -3]);
+        let mut c = MatI32::zeros(2, 2);
+        gemm_u8i8(&p, &v, &mut c);
+        assert_eq!(c.row(0), &[0, 0]);
+        assert_eq!(c.row(1), &[1 * 1 + 2 * 2 + 3 * 3, -(1 * 1 + 2 * 2 + 3 * 3)]);
+    }
+
+    #[test]
+    fn i8_notrans_matches_u8_variant_on_nonneg() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let (m, l, d) = (6, 20, 8);
+        let pu: MatU8 =
+            MatU8::from_vec(m, l, (0..m * l).map(|_| rng.below(128) as u8).collect());
+        let pi: MatI8 = pu.map(|x| x as i8);
+        let v = rand_i8(&mut rng, l, d);
+        let mut cu = MatI32::zeros(m, d);
+        let mut ci = MatI32::zeros(m, d);
+        gemm_u8i8(&pu, &v, &mut cu);
+        gemm_i8_notrans(&pi, &v, &mut ci);
+        assert_eq!(cu, ci);
+    }
+
+    #[test]
+    fn f16_gemm_close_to_f32() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let (m, n, k) = (8, 12, 32);
+        let a = rand_f32(&mut rng, m, k);
+        let bt = rand_f32(&mut rng, n, k);
+        let mut c_ref = MatF32::zeros(m, n);
+        gemm_f32(&a, &bt, &mut c_ref);
+        let ah: Vec<F16> = a.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        let bh: Vec<F16> = bt.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        let mut c = vec![0f32; m * n];
+        gemm_f16(&ah, &bh, m, n, k, &mut c);
+        for (x, y) in c.iter().zip(c_ref.as_slice()) {
+            // f16 inputs: rel error ~2^-11 per element, k=32 accumulation.
+            assert!((x - y).abs() <= 0.02 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn shape_mismatch_panics() {
+        let a = MatI8::zeros(2, 3);
+        let bt = MatI8::zeros(2, 4);
+        let mut c = MatI32::zeros(2, 2);
+        gemm_i8(&a, &bt, &mut c);
+    }
+}

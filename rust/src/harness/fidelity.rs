@@ -1,0 +1,226 @@
+//! Fidelity evaluation helpers: operator-level (P̂ against the exact FP32
+//! probability matrix — Table 9's metrics) and model-level (tiny-LM
+//! perplexity and probe accuracy under each pipeline — the Table 1/2/3/5
+//! substitutions, see DESIGN.md §2).
+
+use crate::attention::PipelineKind;
+use crate::model::lm::TinyLm;
+use crate::model::weights::Weights;
+use crate::softmax::index_softmax::Mask;
+use crate::tensor::{MatF32, MatI32};
+use crate::util::prng::Pcg64;
+use crate::util::stats;
+
+/// Exact FP32 softmax probabilities of scaled INT32 logits.
+pub fn exact_probs(logits: &MatI32, alpha: f32, mask: Mask) -> MatF32 {
+    crate::softmax::float_softmax::softmax_of_scaled_logits(logits, alpha, mask)
+}
+
+/// Operator-level fidelity record (the Table 9 row format).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProbFidelity {
+    pub cos_sim: f64,
+    pub rel_l1: f64,
+    pub rmse: f64,
+}
+
+impl ProbFidelity {
+    pub fn of(reference: &MatF32, candidate: &MatF32) -> ProbFidelity {
+        ProbFidelity {
+            cos_sim: stats::cosine_similarity(reference.as_slice(), candidate.as_slice()),
+            rel_l1: stats::relative_l1(reference.as_slice(), candidate.as_slice()),
+            rmse: stats::rmse(reference.as_slice(), candidate.as_slice()),
+        }
+    }
+}
+
+/// Model-level fidelity of one pipeline on held-out token streams:
+/// perplexity plus a synthetic "task accuracy" probe (next-token top-1
+/// agreement with the FP32 model — the stand-in for the benchmark accuracy
+/// columns of Tables 1–3).
+#[derive(Clone, Debug, Default)]
+pub struct LmFidelity {
+    pub pipeline: String,
+    pub perplexity: f64,
+    /// Fraction of positions where this pipeline's argmax next-token matches
+    /// the FP32 model's argmax (1.0 = identical predictions).
+    pub top1_agreement: f64,
+    /// Mean absolute difference in per-token loss vs FP32.
+    pub loss_mad: f64,
+}
+
+/// Evaluate `kind` on `eval_seqs` against an FP32 reference of the same
+/// weights. Sequences must each have ≥ 2 tokens.
+pub fn eval_lm_fidelity(
+    weights: &Weights,
+    kind: PipelineKind,
+    eval_seqs: &[Vec<u16>],
+) -> LmFidelity {
+    let mut fp = TinyLm::new(weights.clone(), PipelineKind::Fp32);
+    let mut lm = TinyLm::new(weights.clone(), kind);
+    let mut ce_total = 0f64;
+    let mut ce_count = 0usize;
+    let mut agree = 0usize;
+    let mut positions = 0usize;
+    let mut mad = 0f64;
+    for seq in eval_seqs {
+        let logits_fp = fp.forward(seq, None);
+        let logits = lm.forward(seq, None);
+        for i in 0..seq.len() - 1 {
+            let row_fp = logits_fp.row(i);
+            let row = logits.row(i);
+            let am_fp = argmax(row_fp);
+            let am = argmax(row);
+            if am == am_fp {
+                agree += 1;
+            }
+            positions += 1;
+            let target = seq[i + 1] as usize;
+            let l_fp = ce_of(row_fp, target);
+            let l = ce_of(row, target);
+            ce_total += l;
+            ce_count += 1;
+            mad += (l - l_fp).abs();
+        }
+    }
+    LmFidelity {
+        pipeline: kind.name().to_string(),
+        perplexity: (ce_total / ce_count as f64).exp(),
+        top1_agreement: agree as f64 / positions as f64,
+        loss_mad: mad / positions as f64,
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}
+
+fn ce_of(row: &[f32], target: usize) -> f64 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let logsum: f64 = (row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>()).ln() + m as f64;
+    logsum - row[target] as f64
+}
+
+/// Build held-out evaluation sequences from the corpus the trainer wrote
+/// (`artifacts/corpus_eval.txt`), or synthesize structured text if absent.
+pub fn eval_sequences(
+    artifacts_dir: &std::path::Path,
+    n: usize,
+    len: usize,
+    vocab: usize,
+) -> Vec<Vec<u16>> {
+    let text = std::fs::read_to_string(artifacts_dir.join("corpus_eval.txt"))
+        .unwrap_or_else(|_| synthetic_corpus(4096, 99));
+    let tokens: Vec<u16> = crate::model::tokenizer::encode(&text)
+        .into_iter()
+        .map(|t| t % vocab as u16)
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    let mut rng = Pcg64::seed_from_u64(1234);
+    for _ in 0..n {
+        if tokens.len() <= len + 1 {
+            out.push(tokens.clone());
+        } else {
+            let start = rng.below((tokens.len() - len - 1) as u64) as usize;
+            out.push(tokens[start..start + len].to_vec());
+        }
+    }
+    out
+}
+
+/// The synthetic corpus generator shared with `train.py` in spirit: a
+/// Markov-ish arithmetic/word-pattern text with learnable structure.
+pub fn synthetic_corpus(chars: usize, seed: u64) -> String {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let words = [
+        "edge", "device", "tensor", "integer", "attention", "softmax", "kernel",
+        "lookup", "table", "quantize", "latency", "energy", "pipeline", "index",
+    ];
+    let mut out = String::with_capacity(chars + 64);
+    while out.len() < chars {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        match rng.below(3) {
+            0 => {
+                // arithmetic pattern: "3 + 4 = 7 ."
+                out.push_str(&format!("{a} + {b} = {} . ", a + b));
+            }
+            1 => {
+                // word bigram pattern: deterministic successor
+                let w = words[rng.below(words.len() as u64) as usize];
+                let idx = words.iter().position(|&x| x == w).unwrap();
+                let next = words[(idx + 1) % words.len()];
+                out.push_str(w);
+                out.push(' ');
+                out.push_str(next);
+                out.push_str(" . ");
+            }
+            _ => {
+                // counting pattern
+                out.push_str(&format!("{a} {} {} . ", (a + 1) % 10, (a + 2) % 10));
+            }
+        }
+    }
+    out.truncate(chars);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn prob_fidelity_identity() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let p = MatF32::from_vec(2, 4, (0..8).map(|_| rng.next_f32()).collect());
+        let f = ProbFidelity::of(&p, &p);
+        assert!((f.cos_sim - 1.0).abs() < 1e-9);
+        assert_eq!(f.rel_l1, 0.0);
+        assert_eq!(f.rmse, 0.0);
+    }
+
+    #[test]
+    fn synthetic_corpus_is_deterministic_and_structured() {
+        let a = synthetic_corpus(500, 7);
+        let b = synthetic_corpus(500, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 500);
+        assert!(a.contains('='), "has arithmetic patterns");
+    }
+
+    #[test]
+    fn eval_sequences_without_artifacts_fall_back() {
+        let dir = std::env::temp_dir().join("intattn_no_artifacts");
+        let seqs = eval_sequences(&dir, 3, 64, 256);
+        assert_eq!(seqs.len(), 3);
+        assert!(seqs.iter().all(|s| s.len() == 64));
+    }
+
+    #[test]
+    fn lm_fidelity_fp32_is_perfect_agreement() {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+        let w = Weights::random(cfg, 5);
+        let seqs = vec![vec![1u16, 5, 9, 2, 8, 3, 1, 4]];
+        let f = eval_lm_fidelity(&w, PipelineKind::Fp32, &seqs);
+        assert!((f.top1_agreement - 1.0).abs() < 1e-12);
+        assert!(f.loss_mad < 1e-9);
+        assert!(f.perplexity > 1.0);
+    }
+
+    #[test]
+    fn lm_fidelity_int_close_but_not_exact() {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+        let w = Weights::random(cfg, 5);
+        let seqs: Vec<Vec<u16>> = (0..3)
+            .map(|s| (0..16).map(|i| ((i * 7 + s * 3) % 32) as u16).collect())
+            .collect();
+        let f = eval_lm_fidelity(&w, PipelineKind::IntAttention, &seqs);
+        assert!(f.top1_agreement > 0.6, "agreement {}", f.top1_agreement);
+        assert!(f.loss_mad < 1.0, "mad {}", f.loss_mad);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment harness: workload generators and the drivers that regenerate
+//! every table and figure of the paper's evaluation section (DESIGN.md §5
+//! maps IDs to drivers; the `rust/benches/*` binaries are thin wrappers over
+//! these functions so results are reproducible from both `cargo bench` and
+//! the `intattn` CLI).
+
+pub mod workload;
+pub mod experiments;
+pub mod fidelity;
+pub mod report;

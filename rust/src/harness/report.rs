@@ -1,0 +1,70 @@
+//! Report writer: persists rendered experiment tables under `reports/` and
+//! appends machine-readable JSON, so EXPERIMENTS.md entries are regenerable.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Where reports go: `$INTATTN_REPORTS` or `reports/`.
+pub fn reports_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("INTATTN_REPORTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("reports")
+}
+
+/// Write a rendered table (and optional JSON payload) under `reports/`.
+pub fn write_report(name: &str, rendered: &str, payload: Option<Json>) -> std::io::Result<PathBuf> {
+    let dir = reports_dir();
+    std::fs::create_dir_all(&dir)?;
+    let txt_path = dir.join(format!("{name}.txt"));
+    std::fs::write(&txt_path, rendered)?;
+    if let Some(j) = payload {
+        std::fs::write(dir.join(format!("{name}.json")), j.to_string())?;
+    }
+    Ok(txt_path)
+}
+
+/// Read back a previously written JSON report (used by meta-analyses/tests).
+pub fn read_report_json(name: &str) -> Option<Json> {
+    let p = reports_dir().join(format!("{name}.json"));
+    let text = std::fs::read_to_string(p).ok()?;
+    Json::parse(&text).ok()
+}
+
+/// Helper: rows of `(label, value)` pairs to a JSON object array.
+pub fn kv_rows_json(rows: &[(String, f64)]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|(k, v)| Json::obj(vec![("label", Json::str(k)), ("value", Json::num(*v))]))
+            .collect(),
+    )
+}
+
+/// Write into a custom directory (tests).
+pub fn write_report_to(dir: &Path, name: &str, rendered: &str) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let p = dir.join(format!("{name}.txt"));
+    std::fs::write(&p, rendered)?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_read_custom_dir() {
+        let dir = std::env::temp_dir().join("intattn_reports_test");
+        let p = write_report_to(&dir, "demo", "hello table").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "hello table");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kv_rows_json_shape() {
+        let j = kv_rows_json(&[("a".into(), 1.0), ("b".into(), 2.5)]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].req_f64("value").unwrap(), 2.5);
+    }
+}

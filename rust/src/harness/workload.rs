@@ -1,0 +1,140 @@
+//! Workload generators: attention inputs with realistic statistics and
+//! request traces for the serving engine.
+
+use crate::tensor::MatF32;
+use crate::util::prng::{Pcg64, Zipf};
+
+/// Random Q, K, V with i.i.d. `N(0, std²)` entries — the distribution used
+/// by the paper's operator-level speed benchmarks (Figures 6–7, Table 8).
+pub fn random_qkv(rng: &mut Pcg64, l: usize, d: usize, std: f32) -> (MatF32, MatF32, MatF32) {
+    let gen = |rng: &mut Pcg64| {
+        MatF32::from_vec(l, d, (0..l * d).map(|_| rng.normal_ms(0.0, std)).collect())
+    };
+    (gen(rng), gen(rng), gen(rng))
+}
+
+/// Q, K, V with the *peaked* logit structure real attention exhibits
+/// (Figure 4): keys form a few clusters, queries align with one cluster
+/// each, so every logit row has a small dominant subset. `sharpness`
+/// controls how dominant (≈2–4 is LLM-like).
+pub fn clustered_qkv(
+    rng: &mut Pcg64,
+    l: usize,
+    d: usize,
+    clusters: usize,
+    sharpness: f32,
+) -> (MatF32, MatF32, MatF32) {
+    let clusters = clusters.max(1);
+    let centers: Vec<Vec<f32>> = (0..clusters).map(|_| rng.normal_vec(d)).collect();
+    let mut build = |align: bool| {
+        let mut m = MatF32::zeros(l, d);
+        for r in 0..l {
+            let c = &centers[rng.below(clusters as u64) as usize];
+            let row = m.row_mut(r);
+            for (i, x) in row.iter_mut().enumerate() {
+                let base = if align { sharpness * c[i] } else { 0.0 };
+                *x = base + rng.normal();
+            }
+        }
+        m
+    };
+    let q = build(true);
+    let k = build(true);
+    let v = build(false);
+    (q, k, v)
+}
+
+/// A single serving request for the coordinator workloads.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    /// Arrival time offset from trace start, in microseconds.
+    pub arrival_us: u64,
+    /// Prompt length (prefill tokens).
+    pub prompt_len: usize,
+    /// Tokens to generate (decode steps).
+    pub gen_len: usize,
+}
+
+/// Poisson-arrival request trace with Zipf-bucketed prompt lengths —
+/// the long-tail mix on-device serving sees.
+pub fn request_trace(
+    rng: &mut Pcg64,
+    n: usize,
+    rate_per_s: f64,
+    len_buckets: &[usize],
+    max_gen: usize,
+) -> Vec<TraceRequest> {
+    assert!(!len_buckets.is_empty());
+    let zipf = Zipf::new(len_buckets.len(), 1.1);
+    let mut t_us = 0f64;
+    (0..n)
+        .map(|_| {
+            t_us += rng.exponential(rate_per_s) * 1e6;
+            let bucket = zipf.sample(rng);
+            let base = len_buckets[bucket];
+            // jitter within ±25% of the bucket
+            let jitter = (base as f64 * 0.25) as i64;
+            let plen = (base as i64 + rng.range_i64(-jitter.max(1), jitter.max(1) + 1)).max(1);
+            TraceRequest {
+                arrival_us: t_us as u64,
+                prompt_len: plen as usize,
+                gen_len: 1 + rng.below(max_gen.max(1) as u64) as usize,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_qkv_shapes_and_stats() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let (q, k, v) = random_qkv(&mut rng, 64, 32, 2.0);
+        assert_eq!((q.rows(), q.cols()), (64, 32));
+        assert_eq!((k.rows(), v.rows()), (64, 64));
+        let std = (q.frobenius() / (64f64 * 32.0).sqrt()) as f32;
+        assert!((std - 2.0).abs() < 0.3, "std={std}");
+    }
+
+    #[test]
+    fn clustered_logits_are_peaked() {
+        // The Figure 4 premise: clustered inputs produce rows where the top
+        // few logits dominate. Compare top-1 share vs uniform expectation.
+        let mut rng = Pcg64::seed_from_u64(2);
+        let (q, k, _) = clustered_qkv(&mut rng, 128, 32, 4, 3.0);
+        // compute row softmax mass of the argmax logit
+        let mut top_share = 0f64;
+        for i in 0..q.rows() {
+            let logits: Vec<f32> = (0..k.rows())
+                .map(|j| {
+                    (0..32).map(|c| q.get(i, c) * k.get(j, c)).sum::<f32>()
+                        / (32f32).sqrt()
+                })
+                .collect();
+            let m = logits.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = logits.iter().map(|&x| (x - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            top_share += exps.iter().cloned().fold(0f32, f32::max) as f64 / z as f64;
+        }
+        top_share /= q.rows() as f64;
+        assert!(top_share > 0.2, "top-1 softmax share {top_share} not peaked");
+    }
+
+    #[test]
+    fn trace_is_time_ordered_with_sane_lengths() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let trace = request_trace(&mut rng, 100, 50.0, &[64, 256, 1024], 32);
+        assert_eq!(trace.len(), 100);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+        assert!(trace.iter().all(|r| r.prompt_len >= 1 && r.gen_len >= 1));
+        assert!(trace.iter().all(|r| r.prompt_len <= 1024 + 256));
+        // Zipf: the smallest bucket must be the most common.
+        let small = trace.iter().filter(|r| r.prompt_len <= 80).count();
+        let large = trace.iter().filter(|r| r.prompt_len > 800).count();
+        assert!(small > large, "small={small} large={large}");
+    }
+}

@@ -1,0 +1,62 @@
+//! # IntAttention
+//!
+//! A from-scratch reproduction of *IntAttention: A Fully Integer Attention
+//! Pipeline for Efficient Edge Inference* (MLSys 2026) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — substrates this image's offline crate cache does not provide
+//!   (PRNG, JSON, CLI parsing, thread pool, stats, software f16, a tiny
+//!   property-testing driver, a criterion-style bench harness).
+//! * [`tensor`] — row-major matrices over `f32`/`i8`/`u8`/`i32`.
+//! * [`quant`] — per-tensor / per-group symmetric quantization (paper eq. 2–3, 16).
+//! * [`gemm`] — blocked GEMM kernels: f32, f16-storage, `i8×i8→i32`, `u8×i8→i32`.
+//! * [`softmax`] — the paper's core: LUT construction (eq. 10/13),
+//!   **IndexSoftmax** (eq. 7–15), the EXAQ baseline, FP32/FP16 softmax.
+//! * [`attention`] — the five pipelines the paper evaluates (FP32, FP16,
+//!   Quant-Only, **IntAttention**, EXAQ) behind one trait, instrumented with
+//!   per-stage timers and energy counters.
+//! * [`energy`] — the analytic energy model standing in for the paper's
+//!   wall-plug meter (Fig. 8 substitution, see DESIGN.md §2).
+//! * [`model`] — a tiny byte-level transformer LM whose attention backend is
+//!   pluggable; weights come from the build-time JAX training run.
+//! * [`coordinator`] — the edge serving engine: request queue, admission
+//!   control, dynamic batcher, prefill/decode scheduler, metrics.
+//! * [`runtime`] — PJRT artifact loader/executor (the `xla` crate), proving
+//!   L1/L2/L3 compose: JAX-lowered HLO runs under the Rust event loop.
+//! * [`harness`] — experiment drivers that regenerate every table and figure
+//!   in the paper's evaluation section (see DESIGN.md §5).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use intattention::attention::{AttentionConfig, PipelineKind, build_pipeline};
+//! use intattention::harness::workload::random_qkv;
+//! use intattention::util::prng::Pcg64;
+//!
+//! let cfg = AttentionConfig::new(512, 64);
+//! let mut rng = Pcg64::seed_from_u64(0);
+//! let (q, k, v) = random_qkv(&mut rng, cfg.seq_len, cfg.head_dim, 1.0);
+//! let mut pipe = build_pipeline(PipelineKind::IntAttention, cfg);
+//! let out = pipe.forward(&q, &k, &v);
+//! assert_eq!(out.rows(), 512);
+//! ```
+
+pub mod util;
+pub mod tensor;
+pub mod quant;
+pub mod gemm;
+pub mod softmax;
+pub mod attention;
+pub mod energy;
+pub mod model;
+pub mod coordinator;
+pub mod runtime;
+pub mod harness;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and the serving engine.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,238 @@
+//! `intattn` — the IntAttention edge-inference CLI.
+//!
+//! Subcommands cover the serving engine, text generation, perplexity
+//! evaluation, and every paper experiment (each also available as a
+//! `cargo bench` target; see DESIGN.md §5).
+
+use intattention::attention::PipelineKind;
+use intattention::coordinator::{Engine, EngineOptions};
+use intattention::harness::experiments as exp;
+use intattention::harness::workload::request_trace;
+use intattention::model::lm::TinyLm;
+use intattention::model::tokenizer;
+use intattention::util::cli::{App, Args, Command};
+use intattention::util::prng::Pcg64;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = build_app();
+    match app.parse(&argv) {
+        Ok((cmd, args)) => {
+            if let Err(e) = dispatch(&cmd, &args) {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_app() -> App {
+    App::new("intattn", "fully integer attention for edge inference (IntAttention reproduction)")
+        .command(
+            Command::new("generate", "generate text with the tiny LM")
+                .opt("prompt", "prompt text", Some("edge device"))
+                .opt("tokens", "tokens to generate", Some("64"))
+                .opt("pipeline", "fp32|fp16|quant-only|int|exaq2|exaq3", Some("int"))
+                .opt("temperature", "sampling temperature", Some("0.8"))
+                .opt("top-k", "top-k truncation", Some("20"))
+                .opt("seed", "rng seed", Some("0")),
+        )
+        .command(
+            Command::new("perplexity", "held-out perplexity under a pipeline")
+                .opt("pipeline", "fp32|fp16|quant-only|int|exaq2|exaq3", Some("int"))
+                .opt("seqs", "number of eval sequences", Some("8"))
+                .opt("len", "sequence length", Some("192")),
+        )
+        .command(
+            Command::new("serve", "run the serving engine on a synthetic trace")
+                .opt("pipeline", "attention backend", Some("int"))
+                .opt("requests", "number of requests", Some("32"))
+                .opt("rate", "arrival rate per second", Some("8"))
+                .opt("max-active", "max batch size", Some("8"))
+                .opt("gen", "max tokens generated per request", Some("16")),
+        )
+        .command(
+            Command::new("bench", "run a paper experiment")
+                .opt("id", "fig2|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|tab5|tab8|tab9|tab10|all", Some("all"))
+                .opt("seq-lens", "comma-separated L sweep", None)
+                .opt("head-dim", "head dimension d", Some("128")),
+        )
+        .command(Command::new("report", "print engine/version info"))
+}
+
+fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "generate" => cmd_generate(args),
+        "perplexity" => cmd_perplexity(args),
+        "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
+        "report" => {
+            println!("intattn v{}", intattention::VERSION);
+            let dir = intattention::runtime::default_artifacts_dir();
+            println!("artifacts dir: {}", dir.display());
+            match intattention::runtime::ArtifactRuntime::new(&dir) {
+                Ok(rt) => println!(
+                    "pjrt platform: {} | artifacts: {:?}",
+                    rt.platform(),
+                    rt.list_artifacts()
+                ),
+                Err(e) => println!("pjrt unavailable: {e}"),
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("unhandled command {cmd}"),
+    }
+}
+
+fn pipeline_arg(args: &Args) -> anyhow::Result<PipelineKind> {
+    let s = args.get_or("pipeline", "int");
+    PipelineKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown pipeline '{s}'"))
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let kind = pipeline_arg(args)?;
+    let weights = exp::load_or_random_weights();
+    let mut lm = TinyLm::new(weights, kind);
+    let prompt = tokenizer::encode(args.get_or("prompt", "edge device"));
+    let n = args.get_usize("tokens", 64)?;
+    let temp = args.get_f64("temperature", 0.8)? as f32;
+    let top_k = args.get_usize("top-k", 20)?;
+    let mut rng = Pcg64::seed_from_u64(args.get_usize("seed", 0)? as u64);
+    let out = lm.generate(&prompt, n, temp, top_k, &mut rng);
+    println!("[{}] {}{}", kind.name(), args.get_or("prompt", ""), tokenizer::decode(&out));
+    println!("attention: {}", lm.attention_times().render());
+    Ok(())
+}
+
+fn cmd_perplexity(args: &Args) -> anyhow::Result<()> {
+    let kind = pipeline_arg(args)?;
+    let weights = exp::load_or_random_weights();
+    let dir = intattention::runtime::default_artifacts_dir();
+    let max_seq = weights.cfg.max_seq;
+    let seqs = intattention::harness::fidelity::eval_sequences(
+        &dir,
+        args.get_usize("seqs", 8)?,
+        args.get_usize("len", 192)?.min(max_seq),
+        weights.cfg.vocab,
+    );
+    let f = intattention::harness::fidelity::eval_lm_fidelity(&weights, kind, &seqs);
+    println!(
+        "{}: perplexity {:.3} | top-1 agreement with FP32 {:.3} | loss MAD {:.4}",
+        f.pipeline, f.perplexity, f.top1_agreement, f.loss_mad
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let kind = pipeline_arg(args)?;
+    let weights = exp::load_or_random_weights();
+    let max_seq = weights.cfg.max_seq;
+    let opts = EngineOptions {
+        attention: kind,
+        policy: intattention::coordinator::batcher::BatchPolicy {
+            max_active: args.get_usize("max-active", 8)?,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let n = args.get_usize("requests", 32)?;
+    let rate = args.get_f64("rate", 8.0)?;
+    let max_gen = args.get_usize("gen", 16)?;
+    let mut rng = Pcg64::seed_from_u64(42);
+    let trace = request_trace(&mut rng, n, rate, &[16, 48, 128], max_gen);
+    let handle = Engine::start_bounded(weights, opts);
+    println!("serving {n} requests (pipeline {}, rate {rate}/s)...", kind.name());
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::new();
+    for r in &trace {
+        // Replay arrivals in (compressed) time.
+        let target = std::time::Duration::from_micros(r.arrival_us);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let prompt: Vec<u16> = (0..r.prompt_len.min(max_seq / 2))
+            .map(|i| (i * 31 % 256) as u16)
+            .collect();
+        match handle.submit(prompt, r.gen_len, 0.7, 16) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => eprintln!("rejected: {e}"),
+        }
+    }
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    let snap = handle.shutdown();
+    println!("{}", snap.render());
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let id = args.get_or("id", "all").to_string();
+    let d = args.get_usize("head-dim", exp::HEAD_DIM)?;
+    let lens = args.get_usize_list("seq-lens", &exp::default_seq_lens())?;
+    let run = |want: &str| id == "all" || id == want;
+
+    if run("fig2") {
+        exp::render_fig2(&exp::fig2_breakdown(&lens, d, 1)).print();
+    }
+    if run("fig4") {
+        exp::render_fig4(&exp::fig4_sparsity(256, d.min(64))).print();
+    }
+    if run("fig5") {
+        exp::render_fig5(&exp::fig5_lut_resolution()).print();
+    }
+    if run("fig6") {
+        exp::render_speed(&exp::speed_sweep(&lens, d, 1), "Figure 6 — throughput, cfg-A (1 thread)").print();
+    }
+    if run("fig7") {
+        exp::render_speed(
+            &exp::speed_sweep(&lens, d, intattention::util::threadpool::default_threads()),
+            "Figure 7 — throughput, cfg-B (all threads)",
+        )
+        .print();
+    }
+    if run("fig8") {
+        exp::render_fig8(&exp::fig8_energy(&lens, d)).print();
+    }
+    if run("fig9") {
+        exp::render_fig9(&exp::fig9_sweep(&[2, 3, 4, 5, 6, 8], &[4.4, 5.5, 6.6, 7.7, 8.8], 128, d.min(64))).print();
+    }
+    if run("tab8") {
+        let a = exp::speed_sweep(&lens, d, 1);
+        let b = exp::speed_sweep(&lens, d, intattention::util::threadpool::default_threads());
+        exp::render_tab8(&a, &b).print();
+    }
+    if run("tab9") {
+        let (i8f, u8f) = exp::tab9_p_quant(256, d.min(64), 4);
+        exp::render_tab9(&i8f, &u8f).print();
+    }
+    if run("tab1") || run("tab5") || run("tab3") || run("tab10") || run("tab2") {
+        let w = exp::load_or_random_weights();
+        if run("tab1") {
+            exp::render_lm_fidelity(&exp::tab1_lm_fidelity(&w, 6, 192), "Table 1 — LM fidelity").print();
+        }
+        if run("tab2") {
+            exp::render_tab2(&exp::tab2_encoder_fidelity(128, d.min(64), 3)).print();
+        }
+        if run("tab3") {
+            for (ctx, rows) in exp::tab3_long_context(&w, &[64, 128, 256], 4) {
+                exp::render_lm_fidelity(&rows, &format!("Table 3 — long-context fidelity @ ctx={ctx}")).print();
+            }
+        }
+        if run("tab5") {
+            exp::render_lm_fidelity(
+                &exp::tab5_softmax_ablation(&w, 6, 192),
+                "Table 5 — softmax-only ablation",
+            )
+            .print();
+        }
+        if run("tab10") {
+            exp::render_tab10(&exp::tab10_stability(&w, 256, 4)).print();
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Model hyperparameters, mirrored by `python/compile/train.py` (the JSON it
+//! writes is parsed here, so both sides agree by construction).
+
+use crate::util::json::Json;
+
+/// Transformer LM configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Vocabulary size (256 for the byte tokenizer).
+    pub vocab: usize,
+    /// Residual width.
+    pub d_model: usize,
+    /// Number of transformer blocks.
+    pub n_layers: usize,
+    /// Attention heads per block.
+    pub n_heads: usize,
+    /// Maximum (trained) context length.
+    pub max_seq: usize,
+    /// MLP hidden multiple (hidden = mlp_mult · d_model).
+    pub mlp_mult: usize,
+}
+
+impl ModelConfig {
+    /// The configuration `train.py` uses by default.
+    pub fn tiny() -> Self {
+        ModelConfig { vocab: 256, d_model: 128, n_layers: 4, n_heads: 4, max_seq: 256, mlp_mult: 4 }
+    }
+
+    /// Per-head dimension.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_mlp(&self) -> usize {
+        self.mlp_mult * self.d_model
+    }
+
+    /// Total parameter count (embeddings + blocks + final LN; LM head tied).
+    pub fn param_count(&self) -> usize {
+        let emb = self.vocab * self.d_model + self.max_seq * self.d_model;
+        let per_block = 4 * self.d_model * self.d_model          // wq wk wv wo
+            + 4 * self.d_model                                    // ln1/ln2 g+b
+            + 2 * self.d_model * self.d_mlp()                     // w1 w2
+            + self.d_mlp() + self.d_model;                        // b1 b2
+        emb + self.n_layers * per_block + 2 * self.d_model
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.d_model % self.n_heads == 0, "d_model % n_heads != 0");
+        anyhow::ensure!(self.vocab > 0 && self.n_layers > 0 && self.max_seq > 0, "degenerate config");
+        Ok(())
+    }
+
+    /// Parse from the `model_meta.json` the trainer writes.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let cfg = ModelConfig {
+            vocab: j.req_usize("vocab")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            max_seq: j.req_usize("max_seq")?,
+            mlp_mult: j.req_usize("mlp_mult")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("vocab", Json::num(self.vocab as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("mlp_mult", Json::num(self.mlp_mult as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_config_is_consistent() {
+        let c = ModelConfig::tiny();
+        c.validate().unwrap();
+        assert_eq!(c.d_head(), 32);
+        assert_eq!(c.d_mlp(), 512);
+        assert!(c.param_count() > 100_000);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = ModelConfig::tiny();
+        let j = c.to_json();
+        let text = j.to_string();
+        let back = ModelConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn bad_head_split_rejected() {
+        let c = ModelConfig { n_heads: 3, ..ModelConfig::tiny() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn param_count_formula() {
+        // hand-check on a minimal config
+        let c = ModelConfig { vocab: 4, d_model: 2, n_layers: 1, n_heads: 1, max_seq: 3, mlp_mult: 2 };
+        // emb: 4*2 + 3*2 = 14; block: 4*4 + 8 + 2*2*4 + 4 + 2 = 46; final ln 4
+        assert_eq!(c.param_count(), 14 + 46 + 4);
+    }
+}

@@ -1,0 +1,251 @@
+//! Transformer layer primitives: layernorm, GELU MLP, and the multi-head
+//! attention wrapper that routes each head through a configurable
+//! [`AttentionPipeline`].
+
+use crate::attention::{build_pipeline, AttentionConfig, PipelineKind};
+use crate::energy::OpCounts;
+use crate::gemm::gemm_f32;
+use crate::model::weights::BlockWeights;
+use crate::softmax::index_softmax::Mask;
+use crate::tensor::MatF32;
+use crate::util::timer::StageTimes;
+
+/// LayerNorm over the last dimension, standard eps.
+pub fn layer_norm(x: &MatF32, gamma: &[f32], beta: &[f32]) -> MatF32 {
+    let d = x.cols();
+    assert_eq!(gamma.len(), d);
+    assert_eq!(beta.len(), d);
+    let mut out = MatF32::zeros(x.rows(), d);
+    for r in 0..x.rows() {
+        let row = x.row(r);
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let dst = out.row_mut(r);
+        for ((o, &v), (&g, &b)) in dst.iter_mut().zip(row).zip(gamma.iter().zip(beta)) {
+            *o = (v - mean) * inv * g + b;
+        }
+    }
+    out
+}
+
+/// Tanh-approximation GELU (matches `jax.nn.gelu(approximate=True)`).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+/// Linear layer `y = x·Wᵀ + b` with output-major W (see weights.rs layout).
+pub fn linear(x: &MatF32, w: &MatF32, b: Option<&[f32]>) -> MatF32 {
+    let mut y = MatF32::zeros(x.rows(), w.rows());
+    gemm_f32(x, w, &mut y);
+    if let Some(b) = b {
+        assert_eq!(b.len(), w.rows());
+        for r in 0..y.rows() {
+            for (v, &bb) in y.row_mut(r).iter_mut().zip(b) {
+                *v += bb;
+            }
+        }
+    }
+    y
+}
+
+/// Two-layer GELU MLP.
+pub fn mlp(x: &MatF32, bw: &BlockWeights) -> MatF32 {
+    let mut h = linear(x, &bw.w1, Some(&bw.b1));
+    for v in h.as_mut_slice() {
+        *v = gelu(*v);
+    }
+    linear(&h, &bw.w2, Some(&bw.b2))
+}
+
+/// Extract head `h`'s columns (`h·d_head .. (h+1)·d_head`) into a compact
+/// `T×d_head` matrix.
+pub fn slice_head(x: &MatF32, h: usize, d_head: usize) -> MatF32 {
+    let t = x.rows();
+    let mut out = MatF32::zeros(t, d_head);
+    for r in 0..t {
+        let src = &x.row(r)[h * d_head..(h + 1) * d_head];
+        out.row_mut(r).copy_from_slice(src);
+    }
+    out
+}
+
+/// Write a head's output back into the concatenated layout.
+pub fn unslice_head(dst: &mut MatF32, src: &MatF32, h: usize, d_head: usize) {
+    for r in 0..src.rows() {
+        dst.row_mut(r)[h * d_head..(h + 1) * d_head].copy_from_slice(src.row(r));
+    }
+}
+
+/// Multi-head attention over a full (prefill) sequence, or over a KV cache
+/// for incremental decode. Aggregates per-head stage times and op counts so
+/// model-level breakdowns match the operator-level ones.
+pub struct MultiHeadAttention {
+    pub kind: PipelineKind,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub threads: usize,
+    times: StageTimes,
+    ops: OpCounts,
+}
+
+impl MultiHeadAttention {
+    pub fn new(kind: PipelineKind, n_heads: usize, d_head: usize, threads: usize) -> Self {
+        MultiHeadAttention {
+            kind,
+            n_heads,
+            d_head,
+            threads,
+            times: StageTimes::new(),
+            ops: OpCounts::default(),
+        }
+    }
+
+    /// `q_all`: `M×d_model` projected queries; `k_all`, `v_all`: `L×d_model`.
+    /// Causal masking requires `M == L`.
+    pub fn forward(&mut self, q_all: &MatF32, k_all: &MatF32, v_all: &MatF32, mask: Mask) -> MatF32 {
+        let m = q_all.rows();
+        let l = k_all.rows();
+        let d_model = self.n_heads * self.d_head;
+        assert_eq!(q_all.cols(), d_model);
+        assert_eq!(k_all.cols(), d_model);
+        assert_eq!(v_all.cols(), d_model);
+        let mut out = MatF32::zeros(m, d_model);
+        for h in 0..self.n_heads {
+            let qh = slice_head(q_all, h, self.d_head);
+            let kh = slice_head(k_all, h, self.d_head);
+            let vh = slice_head(v_all, h, self.d_head);
+            let cfg = AttentionConfig {
+                seq_len: l,
+                head_dim: self.d_head,
+                mask,
+                threads: self.threads,
+                isx: Default::default(),
+            };
+            let mut pipe = build_pipeline(self.kind, cfg);
+            let oh = pipe.forward(&qh, &kh, &vh);
+            self.times.merge(pipe.stage_times());
+            self.ops.add(pipe.op_counts());
+            unslice_head(&mut out, &oh, h, self.d_head);
+        }
+        out
+    }
+
+    pub fn stage_times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    pub fn op_counts(&self) -> &OpCounts {
+        &self.ops
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.times.reset();
+        self.ops = OpCounts::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = rand_mat(&mut rng, 4, 64);
+        let g = vec![1.0; 64];
+        let b = vec![0.0; 64];
+        let y = layer_norm(&x, &g, &b);
+        for r in 0..4 {
+            let mean: f32 = y.row(r).iter().sum::<f32>() / 64.0;
+            let var: f32 = y.row(r).iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-5, "mean={mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var={var}");
+        }
+    }
+
+    #[test]
+    fn layer_norm_gamma_beta_applied() {
+        let x = MatF32::from_vec(1, 2, vec![1.0, -1.0]);
+        let y = layer_norm(&x, &[2.0, 2.0], &[10.0, 10.0]);
+        assert!((y.get(0, 0) - 12.0).abs() < 1e-3);
+        assert!((y.get(0, 1) - 8.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        assert!(gelu(10.0) > 9.99);
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let x = MatF32::from_vec(1, 2, vec![1.0, 2.0]);
+        // W output-major: 3 outputs from 2 inputs
+        let w = MatF32::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let y = linear(&x, &w, Some(&[0.5, 0.5, 0.5]));
+        assert_eq!(y.as_slice(), &[1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn head_slice_unslice_round_trip() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let x = rand_mat(&mut rng, 5, 12);
+        let mut back = MatF32::zeros(5, 12);
+        for h in 0..3 {
+            let s = slice_head(&x, h, 4);
+            assert_eq!((s.rows(), s.cols()), (5, 4));
+            unslice_head(&mut back, &s, h, 4);
+        }
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn mha_shapes_and_stats() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let (t, d_model) = (16, 32);
+        let q = rand_mat(&mut rng, t, d_model);
+        let k = rand_mat(&mut rng, t, d_model);
+        let v = rand_mat(&mut rng, t, d_model);
+        let mut mha = MultiHeadAttention::new(PipelineKind::IntAttention, 4, 8, 1);
+        let o = mha.forward(&q, &k, &v, Mask::Causal);
+        assert_eq!((o.rows(), o.cols()), (t, d_model));
+        assert!(mha.stage_times().total_ns() > 0);
+        assert!(mha.op_counts().int8_mac > 0);
+    }
+
+    #[test]
+    fn mha_int_close_to_fp32() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let (t, d_model) = (24, 32);
+        let q = rand_mat(&mut rng, t, d_model);
+        let k = rand_mat(&mut rng, t, d_model);
+        let v = rand_mat(&mut rng, t, d_model);
+        let of = MultiHeadAttention::new(PipelineKind::Fp32, 4, 8, 1)
+            .forward(&q, &k, &v, Mask::Causal);
+        let oi = MultiHeadAttention::new(PipelineKind::IntAttention, 4, 8, 1)
+            .forward(&q, &k, &v, Mask::Causal);
+        let cos = crate::util::stats::cosine_similarity(of.as_slice(), oi.as_slice());
+        assert!(cos > 0.99, "cos={cos}");
+    }
+
+    #[test]
+    fn mha_decode_mode_single_query() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let d_model = 16;
+        let q = rand_mat(&mut rng, 1, d_model);
+        let k = rand_mat(&mut rng, 9, d_model);
+        let v = rand_mat(&mut rng, 9, d_model);
+        let mut mha = MultiHeadAttention::new(PipelineKind::IntAttention, 2, 8, 1);
+        let o = mha.forward(&q, &k, &v, Mask::None);
+        assert_eq!((o.rows(), o.cols()), (1, d_model));
+    }
+}

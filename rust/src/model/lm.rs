@@ -1,0 +1,384 @@
+//! The tiny transformer LM: forward pass, KV-cached incremental decode,
+//! perplexity evaluation and sampling — everything the serving engine and
+//! the fidelity experiments need.
+//!
+//! Pre-norm GPT-style blocks:
+//! `x += attn(LN1(x)); x += mlp(LN2(x)); logits = LN_f(x)·tok_embᵀ` (tied head).
+
+use crate::attention::PipelineKind;
+use crate::energy::OpCounts;
+use crate::gemm::gemm_f32;
+use crate::model::config::ModelConfig;
+use crate::model::layers::{layer_norm, linear, mlp, MultiHeadAttention};
+use crate::model::weights::Weights;
+use crate::softmax::index_softmax::Mask;
+use crate::tensor::MatF32;
+use crate::util::prng::Pcg64;
+use crate::util::timer::StageTimes;
+
+/// Per-layer KV cache for incremental decoding.
+#[derive(Clone, Debug, Default)]
+pub struct KvCache {
+    /// One `(K, V)` pair per layer; each grows row-by-row (`len×d_model`).
+    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+    pub len: usize,
+    pub d_model: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, d_model: usize) -> Self {
+        KvCache { layers: vec![(Vec::new(), Vec::new()); n_layers], len: 0, d_model }
+    }
+
+    fn append(&mut self, layer: usize, k_rows: &MatF32, v_rows: &MatF32) {
+        let (k, v) = &mut self.layers[layer];
+        k.extend_from_slice(k_rows.as_slice());
+        v.extend_from_slice(v_rows.as_slice());
+    }
+
+    /// Materialize layer `layer`'s K (or V) as an `len×d_model` matrix.
+    /// `len` is passed explicitly because during a decode step rows are
+    /// appended before `self.len` is advanced.
+    fn k_mat(&self, layer: usize, len: usize) -> MatF32 {
+        MatF32::from_vec(len, self.d_model, self.layers[layer].0[..len * self.d_model].to_vec())
+    }
+
+    fn v_mat(&self, layer: usize, len: usize) -> MatF32 {
+        MatF32::from_vec(len, self.d_model, self.layers[layer].1[..len * self.d_model].to_vec())
+    }
+
+    /// Memory footprint in bytes (for the coordinator's admission control).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|(k, v)| (k.len() + v.len()) * 4).sum()
+    }
+}
+
+/// The model. Cheap to clone conceptually but weights are large; the serving
+/// engine shares one instance behind the scheduler.
+pub struct TinyLm {
+    pub weights: Weights,
+    pub attention_kind: PipelineKind,
+    pub threads: usize,
+    times: StageTimes,
+    ops: OpCounts,
+}
+
+impl TinyLm {
+    pub fn new(weights: Weights, attention_kind: PipelineKind) -> Self {
+        TinyLm { weights, attention_kind, threads: 1, times: StageTimes::new(), ops: OpCounts::default() }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.weights.cfg
+    }
+
+    /// Accumulated attention stage times across forwards.
+    pub fn attention_times(&self) -> &StageTimes {
+        &self.times
+    }
+
+    pub fn attention_ops(&self) -> &OpCounts {
+        &self.ops
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.times.reset();
+        self.ops = OpCounts::default();
+    }
+
+    fn embed(&self, tokens: &[u16], pos_offset: usize) -> MatF32 {
+        let cfg = &self.weights.cfg;
+        let d = cfg.d_model;
+        let mut x = MatF32::zeros(tokens.len(), d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < cfg.vocab, "token {t} out of vocab");
+            let pos = (pos_offset + i).min(cfg.max_seq - 1);
+            let dst = x.row_mut(i);
+            let te = self.weights.tok_emb.row(t);
+            let pe = self.weights.pos_emb.row(pos);
+            for ((o, &a), &b) in dst.iter_mut().zip(te).zip(pe) {
+                *o = a + b;
+            }
+        }
+        x
+    }
+
+    /// Full-sequence forward (prefill). Returns logits `T×vocab` and fills
+    /// `cache` (if given) with each layer's K/V for subsequent decode steps.
+    pub fn forward(&mut self, tokens: &[u16], mut cache: Option<&mut KvCache>) -> MatF32 {
+        assert!(!tokens.is_empty());
+        let cfg = self.weights.cfg;
+        let mut x = self.embed(tokens, 0);
+        for (li, bw) in self.weights.blocks.iter().enumerate() {
+            let xn = layer_norm(&x, &bw.ln1_g, &bw.ln1_b);
+            let q = linear(&xn, &bw.wq, None);
+            let k = linear(&xn, &bw.wk, None);
+            let v = linear(&xn, &bw.wv, None);
+            if let Some(c) = cache.as_deref_mut() {
+                c.append(li, &k, &v);
+            }
+            let mut mha = MultiHeadAttention::new(
+                self.attention_kind,
+                cfg.n_heads,
+                cfg.d_head(),
+                self.threads,
+            );
+            let att = mha.forward(&q, &k, &v, Mask::Causal);
+            self.times.merge(mha.stage_times());
+            self.ops.add(mha.op_counts());
+            let att_o = linear(&att, &bw.wo, None);
+            for (xv, &av) in x.as_mut_slice().iter_mut().zip(att_o.as_slice()) {
+                *xv += av;
+            }
+            let xn2 = layer_norm(&x, &bw.ln2_g, &bw.ln2_b);
+            let m = mlp(&xn2, bw);
+            for (xv, &mv) in x.as_mut_slice().iter_mut().zip(m.as_slice()) {
+                *xv += mv;
+            }
+        }
+        if let Some(c) = cache {
+            c.len += tokens.len();
+        }
+        let xf = layer_norm(&x, &self.weights.ln_f_g, &self.weights.ln_f_b);
+        // Tied LM head: logits = xf · tok_embᵀ (tok_emb is vocab×d, i.e.
+        // already the "bt" layout).
+        let mut logits = MatF32::zeros(tokens.len(), cfg.vocab);
+        gemm_f32(&xf, &self.weights.tok_emb, &mut logits);
+        logits
+    }
+
+    /// One decode step: append `token` to the cache, return logits `1×vocab`.
+    pub fn decode_step(&mut self, token: u16, cache: &mut KvCache) -> MatF32 {
+        let cfg = self.weights.cfg;
+        let mut x = self.embed(&[token], cache.len);
+        for (li, bw) in self.weights.blocks.iter().enumerate() {
+            let xn = layer_norm(&x, &bw.ln1_g, &bw.ln1_b);
+            let q = linear(&xn, &bw.wq, None);
+            let k = linear(&xn, &bw.wk, None);
+            let v = linear(&xn, &bw.wv, None);
+            cache.append(li, &k, &v);
+            // cache.len is advanced after the loop; this layer already holds
+            // len+1 rows.
+            let k_all = cache.k_mat(li, cache.len + 1);
+            let v_all = cache.v_mat(li, cache.len + 1);
+            let mut mha = MultiHeadAttention::new(
+                self.attention_kind,
+                cfg.n_heads,
+                cfg.d_head(),
+                self.threads,
+            );
+            // Single query attending over the whole cache: no causal mask
+            // needed (everything in the cache is the past).
+            let att = mha.forward(&q, &k_all, &v_all, Mask::None);
+            self.times.merge(mha.stage_times());
+            self.ops.add(mha.op_counts());
+            let att_o = linear(&att, &bw.wo, None);
+            for (xv, &av) in x.as_mut_slice().iter_mut().zip(att_o.as_slice()) {
+                *xv += av;
+            }
+            let xn2 = layer_norm(&x, &bw.ln2_g, &bw.ln2_b);
+            let m = mlp(&xn2, bw);
+            for (xv, &mv) in x.as_mut_slice().iter_mut().zip(m.as_slice()) {
+                *xv += mv;
+            }
+        }
+        cache.len += 1;
+        let xf = layer_norm(&x, &self.weights.ln_f_g, &self.weights.ln_f_b);
+        let mut logits = MatF32::zeros(1, cfg.vocab);
+        gemm_f32(&xf, &self.weights.tok_emb, &mut logits);
+        logits
+    }
+
+    /// Mean next-token cross-entropy (nats) over the sequence; `exp` of this
+    /// is the perplexity reported in the Table 1/3 reproductions.
+    pub fn cross_entropy(&mut self, tokens: &[u16]) -> f64 {
+        assert!(tokens.len() >= 2, "need at least 2 tokens");
+        let logits = self.forward(tokens, None);
+        let mut total = 0f64;
+        for i in 0..tokens.len() - 1 {
+            let row = logits.row(i);
+            let target = tokens[i + 1] as usize;
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let logsum: f64 =
+                (row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>()).ln() + m as f64;
+            total += logsum - row[target] as f64;
+        }
+        total / (tokens.len() - 1) as f64
+    }
+
+    pub fn perplexity(&mut self, tokens: &[u16]) -> f64 {
+        self.cross_entropy(tokens).exp()
+    }
+
+    /// Per-position token losses (for the Table 10 stability stress test).
+    pub fn token_losses(&mut self, tokens: &[u16]) -> Vec<f64> {
+        let logits = self.forward(tokens, None);
+        (0..tokens.len() - 1)
+            .map(|i| {
+                let row = logits.row(i);
+                let target = tokens[i + 1] as usize;
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let logsum: f64 =
+                    (row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>()).ln() + m as f64;
+                logsum - row[target] as f64
+            })
+            .collect()
+    }
+
+    /// Sample `n` tokens after `prompt` with temperature + top-k.
+    pub fn generate(
+        &mut self,
+        prompt: &[u16],
+        n: usize,
+        temperature: f32,
+        top_k: usize,
+        rng: &mut Pcg64,
+    ) -> Vec<u16> {
+        assert!(!prompt.is_empty());
+        let cfg = self.weights.cfg;
+        let mut cache = KvCache::new(cfg.n_layers, cfg.d_model);
+        let logits = self.forward(prompt, Some(&mut cache));
+        let mut out = Vec::with_capacity(n);
+        let mut last = sample_row(logits.row(logits.rows() - 1), temperature, top_k, rng);
+        out.push(last);
+        for _ in 1..n {
+            let logits = self.decode_step(last, &mut cache);
+            last = sample_row(logits.row(0), temperature, top_k, rng);
+            out.push(last);
+        }
+        out
+    }
+}
+
+/// Temperature + top-k sampling from a logit row.
+pub fn sample_row(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Pcg64) -> u16 {
+    if temperature <= 0.0 {
+        // Greedy.
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u16;
+    }
+    let k = top_k.clamp(1, logits.len());
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    idx.truncate(k);
+    let m = logits[idx[0]];
+    let weights: Vec<f32> = idx
+        .iter()
+        .map(|&i| ((logits[i] - m) / temperature).exp())
+        .collect();
+    idx[rng.categorical(&weights)] as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn tiny() -> TinyLm {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+        TinyLm::new(Weights::random(cfg, 3), PipelineKind::Fp32)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut lm = tiny();
+        let logits = lm.forward(&[1, 2, 3, 4], None);
+        assert_eq!((logits.rows(), logits.cols()), (4, 32));
+        assert!(logits.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn decode_matches_prefill() {
+        // Incremental decode with a KV cache must produce the same last-token
+        // logits as a fresh full forward (the KV-cache correctness invariant).
+        let mut lm = tiny();
+        let tokens = [5u16, 9, 1, 30, 2, 17];
+        // Path A: prefill first 5, decode token 6.
+        let mut cache = KvCache::new(2, 16);
+        let _ = lm.forward(&tokens[..5], Some(&mut cache));
+        let inc = lm.decode_step(tokens[5], &mut cache);
+        // Path B: full forward.
+        let full = lm.forward(&tokens, None);
+        let last = full.row(5);
+        for (a, b) in inc.row(0).iter().zip(last) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cache_len_tracks_positions() {
+        let mut lm = tiny();
+        let mut cache = KvCache::new(2, 16);
+        let _ = lm.forward(&[1, 2, 3], Some(&mut cache));
+        assert_eq!(cache.len, 3);
+        let _ = lm.decode_step(4, &mut cache);
+        assert_eq!(cache.len, 4);
+        assert_eq!(cache.bytes(), 2 * 2 * 4 * 16 * 4);
+    }
+
+    #[test]
+    fn perplexity_of_random_model_near_vocab() {
+        // An untrained model predicts ~uniformly: ppl ≈ vocab.
+        let mut lm = tiny();
+        let tokens: Vec<u16> = (0..31).map(|i| (i * 7 % 32) as u16).collect();
+        let ppl = lm.perplexity(&tokens);
+        assert!(ppl > 8.0 && ppl < 128.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn token_losses_length_and_finiteness() {
+        let mut lm = tiny();
+        let tokens = [1u16, 2, 3, 4, 5];
+        let losses = lm.token_losses(&tokens);
+        assert_eq!(losses.len(), 4);
+        assert!(losses.iter().all(|l| l.is_finite() && *l >= 0.0));
+    }
+
+    #[test]
+    fn generate_emits_valid_tokens() {
+        let mut lm = tiny();
+        let mut rng = Pcg64::seed_from_u64(1);
+        let out = lm.generate(&[1, 2, 3], 8, 1.0, 8, &mut rng);
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|&t| (t as usize) < 32));
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let logits = [0.1f32, 2.5, -1.0, 2.4];
+        assert_eq!(sample_row(&logits, 0.0, 4, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_limits_support() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let logits = [10.0f32, 9.0, -50.0, -50.0];
+        for _ in 0..50 {
+            let t = sample_row(&logits, 1.0, 2, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn int_attention_model_close_to_fp32_model() {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+        let w = Weights::random(cfg, 3);
+        let tokens: Vec<u16> = (0..16).map(|i| (i * 5 % 32) as u16).collect();
+        let mut fp = TinyLm::new(w.clone(), PipelineKind::Fp32);
+        let mut int = TinyLm::new(w, PipelineKind::IntAttention);
+        let lf = fp.forward(&tokens, None);
+        let li = int.forward(&tokens, None);
+        let cos = crate::util::stats::cosine_similarity(lf.as_slice(), li.as_slice());
+        assert!(cos > 0.98, "cos={cos}");
+        // Perplexities should be in the same ballpark.
+        let pf = fp.perplexity(&tokens);
+        let pi = int.perplexity(&tokens);
+        assert!((pf.ln() - pi.ln()).abs() < 0.5, "ppl {pf} vs {pi}");
+    }
+}

@@ -1,0 +1,19 @@
+//! A small byte-level transformer language model whose attention backend is
+//! pluggable — the substitute for the paper's Llama/OPT/Qwen evaluations
+//! (see DESIGN.md §2: no pretrained weights exist on this host, so a tiny LM
+//! is trained at build time by `python/compile/train.py` and its weights are
+//! loaded here).
+//!
+//! Only the attention block changes between pipelines — embeddings,
+//! layernorms and MLPs stay FP32, matching the paper's drop-in scope (§3:
+//! "transforms the conventional quantized attention block").
+
+pub mod config;
+pub mod weights;
+pub mod layers;
+pub mod lm;
+pub mod tokenizer;
+
+pub use config::ModelConfig;
+pub use lm::TinyLm;
+pub use weights::Weights;

@@ -1,0 +1,44 @@
+//! Byte-level tokenizer: every UTF-8 byte is a token id in `0..256`.
+//! Matches `python/compile/train.py`'s corpus encoding exactly.
+
+/// Encode text to byte tokens.
+pub fn encode(text: &str) -> Vec<u16> {
+    text.as_bytes().iter().map(|&b| b as u16).collect()
+}
+
+/// Decode tokens back to text (invalid UTF-8 becomes U+FFFD).
+pub fn decode(tokens: &[u16]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Vocabulary size of the byte tokenizer.
+pub const VOCAB: usize = 256;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_round_trip() {
+        let s = "the quick brown fox 0123!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn utf8_round_trip() {
+        let s = "héllo ✓ 世界";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        assert!(encode("日本語テスト").iter().all(|&t| (t as usize) < VOCAB));
+    }
+
+    #[test]
+    fn invalid_sequences_are_replaced_not_panicking() {
+        let out = decode(&[0xFF, 0xFE, b'a' as u16]);
+        assert!(out.ends_with('a'));
+    }
+}

@@ -1,0 +1,278 @@
+//! Weight storage and the artifact loader.
+//!
+//! `python/compile/train.py` writes `artifacts/weights.bin` — all tensors as
+//! little-endian f32, concatenated in the canonical order below — plus
+//! `artifacts/model_meta.json` with the config and a checksum. The order is
+//! the single source of truth shared by the trainer and this loader:
+//!
+//! ```text
+//! tok_emb   [vocab, d_model]
+//! pos_emb   [max_seq, d_model]
+//! per layer i in 0..n_layers:
+//!   ln1_g [d_model]  ln1_b [d_model]
+//!   wq    [d_model, d_model]   (output-major: row o = weights of output o)
+//!   wk, wv, wo same
+//!   ln2_g [d_model]  ln2_b [d_model]
+//!   w1    [d_mlp, d_model]  b1 [d_mlp]
+//!   w2    [d_model, d_mlp]  b2 [d_model]
+//! ln_f_g [d_model]  ln_f_b [d_model]
+//! ```
+//!
+//! Projection matrices are stored **output-major** (pre-transposed), so the
+//! Rust GEMM (`gemm_f32(a=x, bt=w)`) consumes them without a runtime
+//! transpose. The LM head is tied to `tok_emb`.
+
+use crate::model::config::ModelConfig;
+use crate::tensor::MatF32;
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One transformer block's parameters.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: MatF32,
+    pub wk: MatF32,
+    pub wv: MatF32,
+    pub wo: MatF32,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub w1: MatF32,
+    pub b1: Vec<f32>,
+    pub w2: MatF32,
+    pub b2: Vec<f32>,
+}
+
+/// Full model parameters.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    pub tok_emb: MatF32,
+    pub pos_emb: MatF32,
+    pub blocks: Vec<BlockWeights>,
+    pub ln_f_g: Vec<f32>,
+    pub ln_f_b: Vec<f32>,
+}
+
+/// Sequential reader over the flat f32 buffer.
+struct Cursor<'a> {
+    data: &'a [f32],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [f32]> {
+        anyhow::ensure!(self.pos + n <= self.data.len(), "weights.bin truncated at {}", self.pos);
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn mat(&mut self, r: usize, c: usize) -> Result<MatF32> {
+        Ok(MatF32::from_vec(r, c, self.take(r * c)?.to_vec()))
+    }
+}
+
+impl Weights {
+    /// Load from an artifacts directory (`model_meta.json` + `weights.bin`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Weights> {
+        let dir = dir.as_ref();
+        let meta_text = std::fs::read_to_string(dir.join("model_meta.json"))
+            .with_context(|| format!("read {}/model_meta.json", dir.display()))?;
+        let meta = Json::parse(&meta_text).context("parse model_meta.json")?;
+        let cfg = ModelConfig::from_json(&meta)?;
+        let bytes = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("read {}/weights.bin", dir.display()))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "weights.bin not a multiple of 4 bytes");
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let expected = meta.req_usize("param_count")?;
+        anyhow::ensure!(
+            floats.len() == expected,
+            "weights.bin has {} params, meta says {}",
+            floats.len(),
+            expected
+        );
+        Self::from_flat(cfg, &floats)
+    }
+
+    /// Deserialize from the canonical flat order.
+    pub fn from_flat(cfg: ModelConfig, flat: &[f32]) -> Result<Weights> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            flat.len() == cfg.param_count(),
+            "flat buffer {} != param_count {}",
+            flat.len(),
+            cfg.param_count()
+        );
+        let d = cfg.d_model;
+        let dm = cfg.d_mlp();
+        let mut cur = Cursor { data: flat, pos: 0 };
+        let tok_emb = cur.mat(cfg.vocab, d)?;
+        let pos_emb = cur.mat(cfg.max_seq, d)?;
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            blocks.push(BlockWeights {
+                ln1_g: cur.vec(d)?,
+                ln1_b: cur.vec(d)?,
+                wq: cur.mat(d, d)?,
+                wk: cur.mat(d, d)?,
+                wv: cur.mat(d, d)?,
+                wo: cur.mat(d, d)?,
+                ln2_g: cur.vec(d)?,
+                ln2_b: cur.vec(d)?,
+                w1: cur.mat(dm, d)?,
+                b1: cur.vec(dm)?,
+                w2: cur.mat(d, dm)?,
+                b2: cur.vec(d)?,
+            });
+        }
+        let ln_f_g = cur.vec(d)?;
+        let ln_f_b = cur.vec(d)?;
+        debug_assert_eq!(cur.pos, flat.len());
+        Ok(Weights { cfg, tok_emb, pos_emb, blocks, ln_f_g, ln_f_b })
+    }
+
+    /// Serialize to the canonical flat order (inverse of [`from_flat`]).
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.cfg.param_count());
+        out.extend_from_slice(self.tok_emb.as_slice());
+        out.extend_from_slice(self.pos_emb.as_slice());
+        for b in &self.blocks {
+            out.extend_from_slice(&b.ln1_g);
+            out.extend_from_slice(&b.ln1_b);
+            out.extend_from_slice(b.wq.as_slice());
+            out.extend_from_slice(b.wk.as_slice());
+            out.extend_from_slice(b.wv.as_slice());
+            out.extend_from_slice(b.wo.as_slice());
+            out.extend_from_slice(&b.ln2_g);
+            out.extend_from_slice(&b.ln2_b);
+            out.extend_from_slice(b.w1.as_slice());
+            out.extend_from_slice(&b.b1);
+            out.extend_from_slice(b.w2.as_slice());
+            out.extend_from_slice(&b.b2);
+        }
+        out.extend_from_slice(&self.ln_f_g);
+        out.extend_from_slice(&self.ln_f_b);
+        out
+    }
+
+    /// Random initialization (for tests and the untrained-model paths).
+    pub fn random(cfg: ModelConfig, seed: u64) -> Weights {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let d = cfg.d_model;
+        let dm = cfg.d_mlp();
+        let std = 0.02f32.max(1.0 / (d as f32).sqrt());
+        let mat = |r: usize, c: usize, rng: &mut Pcg64| {
+            MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal_ms(0.0, std)).collect())
+        };
+        let blocks = (0..cfg.n_layers)
+            .map(|_| BlockWeights {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: mat(d, d, &mut rng),
+                wk: mat(d, d, &mut rng),
+                wv: mat(d, d, &mut rng),
+                wo: mat(d, d, &mut rng),
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                w1: mat(dm, d, &mut rng),
+                b1: vec![0.0; dm],
+                w2: mat(d, dm, &mut rng),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        Weights {
+            cfg,
+            tok_emb: mat(cfg.vocab, d, &mut rng),
+            pos_emb: mat(cfg.max_seq, d, &mut rng),
+            blocks,
+            ln_f_g: vec![1.0; d],
+            ln_f_b: vec![0.0; d],
+        }
+    }
+
+    /// Write to an artifacts directory (the format `load` reads); used by
+    /// tests and by tooling that snapshots randomly initialized models.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let flat = self.to_flat();
+        let mut bytes = Vec::with_capacity(flat.len() * 4);
+        for f in &flat {
+            bytes.extend_from_slice(&f.to_le_bytes());
+        }
+        std::fs::write(dir.join("weights.bin"), bytes)?;
+        let mut meta = self.cfg.to_json();
+        if let Json::Obj(map) = &mut meta {
+            map.insert("param_count".into(), Json::num(flat.len() as f64));
+        }
+        std::fs::write(dir.join("model_meta.json"), meta.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_round_trip_is_identity() {
+        let cfg = ModelConfig { vocab: 8, d_model: 4, n_layers: 2, n_heads: 2, max_seq: 6, mlp_mult: 2 };
+        let w = Weights::random(cfg, 42);
+        let flat = w.to_flat();
+        assert_eq!(flat.len(), cfg.param_count());
+        let w2 = Weights::from_flat(cfg, &flat).unwrap();
+        assert_eq!(w2.to_flat(), flat);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let cfg = ModelConfig { vocab: 8, d_model: 4, n_layers: 1, n_heads: 1, max_seq: 4, mlp_mult: 2 };
+        let w = Weights::random(cfg, 7);
+        let dir = std::env::temp_dir().join("intattn_weights_test");
+        w.save(&dir).unwrap();
+        let back = Weights::load(&dir).unwrap();
+        assert_eq!(back.cfg, cfg);
+        assert_eq!(back.to_flat(), w.to_flat());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_buffer_rejected() {
+        let cfg = ModelConfig { vocab: 8, d_model: 4, n_layers: 1, n_heads: 1, max_seq: 4, mlp_mult: 2 };
+        let w = Weights::random(cfg, 7);
+        let mut flat = w.to_flat();
+        flat.pop();
+        assert!(Weights::from_flat(cfg, &flat).is_err());
+    }
+
+    #[test]
+    fn corrupted_meta_rejected() {
+        let cfg = ModelConfig { vocab: 8, d_model: 4, n_layers: 1, n_heads: 1, max_seq: 4, mlp_mult: 2 };
+        let w = Weights::random(cfg, 7);
+        let dir = std::env::temp_dir().join("intattn_weights_bad_meta");
+        w.save(&dir).unwrap();
+        // Lie about param_count.
+        let meta = std::fs::read_to_string(dir.join("model_meta.json")).unwrap();
+        std::fs::write(dir.join("model_meta.json"), meta.replace("\"param_count\":", "\"param_count\":1,\"x\":")).unwrap();
+        assert!(Weights::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn random_layernorm_params_are_identity() {
+        let w = Weights::random(ModelConfig::tiny(), 1);
+        assert!(w.blocks[0].ln1_g.iter().all(|&x| x == 1.0));
+        assert!(w.ln_f_b.iter().all(|&x| x == 0.0));
+    }
+}

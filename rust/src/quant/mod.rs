@@ -1,0 +1,312 @@
+//! Dynamic symmetric quantization (paper §2.1 eq. 2–3 and §3.3 eq. 16).
+//!
+//! Per-tensor symmetric INT8 with zero point fixed at 0:
+//!
+//! ```text
+//! s_X = max|X| / 127
+//! X̂  = clamp(round(X / s_X), −127, 127)
+//! X  ≈ s_X · X̂
+//! ```
+//!
+//! plus the per-group (per-channel / per-block) generalization of §3.3 where
+//! each group `g` carries its own scale `s^(g)` and, downstream, its own
+//! integer clipping threshold `c_int^(g)`.
+
+use crate::tensor::{MatF32, MatI8, MatU8};
+
+/// A per-tensor INT8 quantization result.
+#[derive(Clone, Debug)]
+pub struct QuantizedI8 {
+    pub data: MatI8,
+    /// The dequantization scale `s_X` (eq. 2); `X ≈ s_X · X̂`.
+    pub scale: f32,
+}
+
+/// Quantize with per-tensor symmetric INT8 (eq. 2–3).
+///
+/// An all-zero tensor gets scale 1.0 (any scale dequantizes zeros to zeros).
+pub fn quantize_i8(x: &MatF32) -> QuantizedI8 {
+    let amax = x.abs_max();
+    let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+    let inv = 1.0 / scale;
+    let data = x.map(|v| {
+        let q = (v * inv).round();
+        q.clamp(-127.0, 127.0) as i8
+    });
+    QuantizedI8 { data, scale }
+}
+
+/// Dequantize an INT8 tensor back to f32.
+pub fn dequantize_i8(q: &QuantizedI8) -> MatF32 {
+    q.data.map(|v| v as f32 * q.scale)
+}
+
+/// Quantize an FP32 probability matrix (entries in `[0,1]`) to UINT8 with
+/// the paper's ×255 unsigned formulation (§3.2): `P̂ = round(255·P)`.
+pub fn quantize_p_u8(p: &MatF32) -> MatU8 {
+    p.map(|v| (v * 255.0).round().clamp(0.0, 255.0) as u8)
+}
+
+/// The signed-INT8 alternative the paper ablates against in Table 9:
+/// `P̂ = round(127·P)` stored in `i8`, wasting the negative half-range.
+pub fn quantize_p_i8(p: &MatF32) -> MatI8 {
+    p.map(|v| (v * 127.0).round().clamp(-127.0, 127.0) as i8)
+}
+
+/// Dequantize a ×255 UINT8 probability matrix.
+pub fn dequantize_p_u8(p: &MatU8) -> MatF32 {
+    p.map(|v| v as f32 / 255.0)
+}
+
+/// Dequantize a ×127 INT8 probability matrix.
+pub fn dequantize_p_i8(p: &MatI8) -> MatF32 {
+    p.map(|v| v as f32 / 127.0)
+}
+
+// ---------------------------------------------------------------------------
+// Group-wise quantization (§3.3)
+
+/// How to group rows/channels for finer-grained scales.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupScheme {
+    /// One scale for the whole tensor (the paper's default).
+    PerTensor,
+    /// One scale per row (per-token for Q, per-key for K).
+    PerRow,
+    /// One scale per contiguous block of `block` rows.
+    PerRowBlock(usize),
+}
+
+/// Group-quantized tensor: INT8 data plus one scale per group, and the
+/// row→group assignment implied by the scheme.
+#[derive(Clone, Debug)]
+pub struct GroupQuantizedI8 {
+    pub data: MatI8,
+    pub scales: Vec<f32>,
+    pub scheme: GroupScheme,
+}
+
+impl GroupQuantizedI8 {
+    /// Group index of row `r`.
+    #[inline]
+    pub fn group_of_row(&self, r: usize) -> usize {
+        match self.scheme {
+            GroupScheme::PerTensor => 0,
+            GroupScheme::PerRow => r,
+            GroupScheme::PerRowBlock(b) => r / b,
+        }
+    }
+
+    #[inline]
+    pub fn scale_of_row(&self, r: usize) -> f32 {
+        self.scales[self.group_of_row(r)]
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.scales.len()
+    }
+}
+
+/// Quantize with a group scheme (eq. 16's scale bookkeeping).
+pub fn quantize_grouped_i8(x: &MatF32, scheme: GroupScheme) -> GroupQuantizedI8 {
+    let rows = x.rows();
+    let groups: usize = match scheme {
+        GroupScheme::PerTensor => 1,
+        GroupScheme::PerRow => rows,
+        GroupScheme::PerRowBlock(b) => {
+            assert!(b > 0, "block size must be positive");
+            rows.div_ceil(b)
+        }
+    };
+    // Pass 1: per-group abs-max.
+    let mut amax = vec![0.0f32; groups];
+    for r in 0..rows {
+        let g = match scheme {
+            GroupScheme::PerTensor => 0,
+            GroupScheme::PerRow => r,
+            GroupScheme::PerRowBlock(b) => r / b,
+        };
+        for &v in x.row(r) {
+            amax[g] = amax[g].max(v.abs());
+        }
+    }
+    let scales: Vec<f32> = amax
+        .iter()
+        .map(|&m| if m == 0.0 { 1.0 } else { m / 127.0 })
+        .collect();
+    // Pass 2: quantize.
+    let mut data = MatI8::zeros(rows, x.cols());
+    for r in 0..rows {
+        let g = match scheme {
+            GroupScheme::PerTensor => 0,
+            GroupScheme::PerRow => r,
+            GroupScheme::PerRowBlock(b) => r / b,
+        };
+        let inv = 1.0 / scales[g];
+        let dst = data.row_mut(r);
+        for (d, &v) in dst.iter_mut().zip(x.row(r)) {
+            *d = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    GroupQuantizedI8 { data, scales, scheme }
+}
+
+/// Dequantize a group-quantized tensor.
+pub fn dequantize_grouped_i8(q: &GroupQuantizedI8) -> MatF32 {
+    let mut out = MatF32::zeros(q.data.rows(), q.data.cols());
+    for r in 0..q.data.rows() {
+        let s = q.scale_of_row(r);
+        let dst = out.row_mut(r);
+        for (d, &v) in dst.iter_mut().zip(q.data.row(r)) {
+            *d = v as f32 * s;
+        }
+    }
+    out
+}
+
+/// Quantization error metrics (used by tests and the Table 9 driver).
+pub fn quant_error_i8(x: &MatF32) -> (f64, f64) {
+    let q = quantize_i8(x);
+    let back = dequantize_i8(&q);
+    let rel = crate::util::stats::relative_l1(x.as_slice(), back.as_slice());
+    let rm = crate::util::stats::rmse(x.as_slice(), back.as_slice());
+    (rel, rm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, rows: usize, cols: usize, std: f32) -> MatF32 {
+        MatF32::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal_ms(0.0, std)).collect())
+    }
+
+    #[test]
+    fn scale_formula_matches_paper() {
+        let x = MatF32::from_vec(1, 3, vec![0.0, -2.54, 1.0]);
+        let q = quantize_i8(&x);
+        assert!((q.scale - 2.54 / 127.0).abs() < 1e-7);
+        assert_eq!(q.data.as_slice()[1], -127);
+    }
+
+    #[test]
+    fn zero_tensor_is_safe() {
+        let x = MatF32::zeros(4, 4);
+        let q = quantize_i8(&x);
+        assert_eq!(q.scale, 1.0);
+        assert!(q.data.as_slice().iter().all(|&v| v == 0));
+        assert!(dequantize_i8(&q).as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_half_step() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let x = random_mat(&mut rng, 16, 64, 1.0);
+        let q = quantize_i8(&x);
+        let back = dequantize_i8(&q);
+        let half_step = q.scale / 2.0 + 1e-7;
+        for (&a, &b) in x.as_slice().iter().zip(back.as_slice()) {
+            assert!((a - b).abs() <= half_step, "a={a} b={b} step={}", q.scale);
+        }
+    }
+
+    #[test]
+    fn values_stay_in_sym_range() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let x = random_mat(&mut rng, 8, 8, 100.0);
+        let q = quantize_i8(&x);
+        assert!(q.data.as_slice().iter().all(|&v| (-127..=127).contains(&(v as i32))));
+    }
+
+    #[test]
+    fn p_u8_uses_full_range() {
+        let p = MatF32::from_vec(1, 3, vec![0.0, 0.5, 1.0]);
+        let q = quantize_p_u8(&p);
+        assert_eq!(q.as_slice(), &[0, 128, 255]);
+        let back = dequantize_p_u8(&q);
+        assert!(back.allclose(&p, 1.0 / 255.0, 0.0));
+    }
+
+    #[test]
+    fn p_i8_wastes_half_range() {
+        let p = MatF32::from_vec(1, 2, vec![0.0, 1.0]);
+        let q = quantize_p_i8(&p);
+        assert_eq!(q.as_slice(), &[0, 127]);
+    }
+
+    #[test]
+    fn u8_p_quant_beats_i8_on_probabilities() {
+        // The Table 9 claim at unit level: for a normalized probability row,
+        // UINT8(×255) has lower RMSE than INT8(×127).
+        let mut rng = Pcg64::seed_from_u64(3);
+        let logits: Vec<f32> = (0..256).map(|_| rng.normal_ms(0.0, 2.0)).collect();
+        let m = logits.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let p = MatF32::from_vec(1, 256, exps.iter().map(|&e| e / z).collect());
+        let u8_err = crate::util::stats::rmse(
+            p.as_slice(),
+            dequantize_p_u8(&quantize_p_u8(&p)).as_slice(),
+        );
+        let i8_err = crate::util::stats::rmse(
+            p.as_slice(),
+            dequantize_p_i8(&quantize_p_i8(&p)).as_slice(),
+        );
+        assert!(u8_err < i8_err, "u8={u8_err} i8={i8_err}");
+    }
+
+    #[test]
+    fn per_row_groups_have_row_count_scales() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let x = random_mat(&mut rng, 6, 8, 1.0);
+        let q = quantize_grouped_i8(&x, GroupScheme::PerRow);
+        assert_eq!(q.num_groups(), 6);
+        assert_eq!(q.group_of_row(5), 5);
+    }
+
+    #[test]
+    fn per_block_groups_round_up() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let x = random_mat(&mut rng, 10, 4, 1.0);
+        let q = quantize_grouped_i8(&x, GroupScheme::PerRowBlock(4));
+        assert_eq!(q.num_groups(), 3);
+        assert_eq!(q.group_of_row(9), 2);
+    }
+
+    #[test]
+    fn per_tensor_group_matches_plain_quantize() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let x = random_mat(&mut rng, 5, 7, 2.0);
+        let a = quantize_i8(&x);
+        let b = quantize_grouped_i8(&x, GroupScheme::PerTensor);
+        assert_eq!(a.data, b.data);
+        assert_eq!(b.scales.len(), 1);
+        assert!((a.scale - b.scales[0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grouped_round_trip_improves_on_outlier_rows() {
+        // A tensor with one huge-magnitude row: per-row scales must give a
+        // strictly better reconstruction of the small rows.
+        let mut rng = Pcg64::seed_from_u64(7);
+        let mut x = random_mat(&mut rng, 4, 32, 0.1);
+        for v in x.row_mut(0) {
+            *v *= 1000.0;
+        }
+        let per_tensor = dequantize_grouped_i8(&quantize_grouped_i8(&x, GroupScheme::PerTensor));
+        let per_row = dequantize_grouped_i8(&quantize_grouped_i8(&x, GroupScheme::PerRow));
+        let err_t = crate::util::stats::rmse(x.row(2), &per_tensor.as_slice()[2 * 32..3 * 32]);
+        let err_r = crate::util::stats::rmse(x.row(2), &per_row.as_slice()[2 * 32..3 * 32]);
+        assert!(err_r < err_t, "per-row {err_r} vs per-tensor {err_t}");
+    }
+
+    #[test]
+    fn quant_error_metrics_sane() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let x = random_mat(&mut rng, 32, 32, 1.0);
+        let (rel, rm) = quant_error_i8(&x);
+        assert!(rel > 0.0 && rel < 0.02, "rel={rel}");
+        assert!(rm > 0.0 && rm < 0.02, "rmse={rm}");
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by the build-time
+//! JAX/Pallas layer (`python/compile/aot.py`) and executes them on the CPU
+//! PJRT client via the `xla` crate — the L3↔L2/L1 bridge.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). All modules are lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple1()` / tuple
+//! accessors.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled, executable artifact.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 input buffers of the given shapes; returns all f32
+    /// outputs flattened (the artifacts used here are single- or multi-output
+    /// tuples of f32 arrays).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("execute artifact")?[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // Lowered with return_tuple=True: decompose the tuple.
+        let tuple = result.decompose_tuple().context("decompose result tuple")?;
+        tuple
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("read f32 output"))
+            .collect()
+    }
+}
+
+/// Loads and caches compiled artifacts from a directory of `*.hlo.txt` files.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl ArtifactRuntime {
+    /// CPU PJRT client over the given artifacts directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(ArtifactRuntime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Path of a named artifact.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// True if the named artifact exists on disk.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// List artifact names available in the directory.
+    pub fn list_artifacts(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for e in entries.flatten() {
+                let fname = e.file_name().to_string_lossy().to_string();
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    /// Load + compile (cached) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifact_path(name);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile artifact '{name}'"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable { name: name.to_string(), exe },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: load and run in one call.
+    pub fn run(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?.run_f32(inputs)
+    }
+}
+
+/// Default artifacts directory: `$INTATTN_ARTIFACTS` or `artifacts/` under
+/// the crate root / current directory.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("INTATTN_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Prefer the manifest-relative path (tests run from the crate root).
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.exists() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trip tests live in rust/tests/runtime_artifacts.rs
+    // (they need `make artifacts` to have run). Here: path logic only.
+
+    #[test]
+    fn artifact_paths_and_listing() {
+        let dir = std::env::temp_dir().join("intattn_rt_test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(dir.join("alpha.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("beta.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("notes.md"), "x").unwrap();
+        let rt = ArtifactRuntime::new(&dir).unwrap();
+        assert!(rt.has_artifact("alpha"));
+        assert!(!rt.has_artifact("gamma"));
+        assert_eq!(rt.list_artifacts(), vec!["alpha".to_string(), "beta".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,248 @@
+//! EXAQ baseline (Shkolnik et al., NeurIPS-W 2024) — the closest LUT-only
+//! comparator the paper ablates against (Tables 4–7, Figure 5).
+//!
+//! EXAQ quantizes the softmax *input* to ultra-low bit width (`b ∈ {2, 3}` →
+//! 4 or 8 LUT entries) and picks the clipping range **dynamically** from
+//! per-tensor statistics (a multiple of the logit standard deviation), which
+//! costs an extra global reduction pass per tensor — exactly the overhead
+//! IndexSoftmax's fixed `(b, c)` avoids (§3.1 "Among LUT-only methods...").
+//!
+//! Implementation notes: we follow the paper's characterization of EXAQ —
+//! dynamic std-based clipping + a `2^b`-entry exponential LUT + high-precision
+//! (f32) normalization; the normalization staying in float is what keeps
+//! EXAQ's dataflow "mixed-precision" (§2.3).
+
+use crate::softmax::index_softmax::Mask;
+use crate::tensor::{MatF32, MatI32, MatU8};
+
+/// EXAQ configuration: LUT resolution bits and the std multiplier for the
+/// dynamic clipping range.
+#[derive(Clone, Copy, Debug)]
+pub struct ExaqConfig {
+    /// 2 or 3 in the paper's ablation (INT2/INT3).
+    pub bits: u32,
+    /// Clipping range = `k_std · σ(Δ)`; EXAQ derives the optimal multiplier
+    /// analytically — 3.0 is representative for attention logits.
+    pub k_std: f32,
+}
+
+impl ExaqConfig {
+    pub fn int2() -> Self {
+        ExaqConfig { bits: 2, k_std: 3.0 }
+    }
+    pub fn int3() -> Self {
+        ExaqConfig { bits: 3, k_std: 3.0 }
+    }
+}
+
+/// The EXAQ softmax operator.
+#[derive(Clone, Debug)]
+pub struct ExaqSoftmax {
+    pub cfg: ExaqConfig,
+}
+
+impl ExaqSoftmax {
+    pub fn new(cfg: ExaqConfig) -> Self {
+        assert!((1..=8).contains(&cfg.bits));
+        ExaqSoftmax { cfg }
+    }
+
+    /// Number of LUT entries (`2^bits`).
+    pub fn entries(&self) -> usize {
+        1 << self.cfg.bits
+    }
+
+    /// Bytes of LUT storage at f32 resolution — EXAQ's tables are small
+    /// enough that the paper compares *entry counts* under a 32 B budget
+    /// (Fig. 5): INT3 → 8 entries × 4 B = 32 B.
+    pub fn lut_bytes_f32(&self) -> usize {
+        self.entries() * 4
+    }
+
+    /// The dynamic clipping statistic: std-dev of the max-subtracted
+    /// distances `Δ = m − a` over the whole tensor (the "global reduction
+    /// and control overhead" IndexSoftmax eliminates).
+    pub fn dynamic_clip(&self, logits: &MatI32, alpha: f32, mask: Mask) -> f32 {
+        let l = logits.cols();
+        let mut n = 0usize;
+        let mut sum = 0f64;
+        let mut sumsq = 0f64;
+        for r in 0..logits.rows() {
+            let valid = mask.valid_cols(r, l);
+            let row = &logits.row(r)[..valid];
+            let m = *row.iter().max().expect("non-empty") as i64;
+            for &a in row {
+                let d = (m - a as i64) as f64 * alpha as f64;
+                sum += d;
+                sumsq += d * d;
+                n += 1;
+            }
+        }
+        let mean = sum / n as f64;
+        let var = (sumsq / n as f64 - mean * mean).max(0.0);
+        let clip = (self.cfg.k_std as f64 * var.sqrt()) as f32;
+        clip.max(1e-3) // degenerate all-equal rows
+    }
+
+    /// Forward: INT32 logits → UINT8 probabilities (so the output interface
+    /// matches IndexSoftmax for pipeline plug-compatibility), but internally
+    /// the normalization runs in f32 — EXAQ's mixed-precision dataflow.
+    pub fn forward(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatU8 {
+        let clip = self.dynamic_clip(logits, alpha, mask);
+        let n = self.entries();
+        // f32 LUT over [0, clip]: LUT[i] = exp(−clip·i/(n−1)), last entry 0.
+        let lut: Vec<f32> = (0..n)
+            .map(|i| {
+                if i == n - 1 {
+                    0.0
+                } else {
+                    (-(clip * i as f32 / (n - 1) as f32)).exp()
+                }
+            })
+            .collect();
+        let l = logits.cols();
+        let mut out = MatU8::zeros(logits.rows(), l);
+        let clip_int = (clip / alpha).max(1.0);
+        for r in 0..logits.rows() {
+            let valid = mask.valid_cols(r, l);
+            let row = &logits.row(r)[..valid];
+            let m = *row.iter().max().unwrap() as i64;
+            // Gather + float row sum.
+            let mut e = vec![0f32; valid];
+            let mut sum = 0f32;
+            for (ev, &a) in e.iter_mut().zip(row) {
+                let delta = (m - a as i64) as f32;
+                let idx = ((delta / clip_int * (n - 1) as f32).round() as usize).min(n - 1);
+                *ev = lut[idx];
+                sum += *ev;
+            }
+            // Float normalization, then ×255 requantization of P.
+            let inv = 1.0 / sum;
+            let out_row = out.row_mut(r);
+            for (o, &ev) in out_row[..valid].iter_mut().zip(&e) {
+                *o = (ev * inv * 255.0).round().clamp(0.0, 255.0) as u8;
+            }
+        }
+        out
+    }
+
+    /// Float view (`P̂/255`) for fidelity metrics.
+    pub fn forward_probs_f32(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatF32 {
+        self.forward(logits, alpha, mask).map(|v| v as f32 / 255.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::index_softmax::{IndexSoftmax, Mask};
+    use crate::util::prng::Pcg64;
+
+    fn gaussian_logits(rng: &mut Pcg64, rows: usize, cols: usize, std: f32) -> MatI32 {
+        MatI32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal_ms(0.0, std) as i32).collect(),
+        )
+    }
+
+    fn exact_softmax_probs(logits: &MatI32, alpha: f32) -> Vec<f32> {
+        let mut out = Vec::with_capacity(logits.len());
+        for r in 0..logits.rows() {
+            let f: Vec<f32> = logits.row(r).iter().map(|&a| a as f32 * alpha).collect();
+            let m = f.iter().cloned().fold(f32::MIN, f32::max);
+            let e: Vec<f32> = f.iter().map(|&x| (x - m).exp()).collect();
+            let z: f32 = e.iter().sum();
+            out.extend(e.iter().map(|&x| x / z));
+        }
+        out
+    }
+
+    #[test]
+    fn entry_counts_match_bit_widths() {
+        assert_eq!(ExaqSoftmax::new(ExaqConfig::int2()).entries(), 4);
+        assert_eq!(ExaqSoftmax::new(ExaqConfig::int3()).entries(), 8);
+        // Fig. 5's byte-budget framing: INT3 f32 LUT = 32 B, same budget as
+        // our 32-entry u8 LUT.
+        assert_eq!(ExaqSoftmax::new(ExaqConfig::int3()).lut_bytes_f32(), 32);
+    }
+
+    #[test]
+    fn rows_sum_close_to_255() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let logits = gaussian_logits(&mut rng, 8, 64, 300.0);
+        let p = ex.forward(&logits, 0.004, Mask::None);
+        for r in 0..8 {
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            assert!((s - 255).abs() <= 20, "row {r} sum {s}");
+        }
+    }
+
+    #[test]
+    fn dynamic_clip_is_positive_and_scales_with_spread() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let narrow = gaussian_logits(&mut rng, 4, 64, 100.0);
+        let wide = gaussian_logits(&mut rng, 4, 64, 1000.0);
+        let c_n = ex.dynamic_clip(&narrow, 0.004, Mask::None);
+        let c_w = ex.dynamic_clip(&wide, 0.004, Mask::None);
+        assert!(c_n > 0.0);
+        assert!(c_w > c_n * 3.0, "clip must track spread: {c_n} vs {c_w}");
+    }
+
+    #[test]
+    fn degenerate_uniform_rows_do_not_crash() {
+        let ex = ExaqSoftmax::new(ExaqConfig::int2());
+        let logits = MatI32::from_vec(2, 4, vec![7; 8]);
+        let p = ex.forward(&logits, 0.01, Mask::None);
+        for r in 0..2 {
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            assert!((s - 255).abs() <= 8, "sum {s}");
+        }
+    }
+
+    #[test]
+    fn int3_beats_int2_and_indexsoftmax_beats_int3() {
+        // The ablation ordering of Tables 5–7 at operator level: fidelity
+        // (cosine sim to exact softmax) must rank IndexSoftmax > EXAQ-INT3 >
+        // EXAQ-INT2 on realistic logits.
+        let mut rng = Pcg64::seed_from_u64(3);
+        let alpha = 0.004f32;
+        let mut cos2 = 0.0;
+        let mut cos3 = 0.0;
+        let mut cos_ix = 0.0;
+        let trials = 12;
+        for _ in 0..trials {
+            let logits = gaussian_logits(&mut rng, 4, 256, 500.0);
+            let p_ref = exact_softmax_probs(&logits, alpha);
+            let p2 = ExaqSoftmax::new(ExaqConfig::int2())
+                .forward_probs_f32(&logits, alpha, Mask::None);
+            let p3 = ExaqSoftmax::new(ExaqConfig::int3())
+                .forward_probs_f32(&logits, alpha, Mask::None);
+            let pix = IndexSoftmax::default().forward_probs_f32(&logits, alpha, Mask::None);
+            cos2 += crate::util::stats::cosine_similarity(p2.as_slice(), &p_ref);
+            cos3 += crate::util::stats::cosine_similarity(p3.as_slice(), &p_ref);
+            cos_ix += crate::util::stats::cosine_similarity(pix.as_slice(), &p_ref);
+        }
+        cos2 /= trials as f64;
+        cos3 /= trials as f64;
+        cos_ix /= trials as f64;
+        assert!(cos3 > cos2, "INT3 {cos3} must beat INT2 {cos2}");
+        assert!(cos_ix > cos3, "IndexSoftmax {cos_ix} must beat INT3 {cos3}");
+        assert!(cos_ix > 0.995, "cos_ix={cos_ix}");
+    }
+
+    #[test]
+    fn causal_mask_respected() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let logits = gaussian_logits(&mut rng, 5, 5, 400.0);
+        let p = ex.forward(&logits, 0.004, Mask::Causal);
+        for r in 0..5 {
+            for c in (r + 1)..5 {
+                assert_eq!(p.get(r, c), 0);
+            }
+        }
+    }
+}

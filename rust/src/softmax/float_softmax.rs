@@ -1,0 +1,154 @@
+//! Numerically stable floating-point softmax (paper eq. 6) — the operator
+//! inside the FP32, FP16 and Quant-Only baselines, written the way an edge
+//! runtime would: row-wise max subtraction, `exp`, row-sum, divide.
+//!
+//! The FP16 variant rounds inputs, intermediates and outputs through binary16
+//! precision to model a native half-precision unit (see DESIGN.md §2).
+
+use crate::softmax::index_softmax::Mask;
+use crate::tensor::MatF32;
+use crate::util::f16::round_f32_to_f16;
+
+/// In-place stable softmax over each row of `x` (eq. 6). Masked-out columns
+/// are set to exactly 0.
+pub fn softmax_rows(x: &mut MatF32, mask: Mask) {
+    let l = x.cols();
+    for r in 0..x.rows() {
+        let valid = mask.valid_cols(r, l);
+        let row = x.row_mut(r);
+        let m = row[..valid].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for v in row[..valid].iter_mut() {
+            // Cut off deep-underflow exponents: exp(-80) ≈ 1.8e-35 is below
+            // any representable contribution to the row sum, and letting it
+            // through produces subnormal probabilities that cost ~100× per
+            // op downstream on x86 (real edge kernels run FTZ/DAZ instead).
+            let diff = *v - m;
+            *v = if diff < -80.0 { 0.0 } else { diff.exp() };
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row[..valid].iter_mut() {
+            *v *= inv;
+        }
+        for v in row[valid..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Stable softmax with every elementary result rounded to f16 precision —
+/// the FP16 pipeline's softmax stage. The max subtraction happens *before*
+/// rounding (as real FP16 kernels do): the difference is ≤ 0, so `exp` and
+/// everything after it stay inside the binary16 range even when the raw
+/// logits overflow it.
+pub fn softmax_rows_f16(x: &mut MatF32, mask: Mask) {
+    let l = x.cols();
+    for r in 0..x.rows() {
+        let valid = mask.valid_cols(r, l);
+        let row = x.row_mut(r);
+        let m = row[..valid].iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for v in row[..valid].iter_mut() {
+            *v = round_f32_to_f16((round_f32_to_f16(*v - m)).exp());
+            sum += *v;
+        }
+        sum = round_f32_to_f16(sum);
+        let inv = round_f32_to_f16(1.0 / sum);
+        for v in row[..valid].iter_mut() {
+            *v = round_f32_to_f16(*v * inv);
+        }
+        for v in row[valid..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Softmax of `alpha·Â` given INT32 logits, i.e. the dequantize→softmax step
+/// of the Quant-Only pipeline fused for evaluation convenience. Returns a
+/// fresh matrix; the production Quant-Only pipeline keeps the stages separate
+/// so each can be timed (see `attention::quant_only`).
+pub fn softmax_of_scaled_logits(
+    logits: &crate::tensor::MatI32,
+    alpha: f32,
+    mask: Mask,
+) -> MatF32 {
+    let mut x = logits.map(|v| v as f32 * alpha);
+    softmax_rows(&mut x, mask);
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut x = MatF32::from_vec(4, 64, (0..256).map(|_| rng.normal_ms(0.0, 3.0)).collect());
+        softmax_rows(&mut x, Mask::None);
+        for r in 0..4 {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+            assert!(x.row(r).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn stable_under_huge_logits() {
+        let mut x = MatF32::from_vec(1, 3, vec![1e30, 1e30 - 1.0, -1e30]);
+        softmax_rows(&mut x, Mask::None);
+        assert!(x.as_slice().iter().all(|v| v.is_finite()));
+        let s: f32 = x.row(0).iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn causal_mask_zeroes_future() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut x = MatF32::from_vec(5, 5, (0..25).map(|_| rng.normal()).collect());
+        softmax_rows(&mut x, Mask::Causal);
+        for r in 0..5 {
+            for c in 0..5 {
+                if c > r {
+                    assert_eq!(x.get(r, c), 0.0);
+                }
+            }
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn order_preserved() {
+        let mut x = MatF32::from_vec(1, 4, vec![1.0, 3.0, 2.0, -1.0]);
+        softmax_rows(&mut x, Mask::None);
+        let r = x.row(0);
+        assert!(r[1] > r[2] && r[2] > r[0] && r[0] > r[3]);
+    }
+
+    #[test]
+    fn f16_variant_close_to_f32() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let data: Vec<f32> = (0..128).map(|_| rng.normal_ms(0.0, 2.0)).collect();
+        let mut a = MatF32::from_vec(2, 64, data.clone());
+        let mut b = MatF32::from_vec(2, 64, data);
+        softmax_rows(&mut a, Mask::None);
+        softmax_rows_f16(&mut b, Mask::None);
+        let cos = crate::util::stats::cosine_similarity(a.as_slice(), b.as_slice());
+        assert!(cos > 0.9999, "cos={cos}");
+        // but not bit-identical — f16 rounding must actually happen
+        assert!(a.as_slice() != b.as_slice());
+    }
+
+    #[test]
+    fn scaled_logits_path_matches_manual() {
+        let logits = crate::tensor::MatI32::from_vec(1, 3, vec![100, 200, 50]);
+        let alpha = 0.01;
+        let p = softmax_of_scaled_logits(&logits, alpha, Mask::None);
+        let mut manual = MatF32::from_vec(1, 3, vec![1.0, 2.0, 0.5]);
+        softmax_rows(&mut manual, Mask::None);
+        assert!(p.allclose(&manual, 1e-6, 1e-5));
+    }
+}

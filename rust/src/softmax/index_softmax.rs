@@ -1,0 +1,486 @@
+//! **IndexSoftmax** — the paper's integer-domain softmax surrogate
+//! (§3.1–3.2, eq. 7–15).
+//!
+//! Pipeline per row of the INT32 logit matrix `Â = Q̂K̂ᵀ`:
+//!
+//! 1. `Δ̂ = rowMax(Â) − Â` — nonnegative distances from the row max (eq. 7;
+//!    the paper's `m − A` sign convention keeps `exp(−x)` arguments in
+//!    `[0, c]`).
+//! 2. Clip: `Δ̂' = min(Δ̂, c_int)` with `c_int = round(c/α)`, `α = s_Q·s_K/√d`
+//!    (eq. 8–9). Entries at `c_int` land in the LUT's zero bucket — the
+//!    sparsity-aware pruning of Fig. 4.
+//! 3. Index: `idx = round(Δ̂'·(2^b−1)/c_int)` (eq. 11), computed with an
+//!    exact multiply–shift division (no hardware divide on the hot path).
+//! 4. Gather: `Ê = LÛT[idx]` from the UINT8 table (eq. 13–14).
+//! 5. Normalize in integers: `P̂ = round(255·Ê / rowSum Ê)` with a widened
+//!    accumulator (eq. 15).
+//!
+//! No floating-point operation occurs between the INT32 logits and the UINT8
+//! probability matrix. The only float input is the *scalar* `α`, used once
+//! per tensor (or per group, §3.3) to derive `c_int`.
+
+use crate::softmax::lut::ExpLut;
+use crate::tensor::{MatF32, MatI32, MatU8};
+
+/// Exact rounded division by a positive runtime constant via multiply–shift
+/// (Granlund–Montgomery): precompute once per row/tensor, then each element
+/// costs one widening multiply and a shift — the "add, multiply, shift"
+/// primitive set the paper's design goal 3 allows.
+#[derive(Clone, Copy, Debug)]
+pub struct MulShiftDiv {
+    /// u64 magic for the fast path (valid when `wide` is false).
+    magic64: u64,
+    /// u128 magic for the guaranteed-exact wide path.
+    magic128: u128,
+    shift64: u32,
+    shift128: u32,
+    divisor: u64,
+    /// Use the u128 path (divisor too large for the proven-exact u64 bound).
+    wide: bool,
+}
+
+impl MulShiftDiv {
+    pub fn new(divisor: u64) -> Self {
+        assert!(divisor > 0);
+        let l = 64 - (divisor - 1).leading_zeros().min(63); // ceil(log2 d)
+        // Wide path: s = 64 + l is exact for every x < 2^64 (Granlund–
+        // Montgomery: the error term x·e/(d·2^s) with e < d ≤ 2^l stays
+        // below x/2^64 < 1/d's slack).
+        let shift128 = 64 + l;
+        let magic128 = ((1u128 << shift128) + divisor as u128 - 1) / divisor as u128;
+        // Fast u64 path: with s = 31 + l the same argument gives exactness
+        // for all x < 2^31, and x·magic ≤ 2^31·2^(s-l+1) = 2^63 fits u64.
+        // Our numerators (delta·n1 + d/2 with delta < d ≤ 2^25, n1 ≤ 255;
+        // 255·e + sum/2 with e ≤ 255) all stay below 2^31 whenever
+        // d < 2^25 — the `wide` flag guards the rest.
+        let wide = l > 25;
+        let shift64 = 31 + l;
+        let magic64 = if wide {
+            0
+        } else {
+            (((1u128 << shift64) + divisor as u128 - 1) / divisor as u128) as u64
+        };
+        MulShiftDiv { magic64, magic128, shift64, shift128, divisor, wide }
+    }
+
+    /// `floor(x / d)` — exact for all `x` on the wide path; exact for
+    /// `x < 2^31` on the fast path (debug-asserted).
+    #[inline]
+    pub fn div_floor(&self, x: u64) -> u64 {
+        if self.wide {
+            ((x as u128 * self.magic128) >> self.shift128) as u64
+        } else {
+            debug_assert!(x < (1 << 31), "fast-path numerator bound");
+            (x.wrapping_mul(self.magic64)) >> self.shift64
+        }
+    }
+
+    /// `round(x / d)` (ties away from zero, matching `f32::round` on the
+    /// nonnegative domain used here).
+    #[inline]
+    pub fn div_round(&self, x: u64) -> u64 {
+        self.div_floor(x + self.divisor / 2)
+    }
+}
+
+/// Masking mode for the logit matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mask {
+    /// All positions attend to all positions (encoder / vision mode).
+    None,
+    /// Row `i` attends to columns `0..=i` (decoder prefill mode).
+    Causal,
+}
+
+impl Mask {
+    /// Number of valid columns in row `r` of an `L`-column matrix.
+    #[inline]
+    pub fn valid_cols(self, r: usize, l: usize) -> usize {
+        match self {
+            Mask::None => l,
+            Mask::Causal => (r + 1).min(l),
+        }
+    }
+}
+
+/// Hyperparameters of IndexSoftmax (paper §4.4 recommends `(b, c) = (5, 6.6)`).
+#[derive(Clone, Copy, Debug)]
+pub struct IndexSoftmaxConfig {
+    pub b: u32,
+    pub c: f32,
+}
+
+impl Default for IndexSoftmaxConfig {
+    fn default() -> Self {
+        IndexSoftmaxConfig { b: crate::softmax::lut::DEFAULT_B, c: crate::softmax::lut::DEFAULT_C }
+    }
+}
+
+/// The IndexSoftmax operator. Construction builds the fixed LUT once; the
+/// operator is then reused across rows, heads, layers and requests.
+#[derive(Clone, Debug)]
+pub struct IndexSoftmax {
+    pub cfg: IndexSoftmaxConfig,
+    pub lut: ExpLut,
+}
+
+impl Default for IndexSoftmax {
+    fn default() -> Self {
+        Self::new(IndexSoftmaxConfig::default())
+    }
+}
+
+impl IndexSoftmax {
+    pub fn new(cfg: IndexSoftmaxConfig) -> Self {
+        IndexSoftmax { cfg, lut: ExpLut::new(cfg.b, cfg.c) }
+    }
+
+    /// Quantization-aligned integer clipping threshold (eq. 8):
+    /// `c_int = round(c / α)`, clamped to at least 1 so the index mapping is
+    /// well defined even for extreme scales.
+    pub fn c_int(&self, alpha: f32) -> i32 {
+        assert!(alpha > 0.0, "alpha must be positive");
+        let c_int = (self.cfg.c / alpha).round();
+        c_int.clamp(1.0, i32::MAX as f32) as i32
+    }
+
+    /// Full forward: INT32 logits → UINT8 probability matrix `P̂` (rows sum
+    /// to ≈255; exactly 0 in masked-out columns).
+    pub fn forward(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatU8 {
+        let mut out = MatU8::zeros(logits.rows(), logits.cols());
+        self.forward_into(logits, alpha, mask, &mut out);
+        out
+    }
+
+    /// Allocation-free forward for the serving hot path.
+    pub fn forward_into(&self, logits: &MatI32, alpha: f32, mask: Mask, out: &mut MatU8) {
+        assert_eq!((out.rows(), out.cols()), (logits.rows(), logits.cols()));
+        let c_int = self.c_int(alpha);
+        let l = logits.cols();
+        let n1 = self.lut.max_index() as u64;
+        // idx = round(Δ'·n1 / c_int): one MulShiftDiv per tensor.
+        let idx_div = MulShiftDiv::new(c_int as u64);
+        let table = &self.lut.u8_table;
+        let mut scratch: Vec<u8> = vec![0; l];
+
+        for r in 0..logits.rows() {
+            let valid = mask.valid_cols(r, l);
+            let row = &logits.row(r)[..valid];
+            // (1) row max over valid columns.
+            let m = *row.iter().max().expect("non-empty row");
+            // (2)–(4) clip, index, gather; accumulate the row sum (eq. 15's
+            // widened accumulator: u32 holds 255·L for any L ≤ 16.8M).
+            let mut sum: u32 = 0;
+            let e_row = &mut scratch[..valid];
+            for (e, &a) in e_row.iter_mut().zip(row) {
+                // Δ̂ = m − a ≥ 0; saturating guard for adversarial i32 ranges.
+                let delta = (m as i64 - a as i64) as u64;
+                let v = if delta >= c_int as u64 {
+                    // Clipped to the zero bucket — no gather needed.
+                    0u8
+                } else {
+                    let idx = idx_div.div_round(delta * n1) as usize;
+                    table[idx]
+                };
+                *e = v;
+                sum += v as u32;
+            }
+            // (5) integer normalization: P̂ = round(255·Ê / Σ Ê).
+            // Σ ≥ 255 always (the max element has Δ=0 → LUT[0]=255), so the
+            // division is well defined. One MulShiftDiv per row.
+            debug_assert!(sum >= 255);
+            let norm_div = MulShiftDiv::new(sum as u64);
+            let out_row = out.row_mut(r);
+            for (o, &e) in out_row[..valid].iter_mut().zip(e_row.iter()) {
+                *o = norm_div.div_round(255 * e as u64) as u8;
+            }
+            for o in out_row[valid..].iter_mut() {
+                *o = 0;
+            }
+        }
+    }
+
+    /// Group-wise forward (§3.3, eq. 16–18): `alphas[g]` is `α^(g)` for the
+    /// Q-row group of each row (e.g. per-row or per-row-block Q scales); the
+    /// LUT is shared, only `c_int^(g)` varies.
+    pub fn forward_grouped(
+        &self,
+        logits: &MatI32,
+        row_group: impl Fn(usize) -> usize,
+        alphas: &[f32],
+        mask: Mask,
+    ) -> MatU8 {
+        let mut out = MatU8::zeros(logits.rows(), logits.cols());
+        let l = logits.cols();
+        let n1 = self.lut.max_index() as u64;
+        let table = &self.lut.u8_table;
+        // Precompute per-group dividers (eq. 16's only extra bookkeeping).
+        let dividers: Vec<(i32, MulShiftDiv)> = alphas
+            .iter()
+            .map(|&a| {
+                let ci = self.c_int(a);
+                (ci, MulShiftDiv::new(ci as u64))
+            })
+            .collect();
+        let mut scratch: Vec<u8> = vec![0; l];
+        for r in 0..logits.rows() {
+            let (c_int, idx_div) = dividers[row_group(r)];
+            let valid = mask.valid_cols(r, l);
+            let row = &logits.row(r)[..valid];
+            let m = *row.iter().max().expect("non-empty row");
+            let mut sum: u32 = 0;
+            let e_row = &mut scratch[..valid];
+            for (e, &a) in e_row.iter_mut().zip(row) {
+                let delta = (m as i64 - a as i64) as u64;
+                let v = if delta >= c_int as u64 {
+                    0u8
+                } else {
+                    table[idx_div.div_round(delta * n1) as usize]
+                };
+                *e = v;
+                sum += v as u32;
+            }
+            let norm_div = MulShiftDiv::new(sum as u64);
+            let out_row = out.row_mut(r);
+            for (o, &e) in out_row[..valid].iter_mut().zip(e_row.iter()) {
+                *o = norm_div.div_round(255 * e as u64) as u8;
+            }
+        }
+        out
+    }
+
+    /// Float view of the produced probabilities (`P̂/255`) — used by the
+    /// fidelity evaluations, never by the runtime path.
+    pub fn forward_probs_f32(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatF32 {
+        self.forward(logits, alpha, mask).map(|v| v as f32 / 255.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    /// Scalar reference implementing eq. 7–15 with plain `/` and `f32::round`.
+    fn reference(logits: &MatI32, alpha: f32, cfg: IndexSoftmaxConfig, mask: Mask) -> MatU8 {
+        let lut = ExpLut::new(cfg.b, cfg.c);
+        let c_int = ((cfg.c / alpha).round() as i64).max(1);
+        let n1 = lut.max_index() as i64;
+        let l = logits.cols();
+        let mut out = MatU8::zeros(logits.rows(), l);
+        for r in 0..logits.rows() {
+            let valid = mask.valid_cols(r, l);
+            let row = &logits.row(r)[..valid];
+            let m = *row.iter().max().unwrap() as i64;
+            let e: Vec<u8> = row
+                .iter()
+                .map(|&a| {
+                    let delta = (m - a as i64).min(c_int);
+                    // round(delta·n1/c_int), ties away from zero:
+                    let idx = (delta * n1 * 2 + c_int) / (2 * c_int);
+                    lut.u8_table[idx as usize]
+                })
+                .collect();
+            let sum: i64 = e.iter().map(|&x| x as i64).sum();
+            for (c, &ev) in e.iter().enumerate() {
+                let p = (255 * ev as i64 * 2 + sum) / (2 * sum);
+                out.set(r, c, p as u8);
+            }
+        }
+        out
+    }
+
+    fn random_logits(rng: &mut Pcg64, rows: usize, cols: usize, spread: i32) -> MatI32 {
+        MatI32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| rng.range_i64(-(spread as i64), spread as i64 + 1) as i32)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn mulshift_div_matches_hardware_div() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        // Fast path: d < 2^25, x < 2^31 (minus headroom for div_round's +d/2).
+        for _ in 0..500 {
+            let d = rng.below(1 << 25).max(1);
+            let ms = MulShiftDiv::new(d);
+            for _ in 0..20 {
+                let x = rng.below((1 << 31) - (1 << 25));
+                assert_eq!(ms.div_floor(x), x / d, "x={x} d={d}");
+                assert_eq!(ms.div_round(x), (x + d / 2) / d, "x={x} d={d}");
+            }
+        }
+        // Wide path: large divisors, numerators up to 2^45.
+        for _ in 0..200 {
+            let d = (1 << 25) + rng.below(1 << 40);
+            let ms = MulShiftDiv::new(d);
+            for _ in 0..20 {
+                let x = rng.below(1 << 45);
+                assert_eq!(ms.div_floor(x), x / d, "x={x} d={d}");
+                assert_eq!(ms.div_round(x), (x + d / 2) / d, "x={x} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn c_int_formula() {
+        let ix = IndexSoftmax::default();
+        // α = s_Q·s_K/√d with c=6.6: c_int = round(6.6/α).
+        let alpha = 0.001f32;
+        assert_eq!(ix.c_int(alpha), 6600);
+        // Degenerate huge alpha still yields ≥ 1.
+        assert_eq!(ix.c_int(1e9), 1);
+    }
+
+    #[test]
+    fn matches_scalar_reference_randomized() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ix = IndexSoftmax::default();
+        for trial in 0..30 {
+            let rows = 1 + rng.below(8) as usize;
+            let cols = 1 + rng.below(64) as usize;
+            let spread = 1 + rng.below(30_000) as i32;
+            let alpha = rng.uniform(1e-5, 0.3);
+            let logits = random_logits(&mut rng, rows, cols, spread);
+            let got = ix.forward(&logits, alpha, Mask::None);
+            let want = reference(&logits, alpha, ix.cfg, Mask::None);
+            assert_eq!(got, want, "trial {trial} alpha={alpha}");
+        }
+    }
+
+    #[test]
+    fn rows_sum_close_to_255() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ix = IndexSoftmax::default();
+        let logits = random_logits(&mut rng, 16, 128, 20_000);
+        let p = ix.forward(&logits, 0.001, Mask::None);
+        for r in 0..16 {
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            // Integer rounding wobbles the sum slightly around 255.
+            assert!((s - 255).abs() <= 16, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn max_logit_gets_max_probability() {
+        let ix = IndexSoftmax::default();
+        let logits = MatI32::from_vec(1, 5, vec![10, 5000, 20, -3, 400]);
+        let p = ix.forward(&logits, 0.001, Mask::None);
+        let row = p.row(0);
+        let argmax = row.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        assert_eq!(argmax, 1);
+        assert!(row[1] > 200);
+    }
+
+    #[test]
+    fn clipped_tail_is_exactly_zero() {
+        let ix = IndexSoftmax::default();
+        // alpha=0.01 → c_int=660; distances ≥ 660 must produce P̂=0, and
+        // distances near the top of the range land in the zero bucket too.
+        let logits = MatI32::from_vec(1, 4, vec![1000, 900, 341, 0]);
+        let p = ix.forward(&logits, 0.01, Mask::None);
+        assert_eq!(p.get(0, 3), 0, "distance 1000 ≥ c_int clipped to zero");
+        assert_eq!(p.get(0, 2), 0, "distance 659 rounds into the zero bucket");
+        assert!(p.get(0, 1) > 0, "distance 100 survives: {:?}", p.row(0));
+    }
+
+    #[test]
+    fn uniform_logits_give_uniform_probs() {
+        let ix = IndexSoftmax::default();
+        let logits = MatI32::from_vec(1, 8, vec![42; 8]);
+        let p = ix.forward(&logits, 0.001, Mask::None);
+        let row = p.row(0);
+        assert!(row.iter().all(|&v| v == row[0]));
+        // 255/8 ≈ 31.9 → 32 after rounding.
+        assert!((row[0] as i32 - 32).abs() <= 1, "{:?}", row);
+    }
+
+    #[test]
+    fn causal_mask_zeroes_future_positions() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let ix = IndexSoftmax::default();
+        let logits = random_logits(&mut rng, 6, 6, 10_000);
+        let p = ix.forward(&logits, 0.001, Mask::Causal);
+        for r in 0..6 {
+            for c in 0..6 {
+                if c > r {
+                    assert_eq!(p.get(r, c), 0, "({r},{c}) must be masked");
+                }
+            }
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            assert!((s - 255).abs() <= 16, "row {r} sum {s}");
+        }
+        // First row attends only to itself.
+        assert_eq!(p.get(0, 0), 255);
+    }
+
+    #[test]
+    fn approximates_float_softmax() {
+        // Fidelity: cosine similarity with the exact softmax must be high
+        // for realistic attention-logit magnitudes.
+        let mut rng = Pcg64::seed_from_u64(5);
+        let ix = IndexSoftmax::default();
+        let l = 256;
+        let alpha = 0.004f32; // typical s_Q·s_K/√d for unit-normal Q,K @ d=64
+        let logits = MatI32::from_vec(
+            1,
+            l,
+            (0..l).map(|_| rng.normal_ms(0.0, 400.0) as i32).collect(),
+        );
+        let p_int = ix.forward_probs_f32(&logits, alpha, Mask::None);
+        // exact softmax of alpha-scaled logits:
+        let f: Vec<f32> = logits.as_slice().iter().map(|&a| a as f32 * alpha).collect();
+        let m = f.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = f.iter().map(|&x| (x - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let p_ref: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+        let cos = crate::util::stats::cosine_similarity(p_int.as_slice(), &p_ref);
+        assert!(cos > 0.985, "cos={cos}");
+    }
+
+    #[test]
+    fn grouped_matches_per_tensor_when_single_group() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let ix = IndexSoftmax::default();
+        let logits = random_logits(&mut rng, 8, 32, 15_000);
+        let alpha = 0.002;
+        let a = ix.forward(&logits, alpha, Mask::None);
+        let b = ix.forward_grouped(&logits, |_| 0, &[alpha], Mask::None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn grouped_uses_per_group_thresholds() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let ix = IndexSoftmax::default();
+        let logits = random_logits(&mut rng, 4, 32, 15_000);
+        // Two groups with very different alphas must differ from forcing
+        // either single alpha everywhere.
+        let grouped = ix.forward_grouped(&logits, |r| r / 2, &[0.001, 0.05], Mask::None);
+        let all_a = ix.forward(&logits, 0.001, Mask::None);
+        let all_b = ix.forward(&logits, 0.05, Mask::None);
+        assert_eq!(grouped.row(0), all_a.row(0));
+        assert_eq!(grouped.row(3), all_b.row(3));
+        assert_ne!(grouped.row(2), all_a.row(2));
+    }
+
+    #[test]
+    fn extreme_i32_logits_do_not_overflow() {
+        let ix = IndexSoftmax::default();
+        let logits = MatI32::from_vec(1, 3, vec![i32::MAX, i32::MIN, 0]);
+        let p = ix.forward(&logits, 0.001, Mask::None);
+        assert_eq!(p.get(0, 0), 255);
+        assert_eq!(p.get(0, 1), 0);
+    }
+
+    #[test]
+    fn single_column_row_is_certain() {
+        let ix = IndexSoftmax::default();
+        let logits = MatI32::from_vec(1, 1, vec![-12345]);
+        let p = ix.forward(&logits, 0.01, Mask::None);
+        assert_eq!(p.get(0, 0), 255);
+    }
+}

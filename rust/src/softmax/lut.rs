@@ -1,0 +1,207 @@
+//! Exponential lookup tables (paper eq. 10 and eq. 13).
+//!
+//! Over the clipped interval `[0, c]` the function `exp(−x)` is bounded, so a
+//! fixed-resolution table approximates it well. The table has `2^b` entries:
+//!
+//! ```text
+//! LUT[i] = exp(−c·i / (2^b − 1))   for 0 ≤ i < 2^b − 1
+//! LUT[2^b − 1] = 0                 (the "clipped away" bucket)
+//! ```
+//!
+//! and is additionally quantized to UINT8 (`round(255·LUT)`, eq. 13) so the
+//! whole softmax path stays 8-bit. With the paper's recommended `(b, c) =
+//! (5, 6.6)` this is a 32-entry, 32-byte table.
+
+/// Paper-recommended LUT resolution: `b = 5` → 32 entries (§4.4).
+pub const DEFAULT_B: u32 = 5;
+/// Paper-recommended clipping threshold `c = 6.6` (§4.4, Fig. 9 ridge).
+pub const DEFAULT_C: f32 = 6.6;
+
+/// A float + UINT8 exponential LUT pair over `[0, c]`.
+#[derive(Clone, Debug)]
+pub struct ExpLut {
+    /// Resolution exponent; table has `2^b` entries.
+    pub b: u32,
+    /// Continuous clipping bound `c`.
+    pub c: f32,
+    /// Float table (eq. 10).
+    pub f32_table: Vec<f32>,
+    /// UINT8 table (eq. 13): `round(255 · f32_table[i])`.
+    pub u8_table: Vec<u8>,
+}
+
+impl ExpLut {
+    /// Build the table for resolution `b` (entries = 2^b) and bound `c`.
+    pub fn new(b: u32, c: f32) -> Self {
+        assert!((1..=16).contains(&b), "b must be in 1..=16");
+        assert!(c > 0.0, "clipping bound must be positive");
+        let n = 1usize << b;
+        let mut f32_table = Vec::with_capacity(n);
+        for i in 0..n {
+            if i == n - 1 {
+                // Last entry is the saturation bucket: exactly zero (eq. 10).
+                f32_table.push(0.0);
+            } else {
+                let x = c * i as f32 / (n - 1) as f32;
+                f32_table.push((-x).exp());
+            }
+        }
+        let u8_table = f32_table.iter().map(|&v| (255.0 * v).round() as u8).collect();
+        ExpLut { b, c, f32_table, u8_table }
+    }
+
+    /// The paper's default 32-entry table.
+    pub fn paper_default() -> Self {
+        Self::new(DEFAULT_B, DEFAULT_C)
+    }
+
+    /// Number of entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.f32_table.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Memory footprint of the UINT8 table in bytes (32 B at b=5 — the
+    /// Figure 5 comparison point).
+    pub fn u8_bytes(&self) -> usize {
+        self.u8_table.len()
+    }
+
+    /// Max index (`2^b − 1`).
+    #[inline]
+    pub fn max_index(&self) -> u32 {
+        (self.len() - 1) as u32
+    }
+
+    /// Worst-case absolute error of the UINT8 table against `exp(−x)` over a
+    /// dense grid of `[0, c]` — the Figure 5 fidelity metric.
+    pub fn max_abs_error_u8(&self) -> f64 {
+        self.max_abs_error_of(|x| self.lookup_u8_cont(x) as f64 / 255.0)
+    }
+
+    /// Same for the float table.
+    pub fn max_abs_error_f32(&self) -> f64 {
+        self.max_abs_error_of(|x| self.lookup_f32_cont(x) as f64)
+    }
+
+    fn max_abs_error_of(&self, approx: impl Fn(f32) -> f64) -> f64 {
+        let samples = 4096;
+        let mut worst = 0.0f64;
+        for s in 0..=samples {
+            let x = self.c * s as f32 / samples as f32;
+            let truth = (-x as f64).exp();
+            let got = approx(x);
+            worst = worst.max((truth - got).abs());
+        }
+        worst
+    }
+
+    /// Continuous lookup helpers (for error analysis, not the hot path —
+    /// the hot path indexes with precomputed integer indices).
+    pub fn lookup_f32_cont(&self, x: f32) -> f32 {
+        self.f32_table[self.index_of(x)]
+    }
+
+    pub fn lookup_u8_cont(&self, x: f32) -> u8 {
+        self.u8_table[self.index_of(x)]
+    }
+
+    fn index_of(&self, x: f32) -> usize {
+        let n1 = self.max_index() as f32;
+        let idx = (x.clamp(0.0, self.c) / self.c * n1).round() as usize;
+        idx.min(self.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_32_entries_32_bytes() {
+        let lut = ExpLut::paper_default();
+        assert_eq!(lut.len(), 32);
+        assert_eq!(lut.u8_bytes(), 32);
+        assert_eq!(lut.max_index(), 31);
+    }
+
+    #[test]
+    fn first_entry_is_one_last_is_zero() {
+        let lut = ExpLut::new(5, 6.6);
+        assert_eq!(lut.f32_table[0], 1.0);
+        assert_eq!(lut.u8_table[0], 255);
+        assert_eq!(lut.f32_table[31], 0.0);
+        assert_eq!(lut.u8_table[31], 0);
+    }
+
+    #[test]
+    fn table_is_monotone_decreasing() {
+        for b in [2u32, 3, 4, 5, 6, 8] {
+            let lut = ExpLut::new(b, 6.6);
+            for w in lut.f32_table.windows(2) {
+                assert!(w[0] >= w[1], "b={b}");
+            }
+            for w in lut.u8_table.windows(2) {
+                assert!(w[0] >= w[1], "b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn entries_match_formula() {
+        let lut = ExpLut::new(5, 6.6);
+        for i in 0..31 {
+            let expect = (-(6.6 * i as f32 / 31.0)).exp();
+            assert!((lut.f32_table[i] - expect).abs() < 1e-6, "i={i}");
+            assert_eq!(lut.u8_table[i], (255.0 * expect).round() as u8);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_resolution() {
+        // Figure 5's claim: more entries under the same byte budget → better
+        // fidelity. b=5 (ours) must beat b=3 (EXAQ INT3's 8 entries).
+        let e3 = ExpLut::new(3, 6.6).max_abs_error_u8();
+        let e5 = ExpLut::new(5, 6.6).max_abs_error_u8();
+        let e8 = ExpLut::new(8, 6.6).max_abs_error_f32();
+        assert!(e5 < e3, "b=5 err {e5} !< b=3 err {e3}");
+        assert!(e8 < e5, "b=8 f32 err {e8} !< b=5 u8 err {e5}");
+        // Quantitative: paper claims 4× resolution ⇒ roughly 4× finer error.
+        assert!(e3 / e5 > 2.0, "ratio {}", e3 / e5);
+    }
+
+    #[test]
+    fn u8_error_floor_is_half_lsb() {
+        // With many entries, the u8 table error approaches the quantization
+        // floor 1/510 ≈ 0.00196 — more float precision stops helping (the
+        // paper's argument for not using an FP LUT at all).
+        let e = ExpLut::new(10, 6.6).max_abs_error_u8();
+        // bucket half-width (~c/2^10/2 ≈ 0.0032 near x=0) + u8 LSB/2
+        assert!(e < 0.006, "e={e}");
+        assert!(e >= 1.0 / 512.0 / 2.0, "e={e}");
+    }
+
+    #[test]
+    fn continuous_lookup_clamps() {
+        let lut = ExpLut::new(5, 6.6);
+        assert_eq!(lut.lookup_f32_cont(-1.0), 1.0);
+        assert_eq!(lut.lookup_f32_cont(100.0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "b must be")]
+    fn rejects_zero_b() {
+        let _ = ExpLut::new(0, 6.6);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_c() {
+        let _ = ExpLut::new(5, 0.0);
+    }
+}

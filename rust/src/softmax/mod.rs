@@ -1,0 +1,20 @@
+//! The softmax-path operators — where the paper's contribution lives.
+//!
+//! * [`lut`] — lookup-table construction (paper eq. 10 and eq. 13).
+//! * [`index_softmax`] — **IndexSoftmax**: integer-domain clipping, LUT
+//!   exponentiation and integer scale normalization (paper eq. 7–15, §3.1–3.2).
+//! * [`float_softmax`] — numerically stable FP32/FP16 softmax (paper eq. 6),
+//!   the baseline operator in the FP32/FP16/Quant-Only pipelines.
+//! * [`exaq`] — the EXAQ comparator (Shkolnik et al. 2024): ultra-low-bit
+//!   LUT (INT2/INT3) with dynamic, statistics-driven clipping.
+//! * [`softermax`] — the hardware-co-design comparator (Stevens et al.
+//!   2021): `2^x` via shift + fixed-point fractional correction.
+
+pub mod lut;
+pub mod index_softmax;
+pub mod float_softmax;
+pub mod exaq;
+pub mod softermax;
+
+pub use index_softmax::{IndexSoftmax, IndexSoftmaxConfig};
+pub use lut::{ExpLut, DEFAULT_B, DEFAULT_C};

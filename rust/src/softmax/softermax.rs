@@ -1,0 +1,193 @@
+//! Softermax baseline (Stevens et al., DAC 2021) — the hardware-co-design
+//! softmax family the paper surveys in §2.3: replace `e^x` with `2^x` so
+//! exponentiation becomes an integer shift plus a small fractional
+//! correction, and normalize with fixed-point arithmetic.
+//!
+//! Implemented here as a third comparator for the softmax-ablation studies:
+//! like IndexSoftmax it avoids `exp()`, but unlike IndexSoftmax it needs a
+//! per-element shift + polynomial rather than a single table gather, and the
+//! paper's point stands — it was designed for dedicated accelerator logic,
+//! not commodity integer SIMD.
+
+use crate::softmax::index_softmax::Mask;
+use crate::tensor::{MatF32, MatI32, MatU8};
+
+/// Softermax operator over INT32 logits (same interface as the other
+/// integer softmax operators so it can slot into the ablation benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Softermax;
+
+/// Fixed-point fractional `2^f` for `f ∈ [0, 1)` in Q8: a 2-term
+/// minimax-ish polynomial `2^f ≈ 1 + f·(0.6565 + 0.3435·f)` — max abs error
+/// ≈ 0.3 % over the interval, matching Softermax's low-order correction.
+#[inline]
+fn pow2_frac_q8(frac_q8: u32) -> u32 {
+    // all in Q8 fixed point
+    let f = frac_q8 & 0xFF;
+    let c1 = 168; // 0.6565 in Q8
+    let c2 = 88;  // 0.3435 in Q8
+    let poly = c1 + ((c2 * f) >> 8);
+    256 + ((f * poly) >> 8)
+}
+
+impl Softermax {
+    /// `P̂ = round(255 · 2^(α̂·(Â−m)) / Σ 2^(α̂·(Â−m)))` where `α̂ = α·log2 e`
+    /// folds the base conversion into the scale. The `2^x` evaluation is an
+    /// integer shift by the integer part plus the Q8 fractional correction.
+    pub fn forward(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatU8 {
+        assert!(alpha > 0.0);
+        let l = logits.cols();
+        let mut out = MatU8::zeros(logits.rows(), l);
+        // Per-element exponent in Q8: x_q8 = (m − a)·alpha·log2(e)·256,
+        // computed with one fixed-point multiplier per tensor.
+        let scale_q8 = (alpha as f64 * std::f64::consts::LOG2_E * 256.0 * 65536.0) as u64; // Q8<<16
+        for r in 0..logits.rows() {
+            let valid = mask.valid_cols(r, l);
+            let row = &logits.row(r)[..valid];
+            let m = *row.iter().max().expect("non-empty row") as i64;
+            // 2^(−x) in Q24 per element; sum in Q24.
+            let mut vals = vec![0u32; valid];
+            let mut sum: u64 = 0;
+            for (o, &a) in vals.iter_mut().zip(row) {
+                let delta = (m - a as i64) as u64;
+                let x_q8 = (delta.saturating_mul(scale_q8)) >> 16; // Q8
+                let int_part = (x_q8 >> 8) as u32;
+                if int_part >= 24 {
+                    *o = 0; // below Q24 resolution — the 2^x sparsity
+                } else {
+                    let frac = pow2_frac_q8(x_q8 as u32); // 2^frac in Q8, [256, 512)
+                    // 2^(−x) = 2^(−int) · 2^(−frac) = (2^8/frac) scaled:
+                    // represent as Q24: (1<<24) >> int_part, then divide by
+                    // the fractional factor (frac/256).
+                    *o = ((1u64 << 32) / frac as u64 >> int_part) as u32;
+                }
+                sum += *o as u64;
+            }
+            let out_row = out.row_mut(r);
+            for (o, &v) in out_row[..valid].iter_mut().zip(&vals) {
+                *o = (((255 * v as u64) * 2 + sum) / (2 * sum)) as u8;
+            }
+            for o in out_row[valid..].iter_mut() {
+                *o = 0;
+            }
+        }
+        out
+    }
+
+    /// Float view for fidelity metrics.
+    pub fn forward_probs_f32(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatF32 {
+        self.forward(logits, alpha, mask).map(|v| v as f32 / 255.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::index_softmax::IndexSoftmax;
+    use crate::util::prng::Pcg64;
+
+    fn gaussian_logits(rng: &mut Pcg64, rows: usize, cols: usize, std: f32) -> MatI32 {
+        MatI32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal_ms(0.0, std) as i32).collect(),
+        )
+    }
+
+    fn exact_probs(logits: &MatI32, alpha: f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        for r in 0..logits.rows() {
+            let f: Vec<f32> = logits.row(r).iter().map(|&a| a as f32 * alpha).collect();
+            let m = f.iter().cloned().fold(f32::MIN, f32::max);
+            let e: Vec<f32> = f.iter().map(|&x| (x - m).exp()).collect();
+            let z: f32 = e.iter().sum();
+            out.extend(e.iter().map(|&x| x / z));
+        }
+        out
+    }
+
+    #[test]
+    fn pow2_frac_endpoints() {
+        // 2^0 = 1.0 (Q8 = 256); 2^(255/256) ≈ 1.9946 (Q8 ≈ 511).
+        assert_eq!(pow2_frac_q8(0), 256);
+        let hi = pow2_frac_q8(255);
+        assert!((500..=512).contains(&hi), "hi={hi}");
+        // Monotone over the interval.
+        let mut prev = 0;
+        for f in 0..=255 {
+            let v = pow2_frac_q8(f);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn rows_sum_close_to_255() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let sm = Softermax;
+        let logits = gaussian_logits(&mut rng, 8, 64, 400.0);
+        let p = sm.forward(&logits, 0.004, Mask::None);
+        for r in 0..8 {
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            assert!((s - 255).abs() <= 20, "row {r} sum {s}");
+        }
+    }
+
+    #[test]
+    fn tracks_exact_softmax() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let sm = Softermax;
+        let logits = gaussian_logits(&mut rng, 4, 256, 400.0);
+        let p = sm.forward_probs_f32(&logits, 0.004, Mask::None);
+        let want = exact_probs(&logits, 0.004);
+        let cos = crate::util::stats::cosine_similarity(p.as_slice(), &want);
+        assert!(cos > 0.98, "cos={cos}");
+    }
+
+    #[test]
+    fn max_logit_dominates() {
+        let sm = Softermax;
+        let logits = MatI32::from_vec(1, 4, vec![5000, 100, 0, -400]);
+        let p = sm.forward(&logits, 0.002, Mask::None);
+        assert!(p.get(0, 0) > 200, "{:?}", p.row(0));
+        assert_eq!(p.get(0, 3), 0);
+    }
+
+    #[test]
+    fn causal_mask_respected() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let sm = Softermax;
+        let logits = gaussian_logits(&mut rng, 5, 5, 300.0);
+        let p = sm.forward(&logits, 0.004, Mask::Causal);
+        for r in 0..5 {
+            for c in (r + 1)..5 {
+                assert_eq!(p.get(r, c), 0);
+            }
+        }
+        assert_eq!(p.get(0, 0), 255);
+    }
+
+    #[test]
+    fn comparable_fidelity_to_index_softmax_on_peaked_rows() {
+        // Softermax's 2^x with polynomial correction is a *finer* pointwise
+        // approximation than a 32-entry LUT; IndexSoftmax wins on cost, not
+        // accuracy. Verify Softermax is at least in the same fidelity class.
+        let mut rng = Pcg64::seed_from_u64(4);
+        let logits = gaussian_logits(&mut rng, 8, 128, 500.0);
+        let want = exact_probs(&logits, 0.004);
+        let p_sm = Softermax.forward_probs_f32(&logits, 0.004, Mask::None);
+        let p_ix = IndexSoftmax::default().forward_probs_f32(&logits, 0.004, Mask::None);
+        let cos_sm = crate::util::stats::cosine_similarity(p_sm.as_slice(), &want);
+        let cos_ix = crate::util::stats::cosine_similarity(p_ix.as_slice(), &want);
+        assert!(cos_sm > 0.99, "softermax cos={cos_sm}");
+        assert!(cos_ix > 0.99, "indexsoftmax cos={cos_ix}");
+    }
+
+    #[test]
+    fn degenerate_uniform_rows() {
+        let sm = Softermax;
+        let logits = MatI32::from_vec(1, 8, vec![7; 8]);
+        let p = sm.forward(&logits, 0.01, Mask::None);
+        assert!(p.row(0).iter().all(|&v| (v as i32 - 32).abs() <= 1));
+    }
+}

@@ -1,0 +1,230 @@
+//! Row-major matrix types used throughout the attention pipelines.
+//!
+//! Attention operates head-by-head on 2-D slabs, so the core type is a
+//! generic row-major [`Mat<T>`] with typed aliases for the element types the
+//! paper's dataflow uses: `f32` activations, software-f16 storage, `i8`
+//! quantized Q/K/V, `u8` probabilities, and `i32` accumulators/logits.
+
+use crate::util::f16::F16;
+
+/// A dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+pub type MatF32 = Mat<f32>;
+pub type MatF16 = Mat<F16>;
+pub type MatI8 = Mat<i8>;
+pub type MatU8 = Mat<u8>;
+pub type MatI32 = Mat<i32>;
+
+impl<T: Copy + Default> Mat<T> {
+    /// Zero-filled (default-filled) matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    /// Build from an existing buffer; `data.len()` must equal `rows*cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        debug_assert!(r < self.rows);
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// The whole backing buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Transposed copy. Used once per forward to lay K out column-major for
+    /// the GEMM microkernels (so the inner loops stream contiguously).
+    pub fn transpose(&self) -> Mat<T> {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            let src = self.row(r);
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Two disjoint row-range views `(rows[..mid], rows[mid..])`.
+    pub fn split_rows_mut(&mut self, mid: usize) -> (&mut [T], &mut [T]) {
+        assert!(mid <= self.rows);
+        self.data.split_at_mut(mid * self.cols)
+    }
+
+    /// Map every element.
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Mat<U> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl MatF32 {
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt()
+    }
+
+    /// Max |x| over all elements (the per-tensor dynamic-quantization range).
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Elementwise approximate equality.
+    pub fn allclose(&self, other: &MatF32, atol: f32, rtol: f32) -> bool {
+        if self.rows != other.rows || self.cols != other.cols {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(&a, &b)| {
+            (a - b).abs() <= atol + rtol * b.abs()
+        })
+    }
+
+    /// Convert to f16 storage.
+    pub fn to_f16(&self) -> MatF16 {
+        self.map(F16::from_f32)
+    }
+}
+
+impl MatF16 {
+    /// Convert back to f32.
+    pub fn to_f32(&self) -> MatF32 {
+        self.map(|h| h.to_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_access() {
+        let mut m = MatF32::zeros(3, 4);
+        assert_eq!((m.rows(), m.cols(), m.len()), (3, 4, 12));
+        m.set(2, 3, 7.5);
+        assert_eq!(m.get(2, 3), 7.5);
+        assert_eq!(m.row(2)[3], 7.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer size mismatch")]
+    fn from_vec_checks_size() {
+        let _ = MatF32::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = MatI32::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]);
+        let t = m.transpose();
+        assert_eq!((t.rows(), t.cols()), (3, 2));
+        assert_eq!(t.get(0, 1), 4);
+        assert_eq!(t.get(2, 0), 3);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn abs_max_and_frobenius() {
+        let m = MatF32::from_vec(1, 4, vec![3.0, -4.0, 0.0, 2.0]);
+        assert_eq!(m.abs_max(), 4.0);
+        assert!((m.frobenius() - (29.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = MatF32::from_vec(1, 2, vec![1.0, 100.0]);
+        let b = MatF32::from_vec(1, 2, vec![1.0005, 100.05]);
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+        assert!(!a.allclose(&b, 1e-5, 1e-6));
+        let c = MatF32::zeros(2, 1);
+        assert!(!a.allclose(&c, 1.0, 1.0)); // shape mismatch
+    }
+
+    #[test]
+    fn f16_round_trip_precision() {
+        let m = MatF32::from_vec(1, 3, vec![0.5, -1.25, 1000.0]);
+        let back = m.to_f16().to_f32();
+        assert!(m.allclose(&back, 1e-6, 1e-3));
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let m = MatF32::from_vec(1, 3, vec![1.4, -2.6, 3.5]);
+        let q: MatI8 = m.map(|x| x.round() as i8);
+        assert_eq!(q.as_slice(), &[1, -3, 4]);
+    }
+
+    #[test]
+    fn split_rows_mut_disjoint() {
+        let mut m = MatI32::from_vec(3, 2, vec![1, 2, 3, 4, 5, 6]);
+        let (top, bottom) = m.split_rows_mut(1);
+        assert_eq!(top, &[1, 2]);
+        assert_eq!(bottom, &[3, 4, 5, 6]);
+        top[0] = 10;
+        bottom[0] = 30;
+        assert_eq!(m.get(0, 0), 10);
+        assert_eq!(m.get(1, 0), 30);
+    }
+}

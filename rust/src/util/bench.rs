@@ -1,0 +1,218 @@
+//! Criterion-style micro/macro-benchmark harness (criterion is not in the
+//! offline cache). Used by every `cargo bench` target.
+//!
+//! Design: warmup runs until the clock stabilizes, then an adaptive number
+//! of timed iterations bounded by both a target wall-clock budget and a
+//! minimum sample count; reports mean/σ/percentiles through
+//! [`crate::util::stats::Summary`].
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Harness configuration; tuned for this 1-core host (see DESIGN.md §2).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Minimum timed samples per benchmark.
+    pub min_samples: usize,
+    /// Maximum timed samples.
+    pub max_samples: usize,
+    /// Wall-clock budget per benchmark (warmup excluded).
+    pub budget: Duration,
+    /// Warmup budget.
+    pub warmup: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            min_samples: 3,
+            max_samples: 30,
+            budget: Duration::from_secs(2),
+            warmup: Duration::from_millis(200),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Budget scaled for heavyweight end-to-end cases (long sequence sweeps).
+    pub fn heavy() -> Self {
+        BenchConfig {
+            min_samples: 2,
+            max_samples: 8,
+            budget: Duration::from_secs(4),
+            warmup: Duration::from_millis(100),
+        }
+    }
+
+    /// Fast config for CI smoke runs (`INTATTN_BENCH_FAST=1`).
+    pub fn fast() -> Self {
+        BenchConfig {
+            min_samples: 1,
+            max_samples: 3,
+            budget: Duration::from_millis(300),
+            warmup: Duration::from_millis(20),
+        }
+    }
+
+    /// Honor the `INTATTN_BENCH_FAST` env toggle.
+    pub fn from_env(base: Self) -> Self {
+        if std::env::var("INTATTN_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+            Self::fast()
+        } else {
+            base
+        }
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-sample wall times in milliseconds.
+    pub samples_ms: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Time `f` under `cfg`, returning a [`Measurement`].
+///
+/// `f` receives the sample index; its return value is black-boxed to keep
+/// the optimizer from eliding the work.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut(usize) -> T) -> Measurement {
+    // Warmup.
+    let w0 = Instant::now();
+    let mut warm_iters = 0usize;
+    while w0.elapsed() < cfg.warmup && warm_iters < cfg.max_samples {
+        black_box(f(usize::MAX));
+        warm_iters += 1;
+    }
+
+    let mut samples = Vec::with_capacity(cfg.max_samples);
+    let t0 = Instant::now();
+    for i in 0..cfg.max_samples {
+        let s0 = Instant::now();
+        black_box(f(i));
+        samples.push(s0.elapsed().as_secs_f64() * 1e3);
+        if samples.len() >= cfg.min_samples && t0.elapsed() > cfg.budget {
+            break;
+        }
+    }
+    let summary = Summary::of(&samples);
+    Measurement { name: name.to_string(), samples_ms: samples, summary }
+}
+
+/// Identity function the optimizer must assume has side effects.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Table printer for bench binaries: fixed-width, paper-style rows.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_at_least_min_samples() {
+        let cfg = BenchConfig { min_samples: 3, max_samples: 10, budget: Duration::ZERO, warmup: Duration::ZERO };
+        let m = bench("noop", cfg, |_| 1 + 1);
+        assert!(m.samples_ms.len() >= 3);
+        assert!(m.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_respects_max_samples() {
+        let cfg = BenchConfig {
+            min_samples: 1,
+            max_samples: 5,
+            budget: Duration::from_secs(100),
+            warmup: Duration::ZERO,
+        };
+        let m = bench("noop", cfg, |_| ());
+        assert!(m.samples_ms.len() <= 5);
+    }
+
+    #[test]
+    fn bench_times_are_plausible() {
+        let cfg = BenchConfig::fast();
+        let m = bench("sleep", cfg, |_| std::thread::sleep(Duration::from_millis(3)));
+        assert!(m.mean_ms() >= 2.5, "mean={}", m.mean_ms());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["L", "ms"]);
+        t.row(vec!["1024".into(), "3.14".into()]);
+        t.row(vec!["16384".into(), "200.00".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("16384"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains("  ")).collect();
+        assert!(lines.len() >= 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,308 @@
+//! A small command-line argument parser (clap is not in the offline cache).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands; generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--seq-lens 1024,2048`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Command definition: name, help, options.
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.to_string(), about: about.to_string(), opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(String::from),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("  {:<18} {}\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("--{}", o.name)
+            } else {
+                format!("--{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("      {:<24} {}{}\n", head, o.help, def));
+        }
+        s
+    }
+
+    /// Parse raw tokens against this command's spec.
+    pub fn parse(&self, tokens: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(body) = t.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key} for '{}'", self.name))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} is a flag and takes no value");
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+/// Top-level app: a set of subcommands.
+pub struct App {
+    pub name: String,
+    pub about: String,
+    commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &str, about: &str) -> Self {
+        App { name: name.to_string(), about: about.to_string(), commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [options]\n\nCOMMANDS:\n", self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&c.usage());
+        }
+        s
+    }
+
+    /// Dispatch: returns (command name, parsed args) or prints usage.
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<(String, Args)> {
+        let Some(cmd_name) = argv.first() else {
+            anyhow::bail!("{}", self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            anyhow::bail!("{}", self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == *cmd_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+        let args = cmd.parse(&argv[1..])?;
+        Ok((cmd.name.clone(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn demo_cmd() -> Command {
+        Command::new("bench", "run a benchmark")
+            .opt("seq-len", "sequence length", Some("1024"))
+            .opt("pipeline", "which pipeline", None)
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = demo_cmd().parse(&toks(&[])).unwrap();
+        assert_eq!(a.get("seq-len"), Some("1024"));
+        assert_eq!(a.get("pipeline"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = demo_cmd()
+            .parse(&toks(&["--seq-len", "2048", "--pipeline=int"]))
+            .unwrap();
+        assert_eq!(a.get("seq-len"), Some("2048"));
+        assert_eq!(a.get("pipeline"), Some("int"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = demo_cmd().parse(&toks(&["--verbose", "input.txt"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["input.txt".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = demo_cmd().parse(&toks(&["--seq-len", "4096"])).unwrap();
+        assert_eq!(a.get_usize("seq-len", 0).unwrap(), 4096);
+        assert!(demo_cmd()
+            .parse(&toks(&["--seq-len", "abc"]))
+            .unwrap()
+            .get_usize("seq-len", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Command::new("x", "").opt("ls", "lens", Some("1,2,3"));
+        let a = c.parse(&toks(&[])).unwrap();
+        assert_eq!(a.get_usize_list("ls", &[]).unwrap(), vec![1, 2, 3]);
+        let a = c.parse(&toks(&["--ls", "256, 512"])).unwrap();
+        assert_eq!(a.get_usize_list("ls", &[]).unwrap(), vec![256, 512]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(demo_cmd().parse(&toks(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(demo_cmd().parse(&toks(&["--pipeline"])).is_err());
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App::new("intattn", "edge attention engine")
+            .command(demo_cmd())
+            .command(Command::new("serve", "start the engine"));
+        let (name, a) = app
+            .parse(&toks(&["bench", "--seq-len", "128"]))
+            .unwrap();
+        assert_eq!(name, "bench");
+        assert_eq!(a.get("seq-len"), Some("128"));
+        assert!(app.parse(&toks(&["bogus"])).is_err());
+        assert!(app.parse(&toks(&[])).is_err()); // prints usage via error
+    }
+
+    #[test]
+    fn usage_lists_commands_and_defaults() {
+        let app = App::new("intattn", "x").command(demo_cmd());
+        let u = app.usage();
+        assert!(u.contains("bench"));
+        assert!(u.contains("default: 1024"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Software IEEE-754 binary16 ("half", FP16).
+//!
+//! The `half` crate is not in the offline cache and this x86 host has no
+//! scalar f16 ALU, so the FP16 baseline pipeline stores activations as
+//! bit-exact binary16 and computes in f32 — the same storage-bandwidth
+//! profile as a real FP16 edge path (see DESIGN.md §2). Conversions follow
+//! round-to-nearest-even, with correct handling of subnormals, infinities
+//! and NaN.
+
+/// A 16-bit IEEE binary16 value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite f16 = 65504.
+    pub const MAX: F16 = F16(0x7BFF);
+
+    #[inline]
+    pub fn from_f32(x: f32) -> F16 {
+        F16(f32_to_f16_bits(x))
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_bits_to_f32(self.0)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x03FF) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+/// f32 → f16 bits, round-to-nearest-even (branchful but clear; the bulk
+/// conversions below are what the hot paths use and autovectorize well).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN — preserve NaN-ness with a quiet mantissa bit.
+        return if mant == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+
+    // Unbiased exponent, rebiased for f16 (bias 15 vs 127).
+    let unbiased = exp - 127;
+    let f16_exp = unbiased + 15;
+
+    if f16_exp >= 0x1F {
+        // Overflow → infinity.
+        return sign | 0x7C00;
+    }
+
+    if f16_exp <= 0 {
+        // Subnormal or underflow to zero.
+        if f16_exp < -10 {
+            return sign; // too small: signed zero
+        }
+        // Implicit leading 1 becomes explicit, then shift right.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - f16_exp) as u32;
+        let half_ulp = 1u32 << (shift - 1);
+        let mut half_mant = m >> shift;
+        let rem = m & ((1 << shift) - 1);
+        // Round to nearest even.
+        if rem > half_ulp || (rem == half_ulp && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        return sign | half_mant as u16;
+    }
+
+    // Normal number: keep top 10 mantissa bits, round-to-nearest-even.
+    let mut out = ((f16_exp as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out += 1; // may carry into exponent — that is correct (rounds up to inf)
+    }
+    sign | out as u16
+}
+
+/// f16 bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((127 - 15 + e + 2) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Bulk conversion f32 slice → f16 vec.
+pub fn encode_slice(xs: &[f32]) -> Vec<F16> {
+    xs.iter().map(|&x| F16::from_f32(x)).collect()
+}
+
+/// Bulk conversion f16 slice → f32, into a caller-provided buffer.
+pub fn decode_into(h: &[F16], out: &mut [f32]) {
+    assert_eq!(h.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(h) {
+        *o = v.to_f32();
+    }
+}
+
+/// Round-trip an f32 through f16 precision ("fp16 quantization" of a value).
+#[inline]
+pub fn round_f32_to_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_round_trip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(round_f32_to_f16(x), x, "i={i}");
+        }
+    }
+
+    #[test]
+    fn one_and_constants() {
+        assert_eq!(F16::ONE.to_f32(), 1.0);
+        assert_eq!(F16::from_f32(1.0), F16::ONE);
+        assert_eq!(F16::MAX.to_f32(), 65504.0);
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert!(F16::from_f32(1e6).is_infinite());
+        assert!(F16::from_f32(-1e6).is_infinite());
+        assert_eq!(F16::from_f32(65520.0), F16::INFINITY); // rounds up past MAX
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::NAN.to_f32().is_nan());
+    }
+
+    #[test]
+    fn signed_zero() {
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f32(0.0).0, 0x0000);
+    }
+
+    #[test]
+    fn subnormals_round_trip() {
+        // Smallest positive subnormal f16 = 2^-24.
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(F16::from_f32(tiny).0, 1);
+        assert_eq!(f16_bits_to_f32(1), tiny);
+        // Largest subnormal.
+        let big_sub = f16_bits_to_f32(0x03FF);
+        assert_eq!(F16::from_f32(big_sub).0, 0x03FF);
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        assert_eq!(F16::from_f32(1e-12).0, 0);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between two f16 values; ties to even
+        // keep the mantissa even (i.e. 1.0).
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(round_f32_to_f16(x), 1.0);
+        // 1 + 3·2^-11 is halfway as well but rounds up to the even neighbor.
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(round_f32_to_f16(y), 1.0 + 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn all_f16_bit_patterns_round_trip_through_f32() {
+        // Every finite f16 must survive f16→f32→f16 exactly.
+        for bits in 0..=0xFFFFu32 {
+            let h = F16(bits as u16);
+            if h.is_nan() {
+                continue;
+            }
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(back.0, h.0, "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        // f16 has 11 significand bits → rel error ≤ 2^-11.
+        let mut x = 1.0e-4f32;
+        while x < 6.0e4 {
+            let r = round_f32_to_f16(x);
+            let rel = ((r - x) / x).abs();
+            assert!(rel <= 2.0f32.powi(-11), "x={x} r={r} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn bulk_encode_decode() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let h = encode_slice(&xs);
+        let mut back = vec![0.0f32; xs.len()];
+        decode_into(&h, &mut back);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= a.abs() * 2.0f32.powi(-11) + 1e-6);
+        }
+    }
+}

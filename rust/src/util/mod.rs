@@ -1,0 +1,17 @@
+//! Substrate utilities.
+//!
+//! This image's offline crate cache ships neither `rand`, `serde`, `clap`,
+//! `tokio`, `criterion` nor `proptest`, so the pieces of those crates this
+//! project needs are implemented here from scratch (see DESIGN.md §3,
+//! "Offline-cache constraint").
+
+pub mod prng;
+pub mod stats;
+pub mod timer;
+pub mod f16;
+pub mod json;
+pub mod cli;
+pub mod threadpool;
+pub mod proptest;
+pub mod bench;
+pub mod logging;

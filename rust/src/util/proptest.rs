@@ -1,0 +1,100 @@
+//! A miniature property-testing driver (`proptest` is not in the offline
+//! cache). Runs a property against many PRNG-generated cases and, on
+//! failure, reports the seed so the case reproduces exactly.
+//!
+//! ```
+//! use intattention::util::proptest::{check, Config};
+//! check("add is commutative", Config::default(), |rng| {
+//!     let a = rng.range_i64(-1000, 1000);
+//!     let b = rng.range_i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::prng::Pcg64;
+
+/// Driver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, base_seed: 0xC0FFEE }
+    }
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Self {
+        Config { cases: n, ..Default::default() }
+    }
+}
+
+/// Run `property` against `cfg.cases` seeded PRNGs. Panics (with the failing
+/// seed in the message) if any case panics.
+pub fn check<F>(name: &str, cfg: Config, property: F)
+where
+    F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe,
+{
+    for i in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            property(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {i} (reproduce with seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", Config::cases(16), |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", Config::cases(4), |_| {
+                panic!("boom");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("reproduce with seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_use_distinct_seeds() {
+        use std::sync::Mutex;
+        let seen = Mutex::new(Vec::new());
+        check("collect first draws", Config::cases(8), |rng| {
+            seen.lock().unwrap().push(rng.next_u64());
+        });
+        let v = seen.lock().unwrap();
+        let mut uniq = v.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), v.len());
+    }
+}

@@ -1,0 +1,263 @@
+//! A small fixed-size thread pool (tokio/rayon are not in the offline cache).
+//!
+//! Two entry points:
+//!
+//! * [`ThreadPool::execute`] — fire-and-forget jobs for the serving engine
+//!   (the coordinator's worker threads).
+//! * [`ThreadPool::scope_chunks`] — data-parallel row partitioning for the
+//!   GEMM / softmax hot paths: splits `0..n` into contiguous chunks and runs
+//!   a closure per chunk, blocking until all complete.
+//!
+//! On this 1-core benchmark host the pool degenerates gracefully: with
+//! `workers == 1` `scope_chunks` runs inline with zero dispatch overhead,
+//! which keeps single-thread bench numbers honest.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed pool of worker threads.
+pub struct ThreadPool {
+    workers: Vec<JoinHandle<()>>,
+    sender: mpsc::Sender<Message>,
+    /// Receiver shared by workers behind a mutex (simple MPMC).
+    _receiver: Arc<Mutex<mpsc::Receiver<Message>>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// `n == 0` is clamped to 1.
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            let handle = std::thread::Builder::new()
+                .name(format!("intattn-worker-{i}"))
+                .spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            job();
+                            let (lock, cv) = &*pending;
+                            let mut p = lock.lock().unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                cv.notify_all();
+                            }
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+                .expect("spawn worker");
+            workers.push(handle);
+        }
+        ThreadPool { workers, sender: tx, _receiver: rx, pending, size: n }
+    }
+
+    /// Pool sized from `INTATTN_THREADS` env var, defaulting to the number of
+    /// available CPUs.
+    pub fn default_pool() -> Self {
+        Self::new(default_threads())
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.sender.send(Message::Run(Box::new(job))).expect("pool alive");
+    }
+
+    /// Block until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Run `f(chunk_start, chunk_end)` over a partition of `0..n` into at
+    /// most `self.size` contiguous chunks, blocking until all finish.
+    ///
+    /// The closure only borrows — no `'static` bound — via a scoped trick:
+    /// with 1 worker it runs inline; otherwise it uses `std::thread::scope`,
+    /// bypassing the queue entirely (cheaper and borrow-friendly).
+    pub fn scope_chunks<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        scope_chunks_with(self.size, n, f)
+    }
+}
+
+/// Free-function version of [`ThreadPool::scope_chunks`], usable without
+/// constructing a pool (it spawns scoped threads per call; the GEMM driver
+/// amortizes this by chunking coarsely).
+pub fn scope_chunks_with<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        if n > 0 {
+            f(0, n);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Number of worker threads to use: `INTATTN_THREADS` env override, else
+/// available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("INTATTN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A simple atomic work counter used by tests and the scheduler.
+#[derive(Default)]
+pub struct Counter(AtomicUsize);
+
+impl Counter {
+    pub fn incr(&self) -> usize {
+        self.0.fetch_add(1, Ordering::SeqCst) + 1
+    }
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(Counter::default());
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.incr();
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.get(), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not hang
+    }
+
+    #[test]
+    fn scope_chunks_covers_range_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        scope_chunks_with(7, 1000, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scope_chunks_single_thread_inline() {
+        let mut touched = vec![false; 10];
+        let cell = std::sync::Mutex::new(&mut touched);
+        scope_chunks_with(1, 10, |s, e| {
+            let mut t = cell.lock().unwrap();
+            for i in s..e {
+                t[i] = true;
+            }
+        });
+        assert!(touched.iter().all(|&t| t));
+    }
+
+    #[test]
+    fn scope_chunks_zero_n_is_noop() {
+        scope_chunks_with(4, 0, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let hits: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        scope_chunks_with(16, 3, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(Counter::default());
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                c.incr();
+            });
+        }
+        pool.wait_idle();
+        drop(pool); // must not deadlock
+        assert_eq!(c.get(), 10);
+    }
+
+    #[test]
+    fn default_threads_env_override() {
+        std::env::set_var("INTATTN_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::remove_var("INTATTN_THREADS");
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Per-stage timing instrumentation.
+//!
+//! Every attention pipeline reports where its time goes through a
+//! [`StageTimes`] record — this is the data behind the paper's Figure 2
+//! (share of the dequantize→softmax→requantize path) and the §4.4 latency
+//! breakdown ablation.
+
+use std::time::Instant;
+
+/// The stages the paper's breakdown distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Dynamic quantization of Q/K/V inputs (FP → INT8).
+    Quantize,
+    /// The `Q·Kᵀ` similarity GEMM.
+    QkGemm,
+    /// INT32→FP32 dequantization before a floating-point softmax.
+    Dequantize,
+    /// The softmax itself (float or integer surrogate).
+    Softmax,
+    /// FP32→INT8/UINT8 requantization of the probability matrix.
+    Requantize,
+    /// The `P·V` aggregation GEMM.
+    PvGemm,
+    /// Final output rescale / dtype restore.
+    Output,
+}
+
+pub const ALL_STAGES: [Stage; 7] = [
+    Stage::Quantize,
+    Stage::QkGemm,
+    Stage::Dequantize,
+    Stage::Softmax,
+    Stage::Requantize,
+    Stage::PvGemm,
+    Stage::Output,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Quantize => "quantize",
+            Stage::QkGemm => "qk_gemm",
+            Stage::Dequantize => "dequantize",
+            Stage::Softmax => "softmax",
+            Stage::Requantize => "requantize",
+            Stage::PvGemm => "pv_gemm",
+            Stage::Output => "output",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Stage::Quantize => 0,
+            Stage::QkGemm => 1,
+            Stage::Dequantize => 2,
+            Stage::Softmax => 3,
+            Stage::Requantize => 4,
+            Stage::PvGemm => 5,
+            Stage::Output => 6,
+        }
+    }
+}
+
+/// Accumulated nanoseconds per stage for one or more forward passes.
+#[derive(Clone, Debug, Default)]
+pub struct StageTimes {
+    ns: [u64; 7],
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, attributing the elapsed wall-clock to `stage`.
+    #[inline]
+    pub fn measure<T>(&mut self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.ns[stage.index()] += t0.elapsed().as_nanos() as u64;
+        out
+    }
+
+    pub fn add_ns(&mut self, stage: Stage, ns: u64) {
+        self.ns[stage.index()] += ns;
+    }
+
+    pub fn get_ns(&self, stage: Stage) -> u64 {
+        self.ns[stage.index()]
+    }
+
+    pub fn total_ns(&self) -> u64 {
+        self.ns.iter().sum()
+    }
+
+    /// Nanoseconds in the dequantize→softmax→requantize path — the quantity
+    /// Figure 2 tracks. (For float pipelines the De/Requantize entries are
+    /// zero and the path is just the softmax.)
+    pub fn softmax_path_ns(&self) -> u64 {
+        self.get_ns(Stage::Dequantize) + self.get_ns(Stage::Softmax) + self.get_ns(Stage::Requantize)
+    }
+
+    /// Share of total time spent on the softmax path, in `[0, 1]`.
+    pub fn softmax_path_share(&self) -> f64 {
+        let total = self.total_ns();
+        if total == 0 {
+            0.0
+        } else {
+            self.softmax_path_ns() as f64 / total as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.ns = [0; 7];
+    }
+
+    pub fn merge(&mut self, other: &StageTimes) {
+        for (a, b) in self.ns.iter_mut().zip(&other.ns) {
+            *a += b;
+        }
+    }
+
+    /// Render a one-line breakdown like `qk_gemm 41.2% | softmax 13.8% | ...`.
+    pub fn render(&self) -> String {
+        let total = self.total_ns().max(1) as f64;
+        ALL_STAGES
+            .iter()
+            .filter(|s| self.get_ns(**s) > 0)
+            .map(|s| format!("{} {:.1}%", s.name(), 100.0 * self.get_ns(*s) as f64 / total))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_accumulates() {
+        let mut t = StageTimes::new();
+        let x = t.measure(Stage::Softmax, || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(x, 42);
+        assert!(t.get_ns(Stage::Softmax) >= 1_000_000);
+        assert_eq!(t.get_ns(Stage::QkGemm), 0);
+    }
+
+    #[test]
+    fn softmax_path_includes_conversions() {
+        let mut t = StageTimes::new();
+        t.add_ns(Stage::Dequantize, 10);
+        t.add_ns(Stage::Softmax, 20);
+        t.add_ns(Stage::Requantize, 30);
+        t.add_ns(Stage::QkGemm, 40);
+        assert_eq!(t.softmax_path_ns(), 60);
+        assert!((t.softmax_path_share() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_and_reset() {
+        let mut a = StageTimes::new();
+        let mut b = StageTimes::new();
+        a.add_ns(Stage::QkGemm, 5);
+        b.add_ns(Stage::QkGemm, 7);
+        a.merge(&b);
+        assert_eq!(a.get_ns(Stage::QkGemm), 12);
+        a.reset();
+        assert_eq!(a.total_ns(), 0);
+    }
+
+    #[test]
+    fn share_of_empty_is_zero() {
+        assert_eq!(StageTimes::new().softmax_path_share(), 0.0);
+    }
+
+    #[test]
+    fn render_mentions_nonzero_stages() {
+        let mut t = StageTimes::new();
+        t.add_ns(Stage::Softmax, 100);
+        let s = t.render();
+        assert!(s.contains("softmax"));
+        assert!(!s.contains("qk_gemm"));
+    }
+}

@@ -1,0 +1,109 @@
+//! Cross-pipeline integration: all pipelines approximate the FP32 reference
+//! on realistic workloads, with the fidelity ordering the paper reports.
+
+use intattention::attention::{build_pipeline, AttentionConfig, PipelineKind};
+use intattention::harness::workload::{clustered_qkv, random_qkv};
+use intattention::util::prng::Pcg64;
+use intattention::util::stats::{cosine_similarity, rmse};
+
+fn reference(q: &intattention::tensor::MatF32, k: &intattention::tensor::MatF32, v: &intattention::tensor::MatF32) -> intattention::tensor::MatF32 {
+    intattention::attention::fp32::reference_attention(q, k, v, intattention::softmax::index_softmax::Mask::None)
+}
+
+#[test]
+fn all_pipelines_track_fp32_on_gaussian_workload() {
+    let mut rng = Pcg64::seed_from_u64(1);
+    let (l, d) = (128, 64);
+    let (q, k, v) = random_qkv(&mut rng, l, d, 1.0);
+    let want = reference(&q, &k, &v);
+    for (kind, min_cos) in [
+        (PipelineKind::Fp32, 0.999999),
+        (PipelineKind::Fp16, 0.9995),
+        (PipelineKind::QuantOnly, 0.97), // INT8 ×127 P loses small probs (Table 9)
+        (PipelineKind::IntAttention, 0.99),
+        (PipelineKind::ExaqInt3, 0.97),
+        (PipelineKind::ExaqInt2, 0.80),
+    ] {
+        let got = build_pipeline(kind, AttentionConfig::new(l, d)).forward(&q, &k, &v);
+        let cos = cosine_similarity(want.as_slice(), got.as_slice());
+        assert!(cos > min_cos, "{}: cos={cos} < {min_cos}", kind.name());
+    }
+}
+
+#[test]
+fn fidelity_ordering_on_clustered_workload() {
+    // Paper Tables 5-7 ordering: IndexSoftmax > EXAQ-INT3 > EXAQ-INT2.
+    let mut rng = Pcg64::seed_from_u64(2);
+    let (l, d) = (128, 32);
+    let mut err = std::collections::HashMap::new();
+    for trial in 0..6 {
+        let (q, k, v) = clustered_qkv(&mut rng, l, d, 6, 2.5);
+        let want = reference(&q, &k, &v);
+        for kind in [PipelineKind::IntAttention, PipelineKind::ExaqInt3, PipelineKind::ExaqInt2] {
+            let got = build_pipeline(kind, AttentionConfig::new(l, d)).forward(&q, &k, &v);
+            *err.entry(kind.name()).or_insert(0.0) += rmse(want.as_slice(), got.as_slice());
+            let _ = trial;
+        }
+    }
+    assert!(err["IntAttention"] < err["EXAQ(INT3)"], "{err:?}");
+    assert!(err["EXAQ(INT3)"] < err["EXAQ(INT2)"], "{err:?}");
+}
+
+#[test]
+fn causal_and_rectangular_shapes() {
+    let mut rng = Pcg64::seed_from_u64(3);
+    // causal square
+    let (q, k, v) = random_qkv(&mut rng, 48, 16, 1.0);
+    for kind in PipelineKind::headline() {
+        let got = build_pipeline(kind, AttentionConfig::new(48, 16).causal()).forward(&q, &k, &v);
+        assert_eq!((got.rows(), got.cols()), (48, 16), "{}", kind.name());
+        assert!(got.as_slice().iter().all(|x| x.is_finite()));
+    }
+    // rectangular decode-style (1 query row)
+    let q1 = intattention::tensor::MatF32::from_vec(1, 16, q.row(0).to_vec());
+    for kind in PipelineKind::headline() {
+        let got = build_pipeline(kind, AttentionConfig::new(48, 16)).forward(&q1, &k, &v);
+        assert_eq!((got.rows(), got.cols()), (1, 16), "{}", kind.name());
+    }
+}
+
+#[test]
+fn intattention_faster_than_quant_only_at_scale() {
+    // The paper's headline ratio (Table 8) at a modest size: IntAttention
+    // must beat Quant-Only once L is nontrivial.
+    let mut rng = Pcg64::seed_from_u64(4);
+    let (l, d) = (1024, 128);
+    let (q, k, v) = random_qkv(&mut rng, l, d, 1.0);
+    let time = |kind| {
+        let mut p = build_pipeline(kind, AttentionConfig::new(l, d));
+        let _ = p.forward(&q, &k, &v); // warm
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            let _ = p.forward(&q, &k, &v);
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let t_qo = time(PipelineKind::QuantOnly);
+    let t_ia = time(PipelineKind::IntAttention);
+    let t_fp32 = time(PipelineKind::Fp32);
+    assert!(t_ia < t_qo * 1.05, "IntAttention {t_ia:.3}s !< QuantOnly {t_qo:.3}s");
+    assert!(t_ia < t_fp32 * 0.6, "IntAttention {t_ia:.3}s !≪ FP32 {t_fp32:.3}s");
+}
+
+#[test]
+fn stage_instrumentation_consistent_with_kind() {
+    let mut rng = Pcg64::seed_from_u64(5);
+    let (q, k, v) = random_qkv(&mut rng, 96, 32, 1.0);
+    use intattention::util::timer::Stage;
+    // Quant-Only has the detour; IntAttention does not.
+    let mut qo = build_pipeline(PipelineKind::QuantOnly, AttentionConfig::new(96, 32));
+    let _ = qo.forward(&q, &k, &v);
+    assert!(qo.stage_times().get_ns(Stage::Dequantize) > 0);
+    assert!(qo.stage_times().get_ns(Stage::Requantize) > 0);
+    let mut ia = build_pipeline(PipelineKind::IntAttention, AttentionConfig::new(96, 32));
+    let _ = ia.forward(&q, &k, &v);
+    assert_eq!(ia.stage_times().get_ns(Stage::Dequantize), 0);
+    assert_eq!(ia.stage_times().get_ns(Stage::Requantize), 0);
+    assert_eq!(ia.op_counts().fp32_exp, 0);
+    assert!(qo.op_counts().fp32_exp > 0);
+}

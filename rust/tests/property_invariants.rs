@@ -1,0 +1,169 @@
+//! Randomized property tests over the core invariants, driven by the
+//! in-crate miniature proptest harness (seeds reported on failure).
+
+use intattention::attention::{build_pipeline, AttentionConfig, PipelineKind};
+use intattention::quant::{dequantize_i8, quantize_i8, quantize_p_u8};
+use intattention::softmax::index_softmax::{IndexSoftmax, Mask, MulShiftDiv};
+use intattention::tensor::{MatF32, MatI32};
+use intattention::util::proptest::{check, Config};
+
+fn rand_mat(rng: &mut intattention::util::prng::Pcg64, r: usize, c: usize, s: f32) -> MatF32 {
+    MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal_ms(0.0, s)).collect())
+}
+
+#[test]
+fn prop_quantization_roundtrip_error_bounded() {
+    check("quant roundtrip ≤ scale/2", Config::cases(60), |rng| {
+        let r = 1 + rng.below(16) as usize;
+        let c = 1 + rng.below(64) as usize;
+        let s = rng.uniform(0.01, 50.0);
+        let x = rand_mat(rng, r, c, s);
+        let q = quantize_i8(&x);
+        let back = dequantize_i8(&q);
+        let bound = q.scale / 2.0 + 1e-6;
+        for (&a, &b) in x.as_slice().iter().zip(back.as_slice()) {
+            assert!((a - b).abs() <= bound, "|{a}-{b}| > {bound}");
+        }
+    });
+}
+
+#[test]
+fn prop_index_softmax_rows_normalize_and_order() {
+    check("IndexSoftmax normalization + order", Config::cases(50), |rng| {
+        let rows = 1 + rng.below(6) as usize;
+        let cols = 2 + rng.below(96) as usize;
+        let spread = 1 + rng.below(40_000) as i64;
+        let alpha = rng.uniform(1e-4, 0.1);
+        let logits = MatI32::from_vec(
+            rows,
+            cols,
+            (0..rows * cols)
+                .map(|_| rng.range_i64(-spread, spread + 1) as i32)
+                .collect(),
+        );
+        let isx = IndexSoftmax::default();
+        let p = isx.forward(&logits, alpha, Mask::None);
+        for r in 0..rows {
+            // (1) rows sum to ≈255 (integer normalization, eq. 15);
+            // worst case each of `cols` entries rounds by ±0.5.
+            let tol = 16.max(cols as i32 / 3);
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            assert!((s - 255).abs() <= tol, "row {r} sum {s} (cols {cols})");
+            // (2) monotone: larger logit ⇒ probability not smaller
+            let row_l = logits.row(r);
+            let row_p = p.row(r);
+            for i in 0..cols {
+                for j in 0..cols {
+                    if row_l[i] > row_l[j] {
+                        assert!(
+                            row_p[i] >= row_p[j],
+                            "order violated at logits {} vs {}",
+                            row_l[i],
+                            row_l[j]
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_index_softmax_invariant_to_logit_shift() {
+    // Softmax(A + c) == Softmax(A): max-subtraction makes the integer
+    // surrogate shift-invariant too.
+    check("shift invariance", Config::cases(40), |rng| {
+        let cols = 2 + rng.below(64) as usize;
+        let shift = rng.range_i64(-100_000, 100_000) as i32;
+        let base: Vec<i32> = (0..cols).map(|_| rng.range_i64(-20_000, 20_000) as i32).collect();
+        let shifted: Vec<i32> = base.iter().map(|&x| x.saturating_add(shift)).collect();
+        let isx = IndexSoftmax::default();
+        let alpha = rng.uniform(1e-4, 0.05);
+        let p1 = isx.forward(&MatI32::from_vec(1, cols, base), alpha, Mask::None);
+        let p2 = isx.forward(&MatI32::from_vec(1, cols, shifted), alpha, Mask::None);
+        assert_eq!(p1, p2);
+    });
+}
+
+#[test]
+fn prop_mulshift_div_exact() {
+    check("mul-shift division exactness", Config::cases(80), |rng| {
+        let d = 1 + rng.below(1 << 24);
+        let ms = MulShiftDiv::new(d);
+        for _ in 0..32 {
+            let x = rng.below((1 << 31) - (1 << 25));
+            assert_eq!(ms.div_floor(x), x / d);
+            assert_eq!(ms.div_round(x), (x + d / 2) / d);
+        }
+    });
+}
+
+#[test]
+fn prop_p_u8_quantization_never_exceeds_range() {
+    check("P̂ stays a probability", Config::cases(40), |rng| {
+        let cols = 1 + rng.below(128) as usize;
+        let raw: Vec<f32> = (0..cols).map(|_| rng.next_f32()).collect();
+        let z: f32 = raw.iter().sum::<f32>().max(1e-6);
+        let p = MatF32::from_vec(1, cols, raw.iter().map(|&x| x / z).collect());
+        let q = quantize_p_u8(&p);
+        // round(255·p) for p ∈ [0,1] stays in u8 and preserves argmax.
+        let argmax_f = p.row(0).iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let max_q = *q.row(0).iter().max().unwrap();
+        assert_eq!(q.row(0)[argmax_f], max_q);
+    });
+}
+
+#[test]
+fn prop_pipelines_finite_on_adversarial_inputs() {
+    // Degenerate inputs (all-zero, constant, huge magnitude, tiny magnitude)
+    // must never produce NaN/Inf in any pipeline — the Table 10 claim.
+    check("no NaN/Inf on degenerate inputs", Config::cases(24), |rng| {
+        let (l, d) = (16 + rng.below(32) as usize, 8);
+        let kind = match rng.below(4) {
+            0 => PipelineKind::Fp32,
+            1 => PipelineKind::Fp16,
+            2 => PipelineKind::QuantOnly,
+            _ => PipelineKind::IntAttention,
+        };
+        let mode = rng.below(4);
+        let gen = |rng: &mut intattention::util::prng::Pcg64| match mode {
+            0 => MatF32::zeros(l, d),
+            1 => MatF32::from_vec(l, d, vec![3.7; l * d]),
+            2 => rand_mat(rng, l, d, 1e4),
+            _ => rand_mat(rng, l, d, 1e-6),
+        };
+        let (q, k, v) = (gen(rng), gen(rng), gen(rng));
+        let out = build_pipeline(kind, AttentionConfig::new(l, d)).forward(&q, &k, &v);
+        assert!(
+            out.as_slice().iter().all(|x| x.is_finite()),
+            "{} produced non-finite output on mode {mode}",
+            kind.name()
+        );
+    });
+}
+
+#[test]
+fn prop_grouped_quant_never_worse_than_per_tensor_on_outliers() {
+    use intattention::quant::{dequantize_grouped_i8, quantize_grouped_i8, GroupScheme};
+    check("per-row ≥ per-tensor under row outliers", Config::cases(30), |rng| {
+        let (r, c) = (4 + rng.below(8) as usize, 16);
+        let mut x = rand_mat(rng, r, c, 0.3);
+        let hot = rng.below(r as u64) as usize;
+        let boost = rng.uniform(50.0, 2000.0);
+        for v in x.row_mut(hot) {
+            *v *= boost;
+        }
+        let pt = dequantize_grouped_i8(&quantize_grouped_i8(&x, GroupScheme::PerTensor));
+        let pr = dequantize_grouped_i8(&quantize_grouped_i8(&x, GroupScheme::PerRow));
+        let err = |m: &MatF32| -> f64 {
+            let mut e = 0.0;
+            for rr in 0..r {
+                if rr != hot {
+                    e += intattention::util::stats::rmse(x.row(rr), m.row(rr));
+                }
+            }
+            e
+        };
+        assert!(err(&pr) <= err(&pt) + 1e-9, "{} > {}", err(&pr), err(&pt));
+    });
+}

@@ -1,0 +1,85 @@
+//! PJRT runtime round-trip over the AOT artifacts (requires `make artifacts`;
+//! tests self-skip when artifacts are absent so `cargo test` stays green on
+//! a fresh checkout).
+
+use intattention::attention::{build_pipeline, AttentionConfig, PipelineKind};
+use intattention::harness::workload::random_qkv;
+use intattention::runtime::{default_artifacts_dir, ArtifactRuntime};
+use intattention::util::prng::Pcg64;
+use intattention::util::stats::cosine_similarity;
+
+fn runtime_or_skip() -> Option<ArtifactRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("int_attention_head_l64_d32.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return None;
+    }
+    Some(ArtifactRuntime::new(&dir).expect("pjrt cpu client"))
+}
+
+#[test]
+fn pallas_artifact_matches_native_rust_bit_path() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (l, d) = (64usize, 32usize);
+    let mut rng = Pcg64::seed_from_u64(3);
+    let (q, k, v) = random_qkv(&mut rng, l, d, 1.0);
+    let shape = [l, d];
+    let outs = rt
+        .run(
+            "int_attention_head_l64_d32",
+            &[(q.as_slice(), &shape), (k.as_slice(), &shape), (v.as_slice(), &shape)],
+        )
+        .expect("execute");
+    let mut pipe = build_pipeline(PipelineKind::IntAttention, AttentionConfig::new(l, d));
+    let rust_out = pipe.forward(&q, &k, &v);
+    let cos = cosine_similarity(&outs[0], rust_out.as_slice());
+    // Same integer arithmetic (eq. 2-15) on both sides: near-identical.
+    assert!(cos > 0.999_999, "cos={cos}");
+}
+
+#[test]
+fn index_softmax_artifact_normalizes_rows() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let l = 64usize;
+    let mut rng = Pcg64::seed_from_u64(5);
+    let logits: Vec<f32> = (0..l * l).map(|_| (rng.range_i64(-20_000, 20_001)) as f32).collect();
+    let alpha = [0.002f32];
+    let outs = rt
+        .run(
+            "index_softmax_l64",
+            &[(&logits, &[l, l][..]), (&alpha, &[1usize][..])],
+        )
+        .expect("execute");
+    let p = &outs[0];
+    assert_eq!(p.len(), l * l);
+    for r in 0..l {
+        let s: f32 = p[r * l..(r + 1) * l].iter().sum();
+        assert!((s - 1.0).abs() < 0.07, "row {r} sums to {s}");
+    }
+}
+
+#[test]
+fn float_oracle_artifact_matches_rust_fp32() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (l, d) = (64usize, 32usize);
+    let mut rng = Pcg64::seed_from_u64(7);
+    let (q, k, v) = random_qkv(&mut rng, l, d, 1.0);
+    let shape = [l, d];
+    let outs = rt
+        .run(
+            "float_attention_head_l64_d32",
+            &[(q.as_slice(), &shape), (k.as_slice(), &shape), (v.as_slice(), &shape)],
+        )
+        .expect("execute");
+    let mut pipe = build_pipeline(PipelineKind::Fp32, AttentionConfig::new(l, d));
+    let rust_out = pipe.forward(&q, &k, &v);
+    let cos = cosine_similarity(&outs[0], rust_out.as_slice());
+    assert!(cos > 0.99999, "cos={cos}");
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let err = rt.run("no_such_artifact", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("no_such_artifact"));
+}

@@ -1,0 +1,106 @@
+//! Serving-engine end-to-end: trace replay, batching overlap, backpressure
+//! and per-pipeline throughput sanity under the coordinator.
+
+use intattention::attention::PipelineKind;
+use intattention::coordinator::batcher::BatchPolicy;
+use intattention::coordinator::{Engine, EngineOptions, SubmitError};
+use intattention::model::config::ModelConfig;
+use intattention::model::weights::Weights;
+
+fn weights() -> Weights {
+    let cfg = ModelConfig { vocab: 64, d_model: 16, n_layers: 1, n_heads: 2, max_seq: 96, mlp_mult: 2 };
+    Weights::random(cfg, 42)
+}
+
+#[test]
+fn trace_replay_completes_all_requests() {
+    for kind in [PipelineKind::QuantOnly, PipelineKind::IntAttention] {
+        let opts = EngineOptions { attention: kind, ..Default::default() };
+        let h = Engine::start_bounded(weights(), opts);
+        let rxs: Vec<_> = (0..10)
+            .map(|i| {
+                let plen = 4 + (i % 5) * 8;
+                let prompt: Vec<u16> = (0..plen).map(|j| (j * 13 % 64) as u16).collect();
+                h.submit(prompt, 4, 0.5, 8).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            assert_eq!(resp.tokens.len(), 4);
+            assert!(resp.total_us >= resp.prefill_us);
+        }
+        let snap = h.shutdown();
+        assert_eq!(snap.completed, 10, "{}", kind.name());
+        assert_eq!(snap.rejected, 0);
+        assert!(snap.throughput_tok_s > 0.0);
+    }
+}
+
+#[test]
+fn continuous_batching_overlaps_decodes() {
+    let opts = EngineOptions {
+        policy: BatchPolicy { max_active: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let h = Engine::start_bounded(weights(), opts);
+    let rxs: Vec<_> = (0..8)
+        .map(|_| h.submit(vec![1, 2, 3, 4], 12, 0.0, 1).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    }
+    let snap = h.shutdown();
+    assert!(snap.peak_active >= 2, "peak_active={}", snap.peak_active);
+    assert!(snap.peak_active <= 4, "policy bound violated: {}", snap.peak_active);
+}
+
+#[test]
+fn queue_bound_produces_backpressure_not_deadlock() {
+    let opts = EngineOptions { max_queue: 1, ..Default::default() };
+    let h = Engine::start_bounded(weights(), opts);
+    let mut ok = Vec::new();
+    let mut full = 0;
+    for _ in 0..30 {
+        match h.submit(vec![1; 32], 8, 0.0, 1) {
+            Ok(rx) => ok.push(rx),
+            Err(SubmitError::QueueFull) => full += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    assert!(full > 0, "expected rejections with queue depth 1");
+    for rx in ok {
+        rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    }
+    let snap = h.shutdown();
+    assert_eq!(snap.rejected as usize, full);
+}
+
+#[test]
+fn oversized_and_empty_prompts_rejected_cleanly() {
+    let h = Engine::start_bounded(weights(), EngineOptions::default());
+    assert!(matches!(h.submit(vec![], 1, 0.0, 1), Err(SubmitError::BadRequest)));
+    assert!(matches!(
+        h.submit(vec![1; 200], 1, 0.0, 1),
+        Err(SubmitError::BadRequest)
+    ));
+    // Engine still serves after rejections.
+    let rx = h.submit(vec![1, 2], 2, 0.0, 1).unwrap();
+    rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    h.shutdown();
+}
+
+#[test]
+fn ttft_reported_smaller_for_short_prompts() {
+    let h = Engine::start_bounded(weights(), EngineOptions::default());
+    let short = h.submit(vec![1, 2], 2, 0.0, 1).unwrap();
+    let r_short = short.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    let long = h.submit(vec![1; 80], 2, 0.0, 1).unwrap();
+    let r_long = long.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    assert!(
+        r_long.prefill_us > r_short.prefill_us,
+        "80-token prefill {}us !> 2-token {}us",
+        r_long.prefill_us,
+        r_short.prefill_us
+    );
+    h.shutdown();
+}
