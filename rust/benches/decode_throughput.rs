@@ -1,0 +1,27 @@
+//! Decode throughput over the stateful KV path: tokens/sec for the headline
+//! pipelines at several resident context lengths, plus the per-token
+//! Quantize-stage time — which stays flat in context length for the
+//! stateful integer pipelines (the whole point: no per-token history
+//! re-quantization) while total step time grows with the two GEMMs.
+use intattention::harness::experiments as exp;
+use intattention::harness::report::{kv_rows_json, write_report};
+
+fn main() {
+    let fast = std::env::var("INTATTN_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let ctxs: Vec<usize> = if fast {
+        vec![64, 256]
+    } else if std::env::var("INTATTN_FULL").map(|v| v == "1").unwrap_or(false) {
+        vec![256, 1024, 4096, 8192]
+    } else {
+        vec![128, 512, 1024, 2048]
+    };
+    let gen_tokens = if fast { 8 } else { 64 };
+    let rows = exp::decode_sweep(&ctxs, exp::HEAD_DIM, gen_tokens, 1);
+    let table = exp::render_decode(&rows);
+    table.print();
+    let _ = write_report(
+        "decode_throughput",
+        &table.render(),
+        Some(kv_rows_json(&exp::decode_rows_json(&rows))),
+    );
+}

@@ -14,6 +14,7 @@ pub fn valid_positions(m: usize, l: usize, mask: Mask) -> u64 {
             debug_assert_eq!(m, l);
             (l as u64 * (l as u64 + 1)) / 2
         }
+        Mask::CausalFrom(_) => (0..m).map(|r| mask.valid_cols(r, l) as u64).sum(),
     }
 }
 
@@ -25,6 +26,20 @@ pub fn quantize_qkv(m: usize, l: usize, d: usize) -> OpCounts {
         fp32_alu: 2 * elems,          // abs+max scan, then mul-by-inv-scale
         dtype_conv: elems,            // round+cast to i8
         mem_bytes: elems * (4 + 1),   // read f32, write i8
+        ..Default::default()
+    }
+}
+
+/// Re-mapping resident INT8 K/V rows onto a wider grid when a state's
+/// running abs-max grows (`Int8Side::append`'s re-scale path): one f32
+/// multiply plus a round/cast per resident element. Rare — the abs-max is a
+/// running maximum — but counted so stage timings and the energy model stay
+/// consistent on the steps where it fires.
+pub fn kv_rescale(elems: u64) -> OpCounts {
+    OpCounts {
+        fp32_alu: elems,
+        dtype_conv: elems,
+        mem_bytes: elems * 2, // read i8, write i8
         ..Default::default()
     }
 }
@@ -151,6 +166,11 @@ mod tests {
     fn valid_positions_modes() {
         assert_eq!(valid_positions(4, 8, Mask::None), 32);
         assert_eq!(valid_positions(4, 4, Mask::Causal), 10);
+        // Offset causal: rows at absolute positions 2..6 over 6 keys →
+        // 3 + 4 + 5 + 6 valid entries.
+        assert_eq!(valid_positions(4, 6, Mask::CausalFrom(2)), 18);
+        // Offset 0 matches plain causal.
+        assert_eq!(valid_positions(4, 4, Mask::CausalFrom(0)), 10);
     }
 
     #[test]

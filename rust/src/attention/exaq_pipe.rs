@@ -4,11 +4,16 @@
 //! float normalization show up in the Softmax stage timing; its probability
 //! output is requantized to UINT8 to keep the PV stage integer.
 
-use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::attention::state::KvState;
+use crate::attention::{
+    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
+    PipelineKind,
+};
 use crate::energy::OpCounts;
-use crate::gemm::{gemm_u8i8, par_gemm_i8};
+use crate::gemm::{gemm_u8i8, gemm_u8i8_slices, par_gemm_i8, par_gemm_i8_slices};
 use crate::quant::quantize_i8;
 use crate::softmax::exaq::{ExaqConfig, ExaqSoftmax};
+use crate::softmax::index_softmax::Mask;
 use crate::tensor::{MatF32, MatI32};
 use crate::util::timer::{Stage, StageTimes};
 
@@ -75,6 +80,62 @@ impl AttentionPipeline for ExaqAttention {
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
 
         let out_scale = vq.scale / 255.0;
+        let o = self
+            .times
+            .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    /// Stateful block forward. K̂/V̂ stay resident as INT8; EXAQ's dynamic
+    /// clip range comes from **running** Δ-statistics carried in the state,
+    /// so a decode step merges one row's statistics instead of re-scanning
+    /// the whole history (and converges to the one-shot global clip as the
+    /// sequence grows).
+    fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_state_shapes(&self.cfg, state, q, k, v);
+        let (m, d) = (q.rows(), self.cfg.head_dim);
+        let threads = self.cfg.threads;
+
+        let (qq, remapped) = self.times.measure(Stage::Quantize, || {
+            let remapped = state.append(k, v);
+            (quantize_i8(q), remapped)
+        });
+        self.ops.add(&counts::quantize_qkv(m, k.rows(), d));
+        if remapped > 0 {
+            self.ops.add(&counts::kv_rescale(remapped as u64));
+        }
+
+        let st = state.as_int8_mut();
+        let l = st.len;
+        let mask = Mask::CausalFrom(l - m);
+        let alpha = qq.scale * st.k.scale / (d as f32).sqrt();
+
+        let mut logits = MatI32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+
+        // EXAQ softmax: merge this block's Δ stats into the running
+        // accumulator, clip from the running σ.
+        let p = self.times.measure(Stage::Softmax, || {
+            let (sum, sumsq, n) = ExaqSoftmax::delta_stats(&logits, alpha, mask);
+            st.exaq.merge(sum, sumsq, n);
+            let clip = self.softmax.clip_from_sigma(st.exaq.sigma());
+            self.softmax.forward_with_clip(&logits, alpha, mask, clip)
+        });
+        let valid = counts::valid_positions(m, l, mask);
+        self.ops.add(&counts::exaq_softmax(valid, m as u64));
+
+        let mut acc = MatI32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            gemm_u8i8_slices(p.as_slice(), &st.v.data, acc.as_mut_slice(), m, l, d);
+        });
+        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+        self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+        let out_scale = st.v.scale / 255.0;
         let o = self
             .times
             .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));

@@ -4,10 +4,15 @@
 //! economics, of a native FP16 edge path. Energy accounting prices the GEMMs
 //! at fp16-MAC cost, which is where the real-hardware advantage lives.
 
-use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::attention::state::KvState;
+use crate::attention::{
+    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
+    PipelineKind,
+};
 use crate::energy::OpCounts;
-use crate::gemm::gemm_f16;
+use crate::gemm::{gemm_f16, gemm_f16_notrans};
 use crate::softmax::float_softmax::softmax_rows_f16;
+use crate::softmax::index_softmax::Mask;
 use crate::tensor::MatF32;
 use crate::util::f16::{encode_slice, F16};
 use crate::util::timer::{Stage, StageTimes};
@@ -71,6 +76,54 @@ impl AttentionPipeline for Fp16Attention {
             let vt = crate::tensor::MatF32::from_vec(l, d, v.as_slice().to_vec()).transpose();
             let vth = encode_slice(vt.as_slice());
             gemm_f16(&ph, &vth, m, d, l, o.as_mut_slice());
+        });
+        self.ops.add(&counts::pv_gemm(valid, l, d, 2, 2));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    /// Stateful block forward over binary16-resident K/V rows: new rows are
+    /// encoded to f16 once on append; the PV aggregation streams the
+    /// resident `L×d` V rows without the per-step transpose the one-shot
+    /// path uses.
+    fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_state_shapes(&self.cfg, state, q, k, v);
+        let (m, d) = (q.rows(), self.cfg.head_dim);
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // Encode the query block + the new K/V rows into f16 storage.
+        let qh = self.times.measure(Stage::Quantize, || {
+            state.append(k, v);
+            encode_slice(q.as_slice())
+        });
+        self.ops.add(&counts::encode_qkv_f16(m, k.rows(), d));
+
+        let st = state.as_f16();
+        let l = st.len;
+        let mask = Mask::CausalFrom(l - m);
+
+        // QKᵀ in f16 storage against the resident keys.
+        let mut a = MatF32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            gemm_f16(&qh, &st.k, m, l, d, a.as_mut_slice());
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 2, 2));
+
+        // Scale + f16-precision softmax over the offset-causal window.
+        self.times.measure(Stage::Softmax, || {
+            for x in a.as_mut_slice() {
+                *x *= scale;
+            }
+            softmax_rows_f16(&mut a, mask);
+        });
+        let valid = counts::valid_positions(m, l, mask);
+        self.ops.add(&counts::fp32_softmax(valid, m as u64)); // same op mix, f16 units
+
+        // PV in f16 storage, V in natural row layout (no transpose copy).
+        let mut o = MatF32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            let ph: Vec<F16> = encode_slice(a.as_slice());
+            gemm_f16_notrans(&ph, &st.v, o.as_mut_slice(), m, l, d);
         });
         self.ops.add(&counts::pv_gemm(valid, l, d, 2, 2));
         self.ops.add(&counts::output_rescale(m, d));

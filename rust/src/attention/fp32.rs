@@ -1,10 +1,15 @@
 //! FP32 baseline attention (paper eq. 1 + eq. 6): `A = QKᵀ/√d`,
 //! `P = softmax(A)`, `O = PV`, everything in f32.
 
-use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::attention::state::KvState;
+use crate::attention::{
+    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
+    PipelineKind,
+};
 use crate::energy::OpCounts;
-use crate::gemm::par_gemm_f32;
+use crate::gemm::{gemm_f32_notrans_slices, par_gemm_f32, par_gemm_f32_slices};
 use crate::softmax::float_softmax::softmax_rows;
+use crate::softmax::index_softmax::Mask;
 use crate::tensor::MatF32;
 use crate::util::timer::{Stage, StageTimes};
 
@@ -59,6 +64,47 @@ impl AttentionPipeline for Fp32Attention {
         self.times.measure(Stage::PvGemm, || {
             let vt = v.transpose();
             par_gemm_f32(&a, &vt, &mut o, threads);
+        });
+        self.ops.add(&counts::pv_gemm(valid, l, d, 4, 4));
+        o
+    }
+
+    /// Stateful block forward over FP32-resident K/V rows. The float
+    /// baseline keeps history in its native dtype — appended once, never
+    /// copied again; the PV aggregation streams V rows in place.
+    fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_state_shapes(&self.cfg, state, q, k, v);
+        let (m, d) = (q.rows(), self.cfg.head_dim);
+        let threads = self.cfg.threads;
+        let scale = 1.0 / (d as f32).sqrt();
+
+        state.append(k, v);
+        let st = state.as_f32();
+        let l = st.len;
+        let mask = Mask::CausalFrom(l - m);
+
+        // QKᵀ — the resident K rows are already the "transposed" layout.
+        let mut a = MatF32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_f32_slices(q.as_slice(), &st.k, a.as_mut_slice(), m, l, d, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 4, 4));
+
+        // Scale + stable softmax over the offset-causal window.
+        self.times.measure(Stage::Softmax, || {
+            for x in a.as_mut_slice() {
+                *x *= scale;
+            }
+            softmax_rows(&mut a, mask);
+        });
+        let valid = counts::valid_positions(m, l, mask);
+        self.ops.add(&counts::fp32_softmax(valid, m as u64));
+
+        // PV directly over the resident `L×d` rows (masked entries are
+        // exact zeros and are skipped).
+        let mut o = MatF32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            gemm_f32_notrans_slices(a.as_slice(), &st.v, o.as_mut_slice(), m, l, d);
         });
         self.ops.add(&counts::pv_gemm(valid, l, d, 4, 4));
         o
@@ -167,6 +213,33 @@ mod tests {
         assert_eq!(pipe.op_counts().fp32_exp, 64 * 64);
         pipe.reset_stats();
         assert_eq!(pipe.stage_times().total_ns(), 0);
+    }
+
+    #[test]
+    fn stateful_path_matches_one_shot() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let (l, d) = (24, 8);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let want = Fp32Attention::new(AttentionConfig::new(l, d).causal()).forward(&q, &k, &v);
+        let mut pipe = Fp32Attention::new(AttentionConfig::new(l, d));
+        let mut st = pipe.begin_state();
+        let part = |m: &MatF32, r0: usize, r1: usize| {
+            MatF32::from_vec(r1 - r0, d, m.as_slice()[r0 * d..r1 * d].to_vec())
+        };
+        // Chunked prefill of 16 rows, then 8 single-row decode steps.
+        let mut got = Vec::new();
+        let o = pipe.prefill(&mut st, &part(&q, 0, 16), &part(&k, 0, 16), &part(&v, 0, 16));
+        got.extend_from_slice(o.as_slice());
+        for r in 16..l {
+            let o = pipe.decode_step(&mut st, &part(&q, r, r + 1), &part(&k, r, r + 1), &part(&v, r, r + 1));
+            got.extend_from_slice(o.as_slice());
+        }
+        assert_eq!(st.len(), l);
+        let got = MatF32::from_vec(l, d, got);
+        // Same dot products, different PV accumulation order: tiny eps.
+        assert!(got.allclose(&want, 1e-4, 1e-4));
     }
 
     #[test]

@@ -13,13 +13,75 @@
 //!
 //! Supports per-tensor (default) and grouped (§3.3) quantization of Q.
 
-use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::attention::state::KvState;
+use crate::attention::{
+    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
+    PipelineKind,
+};
 use crate::energy::OpCounts;
-use crate::gemm::{gemm_u8i8, par_gemm_i8};
-use crate::quant::{quantize_grouped_i8, quantize_i8, GroupScheme};
-use crate::softmax::index_softmax::IndexSoftmax;
-use crate::tensor::{MatF32, MatI32, MatU8};
+use crate::gemm::{gemm_u8i8, gemm_u8i8_slices, par_gemm_i8, par_gemm_i8_slices};
+use crate::quant::{
+    quantize_grouped_i8, quantize_i8, GroupQuantizedI8, GroupScheme, QuantizedI8,
+};
+use crate::softmax::index_softmax::{IndexSoftmax, Mask};
+use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
 use crate::util::timer::{Stage, StageTimes};
+
+/// Q quantized under the configured scheme, plus the IndexSoftmax dispatch
+/// that pairs with it — shared by the one-shot and stateful paths so the
+/// grouped-Q handling can never drift between them.
+enum QQuant {
+    PerTensor(QuantizedI8),
+    Grouped(GroupQuantizedI8),
+}
+
+impl QQuant {
+    fn quantize(q: &MatF32, scheme: GroupScheme) -> QQuant {
+        match scheme {
+            GroupScheme::PerTensor => QQuant::PerTensor(quantize_i8(q)),
+            s => QQuant::Grouped(quantize_grouped_i8(q, s)),
+        }
+    }
+
+    fn data(&self) -> &MatI8 {
+        match self {
+            QQuant::PerTensor(t) => &t.data,
+            QQuant::Grouped(g) => &g.data,
+        }
+    }
+
+    /// IndexSoftmax over `logits` with this Q's scale(s) × `k_scale`/√d.
+    fn softmax(
+        &self,
+        softmax: &IndexSoftmax,
+        logits: &MatI32,
+        k_scale: f32,
+        sqrt_d: f32,
+        mask: Mask,
+    ) -> MatU8 {
+        match self {
+            QQuant::PerTensor(t) => {
+                let alpha = t.scale * k_scale / sqrt_d;
+                softmax.forward(logits, alpha, mask)
+            }
+            QQuant::Grouped(g) => {
+                let alphas: Vec<f32> =
+                    g.scales.iter().map(|&s| s * k_scale / sqrt_d).collect();
+                let scheme = g.scheme;
+                softmax.forward_grouped(
+                    logits,
+                    move |r| match scheme {
+                        GroupScheme::PerTensor => 0,
+                        GroupScheme::PerRow => r,
+                        GroupScheme::PerRowBlock(b) => r / b,
+                    },
+                    &alphas,
+                    mask,
+                )
+            }
+        }
+    }
+}
 
 pub struct IntAttention {
     cfg: AttentionConfig,
@@ -78,52 +140,22 @@ impl AttentionPipeline for IntAttention {
         let sqrt_d = (d as f32).sqrt();
 
         // (1) dynamic quantization (grouped for Q if configured).
-        enum QQuant {
-            PerTensor(crate::quant::QuantizedI8),
-            Grouped(crate::quant::GroupQuantizedI8),
-        }
         let (qq, kq, vq) = self.times.measure(Stage::Quantize, || {
-            let qq = match self.q_scheme {
-                GroupScheme::PerTensor => QQuant::PerTensor(quantize_i8(q)),
-                s => QQuant::Grouped(quantize_grouped_i8(q, s)),
-            };
-            (qq, quantize_i8(k), quantize_i8(v))
+            (QQuant::quantize(q, self.q_scheme), quantize_i8(k), quantize_i8(v))
         });
         self.ops.add(&counts::quantize_qkv(m, l, d));
 
         // (2) integer similarity GEMM.
-        let qdata = match &qq {
-            QQuant::PerTensor(t) => &t.data,
-            QQuant::Grouped(g) => &g.data,
-        };
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8(qdata, &kq.data, &mut logits, threads);
+            par_gemm_i8(qq.data(), &kq.data, &mut logits, threads);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
         // (3) IndexSoftmax — integer in, UINT8 out. No Dequantize stage,
         // no Requantize stage: this is the paper's point.
-        let p = self.times.measure(Stage::Softmax, || match &qq {
-            QQuant::PerTensor(t) => {
-                let alpha = t.scale * kq.scale / sqrt_d;
-                self.softmax.forward(&logits, alpha, self.cfg.mask)
-            }
-            QQuant::Grouped(g) => {
-                let alphas: Vec<f32> =
-                    g.scales.iter().map(|&s| s * kq.scale / sqrt_d).collect();
-                let scheme = g.scheme;
-                self.softmax.forward_grouped(
-                    &logits,
-                    move |r| match scheme {
-                        GroupScheme::PerTensor => 0,
-                        GroupScheme::PerRow => r,
-                        GroupScheme::PerRowBlock(b) => r / b,
-                    },
-                    &alphas,
-                    self.cfg.mask,
-                )
-            }
+        let p = self.times.measure(Stage::Softmax, || {
+            qq.softmax(&self.softmax, &logits, kq.scale, sqrt_d, self.cfg.mask)
         });
         let valid = counts::valid_positions(m, l, self.cfg.mask);
         self.ops.add(&counts::index_softmax(valid, m as u64));
@@ -138,6 +170,64 @@ impl AttentionPipeline for IntAttention {
 
         // (5) single output rescale: s_V/255 (eq. 5 with the ×255 P scale).
         let out_scale = vq.scale / 255.0;
+        let o = self
+            .times
+            .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    /// Stateful block forward: the integer dataflow of [`Self::forward`],
+    /// but K̂/V̂ live in the INT8 state — only the new rows are quantized,
+    /// and history is never copied, dequantized or re-quantized.
+    fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_state_shapes(&self.cfg, state, q, k, v);
+        let (m, d) = (q.rows(), self.cfg.head_dim);
+        let threads = self.cfg.threads;
+        let sqrt_d = (d as f32).sqrt();
+
+        // (1) quantize the query block fresh; append-quantize only the new
+        // K/V rows (the state re-scales resident rows only if their running
+        // abs-max grew — see `Int8Side::append`).
+        let q_scheme = self.q_scheme;
+        let (qq, remapped) = self.times.measure(Stage::Quantize, || {
+            let remapped = state.append(k, v);
+            (QQuant::quantize(q, q_scheme), remapped)
+        });
+        self.ops.add(&counts::quantize_qkv(m, k.rows(), d));
+        if remapped > 0 {
+            self.ops.add(&counts::kv_rescale(remapped as u64));
+        }
+
+        let st = state.as_int8();
+        let l = st.len;
+        let mask = Mask::CausalFrom(l - m);
+
+        // (2) Q̂·K̂ᵀ against the resident INT8 keys.
+        let mut logits = MatI32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_i8_slices(qq.data().as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+
+        // (3) IndexSoftmax with the offset-causal mask (decode: a single
+        // row at offset L−1, which sees the whole history).
+        let p = self.times.measure(Stage::Softmax, || {
+            qq.softmax(&self.softmax, &logits, st.k.scale, sqrt_d, mask)
+        });
+        let valid = counts::valid_positions(m, l, mask);
+        self.ops.add(&counts::index_softmax(valid, m as u64));
+
+        // (4) P̂·V̂ from the resident INT8 values, zero-skipping.
+        let mut acc = MatI32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            gemm_u8i8_slices(p.as_slice(), &st.v.data, acc.as_mut_slice(), m, l, d);
+        });
+        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+        self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+        // (5) single output rescale with the state's running V scale.
+        let out_scale = st.v.scale / 255.0;
         let o = self
             .times
             .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
@@ -163,7 +253,6 @@ impl AttentionPipeline for IntAttention {
 mod tests {
     use super::*;
     use crate::attention::fp32::reference_attention;
-    use crate::softmax::index_softmax::Mask;
     use crate::util::prng::Pcg64;
 
     fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
@@ -250,6 +339,65 @@ mod tests {
         let err_pt = crate::util::stats::rmse(&tail(&want), &tail(&got_pt));
         let err_pr = crate::util::stats::rmse(&tail(&want), &tail(&got_pr));
         assert!(err_pr < err_pt, "per-row {err_pr} !< per-tensor {err_pt}");
+    }
+
+    fn rows_of(m: &MatF32, r0: usize, r1: usize) -> MatF32 {
+        let c = m.cols();
+        MatF32::from_vec(r1 - r0, c, m.as_slice()[r0 * c..r1 * c].to_vec())
+    }
+
+    #[test]
+    fn stateful_prefill_matches_one_shot() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let (l, d) = (48, 16);
+        let q = rand_mat(&mut rng, l, d);
+        let k = rand_mat(&mut rng, l, d);
+        let v = rand_mat(&mut rng, l, d);
+        let want = IntAttention::new(AttentionConfig::new(l, d).causal()).forward(&q, &k, &v);
+        let mut pipe = IntAttention::new(AttentionConfig::new(l, d));
+        let mut st = pipe.begin_state();
+        let o1 = pipe.prefill(&mut st, &rows_of(&q, 0, 24), &rows_of(&k, 0, 24), &rows_of(&v, 0, 24));
+        let o2 = pipe.prefill(&mut st, &rows_of(&q, 24, 48), &rows_of(&k, 24, 48), &rows_of(&v, 24, 48));
+        assert_eq!(st.len(), 48);
+        let got: Vec<f32> = o1.as_slice().iter().chain(o2.as_slice()).cloned().collect();
+        let cos = crate::util::stats::cosine_similarity(&got, want.as_slice());
+        assert!(cos > 0.999, "chunked prefill vs one-shot: cos={cos}");
+    }
+
+    #[test]
+    fn decode_step_quantize_work_is_constant_in_context_length() {
+        // The tentpole invariant: a decode step converts only the new row
+        // (and the output), so its dtype-conversion count must not depend on
+        // how much history is cached.
+        let mut rng = Pcg64::seed_from_u64(8);
+        let d = 16;
+        let mut pipe = IntAttention::new(AttentionConfig::new(32, d));
+        let mut st = pipe.begin_state();
+        let block = rand_mat(&mut rng, 32, d);
+        let _ = pipe.prefill(&mut st, &block, &block, &block);
+        let mut deltas = Vec::new();
+        let mut prev = pipe.op_counts().dtype_conv;
+        for _ in 0..3 {
+            let q1 = rand_mat(&mut rng, 1, d);
+            // Damped K/V rows keep the running amax flat, so the (counted)
+            // re-scale path cannot fire and the deltas are exact.
+            let mut kv = rand_mat(&mut rng, 1, d);
+            for x in kv.as_mut_slice() {
+                *x *= 0.5;
+            }
+            let _ = pipe.decode_step(&mut st, &q1, &kv, &kv);
+            let now = pipe.op_counts().dtype_conv;
+            deltas.push(now - prev);
+            prev = now;
+        }
+        // (1 query + 2 kv rows)·d quantized + 1·d output restored per step,
+        // identical at L=33, 34, 35.
+        assert_eq!(deltas[0], deltas[1]);
+        assert_eq!(deltas[1], deltas[2]);
+        assert_eq!(deltas[0], 3 * d as u64 + d as u64);
+        // And nothing ever passes through the dequantize/requantize detour.
+        assert_eq!(pipe.stage_times().get_ns(Stage::Dequantize), 0);
+        assert_eq!(pipe.stage_times().get_ns(Stage::Requantize), 0);
     }
 
     #[test]

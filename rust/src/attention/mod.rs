@@ -1,13 +1,30 @@
 //! The five attention pipelines the paper evaluates (§4.1: FP32, FP16,
 //! INT8 Quant-Only, IntAttention) plus the EXAQ ablation pipelines.
 //!
-//! Every pipeline implements [`AttentionPipeline`]: FP32 in/out (`Q, K, V`
-//! are `M×d` / `L×d` / `L×d` row-major, `O` is `M×d`), with the internal
-//! dataflow of the respective method. Each forward pass is instrumented
-//! with per-stage wall-clock ([`StageTimes`]) and op counters
-//! ([`OpCounts`]) — the raw data for Figure 2, Figure 8 and Table 8.
+//! Every pipeline implements [`AttentionPipeline`], which exposes **two**
+//! computation modes:
+//!
+//! * **One-shot** — [`AttentionPipeline::forward`]: FP32 in/out (`Q, K, V`
+//!   are `M×d` / `L×d` / `L×d` row-major, `O` is `M×d`) with the internal
+//!   dataflow of the respective method. This is the operator benchmark path
+//!   (Figures 2, 6–8, Table 8).
+//! * **Stateful** — [`AttentionPipeline::begin_state`] →
+//!   [`AttentionPipeline::prefill`] / [`AttentionPipeline::decode_step`]:
+//!   the serving path. A per-sequence [`KvState`] keeps K/V resident **in
+//!   the pipeline's native operand format** (INT8 rows + running scales for
+//!   the integer pipelines, native rows for FP32/FP16), so a decode step
+//!   appends and quantizes exactly one row instead of re-quantizing the
+//!   whole history — O(1) conversion work per token instead of O(L·d).
+//!   Chunked prefill is the same call repeated: each `prefill` block is
+//!   masked causally at its absolute position offset
+//!   ([`Mask::CausalFrom`]).
+//!
+//! Both modes are instrumented with per-stage wall-clock ([`StageTimes`])
+//! and op counters ([`OpCounts`]) — the raw data for Figure 2, Figure 8,
+//! Table 8 and the decode-throughput bench.
 
 pub mod counts;
+pub mod state;
 pub mod fp32;
 pub mod fp16;
 pub mod quant_only;
@@ -20,6 +37,7 @@ use crate::tensor::MatF32;
 use crate::util::timer::StageTimes;
 
 pub use crate::softmax::index_softmax::Mask as AttentionMask;
+pub use state::{kv_bytes_per_token, KvState};
 
 /// Static configuration of an attention head computation.
 #[derive(Clone, Copy, Debug)]
@@ -49,6 +67,13 @@ impl AttentionConfig {
 
     pub fn causal(mut self) -> Self {
         self.mask = Mask::Causal;
+        self
+    }
+
+    /// Causal masking for a query block whose first row sits at absolute
+    /// position `offset` (chunked prefill over a KV cache).
+    pub fn causal_from(mut self, offset: usize) -> Self {
+        self.mask = Mask::CausalFrom(offset);
         self
     }
 
@@ -104,6 +129,18 @@ impl PipelineKind {
         ]
     }
 
+    /// All six pipeline kinds (the decode-equivalence suite sweeps these).
+    pub fn all() -> [PipelineKind; 6] {
+        [
+            PipelineKind::Fp32,
+            PipelineKind::Fp16,
+            PipelineKind::QuantOnly,
+            PipelineKind::IntAttention,
+            PipelineKind::ExaqInt2,
+            PipelineKind::ExaqInt3,
+        ]
+    }
+
     pub fn parse(s: &str) -> Option<PipelineKind> {
         match s.to_ascii_lowercase().as_str() {
             "fp32" => Some(PipelineKind::Fp32),
@@ -126,6 +163,40 @@ pub trait AttentionPipeline: Send {
     /// Compute `O = Attention(Q, K, V)` with the configured mask.
     /// `q` is `M×d`; `k`, `v` are `L×d` with `L == config().seq_len`.
     fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32;
+
+    /// Start an empty per-sequence KV state in this pipeline's native
+    /// operand format. The state is owned by the caller (one per sequence
+    /// per head) and threaded through [`prefill`](Self::prefill) /
+    /// [`decode_step`](Self::decode_step).
+    fn begin_state(&self) -> KvState {
+        KvState::new(self.kind(), self.config().head_dim)
+    }
+
+    /// Append the block's `k`/`v` rows to `state` (converting them once into
+    /// the resident format) and attend `q` over the entire history with a
+    /// causal mask at the block's absolute offset: query row `r` sits at
+    /// position `state.len() + r` (lengths taken *before* the append) and
+    /// sees keys `0..=state.len() + r`.
+    ///
+    /// `q`, `k`, `v` are `m×d` with equal row counts. Returns `m×d` outputs.
+    /// Chunked prefill is this call repeated; `config().seq_len` is ignored
+    /// (the history length lives in the state).
+    fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32;
+
+    /// One decode step: append the single new K/V row and attend the single
+    /// query row over the whole history (itself included). Equivalent to a
+    /// 1-row [`prefill`](Self::prefill); kept as a named entry point so the
+    /// serving loop reads like the paper's prefill/decode phase split.
+    fn decode_step(
+        &mut self,
+        state: &mut KvState,
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        debug_assert_eq!(q.rows(), 1, "decode_step takes a single query row");
+        self.prefill(state, q, k_new, v_new)
+    }
 
     /// Per-stage wall clock accumulated since the last [`reset_stats`].
     fn stage_times(&self) -> &StageTimes;
@@ -158,20 +229,49 @@ pub fn build_pipeline(kind: PipelineKind, cfg: AttentionConfig) -> Box<dyn Atten
     }
 }
 
-/// Shared shape validation for all pipelines.
+/// Shared shape validation for all pipelines (one-shot path).
 pub(crate) fn validate_shapes(cfg: &AttentionConfig, q: &MatF32, k: &MatF32, v: &MatF32) {
     assert_eq!(q.cols(), cfg.head_dim, "Q head_dim");
     assert_eq!(k.cols(), cfg.head_dim, "K head_dim");
     assert_eq!(v.cols(), cfg.head_dim, "V head_dim");
     assert_eq!(k.rows(), cfg.seq_len, "K seq_len");
     assert_eq!(v.rows(), cfg.seq_len, "V seq_len");
-    if cfg.mask == Mask::Causal {
-        assert_eq!(
+    match cfg.mask {
+        Mask::Causal => assert_eq!(
             q.rows(),
             cfg.seq_len,
             "causal mask requires square attention (q rows == seq_len)"
-        );
+        ),
+        // Chunked prefill: the block's rows must land exactly at the end of
+        // the key range — `offset + m == L`.
+        Mask::CausalFrom(offset) => assert_eq!(
+            offset + q.rows(),
+            cfg.seq_len,
+            "offset-causal mask requires offset + q rows == seq_len"
+        ),
+        Mask::None => {}
     }
+}
+
+/// Shared shape validation for the stateful prefill/decode path.
+pub(crate) fn validate_state_shapes(
+    cfg: &AttentionConfig,
+    st: &KvState,
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+) {
+    assert_eq!(q.cols(), cfg.head_dim, "Q head_dim");
+    assert_eq!(k.cols(), cfg.head_dim, "K head_dim");
+    assert_eq!(v.cols(), cfg.head_dim, "V head_dim");
+    assert_eq!(st.head_dim(), cfg.head_dim, "state head_dim");
+    assert_eq!(
+        k.rows(),
+        q.rows(),
+        "prefill appends one K/V row per query row (self-attention)"
+    );
+    assert_eq!(v.rows(), k.rows(), "K/V row count mismatch");
+    assert!(q.rows() > 0, "empty query block");
 }
 
 #[cfg(test)]
@@ -199,21 +299,33 @@ mod tests {
         assert_eq!(cfg.mask, Mask::Causal);
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.gemm_flops(128), 2 * 2 * 128 * 128 * 64);
+        let cfg = AttentionConfig::new(128, 64).causal_from(96);
+        assert_eq!(cfg.mask, Mask::CausalFrom(96));
     }
 
     #[test]
     fn factory_builds_every_kind() {
         let cfg = AttentionConfig::new(16, 8);
-        for k in [
-            PipelineKind::Fp32,
-            PipelineKind::Fp16,
-            PipelineKind::QuantOnly,
-            PipelineKind::IntAttention,
-            PipelineKind::ExaqInt2,
-            PipelineKind::ExaqInt3,
-        ] {
+        for k in PipelineKind::all() {
             let p = build_pipeline(k, cfg);
             assert_eq!(p.kind(), k);
+        }
+    }
+
+    #[test]
+    fn begin_state_matches_kind_storage() {
+        let cfg = AttentionConfig::new(16, 8);
+        for k in PipelineKind::all() {
+            let p = build_pipeline(k, cfg);
+            let st = p.begin_state();
+            assert_eq!(st.len(), 0);
+            assert_eq!(st.head_dim(), 8);
+            let want = match k {
+                PipelineKind::Fp32 => "fp32",
+                PipelineKind::Fp16 => "fp16",
+                _ => "int8",
+            };
+            assert_eq!(st.storage_name(), want, "{}", k.name());
         }
     }
 }

@@ -13,11 +13,16 @@
 //!   6. PvGemm     — `P̂·V̂` in i8×i8→i32
 //!   7. Output     — `O = (s_V/127)·(P̂V̂)`
 
-use crate::attention::{counts, validate_shapes, AttentionConfig, AttentionPipeline, PipelineKind};
+use crate::attention::state::KvState;
+use crate::attention::{
+    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
+    PipelineKind,
+};
 use crate::energy::OpCounts;
-use crate::gemm::{gemm_i8_notrans, par_gemm_i8};
+use crate::gemm::{gemm_i8_notrans, gemm_i8_notrans_slices, par_gemm_i8, par_gemm_i8_slices};
 use crate::quant::{quantize_i8, quantize_p_i8};
 use crate::softmax::float_softmax::softmax_rows;
+use crate::softmax::index_softmax::Mask;
 use crate::tensor::{MatF32, MatI32};
 use crate::util::timer::{Stage, StageTimes};
 
@@ -88,6 +93,71 @@ impl AttentionPipeline for QuantOnlyAttention {
 
         // (7) output rescale.
         let out_scale = vq.scale / 127.0;
+        let o = self
+            .times
+            .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
+        self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    /// Stateful block forward. The K/V history stays resident as INT8 — the
+    /// stateful path saves Quant-Only the per-token history re-quantization,
+    /// but its logit matrix still takes the dequantize→softmax→requantize
+    /// detour every step (the paper's point stands in serving, too).
+    fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
+        validate_state_shapes(&self.cfg, state, q, k, v);
+        let (m, d) = (q.rows(), self.cfg.head_dim);
+        let threads = self.cfg.threads;
+
+        // (1) quantize the query block + append-quantize the new K/V rows.
+        let (qq, remapped) = self.times.measure(Stage::Quantize, || {
+            let remapped = state.append(k, v);
+            (quantize_i8(q), remapped)
+        });
+        self.ops.add(&counts::quantize_qkv(m, k.rows(), d));
+        if remapped > 0 {
+            self.ops.add(&counts::kv_rescale(remapped as u64));
+        }
+
+        let st = state.as_int8();
+        let l = st.len;
+        let mask = Mask::CausalFrom(l - m);
+        let alpha = qq.scale * st.k.scale / (d as f32).sqrt();
+
+        // (2) Q̂·K̂ᵀ against the resident INT8 keys.
+        let mut logits = MatI32::zeros(m, l);
+        self.times.measure(Stage::QkGemm, || {
+            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, threads);
+        });
+        self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+
+        // (3) dequantize the block's logits — the detour, every step.
+        let mut a = self
+            .times
+            .measure(Stage::Dequantize, || logits.map(|x| x as f32 * alpha));
+        let valid = counts::valid_positions(m, l, mask);
+        self.ops.add(&counts::dequantize_logits((m * l) as u64));
+
+        // (4) FP32 softmax over the offset-causal window.
+        self.times.measure(Stage::Softmax, || {
+            softmax_rows(&mut a, mask);
+        });
+        self.ops.add(&counts::fp32_softmax(valid, m as u64));
+
+        // (5) requantize probabilities to signed INT8.
+        let p8 = self.times.measure(Stage::Requantize, || quantize_p_i8(&a));
+        self.ops.add(&counts::requantize_probs(valid));
+
+        // (6) aggregation against the resident INT8 values.
+        let mut acc = MatI32::zeros(m, d);
+        self.times.measure(Stage::PvGemm, || {
+            gemm_i8_notrans_slices(p8.as_slice(), &st.v.data, acc.as_mut_slice(), m, l, d);
+        });
+        let nnz = p8.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+        self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+        // (7) output rescale with the state's running V scale.
+        let out_scale = st.v.scale / 127.0;
         let o = self
             .times
             .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));

@@ -1,0 +1,446 @@
+//! Per-sequence KV state for the stateful prefill/decode attention API.
+//!
+//! The paper's whole point is an unbroken integer dataflow; a serving path
+//! that stores FP32 K/V history and re-quantizes it on every decode step
+//! breaks that dataflow and costs O(L·d) redundant conversions per token.
+//! Instead, each pipeline owns a [`KvState`] per sequence (per head) holding
+//! K/V **in the pipeline's native operand format**:
+//!
+//! * integer pipelines (Quant-Only, IntAttention, EXAQ) keep K̂/V̂ as INT8
+//!   rows plus one running per-tensor scale each ([`Int8KvState`]). A decode
+//!   step quantizes only the new row. When a new row's magnitude exceeds the
+//!   running abs-max, the resident rows are re-mapped to the wider grid in
+//!   the integer domain (`round(x̂·s_old/s_new)`) — an O(L·d) event that
+//!   occurs only when the running maximum actually grows, not per token
+//!   (the same "keep quantized operands resident" discipline as I-BERT and
+//!   the ITA accelerator).
+//! * FP32 / FP16 pipelines keep native-dtype rows ([`F32KvState`],
+//!   [`F16KvState`]).
+//!
+//! States also carry the running Δ-statistics EXAQ's dynamic clipping needs
+//! ([`ExaqRunningStats`]), so EXAQ decode keeps its O(1)-per-token cost
+//! instead of re-scanning history for the clip range.
+
+use crate::attention::PipelineKind;
+use crate::tensor::MatF32;
+use crate::util::f16::{encode_slice, F16};
+
+/// One side (K or V) of an INT8-resident state: quantized rows plus the
+/// running per-tensor scale bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Int8Side {
+    /// Quantized rows, `len×d` row-major.
+    pub data: Vec<i8>,
+    /// Dequantization scale: `x ≈ scale · x̂` (1.0 while all-zero).
+    pub scale: f32,
+    /// Running abs-max over every row ever appended.
+    pub amax: f32,
+    /// How many times the resident rows were re-mapped to a wider grid.
+    pub rescales: u64,
+}
+
+impl Int8Side {
+    fn new() -> Self {
+        Int8Side { data: Vec::new(), scale: 1.0, amax: 0.0, rescales: 0 }
+    }
+
+    /// Quantize and append `rows`, widening the grid first if the running
+    /// abs-max grew. Matches `quantize_i8`'s conventions (symmetric ±127,
+    /// scale 1.0 for all-zero data), so after any append sequence the scale
+    /// equals what one-shot quantization of the concatenated rows would use.
+    ///
+    /// Returns the number of resident elements re-mapped by the re-scale
+    /// path (0 on the common fast path) so callers can charge the work to
+    /// their op counters.
+    fn append(&mut self, rows: &MatF32) -> usize {
+        let mut remapped = 0;
+        let new_amax = rows.abs_max();
+        if new_amax > self.amax {
+            let new_scale = new_amax / 127.0;
+            if !self.data.is_empty() && self.amax > 0.0 {
+                // Re-scale path: re-map resident INT8 rows onto the wider
+                // grid entirely in the quantized domain (no FP32 history
+                // exists to re-quantize from — that is the point).
+                let ratio = self.scale / new_scale;
+                for q in self.data.iter_mut() {
+                    *q = ((*q as f32) * ratio).round().clamp(-127.0, 127.0) as i8;
+                }
+                self.rescales += 1;
+                remapped = self.data.len();
+            }
+            self.amax = new_amax;
+            self.scale = new_scale;
+        }
+        let inv = 1.0 / self.scale;
+        self.data.reserve(rows.len());
+        for &x in rows.as_slice() {
+            self.data.push((x * inv).round().clamp(-127.0, 127.0) as i8);
+        }
+        remapped
+    }
+}
+
+/// Running statistics of the max-subtracted distances `Δ = m − a` (scaled by
+/// α), accumulated across prefill/decode calls — EXAQ's dynamic clip range
+/// without the per-step O(L) history re-scan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExaqRunningStats {
+    pub sum: f64,
+    pub sumsq: f64,
+    pub n: u64,
+}
+
+impl ExaqRunningStats {
+    pub fn merge(&mut self, sum: f64, sumsq: f64, n: u64) {
+        self.sum += sum;
+        self.sumsq += sumsq;
+        self.n += n;
+    }
+
+    /// Standard deviation of all Δ seen so far (0 before any data).
+    pub fn sigma(&self) -> f32 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let mean = self.sum / self.n as f64;
+        let var = (self.sumsq / self.n as f64 - mean * mean).max(0.0);
+        var.sqrt() as f32
+    }
+}
+
+/// INT8-resident K/V state (Quant-Only, IntAttention, EXAQ pipelines).
+#[derive(Clone, Debug)]
+pub struct Int8KvState {
+    pub d: usize,
+    pub len: usize,
+    pub k: Int8Side,
+    pub v: Int8Side,
+    /// Used only by the EXAQ pipelines (zero-cost for the others).
+    pub exaq: ExaqRunningStats,
+}
+
+/// FP32-resident K/V state.
+#[derive(Clone, Debug)]
+pub struct F32KvState {
+    pub d: usize,
+    pub len: usize,
+    /// `len×d` row-major keys.
+    pub k: Vec<f32>,
+    /// `len×d` row-major values.
+    pub v: Vec<f32>,
+}
+
+/// FP16-storage K/V state (binary16 rows, decoded tile-wise at compute time).
+#[derive(Clone, Debug)]
+pub struct F16KvState {
+    pub d: usize,
+    pub len: usize,
+    pub k: Vec<F16>,
+    pub v: Vec<F16>,
+}
+
+/// A per-sequence (per-head) KV cache entry owned by the pipeline kind that
+/// created it. Appending K/V rows converts them **once** into the pipeline's
+/// operand format; no later call re-quantizes or re-copies history.
+#[derive(Clone, Debug)]
+pub enum KvState {
+    F32(F32KvState),
+    F16(F16KvState),
+    Int8(Int8KvState),
+}
+
+impl KvState {
+    /// The state format a pipeline kind keeps resident.
+    pub fn new(kind: PipelineKind, head_dim: usize) -> KvState {
+        assert!(head_dim > 0, "head_dim must be positive");
+        match kind {
+            PipelineKind::Fp32 => KvState::F32(F32KvState {
+                d: head_dim,
+                len: 0,
+                k: Vec::new(),
+                v: Vec::new(),
+            }),
+            PipelineKind::Fp16 => KvState::F16(F16KvState {
+                d: head_dim,
+                len: 0,
+                k: Vec::new(),
+                v: Vec::new(),
+            }),
+            PipelineKind::QuantOnly
+            | PipelineKind::IntAttention
+            | PipelineKind::ExaqInt2
+            | PipelineKind::ExaqInt3 => KvState::Int8(Int8KvState {
+                d: head_dim,
+                len: 0,
+                k: Int8Side::new(),
+                v: Int8Side::new(),
+                exaq: ExaqRunningStats::default(),
+            }),
+        }
+    }
+
+    /// Cached positions.
+    pub fn len(&self) -> usize {
+        match self {
+            KvState::F32(s) => s.len,
+            KvState::F16(s) => s.len,
+            KvState::Int8(s) => s.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Head dimension the state was built for.
+    pub fn head_dim(&self) -> usize {
+        match self {
+            KvState::F32(s) => s.d,
+            KvState::F16(s) => s.d,
+            KvState::Int8(s) => s.d,
+        }
+    }
+
+    /// Append `k_rows`/`v_rows` (equal row counts, `head_dim` columns) in
+    /// the state's native format. Returns the number of resident elements
+    /// the INT8 re-scale path re-mapped (0 for float states and on the
+    /// common integer fast path).
+    pub fn append(&mut self, k_rows: &MatF32, v_rows: &MatF32) -> usize {
+        let n = k_rows.rows();
+        assert_eq!(v_rows.rows(), n, "K/V row count mismatch");
+        assert_eq!(k_rows.cols(), self.head_dim(), "K head_dim");
+        assert_eq!(v_rows.cols(), self.head_dim(), "V head_dim");
+        match self {
+            KvState::F32(s) => {
+                s.k.extend_from_slice(k_rows.as_slice());
+                s.v.extend_from_slice(v_rows.as_slice());
+                s.len += n;
+                0
+            }
+            KvState::F16(s) => {
+                s.k.extend(encode_slice(k_rows.as_slice()));
+                s.v.extend(encode_slice(v_rows.as_slice()));
+                s.len += n;
+                0
+            }
+            KvState::Int8(s) => {
+                let remapped = s.k.append(k_rows) + s.v.append(v_rows);
+                s.len += n;
+                remapped
+            }
+        }
+    }
+
+    /// Actual memory footprint in bytes: K/V payload at the native element
+    /// width, plus the scale/statistics bookkeeping integer states carry.
+    /// This is what the coordinator's admission control charges per request.
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvState::F32(s) => (s.k.len() + s.v.len()) * 4,
+            KvState::F16(s) => (s.k.len() + s.v.len()) * 2,
+            // INT8 payload + per-side (scale, amax, rescales) + EXAQ stats.
+            KvState::Int8(s) => s.k.data.len() + s.v.data.len() + 2 * 16 + 24,
+        }
+    }
+
+    /// The INT8 state, panicking if this state was built by a float pipeline.
+    pub fn as_int8(&self) -> &Int8KvState {
+        match self {
+            KvState::Int8(s) => s,
+            other => panic!(
+                "pipeline expects an INT8 KV state, got {} (state built by a different pipeline kind)",
+                other.storage_name()
+            ),
+        }
+    }
+
+    pub fn as_int8_mut(&mut self) -> &mut Int8KvState {
+        match self {
+            KvState::Int8(s) => s,
+            other => panic!(
+                "pipeline expects an INT8 KV state, got {} (state built by a different pipeline kind)",
+                other.storage_name()
+            ),
+        }
+    }
+
+    pub fn as_f32(&self) -> &F32KvState {
+        match self {
+            KvState::F32(s) => s,
+            other => panic!(
+                "pipeline expects an FP32 KV state, got {} (state built by a different pipeline kind)",
+                other.storage_name()
+            ),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut F32KvState {
+        match self {
+            KvState::F32(s) => s,
+            other => panic!(
+                "pipeline expects an FP32 KV state, got {} (state built by a different pipeline kind)",
+                other.storage_name()
+            ),
+        }
+    }
+
+    pub fn as_f16(&self) -> &F16KvState {
+        match self {
+            KvState::F16(s) => s,
+            other => panic!(
+                "pipeline expects an FP16 KV state, got {} (state built by a different pipeline kind)",
+                other.storage_name()
+            ),
+        }
+    }
+
+    pub fn as_f16_mut(&mut self) -> &mut F16KvState {
+        match self {
+            KvState::F16(s) => s,
+            other => panic!(
+                "pipeline expects an FP16 KV state, got {} (state built by a different pipeline kind)",
+                other.storage_name()
+            ),
+        }
+    }
+
+    /// Storage format name (diagnostics).
+    pub fn storage_name(&self) -> &'static str {
+        match self {
+            KvState::F32(_) => "fp32",
+            KvState::F16(_) => "fp16",
+            KvState::Int8(_) => "int8",
+        }
+    }
+}
+
+/// Bytes one cached token costs for `kind` at head dimension `d` across K
+/// and V (payload only — the per-state constant overhead is excluded so the
+/// estimate scales linearly for admission control).
+pub fn kv_bytes_per_token(kind: PipelineKind, d: usize) -> usize {
+    let elem = match kind {
+        PipelineKind::Fp32 => 4,
+        PipelineKind::Fp16 => 2,
+        _ => 1,
+    };
+    2 * d * elem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_i8;
+    use crate::util::prng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+        MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn kinds_map_to_expected_storage() {
+        assert_eq!(KvState::new(PipelineKind::Fp32, 8).storage_name(), "fp32");
+        assert_eq!(KvState::new(PipelineKind::Fp16, 8).storage_name(), "fp16");
+        for kind in [
+            PipelineKind::QuantOnly,
+            PipelineKind::IntAttention,
+            PipelineKind::ExaqInt2,
+            PipelineKind::ExaqInt3,
+        ] {
+            assert_eq!(KvState::new(kind, 8).storage_name(), "int8");
+        }
+    }
+
+    #[test]
+    fn int8_running_scale_matches_one_shot_quantization() {
+        // Appending chunk-by-chunk must end with the same scale one-shot
+        // per-tensor quantization of the concatenated rows produces.
+        let mut rng = Pcg64::seed_from_u64(1);
+        let full = rand_mat(&mut rng, 24, 8);
+        let mut st = KvState::new(PipelineKind::IntAttention, 8);
+        for start in (0..24).step_by(6) {
+            let chunk = MatF32::from_vec(6, 8, full.as_slice()[start * 8..(start + 6) * 8].to_vec());
+            st.append(&chunk, &chunk);
+        }
+        let s = st.as_int8();
+        let one_shot = quantize_i8(&full);
+        assert_eq!(s.len, 24);
+        assert!((s.k.scale - one_shot.scale).abs() < 1e-12, "{} vs {}", s.k.scale, one_shot.scale);
+        // Rows quantized after the amax stopped growing are bit-identical to
+        // one-shot; earlier rows pick up ≤ half an LSB of extra rounding per
+        // re-scale event (3 chunks after the first ⇒ ≤ 2 LSB here).
+        for (a, b) in s.k.data.iter().zip(one_shot.data.as_slice()) {
+            assert!((*a as i32 - *b as i32).abs() <= 2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rescale_fires_only_when_amax_grows() {
+        let mut st = KvState::new(PipelineKind::IntAttention, 2);
+        let small = MatF32::from_vec(1, 2, vec![0.5, -0.25]);
+        let big = MatF32::from_vec(1, 2, vec![4.0, 1.0]);
+        st.append(&small, &small);
+        assert_eq!(st.as_int8().k.rescales, 0);
+        st.append(&small, &small); // same magnitude: no rescale
+        assert_eq!(st.as_int8().k.rescales, 0);
+        st.append(&big, &big); // amax grows 0.5 → 4.0: resident rows re-map
+        let s = st.as_int8();
+        assert_eq!(s.k.rescales, 1);
+        assert!((s.k.amax - 4.0).abs() < 1e-12);
+        // Old rows re-mapped onto the wider grid: 0.5 at scale 4/127 → 16.
+        assert_eq!(s.k.data[0], 16);
+        st.append(&small, &small); // shrinking magnitudes never rescale
+        assert_eq!(st.as_int8().k.rescales, 1);
+    }
+
+    #[test]
+    fn zero_rows_are_safe() {
+        let mut st = KvState::new(PipelineKind::QuantOnly, 4);
+        let z = MatF32::zeros(3, 4);
+        st.append(&z, &z);
+        let s = st.as_int8();
+        assert_eq!(s.k.scale, 1.0);
+        assert!(s.k.data.iter().all(|&x| x == 0));
+        // First nonzero append after zeros must not count as a "rescale"
+        // (there is nothing to re-map).
+        let nz = MatF32::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]);
+        st.append(&nz, &nz);
+        assert_eq!(st.as_int8().k.rescales, 0);
+        assert_eq!(st.len(), 4);
+    }
+
+    #[test]
+    fn bytes_reflect_native_widths() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let rows = rand_mat(&mut rng, 10, 16);
+        let mut f32s = KvState::new(PipelineKind::Fp32, 16);
+        let mut f16s = KvState::new(PipelineKind::Fp16, 16);
+        let mut i8s = KvState::new(PipelineKind::IntAttention, 16);
+        for s in [&mut f32s, &mut f16s, &mut i8s] {
+            s.append(&rows, &rows);
+        }
+        assert_eq!(f32s.bytes(), 2 * 10 * 16 * 4);
+        assert_eq!(f16s.bytes(), 2 * 10 * 16 * 2);
+        // INT8: payload + 56 B of scale/stat bookkeeping.
+        assert_eq!(i8s.bytes(), 2 * 10 * 16 + 56);
+        assert_eq!(kv_bytes_per_token(PipelineKind::Fp32, 16), 128);
+        assert_eq!(kv_bytes_per_token(PipelineKind::Fp16, 16), 64);
+        assert_eq!(kv_bytes_per_token(PipelineKind::IntAttention, 16), 32);
+    }
+
+    #[test]
+    fn exaq_stats_accumulate() {
+        let mut st = ExaqRunningStats::default();
+        assert_eq!(st.sigma(), 0.0);
+        // Two batches of {0, 2} → mean 1, var 1.
+        st.merge(2.0, 4.0, 2);
+        st.merge(2.0, 4.0, 2);
+        assert!((st.sigma() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "different pipeline kind")]
+    fn cross_kind_access_panics() {
+        let st = KvState::new(PipelineKind::Fp32, 4);
+        let _ = st.as_int8();
+    }
+}

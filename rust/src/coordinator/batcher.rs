@@ -16,11 +16,32 @@ pub struct BatchPolicy {
     pub prefill_token_budget: usize,
     /// Admit shorter prompts first within a round.
     pub shortest_first: bool,
+    /// Prefill chunk size: prompts longer than this are prefilled in chunks
+    /// of at most this many tokens (offset-causal masking over the KV
+    /// states), bounding the latency spike a long prompt injects into the
+    /// round. 0 disables chunking.
+    pub prefill_chunk: usize,
+    /// KV-memory budget in bytes across all active sequences, reserved with
+    /// the *pipeline-native* per-token footprint (INT8 + scales for the
+    /// integer pipelines — see `KvCache::bytes_per_token`). Each active
+    /// sequence reserves its full projected prompt+generation footprint, so
+    /// the bound holds through decode growth. A request that would overflow
+    /// the budget waits in the queue — and once one request defers, the
+    /// rest of that round's admissions defer behind it (no intra-round
+    /// leapfrogging); a request too big for the whole budget still runs
+    /// when the engine drains. 0 disables the bound.
+    pub max_kv_bytes: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_active: 8, prefill_token_budget: 2048, shortest_first: true }
+        BatchPolicy {
+            max_active: 8,
+            prefill_token_budget: 2048,
+            shortest_first: true,
+            prefill_chunk: 256,
+            max_kv_bytes: 0,
+        }
     }
 }
 
@@ -104,7 +125,7 @@ mod tests {
     #[test]
     fn respects_token_budget() {
         let mut queue = q(vec![req(1, 600), req(2, 600), req(3, 600)]);
-        let policy = BatchPolicy { max_active: 8, prefill_token_budget: 1000, shortest_first: false };
+        let policy = BatchPolicy { max_active: 8, prefill_token_budget: 1000, shortest_first: false, ..Default::default() };
         let adm = select_admissions(&mut queue, 0, &policy);
         assert_eq!(adm.len(), 1, "only one 600-token prompt fits in 1000");
     }
@@ -112,7 +133,7 @@ mod tests {
     #[test]
     fn shortest_first_ordering() {
         let mut queue = q(vec![req(1, 500), req(2, 50), req(3, 200)]);
-        let policy = BatchPolicy { max_active: 2, prefill_token_budget: 10_000, shortest_first: true };
+        let policy = BatchPolicy { max_active: 2, prefill_token_budget: 10_000, shortest_first: true, ..Default::default() };
         let adm = select_admissions(&mut queue, 0, &policy);
         assert_eq!(adm.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
         assert_eq!(queue.front().unwrap().id, 1);
@@ -121,7 +142,7 @@ mod tests {
     #[test]
     fn fifo_when_shortest_first_disabled() {
         let mut queue = q(vec![req(1, 500), req(2, 50)]);
-        let policy = BatchPolicy { max_active: 1, prefill_token_budget: 10_000, shortest_first: false };
+        let policy = BatchPolicy { max_active: 1, prefill_token_budget: 10_000, shortest_first: false, ..Default::default() };
         let adm = select_admissions(&mut queue, 0, &policy);
         assert_eq!(adm[0].id, 1);
     }
@@ -129,7 +150,7 @@ mod tests {
     #[test]
     fn oversized_prompt_not_starved() {
         let mut queue = q(vec![req(1, 5000)]);
-        let policy = BatchPolicy { max_active: 4, prefill_token_budget: 1000, shortest_first: true };
+        let policy = BatchPolicy { max_active: 4, prefill_token_budget: 1000, shortest_first: true, ..Default::default() };
         // Nothing active → must still admit.
         let adm = select_admissions(&mut queue, 0, &policy);
         assert_eq!(adm.len(), 1);

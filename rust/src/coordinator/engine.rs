@@ -46,15 +46,27 @@ impl Default for EngineOptions {
     }
 }
 
-/// A request in flight.
+/// A request in flight. Admission starts it in the prefill phase
+/// (`prompt_pos < prompt.len()`); once the last prompt chunk is absorbed the
+/// first token is sampled and it moves to the decode phase.
 struct Active {
     req: Request,
     cache: KvCache,
+    /// Prompt tokens already prefilled into the cache.
+    prompt_pos: usize,
     generated: Vec<u16>,
     queue_us: u64,
+    prefill_started: Instant,
+    /// Set when the prefill phase completes (admission → first token).
     prefill_us: u64,
     decode_started: Instant,
     rng: crate::util::prng::Pcg64,
+}
+
+impl Active {
+    fn prefilling(&self) -> bool {
+        self.prompt_pos < self.req.prompt.len()
+    }
 }
 
 /// Public handle: submit requests, read metrics, shut down.
@@ -185,6 +197,11 @@ fn scheduler_loop(
     let cfg = *lm.config();
     let mut waiting: VecDeque<Request> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
+    // Head-of-line guarantee for the KV budget: once a request is deferred
+    // for KV memory, its id is pinned here and no other request may admit
+    // ahead of it on any later round (shortest-first would otherwise let a
+    // stream of small requests starve it forever).
+    let mut kv_head: Option<u64> = None;
 
     loop {
         // (1) drain submissions.
@@ -223,37 +240,93 @@ fn scheduler_loop(
             }
         }
 
-        // (2) admissions → prefill.
+        // (2) admissions, under the KV-byte budget.
         let admitted = select_admissions(&mut waiting, active.len(), &opts.policy);
+        let bytes_per_tok = KvCache::bytes_per_token(opts.attention, &cfg);
+        // Reserve each active sequence's *projected* footprint (prompt +
+        // full generation at the pipeline-native width), not just what its
+        // cache holds right now — otherwise concurrent decodes grow past
+        // the budget after admission.
+        let mut kv_reserved: usize = active
+            .iter()
+            .map(|a| (a.req.prompt.len() + a.req.gen_len) * bytes_per_tok)
+            .sum();
+        let mut deferred: Vec<Request> = Vec::new();
         for req in admitted {
+            let projected = (req.prompt.len() + req.gen_len) * bytes_per_tok;
+            if kv_head.is_some_and(|id| id != req.id)
+                || (opts.policy.max_kv_bytes > 0
+                    && kv_reserved + projected > opts.policy.max_kv_bytes
+                    && !active.is_empty())
+            {
+                // Over budget (or behind a previously KV-deferred request):
+                // wait for running sequences to retire. The oldest deferred
+                // request is pinned as `kv_head`, so later/smaller arrivals
+                // cannot leapfrog it across rounds; a request too big for
+                // the whole budget still runs once the active set drains.
+                if kv_head.is_none() {
+                    kv_head = Some(req.id);
+                }
+                deferred.push(req);
+                continue;
+            }
+            if kv_head == Some(req.id) {
+                kv_head = None;
+            }
+            kv_reserved += projected;
             let queue_us = req.arrived.elapsed().as_micros() as u64;
-            let t0 = Instant::now();
-            let mut cache = KvCache::new(cfg.n_layers, cfg.d_model);
-            let logits = lm.forward(&req.prompt, Some(&mut cache));
-            metrics.on_prefill_tokens(req.prompt.len());
-            let mut rng = crate::util::prng::Pcg64::seed_from_u64(req.id ^ 0x5EED);
-            let first = sample_row(
-                logits.row(logits.rows() - 1),
-                req.temperature,
-                req.top_k,
-                &mut rng,
-            );
-            let prefill_us = t0.elapsed().as_micros() as u64;
             active.push(Active {
-                req,
-                cache,
-                generated: vec![first],
+                cache: lm.new_cache(),
+                prompt_pos: 0,
+                generated: Vec::new(),
                 queue_us,
-                prefill_us,
+                prefill_started: Instant::now(),
+                prefill_us: 0,
                 decode_started: Instant::now(),
-                rng,
+                rng: crate::util::prng::Pcg64::seed_from_u64(req.id ^ 0x5EED),
+                req,
             });
+        }
+        // Put KV-deferred requests back at the front, preserving order.
+        for req in deferred.into_iter().rev() {
+            waiting.push_front(req);
         }
         metrics.on_active(active.len());
 
-        // (3) one decode step per active request (continuous batching).
+        // (3a) advance prefills: at most one chunk per request per round, so
+        // a long prompt shares the round with concurrent decodes instead of
+        // monopolizing it (chunked prefill over the offset-causal mask).
         for a in active.iter_mut() {
-            if a.generated.len() >= a.req.gen_len {
+            if !a.prefilling() {
+                continue;
+            }
+            let chunk = if opts.policy.prefill_chunk == 0 {
+                a.req.prompt.len()
+            } else {
+                opts.policy.prefill_chunk.max(1)
+            };
+            let end = (a.prompt_pos + chunk).min(a.req.prompt.len());
+            let logits = lm.forward(&a.req.prompt[a.prompt_pos..end], Some(&mut a.cache));
+            metrics.on_prefill_tokens(end - a.prompt_pos);
+            a.prompt_pos = end;
+            if !a.prefilling() {
+                // Prefill complete: sample the first token.
+                let first = sample_row(
+                    logits.row(logits.rows() - 1),
+                    a.req.temperature,
+                    a.req.top_k,
+                    &mut a.rng,
+                );
+                a.generated.push(first);
+                a.prefill_us = a.prefill_started.elapsed().as_micros() as u64;
+                a.decode_started = Instant::now();
+            }
+        }
+        metrics.on_kv_bytes(active.iter().map(|a| a.cache.bytes()).sum());
+
+        // (3b) one decode step per decoding request (continuous batching).
+        for a in active.iter_mut() {
+            if a.prefilling() || a.generated.len() >= a.req.gen_len {
                 continue;
             }
             let last = *a.generated.last().unwrap();
@@ -361,6 +434,53 @@ mod tests {
             let _ = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         }
         h.shutdown();
+    }
+
+    #[test]
+    fn kv_budget_defers_but_serves_eventually() {
+        // A budget that fits roughly one sequence: requests must serialize
+        // through the KV bound, not be rejected or deadlocked.
+        let opts = EngineOptions {
+            policy: BatchPolicy { max_kv_bytes: 300, ..Default::default() },
+            ..Default::default()
+        };
+        let h = Engine::start_bounded(small_weights(), opts);
+        let rxs: Vec<_> = (0..4)
+            .map(|i| h.submit(vec![1, 2, (i + 1) as u16], 4, 0.0, 1).unwrap())
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            assert_eq!(resp.tokens.len(), 4);
+        }
+        let snap = h.shutdown();
+        assert_eq!(snap.completed, 4);
+        assert!(snap.peak_kv_bytes > 0, "kv accounting must be recorded");
+        assert!(
+            snap.peak_kv_bytes <= 400,
+            "budget must keep concurrent kv small: {} B",
+            snap.peak_kv_bytes
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_preserves_greedy_output() {
+        let w = small_weights();
+        let prompt: Vec<u16> = (1..=10).collect();
+        let run = |chunk: usize| {
+            let opts = EngineOptions {
+                attention: PipelineKind::Fp32,
+                policy: BatchPolicy { prefill_chunk: chunk, ..Default::default() },
+                ..Default::default()
+            };
+            let h = Engine::start_bounded(w.clone(), opts);
+            let rx = h.submit(prompt.clone(), 5, 0.0, 1).unwrap();
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            h.shutdown();
+            resp.tokens
+        };
+        // FP32 row-wise math is independent of the chunking, so greedy
+        // decoding must be bit-stable across chunk sizes.
+        assert_eq!(run(0), run(3));
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub struct MetricsInner {
     pub per_token_us: LogHistogram,
     /// Max concurrent active (decoding) requests observed.
     pub peak_active: usize,
+    /// Max total KV-cache bytes held by active requests (pipeline-native
+    /// widths: INT8 + scales for the integer pipelines).
+    pub peak_kv_bytes: usize,
 }
 
 impl Default for MetricsInner {
@@ -35,6 +38,7 @@ impl Default for MetricsInner {
             e2e_us: LogHistogram::new(),
             per_token_us: LogHistogram::new(),
             peak_active: 0,
+            peak_kv_bytes: 0,
         }
     }
 }
@@ -59,6 +63,12 @@ impl Metrics {
     pub fn on_active(&self, n: usize) {
         let mut m = self.0.lock().unwrap();
         m.peak_active = m.peak_active.max(n);
+    }
+
+    /// Record the current total KV bytes of all active sequences.
+    pub fn on_kv_bytes(&self, bytes: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.peak_kv_bytes = m.peak_kv_bytes.max(bytes);
     }
 
     pub fn on_complete(&self, resp: &crate::coordinator::request::Response) {
@@ -96,6 +106,7 @@ impl Metrics {
             e2e_p99_us: m.e2e_us.percentile_us(99.0),
             per_token_mean_us: m.per_token_us.mean_us(),
             peak_active: m.peak_active,
+            peak_kv_bytes: m.peak_kv_bytes,
         }
     }
 }
@@ -117,13 +128,15 @@ pub struct MetricsSnapshot {
     pub e2e_p99_us: f64,
     pub per_token_mean_us: f64,
     pub peak_active: usize,
+    pub peak_kv_bytes: usize,
 }
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests: {} ok / {} rejected / {} submitted | tokens: {} prefill + {} decode \
-             | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms | peak batch {}",
+             | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms | peak batch {} \
+             | peak kv {:.1} KiB",
             self.completed,
             self.rejected,
             self.submitted,
@@ -134,6 +147,7 @@ impl MetricsSnapshot {
             self.ttft_p99_us / 1e3,
             self.e2e_p50_us / 1e3,
             self.peak_active,
+            self.peak_kv_bytes as f64 / 1024.0,
         )
     }
 }

@@ -53,15 +53,24 @@ impl Response {
 }
 
 /// Why a submit was rejected.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    #[error("queue full (backpressure)")]
     QueueFull,
-    #[error("engine is shutting down")]
     ShuttingDown,
-    #[error("prompt empty or exceeds max context")]
     BadRequest,
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SubmitError::QueueFull => "queue full (backpressure)",
+            SubmitError::ShuttingDown => "engine is shutting down",
+            SubmitError::BadRequest => "prompt empty or exceeds max context",
+        })
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 #[cfg(test)]
 mod tests {

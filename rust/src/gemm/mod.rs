@@ -156,6 +156,72 @@ pub fn gemm_f32_notrans(p: &MatF32, v: &MatF32, c: &mut MatF32) {
     }
 }
 
+/// Slice-based f32 GEMM (`bt` row-major `N×K`): the stateful attention path
+/// multiplies against resident KV-state buffers without materializing `Mat`
+/// wrappers or copying history.
+pub fn gemm_f32_slices(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(bt.len(), n * k, "Bᵀ shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    gemm_f32_slices_rows(a, bt, c, n, k, 0, m);
+}
+
+fn gemm_f32_slices_rows(a: &[f32], bt: &[f32], c: &mut [f32], n: usize, k: usize, r0: usize, r1: usize) {
+    for i in r0..r1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, out) in crow.iter_mut().enumerate() {
+            *out = dot_f32(arow, &bt[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Thread-parallel [`gemm_f32_slices`].
+pub fn par_gemm_f32_slices(
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    if threads <= 1 {
+        return gemm_f32_slices(a, bt, c, m, n, k);
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    scope_chunks_with(threads, m, |r0, r1| {
+        // Each chunk writes only rows [r0, r1): disjoint regions of C.
+        let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
+        gemm_f32_slices_rows(a, bt, c_full, n, k, r0, r1);
+    });
+}
+
+/// Slice-based `P·V` with V in natural `L×d` row layout (no transpose of
+/// the resident state); skips exact zeros like [`gemm_f32_notrans`].
+pub fn gemm_f32_notrans_slices(p: &[f32], v: &[f32], c: &mut [f32], m: usize, l: usize, d: usize) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(v.len(), l * d, "V shape");
+    assert_eq!(c.len(), m * d, "C shape");
+    for i in 0..m {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0.0);
+        for (j, &pij) in prow.iter().enumerate() {
+            if pij == 0.0 {
+                continue;
+            }
+            let vrow = &v[j * d..(j + 1) * d];
+            for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                *acc += pij * vx;
+            }
+        }
+    }
+}
+
 /// Wrapper for sending a raw pointer across scoped threads; the row ranges
 /// passed to each thread are disjoint by construction.
 struct SendPtr<T>(*mut T);
@@ -218,7 +284,7 @@ pub fn gemm_i8(a: &MatI8, bt: &MatI8, c: &mut MatI32) {
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     #[cfg(target_arch = "x86_64")]
     {
-        if *HAS_AVX512 {
+        if has_avx512() {
             // SAFETY: feature presence checked via cpuid (once).
             return unsafe { dot_i8_avx512(a, b) };
         }
@@ -226,9 +292,14 @@ pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     dot_i8_scalar(a, b)
 }
 
+/// One-time cpuid probe (std `OnceLock`; the offline cache has no
+/// `once_cell`).
 #[cfg(target_arch = "x86_64")]
-static HAS_AVX512: once_cell::sync::Lazy<bool> =
-    once_cell::sync::Lazy::new(|| is_x86_feature_detected!("avx512bw"));
+#[inline]
+fn has_avx512() -> bool {
+    static FLAG: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FLAG.get_or_init(|| is_x86_feature_detected!("avx512bw"))
+}
 
 /// AVX-512 i8 dot product: sign-extend 32 i8 lanes to i16, then `vpmaddwd`
 /// (32 i16 products pairwise-summed into 16 i32 lanes) with a vector
@@ -278,7 +349,7 @@ pub fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
 fn gemm_i8_rows(a: &[i8], bt: &[i8], c: &mut [i32], _m: usize, n: usize, k: usize, r0: usize, r1: usize) {
     #[cfg(target_arch = "x86_64")]
     {
-        if *HAS_AVX512 {
+        if has_avx512() {
             // SAFETY: feature checked; row ranges in-bounds by construction.
             unsafe { gemm_i8_rows_avx512(a, bt, c, n, k, r0, r1) };
             return;
@@ -383,6 +454,38 @@ pub fn par_gemm_i8(a: &MatI8, bt: &MatI8, c: &mut MatI32, threads: usize) {
     });
 }
 
+/// Slice-based i8 GEMM (`bt` row-major `N×K`, i.e. keys-as-rows): the
+/// stateful attention path's `Q̂·K̂ᵀ` against the resident INT8 K state.
+pub fn gemm_i8_slices(a: &[i8], bt: &[i8], c: &mut [i32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(bt.len(), n * k, "Bᵀ shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    gemm_i8_rows(a, bt, c, m, n, k, 0, m);
+}
+
+/// Thread-parallel [`gemm_i8_slices`].
+pub fn par_gemm_i8_slices(
+    a: &[i8],
+    bt: &[i8],
+    c: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(bt.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    if threads <= 1 {
+        return gemm_i8_slices(a, bt, c, m, n, k);
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    scope_chunks_with(threads, m, |r0, r1| {
+        let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
+        gemm_i8_rows(a, bt, c_full, m, n, k, r0, r1);
+    });
+}
+
 // ---------------------------------------------------------------------------
 // u8 × i8 → i32  (P̂·V̂, §3.2)
 
@@ -458,6 +561,63 @@ pub fn gemm_i8_notrans(p: &MatI8, v: &MatI8, c: &mut MatI32) {
             let vrow = &v_s[j * d..(j + 1) * d];
             for (acc, &vx) in crow.iter_mut().zip(vrow) {
                 *acc += pv * (vx as i32);
+            }
+        }
+    }
+}
+
+/// Slice-based [`gemm_u8i8`] for the stateful path (`V̂` is the resident
+/// INT8 state, `L×d` row-major, never copied or transposed).
+pub fn gemm_u8i8_slices(p: &[u8], v: &[i8], c: &mut [i32], m: usize, l: usize, d: usize) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(v.len(), l * d, "V shape");
+    assert_eq!(c.len(), m * d, "C shape");
+    gemm_u8i8_rows(p, v, c, l, d, 0, m);
+}
+
+/// Slice-based [`gemm_i8_notrans`] (Quant-Only's signed-P aggregation over
+/// the resident INT8 state).
+pub fn gemm_i8_notrans_slices(p: &[i8], v: &[i8], c: &mut [i32], m: usize, l: usize, d: usize) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(v.len(), l * d, "V shape");
+    assert_eq!(c.len(), m * d, "C shape");
+    for i in 0..m {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0);
+        for (j, &pij) in prow.iter().enumerate() {
+            if pij == 0 {
+                continue;
+            }
+            let pv = pij as i32;
+            let vrow = &v[j * d..(j + 1) * d];
+            for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                *acc += pv * (vx as i32);
+            }
+        }
+    }
+}
+
+/// `C = P·V` with both operands in f16 storage and V in natural `L×d` row
+/// layout — the incremental-decode companion of [`gemm_f16`] (which wants
+/// Bᵀ). Decodes V rows on the fly and accumulates in f32; skips exact-zero
+/// probabilities (masked-out or underflowed entries).
+pub fn gemm_f16_notrans(p: &[F16], v: &[F16], c: &mut [f32], m: usize, l: usize, d: usize) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(v.len(), l * d, "V shape");
+    assert_eq!(c.len(), m * d, "C shape");
+    for i in 0..m {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0.0);
+        for (j, &pij) in prow.iter().enumerate() {
+            let pf = pij.to_f32();
+            if pf == 0.0 {
+                continue;
+            }
+            let vrow = &v[j * d..(j + 1) * d];
+            for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                *acc += pf * vx.to_f32();
             }
         }
     }
@@ -649,6 +809,85 @@ mod tests {
         for (x, y) in c.iter().zip(c_ref.as_slice()) {
             // f16 inputs: rel error ~2^-11 per element, k=32 accumulation.
             assert!((x - y).abs() <= 0.02 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn slice_kernels_match_mat_kernels() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let (m, n, k) = (7, 19, 33);
+        // f32
+        let a = rand_f32(&mut rng, m, k);
+        let bt = rand_f32(&mut rng, n, k);
+        let mut c_ref = MatF32::zeros(m, n);
+        gemm_f32(&a, &bt, &mut c_ref);
+        let mut c = vec![0f32; m * n];
+        gemm_f32_slices(a.as_slice(), bt.as_slice(), &mut c, m, n, k);
+        assert!(c
+            .iter()
+            .zip(c_ref.as_slice())
+            .all(|(x, y)| (x - y).abs() < 1e-4));
+        let mut c_par = vec![0f32; m * n];
+        par_gemm_f32_slices(a.as_slice(), bt.as_slice(), &mut c_par, m, n, k, 3);
+        assert_eq!(c, c_par);
+        // i8
+        let ai = rand_i8(&mut rng, m, k);
+        let bi = rand_i8(&mut rng, n, k);
+        let mut ci_ref = MatI32::zeros(m, n);
+        gemm_i8(&ai, &bi, &mut ci_ref);
+        let mut ci = vec![0i32; m * n];
+        gemm_i8_slices(ai.as_slice(), bi.as_slice(), &mut ci, m, n, k);
+        assert_eq!(&ci, ci_ref.as_slice());
+        let mut ci_par = vec![0i32; m * n];
+        par_gemm_i8_slices(ai.as_slice(), bi.as_slice(), &mut ci_par, m, n, k, 4);
+        assert_eq!(ci, ci_par);
+    }
+
+    #[test]
+    fn notrans_slice_kernels_match_mat_kernels() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        let (m, l, d) = (6, 21, 10);
+        let pu = rand_u8(&mut rng, m, l);
+        let v = rand_i8(&mut rng, l, d);
+        let mut c_ref = MatI32::zeros(m, d);
+        gemm_u8i8(&pu, &v, &mut c_ref);
+        let mut c = vec![0i32; m * d];
+        gemm_u8i8_slices(pu.as_slice(), v.as_slice(), &mut c, m, l, d);
+        assert_eq!(&c, c_ref.as_slice());
+        // i8 notrans
+        let pi: MatI8 = pu.map(|x| (x / 2) as i8);
+        let mut ci_ref = MatI32::zeros(m, d);
+        gemm_i8_notrans(&pi, &v, &mut ci_ref);
+        let mut ci = vec![0i32; m * d];
+        gemm_i8_notrans_slices(pi.as_slice(), v.as_slice(), &mut ci, m, l, d);
+        assert_eq!(&ci, ci_ref.as_slice());
+        // f32 notrans
+        let pf = rand_f32(&mut rng, m, l);
+        let vf = rand_f32(&mut rng, l, d);
+        let mut cf_ref = MatF32::zeros(m, d);
+        gemm_f32_notrans(&pf, &vf, &mut cf_ref);
+        let mut cf = vec![0f32; m * d];
+        gemm_f32_notrans_slices(pf.as_slice(), vf.as_slice(), &mut cf, m, l, d);
+        assert!(cf
+            .iter()
+            .zip(cf_ref.as_slice())
+            .all(|(x, y)| (x - y).abs() < 1e-5));
+    }
+
+    #[test]
+    fn f16_notrans_close_to_f32_reference() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let (m, l, d) = (4, 16, 8);
+        let pf = rand_f32(&mut rng, m, l);
+        let vf = rand_f32(&mut rng, l, d);
+        let mut c_ref = MatF32::zeros(m, d);
+        gemm_f32_notrans(&pf, &vf, &mut c_ref);
+        let ph: Vec<F16> = pf.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        let vh: Vec<F16> = vf.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        let mut c = vec![0f32; m * d];
+        gemm_f16_notrans(&ph, &vh, &mut c, m, l, d);
+        for (x, y) in c.iter().zip(c_ref.as_slice()) {
+            assert!((x - y).abs() <= 0.05 * y.abs().max(1.0), "{x} vs {y}");
         }
     }
 

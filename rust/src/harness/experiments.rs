@@ -230,6 +230,104 @@ pub fn render_speed(rows: &[SpeedRow], title: &str) -> Table {
 }
 
 // ---------------------------------------------------------------------------
+// Decode throughput — the serving-path bench (stateful prefill/decode API)
+
+#[derive(Clone, Debug)]
+pub struct DecodeRow {
+    pub pipeline: PipelineKind,
+    /// Context length already resident in the KV state when decoding starts.
+    pub ctx: usize,
+    /// Decoded tokens per second at that context length.
+    pub tok_s: f64,
+    /// Mean Quantize-stage nanoseconds per decoded token. For the stateful
+    /// integer pipelines this is O(1) in `ctx` — the step quantizes only the
+    /// new K/V row and the 1-row query, never the resident history.
+    pub quantize_ns_per_tok: f64,
+    /// KV state footprint (native widths) at the end of the run.
+    pub kv_bytes: usize,
+}
+
+/// Single-head decode throughput: prefill `ctx` positions into a KV state,
+/// then time `gen_tokens` incremental decode steps.
+pub fn decode_sweep(ctx_lens: &[usize], d: usize, gen_tokens: usize, threads: usize) -> Vec<DecodeRow> {
+    let mut rng = Pcg64::seed_from_u64(31);
+    let mut rows = Vec::new();
+    for &ctx in ctx_lens {
+        for kind in PipelineKind::headline() {
+            let cfg = AttentionConfig::new(ctx + gen_tokens, d).with_threads(threads);
+            let mut pipe = build_pipeline(kind, cfg);
+            let mut st = pipe.begin_state();
+            let (q, k, v) = random_qkv(&mut rng, ctx, d, 1.0);
+            let _ = pipe.prefill(&mut st, &q, &k, &v);
+            pipe.reset_stats();
+            // Pre-generate the decode inputs so the timed loop is pure
+            // pipeline work.
+            let steps: Vec<_> = (0..gen_tokens)
+                .map(|_| random_qkv(&mut rng, 1, d, 1.0))
+                .collect();
+            let t0 = std::time::Instant::now();
+            for (q1, k1, v1) in &steps {
+                crate::util::bench::black_box(pipe.decode_step(&mut st, q1, k1, v1));
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-12);
+            let quantize_ns_per_tok = pipe
+                .stage_times()
+                .get_ns(crate::util::timer::Stage::Quantize) as f64
+                / gen_tokens as f64;
+            rows.push(DecodeRow {
+                pipeline: kind,
+                ctx,
+                tok_s: gen_tokens as f64 / dt,
+                quantize_ns_per_tok,
+                kv_bytes: st.bytes(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_decode(rows: &[DecodeRow]) -> Table {
+    let mut t = Table::new(
+        "Decode throughput — stateful KV path (single head, incremental decode)",
+        &["pipeline", "ctx", "tok/s", "quantize ns/tok", "kv bytes", "speedup vs FP16"],
+    );
+    for r in rows {
+        let fp16 = rows
+            .iter()
+            .find(|x| x.ctx == r.ctx && x.pipeline == PipelineKind::Fp16)
+            .map(|x| x.tok_s)
+            .unwrap_or(r.tok_s);
+        t.row(vec![
+            r.pipeline.name().into(),
+            r.ctx.to_string(),
+            format!("{:.0}", r.tok_s),
+            format!("{:.0}", r.quantize_ns_per_tok),
+            r.kv_bytes.to_string(),
+            format!("{:.2}x", r.tok_s / fp16),
+        ]);
+    }
+    t
+}
+
+/// JSON payload for the decode bench, in the `kv_rows_json` label/value
+/// shape shared by the fig/tab reports.
+pub fn decode_rows_json(rows: &[DecodeRow]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for r in rows {
+        out.push((format!("{}@ctx{}:tok_s", r.pipeline.name(), r.ctx), r.tok_s));
+        out.push((
+            format!("{}@ctx{}:quantize_ns_per_tok", r.pipeline.name(), r.ctx),
+            r.quantize_ns_per_tok,
+        ));
+        out.push((
+            format!("{}@ctx{}:kv_bytes", r.pipeline.name(), r.ctx),
+            r.kv_bytes as f64,
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Figure 8 — energy model
 
 #[derive(Clone, Debug)]
@@ -675,6 +773,25 @@ mod tests {
         assert!(get(2, 6.6) < get(5, 6.6));
         // b≥4 stable: going 4→6 changes little.
         assert!((get(4, 6.6) - get(6, 6.6)).abs() < 0.01);
+    }
+
+    #[test]
+    fn decode_sweep_shapes_and_kv_footprint() {
+        let rows = decode_sweep(&[32, 64], 32, 4, 1);
+        assert_eq!(rows.len(), 2 * PipelineKind::headline().len());
+        let get = |k: PipelineKind, c: usize| {
+            rows.iter().find(|r| r.pipeline == k && r.ctx == c).unwrap()
+        };
+        assert!(rows.iter().all(|r| r.tok_s > 0.0));
+        // INT8-resident states are ~4× smaller than FP32's.
+        let ia = get(PipelineKind::IntAttention, 64);
+        let fp = get(PipelineKind::Fp32, 64);
+        assert!(ia.kv_bytes * 3 < fp.kv_bytes, "{} vs {}", ia.kv_bytes, fp.kv_bytes);
+        // Exact payload: (ctx + gen) rows × (K+V) × d × 1 B + bookkeeping.
+        assert_eq!(ia.kv_bytes, (64 + 4) * 2 * 32 + 56);
+        assert_eq!(fp.kv_bytes, (64 + 4) * 2 * 32 * 4);
+        // JSON payload covers every row's three metrics.
+        assert_eq!(decode_rows_json(&rows).len(), 3 * rows.len());
     }
 
     #[test]

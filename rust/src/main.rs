@@ -57,7 +57,7 @@ fn build_app() -> App {
         )
         .command(
             Command::new("bench", "run a paper experiment")
-                .opt("id", "fig2|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|tab5|tab8|tab9|tab10|all", Some("all"))
+                .opt("id", "fig2|fig4|fig5|fig6|fig7|fig8|fig9|tab1|tab2|tab3|tab5|tab8|tab9|tab10|decode|all", Some("all"))
                 .opt("seq-lens", "comma-separated L sweep", None)
                 .opt("head-dim", "head dimension d", Some("128")),
         )
@@ -209,6 +209,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     if run("tab9") {
         let (i8f, u8f) = exp::tab9_p_quant(256, d.min(64), 4);
         exp::render_tab9(&i8f, &u8f).print();
+    }
+    if run("decode") {
+        exp::render_decode(&exp::decode_sweep(&lens, d, 32, 1)).print();
     }
     if run("tab1") || run("tab5") || run("tab3") || run("tab10") || run("tab2") {
         let w = exp::load_or_random_weights();

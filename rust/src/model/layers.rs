@@ -2,7 +2,7 @@
 //! attention wrapper that routes each head through a configurable
 //! [`AttentionPipeline`].
 
-use crate::attention::{build_pipeline, AttentionConfig, PipelineKind};
+use crate::attention::{build_pipeline, AttentionConfig, KvState, PipelineKind};
 use crate::energy::OpCounts;
 use crate::gemm::gemm_f32;
 use crate::model::weights::BlockWeights;
@@ -86,6 +86,12 @@ pub struct MultiHeadAttention {
     pub n_heads: usize,
     pub d_head: usize,
     pub threads: usize,
+    /// Per-head pipelines for the stateful path, built lazily on the first
+    /// prefill/decode call and reused for every subsequent one — a decode
+    /// step must not reconstruct pipelines (and e.g. the IndexSoftmax LUT)
+    /// per token. Keyed to `kind`/`threads` at build time; changing those
+    /// fields after the first stateful call is not supported.
+    state_pipes: Vec<Box<dyn AttentionPipeline>>,
     times: StageTimes,
     ops: OpCounts,
 }
@@ -97,6 +103,7 @@ impl MultiHeadAttention {
             n_heads,
             d_head,
             threads,
+            state_pipes: Vec::new(),
             times: StageTimes::new(),
             ops: OpCounts::default(),
         }
@@ -127,6 +134,77 @@ impl MultiHeadAttention {
             let oh = pipe.forward(&qh, &kh, &vh);
             self.times.merge(pipe.stage_times());
             self.ops.add(pipe.op_counts());
+            unslice_head(&mut out, &oh, h, self.d_head);
+        }
+        out
+    }
+
+    /// Fresh per-head KV states for one sequence (pipeline-native storage:
+    /// INT8 rows + scales for the integer kinds, raw rows for FP32/FP16).
+    pub fn begin_states(&self) -> Vec<KvState> {
+        (0..self.n_heads)
+            .map(|_| KvState::new(self.kind, self.d_head))
+            .collect()
+    }
+
+    /// Stateful prefill of one block: `q_all`/`k_all`/`v_all` are `m×d_model`
+    /// projections for positions `states[h].len()..states[h].len()+m`; each
+    /// head appends its K/V slice to its state and attends causally at that
+    /// offset. Repeated calls implement chunked prefill.
+    pub fn prefill(&mut self, states: &mut [KvState], q_all: &MatF32, k_all: &MatF32, v_all: &MatF32) -> MatF32 {
+        self.run_stateful(states, q_all, k_all, v_all, false)
+    }
+
+    /// One decode step (`q_all`/`k_all`/`v_all` are `1×d_model`): append the
+    /// new K/V row per head and attend the single query over the history.
+    pub fn decode(&mut self, states: &mut [KvState], q_all: &MatF32, k_all: &MatF32, v_all: &MatF32) -> MatF32 {
+        assert_eq!(q_all.rows(), 1, "decode takes a single position");
+        self.run_stateful(states, q_all, k_all, v_all, true)
+    }
+
+    fn run_stateful(
+        &mut self,
+        states: &mut [KvState],
+        q_all: &MatF32,
+        k_all: &MatF32,
+        v_all: &MatF32,
+        decode: bool,
+    ) -> MatF32 {
+        assert_eq!(states.len(), self.n_heads, "one KV state per head");
+        let m = q_all.rows();
+        let d_model = self.n_heads * self.d_head;
+        assert_eq!(q_all.cols(), d_model);
+        assert_eq!(k_all.cols(), d_model);
+        assert_eq!(v_all.cols(), d_model);
+        assert_eq!(k_all.rows(), m);
+        assert_eq!(v_all.rows(), m);
+        if self.state_pipes.is_empty() {
+            // seq_len/mask are per-call state in the stateful API (derived
+            // from the KvState); the config only contributes head_dim,
+            // threads and the softmax hyperparameters here.
+            let cfg = AttentionConfig {
+                seq_len: 0,
+                head_dim: self.d_head,
+                mask: Mask::None,
+                threads: self.threads,
+                isx: Default::default(),
+            };
+            self.state_pipes = (0..self.n_heads).map(|_| build_pipeline(self.kind, cfg)).collect();
+        }
+        let mut out = MatF32::zeros(m, d_model);
+        for (h, state) in states.iter_mut().enumerate() {
+            let qh = slice_head(q_all, h, self.d_head);
+            let kh = slice_head(k_all, h, self.d_head);
+            let vh = slice_head(v_all, h, self.d_head);
+            let pipe = &mut self.state_pipes[h];
+            let oh = if decode {
+                pipe.decode_step(state, &qh, &kh, &vh)
+            } else {
+                pipe.prefill(state, &qh, &kh, &vh)
+            };
+            self.times.merge(pipe.stage_times());
+            self.ops.add(pipe.op_counts());
+            pipe.reset_stats();
             unslice_head(&mut out, &oh, h, self.d_head);
         }
         out
@@ -235,6 +313,36 @@ mod tests {
             .forward(&q, &k, &v, Mask::Causal);
         let cos = crate::util::stats::cosine_similarity(of.as_slice(), oi.as_slice());
         assert!(cos > 0.99, "cos={cos}");
+    }
+
+    #[test]
+    fn mha_stateful_matches_one_shot_causal() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let (t, d_model) = (20, 16);
+        let q = rand_mat(&mut rng, t, d_model);
+        let k = rand_mat(&mut rng, t, d_model);
+        let v = rand_mat(&mut rng, t, d_model);
+        for kind in [PipelineKind::Fp32, PipelineKind::IntAttention] {
+            let want = MultiHeadAttention::new(kind, 2, 8, 1).forward(&q, &k, &v, Mask::Causal);
+            let mut mha = MultiHeadAttention::new(kind, 2, 8, 1);
+            let mut states = mha.begin_states();
+            let part = |m: &MatF32, r0: usize, r1: usize| {
+                MatF32::from_vec(r1 - r0, d_model, m.as_slice()[r0 * d_model..r1 * d_model].to_vec())
+            };
+            // Prefill 12 rows in two chunks, then 8 decode steps.
+            let mut got = Vec::new();
+            for (r0, r1) in [(0, 8), (8, 12)] {
+                let o = mha.prefill(&mut states, &part(&q, r0, r1), &part(&k, r0, r1), &part(&v, r0, r1));
+                got.extend_from_slice(o.as_slice());
+            }
+            for r in 12..t {
+                let o = mha.decode(&mut states, &part(&q, r, r + 1), &part(&k, r, r + 1), &part(&v, r, r + 1));
+                got.extend_from_slice(o.as_slice());
+            }
+            assert!(states.iter().all(|s| s.len() == t));
+            let cos = crate::util::stats::cosine_similarity(&got, want.as_slice());
+            assert!(cos > 0.999, "{}: cos={cos}", kind.name());
+        }
     }
 
     #[test]

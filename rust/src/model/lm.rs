@@ -1,11 +1,29 @@
-//! The tiny transformer LM: forward pass, KV-cached incremental decode,
-//! perplexity evaluation and sampling — everything the serving engine and
-//! the fidelity experiments need.
+//! The tiny transformer LM: stateful prefill/decode over pipeline-owned KV
+//! states, perplexity evaluation and sampling — everything the serving
+//! engine and the fidelity experiments need.
 //!
 //! Pre-norm GPT-style blocks:
 //! `x += attn(LN1(x)); x += mlp(LN2(x)); logits = LN_f(x)·tok_embᵀ` (tied head).
+//!
+//! ## The KV cache is pipeline-owned state
+//!
+//! [`KvCache`] holds one [`KvState`] per (layer, head), created lazily in
+//! the attention backend's native operand format the first time the cache is
+//! filled. For the integer pipelines that means INT8 K̂/V̂ rows plus running
+//! per-tensor scales — a decode step quantizes exactly one new row per
+//! layer/head and **never** materializes or re-quantizes the FP32 history
+//! (the old design's O(len·d_model) per-token conversion cost). For
+//! FP32/FP16 backends the states hold native-dtype rows.
+//!
+//! ## Chunked prefill
+//!
+//! [`TinyLm::forward`] with a cache may be called repeatedly: each call
+//! embeds its tokens at the cache's current position offset and attends with
+//! an offset-causal mask (`Mask::CausalFrom`), so a long prompt can be
+//! prefilled in scheduler-friendly chunks. [`TinyLm::decode_step`] is the
+//! 1-token special case.
 
-use crate::attention::PipelineKind;
+use crate::attention::{kv_bytes_per_token, KvState, PipelineKind};
 use crate::energy::OpCounts;
 use crate::gemm::gemm_f32;
 use crate::model::config::ModelConfig;
@@ -16,40 +34,56 @@ use crate::tensor::MatF32;
 use crate::util::prng::Pcg64;
 use crate::util::timer::StageTimes;
 
-/// Per-layer KV cache for incremental decoding.
+/// Per-sequence KV cache: one pipeline-owned [`KvState`] per (layer, head).
 #[derive(Clone, Debug, Default)]
 pub struct KvCache {
-    /// One `(K, V)` pair per layer; each grows row-by-row (`len×d_model`).
-    pub layers: Vec<(Vec<f32>, Vec<f32>)>,
+    /// `layers[l]` holds the per-head states of layer `l`; empty until the
+    /// first prefill reaches that layer (the model knows the pipeline kind
+    /// and head geometry, the cache does not need to).
+    pub layers: Vec<Vec<KvState>>,
+    /// Cached positions (tokens fully absorbed into every layer).
     pub len: usize,
     pub d_model: usize,
 }
 
 impl KvCache {
     pub fn new(n_layers: usize, d_model: usize) -> Self {
-        KvCache { layers: vec![(Vec::new(), Vec::new()); n_layers], len: 0, d_model }
+        KvCache { layers: vec![Vec::new(); n_layers], len: 0, d_model }
     }
 
-    fn append(&mut self, layer: usize, k_rows: &MatF32, v_rows: &MatF32) {
-        let (k, v) = &mut self.layers[layer];
-        k.extend_from_slice(k_rows.as_slice());
-        v.extend_from_slice(v_rows.as_slice());
+    /// Layer `layer`'s per-head states, created on first use.
+    fn layer_states(
+        &mut self,
+        layer: usize,
+        kind: PipelineKind,
+        n_heads: usize,
+        d_head: usize,
+    ) -> &mut [KvState] {
+        debug_assert_eq!(n_heads * d_head, self.d_model, "head geometry vs cache d_model");
+        let states = &mut self.layers[layer];
+        if states.is_empty() {
+            *states = (0..n_heads).map(|_| KvState::new(kind, d_head)).collect();
+        }
+        debug_assert_eq!(states.len(), n_heads);
+        &mut states[..]
     }
 
-    /// Materialize layer `layer`'s K (or V) as an `len×d_model` matrix.
-    /// `len` is passed explicitly because during a decode step rows are
-    /// appended before `self.len` is advanced.
-    fn k_mat(&self, layer: usize, len: usize) -> MatF32 {
-        MatF32::from_vec(len, self.d_model, self.layers[layer].0[..len * self.d_model].to_vec())
-    }
-
-    fn v_mat(&self, layer: usize, len: usize) -> MatF32 {
-        MatF32::from_vec(len, self.d_model, self.layers[layer].1[..len * self.d_model].to_vec())
-    }
-
-    /// Memory footprint in bytes (for the coordinator's admission control).
+    /// Actual memory footprint in bytes at each state's native element
+    /// width — INT8 + scales for the integer pipelines, not a hardcoded
+    /// 4 B/elem. This is what the coordinator's admission control charges.
     pub fn bytes(&self) -> usize {
-        self.layers.iter().map(|(k, v)| (k.len() + v.len()) * 4).sum()
+        self.layers
+            .iter()
+            .flat_map(|heads| heads.iter())
+            .map(|s| s.bytes())
+            .sum()
+    }
+
+    /// Estimated payload bytes one additional cached token costs for `kind`
+    /// under `cfg` (all layers, K+V, native width) — the linear coefficient
+    /// the batcher uses to project a request's footprint before admitting it.
+    pub fn bytes_per_token(kind: PipelineKind, cfg: &ModelConfig) -> usize {
+        cfg.n_layers * cfg.n_heads * kv_bytes_per_token(kind, cfg.d_head())
     }
 }
 
@@ -57,15 +91,25 @@ impl KvCache {
 /// engine shares one instance behind the scheduler.
 pub struct TinyLm {
     pub weights: Weights,
+    /// Attention backend. Fixed at construction (the per-layer attention
+    /// wrappers below are built for it); do not change after `new`.
     pub attention_kind: PipelineKind,
     pub threads: usize,
+    /// One persistent multi-head wrapper per layer, so the stateful path's
+    /// per-head pipelines (IndexSoftmax LUT etc.) are built once and reused
+    /// across every prefill chunk and decode step.
+    mhas: Vec<MultiHeadAttention>,
     times: StageTimes,
     ops: OpCounts,
 }
 
 impl TinyLm {
     pub fn new(weights: Weights, attention_kind: PipelineKind) -> Self {
-        TinyLm { weights, attention_kind, threads: 1, times: StageTimes::new(), ops: OpCounts::default() }
+        let cfg = weights.cfg;
+        let mhas = (0..cfg.n_layers)
+            .map(|_| MultiHeadAttention::new(attention_kind, cfg.n_heads, cfg.d_head(), 1))
+            .collect();
+        TinyLm { weights, attention_kind, threads: 1, mhas, times: StageTimes::new(), ops: OpCounts::default() }
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -104,29 +148,52 @@ impl TinyLm {
         x
     }
 
-    /// Full-sequence forward (prefill). Returns logits `T×vocab` and fills
-    /// `cache` (if given) with each layer's K/V for subsequent decode steps.
+    /// Fresh KV cache sized for this model.
+    pub fn new_cache(&self) -> KvCache {
+        let cfg = self.weights.cfg;
+        KvCache::new(cfg.n_layers, cfg.d_model)
+    }
+
+    /// Block forward (prefill). Returns logits `T×vocab`. With a cache the
+    /// tokens are treated as the next `T` positions after `cache.len`:
+    /// each layer's new K/V rows are appended to the pipeline-owned states
+    /// (quantized once, in place) and attention runs with an offset-causal
+    /// mask — so calling this repeatedly implements **chunked prefill**.
+    /// Without a cache it is the stateless full-sequence forward.
     pub fn forward(&mut self, tokens: &[u16], mut cache: Option<&mut KvCache>) -> MatF32 {
         assert!(!tokens.is_empty());
         let cfg = self.weights.cfg;
-        let mut x = self.embed(tokens, 0);
+        let offset = cache.as_deref().map_or(0, |c| c.len);
+        if cache.is_some() {
+            // Cached positions are real (offset-causal) positions; the
+            // stateless path keeps the seed's clamp-at-max_seq behavior.
+            assert!(
+                offset + tokens.len() <= cfg.max_seq,
+                "prefill beyond max_seq ({} + {} > {})",
+                offset,
+                tokens.len(),
+                cfg.max_seq
+            );
+        }
+        let mut x = self.embed(tokens, offset);
         for (li, bw) in self.weights.blocks.iter().enumerate() {
             let xn = layer_norm(&x, &bw.ln1_g, &bw.ln1_b);
             let q = linear(&xn, &bw.wq, None);
             let k = linear(&xn, &bw.wk, None);
             let v = linear(&xn, &bw.wv, None);
-            if let Some(c) = cache.as_deref_mut() {
-                c.append(li, &k, &v);
-            }
-            let mut mha = MultiHeadAttention::new(
-                self.attention_kind,
-                cfg.n_heads,
-                cfg.d_head(),
-                self.threads,
-            );
-            let att = mha.forward(&q, &k, &v, Mask::Causal);
+            let mha = &mut self.mhas[li];
+            mha.threads = self.threads;
+            let att = match cache.as_deref_mut() {
+                Some(c) => {
+                    let states =
+                        c.layer_states(li, self.attention_kind, cfg.n_heads, cfg.d_head());
+                    mha.prefill(states, &q, &k, &v)
+                }
+                None => mha.forward(&q, &k, &v, Mask::Causal),
+            };
             self.times.merge(mha.stage_times());
             self.ops.add(mha.op_counts());
+            mha.reset_stats();
             let att_o = linear(&att, &bw.wo, None);
             for (xv, &av) in x.as_mut_slice().iter_mut().zip(att_o.as_slice()) {
                 *xv += av;
@@ -149,6 +216,8 @@ impl TinyLm {
     }
 
     /// One decode step: append `token` to the cache, return logits `1×vocab`.
+    /// Each layer appends exactly one K/V row to its resident states —
+    /// O(1) dtype-conversion work per token regardless of context length.
     pub fn decode_step(&mut self, token: u16, cache: &mut KvCache) -> MatF32 {
         let cfg = self.weights.cfg;
         let mut x = self.embed(&[token], cache.len);
@@ -157,22 +226,13 @@ impl TinyLm {
             let q = linear(&xn, &bw.wq, None);
             let k = linear(&xn, &bw.wk, None);
             let v = linear(&xn, &bw.wv, None);
-            cache.append(li, &k, &v);
-            // cache.len is advanced after the loop; this layer already holds
-            // len+1 rows.
-            let k_all = cache.k_mat(li, cache.len + 1);
-            let v_all = cache.v_mat(li, cache.len + 1);
-            let mut mha = MultiHeadAttention::new(
-                self.attention_kind,
-                cfg.n_heads,
-                cfg.d_head(),
-                self.threads,
-            );
-            // Single query attending over the whole cache: no causal mask
-            // needed (everything in the cache is the past).
-            let att = mha.forward(&q, &k_all, &v_all, Mask::None);
+            let mha = &mut self.mhas[li];
+            mha.threads = self.threads;
+            let states = cache.layer_states(li, self.attention_kind, cfg.n_heads, cfg.d_head());
+            let att = mha.decode(states, &q, &k, &v);
             self.times.merge(mha.stage_times());
             self.ops.add(mha.op_counts());
+            mha.reset_stats();
             let att_o = linear(&att, &bw.wo, None);
             for (xv, &av) in x.as_mut_slice().iter_mut().zip(att_o.as_slice()) {
                 *xv += av;
@@ -236,8 +296,7 @@ impl TinyLm {
         rng: &mut Pcg64,
     ) -> Vec<u16> {
         assert!(!prompt.is_empty());
-        let cfg = self.weights.cfg;
-        let mut cache = KvCache::new(cfg.n_layers, cfg.d_model);
+        let mut cache = self.new_cache();
         let logits = self.forward(prompt, Some(&mut cache));
         let mut out = Vec::with_capacity(n);
         let mut last = sample_row(logits.row(logits.rows() - 1), temperature, top_k, rng);
@@ -318,7 +377,57 @@ mod tests {
         assert_eq!(cache.len, 3);
         let _ = lm.decode_step(4, &mut cache);
         assert_eq!(cache.len, 4);
+        // FP32 states: 2 layers × 2 heads × (K+V) × 4 rows × 8 dims × 4 B.
         assert_eq!(cache.bytes(), 2 * 2 * 4 * 16 * 4);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_full_prefill() {
+        // Prefilling a prompt in two chunks must leave the cache in a state
+        // that decodes identically to a one-chunk prefill.
+        for kind in [PipelineKind::Fp32, PipelineKind::IntAttention] {
+            let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+            let w = Weights::random(cfg, 3);
+            let tokens = [5u16, 9, 1, 30, 2, 17, 8, 4];
+            let mut lm = TinyLm::new(w, kind);
+            // Path A: one-chunk prefill + decode.
+            let mut ca = lm.new_cache();
+            let _ = lm.forward(&tokens[..7], Some(&mut ca));
+            let la = lm.decode_step(tokens[7], &mut ca);
+            // Path B: chunked prefill (4 + 3) + decode.
+            let mut cb = lm.new_cache();
+            let _ = lm.forward(&tokens[..4], Some(&mut cb));
+            let _ = lm.forward(&tokens[4..7], Some(&mut cb));
+            assert_eq!(cb.len, 7);
+            let lb = lm.decode_step(tokens[7], &mut cb);
+            let cos = crate::util::stats::cosine_similarity(la.as_slice(), lb.as_slice());
+            // FP32 is exact; the integer pipelines differ only through the
+            // per-chunk Q quantization granularity.
+            assert!(cos > 0.999, "{:?}: cos={cos}", kind);
+        }
+    }
+
+    #[test]
+    fn integer_cache_stores_int8_not_fp32() {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+        let w = Weights::random(cfg, 3);
+        let mut fp = TinyLm::new(w.clone(), PipelineKind::Fp32);
+        let mut int = TinyLm::new(w, PipelineKind::IntAttention);
+        let mut cf = fp.new_cache();
+        let mut ci = int.new_cache();
+        let _ = fp.forward(&[1, 2, 3, 4, 5, 6, 7, 8], Some(&mut cf));
+        let _ = int.forward(&[1, 2, 3, 4, 5, 6, 7, 8], Some(&mut ci));
+        // INT8 payload is 4× smaller; allow the states' fixed scale
+        // bookkeeping on top.
+        let payload_fp32 = cf.bytes();
+        let payload_int = ci.bytes();
+        assert!(
+            payload_int < payload_fp32 / 3,
+            "int cache {payload_int} B not materially smaller than fp32 {payload_fp32} B"
+        );
+        // And the projected per-token cost matches the stored reality.
+        let per_tok = KvCache::bytes_per_token(PipelineKind::Fp32, &cfg);
+        assert_eq!(payload_fp32, 8 * per_tok);
     }
 
     #[test]

@@ -8,121 +8,207 @@
 //! /opt/xla-example/README.md). All modules are lowered with
 //! `return_tuple=True`, so results unwrap with `to_tuple1()` / tuple
 //! accessors.
+//!
+//! The `xla` crate is not in the offline build cache, so the executing
+//! implementation is gated behind the `pjrt` cargo feature (which requires
+//! adding the dependency — see Cargo.toml). Without it this module compiles
+//! a stub with the same API: directory/artifact bookkeeping works, but
+//! [`ArtifactRuntime::load`] / [`ArtifactRuntime::run`] report that PJRT is
+//! unavailable. [`PJRT_AVAILABLE`] lets tests and tools skip cleanly.
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+use anyhow::Result;
 use std::path::{Path, PathBuf};
 
-/// A compiled, executable artifact.
-pub struct Executable {
-    name: String,
-    exe: xla::PjRtLoadedExecutable,
-}
+/// Whether this build can actually compile and execute artifacts.
+pub const PJRT_AVAILABLE: bool = cfg!(feature = "pjrt");
 
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    /// A compiled, executable artifact.
+    pub struct Executable {
+        name: String,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Execute with f32 input buffers of the given shapes; returns all f32
-    /// outputs flattened (the artifacts used here are single- or multi-output
-    /// tuples of f32 arrays).
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                let lit = xla::Literal::vec1(data);
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims).context("reshape input literal")
+    impl Executable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with f32 input buffers of the given shapes; returns all f32
+        /// outputs flattened (the artifacts used here are single- or
+        /// multi-output tuples of f32 arrays).
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    let lit = xla::Literal::vec1(data);
+                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).context("reshape input literal")
+                })
+                .collect::<Result<_>>()?;
+            let mut result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .context("execute artifact")?[0][0]
+                .to_literal_sync()
+                .context("fetch result literal")?;
+            // Lowered with return_tuple=True: decompose the tuple.
+            let tuple = result.decompose_tuple().context("decompose result tuple")?;
+            tuple
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().context("read f32 output"))
+                .collect()
+        }
+    }
+
+    /// Loads and caches compiled artifacts from a directory of `*.hlo.txt` files.
+    pub struct ArtifactRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: HashMap<String, Executable>,
+    }
+
+    impl ArtifactRuntime {
+        /// CPU PJRT client over the given artifacts directory.
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(ArtifactRuntime {
+                client,
+                dir: dir.as_ref().to_path_buf(),
+                cache: HashMap::new(),
             })
-            .collect::<Result<_>>()?;
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .context("execute artifact")?[0][0]
-            .to_literal_sync()
-            .context("fetch result literal")?;
-        // Lowered with return_tuple=True: decompose the tuple.
-        let tuple = result.decompose_tuple().context("decompose result tuple")?;
-        tuple
-            .into_iter()
-            .map(|lit| lit.to_vec::<f32>().context("read f32 output"))
-            .collect()
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Path of a named artifact.
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.dir.join(format!("{name}.hlo.txt"))
+        }
+
+        /// True if the named artifact exists on disk.
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        /// List artifact names available in the directory.
+        pub fn list_artifacts(&self) -> Vec<String> {
+            super::list_artifacts_in(&self.dir)
+        }
+
+        /// Load + compile (cached) an artifact by name.
+        pub fn load(&mut self, name: &str) -> Result<&Executable> {
+            if !self.cache.contains_key(name) {
+                let path = self.artifact_path(name);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path not utf-8")?,
+                )
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compile artifact '{name}'"))?;
+                self.cache.insert(
+                    name.to_string(),
+                    Executable { name: name.to_string(), exe },
+                );
+            }
+            Ok(&self.cache[name])
+        }
+
+        /// Convenience: load and run in one call.
+        pub fn run(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            self.load(name)?.run_f32(inputs)
+        }
     }
 }
 
-/// Loads and caches compiled artifacts from a directory of `*.hlo.txt` files.
-pub struct ArtifactRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: HashMap<String, Executable>,
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use anyhow::Result;
+    use std::path::{Path, PathBuf};
+
+    /// Stub executable — never constructed in a non-`pjrt` build.
+    pub struct Executable {
+        name: String,
+    }
+
+    impl Executable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!(
+                "cannot execute artifact '{}': built without the `pjrt` feature",
+                self.name
+            )
+        }
+    }
+
+    /// Directory bookkeeping works without PJRT; compilation/execution do not.
+    pub struct ArtifactRuntime {
+        dir: PathBuf,
+    }
+
+    impl ArtifactRuntime {
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            Ok(ArtifactRuntime { dir: dir.as_ref().to_path_buf() })
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the `pjrt` feature)".to_string()
+        }
+
+        pub fn artifact_path(&self, name: &str) -> PathBuf {
+            self.dir.join(format!("{name}.hlo.txt"))
+        }
+
+        pub fn has_artifact(&self, name: &str) -> bool {
+            self.artifact_path(name).exists()
+        }
+
+        pub fn list_artifacts(&self) -> Vec<String> {
+            super::list_artifacts_in(&self.dir)
+        }
+
+        pub fn load(&mut self, name: &str) -> Result<&Executable> {
+            anyhow::bail!(
+                "cannot compile artifact '{name}': this binary was built without the \
+                 `pjrt` feature (the offline image lacks the `xla` crate)"
+            )
+        }
+
+        pub fn run(&mut self, name: &str, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            self.load(name)?;
+            unreachable!("load always errors in the stub runtime")
+        }
+    }
 }
 
-impl ArtifactRuntime {
-    /// CPU PJRT client over the given artifacts directory.
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(ArtifactRuntime {
-            client,
-            dir: dir.as_ref().to_path_buf(),
-            cache: HashMap::new(),
-        })
-    }
+pub use pjrt_impl::{ArtifactRuntime, Executable};
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Path of a named artifact.
-    pub fn artifact_path(&self, name: &str) -> PathBuf {
-        self.dir.join(format!("{name}.hlo.txt"))
-    }
-
-    /// True if the named artifact exists on disk.
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.artifact_path(name).exists()
-    }
-
-    /// List artifact names available in the directory.
-    pub fn list_artifacts(&self) -> Vec<String> {
-        let mut names = Vec::new();
-        if let Ok(entries) = std::fs::read_dir(&self.dir) {
-            for e in entries.flatten() {
-                let fname = e.file_name().to_string_lossy().to_string();
-                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
-                    names.push(stem.to_string());
-                }
+/// Shared directory listing for both implementations.
+fn list_artifacts_in(dir: &Path) -> Vec<String> {
+    let mut names = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let fname = e.file_name().to_string_lossy().to_string();
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                names.push(stem.to_string());
             }
         }
-        names.sort();
-        names
     }
-
-    /// Load + compile (cached) an artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<&Executable> {
-        if !self.cache.contains_key(name) {
-            let path = self.artifact_path(name);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compile artifact '{name}'"))?;
-            self.cache.insert(
-                name.to_string(),
-                Executable { name: name.to_string(), exe },
-            );
-        }
-        Ok(&self.cache[name])
-    }
-
-    /// Convenience: load and run in one call.
-    pub fn run(&mut self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        self.load(name)?.run_f32(inputs)
-    }
+    names.sort();
+    names
 }
 
 /// Default artifacts directory: `$INTATTN_ARTIFACTS` or `artifacts/` under
@@ -157,6 +243,19 @@ mod tests {
         assert!(rt.has_artifact("alpha"));
         assert!(!rt.has_artifact("gamma"));
         assert_eq!(rt.list_artifacts(), vec!["alpha".to_string(), "beta".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailability() {
+        let dir = std::env::temp_dir().join("intattn_rt_stub_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let mut rt = ArtifactRuntime::new(&dir).unwrap();
+        assert!(!PJRT_AVAILABLE);
+        assert!(rt.platform().contains("unavailable"));
+        let err = rt.run("whatever", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

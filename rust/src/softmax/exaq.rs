@@ -59,12 +59,15 @@ impl ExaqSoftmax {
         self.entries() * 4
     }
 
-    /// The dynamic clipping statistic: std-dev of the max-subtracted
-    /// distances `Δ = m − a` over the whole tensor (the "global reduction
-    /// and control overhead" IndexSoftmax eliminates).
-    pub fn dynamic_clip(&self, logits: &MatI32, alpha: f32, mask: Mask) -> f32 {
+    /// Raw Δ statistics of one logit block: `(Σδ, Σδ², count)` of the
+    /// α-scaled max-subtracted distances over the mask-valid entries. The
+    /// one-shot path reduces these immediately; the stateful decode path
+    /// merges them into the running per-sequence accumulator
+    /// (`attention::state::ExaqRunningStats`) so the clip range stays O(1)
+    /// per token instead of re-scanning history.
+    pub fn delta_stats(logits: &MatI32, alpha: f32, mask: Mask) -> (f64, f64, u64) {
         let l = logits.cols();
-        let mut n = 0usize;
+        let mut n = 0u64;
         let mut sum = 0f64;
         let mut sumsq = 0f64;
         for r in 0..logits.rows() {
@@ -78,10 +81,23 @@ impl ExaqSoftmax {
                 n += 1;
             }
         }
+        (sum, sumsq, n)
+    }
+
+    /// Clip range from a Δ standard deviation: `k_std·σ`, floored away from
+    /// zero for degenerate all-equal inputs.
+    pub fn clip_from_sigma(&self, sigma: f32) -> f32 {
+        (self.cfg.k_std * sigma).max(1e-3)
+    }
+
+    /// The dynamic clipping statistic: std-dev of the max-subtracted
+    /// distances `Δ = m − a` over the whole tensor (the "global reduction
+    /// and control overhead" IndexSoftmax eliminates).
+    pub fn dynamic_clip(&self, logits: &MatI32, alpha: f32, mask: Mask) -> f32 {
+        let (sum, sumsq, n) = Self::delta_stats(logits, alpha, mask);
         let mean = sum / n as f64;
         let var = (sumsq / n as f64 - mean * mean).max(0.0);
-        let clip = (self.cfg.k_std as f64 * var.sqrt()) as f32;
-        clip.max(1e-3) // degenerate all-equal rows
+        self.clip_from_sigma(var.sqrt() as f32)
     }
 
     /// Forward: INT32 logits → UINT8 probabilities (so the output interface
@@ -89,6 +105,13 @@ impl ExaqSoftmax {
     /// the normalization runs in f32 — EXAQ's mixed-precision dataflow.
     pub fn forward(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatU8 {
         let clip = self.dynamic_clip(logits, alpha, mask);
+        self.forward_with_clip(logits, alpha, mask, clip)
+    }
+
+    /// Forward with an externally supplied clip range (the stateful decode
+    /// path derives it from running statistics rather than this block's).
+    pub fn forward_with_clip(&self, logits: &MatI32, alpha: f32, mask: Mask, clip: f32) -> MatU8 {
+        let clip = clip.max(1e-3);
         let n = self.entries();
         // f32 LUT over [0, clip]: LUT[i] = exp(−clip·i/(n−1)), last entry 0.
         let lut: Vec<f32> = (0..n)
@@ -231,6 +254,25 @@ mod tests {
         assert!(cos3 > cos2, "INT3 {cos3} must beat INT2 {cos2}");
         assert!(cos_ix > cos3, "IndexSoftmax {cos_ix} must beat INT3 {cos3}");
         assert!(cos_ix > 0.995, "cos_ix={cos_ix}");
+    }
+
+    #[test]
+    fn forward_with_clip_round_trips_through_stats() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let logits = gaussian_logits(&mut rng, 4, 32, 400.0);
+        let alpha = 0.004f32;
+        let clip = ex.dynamic_clip(&logits, alpha, Mask::None);
+        // Supplying the same clip externally reproduces forward() exactly.
+        assert_eq!(
+            ex.forward(&logits, alpha, Mask::None),
+            ex.forward_with_clip(&logits, alpha, Mask::None, clip)
+        );
+        // And the raw stats reduce to the same clip value.
+        let (s, ss, n) = ExaqSoftmax::delta_stats(&logits, alpha, Mask::None);
+        let mean = s / n as f64;
+        let sigma = ((ss / n as f64 - mean * mean).max(0.0)).sqrt() as f32;
+        assert!((ex.clip_from_sigma(sigma) - clip).abs() < 1e-6);
     }
 
     #[test]

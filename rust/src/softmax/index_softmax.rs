@@ -88,8 +88,14 @@ impl MulShiftDiv {
 pub enum Mask {
     /// All positions attend to all positions (encoder / vision mode).
     None,
-    /// Row `i` attends to columns `0..=i` (decoder prefill mode).
+    /// Row `i` attends to columns `0..=i` (decoder prefill mode, square).
     Causal,
+    /// Causal masking with a position offset: query row `r` sits at absolute
+    /// position `offset + r` and attends to key columns `0..=offset + r`.
+    /// This is the chunked-prefill / cached-decode generalization —
+    /// `CausalFrom(0)` is identical to [`Mask::Causal`], and a single query
+    /// row at offset `L - 1` sees the whole cache (like [`Mask::None`]).
+    CausalFrom(usize),
 }
 
 impl Mask {
@@ -99,6 +105,16 @@ impl Mask {
         match self {
             Mask::None => l,
             Mask::Causal => (r + 1).min(l),
+            Mask::CausalFrom(offset) => (offset + r + 1).min(l),
+        }
+    }
+
+    /// The position offset of the first query row (0 unless `CausalFrom`).
+    #[inline]
+    pub fn offset(self) -> usize {
+        match self {
+            Mask::CausalFrom(o) => o,
+            _ => 0,
         }
     }
 }
@@ -415,6 +431,36 @@ mod tests {
         }
         // First row attends only to itself.
         assert_eq!(p.get(0, 0), 255);
+    }
+
+    #[test]
+    fn causal_from_offsets_the_valid_window() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        let ix = IndexSoftmax::default();
+        let logits = random_logits(&mut rng, 3, 8, 10_000);
+        // Query rows at absolute positions 5, 6, 7 over 8 keys.
+        let p = ix.forward(&logits, 0.001, Mask::CausalFrom(5));
+        for r in 0..3 {
+            for c in 0..8 {
+                if c > 5 + r {
+                    assert_eq!(p.get(r, c), 0, "({r},{c}) beyond offset window");
+                }
+            }
+            let s: i32 = p.row(r).iter().map(|&x| x as i32).sum();
+            assert!((s - 255).abs() <= 16, "row {r} sum {s}");
+        }
+        // Offset 0 is exactly the square causal mask.
+        let sq = random_logits(&mut rng, 6, 6, 10_000);
+        assert_eq!(
+            ix.forward(&sq, 0.002, Mask::Causal),
+            ix.forward(&sq, 0.002, Mask::CausalFrom(0))
+        );
+        // A 1-row block at offset L-1 sees everything, like Mask::None.
+        let one = random_logits(&mut rng, 1, 7, 10_000);
+        assert_eq!(
+            ix.forward(&one, 0.002, Mask::None),
+            ix.forward(&one, 0.002, Mask::CausalFrom(6))
+        );
     }
 
     #[test]

@@ -4,11 +4,15 @@
 
 use intattention::attention::{build_pipeline, AttentionConfig, PipelineKind};
 use intattention::harness::workload::random_qkv;
-use intattention::runtime::{default_artifacts_dir, ArtifactRuntime};
+use intattention::runtime::{default_artifacts_dir, ArtifactRuntime, PJRT_AVAILABLE};
 use intattention::util::prng::Pcg64;
 use intattention::util::stats::cosine_similarity;
 
 fn runtime_or_skip() -> Option<ArtifactRuntime> {
+    if !PJRT_AVAILABLE {
+        eprintln!("skipping: built without the `pjrt` feature (no `xla` crate in the image)");
+        return None;
+    }
     let dir = default_artifacts_dir();
     if !dir.join("int_attention_head_l64_d32.hlo.txt").exists() {
         eprintln!("skipping: artifacts not built (`make artifacts`)");

@@ -1,0 +1,209 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! The build image has no crates-registry access, so this shim provides the
+//! slice of anyhow's surface the project uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Semantics follow upstream where it matters:
+//!
+//! * `{}` displays the outermost (most recent) context message;
+//! * `{:#}` displays the whole chain, outermost first, `": "`-separated;
+//! * `Error` deliberately does **not** implement `std::error::Error`, so the
+//!   blanket `From<E: std::error::Error>` conversion (what makes `?` work on
+//!   `io::Error` etc.) cannot conflict with the reflexive `From<Error>`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a cause plus a stack of context messages.
+pub struct Error {
+    /// `chain[0]` is the root cause; later entries are contexts, innermost
+    /// first (so the outermost context is `chain.last()`).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.push(ctx.to_string());
+        self
+    }
+
+    /// The error chain, outermost context first, root cause last.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(|s| s.as_str())
+    }
+
+    /// The root cause message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, outermost first.
+            let mut first = true;
+            for part in self.chain.iter().rev() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(part)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.last().expect("non-empty chain"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Upstream prints the outer message then a "Caused by" list.
+        write!(f, "{}", self.chain.last().expect("non-empty chain"))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for part in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Fold `source()` links into the chain so `{:#}` shows them.
+        let mut parts = Vec::new();
+        parts.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            parts.push(s.to_string());
+            src = s.source();
+        }
+        parts.reverse(); // chain[0] must be the deepest cause
+        Error { chain: parts }
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result` and
+/// `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("reading weights").context("loading model");
+        assert_eq!(format!("{e}"), "loading model");
+        assert_eq!(format!("{e:#}"), "loading model: reading weights: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(4).unwrap(), 8);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("must be positive"));
+        assert!(format!("{}", f(200).unwrap_err()).contains("too big"));
+        let e = anyhow!("standalone {}", 42);
+        assert_eq!(format!("{e}"), "standalone 42");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = io_err().into();
+        let e = e.context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("missing file"));
+    }
+}
