@@ -37,7 +37,7 @@ fn main() {
             max_queue: 64,
             threads: 1,
         };
-        let handle = Engine::start_bounded(weights.clone(), opts);
+        let handle = Engine::start(weights.clone(), opts);
         let t0 = std::time::Instant::now();
         let mut receivers = Vec::new();
         let mut rejected = 0;

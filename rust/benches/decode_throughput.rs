@@ -1,10 +1,19 @@
-//! Decode throughput over the stateful KV path: tokens/sec for the headline
-//! pipelines at several resident context lengths, plus the per-token
-//! Quantize-stage time — which stays flat in context length for the
-//! stateful integer pipelines (the whole point: no per-token history
-//! re-quantization) while total step time grows with the two GEMMs.
+//! Decode throughput over the stateful KV path, two modes:
+//!
+//! 1. **Single-sequence sweep** — tokens/sec for the headline pipelines at
+//!    several resident context lengths, plus the per-token Quantize-stage
+//!    time — which stays flat in context length for the stateful integer
+//!    pipelines (the whole point: no per-token history re-quantization)
+//!    while total step time grows with the two GEMMs.
+//! 2. **Multi-sequence mode** — aggregate tok/s for B concurrently decoding
+//!    sequences at a fixed context, sequential loop vs one grouped
+//!    `decode_step_batch` per round. A 1-row decode GEMM cannot be split
+//!    across worker threads, so the sequential loop is stuck at one core;
+//!    the grouped kernels spread the pool across sequences, and the batch-8
+//!    speedup is the headline number of the batched-decode work.
 use intattention::harness::experiments as exp;
 use intattention::harness::report::{kv_rows_json, write_report};
+use intattention::util::threadpool::default_threads;
 
 fn main() {
     let fast = std::env::var("INTATTN_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
@@ -23,5 +32,26 @@ fn main() {
         "decode_throughput",
         &table.render(),
         Some(kv_rows_json(&exp::decode_rows_json(&rows))),
+    );
+
+    // Multi-sequence mode: batched decode through the grouped kernels vs
+    // the sequential loop at the same context length. The context must be
+    // deep enough that batch-8 grouped launches clear the int8 work-grain
+    // guard (8·ctx·d ≥ PAR_GRAIN_I8, i.e. ctx ≥ 1024 at d=128) — below
+    // that the integer launches deliberately stay inline and only the
+    // costlier-per-element FP16/FP32 rows show cross-sequence threading.
+    let threads = default_threads().min(8);
+    let (batch_ctx, batches, rounds) = if fast {
+        (64, vec![1, 4], 4)
+    } else {
+        (2048, vec![1, 2, 4, 8], 16)
+    };
+    let brows = exp::batched_decode_sweep(batch_ctx, &batches, exp::HEAD_DIM, rounds, threads);
+    let btable = exp::render_batched_decode(&brows);
+    btable.print();
+    let _ = write_report(
+        "decode_throughput_batched",
+        &btable.render(),
+        Some(kv_rows_json(&exp::batched_decode_rows_json(&brows))),
     );
 }

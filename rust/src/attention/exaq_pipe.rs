@@ -4,17 +4,20 @@
 //! float normalization show up in the Softmax stage timing; its probability
 //! output is requantized to UINT8 to keep the PV stage integer.
 
-use crate::attention::state::KvState;
+use crate::attention::state::{Int8KvState, KvState};
 use crate::attention::{
-    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
-    PipelineKind,
+    batch_output_rescale, batch_rows, counts, validate_batch_shapes, validate_shapes,
+    validate_state_shapes, AttentionConfig, AttentionPipeline, PipelineKind,
 };
 use crate::energy::OpCounts;
-use crate::gemm::{gemm_u8i8, gemm_u8i8_slices, par_gemm_i8, par_gemm_i8_slices};
+use crate::gemm::{
+    gemm_u8i8, gemm_u8i8_slices, par_gemm_i8, par_gemm_i8_grouped, par_gemm_i8_slices,
+    par_gemm_u8i8_grouped, GroupI8, GroupU8I8,
+};
 use crate::quant::quantize_i8;
 use crate::softmax::exaq::{ExaqConfig, ExaqSoftmax};
 use crate::softmax::index_softmax::Mask;
-use crate::tensor::{MatF32, MatI32};
+use crate::tensor::{MatF32, MatI32, MatU8};
 use crate::util::timer::{Stage, StageTimes};
 
 pub struct ExaqAttention {
@@ -140,6 +143,118 @@ impl AttentionPipeline for ExaqAttention {
             .times
             .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
         self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    /// Batched decode: grouped integer GEMMs with per-sequence EXAQ
+    /// statistics — each sequence merges its own Δ stats into its own
+    /// running accumulator and clips from its own σ, so the result is
+    /// bit-identical to [`AttentionPipeline::decode_step`] per sequence.
+    fn decode_step_batch(
+        &mut self,
+        states: &mut [&mut KvState],
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        validate_batch_shapes(&self.cfg, states, q, k_new, v_new);
+        let b = states.len();
+        let d = self.cfg.head_dim;
+        if b == 0 {
+            return MatF32::zeros(0, d);
+        }
+        let threads = self.cfg.threads;
+        let sqrt_d = (d as f32).sqrt();
+
+        // (1) per-sequence append + query quantization.
+        let rows = batch_rows(q, k_new, v_new);
+        let (qqs, remapped) = self.times.measure(Stage::Quantize, || {
+            let mut remapped = 0usize;
+            let mut qqs = Vec::with_capacity(b);
+            for (st, (qr, kr, vr)) in states.iter_mut().zip(&rows) {
+                remapped += st.append(kr, vr);
+                qqs.push(quantize_i8(qr));
+            }
+            (qqs, remapped)
+        });
+        for _ in 0..b {
+            self.ops.add(&counts::quantize_qkv(1, 1, d));
+        }
+        if remapped > 0 {
+            self.ops.add(&counts::kv_rescale(remapped as u64));
+        }
+
+        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ buffers.
+        let lens: Vec<usize>;
+        let mut logits: Vec<MatI32>;
+        {
+            let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
+            lens = ints.iter().map(|s| s.len).collect();
+            logits = ints.iter().map(|s| MatI32::zeros(1, s.len)).collect();
+            self.times.measure(Stage::QkGemm, || {
+                let mut groups: Vec<GroupI8> = qqs
+                    .iter()
+                    .zip(&ints)
+                    .zip(logits.iter_mut())
+                    .map(|((qq, s), lg)| GroupI8 {
+                        a: qq.data.as_slice(),
+                        b: &s.k.data,
+                        out: lg.as_mut_slice(),
+                    })
+                    .collect();
+                par_gemm_i8_grouped(&mut groups, d, threads);
+            });
+            for s in &ints {
+                self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
+            }
+        }
+
+        // (3) per-sequence EXAQ softmax: merge each sequence's Δ stats into
+        // its own running accumulator, clip from its own running σ.
+        let ps: Vec<MatU8> = self.times.measure(Stage::Softmax, || {
+            states
+                .iter_mut()
+                .zip(&qqs)
+                .zip(&logits)
+                .map(|((st, qq), lg)| {
+                    let s = st.as_int8_mut();
+                    let mask = Mask::CausalFrom(s.len - 1);
+                    let alpha = qq.scale * s.k.scale / sqrt_d;
+                    let (sum, sumsq, n) = ExaqSoftmax::delta_stats(lg, alpha, mask);
+                    s.exaq.merge(sum, sumsq, n);
+                    let clip = self.softmax.clip_from_sigma(s.exaq.sigma());
+                    self.softmax.forward_with_clip(lg, alpha, mask, clip)
+                })
+                .collect()
+        });
+        for &l in &lens {
+            self.ops.add(&counts::exaq_softmax(l as u64, 1));
+        }
+
+        // (4) one grouped P̂·V̂ launch over the B resident V̂ buffers.
+        let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
+        let mut acc = MatI32::zeros(b, d);
+        self.times.measure(Stage::PvGemm, || {
+            let mut groups: Vec<GroupU8I8> = Vec::with_capacity(b);
+            for ((p, s), out) in ps.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupU8I8 { a: p.as_slice(), b: &s.v.data, out });
+            }
+            par_gemm_u8i8_grouped(&mut groups, d, threads);
+        });
+        for (p, s) in ps.iter().zip(&ints) {
+            let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+            self.ops.add(&counts::pv_gemm(nnz, s.len, d, 1, 4));
+        }
+
+        // (5) per-sequence output rescale with each state's running V scale.
+        let o = self
+            .times
+            .measure(Stage::Output, || {
+                batch_output_rescale(&acc, d, |i| ints[i].v.scale / 255.0)
+            });
+        for _ in 0..b {
+            self.ops.add(&counts::output_rescale(1, d));
+        }
         o
     }
 

@@ -4,13 +4,15 @@
 //! economics, of a native FP16 edge path. Energy accounting prices the GEMMs
 //! at fp16-MAC cost, which is where the real-hardware advantage lives.
 
-use crate::attention::state::KvState;
+use crate::attention::state::{F16KvState, KvState};
 use crate::attention::{
-    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
-    PipelineKind,
+    batch_row, counts, validate_batch_shapes, validate_shapes, validate_state_shapes,
+    AttentionConfig, AttentionPipeline, PipelineKind,
 };
 use crate::energy::OpCounts;
-use crate::gemm::{gemm_f16, gemm_f16_notrans};
+use crate::gemm::{
+    gemm_f16, gemm_f16_notrans, par_gemm_f16_grouped, par_gemm_f16_notrans_grouped, GroupF16,
+};
 use crate::softmax::float_softmax::softmax_rows_f16;
 use crate::softmax::index_softmax::Mask;
 use crate::tensor::MatF32;
@@ -127,6 +129,95 @@ impl AttentionPipeline for Fp16Attention {
         });
         self.ops.add(&counts::pv_gemm(valid, l, d, 2, 2));
         self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    /// Batched decode: per-sequence f16 encodes and softmaxes, one grouped
+    /// launch per GEMM side — bit-identical per sequence to the sequential
+    /// [`AttentionPipeline::decode_step`] (each group runs the very same
+    /// `gemm_f16`/`gemm_f16_notrans` call the sequential path would).
+    fn decode_step_batch(
+        &mut self,
+        states: &mut [&mut KvState],
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        validate_batch_shapes(&self.cfg, states, q, k_new, v_new);
+        let b = states.len();
+        let d = self.cfg.head_dim;
+        if b == 0 {
+            return MatF32::zeros(0, d);
+        }
+        let threads = self.cfg.threads;
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // (1) per-sequence append + query-row encode to f16 storage. Row
+        // slicing happens outside the timer so the Quantize-ns metric stays
+        // comparable with the sequential path's.
+        let rows: Vec<(MatF32, MatF32)> = (0..b)
+            .map(|i| (batch_row(k_new, i), batch_row(v_new, i)))
+            .collect();
+        let qhs: Vec<Vec<F16>> = self.times.measure(Stage::Quantize, || {
+            let mut qhs = Vec::with_capacity(b);
+            for ((i, st), (kr, vr)) in states.iter_mut().enumerate().zip(&rows) {
+                st.append(kr, vr);
+                qhs.push(encode_slice(q.row(i)));
+            }
+            qhs
+        });
+        for _ in 0..b {
+            self.ops.add(&counts::encode_qkv_f16(1, 1, d));
+        }
+
+        let hs: Vec<&F16KvState> = states.iter().map(|st| st.as_f16()).collect();
+
+        // (2) one grouped QKᵀ launch in f16 storage.
+        let mut a_rows: Vec<MatF32> = hs.iter().map(|s| MatF32::zeros(1, s.len)).collect();
+        self.times.measure(Stage::QkGemm, || {
+            let mut groups: Vec<GroupF16> = qhs
+                .iter()
+                .zip(&hs)
+                .zip(a_rows.iter_mut())
+                .map(|((qh, s), ar)| GroupF16 {
+                    a: qh.as_slice(),
+                    b: &s.k,
+                    out: ar.as_mut_slice(),
+                })
+                .collect();
+            par_gemm_f16_grouped(&mut groups, d, threads);
+        });
+        for s in &hs {
+            self.ops.add(&counts::qk_gemm(1, s.len, d, 2, 2));
+        }
+
+        // (3) per-sequence scale + f16-precision softmax.
+        self.times.measure(Stage::Softmax, || {
+            for (ar, s) in a_rows.iter_mut().zip(&hs) {
+                for x in ar.as_mut_slice() {
+                    *x *= scale;
+                }
+                softmax_rows_f16(ar, Mask::CausalFrom(s.len - 1));
+            }
+        });
+        for s in &hs {
+            self.ops.add(&counts::fp32_softmax(s.len as u64, 1)); // same op mix, f16 units
+        }
+
+        // (4) encode each P row + one grouped PV launch over resident V.
+        let mut o = MatF32::zeros(b, d);
+        self.times.measure(Stage::PvGemm, || {
+            let phs: Vec<Vec<F16>> = a_rows.iter().map(|ar| encode_slice(ar.as_slice())).collect();
+            let mut groups: Vec<GroupF16> = Vec::with_capacity(b);
+            for ((ph, s), orow) in phs.iter().zip(&hs).zip(o.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupF16 { a: ph.as_slice(), b: &s.v, out: orow });
+            }
+            par_gemm_f16_notrans_grouped(&mut groups, d, threads);
+        });
+        for s in &hs {
+            self.ops.add(&counts::pv_gemm(s.len as u64, s.len, d, 2, 2));
+            self.ops.add(&counts::output_rescale(1, d));
+        }
         o
     }
 

@@ -1,13 +1,16 @@
 //! FP32 baseline attention (paper eq. 1 + eq. 6): `A = QKᵀ/√d`,
 //! `P = softmax(A)`, `O = PV`, everything in f32.
 
-use crate::attention::state::KvState;
+use crate::attention::state::{F32KvState, KvState};
 use crate::attention::{
-    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
-    PipelineKind,
+    batch_row, counts, validate_batch_shapes, validate_shapes, validate_state_shapes,
+    AttentionConfig, AttentionPipeline, PipelineKind,
 };
 use crate::energy::OpCounts;
-use crate::gemm::{gemm_f32_notrans_slices, par_gemm_f32, par_gemm_f32_slices};
+use crate::gemm::{
+    gemm_f32_notrans_slices, par_gemm_f32, par_gemm_f32_grouped, par_gemm_f32_notrans_grouped,
+    par_gemm_f32_slices, GroupF32,
+};
 use crate::softmax::float_softmax::softmax_rows;
 use crate::softmax::index_softmax::Mask;
 use crate::tensor::MatF32;
@@ -107,6 +110,73 @@ impl AttentionPipeline for Fp32Attention {
             gemm_f32_notrans_slices(a.as_slice(), &st.v, o.as_mut_slice(), m, l, d);
         });
         self.ops.add(&counts::pv_gemm(valid, l, d, 4, 4));
+        o
+    }
+
+    /// Batched decode over the grouped f32 kernels — bit-identical per
+    /// sequence to [`AttentionPipeline::decode_step`] (the grouping only
+    /// moves whole dot products between threads, never splits one).
+    fn decode_step_batch(
+        &mut self,
+        states: &mut [&mut KvState],
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        validate_batch_shapes(&self.cfg, states, q, k_new, v_new);
+        let b = states.len();
+        let d = self.cfg.head_dim;
+        if b == 0 {
+            return MatF32::zeros(0, d);
+        }
+        let threads = self.cfg.threads;
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // Append each sequence's new K/V row in the native dtype (untimed,
+        // like the sequential path).
+        for (i, st) in states.iter_mut().enumerate() {
+            st.append(&batch_row(k_new, i), &batch_row(v_new, i));
+        }
+        let fs: Vec<&F32KvState> = states.iter().map(|st| st.as_f32()).collect();
+
+        // One grouped QKᵀ launch over the B resident K buffers.
+        let mut a_rows: Vec<MatF32> = fs.iter().map(|s| MatF32::zeros(1, s.len)).collect();
+        self.times.measure(Stage::QkGemm, || {
+            let mut groups: Vec<GroupF32> = Vec::with_capacity(b);
+            for (i, (s, ar)) in fs.iter().zip(a_rows.iter_mut()).enumerate() {
+                groups.push(GroupF32 { a: q.row(i), b: &s.k, out: ar.as_mut_slice() });
+            }
+            par_gemm_f32_grouped(&mut groups, d, threads);
+        });
+        for s in &fs {
+            self.ops.add(&counts::qk_gemm(1, s.len, d, 4, 4));
+        }
+
+        // Per-sequence scale + stable softmax at that sequence's offset.
+        self.times.measure(Stage::Softmax, || {
+            for (ar, s) in a_rows.iter_mut().zip(&fs) {
+                for x in ar.as_mut_slice() {
+                    *x *= scale;
+                }
+                softmax_rows(ar, Mask::CausalFrom(s.len - 1));
+            }
+        });
+        for s in &fs {
+            self.ops.add(&counts::fp32_softmax(s.len as u64, 1));
+        }
+
+        // One grouped PV launch over the B resident V buffers.
+        let mut o = MatF32::zeros(b, d);
+        self.times.measure(Stage::PvGemm, || {
+            let mut groups: Vec<GroupF32> = Vec::with_capacity(b);
+            for ((ar, s), orow) in a_rows.iter().zip(&fs).zip(o.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupF32 { a: ar.as_slice(), b: &s.v, out: orow });
+            }
+            par_gemm_f32_notrans_grouped(&mut groups, d, threads);
+        });
+        for s in &fs {
+            self.ops.add(&counts::pv_gemm(s.len as u64, s.len, d, 4, 4));
+        }
         o
     }
 

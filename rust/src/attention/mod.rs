@@ -18,6 +18,13 @@
 //!   Chunked prefill is the same call repeated: each `prefill` block is
 //!   masked causally at its absolute position offset
 //!   ([`Mask::CausalFrom`]).
+//! * **Batched decode** — [`AttentionPipeline::decode_step_batch`]: one
+//!   decode step for `B` independent sequences at once. Bit-identical to
+//!   `B` sequential `decode_step` calls (per-sequence scales, statistics
+//!   and offsets), but the `B` per-sequence `1×L_b` GEMM pairs run as
+//!   grouped kernel launches that spread the thread pool across sequences
+//!   — the serving engine's continuous-batching rounds stop being
+//!   memory-bound at batch 1.
 //!
 //! Both modes are instrumented with per-stage wall-clock ([`StageTimes`])
 //! and op counters ([`OpCounts`]) — the raw data for Figure 2, Figure 8,
@@ -33,7 +40,7 @@ pub mod exaq_pipe;
 
 use crate::energy::OpCounts;
 use crate::softmax::index_softmax::{IndexSoftmaxConfig, Mask};
-use crate::tensor::MatF32;
+use crate::tensor::{MatF32, MatI32};
 use crate::util::timer::StageTimes;
 
 pub use crate::softmax::index_softmax::Mask as AttentionMask;
@@ -198,6 +205,39 @@ pub trait AttentionPipeline: Send {
         self.prefill(state, q, k_new, v_new)
     }
 
+    /// One decode step for each of `B` **independent** sequences in a single
+    /// call: row `b` of `q`/`k_new`/`v_new` is sequence `b`'s query / new
+    /// K / new V row and `states[b]` its resident history. Returns a `B×d`
+    /// matrix whose row `b` is sequence `b`'s output.
+    ///
+    /// Semantically this is exactly `B` [`decode_step`](Self::decode_step)
+    /// calls — every sequence keeps its own quantization scales, running
+    /// statistics and causal offset, so the outputs are **bit-identical**
+    /// to the sequential loop. The pipeline implementations override this
+    /// to fuse the `B` per-sequence `1×L_b` GEMMs into grouped kernel
+    /// launches ([`crate::gemm::par_gemm_i8_grouped`] and friends) that
+    /// spread the thread pool *across* sequences — a single decode row
+    /// cannot be split across workers, a batch of sequences can. This
+    /// default implementation is the sequential loop itself: the
+    /// equivalence oracle the batched paths are tested against.
+    fn decode_step_batch(
+        &mut self,
+        states: &mut [&mut KvState],
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        validate_batch_shapes(self.config(), states, q, k_new, v_new);
+        let d = self.config().head_dim;
+        let mut out = MatF32::zeros(states.len(), d);
+        for (i, st) in states.iter_mut().enumerate() {
+            let o =
+                self.decode_step(st, &batch_row(q, i), &batch_row(k_new, i), &batch_row(v_new, i));
+            out.row_mut(i).copy_from_slice(o.row(0));
+        }
+        out
+    }
+
     /// Per-stage wall clock accumulated since the last [`reset_stats`].
     fn stage_times(&self) -> &StageTimes;
 
@@ -272,6 +312,66 @@ pub(crate) fn validate_state_shapes(
     );
     assert_eq!(v.rows(), k.rows(), "K/V row count mismatch");
     assert!(q.rows() > 0, "empty query block");
+}
+
+/// Row `i` of a `B×d` stacked per-sequence matrix as its own 1-row matrix
+/// (the batched decode paths slice per-sequence rows with this).
+pub(crate) fn batch_row(m: &MatF32, i: usize) -> MatF32 {
+    MatF32::from_vec(1, m.cols(), m.row(i).to_vec())
+}
+
+/// The `B` stacked decode rows as per-sequence 1-row `(q, k, v)` matrices.
+/// The batched pipelines slice these *before* their timed Quantize stage so
+/// the per-token Quantize-ns metric stays comparable with the sequential
+/// path's.
+pub(crate) fn batch_rows(q: &MatF32, k: &MatF32, v: &MatF32) -> Vec<(MatF32, MatF32, MatF32)> {
+    (0..q.rows())
+        .map(|i| (batch_row(q, i), batch_row(k, i), batch_row(v, i)))
+        .collect()
+}
+
+/// Per-sequence output rescale shared by the integer pipelines' batched
+/// decode: row `i` of the `B×d` INT32 accumulator scaled by `scale_of(i)`
+/// (each sequence's running V scale over the P̂ denominator).
+pub(crate) fn batch_output_rescale(
+    acc: &MatI32,
+    d: usize,
+    scale_of: impl Fn(usize) -> f32,
+) -> MatF32 {
+    let mut o = MatF32::zeros(acc.rows(), d);
+    for (i, (orow, arow)) in o
+        .as_mut_slice()
+        .chunks_mut(d)
+        .zip(acc.as_slice().chunks(d))
+        .enumerate()
+    {
+        let s = scale_of(i);
+        for (ov, &av) in orow.iter_mut().zip(arow) {
+            *ov = av as f32 * s;
+        }
+    }
+    o
+}
+
+/// Shared shape validation for the batched decode path: one state and one
+/// stacked row per sequence.
+pub(crate) fn validate_batch_shapes(
+    cfg: &AttentionConfig,
+    states: &[&mut KvState],
+    q: &MatF32,
+    k: &MatF32,
+    v: &MatF32,
+) {
+    let b = states.len();
+    assert_eq!(q.rows(), b, "one query row per sequence");
+    assert_eq!(k.rows(), b, "one new K row per sequence");
+    assert_eq!(v.rows(), b, "one new V row per sequence");
+    assert_eq!(q.cols(), cfg.head_dim, "Q head_dim");
+    assert_eq!(k.cols(), cfg.head_dim, "K head_dim");
+    assert_eq!(v.cols(), cfg.head_dim, "V head_dim");
+    for st in states.iter() {
+        assert_eq!(st.head_dim(), cfg.head_dim, "state head_dim");
+    }
 }
 
 #[cfg(test)]

@@ -13,17 +13,20 @@
 //!   6. PvGemm     — `P̂·V̂` in i8×i8→i32
 //!   7. Output     — `O = (s_V/127)·(P̂V̂)`
 
-use crate::attention::state::KvState;
+use crate::attention::state::{Int8KvState, KvState};
 use crate::attention::{
-    counts, validate_shapes, validate_state_shapes, AttentionConfig, AttentionPipeline,
-    PipelineKind,
+    batch_output_rescale, batch_rows, counts, validate_batch_shapes, validate_shapes,
+    validate_state_shapes, AttentionConfig, AttentionPipeline, PipelineKind,
 };
 use crate::energy::OpCounts;
-use crate::gemm::{gemm_i8_notrans, gemm_i8_notrans_slices, par_gemm_i8, par_gemm_i8_slices};
+use crate::gemm::{
+    gemm_i8_notrans, gemm_i8_notrans_slices, par_gemm_i8, par_gemm_i8_grouped,
+    par_gemm_i8_notrans_grouped, par_gemm_i8_slices, GroupI8,
+};
 use crate::quant::{quantize_i8, quantize_p_i8};
 use crate::softmax::float_softmax::softmax_rows;
 use crate::softmax::index_softmax::Mask;
-use crate::tensor::{MatF32, MatI32};
+use crate::tensor::{MatF32, MatI32, MatI8};
 use crate::util::timer::{Stage, StageTimes};
 
 pub struct QuantOnlyAttention {
@@ -162,6 +165,126 @@ impl AttentionPipeline for QuantOnlyAttention {
             .times
             .measure(Stage::Output, || acc.map(|x| x as f32 * out_scale));
         self.ops.add(&counts::output_rescale(m, d));
+        o
+    }
+
+    /// Batched decode: grouped integer GEMMs around the per-sequence
+    /// dequantize→softmax→requantize detour (the detour itself cannot be
+    /// batched across sequences — each row has its own α and history
+    /// length, which is the paper's point about this pipeline). Bit-
+    /// identical per sequence to [`AttentionPipeline::decode_step`].
+    fn decode_step_batch(
+        &mut self,
+        states: &mut [&mut KvState],
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        validate_batch_shapes(&self.cfg, states, q, k_new, v_new);
+        let b = states.len();
+        let d = self.cfg.head_dim;
+        if b == 0 {
+            return MatF32::zeros(0, d);
+        }
+        let threads = self.cfg.threads;
+        let sqrt_d = (d as f32).sqrt();
+
+        // (1) per-sequence append + query quantization (own scales).
+        let rows = batch_rows(q, k_new, v_new);
+        let (qqs, remapped) = self.times.measure(Stage::Quantize, || {
+            let mut remapped = 0usize;
+            let mut qqs = Vec::with_capacity(b);
+            for (st, (qr, kr, vr)) in states.iter_mut().zip(&rows) {
+                remapped += st.append(kr, vr);
+                qqs.push(quantize_i8(qr));
+            }
+            (qqs, remapped)
+        });
+        for _ in 0..b {
+            self.ops.add(&counts::quantize_qkv(1, 1, d));
+        }
+        if remapped > 0 {
+            self.ops.add(&counts::kv_rescale(remapped as u64));
+        }
+
+        let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
+
+        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ buffers.
+        let mut logits: Vec<MatI32> = ints.iter().map(|s| MatI32::zeros(1, s.len)).collect();
+        self.times.measure(Stage::QkGemm, || {
+            let mut groups: Vec<GroupI8> = qqs
+                .iter()
+                .zip(&ints)
+                .zip(logits.iter_mut())
+                .map(|((qq, s), lg)| GroupI8 {
+                    a: qq.data.as_slice(),
+                    b: &s.k.data,
+                    out: lg.as_mut_slice(),
+                })
+                .collect();
+            par_gemm_i8_grouped(&mut groups, d, threads);
+        });
+        for s in &ints {
+            self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
+        }
+
+        // (3) per-sequence dequantize with that sequence's α — the detour,
+        // every step, every sequence.
+        let mut a_rows: Vec<MatF32> = self.times.measure(Stage::Dequantize, || {
+            qqs.iter()
+                .zip(&ints)
+                .zip(&logits)
+                .map(|((qq, s), lg)| {
+                    let alpha = qq.scale * s.k.scale / sqrt_d;
+                    lg.map(|x| x as f32 * alpha)
+                })
+                .collect()
+        });
+        for s in &ints {
+            self.ops.add(&counts::dequantize_logits(s.len as u64));
+        }
+
+        // (4) per-sequence FP32 softmax over its full history.
+        self.times.measure(Stage::Softmax, || {
+            for (a, s) in a_rows.iter_mut().zip(&ints) {
+                softmax_rows(a, Mask::CausalFrom(s.len - 1));
+            }
+        });
+        for s in &ints {
+            self.ops.add(&counts::fp32_softmax(s.len as u64, 1));
+        }
+
+        // (5) per-sequence requantize to signed INT8.
+        let probs: Vec<MatI8> = self
+            .times
+            .measure(Stage::Requantize, || a_rows.iter().map(quantize_p_i8).collect());
+        for s in &ints {
+            self.ops.add(&counts::requantize_probs(s.len as u64));
+        }
+
+        // (6) one grouped P̂·V̂ launch over the B resident V̂ buffers.
+        let mut acc = MatI32::zeros(b, d);
+        self.times.measure(Stage::PvGemm, || {
+            let mut groups: Vec<GroupI8> = Vec::with_capacity(b);
+            for ((p, s), out) in probs.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupI8 { a: p.as_slice(), b: &s.v.data, out });
+            }
+            par_gemm_i8_notrans_grouped(&mut groups, d, threads);
+        });
+        for (p, s) in probs.iter().zip(&ints) {
+            let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+            self.ops.add(&counts::pv_gemm(nnz, s.len, d, 1, 4));
+        }
+
+        // (7) per-sequence output rescale (running V scale / 127).
+        let o = self
+            .times
+            .measure(Stage::Output, || {
+                batch_output_rescale(&acc, d, |i| ints[i].v.scale / 127.0)
+            });
+        for _ in 0..b {
+            self.ops.add(&counts::output_rescale(1, d));
+        }
         o
     }
 

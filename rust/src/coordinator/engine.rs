@@ -4,19 +4,30 @@
 //! Scheduling loop (one "round"):
 //!   1. Drain the submit channel into the wait queue; reject on overflow.
 //!   2. Admit new requests per [`BatchPolicy`] (prefill phase; records TTFT).
-//!   3. One decode step for every active request (continuous batching).
-//!   4. Retire finished requests, replying on their channels.
+//!   3. Advance prefills (one chunk per request per round), then **one
+//!      batched decode step** over every decoding request: the per-layer
+//!      Q/K/V projections of the B active sequences stack into single
+//!      `B×d_model` GEMMs, and each head's B attention products run as one
+//!      grouped integer-GEMM launch over the B resident KV states
+//!      ([`TinyLm::decode_step_batch`]) — instead of B memory-bound 1-row
+//!      GEMM pairs per round. Per sequence the results are bit-identical to
+//!      the sequential loop; only the kernel shapes change.
+//!   4. Retire finished requests, replying on their channels. A request the
+//!      context cuts off early is truncated (never padded) and finishes
+//!      with [`FinishReason::Length`].
 //!
 //! Single scheduler thread: on the target class of devices (and this host)
 //! compute is the bottleneck, not I/O, so the engine keeps the model on one
 //! thread and exposes concurrency through batching — the same topology the
 //! paper's measurement setup uses (8 worker threads inside the kernels, one
-//! request loop).
+//! request loop). The batched decode is what lets those worker threads do
+//! useful work during decode: a single sequence's 1-row GEMM cannot be
+//! split across workers, a batch of sequences can.
 
 use crate::attention::PipelineKind;
 use crate::coordinator::batcher::{select_admissions, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::request::{Request, Response, SubmitError};
+use crate::coordinator::request::{FinishReason, Request, Response, SubmitError};
 use crate::model::lm::{sample_row, KvCache, TinyLm};
 use crate::model::weights::Weights;
 use std::collections::VecDeque;
@@ -55,6 +66,10 @@ struct Active {
     /// Prompt tokens already prefilled into the cache.
     prompt_pos: usize,
     generated: Vec<u16>,
+    /// Set when the model's context fills before `gen_len` tokens: the
+    /// request retires with what it actually generated
+    /// ([`FinishReason::Length`]) — the tail is never padded.
+    capped: bool,
     queue_us: u64,
     prefill_started: Instant,
     /// Set when the prefill phase completes (admission → first token).
@@ -93,7 +108,11 @@ impl EngineHandle {
         if self.shutdown.load(Ordering::SeqCst) {
             return Err(SubmitError::ShuttingDown);
         }
-        if prompt.is_empty() || prompt.len() + gen_len > self.max_context {
+        // The prompt must fit and leave room for at least one generated
+        // token. A `gen_len` that overruns the remaining context is NOT a
+        // rejection: the request runs until the context fills and finishes
+        // truncated with [`FinishReason::Length`].
+        if prompt.is_empty() || prompt.len() >= self.max_context {
             self.metrics.on_reject();
             return Err(SubmitError::BadRequest);
         }
@@ -145,13 +164,15 @@ impl Drop for EngineHandle {
 pub struct Engine;
 
 impl Engine {
-    /// Start the scheduler thread and return a handle.
+    /// Start the scheduler thread and return a handle. The handle enforces
+    /// `opts.max_queue` on every submit (bounded queue → backpressure).
     pub fn start(weights: Weights, opts: EngineOptions) -> EngineHandle {
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Metrics::new();
         let queue_len = Arc::new(AtomicU64::new(0));
         let shutdown = Arc::new(AtomicBool::new(false));
         let max_context = weights.cfg.max_seq;
+        let max_queue = opts.max_queue;
 
         let m = metrics.clone();
         let ql = Arc::clone(&queue_len);
@@ -165,22 +186,21 @@ impl Engine {
             tx,
             metrics,
             queue_len,
-            max_queue: 1_000_000, // real bound enforced below via opts clone
+            max_queue,
             next_id: AtomicU64::new(1),
             shutdown,
             join: Some(join),
             max_context,
         }
-        // NB: max_queue is overwritten by `start_with_bound` callers; see
-        // `Engine::start_bounded`.
     }
 
-    /// Start with the options' queue bound enforced on submit.
+    /// Deprecated alias of [`Engine::start`]. Historically `start` hardcoded
+    /// an effectively unbounded queue (1 M entries) and only this entry
+    /// point applied `opts.max_queue`; `start` now enforces the bound
+    /// itself, so the two are identical.
+    #[deprecated(note = "Engine::start now enforces opts.max_queue; call it directly")]
     pub fn start_bounded(weights: Weights, opts: EngineOptions) -> EngineHandle {
-        let max_queue = opts.max_queue;
-        let mut h = Self::start(weights, opts);
-        h.max_queue = max_queue;
-        h
+        Self::start(weights, opts)
     }
 }
 
@@ -240,20 +260,42 @@ fn scheduler_loop(
             }
         }
 
-        // (2) admissions, under the KV-byte budget.
-        let admitted = select_admissions(&mut waiting, active.len(), &opts.policy);
+        // (2) admissions, under the KV-byte budget. While a KV-deferred
+        // request is pinned as kv_head, it is the *only* admission
+        // candidate: selecting others and then vetoing them post-hoc would
+        // livelock under sustained load (shortest-first may never re-select
+        // the pinned id while shorter prompts keep arriving, and the veto
+        // would bounce every selected request forever).
+        let admitted: Vec<Request> = if let Some(id) = kv_head {
+            if active.len() >= opts.policy.max_active {
+                Vec::new()
+            } else if let Some(pos) = waiting.iter().position(|r| r.id == id) {
+                vec![waiting.remove(pos).expect("position valid")]
+            } else {
+                // Pinned id no longer queued (defensive; ids only leave the
+                // queue via admission) — unpin and admit normally.
+                kv_head = None;
+                select_admissions(&mut waiting, active.len(), &opts.policy)
+            }
+        } else {
+            select_admissions(&mut waiting, active.len(), &opts.policy)
+        };
         let bytes_per_tok = KvCache::bytes_per_token(opts.attention, &cfg);
         // Reserve each active sequence's *projected* footprint (prompt +
         // full generation at the pipeline-native width), not just what its
         // cache holds right now — otherwise concurrent decodes grow past
         // the budget after admission.
+        // A projection can never exceed the model context: overrunning
+        // requests are truncated at max_seq (FinishReason::Length).
+        let projected_tokens =
+            |req: &Request| (req.prompt.len() + req.gen_len).min(cfg.max_seq);
         let mut kv_reserved: usize = active
             .iter()
-            .map(|a| (a.req.prompt.len() + a.req.gen_len) * bytes_per_tok)
+            .map(|a| projected_tokens(&a.req) * bytes_per_tok)
             .sum();
         let mut deferred: Vec<Request> = Vec::new();
         for req in admitted {
-            let projected = (req.prompt.len() + req.gen_len) * bytes_per_tok;
+            let projected = projected_tokens(&req) * bytes_per_tok;
             if kv_head.is_some_and(|id| id != req.id)
                 || (opts.policy.max_kv_bytes > 0
                     && kv_reserved + projected > opts.policy.max_kv_bytes
@@ -279,6 +321,7 @@ fn scheduler_loop(
                 cache: lm.new_cache(),
                 prompt_pos: 0,
                 generated: Vec::new(),
+                capped: false,
                 queue_us,
                 prefill_started: Instant::now(),
                 prefill_us: 0,
@@ -322,33 +365,60 @@ fn scheduler_loop(
                 a.decode_started = Instant::now();
             }
         }
+        // (3b) one *batched* decode step over every decoding request
+        // (continuous batching): B sequences advance through a single
+        // `decode_step_batch` call — stacked B×d_model projections, grouped
+        // attention GEMMs over the B resident KV states — instead of B
+        // separate 1-row GEMM pairs. Bit-identical per sequence to the old
+        // sequential loop.
+        for a in active.iter_mut() {
+            // A decode at cache.len == max_seq − 1 is still valid (it embeds
+            // the last position and fills the final KV slot); cap only once
+            // the context is actually full.
+            if !a.prefilling()
+                && a.generated.len() < a.req.gen_len
+                && a.cache.len >= cfg.max_seq
+            {
+                // Context exhausted before gen_len: truncate — never pad
+                // with fabricated tokens — and retire as Length below.
+                a.capped = true;
+            }
+        }
+        let mut decoding: Vec<&mut Active> = active
+            .iter_mut()
+            .filter(|a| !a.prefilling() && !a.capped && a.generated.len() < a.req.gen_len)
+            .collect();
+        if !decoding.is_empty() {
+            let tokens: Vec<u16> =
+                decoding.iter().map(|a| *a.generated.last().unwrap()).collect();
+            let logits = {
+                let mut caches: Vec<&mut KvCache> =
+                    decoding.iter_mut().map(|a| &mut a.cache).collect();
+                lm.decode_step_batch(&tokens, &mut caches)
+            };
+            for (i, a) in decoding.iter_mut().enumerate() {
+                let next =
+                    sample_row(logits.row(i), a.req.temperature, a.req.top_k, &mut a.rng);
+                a.generated.push(next);
+            }
+        }
+        // Sample KV usage at the round's high-water mark: after prefill
+        // chunks AND the decode step grew the caches, before retirement
+        // frees them (sampling pre-decode missed every sequence's final,
+        // largest state).
         metrics.on_kv_bytes(active.iter().map(|a| a.cache.bytes()).sum());
 
-        // (3b) one decode step per decoding request (continuous batching).
-        for a in active.iter_mut() {
-            if a.prefilling() || a.generated.len() >= a.req.gen_len {
-                continue;
-            }
-            let last = *a.generated.last().unwrap();
-            if a.cache.len + 1 >= cfg.max_seq {
-                // Context exhausted: stop early.
-                a.generated.resize(a.req.gen_len, last);
-                continue;
-            }
-            let logits = lm.decode_step(last, &mut a.cache);
-            let next = sample_row(logits.row(0), a.req.temperature, a.req.top_k, &mut a.rng);
-            a.generated.push(next);
-        }
-
-        // (4) retire finished.
+        // (4) retire finished (gen_len reached, or cut off by the context).
         let mut i = 0;
         while i < active.len() {
-            if active[i].generated.len() >= active[i].req.gen_len {
+            let done = active[i].generated.len() >= active[i].req.gen_len || active[i].capped;
+            if done {
                 let a = active.swap_remove(i);
                 let decode_us = a.decode_started.elapsed().as_micros() as u64;
                 let total_us = a.req.arrived.elapsed().as_micros() as u64;
                 let resp = Response {
                     id: a.req.id,
+                    finish: if a.capped { FinishReason::Length } else { FinishReason::Done },
                     tokens: a.generated,
                     queue_us: a.queue_us,
                     prefill_us: a.prefill_us,
@@ -376,7 +446,7 @@ mod tests {
 
     #[test]
     fn serves_a_request_end_to_end() {
-        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        let h = Engine::start(small_weights(), EngineOptions::default());
         let rx = h.submit(vec![1, 2, 3], 5, 0.8, 8).unwrap();
         let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert_eq!(resp.tokens.len(), 5);
@@ -388,7 +458,7 @@ mod tests {
 
     #[test]
     fn serves_concurrent_requests() {
-        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        let h = Engine::start(small_weights(), EngineOptions::default());
         let rxs: Vec<_> = (0..6)
             .map(|i| h.submit(vec![1, 2, (i % 30) as u16 + 1], 4, 0.5, 4).unwrap())
             .collect();
@@ -403,12 +473,12 @@ mod tests {
 
     #[test]
     fn rejects_bad_requests() {
-        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        let h = Engine::start(small_weights(), EngineOptions::default());
         assert_eq!(h.submit(vec![], 4, 0.0, 1).unwrap_err(), SubmitError::BadRequest);
         assert_eq!(
-            h.submit(vec![1; 60], 10, 0.0, 1).unwrap_err(),
+            h.submit(vec![1; 64], 1, 0.0, 1).unwrap_err(),
             SubmitError::BadRequest,
-            "prompt+gen beyond max context"
+            "prompt leaves no room to generate"
         );
         let snap = h.shutdown();
         assert_eq!(snap.rejected, 2);
@@ -416,9 +486,53 @@ mod tests {
     }
 
     #[test]
+    fn context_overrun_truncates_with_length_finish() {
+        // max_seq 64: a 60-token prompt with gen_len 10 has room for exactly
+        // 5 generated tokens (one sampled off the prefill + decodes through
+        // the last context slot). Regression: the engine used to pad the
+        // missing tail by duplicating the last token and report all 10 as
+        // generated.
+        let h = Engine::start(small_weights(), EngineOptions::default());
+        let rx = h.submit(vec![1; 60], 10, 0.0, 1).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Length);
+        assert_eq!(resp.tokens.len(), 5, "truncated, not padded: {:?}", resp.tokens);
+        // An in-budget request on the same engine finishes Done.
+        let rx = h.submit(vec![1, 2, 3], 4, 0.0, 1).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Done);
+        assert_eq!(resp.tokens.len(), 4);
+        let snap = h.shutdown();
+        // 4 real decode steps for the capped request + 3 for the Done one —
+        // fabricated tokens must not inflate the decode metric.
+        assert_eq!(snap.decode_tokens, 7);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn start_bounded_alias_still_enforces_bound() {
+        let opts = EngineOptions { max_queue: 1, ..Default::default() };
+        let h = Engine::start_bounded(small_weights(), opts);
+        let mut saw_full = false;
+        let mut receivers = Vec::new();
+        for _ in 0..20 {
+            match h.submit(vec![1, 2], 2, 0.0, 1) {
+                Ok(rx) => receivers.push(rx),
+                Err(SubmitError::QueueFull) => saw_full = true,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(saw_full, "deprecated alias must keep the queue bound");
+        for rx in receivers {
+            let _ = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        }
+        h.shutdown();
+    }
+
+    #[test]
     fn backpressure_rejects_on_full_queue() {
         let opts = EngineOptions { max_queue: 2, ..Default::default() };
-        let h = Engine::start_bounded(small_weights(), opts);
+        let h = Engine::start(small_weights(), opts);
         // Flood faster than the scheduler can drain; expect ≥1 rejection.
         let mut rejected = 0;
         let mut receivers = Vec::new();
@@ -444,7 +558,7 @@ mod tests {
             policy: BatchPolicy { max_kv_bytes: 300, ..Default::default() },
             ..Default::default()
         };
-        let h = Engine::start_bounded(small_weights(), opts);
+        let h = Engine::start(small_weights(), opts);
         let rxs: Vec<_> = (0..4)
             .map(|i| h.submit(vec![1, 2, (i + 1) as u16], 4, 0.0, 1).unwrap())
             .collect();
@@ -472,7 +586,7 @@ mod tests {
                 policy: BatchPolicy { prefill_chunk: chunk, ..Default::default() },
                 ..Default::default()
             };
-            let h = Engine::start_bounded(w.clone(), opts);
+            let h = Engine::start(w.clone(), opts);
             let rx = h.submit(prompt.clone(), 5, 0.0, 1).unwrap();
             let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
             h.shutdown();
@@ -485,7 +599,7 @@ mod tests {
 
     #[test]
     fn metrics_snapshot_coherent() {
-        let h = Engine::start_bounded(small_weights(), EngineOptions::default());
+        let h = Engine::start(small_weights(), EngineOptions::default());
         let rx = h.submit(vec![5, 6, 7, 8], 3, 0.0, 1).unwrap();
         let _ = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         let snap = h.shutdown();

@@ -166,7 +166,15 @@ mod tests {
         m.on_prefill_tokens(100);
         m.on_active(3);
         m.on_active(2);
-        let r = Response { id: 1, tokens: vec![1, 2, 3, 4], queue_us: 10, prefill_us: 90, decode_us: 300, total_us: 400 };
+        let r = Response {
+            id: 1,
+            tokens: vec![1, 2, 3, 4],
+            finish: crate::coordinator::request::FinishReason::Done,
+            queue_us: 10,
+            prefill_us: 90,
+            decode_us: 300,
+            total_us: 400,
+        };
         m.on_complete(&r);
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);

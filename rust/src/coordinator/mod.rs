@@ -14,4 +14,4 @@ pub mod batcher;
 pub mod engine;
 
 pub use engine::{Engine, EngineHandle, EngineOptions};
-pub use request::{Request, Response, SubmitError};
+pub use request::{FinishReason, Request, Response, SubmitError};

@@ -21,11 +21,23 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
 }
 
+/// Why a generation stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The requested `gen_len` tokens were generated.
+    Done,
+    /// The model's context filled up first: `tokens` holds only what was
+    /// actually generated (truncated — never padded with fabricated tokens).
+    Length,
+}
+
 /// Completed generation with timing breakdown.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
     pub tokens: Vec<u16>,
+    /// Whether the request ran to `gen_len` or was cut off by the context.
+    pub finish: FinishReason,
     /// Time from arrival to scheduling (queueing delay), µs.
     pub queue_us: u64,
     /// Prefill (time-to-first-token minus queueing), µs.
@@ -91,6 +103,7 @@ mod tests {
         let r = Response {
             id: 1,
             tokens: vec![1, 2, 3],
+            finish: FinishReason::Done,
             queue_us: 100,
             prefill_us: 400,
             decode_us: 600,
@@ -102,7 +115,15 @@ mod tests {
 
     #[test]
     fn single_token_decode_rate_is_zero() {
-        let r = Response { id: 1, tokens: vec![9], queue_us: 0, prefill_us: 1, decode_us: 0, total_us: 1 };
+        let r = Response {
+            id: 1,
+            tokens: vec![9],
+            finish: FinishReason::Length,
+            queue_us: 0,
+            prefill_us: 1,
+            decode_us: 0,
+            total_us: 1,
+        };
         assert_eq!(r.decode_per_token_us(), 0.0);
     }
 }

@@ -13,6 +13,18 @@
 //! autovectorizes — the x86 stand-in for the paper's NEON SDOT/I8MM path.
 //! Register-blocked 4×2 microkernels with K-tiling keep the accumulators in
 //! registers; `par_*` drivers split rows across threads.
+//!
+//! ## Grouped (batched multi-sequence decode) kernels
+//!
+//! The serving engine's decode phase issues one `1×L_b` similarity product
+//! and one `1×L_b · d` aggregation per sequence per round. A single decode
+//! row cannot be split across threads (the `par_*` drivers partition output
+//! *rows*, and there is only one), so at batch B the pre-batching engine ran
+//! B memory-bound kernel launches back to back. The `*_grouped` drivers take
+//! B independent [`GemmGroup`]s — each with its own resident KV buffer and
+//! per-group context length `L_b` — and run them in **one** call, spreading
+//! the thread pool *across groups* while reusing the same AVX-512 row
+//! kernels inside each group.
 
 use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
 use crate::util::f16::F16;
@@ -624,6 +636,203 @@ pub fn gemm_f16_notrans(p: &[F16], v: &[F16], c: &mut [f32], m: usize, l: usize,
 }
 
 // ---------------------------------------------------------------------------
+// Grouped (batched multi-sequence decode) kernels
+
+/// One sequence's slice of a grouped decode GEMM round: its 1-row left
+/// operand (query row on the QK side, probability row on the PV side), its
+/// resident KV buffer, and its output row. The per-group context length is
+/// implied by the slice lengths (`out.len()` keys on the QK side, `a.len()`
+/// positions on the PV side), so a ragged batch needs no padding.
+pub struct GemmGroup<'a, A, B, C> {
+    /// 1-row left operand.
+    pub a: &'a [A],
+    /// Resident right operand (`n×k` keys-as-rows for QK, `l×d` value rows
+    /// for PV — never copied or transposed).
+    pub b: &'a [B],
+    /// Output row (`n` logits for QK, `d` accumulators for PV).
+    pub out: &'a mut [C],
+}
+
+/// INT8 group (`Q̂·K̂ᵀ` similarity, or Quant-Only's signed-P̂ aggregation).
+pub type GroupI8<'a> = GemmGroup<'a, i8, i8, i32>;
+/// UINT8-probability aggregation group (`P̂·V̂`, IntAttention/EXAQ).
+pub type GroupU8I8<'a> = GemmGroup<'a, u8, i8, i32>;
+/// f32 group (FP32 baseline pipeline).
+pub type GroupF32<'a> = GemmGroup<'a, f32, f32, f32>;
+/// f16-storage group (FP16 baseline pipeline).
+pub type GroupF16<'a> = GemmGroup<'a, F16, F16, f32>;
+
+/// Grain sizes: resident elements of work per worker below which a grouped
+/// launch is not worth another scoped thread. `scope_chunks_with` spawns OS
+/// threads per call (~10–30 µs each, see threadpool.rs), so a small decode
+/// launch must run inline rather than pay spawn overhead comparable to the
+/// launch itself; the per-dtype values come from the kernels' rough
+/// elements-per-ns throughputs (AVX-512 i8 ≫ f32 dot ≫ software-f16
+/// decode) and err conservative — tune on real hardware.
+const PAR_GRAIN_I8: usize = 1 << 20;
+const PAR_GRAIN_F32: usize = 1 << 19;
+const PAR_GRAIN_F16: usize = 1 << 16;
+
+/// Workers to actually use for `work` total resident elements: one per
+/// `grain`, capped at the caller's `threads`. Thread count never affects
+/// results (whole groups move between workers), only spawn overhead.
+fn effective_threads(threads: usize, work: usize, grain: usize) -> usize {
+    threads.min(work / grain + 1)
+}
+
+/// Total resident-operand elements across a grouped launch — proportional
+/// to its MAC count on both the QK (`n·k` keys) and PV (`l·d` values) sides.
+fn grouped_work<A, B, C>(groups: &[GemmGroup<A, B, C>]) -> usize {
+    groups.iter().map(|g| g.b.len()).sum()
+}
+
+/// Split `groups` across up to `threads` workers with a **strided**
+/// assignment (worker `t` takes groups `t, t+T, t+2T, …`): a group's cost is
+/// proportional to its context length, and the engine's active set is
+/// ordered by admission age, so contiguous chunking would hand one worker
+/// all the long-context sequences while the rest idle. Race-free because
+/// each index is visited by exactly one worker (`i ≡ t mod T`) and every
+/// group owns a disjoint output slice.
+fn par_over_groups<G: Send>(groups: &mut [G], threads: usize, f: impl Fn(&mut G) + Sync) {
+    let n = groups.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for g in groups.iter_mut() {
+            f(g);
+        }
+        return;
+    }
+    let ptr = SendPtr(groups.as_mut_ptr());
+    scope_chunks_with(threads, threads, |t0, t1| {
+        for t in t0..t1 {
+            let mut i = t;
+            while i < n {
+                // SAFETY: index i is visited only by worker t (i ≡ t mod
+                // threads), so the &mut is exclusive.
+                let g = unsafe { &mut *ptr.get().add(i) };
+                f(g);
+                i += threads;
+            }
+        }
+    });
+}
+
+#[inline]
+fn gemm_i8_group(g: &mut GroupI8, k: usize) {
+    let n = g.out.len();
+    assert_eq!(g.a.len(), k, "query row length");
+    assert_eq!(g.b.len(), n * k, "K̂ buffer shape");
+    gemm_i8_rows(g.a, g.b, g.out, 1, n, k, 0, 1);
+}
+
+/// Grouped `Q̂·K̂ᵀ` for batched decode: each group is one sequence's
+/// `1×L_b` row-times-keys product over its own resident `L_b×k` K̂ buffer.
+pub fn gemm_i8_grouped(groups: &mut [GroupI8], k: usize) {
+    for g in groups.iter_mut() {
+        gemm_i8_group(g, k);
+    }
+}
+
+/// Thread-parallel [`gemm_i8_grouped`]: workers split across groups (a
+/// single decode row cannot be split; a batch of sequences can).
+pub fn par_gemm_i8_grouped(groups: &mut [GroupI8], k: usize, threads: usize) {
+    let t = effective_threads(threads, grouped_work(groups), PAR_GRAIN_I8);
+    par_over_groups(groups, t, |g| gemm_i8_group(g, k));
+}
+
+#[inline]
+fn gemm_u8i8_group(g: &mut GroupU8I8, d: usize) {
+    let l = g.a.len();
+    assert_eq!(g.b.len(), l * d, "V̂ buffer shape");
+    assert_eq!(g.out.len(), d, "output row length");
+    gemm_u8i8_rows(g.a, g.b, g.out, l, d, 0, 1);
+}
+
+/// Grouped `P̂·V̂` for batched decode: each group aggregates one sequence's
+/// UINT8 probability row over its own resident `L_b×d` V̂ buffer
+/// (zero-skipping, like [`gemm_u8i8`]).
+pub fn gemm_u8i8_grouped(groups: &mut [GroupU8I8], d: usize) {
+    for g in groups.iter_mut() {
+        gemm_u8i8_group(g, d);
+    }
+}
+
+/// Thread-parallel [`gemm_u8i8_grouped`].
+pub fn par_gemm_u8i8_grouped(groups: &mut [GroupU8I8], d: usize, threads: usize) {
+    let t = effective_threads(threads, grouped_work(groups), PAR_GRAIN_I8);
+    par_over_groups(groups, t, |g| gemm_u8i8_group(g, d));
+}
+
+#[inline]
+fn gemm_i8_notrans_group(g: &mut GroupI8, d: usize) {
+    let l = g.a.len();
+    assert_eq!(g.b.len(), l * d, "V̂ buffer shape");
+    assert_eq!(g.out.len(), d, "output row length");
+    gemm_i8_notrans_slices(g.a, g.b, g.out, 1, l, d);
+}
+
+/// Grouped signed-P̂ aggregation (Quant-Only's batched PV side).
+pub fn gemm_i8_notrans_grouped(groups: &mut [GroupI8], d: usize) {
+    for g in groups.iter_mut() {
+        gemm_i8_notrans_group(g, d);
+    }
+}
+
+/// Thread-parallel [`gemm_i8_notrans_grouped`].
+pub fn par_gemm_i8_notrans_grouped(groups: &mut [GroupI8], d: usize, threads: usize) {
+    let t = effective_threads(threads, grouped_work(groups), PAR_GRAIN_I8);
+    par_over_groups(groups, t, |g| gemm_i8_notrans_group(g, d));
+}
+
+/// Grouped f32 `Q·Kᵀ` (per-group `1×L_b` against resident keys); bit-exact
+/// with per-group [`gemm_f32_slices`] calls — the grouping only moves work
+/// between threads, never within a dot product.
+pub fn par_gemm_f32_grouped(groups: &mut [GroupF32], k: usize, threads: usize) {
+    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F32);
+    par_over_groups(groups, threads, |g| {
+        let n = g.out.len();
+        assert_eq!(g.a.len(), k, "query row length");
+        assert_eq!(g.b.len(), n * k, "K buffer shape");
+        gemm_f32_slices_rows(g.a, g.b, g.out, n, k, 0, 1);
+    });
+}
+
+/// Grouped f32 `P·V` with V in natural row layout (zero-skipping, like
+/// [`gemm_f32_notrans_slices`]).
+pub fn par_gemm_f32_notrans_grouped(groups: &mut [GroupF32], d: usize, threads: usize) {
+    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F32);
+    par_over_groups(groups, threads, |g| {
+        let l = g.a.len();
+        assert_eq!(g.b.len(), l * d, "V buffer shape");
+        assert_eq!(g.out.len(), d, "output row length");
+        gemm_f32_notrans_slices(g.a, g.b, g.out, 1, l, d);
+    });
+}
+
+/// Grouped f16-storage `Q·Kᵀ`: per group, exactly one [`gemm_f16`] call
+/// (same decode-then-dot dataflow as the sequential path).
+pub fn par_gemm_f16_grouped(groups: &mut [GroupF16], k: usize, threads: usize) {
+    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F16);
+    par_over_groups(groups, threads, |g| {
+        let n = g.out.len();
+        assert_eq!(g.a.len(), k, "query row length");
+        assert_eq!(g.b.len(), n * k, "K buffer shape");
+        gemm_f16(g.a, g.b, 1, n, k, g.out);
+    });
+}
+
+/// Grouped f16-storage `P·V` with V in natural row layout.
+pub fn par_gemm_f16_notrans_grouped(groups: &mut [GroupF16], d: usize, threads: usize) {
+    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F16);
+    par_over_groups(groups, threads, |g| {
+        let l = g.a.len();
+        assert_eq!(g.b.len(), l * d, "V buffer shape");
+        assert_eq!(g.out.len(), d, "output row length");
+        gemm_f16_notrans(g.a, g.b, g.out, 1, l, d);
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Reference (naive) implementations for testing
 
 /// Naive triple loop, f32 — the oracle the blocked kernels are tested against.
@@ -898,5 +1107,195 @@ mod tests {
         let bt = MatI8::zeros(2, 4);
         let mut c = MatI32::zeros(2, 2);
         gemm_i8(&a, &bt, &mut c);
+    }
+
+    #[test]
+    fn par_over_groups_strided_split_covers_every_group_once() {
+        // Directly exercise the multithreaded strided split — the public
+        // drivers' grain guard keeps test-sized launches inline.
+        for (n, threads) in [(1usize, 4usize), (7, 3), (23, 4), (8, 16), (5, 1)] {
+            let mut groups: Vec<u32> = vec![0; n];
+            par_over_groups(&mut groups, threads, |g| *g += 1);
+            assert!(groups.iter().all(|&x| x == 1), "n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn effective_threads_grain_guard() {
+        // One worker per `grain` elements of work, capped at the caller's
+        // thread budget; tiny launches stay inline (1 worker, no spawns).
+        assert_eq!(effective_threads(8, 0, 1 << 20), 1);
+        assert_eq!(effective_threads(8, (1 << 20) - 1, 1 << 20), 1);
+        assert_eq!(effective_threads(8, 1 << 20, 1 << 20), 2);
+        assert_eq!(effective_threads(8, 100 << 20, 1 << 20), 8);
+        assert_eq!(effective_threads(1, 100 << 20, 1 << 20), 1);
+    }
+
+    #[test]
+    fn grouped_i8_matches_per_group_slice_kernels() {
+        // Ragged batch: per-group context lengths differ; grouped output
+        // must equal B independent slice-kernel calls, serial and parallel.
+        let mut rng = Pcg64::seed_from_u64(20);
+        let k = 48;
+        let ns = [1usize, 7, 33, 12, 64];
+        let qs: Vec<MatI8> = ns.iter().map(|_| rand_i8(&mut rng, 1, k)).collect();
+        let kvs: Vec<MatI8> = ns.iter().map(|&n| rand_i8(&mut rng, n, k)).collect();
+        let mut want: Vec<Vec<i32>> = Vec::new();
+        for ((q, kv), &n) in qs.iter().zip(&kvs).zip(&ns) {
+            let mut c = vec![0i32; n];
+            gemm_i8_slices(q.as_slice(), kv.as_slice(), &mut c, 1, n, k);
+            want.push(c);
+        }
+        // Serial driver, then the parallel one at several widths (the
+        // strided split must cover every group exactly once).
+        for threads in [0, 1, 2, 3, 16] {
+            let mut outs: Vec<Vec<i32>> = ns.iter().map(|&n| vec![0i32; n]).collect();
+            let mut groups: Vec<GroupI8> = qs
+                .iter()
+                .zip(&kvs)
+                .zip(outs.iter_mut())
+                .map(|((q, kv), out)| GroupI8 {
+                    a: q.as_slice(),
+                    b: kv.as_slice(),
+                    out: out.as_mut_slice(),
+                })
+                .collect();
+            if threads == 0 {
+                gemm_i8_grouped(&mut groups, k);
+            } else {
+                par_gemm_i8_grouped(&mut groups, k, threads);
+            }
+            drop(groups);
+            assert_eq!(outs, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn grouped_u8i8_and_i8_notrans_match_slice_kernels() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let d = 16;
+        let ls = [3usize, 1, 29, 17];
+        let ps: Vec<MatU8> = ls.iter().map(|&l| rand_u8(&mut rng, 1, l)).collect();
+        let vs: Vec<MatI8> = ls.iter().map(|&l| rand_i8(&mut rng, l, d)).collect();
+        // u8 probabilities.
+        let mut want: Vec<Vec<i32>> = Vec::new();
+        for ((p, v), &l) in ps.iter().zip(&vs).zip(&ls) {
+            let mut c = vec![0i32; d];
+            gemm_u8i8_slices(p.as_slice(), v.as_slice(), &mut c, 1, l, d);
+            want.push(c);
+        }
+        // Serial driver first, then the parallel one.
+        for threads in [0usize, 2] {
+            let mut outs: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
+            let mut groups: Vec<GroupU8I8> = ps
+                .iter()
+                .zip(&vs)
+                .zip(outs.iter_mut())
+                .map(|((p, v), out)| GroupU8I8 {
+                    a: p.as_slice(),
+                    b: v.as_slice(),
+                    out: out.as_mut_slice(),
+                })
+                .collect();
+            if threads == 0 {
+                gemm_u8i8_grouped(&mut groups, d);
+            } else {
+                par_gemm_u8i8_grouped(&mut groups, d, threads);
+            }
+            drop(groups);
+            assert_eq!(outs, want, "threads={threads}");
+        }
+        // Signed i8 probabilities (Quant-Only).
+        let pis: Vec<MatI8> = ps.iter().map(|p| p.map(|x| (x / 2) as i8)).collect();
+        let mut want_i: Vec<Vec<i32>> = Vec::new();
+        for ((p, v), &l) in pis.iter().zip(&vs).zip(&ls) {
+            let mut c = vec![0i32; d];
+            gemm_i8_notrans_slices(p.as_slice(), v.as_slice(), &mut c, 1, l, d);
+            want_i.push(c);
+        }
+        for threads in [0usize, 3] {
+            let mut outs_i: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
+            let mut groups_i: Vec<GroupI8> = pis
+                .iter()
+                .zip(&vs)
+                .zip(outs_i.iter_mut())
+                .map(|((p, v), out)| GroupI8 {
+                    a: p.as_slice(),
+                    b: v.as_slice(),
+                    out: out.as_mut_slice(),
+                })
+                .collect();
+            if threads == 0 {
+                gemm_i8_notrans_grouped(&mut groups_i, d);
+            } else {
+                par_gemm_i8_notrans_grouped(&mut groups_i, d, threads);
+            }
+            drop(groups_i);
+            assert_eq!(outs_i, want_i, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn grouped_float_kernels_bit_match_serial_kernels() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let (k, d) = (24, 8);
+        let ns = [5usize, 13, 2];
+        // f32 QK side.
+        let qs: Vec<MatF32> = ns.iter().map(|_| rand_f32(&mut rng, 1, k)).collect();
+        let ks: Vec<MatF32> = ns.iter().map(|&n| rand_f32(&mut rng, n, k)).collect();
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for ((q, kk), &n) in qs.iter().zip(&ks).zip(&ns) {
+            let mut c = vec![0f32; n];
+            gemm_f32_slices(q.as_slice(), kk.as_slice(), &mut c, 1, n, k);
+            want.push(c);
+        }
+        let mut outs: Vec<Vec<f32>> = ns.iter().map(|&n| vec![0f32; n]).collect();
+        let mut groups: Vec<GroupF32> = qs
+            .iter()
+            .zip(&ks)
+            .zip(outs.iter_mut())
+            .map(|((q, kk), out)| GroupF32 {
+                a: q.as_slice(),
+                b: kk.as_slice(),
+                out: out.as_mut_slice(),
+            })
+            .collect();
+        par_gemm_f32_grouped(&mut groups, k, 2);
+        drop(groups);
+        assert_eq!(outs, want, "grouped f32 QK must be bit-identical");
+        // f16 PV side.
+        let ls = [4usize, 9];
+        let ph: Vec<Vec<F16>> = ls
+            .iter()
+            .map(|&l| {
+                (0..l)
+                    .map(|_| F16::from_f32(rng.normal().abs().min(1.0)))
+                    .collect()
+            })
+            .collect();
+        let vh: Vec<Vec<F16>> = ls
+            .iter()
+            .map(|&l| (0..l * d).map(|_| F16::from_f32(rng.normal())).collect())
+            .collect();
+        let mut want_h: Vec<Vec<f32>> = Vec::new();
+        for ((p, v), &l) in ph.iter().zip(&vh).zip(&ls) {
+            let mut c = vec![0f32; d];
+            gemm_f16_notrans(p, v, &mut c, 1, l, d);
+            want_h.push(c);
+        }
+        let mut outs_h: Vec<Vec<f32>> = ls.iter().map(|_| vec![0f32; d]).collect();
+        let mut groups_h: Vec<GroupF16> = ph
+            .iter()
+            .zip(&vh)
+            .zip(outs_h.iter_mut())
+            .map(|((p, v), out)| GroupF16 {
+                a: p.as_slice(),
+                b: v.as_slice(),
+                out: out.as_mut_slice(),
+            })
+            .collect();
+        par_gemm_f16_notrans_grouped(&mut groups_h, d, 2);
+        drop(groups_h);
+        assert_eq!(outs_h, want_h, "grouped f16 PV must be bit-identical");
     }
 }

@@ -5,7 +5,7 @@
 //! Benchmarks default to this host's practical sizes; `INTATTN_FULL=1`
 //! extends sweeps to the paper's 16 K maximum.
 
-use crate::attention::{build_pipeline, AttentionConfig, PipelineKind};
+use crate::attention::{batch_row, build_pipeline, AttentionConfig, KvState, PipelineKind};
 use crate::energy::{EnergyModel, OpCounts};
 use crate::harness::fidelity::{eval_lm_fidelity, eval_sequences, exact_probs, LmFidelity, ProbFidelity};
 use crate::harness::workload::{clustered_qkv, random_qkv};
@@ -14,7 +14,7 @@ use crate::model::weights::Weights;
 use crate::quant::{dequantize_p_i8, dequantize_p_u8, quantize_i8, quantize_p_i8, quantize_p_u8};
 use crate::softmax::index_softmax::{IndexSoftmax, IndexSoftmaxConfig, Mask};
 use crate::softmax::lut::ExpLut;
-use crate::tensor::MatI32;
+use crate::tensor::{MatF32, MatI32};
 use crate::util::bench::Table;
 use crate::util::prng::Pcg64;
 
@@ -323,6 +323,130 @@ pub fn decode_rows_json(rows: &[DecodeRow]) -> Vec<(String, f64)> {
             format!("{}@ctx{}:kv_bytes", r.pipeline.name(), r.ctx),
             r.kv_bytes as f64,
         ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Batched multi-sequence decode — grouped kernels vs the sequential loop
+
+#[derive(Clone, Debug)]
+pub struct BatchedDecodeRow {
+    pub pipeline: PipelineKind,
+    /// Context length resident in every sequence's KV state.
+    pub ctx: usize,
+    /// Number of concurrently decoding sequences.
+    pub batch: usize,
+    /// Aggregate decoded tok/s when the B sequences step one at a time —
+    /// B separate 1-row GEMM pairs per round (the pre-batching engine; a
+    /// 1-row GEMM cannot use more than one worker thread).
+    pub seq_tok_s: f64,
+    /// Aggregate decoded tok/s through `decode_step_batch`'s grouped
+    /// kernels (one launch per GEMM side per round, workers split across
+    /// sequences).
+    pub batch_tok_s: f64,
+}
+
+impl BatchedDecodeRow {
+    pub fn speedup(&self) -> f64 {
+        if self.seq_tok_s > 0.0 {
+            self.batch_tok_s / self.seq_tok_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Batched-vs-sequential decode throughput: prefill `batch` single-head KV
+/// states to `ctx` positions, then time `rounds` decode rounds driven (a)
+/// sequentially and (b) through one `decode_step_batch` call per round.
+/// Both paths start from clones of the same prefilled states and consume
+/// the same inputs, so the comparison is kernel-shape only.
+pub fn batched_decode_sweep(
+    ctx: usize,
+    batches: &[usize],
+    d: usize,
+    rounds: usize,
+    threads: usize,
+) -> Vec<BatchedDecodeRow> {
+    let mut rng = Pcg64::seed_from_u64(33);
+    let mut rows = Vec::new();
+    for &batch in batches {
+        for kind in PipelineKind::headline() {
+            let cfg = AttentionConfig::new(ctx + rounds, d).with_threads(threads);
+            let mut pipe = build_pipeline(kind, cfg);
+            let mut base: Vec<KvState> = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                let mut st = pipe.begin_state();
+                let (q, k, v) = random_qkv(&mut rng, ctx, d, 1.0);
+                let _ = pipe.prefill(&mut st, &q, &k, &v);
+                base.push(st);
+            }
+            // Pre-generate the stacked per-round inputs so the timed loops
+            // are pure pipeline work.
+            let steps: Vec<(MatF32, MatF32, MatF32)> =
+                (0..rounds).map(|_| random_qkv(&mut rng, batch, d, 1.0)).collect();
+            // (a) sequential: B decode_step calls per round.
+            let mut st_seq = base.clone();
+            let t0 = std::time::Instant::now();
+            for (q, k, v) in &steps {
+                for (i, st) in st_seq.iter_mut().enumerate() {
+                    crate::util::bench::black_box(pipe.decode_step(
+                        st,
+                        &batch_row(q, i),
+                        &batch_row(k, i),
+                        &batch_row(v, i),
+                    ));
+                }
+            }
+            let dt_seq = t0.elapsed().as_secs_f64().max(1e-12);
+            // (b) grouped: one decode_step_batch per round.
+            let mut st_bat = base.clone();
+            let t0 = std::time::Instant::now();
+            for (q, k, v) in &steps {
+                let mut refs: Vec<&mut KvState> = st_bat.iter_mut().collect();
+                crate::util::bench::black_box(pipe.decode_step_batch(&mut refs, q, k, v));
+            }
+            let dt_bat = t0.elapsed().as_secs_f64().max(1e-12);
+            let toks = (rounds * batch) as f64;
+            rows.push(BatchedDecodeRow {
+                pipeline: kind,
+                ctx,
+                batch,
+                seq_tok_s: toks / dt_seq,
+                batch_tok_s: toks / dt_bat,
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_batched_decode(rows: &[BatchedDecodeRow]) -> Table {
+    let mut t = Table::new(
+        "Batched multi-sequence decode — grouped kernels vs sequential loop (aggregate tok/s)",
+        &["pipeline", "ctx", "batch", "sequential tok/s", "batched tok/s", "speedup"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.pipeline.name().into(),
+            r.ctx.to_string(),
+            r.batch.to_string(),
+            format!("{:.0}", r.seq_tok_s),
+            format!("{:.0}", r.batch_tok_s),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    t
+}
+
+/// JSON payload for the batched-decode bench (label/value rows).
+pub fn batched_decode_rows_json(rows: &[BatchedDecodeRow]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for r in rows {
+        let key = format!("{}@ctx{}b{}", r.pipeline.name(), r.ctx, r.batch);
+        out.push((format!("{key}:seq_tok_s"), r.seq_tok_s));
+        out.push((format!("{key}:batch_tok_s"), r.batch_tok_s));
+        out.push((format!("{key}:speedup"), r.speedup()));
     }
     out
 }
@@ -792,6 +916,15 @@ mod tests {
         assert_eq!(fp.kv_bytes, (64 + 4) * 2 * 32 * 4);
         // JSON payload covers every row's three metrics.
         assert_eq!(decode_rows_json(&rows).len(), 3 * rows.len());
+    }
+
+    #[test]
+    fn batched_decode_sweep_shapes() {
+        let rows = batched_decode_sweep(24, &[1, 3], 16, 3, 2);
+        assert_eq!(rows.len(), 2 * PipelineKind::headline().len());
+        assert!(rows.iter().all(|r| r.seq_tok_s > 0.0 && r.batch_tok_s > 0.0));
+        assert!(rows.iter().all(|r| r.speedup() > 0.0));
+        assert_eq!(batched_decode_rows_json(&rows).len(), 3 * rows.len());
     }
 
     #[test]

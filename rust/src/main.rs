@@ -144,7 +144,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_gen = args.get_usize("gen", 16)?;
     let mut rng = Pcg64::seed_from_u64(42);
     let trace = request_trace(&mut rng, n, rate, &[16, 48, 128], max_gen);
-    let handle = Engine::start_bounded(weights, opts);
+    let handle = Engine::start(weights, opts);
     println!("serving {n} requests (pipeline {}, rate {rate}/s)...", kind.name());
     let t0 = std::time::Instant::now();
     let mut receivers = Vec::new();

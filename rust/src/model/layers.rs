@@ -162,6 +162,66 @@ impl MultiHeadAttention {
         self.run_stateful(states, q_all, k_all, v_all, true)
     }
 
+    /// One batched decode step over `B` independent sequences: row `b` of
+    /// `q_all`/`k_all`/`v_all` is sequence `b`'s single-position projection
+    /// (`B×d_model`), `seq_states[b]` its per-head KV states. Row `b` of the
+    /// result is bit-identical to a sequential [`decode`](Self::decode) call
+    /// for that sequence — per head, the `B` per-sequence attention products
+    /// run as one grouped-kernel launch instead of `B` separate ones.
+    pub fn decode_batch(
+        &mut self,
+        seq_states: &mut [&mut [KvState]],
+        q_all: &MatF32,
+        k_all: &MatF32,
+        v_all: &MatF32,
+    ) -> MatF32 {
+        let b = seq_states.len();
+        let d_model = self.n_heads * self.d_head;
+        assert_eq!(q_all.rows(), b, "one query row per sequence");
+        assert_eq!(k_all.rows(), b, "one K row per sequence");
+        assert_eq!(v_all.rows(), b, "one V row per sequence");
+        assert_eq!(q_all.cols(), d_model);
+        assert_eq!(k_all.cols(), d_model);
+        assert_eq!(v_all.cols(), d_model);
+        for s in seq_states.iter() {
+            assert_eq!(s.len(), self.n_heads, "one KV state per head per sequence");
+        }
+        self.ensure_state_pipes();
+        let mut out = MatF32::zeros(b, d_model);
+        for h in 0..self.n_heads {
+            let qh = slice_head(q_all, h, self.d_head);
+            let kh = slice_head(k_all, h, self.d_head);
+            let vh = slice_head(v_all, h, self.d_head);
+            let mut head_states: Vec<&mut KvState> =
+                seq_states.iter_mut().map(|s| &mut s[h]).collect();
+            let pipe = &mut self.state_pipes[h];
+            let oh = pipe.decode_step_batch(&mut head_states, &qh, &kh, &vh);
+            self.times.merge(pipe.stage_times());
+            self.ops.add(pipe.op_counts());
+            pipe.reset_stats();
+            unslice_head(&mut out, &oh, h, self.d_head);
+        }
+        out
+    }
+
+    /// Build the per-head stateful pipelines on first use (a decode step
+    /// must not reconstruct pipelines — or the IndexSoftmax LUT — per token).
+    fn ensure_state_pipes(&mut self) {
+        if self.state_pipes.is_empty() {
+            // seq_len/mask are per-call state in the stateful API (derived
+            // from the KvState); the config only contributes head_dim,
+            // threads and the softmax hyperparameters here.
+            let cfg = AttentionConfig {
+                seq_len: 0,
+                head_dim: self.d_head,
+                mask: Mask::None,
+                threads: self.threads,
+                isx: Default::default(),
+            };
+            self.state_pipes = (0..self.n_heads).map(|_| build_pipeline(self.kind, cfg)).collect();
+        }
+    }
+
     fn run_stateful(
         &mut self,
         states: &mut [KvState],
@@ -178,19 +238,7 @@ impl MultiHeadAttention {
         assert_eq!(v_all.cols(), d_model);
         assert_eq!(k_all.rows(), m);
         assert_eq!(v_all.rows(), m);
-        if self.state_pipes.is_empty() {
-            // seq_len/mask are per-call state in the stateful API (derived
-            // from the KvState); the config only contributes head_dim,
-            // threads and the softmax hyperparameters here.
-            let cfg = AttentionConfig {
-                seq_len: 0,
-                head_dim: self.d_head,
-                mask: Mask::None,
-                threads: self.threads,
-                isx: Default::default(),
-            };
-            self.state_pipes = (0..self.n_heads).map(|_| build_pipeline(self.kind, cfg)).collect();
-        }
+        self.ensure_state_pipes();
         let mut out = MatF32::zeros(m, d_model);
         for (h, state) in states.iter_mut().enumerate() {
             let qh = slice_head(q_all, h, self.d_head);

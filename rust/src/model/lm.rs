@@ -131,16 +131,23 @@ impl TinyLm {
     }
 
     fn embed(&self, tokens: &[u16], pos_offset: usize) -> MatF32 {
+        self.embed_at(tokens, |i| pos_offset + i)
+    }
+
+    /// Embed `tokens[i]` at absolute position `pos(i)` (clamped at
+    /// `max_seq − 1`, the seed's stateless-path behavior). The batched
+    /// decode path uses per-row positions (one sequence per row).
+    fn embed_at(&self, tokens: &[u16], pos: impl Fn(usize) -> usize) -> MatF32 {
         let cfg = &self.weights.cfg;
         let d = cfg.d_model;
         let mut x = MatF32::zeros(tokens.len(), d);
         for (i, &t) in tokens.iter().enumerate() {
             let t = t as usize;
             assert!(t < cfg.vocab, "token {t} out of vocab");
-            let pos = (pos_offset + i).min(cfg.max_seq - 1);
+            let p = pos(i).min(cfg.max_seq - 1);
             let dst = x.row_mut(i);
             let te = self.weights.tok_emb.row(t);
-            let pe = self.weights.pos_emb.row(pos);
+            let pe = self.weights.pos_emb.row(p);
             for ((o, &a), &b) in dst.iter_mut().zip(te).zip(pe) {
                 *o = a + b;
             }
@@ -246,6 +253,58 @@ impl TinyLm {
         cache.len += 1;
         let xf = layer_norm(&x, &self.weights.ln_f_g, &self.weights.ln_f_b);
         let mut logits = MatF32::zeros(1, cfg.vocab);
+        gemm_f32(&xf, &self.weights.tok_emb, &mut logits);
+        logits
+    }
+
+    /// One decode step for each of `B` independent sequences: `tokens[b]` is
+    /// sequence `b`'s last sampled token and `caches[b]` its KV cache (each
+    /// advances by one position). Returns `B×vocab` logits, row `b` being
+    /// **bit-identical** to what [`decode_step`](Self::decode_step) would
+    /// produce for sequence `b` — every model op is row-independent. What
+    /// changes is the kernel shape: the `B` 1-row Q/K/V (and MLP/logit)
+    /// projections stack into single `B×d_model` GEMMs per layer, and each
+    /// head's `B` attention products run as one grouped launch over the `B`
+    /// resident KV states ([`MultiHeadAttention::decode_batch`]) instead of
+    /// `B` memory-bound 1-row GEMM pairs.
+    pub fn decode_step_batch(&mut self, tokens: &[u16], caches: &mut [&mut KvCache]) -> MatF32 {
+        let b = tokens.len();
+        assert!(b > 0, "empty decode batch");
+        assert_eq!(caches.len(), b, "one cache per sequence");
+        let cfg = self.weights.cfg;
+        let kind = self.attention_kind;
+        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        let mut x = self.embed_at(tokens, |i| positions[i]);
+        for (li, bw) in self.weights.blocks.iter().enumerate() {
+            let xn = layer_norm(&x, &bw.ln1_g, &bw.ln1_b);
+            let q = linear(&xn, &bw.wq, None);
+            let k = linear(&xn, &bw.wk, None);
+            let v = linear(&xn, &bw.wv, None);
+            let mha = &mut self.mhas[li];
+            mha.threads = self.threads;
+            let mut seq_states: Vec<&mut [KvState]> = caches
+                .iter_mut()
+                .map(|c| c.layer_states(li, kind, cfg.n_heads, cfg.d_head()))
+                .collect();
+            let att = mha.decode_batch(&mut seq_states, &q, &k, &v);
+            self.times.merge(mha.stage_times());
+            self.ops.add(mha.op_counts());
+            mha.reset_stats();
+            let att_o = linear(&att, &bw.wo, None);
+            for (xv, &av) in x.as_mut_slice().iter_mut().zip(att_o.as_slice()) {
+                *xv += av;
+            }
+            let xn2 = layer_norm(&x, &bw.ln2_g, &bw.ln2_b);
+            let m = mlp(&xn2, bw);
+            for (xv, &mv) in x.as_mut_slice().iter_mut().zip(m.as_slice()) {
+                *xv += mv;
+            }
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        let xf = layer_norm(&x, &self.weights.ln_f_g, &self.weights.ln_f_b);
+        let mut logits = MatF32::zeros(b, cfg.vocab);
         gemm_f32(&xf, &self.weights.tok_emb, &mut logits);
         logits
     }
@@ -428,6 +487,42 @@ mod tests {
         // And the projected per-token cost matches the stored reality.
         let per_tok = KvCache::bytes_per_token(PipelineKind::Fp32, &cfg);
         assert_eq!(payload_fp32, 8 * per_tok);
+    }
+
+    #[test]
+    fn decode_step_batch_bit_identical_to_sequential() {
+        // The engine's batched rounds lean on this: stacking B sequences
+        // into one decode_step_batch call must reproduce the B sequential
+        // decode_step results *bit for bit* (and advance the caches the
+        // same way), for a float and an integer backend, across ragged
+        // context lengths.
+        for kind in [PipelineKind::Fp32, PipelineKind::IntAttention] {
+            let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+            let w = Weights::random(cfg, 3);
+            let mut lm = TinyLm::new(w, kind);
+            let prompts: [&[u16]; 3] = [&[1, 2, 3], &[4, 5, 6, 7, 8], &[9]];
+            let mut caches_a: Vec<KvCache> = prompts.iter().map(|_| lm.new_cache()).collect();
+            for (p, c) in prompts.iter().zip(caches_a.iter_mut()) {
+                let _ = lm.forward(p, Some(c));
+            }
+            let mut caches_b = caches_a.clone();
+            for round in 0..3 {
+                let tokens: Vec<u16> = (0..3).map(|i| (10 + 3 * round + i) as u16).collect();
+                // Sequential oracle.
+                let mut want = Vec::new();
+                for (t, c) in tokens.iter().zip(caches_a.iter_mut()) {
+                    want.extend_from_slice(lm.decode_step(*t, c).row(0));
+                }
+                // Batched.
+                let mut refs: Vec<&mut KvCache> = caches_b.iter_mut().collect();
+                let got = lm.decode_step_batch(&tokens, &mut refs);
+                assert_eq!(got.as_slice(), &want[..], "{} round {round}", kind.name());
+            }
+            for (a, b) in caches_a.iter().zip(&caches_b) {
+                assert_eq!(a.len, b.len);
+                assert_eq!(a.bytes(), b.bytes());
+            }
+        }
     }
 
     #[test]

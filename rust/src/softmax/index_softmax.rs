@@ -45,14 +45,16 @@ impl MulShiftDiv {
         let l = 64 - (divisor - 1).leading_zeros().min(63); // ceil(log2 d)
         // Wide path: s = 64 + l is exact for every x < 2^64 (Granlund–
         // Montgomery: the error term x·e/(d·2^s) with e < d ≤ 2^l stays
-        // below x/2^64 < 1/d's slack).
+        // below x/2^64 < 1/d's slack) — in u128 arithmetic the x·magic
+        // product additionally caps the domain at x < 2^63 (see div_floor).
         let shift128 = 64 + l;
         let magic128 = ((1u128 << shift128) + divisor as u128 - 1) / divisor as u128;
         // Fast u64 path: with s = 31 + l the same argument gives exactness
         // for all x < 2^31, and x·magic ≤ 2^31·2^(s-l+1) = 2^63 fits u64.
-        // Our numerators (delta·n1 + d/2 with delta < d ≤ 2^25, n1 ≤ 255;
-        // 255·e + sum/2 with e ≤ 255) all stay below 2^31 whenever
-        // d < 2^25 — the `wide` flag guards the rest.
+        // The `wide` flag pre-selects the u128 path for large divisors;
+        // `div_floor` additionally routes any numerator ≥ 2^31 (possible
+        // even for fast-path divisors, e.g. delta·n1 with delta near a
+        // large c_int) to the u128 path at call time.
         let wide = l > 25;
         let shift64 = 31 + l;
         let magic64 = if wide {
@@ -63,20 +65,32 @@ impl MulShiftDiv {
         MulShiftDiv { magic64, magic128, shift64, shift128, divisor, wide }
     }
 
-    /// `floor(x / d)` — exact for all `x` on the wide path; exact for
-    /// `x < 2^31` on the fast path (debug-asserted).
+    /// Numerators at or above this bound take the u128 path even when the
+    /// divisor qualifies for the u64 fast path: the fast path's exactness
+    /// proof (and its u64 headroom) holds only for `x < 2^31`.
+    const FAST_PATH_MAX: u64 = 1 << 31;
+
+    /// `floor(x / d)` — exact for every `x < 2^63`. The u64 fast path
+    /// serves `x < 2^31`; larger numerators (including
+    /// [`Self::div_round`]'s `+d/2` pushing a near-bound `x` over the
+    /// line, which previously wrapped silently in release builds) route
+    /// to the u128 path. That path's `x·magic` product needs
+    /// `x·2^65` ≤ `2^128`, hence the `2^63` domain bound
+    /// (debug-asserted; IndexSoftmax numerators stay below ~2^34).
     #[inline]
     pub fn div_floor(&self, x: u64) -> u64 {
-        if self.wide {
+        if self.wide || x >= Self::FAST_PATH_MAX {
+            debug_assert!(x < (1 << 63), "wide-path numerator bound");
             ((x as u128 * self.magic128) >> self.shift128) as u64
         } else {
-            debug_assert!(x < (1 << 31), "fast-path numerator bound");
             (x.wrapping_mul(self.magic64)) >> self.shift64
         }
     }
 
     /// `round(x / d)` (ties away from zero, matching `f32::round` on the
-    /// nonnegative domain used here).
+    /// nonnegative domain used here). The rounding bias is added *before*
+    /// [`Self::div_floor`]'s path selection, so a numerator that crosses
+    /// the fast-path bound lands on the wide path instead of wrapping.
     #[inline]
     pub fn div_round(&self, x: u64) -> u64 {
         self.div_floor(x + self.divisor / 2)
@@ -338,6 +352,43 @@ mod tests {
                 assert_eq!(ms.div_floor(x), x / d, "x={x} d={d}");
                 assert_eq!(ms.div_round(x), (x + d / 2) / d, "x={x} d={d}");
             }
+        }
+    }
+
+    #[test]
+    fn div_round_exact_across_fast_path_boundary() {
+        // Regression: `div_round` adds `d/2` *before* the bound check inside
+        // `div_floor`, so numerators just below 2^31 used to cross the
+        // fast-path bound and silently wrap in release builds. Both entry
+        // points must now be exact on, at, and above the boundary.
+        for d in [3u64, 255, (1 << 20) + 7, (1 << 25) - 1] {
+            let ms = MulShiftDiv::new(d);
+            let xs = [
+                (1u64 << 31) - 1 - d / 2, // div_round numerator lands exactly at 2^31 - 1
+                (1 << 31) - 1,
+                1 << 31,
+                (1 << 31) + d,
+                (1 << 32) - 1,
+                (1 << 33) + 12345, // e.g. delta·n1 with a large c_int
+            ];
+            for &x in &xs {
+                assert_eq!(ms.div_floor(x), x / d, "floor x={x} d={d}");
+                assert_eq!(ms.div_round(x), (x + d / 2) / d, "round x={x} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_c_int_index_numerators_are_exact() {
+        // An IndexSoftmax-shaped stress of the same bug: with c_int just
+        // under the wide-divisor threshold, delta·n1 reaches ~2^33 — far
+        // past the u64 fast-path bound — and must still divide exactly.
+        let c_int = (1u64 << 25) - 3;
+        let ms = MulShiftDiv::new(c_int);
+        let n1 = 255u64;
+        for delta in [c_int - 1, c_int / 2, c_int / 3 + 1, 1] {
+            let x = delta * n1;
+            assert_eq!(ms.div_round(x), (x + c_int / 2) / c_int, "delta={delta}");
         }
     }
 

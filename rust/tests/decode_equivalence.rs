@@ -134,6 +134,105 @@ fn rescale_path_keeps_fidelity_under_growing_magnitudes() {
 }
 
 #[test]
+fn batched_decode_bit_identical_to_sequential_for_every_pipeline_kind() {
+    // decode_step_batch must be *bit-identical* to B sequential decode_step
+    // calls for every pipeline kind: the integer GEMMs are exact, and every
+    // float operation in the batched paths is the same per-sequence
+    // expression evaluated in the same order — grouping only moves whole
+    // per-sequence products between threads.
+    let d = 16;
+    let ctxs = [1usize, 3, 7, 12, 5, 20, 9, 16]; // ragged batch of 8
+    for kind in PipelineKind::all() {
+        let mut rng = Pcg64::seed_from_u64(700);
+        let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d).with_threads(3));
+        // Build B independent states with per-sequence histories.
+        let mut st_seq: Vec<KvState> = Vec::new();
+        for &ctx in &ctxs {
+            let mut st = pipe.begin_state();
+            let (q, k, v) = (
+                rand_mat(&mut rng, ctx, d),
+                rand_mat(&mut rng, ctx, d),
+                rand_mat(&mut rng, ctx, d),
+            );
+            let _ = pipe.prefill(&mut st, &q, &k, &v);
+            st_seq.push(st);
+        }
+        let mut st_bat: Vec<KvState> = st_seq.clone();
+        let b = ctxs.len();
+        for round in 0..4 {
+            let q = rand_mat(&mut rng, b, d);
+            let k = rand_mat(&mut rng, b, d);
+            let v = rand_mat(&mut rng, b, d);
+            // Sequential oracle.
+            let mut want = Vec::with_capacity(b * d);
+            for (i, st) in st_seq.iter_mut().enumerate() {
+                let o = pipe.decode_step(
+                    st,
+                    &rows_of(&q, i, i + 1),
+                    &rows_of(&k, i, i + 1),
+                    &rows_of(&v, i, i + 1),
+                );
+                want.extend_from_slice(o.as_slice());
+            }
+            // One grouped call.
+            let mut refs: Vec<&mut KvState> = st_bat.iter_mut().collect();
+            let got = pipe.decode_step_batch(&mut refs, &q, &k, &v);
+            assert_eq!(
+                got.as_slice(),
+                &want[..],
+                "{} round {round}: batched decode must be bit-identical",
+                kind.name()
+            );
+        }
+        // The resident states advanced identically too.
+        for ((a, b_), &ctx) in st_seq.iter().zip(&st_bat).zip(&ctxs) {
+            assert_eq!(a.len(), ctx + 4, "{}", kind.name());
+            assert_eq!(a.len(), b_.len(), "{}", kind.name());
+            assert_eq!(a.bytes(), b_.bytes(), "{}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn batched_decode_matches_default_sequential_impl_for_grouped_q() {
+    // IntAttention's grouped-Q schemes ride the same batched path; cross-
+    // check one of them against the trait's default (sequential) oracle.
+    let d = 16;
+    let ctxs = [4usize, 11, 2];
+    let mut rng = Pcg64::seed_from_u64(800);
+    let mut pipe = IntAttention::new(AttentionConfig::new(0, d)).with_q_scheme(GroupScheme::PerRow);
+    let mut st_seq: Vec<KvState> = Vec::new();
+    for &ctx in &ctxs {
+        let mut st = pipe.begin_state();
+        let (q, k, v) = (
+            rand_mat(&mut rng, ctx, d),
+            rand_mat(&mut rng, ctx, d),
+            rand_mat(&mut rng, ctx, d),
+        );
+        let _ = pipe.prefill(&mut st, &q, &k, &v);
+        st_seq.push(st);
+    }
+    let mut st_bat = st_seq.clone();
+    let b = ctxs.len();
+    let q = rand_mat(&mut rng, b, d);
+    let k = rand_mat(&mut rng, b, d);
+    let v = rand_mat(&mut rng, b, d);
+    let mut want = Vec::new();
+    for (i, st) in st_seq.iter_mut().enumerate() {
+        let o = pipe.decode_step(
+            st,
+            &rows_of(&q, i, i + 1),
+            &rows_of(&k, i, i + 1),
+            &rows_of(&v, i, i + 1),
+        );
+        want.extend_from_slice(o.as_slice());
+    }
+    let mut refs: Vec<&mut KvState> = st_bat.iter_mut().collect();
+    let got = pipe.decode_step_batch(&mut refs, &q, &k, &v);
+    assert_eq!(got.as_slice(), &want[..], "grouped-Q batched decode must be bit-identical");
+}
+
+#[test]
 fn decode_conversion_work_is_independent_of_context() {
     // The acceptance criterion behind the decode-throughput bench, asserted
     // deterministically: per-token dtype conversions do not grow with the
