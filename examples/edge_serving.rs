@@ -35,7 +35,6 @@ fn main() {
             attention: kind,
             policy: BatchPolicy { max_active: 6, ..Default::default() },
             max_queue: 64,
-            threads: 1,
         };
         let handle = Engine::start(weights.clone(), opts);
         let t0 = std::time::Instant::now();

@@ -1,22 +1,98 @@
-//! Decode throughput over the stateful KV path, two modes:
+//! Decode throughput over the stateful KV path, plus the parallel-runtime
+//! launch-overhead microbench. Modes:
 //!
-//! 1. **Single-sequence sweep** — tokens/sec for the headline pipelines at
+//! 1. **Launch overhead** — ns per parallel launch: spawn-per-launch
+//!    (`std::thread::scope` via `scope_chunks_with`, what every grouped
+//!    decode GEMM used to pay per call) vs persistent dispatch onto the
+//!    parked [`ParallelPool`] workers. The ratio is the reason the pool's
+//!    grain threshold could drop ~1.5 orders of magnitude below the old
+//!    `PAR_GRAIN_*` constants; persistent dispatch is expected to be ≥10×
+//!    cheaper on real hardware.
+//! 2. **Single-sequence sweep** — tokens/sec for the headline pipelines at
 //!    several resident context lengths, plus the per-token Quantize-stage
 //!    time — which stays flat in context length for the stateful integer
-//!    pipelines (the whole point: no per-token history re-quantization)
-//!    while total step time grows with the two GEMMs.
-//! 2. **Multi-sequence mode** — aggregate tok/s for B concurrently decoding
-//!    sequences at a fixed context, sequential loop vs one grouped
-//!    `decode_step_batch` per round. A 1-row decode GEMM cannot be split
-//!    across worker threads, so the sequential loop is stuck at one core;
-//!    the grouped kernels spread the pool across sequences, and the batch-8
-//!    speedup is the headline number of the batched-decode work.
+//!    pipelines (no per-token history re-quantization).
+//! 3. **Multi-sequence mode** — aggregate tok/s for B concurrently decoding
+//!    sequences, sequential loop vs one grouped `decode_step_batch` per
+//!    round, at a deep context *and* at a short context. The short-context
+//!    rows are the persistent-runtime headline: below the old spawn-cost
+//!    grain (8·ctx·d < 2^20) the previous design forced integer launches
+//!    inline, so any batched speedup there is new.
+
 use intattention::harness::experiments as exp;
 use intattention::harness::report::{kv_rows_json, write_report};
-use intattention::util::threadpool::default_threads;
+use intattention::util::bench::black_box;
+use intattention::util::threadpool::{default_threads, scope_chunks_with, ParallelPool};
+
+/// Mean ns/launch for `reps` `threads`-wide launches through each
+/// dispatcher. Every launch runs `threads` single-item chunks whose body is
+/// a barrier rendezvous: each of the `threads` participating OS threads
+/// must claim exactly one chunk and meet the others, so both numbers
+/// include the full cross-thread cost — worker wakeup latency for the
+/// persistent pool, thread spawn for the scoped path. (A trivial body would
+/// let the *calling* thread drain all chunks before any parked worker woke,
+/// and the "dispatch" number would dishonestly omit the wakeups.)
+fn launch_overhead(threads: usize, reps: usize) -> (f64, f64) {
+    use std::sync::Barrier;
+    // Grain 1 so the persistent path genuinely dispatches at this tiny n
+    // (mirroring a small grouped decode launch).
+    let pool = ParallelPool::with_grain(threads, 1);
+    let barrier = Barrier::new(threads);
+    // Warmup: fault in stacks, park workers.
+    for _ in 0..reps / 10 + 1 {
+        scope_chunks_with(threads, threads, |_s, _e| {
+            barrier.wait();
+        });
+        pool.parallel_for(threads, usize::MAX, |_s, _e| {
+            barrier.wait();
+        });
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        scope_chunks_with(threads, threads, |s, e| {
+            barrier.wait();
+            black_box(s + e);
+        });
+    }
+    let spawn_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        pool.parallel_for(threads, usize::MAX, |s, e| {
+            barrier.wait();
+            black_box(s + e);
+        });
+    }
+    let dispatch_ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    (spawn_ns, dispatch_ns)
+}
 
 fn main() {
     let fast = std::env::var("INTATTN_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+
+    // -- Mode 1: launch overhead ----------------------------------------
+    // Fixed 4-wide launches (oversubscription on small hosts only adds
+    // scheduler noise to *both* paths) so numbers are comparable across
+    // machines.
+    let (reps, width) = if fast { (200, 4) } else { (2000, 4) };
+    let (spawn_ns, dispatch_ns) = launch_overhead(width, reps);
+    let ratio = spawn_ns / dispatch_ns.max(1e-9);
+    println!(
+        "launch overhead ({width}-wide, {reps} reps): spawn-per-launch {spawn_ns:.0} ns, \
+         persistent dispatch {dispatch_ns:.0} ns, ratio {ratio:.1}x"
+    );
+    let _ = write_report(
+        "launch_overhead",
+        &format!(
+            "spawn_per_launch_ns {spawn_ns:.0}\npersistent_dispatch_ns {dispatch_ns:.0}\nratio {ratio:.2}\n"
+        ),
+        Some(kv_rows_json(&[
+            ("spawn_per_launch_ns".to_string(), spawn_ns),
+            ("persistent_dispatch_ns".to_string(), dispatch_ns),
+            ("ratio".to_string(), ratio),
+        ])),
+    );
+
+    // -- Mode 2: single-sequence decode sweep ---------------------------
     let ctxs: Vec<usize> = if fast {
         vec![64, 256]
     } else if std::env::var("INTATTN_FULL").map(|v| v == "1").unwrap_or(false) {
@@ -34,24 +110,19 @@ fn main() {
         Some(kv_rows_json(&exp::decode_rows_json(&rows))),
     );
 
-    // Multi-sequence mode: batched decode through the grouped kernels vs
-    // the sequential loop at the same context length. The context must be
-    // deep enough that batch-8 grouped launches clear the int8 work-grain
-    // guard (8·ctx·d ≥ PAR_GRAIN_I8, i.e. ctx ≥ 1024 at d=128) — below
-    // that the integer launches deliberately stay inline and only the
-    // costlier-per-element FP16/FP32 rows show cross-sequence threading.
+    // -- Mode 3: multi-sequence batched decode --------------------------
+    // Deep context (GEMM-bound) and short context (launch-overhead-bound:
+    // the regime the old per-launch thread spawns kept single-threaded).
     let threads = default_threads().min(8);
-    let (batch_ctx, batches, rounds) = if fast {
-        (64, vec![1, 4], 4)
+    let (deep_ctx, short_ctx, batches, rounds) = if fast {
+        (64, 32, vec![1, 4], 4)
     } else {
-        (2048, vec![1, 2, 4, 8], 16)
+        (2048, 128, vec![1, 2, 4, 8], 16)
     };
-    let brows = exp::batched_decode_sweep(batch_ctx, &batches, exp::HEAD_DIM, rounds, threads);
-    let btable = exp::render_batched_decode(&brows);
-    btable.print();
-    let _ = write_report(
-        "decode_throughput_batched",
-        &btable.render(),
-        Some(kv_rows_json(&exp::batched_decode_rows_json(&brows))),
-    );
+    for (name, ctx) in [("decode_throughput_batched", deep_ctx), ("decode_throughput_batched_short", short_ctx)] {
+        let brows = exp::batched_decode_sweep(ctx, &batches, exp::HEAD_DIM, rounds, threads);
+        let btable = exp::render_batched_decode(&brows);
+        btable.print();
+        let _ = write_report(name, &btable.render(), Some(kv_rows_json(&exp::batched_decode_rows_json(&brows))));
+    }
 }

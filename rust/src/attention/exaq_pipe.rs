@@ -54,7 +54,7 @@ impl AttentionPipeline for ExaqAttention {
     fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
         validate_shapes(&self.cfg, q, k, v);
         let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
 
         let (qq, kq, vq) = self.times.measure(Stage::Quantize, || {
             (quantize_i8(q), quantize_i8(k), quantize_i8(v))
@@ -64,7 +64,7 @@ impl AttentionPipeline for ExaqAttention {
 
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8(&qq.data, &kq.data, &mut logits, threads);
+            par_gemm_i8(&qq.data, &kq.data, &mut logits, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -98,7 +98,7 @@ impl AttentionPipeline for ExaqAttention {
     fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
         validate_state_shapes(&self.cfg, state, q, k, v);
         let (m, d) = (q.rows(), self.cfg.head_dim);
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
 
         let (qq, remapped) = self.times.measure(Stage::Quantize, || {
             let remapped = state.append(k, v);
@@ -116,7 +116,7 @@ impl AttentionPipeline for ExaqAttention {
 
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, threads);
+            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -163,7 +163,7 @@ impl AttentionPipeline for ExaqAttention {
         if b == 0 {
             return MatF32::zeros(0, d);
         }
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let sqrt_d = (d as f32).sqrt();
 
         // (1) per-sequence append + query quantization.
@@ -202,7 +202,7 @@ impl AttentionPipeline for ExaqAttention {
                         out: lg.as_mut_slice(),
                     })
                     .collect();
-                par_gemm_i8_grouped(&mut groups, d, threads);
+                par_gemm_i8_grouped(&mut groups, d, pool);
             });
             for s in &ints {
                 self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
@@ -239,7 +239,7 @@ impl AttentionPipeline for ExaqAttention {
             for ((p, s), out) in ps.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
                 groups.push(GroupU8I8 { a: p.as_slice(), b: &s.v.data, out });
             }
-            par_gemm_u8i8_grouped(&mut groups, d, threads);
+            par_gemm_u8i8_grouped(&mut groups, d, pool);
         });
         for (p, s) in ps.iter().zip(&ints) {
             let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;

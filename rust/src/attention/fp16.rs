@@ -149,7 +149,7 @@ impl AttentionPipeline for Fp16Attention {
         if b == 0 {
             return MatF32::zeros(0, d);
         }
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let scale = 1.0 / (d as f32).sqrt();
 
         // (1) per-sequence append + query-row encode to f16 storage. Row
@@ -185,7 +185,7 @@ impl AttentionPipeline for Fp16Attention {
                     out: ar.as_mut_slice(),
                 })
                 .collect();
-            par_gemm_f16_grouped(&mut groups, d, threads);
+            par_gemm_f16_grouped(&mut groups, d, pool);
         });
         for s in &hs {
             self.ops.add(&counts::qk_gemm(1, s.len, d, 2, 2));
@@ -212,7 +212,7 @@ impl AttentionPipeline for Fp16Attention {
             for ((ph, s), orow) in phs.iter().zip(&hs).zip(o.as_mut_slice().chunks_mut(d)) {
                 groups.push(GroupF16 { a: ph.as_slice(), b: &s.v, out: orow });
             }
-            par_gemm_f16_notrans_grouped(&mut groups, d, threads);
+            par_gemm_f16_notrans_grouped(&mut groups, d, pool);
         });
         for s in &hs {
             self.ops.add(&counts::pv_gemm(s.len as u64, s.len, d, 2, 2));

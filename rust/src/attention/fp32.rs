@@ -41,12 +41,12 @@ impl AttentionPipeline for Fp32Attention {
         validate_shapes(&self.cfg, q, k, v);
         let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
         let scale = 1.0 / (d as f32).sqrt();
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
 
         // QKᵀ — K is already in "transposed" (keys-as-rows) layout.
         let mut a = MatF32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_f32(q, k, &mut a, threads);
+            par_gemm_f32(q, k, &mut a, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 4, 4));
 
@@ -66,7 +66,7 @@ impl AttentionPipeline for Fp32Attention {
         let mut o = MatF32::zeros(m, d);
         self.times.measure(Stage::PvGemm, || {
             let vt = v.transpose();
-            par_gemm_f32(&a, &vt, &mut o, threads);
+            par_gemm_f32(&a, &vt, &mut o, pool);
         });
         self.ops.add(&counts::pv_gemm(valid, l, d, 4, 4));
         o
@@ -78,7 +78,7 @@ impl AttentionPipeline for Fp32Attention {
     fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
         validate_state_shapes(&self.cfg, state, q, k, v);
         let (m, d) = (q.rows(), self.cfg.head_dim);
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let scale = 1.0 / (d as f32).sqrt();
 
         state.append(k, v);
@@ -89,7 +89,7 @@ impl AttentionPipeline for Fp32Attention {
         // QKᵀ — the resident K rows are already the "transposed" layout.
         let mut a = MatF32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_f32_slices(q.as_slice(), &st.k, a.as_mut_slice(), m, l, d, threads);
+            par_gemm_f32_slices(q.as_slice(), &st.k, a.as_mut_slice(), m, l, d, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 4, 4));
 
@@ -129,7 +129,7 @@ impl AttentionPipeline for Fp32Attention {
         if b == 0 {
             return MatF32::zeros(0, d);
         }
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let scale = 1.0 / (d as f32).sqrt();
 
         // Append each sequence's new K/V row in the native dtype (untimed,
@@ -146,7 +146,7 @@ impl AttentionPipeline for Fp32Attention {
             for (i, (s, ar)) in fs.iter().zip(a_rows.iter_mut()).enumerate() {
                 groups.push(GroupF32 { a: q.row(i), b: &s.k, out: ar.as_mut_slice() });
             }
-            par_gemm_f32_grouped(&mut groups, d, threads);
+            par_gemm_f32_grouped(&mut groups, d, pool);
         });
         for s in &fs {
             self.ops.add(&counts::qk_gemm(1, s.len, d, 4, 4));
@@ -172,7 +172,7 @@ impl AttentionPipeline for Fp32Attention {
             for ((ar, s), orow) in a_rows.iter().zip(&fs).zip(o.as_mut_slice().chunks_mut(d)) {
                 groups.push(GroupF32 { a: ar.as_slice(), b: &s.v, out: orow });
             }
-            par_gemm_f32_notrans_grouped(&mut groups, d, threads);
+            par_gemm_f32_notrans_grouped(&mut groups, d, pool);
         });
         for s in &fs {
             self.ops.add(&counts::pv_gemm(s.len as u64, s.len, d, 4, 4));

@@ -121,7 +121,7 @@ impl IntAttention {
         let qq = quantize_i8(q);
         let kq = quantize_i8(k);
         let mut logits = MatI32::zeros(q.rows(), k.rows());
-        par_gemm_i8(&qq.data, &kq.data, &mut logits, self.cfg.threads);
+        par_gemm_i8(&qq.data, &kq.data, &mut logits, self.cfg.pool);
         let alpha = qq.scale * kq.scale / (d as f32).sqrt();
         self.softmax.forward(&logits, alpha, self.cfg.mask)
     }
@@ -139,7 +139,7 @@ impl AttentionPipeline for IntAttention {
     fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
         validate_shapes(&self.cfg, q, k, v);
         let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let sqrt_d = (d as f32).sqrt();
 
         // (1) dynamic quantization (grouped for Q if configured).
@@ -151,7 +151,7 @@ impl AttentionPipeline for IntAttention {
         // (2) integer similarity GEMM.
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8(qq.data(), &kq.data, &mut logits, threads);
+            par_gemm_i8(qq.data(), &kq.data, &mut logits, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -186,7 +186,7 @@ impl AttentionPipeline for IntAttention {
     fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
         validate_state_shapes(&self.cfg, state, q, k, v);
         let (m, d) = (q.rows(), self.cfg.head_dim);
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let sqrt_d = (d as f32).sqrt();
 
         // (1) quantize the query block fresh; append-quantize only the new
@@ -209,7 +209,7 @@ impl AttentionPipeline for IntAttention {
         // (2) Q̂·K̂ᵀ against the resident INT8 keys.
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8_slices(qq.data().as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, threads);
+            par_gemm_i8_slices(qq.data().as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -255,7 +255,7 @@ impl AttentionPipeline for IntAttention {
         if b == 0 {
             return MatF32::zeros(0, d);
         }
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let sqrt_d = (d as f32).sqrt();
         let q_scheme = self.q_scheme;
 
@@ -293,7 +293,7 @@ impl AttentionPipeline for IntAttention {
                     out: lg.as_mut_slice(),
                 })
                 .collect();
-            par_gemm_i8_grouped(&mut groups, d, threads);
+            par_gemm_i8_grouped(&mut groups, d, pool);
         });
         for s in &ints {
             self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
@@ -321,7 +321,7 @@ impl AttentionPipeline for IntAttention {
             for ((p, s), out) in ps.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
                 groups.push(GroupU8I8 { a: p.as_slice(), b: &s.v.data, out });
             }
-            par_gemm_u8i8_grouped(&mut groups, d, threads);
+            par_gemm_u8i8_grouped(&mut groups, d, pool);
         });
         for (p, s) in ps.iter().zip(&ints) {
             let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;

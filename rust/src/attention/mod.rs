@@ -41,6 +41,7 @@ pub mod exaq_pipe;
 use crate::energy::OpCounts;
 use crate::softmax::index_softmax::{IndexSoftmaxConfig, Mask};
 use crate::tensor::{MatF32, MatI32};
+use crate::util::threadpool::ParallelPool;
 use crate::util::timer::StageTimes;
 
 pub use crate::softmax::index_softmax::Mask as AttentionMask;
@@ -55,8 +56,10 @@ pub struct AttentionConfig {
     pub head_dim: usize,
     /// Masking mode (causal for decoder prefill, none for encoders/decode).
     pub mask: Mask,
-    /// Worker threads for the GEMM drivers.
-    pub threads: usize,
+    /// Persistent parallel runtime the GEMM drivers dispatch onto. Defaults
+    /// to a single-thread (inline) pool; the serving path shares
+    /// [`ParallelPool::global`], sized once from `INTATTN_THREADS`.
+    pub pool: &'static ParallelPool,
     /// IndexSoftmax hyperparameters (used by the IntAttention pipeline).
     pub isx: IndexSoftmaxConfig,
 }
@@ -67,7 +70,7 @@ impl AttentionConfig {
             seq_len,
             head_dim,
             mask: Mask::None,
-            threads: 1,
+            pool: ParallelPool::sized(1),
             isx: IndexSoftmaxConfig::default(),
         }
     }
@@ -84,8 +87,17 @@ impl AttentionConfig {
         self
     }
 
-    pub fn with_threads(mut self, t: usize) -> Self {
-        self.threads = t.max(1);
+    /// Convenience: dispatch onto the cached fixed-size pool of `t`
+    /// computing threads ([`ParallelPool::sized`]); `t == 1` keeps every
+    /// launch inline. Benches use this to pin thread-count configurations.
+    pub fn with_threads(self, t: usize) -> Self {
+        self.with_pool(ParallelPool::sized(t))
+    }
+
+    /// Dispatch onto an explicit pool (tests pass grain-1 pools to force
+    /// real multi-worker dispatch on small shapes).
+    pub fn with_pool(mut self, pool: &'static ParallelPool) -> Self {
+        self.pool = pool;
         self
     }
 
@@ -397,10 +409,11 @@ mod tests {
         let cfg = AttentionConfig::new(128, 64).causal().with_threads(4);
         assert_eq!(cfg.seq_len, 128);
         assert_eq!(cfg.mask, Mask::Causal);
-        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.pool.size(), 4);
         assert_eq!(cfg.gemm_flops(128), 2 * 2 * 128 * 128 * 64);
         let cfg = AttentionConfig::new(128, 64).causal_from(96);
         assert_eq!(cfg.mask, Mask::CausalFrom(96));
+        assert_eq!(cfg.pool.size(), 1, "default pool is single-thread");
     }
 
     #[test]

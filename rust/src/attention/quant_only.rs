@@ -53,7 +53,7 @@ impl AttentionPipeline for QuantOnlyAttention {
     fn forward(&mut self, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
         validate_shapes(&self.cfg, q, k, v);
         let (m, l, d) = (q.rows(), self.cfg.seq_len, self.cfg.head_dim);
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
 
         // (1) dynamic quantization.
         let (qq, kq, vq) = self.times.measure(Stage::Quantize, || {
@@ -65,7 +65,7 @@ impl AttentionPipeline for QuantOnlyAttention {
         // (2) integer similarity GEMM.
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8(&qq.data, &kq.data, &mut logits, threads);
+            par_gemm_i8(&qq.data, &kq.data, &mut logits, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -110,7 +110,7 @@ impl AttentionPipeline for QuantOnlyAttention {
     fn prefill(&mut self, state: &mut KvState, q: &MatF32, k: &MatF32, v: &MatF32) -> MatF32 {
         validate_state_shapes(&self.cfg, state, q, k, v);
         let (m, d) = (q.rows(), self.cfg.head_dim);
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
 
         // (1) quantize the query block + append-quantize the new K/V rows.
         let (qq, remapped) = self.times.measure(Stage::Quantize, || {
@@ -130,7 +130,7 @@ impl AttentionPipeline for QuantOnlyAttention {
         // (2) Q̂·K̂ᵀ against the resident INT8 keys.
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, threads);
+            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -186,7 +186,7 @@ impl AttentionPipeline for QuantOnlyAttention {
         if b == 0 {
             return MatF32::zeros(0, d);
         }
-        let threads = self.cfg.threads;
+        let pool = self.cfg.pool;
         let sqrt_d = (d as f32).sqrt();
 
         // (1) per-sequence append + query quantization (own scales).
@@ -222,7 +222,7 @@ impl AttentionPipeline for QuantOnlyAttention {
                     out: lg.as_mut_slice(),
                 })
                 .collect();
-            par_gemm_i8_grouped(&mut groups, d, threads);
+            par_gemm_i8_grouped(&mut groups, d, pool);
         });
         for s in &ints {
             self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
@@ -269,7 +269,7 @@ impl AttentionPipeline for QuantOnlyAttention {
             for ((p, s), out) in probs.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
                 groups.push(GroupI8 { a: p.as_slice(), b: &s.v.data, out });
             }
-            par_gemm_i8_notrans_grouped(&mut groups, d, threads);
+            par_gemm_i8_notrans_grouped(&mut groups, d, pool);
         });
         for (p, s) in probs.iter().zip(&ints) {
             let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;

@@ -19,8 +19,13 @@
 //! Single scheduler thread: on the target class of devices (and this host)
 //! compute is the bottleneck, not I/O, so the engine keeps the model on one
 //! thread and exposes concurrency through batching — the same topology the
-//! paper's measurement setup uses (8 worker threads inside the kernels, one
-//! request loop). The batched decode is what lets those worker threads do
+//! paper's measurement setup uses (worker threads inside the kernels, one
+//! request loop). The kernel workers are the process-wide persistent
+//! [`ParallelPool`](crate::util::threadpool::ParallelPool) (sized once from
+//! `INTATTN_THREADS`, default: available parallelism) — the engine no
+//! longer threads a `threads` knob through the model; every decode-round
+//! launch dispatches onto already-parked workers in ~µs instead of
+//! spawning OS threads. The batched decode is what gives those workers
 //! useful work during decode: a single sequence's 1-row GEMM cannot be
 //! split across workers, a batch of sequences can.
 
@@ -42,8 +47,6 @@ pub struct EngineOptions {
     pub policy: BatchPolicy,
     /// Bounded wait-queue depth; submits beyond this are rejected.
     pub max_queue: usize,
-    /// GEMM threads inside the model.
-    pub threads: usize,
 }
 
 impl Default for EngineOptions {
@@ -52,7 +55,6 @@ impl Default for EngineOptions {
             attention: PipelineKind::IntAttention,
             policy: BatchPolicy::default(),
             max_queue: 64,
-            threads: 1,
         }
     }
 }
@@ -213,7 +215,6 @@ fn scheduler_loop(
     shutdown: Arc<AtomicBool>,
 ) {
     let mut lm = TinyLm::new(weights, opts.attention);
-    lm.threads = opts.threads;
     let cfg = *lm.config();
     let mut waiting: VecDeque<Request> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();

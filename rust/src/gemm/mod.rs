@@ -12,7 +12,25 @@
 //! so every inner loop is a contiguous dot product that the compiler
 //! autovectorizes — the x86 stand-in for the paper's NEON SDOT/I8MM path.
 //! Register-blocked 4×2 microkernels with K-tiling keep the accumulators in
-//! registers; `par_*` drivers split rows across threads.
+//! registers; `par_*` drivers split output rows across the persistent
+//! [`ParallelPool`] workers.
+//!
+//! ## Parallel launch model
+//!
+//! Every `par_*` driver takes a `&ParallelPool` (the serving path passes
+//! [`ParallelPool::global`], sized once from `INTATTN_THREADS`) and
+//! dispatches row ranges / groups onto its **persistent workers** — ~µs per
+//! launch versus the ~10–30 µs of the old spawn-per-launch
+//! (`std::thread::scope`) design. Whether a launch parallelizes at all is
+//! the pool's single grain policy (`INTATTN_PAR_GRAIN`, default 2^14 work
+//! units per worker): drivers pass their MAC-proportional work estimate
+//! (`m·n·k`, or the summed resident-operand elements of a grouped launch)
+//! and the pool grants one worker per grain unit, capped at its size. This
+//! replaced the per-dtype `PAR_GRAIN_I8/F32/F16` constants (2^16–2^20),
+//! which had to keep small-and-medium decode launches inline because each
+//! extra worker used to cost an OS-thread spawn; with persistent dispatch
+//! the threshold drops by ~1.5 orders of magnitude, so grouped int8 decode
+//! launches parallelize far below the old 2^20 bar.
 //!
 //! ## Grouped (batched multi-sequence decode) kernels
 //!
@@ -22,13 +40,17 @@
 //! *rows*, and there is only one), so at batch B the pre-batching engine ran
 //! B memory-bound kernel launches back to back. The `*_grouped` drivers take
 //! B independent [`GemmGroup`]s — each with its own resident KV buffer and
-//! per-group context length `L_b` — and run them in **one** call, spreading
-//! the thread pool *across groups* while reusing the same AVX-512 row
-//! kernels inside each group.
+//! per-group context length `L_b` — and run them in **one** pool launch.
+//! Workers claim groups one at a time through the launch's atomic cursor
+//! ([`ParallelPool::parallel_groups`]), so ragged batches load-balance
+//! dynamically instead of relying on a static strided assignment. Worker
+//! count and claim order never affect results: every group owns a disjoint
+//! output slice and is computed by the same row kernel the sequential path
+//! uses.
 
 use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
 use crate::util::f16::F16;
-use crate::util::threadpool::scope_chunks_with;
+use crate::util::threadpool::{ParallelPool, SendPtr};
 
 /// K-dimension tile: fits comfortably in L1 alongside 4 A-rows + 2 B-rows.
 const KC: usize = 1024;
@@ -83,17 +105,18 @@ fn gemm_f32_rows(a: &MatF32, bt: &MatF32, c: &mut MatF32, r0: usize, r1: usize) 
     }
 }
 
-/// Thread-parallel f32 GEMM.
-pub fn par_gemm_f32(a: &MatF32, bt: &MatF32, c: &mut MatF32, threads: usize) {
-    let m = a.rows();
+/// Pool-parallel f32 GEMM.
+pub fn par_gemm_f32(a: &MatF32, bt: &MatF32, c: &mut MatF32, pool: &ParallelPool) {
+    let (m, k) = (a.rows(), a.cols());
     let n = bt.rows();
     assert_eq!((c.rows(), c.cols()), (m, n));
-    if threads <= 1 {
+    let work = m * n * k;
+    if pool.workers_for(work) <= 1 {
         return gemm_f32(a, bt, c);
     }
-    // SAFETY-free parallelism: split output rows into disjoint &mut chunks.
+    // Split output rows into disjoint &mut chunks across the workers.
     let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
-    scope_chunks_with(threads, m, |r0, r1| {
+    pool.parallel_for(m, work, |r0, r1| {
         // Each chunk writes only rows [r0, r1): disjoint slices.
         let c_chunk =
             unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(r0 * n), (r1 - r0) * n) };
@@ -188,7 +211,7 @@ fn gemm_f32_slices_rows(a: &[f32], bt: &[f32], c: &mut [f32], n: usize, k: usize
     }
 }
 
-/// Thread-parallel [`gemm_f32_slices`].
+/// Pool-parallel [`gemm_f32_slices`].
 pub fn par_gemm_f32_slices(
     a: &[f32],
     bt: &[f32],
@@ -196,16 +219,17 @@ pub fn par_gemm_f32_slices(
     m: usize,
     n: usize,
     k: usize,
-    threads: usize,
+    pool: &ParallelPool,
 ) {
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     assert_eq!(c.len(), m * n);
-    if threads <= 1 {
+    let work = m * n * k;
+    if pool.workers_for(work) <= 1 {
         return gemm_f32_slices(a, bt, c, m, n, k);
     }
     let c_ptr = SendPtr(c.as_mut_ptr());
-    scope_chunks_with(threads, m, |r0, r1| {
+    pool.parallel_for(m, work, |r0, r1| {
         // Each chunk writes only rows [r0, r1): disjoint regions of C.
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_f32_slices_rows(a, bt, c_full, n, k, r0, r1);
@@ -231,21 +255,6 @@ pub fn gemm_f32_notrans_slices(p: &[f32], v: &[f32], c: &mut [f32], m: usize, l:
                 *acc += pij * vx;
             }
         }
-    }
-}
-
-/// Wrapper for sending a raw pointer across scoped threads; the row ranges
-/// passed to each thread are disjoint by construction.
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
-
-impl<T> SendPtr<T> {
-    /// Accessor (rather than field access) so closures capture the whole
-    /// `Sync` wrapper, not the raw pointer (edition-2021 disjoint capture).
-    #[inline]
-    fn get(&self) -> *mut T {
-        self.0
     }
 }
 
@@ -449,18 +458,19 @@ unsafe fn gemm_i8_rows_avx512(
     }
 }
 
-/// Thread-parallel i8 GEMM.
-pub fn par_gemm_i8(a: &MatI8, bt: &MatI8, c: &mut MatI32, threads: usize) {
+/// Pool-parallel i8 GEMM.
+pub fn par_gemm_i8(a: &MatI8, bt: &MatI8, c: &mut MatI32, pool: &ParallelPool) {
     let (m, k) = (a.rows(), a.cols());
     let n = bt.rows();
     assert_eq!(bt.cols(), k);
     assert_eq!((c.rows(), c.cols()), (m, n));
-    if threads <= 1 {
+    let work = m * n * k;
+    if pool.workers_for(work) <= 1 {
         return gemm_i8(a, bt, c);
     }
     let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
     let (a_s, b_s) = (a.as_slice(), bt.as_slice());
-    scope_chunks_with(threads, m, |r0, r1| {
+    pool.parallel_for(m, work, |r0, r1| {
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_i8_rows(a_s, b_s, c_full, m, n, k, r0, r1);
     });
@@ -475,7 +485,7 @@ pub fn gemm_i8_slices(a: &[i8], bt: &[i8], c: &mut [i32], m: usize, n: usize, k:
     gemm_i8_rows(a, bt, c, m, n, k, 0, m);
 }
 
-/// Thread-parallel [`gemm_i8_slices`].
+/// Pool-parallel [`gemm_i8_slices`].
 pub fn par_gemm_i8_slices(
     a: &[i8],
     bt: &[i8],
@@ -483,16 +493,17 @@ pub fn par_gemm_i8_slices(
     m: usize,
     n: usize,
     k: usize,
-    threads: usize,
+    pool: &ParallelPool,
 ) {
     assert_eq!(a.len(), m * k);
     assert_eq!(bt.len(), n * k);
     assert_eq!(c.len(), m * n);
-    if threads <= 1 {
+    let work = m * n * k;
+    if pool.workers_for(work) <= 1 {
         return gemm_i8_slices(a, bt, c, m, n, k);
     }
     let c_ptr = SendPtr(c.as_mut_ptr());
-    scope_chunks_with(threads, m, |r0, r1| {
+    pool.parallel_for(m, work, |r0, r1| {
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_i8_rows(a, bt, c_full, m, n, k, r0, r1);
     });
@@ -534,18 +545,19 @@ fn gemm_u8i8_rows(p: &[u8], v: &[i8], c: &mut [i32], l: usize, d: usize, r0: usi
     }
 }
 
-/// Thread-parallel u8×i8 GEMM.
-pub fn par_gemm_u8i8(p: &MatU8, v: &MatI8, c: &mut MatI32, threads: usize) {
+/// Pool-parallel u8×i8 GEMM.
+pub fn par_gemm_u8i8(p: &MatU8, v: &MatI8, c: &mut MatI32, pool: &ParallelPool) {
     let (m, l) = (p.rows(), p.cols());
     let d = v.cols();
     assert_eq!(v.rows(), l);
     assert_eq!((c.rows(), c.cols()), (m, d));
-    if threads <= 1 {
+    let work = m * l * d;
+    if pool.workers_for(work) <= 1 {
         return gemm_u8i8(p, v, c);
     }
     let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
     let (p_s, v_s) = (p.as_slice(), v.as_slice());
-    scope_chunks_with(threads, m, |r0, r1| {
+    pool.parallel_for(m, work, |r0, r1| {
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * d) };
         gemm_u8i8_rows(p_s, v_s, c_full, l, d, r0, r1);
     });
@@ -662,59 +674,14 @@ pub type GroupF32<'a> = GemmGroup<'a, f32, f32, f32>;
 /// f16-storage group (FP16 baseline pipeline).
 pub type GroupF16<'a> = GemmGroup<'a, F16, F16, f32>;
 
-/// Grain sizes: resident elements of work per worker below which a grouped
-/// launch is not worth another scoped thread. `scope_chunks_with` spawns OS
-/// threads per call (~10–30 µs each, see threadpool.rs), so a small decode
-/// launch must run inline rather than pay spawn overhead comparable to the
-/// launch itself; the per-dtype values come from the kernels' rough
-/// elements-per-ns throughputs (AVX-512 i8 ≫ f32 dot ≫ software-f16
-/// decode) and err conservative — tune on real hardware.
-const PAR_GRAIN_I8: usize = 1 << 20;
-const PAR_GRAIN_F32: usize = 1 << 19;
-const PAR_GRAIN_F16: usize = 1 << 16;
-
-/// Workers to actually use for `work` total resident elements: one per
-/// `grain`, capped at the caller's `threads`. Thread count never affects
-/// results (whole groups move between workers), only spawn overhead.
-fn effective_threads(threads: usize, work: usize, grain: usize) -> usize {
-    threads.min(work / grain + 1)
-}
-
 /// Total resident-operand elements across a grouped launch — proportional
 /// to its MAC count on both the QK (`n·k` keys) and PV (`l·d` values) sides.
+/// This is the work estimate the pool's grain policy sees; whether (and how
+/// wide) the launch parallelizes is decided by [`ParallelPool::workers_for`]
+/// — one env-tunable threshold instead of the old per-dtype `PAR_GRAIN_*`
+/// constants.
 fn grouped_work<A, B, C>(groups: &[GemmGroup<A, B, C>]) -> usize {
     groups.iter().map(|g| g.b.len()).sum()
-}
-
-/// Split `groups` across up to `threads` workers with a **strided**
-/// assignment (worker `t` takes groups `t, t+T, t+2T, …`): a group's cost is
-/// proportional to its context length, and the engine's active set is
-/// ordered by admission age, so contiguous chunking would hand one worker
-/// all the long-context sequences while the rest idle. Race-free because
-/// each index is visited by exactly one worker (`i ≡ t mod T`) and every
-/// group owns a disjoint output slice.
-fn par_over_groups<G: Send>(groups: &mut [G], threads: usize, f: impl Fn(&mut G) + Sync) {
-    let n = groups.len();
-    let threads = threads.max(1).min(n.max(1));
-    if threads <= 1 {
-        for g in groups.iter_mut() {
-            f(g);
-        }
-        return;
-    }
-    let ptr = SendPtr(groups.as_mut_ptr());
-    scope_chunks_with(threads, threads, |t0, t1| {
-        for t in t0..t1 {
-            let mut i = t;
-            while i < n {
-                // SAFETY: index i is visited only by worker t (i ≡ t mod
-                // threads), so the &mut is exclusive.
-                let g = unsafe { &mut *ptr.get().add(i) };
-                f(g);
-                i += threads;
-            }
-        }
-    });
 }
 
 #[inline]
@@ -733,11 +700,11 @@ pub fn gemm_i8_grouped(groups: &mut [GroupI8], k: usize) {
     }
 }
 
-/// Thread-parallel [`gemm_i8_grouped`]: workers split across groups (a
+/// Pool-parallel [`gemm_i8_grouped`]: workers claim groups dynamically (a
 /// single decode row cannot be split; a batch of sequences can).
-pub fn par_gemm_i8_grouped(groups: &mut [GroupI8], k: usize, threads: usize) {
-    let t = effective_threads(threads, grouped_work(groups), PAR_GRAIN_I8);
-    par_over_groups(groups, t, |g| gemm_i8_group(g, k));
+pub fn par_gemm_i8_grouped(groups: &mut [GroupI8], k: usize, pool: &ParallelPool) {
+    let work = grouped_work(groups);
+    pool.parallel_groups(groups, work, |g| gemm_i8_group(g, k));
 }
 
 #[inline]
@@ -757,10 +724,10 @@ pub fn gemm_u8i8_grouped(groups: &mut [GroupU8I8], d: usize) {
     }
 }
 
-/// Thread-parallel [`gemm_u8i8_grouped`].
-pub fn par_gemm_u8i8_grouped(groups: &mut [GroupU8I8], d: usize, threads: usize) {
-    let t = effective_threads(threads, grouped_work(groups), PAR_GRAIN_I8);
-    par_over_groups(groups, t, |g| gemm_u8i8_group(g, d));
+/// Pool-parallel [`gemm_u8i8_grouped`].
+pub fn par_gemm_u8i8_grouped(groups: &mut [GroupU8I8], d: usize, pool: &ParallelPool) {
+    let work = grouped_work(groups);
+    pool.parallel_groups(groups, work, |g| gemm_u8i8_group(g, d));
 }
 
 #[inline]
@@ -778,18 +745,18 @@ pub fn gemm_i8_notrans_grouped(groups: &mut [GroupI8], d: usize) {
     }
 }
 
-/// Thread-parallel [`gemm_i8_notrans_grouped`].
-pub fn par_gemm_i8_notrans_grouped(groups: &mut [GroupI8], d: usize, threads: usize) {
-    let t = effective_threads(threads, grouped_work(groups), PAR_GRAIN_I8);
-    par_over_groups(groups, t, |g| gemm_i8_notrans_group(g, d));
+/// Pool-parallel [`gemm_i8_notrans_grouped`].
+pub fn par_gemm_i8_notrans_grouped(groups: &mut [GroupI8], d: usize, pool: &ParallelPool) {
+    let work = grouped_work(groups);
+    pool.parallel_groups(groups, work, |g| gemm_i8_notrans_group(g, d));
 }
 
 /// Grouped f32 `Q·Kᵀ` (per-group `1×L_b` against resident keys); bit-exact
 /// with per-group [`gemm_f32_slices`] calls — the grouping only moves work
-/// between threads, never within a dot product.
-pub fn par_gemm_f32_grouped(groups: &mut [GroupF32], k: usize, threads: usize) {
-    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F32);
-    par_over_groups(groups, threads, |g| {
+/// between workers, never within a dot product.
+pub fn par_gemm_f32_grouped(groups: &mut [GroupF32], k: usize, pool: &ParallelPool) {
+    let work = grouped_work(groups);
+    pool.parallel_groups(groups, work, |g| {
         let n = g.out.len();
         assert_eq!(g.a.len(), k, "query row length");
         assert_eq!(g.b.len(), n * k, "K buffer shape");
@@ -799,9 +766,9 @@ pub fn par_gemm_f32_grouped(groups: &mut [GroupF32], k: usize, threads: usize) {
 
 /// Grouped f32 `P·V` with V in natural row layout (zero-skipping, like
 /// [`gemm_f32_notrans_slices`]).
-pub fn par_gemm_f32_notrans_grouped(groups: &mut [GroupF32], d: usize, threads: usize) {
-    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F32);
-    par_over_groups(groups, threads, |g| {
+pub fn par_gemm_f32_notrans_grouped(groups: &mut [GroupF32], d: usize, pool: &ParallelPool) {
+    let work = grouped_work(groups);
+    pool.parallel_groups(groups, work, |g| {
         let l = g.a.len();
         assert_eq!(g.b.len(), l * d, "V buffer shape");
         assert_eq!(g.out.len(), d, "output row length");
@@ -811,9 +778,9 @@ pub fn par_gemm_f32_notrans_grouped(groups: &mut [GroupF32], d: usize, threads: 
 
 /// Grouped f16-storage `Q·Kᵀ`: per group, exactly one [`gemm_f16`] call
 /// (same decode-then-dot dataflow as the sequential path).
-pub fn par_gemm_f16_grouped(groups: &mut [GroupF16], k: usize, threads: usize) {
-    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F16);
-    par_over_groups(groups, threads, |g| {
+pub fn par_gemm_f16_grouped(groups: &mut [GroupF16], k: usize, pool: &ParallelPool) {
+    let work = grouped_work(groups);
+    pool.parallel_groups(groups, work, |g| {
         let n = g.out.len();
         assert_eq!(g.a.len(), k, "query row length");
         assert_eq!(g.b.len(), n * k, "K buffer shape");
@@ -822,9 +789,9 @@ pub fn par_gemm_f16_grouped(groups: &mut [GroupF16], k: usize, threads: usize) {
 }
 
 /// Grouped f16-storage `P·V` with V in natural row layout.
-pub fn par_gemm_f16_notrans_grouped(groups: &mut [GroupF16], d: usize, threads: usize) {
-    let threads = effective_threads(threads, grouped_work(groups), PAR_GRAIN_F16);
-    par_over_groups(groups, threads, |g| {
+pub fn par_gemm_f16_notrans_grouped(groups: &mut [GroupF16], d: usize, pool: &ParallelPool) {
+    let work = grouped_work(groups);
+    pool.parallel_groups(groups, work, |g| {
         let l = g.a.len();
         assert_eq!(g.b.len(), l * d, "V buffer shape");
         assert_eq!(g.out.len(), d, "output row length");
@@ -870,6 +837,12 @@ mod tests {
     use super::*;
     use crate::util::prng::Pcg64;
 
+    /// Test pool with grain 1: every launch actually dispatches onto the
+    /// persistent workers regardless of how small the test shapes are.
+    fn tpool(n: usize) -> ParallelPool {
+        ParallelPool::with_grain(n, 1)
+    }
+
     fn rand_f32(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
         MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
     }
@@ -904,7 +877,7 @@ mod tests {
         let mut c1 = MatF32::zeros(33, 29);
         let mut c4 = MatF32::zeros(33, 29);
         gemm_f32(&a, &bt, &mut c1);
-        par_gemm_f32(&a, &bt, &mut c4, 4);
+        par_gemm_f32(&a, &bt, &mut c4, &tpool(4));
         assert!(c1.allclose(&c4, 1e-5, 1e-5));
     }
 
@@ -930,7 +903,7 @@ mod tests {
         let mut c1 = MatI32::zeros(37, 23);
         let mut c4 = MatI32::zeros(37, 23);
         gemm_i8(&a, &bt, &mut c1);
-        par_gemm_i8(&a, &bt, &mut c4, 3);
+        par_gemm_i8(&a, &bt, &mut c4, &tpool(3));
         assert_eq!(c1, c4);
     }
 
@@ -973,7 +946,7 @@ mod tests {
         let mut c1 = MatI32::zeros(41, 32);
         let mut c2 = MatI32::zeros(41, 32);
         gemm_u8i8(&p, &v, &mut c1);
-        par_gemm_u8i8(&p, &v, &mut c2, 5);
+        par_gemm_u8i8(&p, &v, &mut c2, &tpool(5));
         assert_eq!(c1, c2);
     }
 
@@ -1037,7 +1010,7 @@ mod tests {
             .zip(c_ref.as_slice())
             .all(|(x, y)| (x - y).abs() < 1e-4));
         let mut c_par = vec![0f32; m * n];
-        par_gemm_f32_slices(a.as_slice(), bt.as_slice(), &mut c_par, m, n, k, 3);
+        par_gemm_f32_slices(a.as_slice(), bt.as_slice(), &mut c_par, m, n, k, &tpool(3));
         assert_eq!(c, c_par);
         // i8
         let ai = rand_i8(&mut rng, m, k);
@@ -1048,7 +1021,7 @@ mod tests {
         gemm_i8_slices(ai.as_slice(), bi.as_slice(), &mut ci, m, n, k);
         assert_eq!(&ci, ci_ref.as_slice());
         let mut ci_par = vec![0i32; m * n];
-        par_gemm_i8_slices(ai.as_slice(), bi.as_slice(), &mut ci_par, m, n, k, 4);
+        par_gemm_i8_slices(ai.as_slice(), bi.as_slice(), &mut ci_par, m, n, k, &tpool(4));
         assert_eq!(ci, ci_par);
     }
 
@@ -1110,31 +1083,9 @@ mod tests {
     }
 
     #[test]
-    fn par_over_groups_strided_split_covers_every_group_once() {
-        // Directly exercise the multithreaded strided split — the public
-        // drivers' grain guard keeps test-sized launches inline.
-        for (n, threads) in [(1usize, 4usize), (7, 3), (23, 4), (8, 16), (5, 1)] {
-            let mut groups: Vec<u32> = vec![0; n];
-            par_over_groups(&mut groups, threads, |g| *g += 1);
-            assert!(groups.iter().all(|&x| x == 1), "n={n} threads={threads}");
-        }
-    }
-
-    #[test]
-    fn effective_threads_grain_guard() {
-        // One worker per `grain` elements of work, capped at the caller's
-        // thread budget; tiny launches stay inline (1 worker, no spawns).
-        assert_eq!(effective_threads(8, 0, 1 << 20), 1);
-        assert_eq!(effective_threads(8, (1 << 20) - 1, 1 << 20), 1);
-        assert_eq!(effective_threads(8, 1 << 20, 1 << 20), 2);
-        assert_eq!(effective_threads(8, 100 << 20, 1 << 20), 8);
-        assert_eq!(effective_threads(1, 100 << 20, 1 << 20), 1);
-    }
-
-    #[test]
     fn grouped_i8_matches_per_group_slice_kernels() {
         // Ragged batch: per-group context lengths differ; grouped output
-        // must equal B independent slice-kernel calls, serial and parallel.
+        // must equal B independent slice-kernel calls, serial and pooled.
         let mut rng = Pcg64::seed_from_u64(20);
         let k = 48;
         let ns = [1usize, 7, 33, 12, 64];
@@ -1146,9 +1097,10 @@ mod tests {
             gemm_i8_slices(q.as_slice(), kv.as_slice(), &mut c, 1, n, k);
             want.push(c);
         }
-        // Serial driver, then the parallel one at several widths (the
-        // strided split must cover every group exactly once).
+        // Serial driver, then the pooled one at several widths (the dynamic
+        // cursor must hand out every group exactly once).
         for threads in [0, 1, 2, 3, 16] {
+            let pool = tpool(threads.max(1));
             let mut outs: Vec<Vec<i32>> = ns.iter().map(|&n| vec![0i32; n]).collect();
             let mut groups: Vec<GroupI8> = qs
                 .iter()
@@ -1163,7 +1115,7 @@ mod tests {
             if threads == 0 {
                 gemm_i8_grouped(&mut groups, k);
             } else {
-                par_gemm_i8_grouped(&mut groups, k, threads);
+                par_gemm_i8_grouped(&mut groups, k, &pool);
             }
             drop(groups);
             assert_eq!(outs, want, "threads={threads}");
@@ -1184,8 +1136,9 @@ mod tests {
             gemm_u8i8_slices(p.as_slice(), v.as_slice(), &mut c, 1, l, d);
             want.push(c);
         }
-        // Serial driver first, then the parallel one.
+        // Serial driver first, then the pooled one.
         for threads in [0usize, 2] {
+            let pool = tpool(threads.max(1));
             let mut outs: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
             let mut groups: Vec<GroupU8I8> = ps
                 .iter()
@@ -1200,7 +1153,7 @@ mod tests {
             if threads == 0 {
                 gemm_u8i8_grouped(&mut groups, d);
             } else {
-                par_gemm_u8i8_grouped(&mut groups, d, threads);
+                par_gemm_u8i8_grouped(&mut groups, d, &pool);
             }
             drop(groups);
             assert_eq!(outs, want, "threads={threads}");
@@ -1214,6 +1167,7 @@ mod tests {
             want_i.push(c);
         }
         for threads in [0usize, 3] {
+            let pool = tpool(threads.max(1));
             let mut outs_i: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
             let mut groups_i: Vec<GroupI8> = pis
                 .iter()
@@ -1228,7 +1182,7 @@ mod tests {
             if threads == 0 {
                 gemm_i8_notrans_grouped(&mut groups_i, d);
             } else {
-                par_gemm_i8_notrans_grouped(&mut groups_i, d, threads);
+                par_gemm_i8_notrans_grouped(&mut groups_i, d, &pool);
             }
             drop(groups_i);
             assert_eq!(outs_i, want_i, "threads={threads}");
@@ -1260,7 +1214,7 @@ mod tests {
                 out: out.as_mut_slice(),
             })
             .collect();
-        par_gemm_f32_grouped(&mut groups, k, 2);
+        par_gemm_f32_grouped(&mut groups, k, &tpool(2));
         drop(groups);
         assert_eq!(outs, want, "grouped f32 QK must be bit-identical");
         // f16 PV side.
@@ -1294,8 +1248,79 @@ mod tests {
                 out: out.as_mut_slice(),
             })
             .collect();
-        par_gemm_f16_notrans_grouped(&mut groups_h, d, 2);
+        par_gemm_f16_notrans_grouped(&mut groups_h, d, &tpool(2));
         drop(groups_h);
         assert_eq!(outs_h, want_h, "grouped f16 PV must be bit-identical");
+    }
+
+    #[test]
+    fn pooled_drivers_bit_identical_across_pool_sizes() {
+        // The persistent-runtime determinism contract: every par_* driver's
+        // output is bit-identical at pool sizes 1/2/8 (grain 1, so the
+        // multi-worker sizes genuinely dispatch) for every dtype. Chunk
+        // boundaries and claim order move whole rows/groups between
+        // workers; they never change what any output element computes.
+        let mut rng = Pcg64::seed_from_u64(40);
+        let (m, n, k) = (23, 17, 40);
+        let af = rand_f32(&mut rng, m, k);
+        let bf = rand_f32(&mut rng, n, k);
+        let ai = rand_i8(&mut rng, m, k);
+        let bi = rand_i8(&mut rng, n, k);
+        let pu = rand_u8(&mut rng, m, n);
+        let vi = rand_i8(&mut rng, n, k);
+        // Single-thread references (pool size 1 == inline serial path).
+        let p1 = tpool(1);
+        let mut cf_ref = vec![0f32; m * n];
+        par_gemm_f32_slices(af.as_slice(), bf.as_slice(), &mut cf_ref, m, n, k, &p1);
+        let mut ci_ref = MatI32::zeros(m, n);
+        par_gemm_i8(&ai, &bi, &mut ci_ref, &p1);
+        let mut cu_ref = MatI32::zeros(m, k);
+        par_gemm_u8i8(&pu, &vi, &mut cu_ref, &p1);
+        for threads in [2usize, 8] {
+            let pool = tpool(threads);
+            let mut cf = vec![0f32; m * n];
+            par_gemm_f32_slices(af.as_slice(), bf.as_slice(), &mut cf, m, n, k, &pool);
+            assert_eq!(cf, cf_ref, "f32 slices @ {threads}");
+            let mut ci = MatI32::zeros(m, n);
+            par_gemm_i8(&ai, &bi, &mut ci, &pool);
+            assert_eq!(ci, ci_ref, "i8 @ {threads}");
+            let mut cu = MatI32::zeros(m, k);
+            par_gemm_u8i8(&pu, &vi, &mut cu, &pool);
+            assert_eq!(cu, cu_ref, "u8i8 @ {threads}");
+        }
+        // Grouped f16 QK (the remaining dtype driver): per group exactly one
+        // gemm_f16 call, so pooled output must bit-match the serial call.
+        let ns = [3usize, 9, 1, 14];
+        let qh: Vec<Vec<F16>> = ns
+            .iter()
+            .map(|_| (0..k).map(|_| F16::from_f32(rng.normal())).collect())
+            .collect();
+        let kh: Vec<Vec<F16>> = ns
+            .iter()
+            .map(|&nn| (0..nn * k).map(|_| F16::from_f32(rng.normal())).collect())
+            .collect();
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for ((q, kk), &nn) in qh.iter().zip(&kh).zip(&ns) {
+            let mut c = vec![0f32; nn];
+            gemm_f16(q, kk, 1, nn, k, &mut c);
+            want.push(c);
+        }
+        for threads in [1usize, 2, 8] {
+            let pool = tpool(threads);
+            let mut outs: Vec<Vec<f32>> = ns.iter().map(|&nn| vec![0f32; nn]).collect();
+            let mut groups: Vec<GroupF16> = qh
+                .iter()
+                .zip(&kh)
+                .zip(outs.iter_mut())
+                .map(|((q, kk), out)| GroupF16 {
+                    a: q.as_slice(),
+                    b: kk.as_slice(),
+                    out: out.as_mut_slice(),
+                })
+                .collect();
+            par_gemm_f16_grouped(&mut groups, k, &pool);
+            drop(groups);
+            assert_eq!(outs, want, "grouped f16 QK @ {threads}");
+        }
     }
 }

@@ -185,7 +185,9 @@ pub struct SpeedRow {
 }
 
 /// One platform configuration's speed sweep (Fig 6 = config "rk3588s2-like",
-/// Fig 7 = "m2-like"; on this host they differ in thread count).
+/// Fig 7 = "m2-like"; on this host they differ in thread count). `threads`
+/// selects the cached persistent [`crate::util::threadpool::ParallelPool`]
+/// of that width (1 = inline, no dispatch overhead).
 pub fn speed_sweep(seq_lens: &[usize], d: usize, threads: usize) -> Vec<SpeedRow> {
     let mut rng = Pcg64::seed_from_u64(6);
     let bench_cfg = crate::util::bench::BenchConfig::from_env(crate::util::bench::BenchConfig::heavy());
@@ -361,7 +363,11 @@ impl BatchedDecodeRow {
 /// states to `ctx` positions, then time `rounds` decode rounds driven (a)
 /// sequentially and (b) through one `decode_step_batch` call per round.
 /// Both paths start from clones of the same prefilled states and consume
-/// the same inputs, so the comparison is kernel-shape only.
+/// the same inputs, so the comparison is kernel-shape only. The grouped
+/// launches dispatch onto the cached `threads`-wide persistent pool
+/// (~µs per launch), so they parallelize even at short contexts — the old
+/// spawn-per-launch grain guard kept integer launches inline below
+/// `8·ctx·d ≈ 2^20` resident elements.
 pub fn batched_decode_sweep(
     ctx: usize,
     batches: &[usize],

@@ -8,6 +8,7 @@ use crate::gemm::gemm_f32;
 use crate::model::weights::BlockWeights;
 use crate::softmax::index_softmax::Mask;
 use crate::tensor::MatF32;
+use crate::util::threadpool::ParallelPool;
 use crate::util::timer::StageTimes;
 
 /// LayerNorm over the last dimension, standard eps.
@@ -85,11 +86,13 @@ pub struct MultiHeadAttention {
     pub kind: PipelineKind,
     pub n_heads: usize,
     pub d_head: usize,
-    pub threads: usize,
+    /// Persistent parallel runtime shared by every head's GEMM launches
+    /// (the serving path hands every layer [`ParallelPool::global`]).
+    pub pool: &'static ParallelPool,
     /// Per-head pipelines for the stateful path, built lazily on the first
     /// prefill/decode call and reused for every subsequent one — a decode
     /// step must not reconstruct pipelines (and e.g. the IndexSoftmax LUT)
-    /// per token. Keyed to `kind`/`threads` at build time; changing those
+    /// per token. Keyed to `kind`/`pool` at build time; changing those
     /// fields after the first stateful call is not supported.
     state_pipes: Vec<Box<dyn AttentionPipeline>>,
     times: StageTimes,
@@ -97,12 +100,17 @@ pub struct MultiHeadAttention {
 }
 
 impl MultiHeadAttention {
-    pub fn new(kind: PipelineKind, n_heads: usize, d_head: usize, threads: usize) -> Self {
+    pub fn new(
+        kind: PipelineKind,
+        n_heads: usize,
+        d_head: usize,
+        pool: &'static ParallelPool,
+    ) -> Self {
         MultiHeadAttention {
             kind,
             n_heads,
             d_head,
-            threads,
+            pool,
             state_pipes: Vec::new(),
             times: StageTimes::new(),
             ops: OpCounts::default(),
@@ -127,7 +135,7 @@ impl MultiHeadAttention {
                 seq_len: l,
                 head_dim: self.d_head,
                 mask,
-                threads: self.threads,
+                pool: self.pool,
                 isx: Default::default(),
             };
             let mut pipe = build_pipeline(self.kind, cfg);
@@ -209,13 +217,13 @@ impl MultiHeadAttention {
     fn ensure_state_pipes(&mut self) {
         if self.state_pipes.is_empty() {
             // seq_len/mask are per-call state in the stateful API (derived
-            // from the KvState); the config only contributes head_dim,
-            // threads and the softmax hyperparameters here.
+            // from the KvState); the config only contributes head_dim, the
+            // pool and the softmax hyperparameters here.
             let cfg = AttentionConfig {
                 seq_len: 0,
                 head_dim: self.d_head,
                 mask: Mask::None,
-                threads: self.threads,
+                pool: self.pool,
                 isx: Default::default(),
             };
             self.state_pipes = (0..self.n_heads).map(|_| build_pipeline(self.kind, cfg)).collect();
@@ -341,7 +349,7 @@ mod tests {
         let q = rand_mat(&mut rng, t, d_model);
         let k = rand_mat(&mut rng, t, d_model);
         let v = rand_mat(&mut rng, t, d_model);
-        let mut mha = MultiHeadAttention::new(PipelineKind::IntAttention, 4, 8, 1);
+        let mut mha = MultiHeadAttention::new(PipelineKind::IntAttention, 4, 8, ParallelPool::sized(1));
         let o = mha.forward(&q, &k, &v, Mask::Causal);
         assert_eq!((o.rows(), o.cols()), (t, d_model));
         assert!(mha.stage_times().total_ns() > 0);
@@ -355,9 +363,9 @@ mod tests {
         let q = rand_mat(&mut rng, t, d_model);
         let k = rand_mat(&mut rng, t, d_model);
         let v = rand_mat(&mut rng, t, d_model);
-        let of = MultiHeadAttention::new(PipelineKind::Fp32, 4, 8, 1)
+        let of = MultiHeadAttention::new(PipelineKind::Fp32, 4, 8, ParallelPool::sized(1))
             .forward(&q, &k, &v, Mask::Causal);
-        let oi = MultiHeadAttention::new(PipelineKind::IntAttention, 4, 8, 1)
+        let oi = MultiHeadAttention::new(PipelineKind::IntAttention, 4, 8, ParallelPool::sized(1))
             .forward(&q, &k, &v, Mask::Causal);
         let cos = crate::util::stats::cosine_similarity(of.as_slice(), oi.as_slice());
         assert!(cos > 0.99, "cos={cos}");
@@ -371,8 +379,8 @@ mod tests {
         let k = rand_mat(&mut rng, t, d_model);
         let v = rand_mat(&mut rng, t, d_model);
         for kind in [PipelineKind::Fp32, PipelineKind::IntAttention] {
-            let want = MultiHeadAttention::new(kind, 2, 8, 1).forward(&q, &k, &v, Mask::Causal);
-            let mut mha = MultiHeadAttention::new(kind, 2, 8, 1);
+            let want = MultiHeadAttention::new(kind, 2, 8, ParallelPool::sized(1)).forward(&q, &k, &v, Mask::Causal);
+            let mut mha = MultiHeadAttention::new(kind, 2, 8, ParallelPool::sized(1));
             let mut states = mha.begin_states();
             let part = |m: &MatF32, r0: usize, r1: usize| {
                 MatF32::from_vec(r1 - r0, d_model, m.as_slice()[r0 * d_model..r1 * d_model].to_vec())
@@ -400,7 +408,7 @@ mod tests {
         let q = rand_mat(&mut rng, 1, d_model);
         let k = rand_mat(&mut rng, 9, d_model);
         let v = rand_mat(&mut rng, 9, d_model);
-        let mut mha = MultiHeadAttention::new(PipelineKind::IntAttention, 2, 8, 1);
+        let mut mha = MultiHeadAttention::new(PipelineKind::IntAttention, 2, 8, ParallelPool::sized(1));
         let o = mha.forward(&q, &k, &v, Mask::None);
         assert_eq!((o.rows(), o.cols()), (1, d_model));
     }

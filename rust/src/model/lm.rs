@@ -32,6 +32,7 @@ use crate::model::weights::Weights;
 use crate::softmax::index_softmax::Mask;
 use crate::tensor::MatF32;
 use crate::util::prng::Pcg64;
+use crate::util::threadpool::ParallelPool;
 use crate::util::timer::StageTimes;
 
 /// Per-sequence KV cache: one pipeline-owned [`KvState`] per (layer, head).
@@ -94,7 +95,13 @@ pub struct TinyLm {
     /// Attention backend. Fixed at construction (the per-layer attention
     /// wrappers below are built for it); do not change after `new`.
     pub attention_kind: PipelineKind,
-    pub threads: usize,
+    /// Persistent parallel runtime for every layer's attention GEMMs; the
+    /// process-wide [`ParallelPool::global`] (sized once from
+    /// `INTATTN_THREADS`) by default. Overriding is only supported
+    /// **before the first forward/decode call**: each layer's stateful
+    /// per-head pipelines are built lazily on first use and keep the pool
+    /// they were built with.
+    pub pool: &'static ParallelPool,
     /// One persistent multi-head wrapper per layer, so the stateful path's
     /// per-head pipelines (IndexSoftmax LUT etc.) are built once and reused
     /// across every prefill chunk and decode step.
@@ -105,11 +112,12 @@ pub struct TinyLm {
 
 impl TinyLm {
     pub fn new(weights: Weights, attention_kind: PipelineKind) -> Self {
+        let pool = ParallelPool::global();
         let cfg = weights.cfg;
         let mhas = (0..cfg.n_layers)
-            .map(|_| MultiHeadAttention::new(attention_kind, cfg.n_heads, cfg.d_head(), 1))
+            .map(|_| MultiHeadAttention::new(attention_kind, cfg.n_heads, cfg.d_head(), pool))
             .collect();
-        TinyLm { weights, attention_kind, threads: 1, mhas, times: StageTimes::new(), ops: OpCounts::default() }
+        TinyLm { weights, attention_kind, pool, mhas, times: StageTimes::new(), ops: OpCounts::default() }
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -189,7 +197,7 @@ impl TinyLm {
             let k = linear(&xn, &bw.wk, None);
             let v = linear(&xn, &bw.wv, None);
             let mha = &mut self.mhas[li];
-            mha.threads = self.threads;
+            mha.pool = self.pool;
             let att = match cache.as_deref_mut() {
                 Some(c) => {
                     let states =
@@ -234,7 +242,7 @@ impl TinyLm {
             let k = linear(&xn, &bw.wk, None);
             let v = linear(&xn, &bw.wv, None);
             let mha = &mut self.mhas[li];
-            mha.threads = self.threads;
+            mha.pool = self.pool;
             let states = cache.layer_states(li, self.attention_kind, cfg.n_heads, cfg.d_head());
             let att = mha.decode(states, &q, &k, &v);
             self.times.merge(mha.stage_times());
@@ -281,7 +289,7 @@ impl TinyLm {
             let k = linear(&xn, &bw.wk, None);
             let v = linear(&xn, &bw.wv, None);
             let mha = &mut self.mhas[li];
-            mha.threads = self.threads;
+            mha.pool = self.pool;
             let mut seq_states: Vec<&mut [KvState]> = caches
                 .iter_mut()
                 .map(|c| c.layer_states(li, kind, cfg.n_heads, cfg.d_head()))

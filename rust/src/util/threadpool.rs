@@ -1,21 +1,439 @@
-//! A small fixed-size thread pool (tokio/rayon are not in the offline cache).
+//! Parallel runtime (tokio/rayon are not in the offline cache).
 //!
-//! Two entry points:
+//! Two executors live here:
 //!
-//! * [`ThreadPool::execute`] — fire-and-forget jobs for the serving engine
-//!   (the coordinator's worker threads).
-//! * [`ThreadPool::scope_chunks`] — data-parallel row partitioning for the
-//!   GEMM / softmax hot paths: splits `0..n` into contiguous chunks and runs
-//!   a closure per chunk, blocking until all complete.
+//! * [`ParallelPool`] — the **persistent-worker parallel runtime** behind
+//!   every GEMM driver and the grouped decode path. Workers are spawned once
+//!   and park on a condvar when idle; a `parallel_for`/`parallel_groups`
+//!   launch publishes a per-launch descriptor (atomic chunk cursor +
+//!   completion latch) that the caller *and* the workers drain together.
+//!   Dispatching onto parked workers costs ~0.5–2 µs per launch — one to
+//!   two orders of magnitude below the ~10–30 µs of spawning OS threads per
+//!   launch (`std::thread::scope`), which is what the pre-persistent design
+//!   paid and why its `PAR_GRAIN_*` guards had to keep every small-or-medium
+//!   decode launch single-threaded. The ratio is measured by the
+//!   launch-overhead microbench in `benches/decode_throughput.rs`.
 //!
-//! On this 1-core benchmark host the pool degenerates gracefully: with
-//! `workers == 1` `scope_chunks` runs inline with zero dispatch overhead,
-//! which keeps single-thread bench numbers honest.
+//!   Launch model:
+//!   - **Dynamic chunking.** Work items (output rows, or whole decode
+//!     groups) are claimed through an atomic cursor, so ragged grouped
+//!     launches (per-sequence context lengths `L_b`) load-balance instead
+//!     of relying on a static strided assignment.
+//!   - **Grain policy.** One pool-owned threshold replaces the old
+//!     per-dtype `PAR_GRAIN_*` constants: a launch gets one worker per
+//!     [`ParallelPool::grain`] units of work (callers pass MAC-proportional
+//!     work estimates), capped at the pool size. Default
+//!     [`DEFAULT_GRAIN`] = 2^14 — re-derived from the ~µs dispatch cost the
+//!     same way the old 2^16–2^20 constants were derived from the ~10–30 µs
+//!     spawn cost. Override with `INTATTN_PAR_GRAIN` (units per worker).
+//!   - **Determinism.** Chunk boundaries and worker count never affect
+//!     results: every work item writes a disjoint output range and its
+//!     value does not depend on which worker computes it or in what order.
+//!     `tests/decode_equivalence.rs` asserts bit-identity at pool sizes
+//!     1/2/8.
+//!   - **Panic safety.** A panicking chunk is caught on the worker, the
+//!     completion latch is still released (via a drop guard), and the
+//!     launch call re-panics on the calling thread. Workers survive.
+//!   - **Nested launches** run inline on the calling worker (safe
+//!     fallback) instead of deadlocking the pool.
+//!
+//!   The process-wide pool ([`ParallelPool::global`]) is sized from
+//!   `INTATTN_THREADS` (else available parallelism), snapshotted **once**
+//!   at first use; [`ParallelPool::sized`] returns cached fixed-size pools
+//!   for benches that compare 1-thread vs N-thread configurations. With
+//!   size 1 every launch runs inline with zero dispatch overhead, which
+//!   keeps single-thread bench numbers honest.
+//!
+//! * [`ThreadPool`] — the original small fixed pool with fire-and-forget
+//!   [`ThreadPool::execute`] jobs. Kept as a utility API (nothing on the
+//!   serving path currently submits through it — the engine runs a single
+//!   scheduler thread and all kernel parallelism goes through
+//!   [`ParallelPool`]). A panicking job is caught, counted
+//!   ([`ThreadPool::panic_count`]) and its `pending` slot released through
+//!   a drop guard, so [`ThreadPool::wait_idle`] can no longer deadlock on
+//!   a panicked job.
+//!
+//! [`scope_chunks_with`] (spawn-per-launch via `std::thread::scope`) is kept
+//! only as the baseline the launch-overhead microbench compares against; no
+//! hot path uses it anymore.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+// ---------------------------------------------------------------------------
+// ParallelPool — persistent-worker data-parallel runtime
+
+/// Default work units (MAC-proportional, see the module docs) per worker
+/// before a launch is handed an additional one. Re-derived for the ~µs
+/// persistent-dispatch cost; the spawn-per-launch design needed 2^16–2^20.
+pub const DEFAULT_GRAIN: usize = 1 << 14;
+
+/// One in-flight launch: an atomic cursor over `n_chunks` chunks of the
+/// caller's range, a completion latch, and a lifetime-erased pointer to the
+/// caller's closure. The pointer is only dereferenced for chunks claimed
+/// while the caller is still blocked in the launch call (the latch releases
+/// strictly after the last chunk finishes), so the borrow never escapes.
+struct Launch {
+    /// Next chunk index to claim (monotone; claims past `n_chunks` are
+    /// no-ops).
+    cursor: AtomicUsize,
+    n_chunks: usize,
+    /// Work items per chunk.
+    chunk: usize,
+    /// Total work items (`0..n`).
+    n: usize,
+    /// Type-erased `&closure` of the launching call.
+    func_data: *const (),
+    /// Monomorphized trampoline that calls `*func_data` on a range.
+    func_call: unsafe fn(*const (), usize, usize),
+    /// Chunks not yet *completed* (claimed-and-finished); the launch call
+    /// returns only when this reaches zero.
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+// SAFETY: `func_data` points at a `Sync` closure that outlives the launch
+// (the caller blocks until `remaining == 0`), and every other field is
+// inherently thread-safe.
+unsafe impl Send for Launch {}
+unsafe impl Sync for Launch {}
+
+unsafe fn call_range<F: Fn(usize, usize) + Sync>(data: *const (), start: usize, end: usize) {
+    (*(data as *const F))(start, end)
+}
+
+/// Release one completion slot even if the chunk body panics.
+struct CompletionGuard<'a>(&'a Launch);
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut rem = self.0.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+/// Claim and execute chunks of `launch` until its cursor is exhausted.
+fn run_chunks(launch: &Launch) {
+    loop {
+        let c = launch.cursor.fetch_add(1, Ordering::Relaxed);
+        if c >= launch.n_chunks {
+            break;
+        }
+        let start = c * launch.chunk;
+        let end = ((c + 1) * launch.chunk).min(launch.n);
+        let _guard = CompletionGuard(launch);
+        // SAFETY: the caller of the launch is still blocked (this chunk has
+        // not completed), so the closure behind `func_data` is alive.
+        let body = || unsafe { (launch.func_call)(launch.func_data, start, end) };
+        if catch_unwind(AssertUnwindSafe(body)).is_err() {
+            launch.panicked.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+struct PoolShared {
+    /// Launches with unclaimed chunks, oldest first. Workers help the front
+    /// launch; exhausted entries are dropped lazily by workers and
+    /// explicitly by the launching caller on completion.
+    queue: Mutex<VecDeque<Arc<Launch>>>,
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+thread_local! {
+    /// Set while this thread is executing launch chunks: a nested launch
+    /// from inside a chunk body runs inline instead of deadlocking on the
+    /// pool it is itself a worker of.
+    static IN_LAUNCH: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let launch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                while q
+                    .front()
+                    .is_some_and(|l| l.cursor.load(Ordering::Relaxed) >= l.n_chunks)
+                {
+                    q.pop_front();
+                }
+                if let Some(l) = q.front() {
+                    break Arc::clone(l);
+                }
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        IN_LAUNCH.with(|f| f.set(true));
+        run_chunks(&launch);
+        IN_LAUNCH.with(|f| f.set(false));
+    }
+}
+
+/// Persistent-worker parallel runtime; see the module docs for the launch
+/// model. Cheap to share (`&ParallelPool` is all the kernels take); the
+/// process-wide instance is [`ParallelPool::global`].
+pub struct ParallelPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Workers participating in a launch, **including** the calling thread
+    /// (so `size` threads compute and only `size − 1` are pool-owned).
+    size: usize,
+    /// Work units per worker (the launch grain policy, module docs).
+    grain: usize,
+}
+
+impl std::fmt::Debug for ParallelPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ParallelPool")
+            .field("size", &self.size)
+            .field("grain", &self.grain)
+            .finish()
+    }
+}
+
+impl ParallelPool {
+    /// Pool with `threads` computing threads (clamped to ≥ 1) and the
+    /// default grain (env-overridable via `INTATTN_PAR_GRAIN`).
+    pub fn new(threads: usize) -> Self {
+        Self::with_grain(threads, grain_from_env())
+    }
+
+    /// Pool with an explicit grain (tests use `grain == 1` to force real
+    /// multi-worker dispatch on tiny launches).
+    pub fn with_grain(threads: usize, grain: usize) -> Self {
+        let size = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        // The launching thread is participant #1; spawn the other size−1.
+        let workers = (1..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("intattn-par-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ParallelPool { shared, workers, size, grain: grain.max(1) }
+    }
+
+    /// The process-wide pool every serving-path component shares. Sized from
+    /// `INTATTN_THREADS` (else available parallelism), **snapshotted once**
+    /// on first use — later env mutations do not resize it.
+    pub fn global() -> &'static ParallelPool {
+        static SIZE: OnceLock<usize> = OnceLock::new();
+        Self::sized(*SIZE.get_or_init(default_threads))
+    }
+
+    /// A cached `'static` pool of exactly `n` computing threads (created and
+    /// leaked on first request). Benches use this to pin 1-thread vs
+    /// N-thread configurations; repeated calls reuse the same pool, so the
+    /// process never accumulates more than one pool per distinct size.
+    pub fn sized(n: usize) -> &'static ParallelPool {
+        static REGISTRY: OnceLock<Mutex<Vec<(usize, &'static ParallelPool)>>> = OnceLock::new();
+        let n = n.max(1);
+        let reg = REGISTRY.get_or_init(|| Mutex::new(Vec::new()));
+        let mut v = reg.lock().unwrap();
+        if let Some(&(_, p)) = v.iter().find(|(s, _)| *s == n) {
+            return p;
+        }
+        let p: &'static ParallelPool = Box::leak(Box::new(ParallelPool::new(n)));
+        v.push((n, p));
+        p
+    }
+
+    /// Leak this pool into a `'static` handle (tests that need non-default
+    /// grains in `AttentionConfig`, which stores a `'static` pool).
+    pub fn leak(self) -> &'static ParallelPool {
+        Box::leak(Box::new(self))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn grain(&self) -> usize {
+        self.grain
+    }
+
+    /// Workers the grain policy grants a launch of `work` units: one per
+    /// `grain`, capped at the pool size. Never zero.
+    pub fn workers_for(&self, work: usize) -> usize {
+        self.size.min((work / self.grain).saturating_add(1))
+    }
+
+    /// Run `f(start, end)` over a partition of `0..n`, using up to
+    /// `workers_for(work)` threads with dynamically claimed chunks. Blocks
+    /// until every chunk completed; re-panics if any chunk panicked.
+    ///
+    /// `work` is the launch's total cost in grain units (MAC-proportional
+    /// for the GEMM drivers); pass `usize::MAX` to request full width.
+    pub fn parallel_for<F>(&self, n: usize, work: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let workers = self.workers_for(work);
+        // ~4 chunks per worker: dynamic balancing without per-item claims.
+        let chunk = n.div_ceil((4 * workers).max(1)).max(1);
+        self.dispatch(n, workers, chunk, f);
+    }
+
+    /// Run `f` once for each group, up to `workers_for(work)` threads
+    /// claiming **one group at a time** through the atomic cursor — the
+    /// fully dynamic schedule ragged decode batches need (a group's cost is
+    /// its context length; static assignment would let one worker inherit
+    /// all the long sequences).
+    pub fn parallel_groups<G, F>(&self, groups: &mut [G], work: usize, f: F)
+    where
+        G: Send,
+        F: Fn(&mut G) + Sync,
+    {
+        let n = groups.len();
+        let workers = self.workers_for(work).min(n.max(1));
+        if workers <= 1 || n <= 1 {
+            for g in groups.iter_mut() {
+                f(g);
+            }
+            return;
+        }
+        let ptr = SendPtr(groups.as_mut_ptr());
+        self.dispatch(n, workers, 1, |i0, i1| {
+            for i in i0..i1 {
+                // SAFETY: each index is claimed exactly once (atomic
+                // cursor), so the &mut is exclusive; G: Send moves the
+                // group's data across the worker boundary.
+                let g = unsafe { &mut *ptr.get().add(i) };
+                f(g);
+            }
+        });
+    }
+
+    /// Core launch: publish a descriptor, help execute it, wait on the
+    /// completion latch, propagate panics.
+    fn dispatch<F>(&self, n: usize, workers: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        let workers = workers.max(1).min(n.max(1)).min(self.size);
+        if workers <= 1 || n <= 1 || IN_LAUNCH.with(|fl| fl.get()) {
+            // Inline: single-worker launches, trivial ranges, and nested
+            // launches from inside a chunk body (safe fallback).
+            if n > 0 {
+                f(0, n);
+            }
+            return;
+        }
+        let n_chunks = n.div_ceil(chunk);
+        let launch = Arc::new(Launch {
+            cursor: AtomicUsize::new(0),
+            n_chunks,
+            chunk,
+            n,
+            func_data: &f as *const F as *const (),
+            func_call: call_range::<F>,
+            remaining: Mutex::new(n_chunks),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Arc::clone(&launch));
+        }
+        if workers >= self.size {
+            self.shared.work.notify_all();
+        } else {
+            for _ in 1..workers {
+                self.shared.work.notify_one();
+            }
+        }
+        // The caller is a full participant — a launch completes even if
+        // every pool worker is busy with someone else's launch.
+        IN_LAUNCH.with(|fl| fl.set(true));
+        run_chunks(&launch);
+        IN_LAUNCH.with(|fl| fl.set(false));
+        let mut rem = launch.remaining.lock().unwrap();
+        while *rem > 0 {
+            rem = launch.done.wait(rem).unwrap();
+        }
+        drop(rem);
+        // Drop our queue entry eagerly (workers also skip exhausted fronts
+        // lazily, but an idle pool must not pin finished descriptors).
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.retain(|l| !Arc::ptr_eq(l, &launch));
+        }
+        if launch.panicked.load(Ordering::SeqCst) {
+            panic!("ParallelPool launch panicked in a worker chunk");
+        }
+    }
+}
+
+impl Drop for ParallelPool {
+    fn drop(&mut self) {
+        // Store shutdown while holding the queue mutex: a worker checks the
+        // flag only under that mutex, so it either observes `true` and
+        // exits, or is already parked in `wait` when the notify below fires.
+        // Storing without the lock could race a worker between its check
+        // and its `wait`, losing the wakeup and deadlocking the joins.
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Send+Sync raw-pointer wrapper for handing disjoint &mut regions to
+/// workers. Sound only while every index/range dereferenced through it is
+/// claimed by exactly one worker (the atomic-cursor / disjoint-row-chunk
+/// contract); shared with the GEMM drivers, which uphold the same contract.
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Accessor (rather than field access) so closures capture the whole
+    /// `Sync` wrapper, not the raw pointer (edition-2021 disjoint capture).
+    #[inline]
+    pub(crate) fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// `INTATTN_PAR_GRAIN` override for the launch grain (read at pool
+/// construction, not per launch).
+fn grain_from_env() -> usize {
+    grain_from(std::env::var("INTATTN_PAR_GRAIN").ok().as_deref())
+}
+
+/// Pure policy behind [`grain_from_env`], unit-testable without touching
+/// the process environment.
+fn grain_from(env: Option<&str>) -> usize {
+    if let Some(n) = env.and_then(|v| v.parse::<usize>().ok()) {
+        return n.max(1);
+    }
+    DEFAULT_GRAIN
+}
+
+// ---------------------------------------------------------------------------
+// ThreadPool — fire-and-forget job pool (utility; not on the serving path)
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -24,14 +442,30 @@ enum Message {
     Shutdown,
 }
 
-/// Fixed pool of worker threads.
+/// Fixed pool of worker threads for fire-and-forget jobs.
 pub struct ThreadPool {
     workers: Vec<JoinHandle<()>>,
     sender: mpsc::Sender<Message>,
     /// Receiver shared by workers behind a mutex (simple MPMC).
     _receiver: Arc<Mutex<mpsc::Receiver<Message>>>,
     pending: Arc<(Mutex<usize>, Condvar)>,
+    panics: Arc<AtomicUsize>,
     size: usize,
+}
+
+/// Decrements the pending counter when dropped — a panicking job releases
+/// its slot exactly like a finishing one, so `wait_idle` cannot deadlock.
+struct PendingGuard<'a>(&'a (Mutex<usize>, Condvar));
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cv) = self.0;
+        let mut p = lock.lock().unwrap();
+        *p -= 1;
+        if *p == 0 {
+            cv.notify_all();
+        }
+    }
 }
 
 impl ThreadPool {
@@ -41,22 +475,22 @@ impl ThreadPool {
         let (tx, rx) = mpsc::channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
         let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let panics = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
             let pending = Arc::clone(&pending);
+            let panics = Arc::clone(&panics);
             let handle = std::thread::Builder::new()
                 .name(format!("intattn-worker-{i}"))
                 .spawn(move || loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
                         Ok(Message::Run(job)) => {
-                            job();
-                            let (lock, cv) = &*pending;
-                            let mut p = lock.lock().unwrap();
-                            *p -= 1;
-                            if *p == 0 {
-                                cv.notify_all();
+                            let _guard = PendingGuard(&pending);
+                            if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                panics.fetch_add(1, Ordering::SeqCst);
+                                eprintln!("[threadpool] job panicked (worker survives)");
                             }
                         }
                         Ok(Message::Shutdown) | Err(_) => break,
@@ -65,7 +499,7 @@ impl ThreadPool {
                 .expect("spawn worker");
             workers.push(handle);
         }
-        ThreadPool { workers, sender: tx, _receiver: rx, pending, size: n }
+        ThreadPool { workers, sender: tx, _receiver: rx, pending, panics, size: n }
     }
 
     /// Pool sized from `INTATTN_THREADS` env var, defaulting to the number of
@@ -78,7 +512,8 @@ impl ThreadPool {
         self.size
     }
 
-    /// Submit a fire-and-forget job.
+    /// Submit a fire-and-forget job. A job that panics is caught on the
+    /// worker (which survives) and counted in [`Self::panic_count`].
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         {
             let (lock, _) = &*self.pending;
@@ -87,7 +522,8 @@ impl ThreadPool {
         self.sender.send(Message::Run(Box::new(job))).expect("pool alive");
     }
 
-    /// Block until all submitted jobs have completed.
+    /// Block until all submitted jobs have completed (or panicked — check
+    /// [`Self::panic_count`] afterwards if job failures matter).
     pub fn wait_idle(&self) {
         let (lock, cv) = &*self.pending;
         let mut p = lock.lock().unwrap();
@@ -96,12 +532,14 @@ impl ThreadPool {
         }
     }
 
+    /// Number of jobs that panicked since the pool was created.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
     /// Run `f(chunk_start, chunk_end)` over a partition of `0..n` into at
     /// most `self.size` contiguous chunks, blocking until all finish.
-    ///
-    /// The closure only borrows — no `'static` bound — via a scoped trick:
-    /// with 1 worker it runs inline; otherwise it uses `std::thread::scope`,
-    /// bypassing the queue entirely (cheaper and borrow-friendly).
+    /// Legacy spawn-per-launch path; hot paths use [`ParallelPool`].
     pub fn scope_chunks<F>(&self, n: usize, f: F)
     where
         F: Fn(usize, usize) + Sync,
@@ -110,9 +548,11 @@ impl ThreadPool {
     }
 }
 
-/// Free-function version of [`ThreadPool::scope_chunks`], usable without
-/// constructing a pool (it spawns scoped threads per call; the GEMM driver
-/// amortizes this by chunking coarsely).
+/// Spawn-per-launch data parallelism over `std::thread::scope`: splits
+/// `0..n` into at most `threads` contiguous chunks, spawning an OS thread
+/// per chunk (~10–30 µs each). Kept **only** as the baseline the
+/// launch-overhead microbench compares [`ParallelPool`] dispatch against;
+/// no kernel driver calls this anymore.
 pub fn scope_chunks_with<F>(threads: usize, n: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
@@ -139,12 +579,19 @@ where
 }
 
 /// Number of worker threads to use: `INTATTN_THREADS` env override, else
-/// available parallelism.
+/// available parallelism. [`ParallelPool::global`] snapshots this once; the
+/// benches re-read it per process, which is fine (one process, one value).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("INTATTN_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    threads_from(std::env::var("INTATTN_THREADS").ok().as_deref())
+}
+
+/// Pure policy behind [`default_threads`]. Split out so the override logic
+/// is unit-testable without `std::env::set_var` — mutating the environment
+/// while other test threads call `getenv` is undefined behavior on glibc,
+/// so no test in this crate touches the real environment.
+fn threads_from(env: Option<&str>) -> usize {
+    if let Some(n) = env.and_then(|v| v.parse::<usize>().ok()) {
+        return n.max(1);
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -199,6 +646,25 @@ mod tests {
     }
 
     #[test]
+    fn panicking_job_does_not_deadlock_wait_idle() {
+        // Regression: a panicking job used to leave `pending` stuck above
+        // zero forever, deadlocking wait_idle. The drop guard releases the
+        // slot and the panic is surfaced through panic_count.
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(Counter::default());
+        pool.execute(|| panic!("job panic"));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                c.incr();
+            });
+        }
+        pool.wait_idle(); // must return
+        assert_eq!(c.get(), 10, "workers must survive a panicking job");
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
     fn scope_chunks_covers_range_exactly_once() {
         let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
         scope_chunks_with(7, 1000, |s, e| {
@@ -210,32 +676,8 @@ mod tests {
     }
 
     #[test]
-    fn scope_chunks_single_thread_inline() {
-        let mut touched = vec![false; 10];
-        let cell = std::sync::Mutex::new(&mut touched);
-        scope_chunks_with(1, 10, |s, e| {
-            let mut t = cell.lock().unwrap();
-            for i in s..e {
-                t[i] = true;
-            }
-        });
-        assert!(touched.iter().all(|&t| t));
-    }
-
-    #[test]
     fn scope_chunks_zero_n_is_noop() {
         scope_chunks_with(4, 0, |_, _| panic!("must not run"));
-    }
-
-    #[test]
-    fn more_threads_than_items() {
-        let hits: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
-        scope_chunks_with(16, 3, |s, e| {
-            for i in s..e {
-                hits[i].fetch_add(1, Ordering::SeqCst);
-            }
-        });
-        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
     }
 
     #[test]
@@ -255,9 +697,169 @@ mod tests {
 
     #[test]
     fn default_threads_env_override() {
-        std::env::set_var("INTATTN_THREADS", "3");
-        assert_eq!(default_threads(), 3);
-        std::env::remove_var("INTATTN_THREADS");
+        // The override logic is exercised through the pure `threads_from`
+        // policy rather than `std::env::set_var`: mutating the process
+        // environment races every other concurrently running test's
+        // `getenv` (UB on glibc), which is exactly the flake this test
+        // used to cause. `default_threads` is a thin env read over this.
+        assert_eq!(threads_from(Some("3")), 3);
+        assert_eq!(threads_from(Some("0")), 1, "clamped to 1");
+        assert!(threads_from(Some("not-a-number")) >= 1, "junk falls back");
+        assert!(threads_from(None) >= 1);
         assert!(default_threads() >= 1);
+        // Same for the grain policy.
+        assert_eq!(grain_from(Some("123")), 123);
+        assert_eq!(grain_from(None), DEFAULT_GRAIN);
+    }
+
+    // -- ParallelPool --------------------------------------------------
+
+    #[test]
+    fn parallel_for_covers_range_exactly_once() {
+        let pool = ParallelPool::with_grain(7, 1);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(1000, usize::MAX, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_for_reusable_across_many_launches() {
+        // Workers must return to the parked state and pick up later
+        // launches; finished descriptors must not accumulate.
+        let pool = ParallelPool::with_grain(4, 1);
+        for round in 0..50 {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(round + 1, usize::MAX, |s, e| {
+                sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), round as u64 + 1);
+        }
+        assert!(pool.shared.queue.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn parallel_for_zero_work_is_noop() {
+        let pool = ParallelPool::with_grain(4, 1);
+        pool.parallel_for(0, usize::MAX, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_for_oversubscribed_more_workers_than_items() {
+        let pool = ParallelPool::with_grain(16, 1);
+        let hits: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(3, usize::MAX, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn grain_policy_keeps_small_launches_inline() {
+        let pool = ParallelPool::with_grain(8, 1 << 14);
+        assert_eq!(pool.workers_for(0), 1);
+        assert_eq!(pool.workers_for((1 << 14) - 1), 1);
+        assert_eq!(pool.workers_for(1 << 14), 2);
+        assert_eq!(pool.workers_for(100 << 14), 8, "capped at pool size");
+        assert_eq!(pool.workers_for(usize::MAX), 8, "no overflow at usize::MAX");
+        let single = ParallelPool::with_grain(1, 1);
+        assert_eq!(single.workers_for(usize::MAX), 1);
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_and_pool_survives() {
+        let pool = ParallelPool::with_grain(4, 1);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(100, usize::MAX, |s, _| {
+                if s == 0 {
+                    panic!("chunk panic");
+                }
+            });
+        }));
+        assert!(r.is_err(), "launch must re-panic on the caller");
+        // The pool must still work after a panicked launch.
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(64, usize::MAX, |s, e| {
+            sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn nested_launch_runs_inline_and_completes() {
+        let pool = ParallelPool::with_grain(4, 1);
+        let outer = AtomicU64::new(0);
+        let inner = AtomicU64::new(0);
+        pool.parallel_for(8, usize::MAX, |s, e| {
+            outer.fetch_add((e - s) as u64, Ordering::SeqCst);
+            // Nested launch from a chunk body: must run inline (safe
+            // fallback), not deadlock the pool.
+            pool.parallel_for(4, usize::MAX, |s2, e2| {
+                inner.fetch_add((e2 - s2) as u64, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(outer.load(Ordering::SeqCst), 8);
+        // One inner launch of 4 items per outer chunk; every item ran.
+        assert_eq!(inner.load(Ordering::SeqCst) % 4, 0);
+        assert!(inner.load(Ordering::SeqCst) >= 4);
+    }
+
+    #[test]
+    fn parallel_groups_visits_every_group_once() {
+        for (n, threads) in [(1usize, 4usize), (7, 3), (23, 4), (8, 16), (5, 1)] {
+            let pool = ParallelPool::with_grain(threads, 1);
+            let mut groups: Vec<u32> = vec![0; n];
+            pool.parallel_groups(&mut groups, usize::MAX, |g| *g += 1);
+            assert!(groups.iter().all(|&x| x == 1), "n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_from_multiple_caller_threads() {
+        // Concurrent launches from independent threads (the engine + tests
+        // share the global pool): each caller participates in its own
+        // launch, so progress is guaranteed even under contention.
+        let pool: &'static ParallelPool = ParallelPool::with_grain(4, 1).leak();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let sum = AtomicU64::new(0);
+                    for _ in 0..20 {
+                        pool.parallel_for(97, usize::MAX, |s, e| {
+                            sum.fetch_add((e - s) as u64, Ordering::SeqCst);
+                        });
+                    }
+                    sum.load(Ordering::SeqCst)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 20 * 97);
+        }
+    }
+
+    #[test]
+    fn sized_pools_are_cached() {
+        let a = ParallelPool::sized(3);
+        let b = ParallelPool::sized(3);
+        assert!(std::ptr::eq(a, b));
+        assert_eq!(a.size(), 3);
+        assert_eq!(ParallelPool::sized(0).size(), 1, "clamped to 1");
+    }
+
+    #[test]
+    fn global_pool_is_one_snapshotted_instance() {
+        // The size is snapshotted into a OnceLock on first use (the
+        // structural guarantee behind "later env mutations don't resize");
+        // repeated calls must return the very same pool.
+        let a = ParallelPool::global();
+        let b = ParallelPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.size() >= 1);
     }
 }

@@ -15,6 +15,7 @@ use intattention::quant::GroupScheme;
 use intattention::tensor::MatF32;
 use intattention::util::prng::Pcg64;
 use intattention::util::stats::cosine_similarity;
+use intattention::util::threadpool::ParallelPool;
 
 fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
     MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
@@ -136,60 +137,114 @@ fn rescale_path_keeps_fidelity_under_growing_magnitudes() {
 #[test]
 fn batched_decode_bit_identical_to_sequential_for_every_pipeline_kind() {
     // decode_step_batch must be *bit-identical* to B sequential decode_step
-    // calls for every pipeline kind: the integer GEMMs are exact, and every
-    // float operation in the batched paths is the same per-sequence
-    // expression evaluated in the same order — grouping only moves whole
-    // per-sequence products between threads.
+    // calls for every pipeline kind AND every pool width: the integer GEMMs
+    // are exact, and every float operation in the batched paths is the same
+    // per-sequence expression evaluated in the same order — the persistent
+    // runtime's dynamic chunking only moves whole per-sequence products
+    // between workers. Grain 1 forces the multi-worker pools to genuinely
+    // dispatch these small launches (the default grain would run them
+    // inline, proving nothing).
     let d = 16;
     let ctxs = [1usize, 3, 7, 12, 5, 20, 9, 16]; // ragged batch of 8
+    let pools: Vec<&'static ParallelPool> = [1usize, 2, 8]
+        .iter()
+        .map(|&t| ParallelPool::with_grain(t, 1).leak())
+        .collect();
     for kind in PipelineKind::all() {
-        let mut rng = Pcg64::seed_from_u64(700);
-        let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d).with_threads(3));
-        // Build B independent states with per-sequence histories.
-        let mut st_seq: Vec<KvState> = Vec::new();
-        for &ctx in &ctxs {
-            let mut st = pipe.begin_state();
-            let (q, k, v) = (
-                rand_mat(&mut rng, ctx, d),
-                rand_mat(&mut rng, ctx, d),
-                rand_mat(&mut rng, ctx, d),
-            );
-            let _ = pipe.prefill(&mut st, &q, &k, &v);
-            st_seq.push(st);
-        }
-        let mut st_bat: Vec<KvState> = st_seq.clone();
-        let b = ctxs.len();
-        for round in 0..4 {
-            let q = rand_mat(&mut rng, b, d);
-            let k = rand_mat(&mut rng, b, d);
-            let v = rand_mat(&mut rng, b, d);
-            // Sequential oracle.
-            let mut want = Vec::with_capacity(b * d);
-            for (i, st) in st_seq.iter_mut().enumerate() {
-                let o = pipe.decode_step(
-                    st,
-                    &rows_of(&q, i, i + 1),
-                    &rows_of(&k, i, i + 1),
-                    &rows_of(&v, i, i + 1),
+        for &pool in &pools {
+            let mut rng = Pcg64::seed_from_u64(700);
+            let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d).with_pool(pool));
+            // Build B independent states with per-sequence histories.
+            let mut st_seq: Vec<KvState> = Vec::new();
+            for &ctx in &ctxs {
+                let mut st = pipe.begin_state();
+                let (q, k, v) = (
+                    rand_mat(&mut rng, ctx, d),
+                    rand_mat(&mut rng, ctx, d),
+                    rand_mat(&mut rng, ctx, d),
                 );
-                want.extend_from_slice(o.as_slice());
+                let _ = pipe.prefill(&mut st, &q, &k, &v);
+                st_seq.push(st);
             }
-            // One grouped call.
-            let mut refs: Vec<&mut KvState> = st_bat.iter_mut().collect();
-            let got = pipe.decode_step_batch(&mut refs, &q, &k, &v);
-            assert_eq!(
-                got.as_slice(),
-                &want[..],
-                "{} round {round}: batched decode must be bit-identical",
-                kind.name()
-            );
+            let mut st_bat: Vec<KvState> = st_seq.clone();
+            let b = ctxs.len();
+            for round in 0..4 {
+                let q = rand_mat(&mut rng, b, d);
+                let k = rand_mat(&mut rng, b, d);
+                let v = rand_mat(&mut rng, b, d);
+                // Sequential oracle.
+                let mut want = Vec::with_capacity(b * d);
+                for (i, st) in st_seq.iter_mut().enumerate() {
+                    let o = pipe.decode_step(
+                        st,
+                        &rows_of(&q, i, i + 1),
+                        &rows_of(&k, i, i + 1),
+                        &rows_of(&v, i, i + 1),
+                    );
+                    want.extend_from_slice(o.as_slice());
+                }
+                // One grouped call.
+                let mut refs: Vec<&mut KvState> = st_bat.iter_mut().collect();
+                let got = pipe.decode_step_batch(&mut refs, &q, &k, &v);
+                assert_eq!(
+                    got.as_slice(),
+                    &want[..],
+                    "{} round {round} pool {}: batched decode must be bit-identical",
+                    kind.name(),
+                    pool.size()
+                );
+            }
+            // The resident states advanced identically too.
+            for ((a, b_), &ctx) in st_seq.iter().zip(&st_bat).zip(&ctxs) {
+                assert_eq!(a.len(), ctx + 4, "{}", kind.name());
+                assert_eq!(a.len(), b_.len(), "{}", kind.name());
+                assert_eq!(a.bytes(), b_.bytes(), "{}", kind.name());
+            }
         }
-        // The resident states advanced identically too.
-        for ((a, b_), &ctx) in st_seq.iter().zip(&st_bat).zip(&ctxs) {
-            assert_eq!(a.len(), ctx + 4, "{}", kind.name());
-            assert_eq!(a.len(), b_.len(), "{}", kind.name());
-            assert_eq!(a.bytes(), b_.bytes(), "{}", kind.name());
+    }
+}
+
+#[test]
+fn batched_decode_identical_across_pool_sizes() {
+    // Stronger cross-width check: the *batched* outputs themselves must be
+    // byte-equal between a 1-thread (inline) pool and forced multi-worker
+    // pools — decode results can never depend on how many workers the
+    // runtime happens to have.
+    let d = 16;
+    let ctxs = [2usize, 9, 5, 14];
+    let b = ctxs.len();
+    let pools: Vec<&'static ParallelPool> = [1usize, 2, 8]
+        .iter()
+        .map(|&t| ParallelPool::with_grain(t, 1).leak())
+        .collect();
+    for kind in PipelineKind::all() {
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for &pool in &pools {
+            let mut rng = Pcg64::seed_from_u64(900);
+            let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d).with_pool(pool));
+            let mut states: Vec<KvState> = Vec::new();
+            for &ctx in &ctxs {
+                let mut st = pipe.begin_state();
+                let (q, k, v) = (
+                    rand_mat(&mut rng, ctx, d),
+                    rand_mat(&mut rng, ctx, d),
+                    rand_mat(&mut rng, ctx, d),
+                );
+                let _ = pipe.prefill(&mut st, &q, &k, &v);
+                states.push(st);
+            }
+            let mut run_out: Vec<f32> = Vec::new();
+            for _ in 0..3 {
+                let q = rand_mat(&mut rng, b, d);
+                let k = rand_mat(&mut rng, b, d);
+                let v = rand_mat(&mut rng, b, d);
+                let mut refs: Vec<&mut KvState> = states.iter_mut().collect();
+                run_out.extend_from_slice(pipe.decode_step_batch(&mut refs, &q, &k, &v).as_slice());
+            }
+            outs.push(run_out);
         }
+        assert_eq!(outs[0], outs[1], "{}: pool 1 vs 2", kind.name());
+        assert_eq!(outs[0], outs[2], "{}: pool 1 vs 8", kind.name());
     }
 }
 
