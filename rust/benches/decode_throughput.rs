@@ -11,13 +11,22 @@
 //! 2. **Single-sequence sweep** — tokens/sec for the headline pipelines at
 //!    several resident context lengths, plus the per-token Quantize-stage
 //!    time — which stays flat in context length for the stateful integer
-//!    pipelines (no per-token history re-quantization).
+//!    pipelines (no per-token history re-quantization). Each row also
+//!    reports the paged-KV residency (pages, exact allocated bytes) and
+//!    the append-path copy bytes the pre-paging contiguous layout would
+//!    have paid to `Vec` growth over the same schedule (paged pays zero —
+//!    appends fill the tail page in place).
 //! 3. **Multi-sequence mode** — aggregate tok/s for B concurrently decoding
 //!    sequences, sequential loop vs one grouped `decode_step_batch` per
 //!    round, at a deep context *and* at a short context. The short-context
 //!    rows are the persistent-runtime headline: below the old spawn-cost
 //!    grain (8·ctx·d < 2^20) the previous design forced integer launches
 //!    inline, so any batched speedup there is new.
+//! 4. **Long-context sweep** — the paged-allocation headline: deep decode
+//!    runs where the contiguous layout's realloc copy traffic grows with
+//!    the resident length while the paged layout never re-copies history.
+//!    Also reports the process-wide page-pool counters
+//!    (allocated/recycled).
 
 use intattention::harness::experiments as exp;
 use intattention::harness::report::{kv_rows_json, write_report};
@@ -125,4 +134,32 @@ fn main() {
         btable.print();
         let _ = write_report(name, &btable.render(), Some(kv_rows_json(&exp::batched_decode_rows_json(&brows))));
     }
+
+    // -- Mode 4: long-context paged-KV sweep ----------------------------
+    // Deep resident contexts with a long decode tail: the regime where the
+    // pre-paging contiguous layout's realloc copies grow with the resident
+    // length (reported per row as "append copy B (contig→paged)") while
+    // paged appends never touch history.
+    let long_ctxs: Vec<usize> = if fast {
+        vec![96]
+    } else if std::env::var("INTATTN_FULL").map(|v| v == "1").unwrap_or(false) {
+        vec![4096, 8192, 16384]
+    } else {
+        vec![2048, 4096]
+    };
+    let long_gen = if fast { 16 } else { 256 };
+    // Snapshot the process-wide pool counters around the sweep so the
+    // report describes *this* mode's page traffic, not the whole bench run.
+    let (alloc_before, recycled_before) = intattention::attention::page_pool_stats();
+    let lrows = exp::decode_sweep(&long_ctxs, exp::HEAD_DIM, long_gen, 1);
+    let (alloc_after, recycled_after) = intattention::attention::page_pool_stats();
+    let (pages_alloc, pages_recycled) =
+        (alloc_after - alloc_before, recycled_after - recycled_before);
+    let ltable = exp::render_decode(&lrows);
+    ltable.print();
+    println!("page pool (this sweep): {pages_alloc} allocated, {pages_recycled} recycled");
+    let mut ljson = exp::decode_rows_json(&lrows);
+    ljson.push(("kv_pages_allocated".to_string(), pages_alloc as f64));
+    ljson.push(("kv_pages_recycled".to_string(), pages_recycled as f64));
+    let _ = write_report("decode_longctx_paged", &ltable.render(), Some(kv_rows_json(&ljson)));
 }

@@ -11,7 +11,7 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_u8i8, gemm_u8i8_slices, par_gemm_i8, par_gemm_i8_grouped, par_gemm_i8_slices,
+    gemm_u8i8, gemm_u8i8_paged, par_gemm_i8, par_gemm_i8_grouped, par_gemm_i8_paged,
     par_gemm_u8i8_grouped, GroupI8, GroupU8I8,
 };
 use crate::quant::quantize_i8;
@@ -110,14 +110,17 @@ impl AttentionPipeline for ExaqAttention {
         }
 
         let st = state.as_int8_mut();
-        let l = st.len;
+        let l = st.len();
         let mask = Mask::CausalFrom(l - m);
         let alpha = qq.scale * st.k.scale / (d as f32).sqrt();
 
         let mut logits = MatI32::zeros(m, l);
-        self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, pool);
-        });
+        {
+            let k_pages = st.k.data.page_list();
+            self.times.measure(Stage::QkGemm, || {
+                par_gemm_i8_paged(qq.data.as_slice(), &k_pages, logits.as_mut_slice(), m, l, d, pool);
+            });
+        }
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
         // EXAQ softmax: merge this block's Δ stats into the running
@@ -131,9 +134,10 @@ impl AttentionPipeline for ExaqAttention {
         let valid = counts::valid_positions(m, l, mask);
         self.ops.add(&counts::exaq_softmax(valid, m as u64));
 
+        let v_pages = st.v.data.page_list();
         let mut acc = MatI32::zeros(m, d);
         self.times.measure(Stage::PvGemm, || {
-            gemm_u8i8_slices(p.as_slice(), &st.v.data, acc.as_mut_slice(), m, l, d);
+            gemm_u8i8_paged(p.as_slice(), &v_pages, acc.as_mut_slice(), m, l, d);
         });
         let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
@@ -189,23 +193,24 @@ impl AttentionPipeline for ExaqAttention {
         let mut logits: Vec<MatI32>;
         {
             let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
-            lens = ints.iter().map(|s| s.len).collect();
-            logits = ints.iter().map(|s| MatI32::zeros(1, s.len)).collect();
+            let k_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.k.data.page_list()).collect();
+            lens = ints.iter().map(|s| s.len()).collect();
+            logits = ints.iter().map(|s| MatI32::zeros(1, s.len())).collect();
             self.times.measure(Stage::QkGemm, || {
                 let mut groups: Vec<GroupI8> = qqs
                     .iter()
-                    .zip(&ints)
+                    .zip(&k_pages)
                     .zip(logits.iter_mut())
-                    .map(|((qq, s), lg)| GroupI8 {
+                    .map(|((qq, kp), lg)| GroupI8 {
                         a: qq.data.as_slice(),
-                        b: &s.k.data,
+                        b: kp.as_slice(),
                         out: lg.as_mut_slice(),
                     })
                     .collect();
                 par_gemm_i8_grouped(&mut groups, d, pool);
             });
             for s in &ints {
-                self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
+                self.ops.add(&counts::qk_gemm(1, s.len(), d, 1, 4));
             }
         }
 
@@ -218,7 +223,7 @@ impl AttentionPipeline for ExaqAttention {
                 .zip(&logits)
                 .map(|((st, qq), lg)| {
                     let s = st.as_int8_mut();
-                    let mask = Mask::CausalFrom(s.len - 1);
+                    let mask = Mask::CausalFrom(s.len() - 1);
                     let alpha = qq.scale * s.k.scale / sqrt_d;
                     let (sum, sumsq, n) = ExaqSoftmax::delta_stats(lg, alpha, mask);
                     s.exaq.merge(sum, sumsq, n);
@@ -231,19 +236,20 @@ impl AttentionPipeline for ExaqAttention {
             self.ops.add(&counts::exaq_softmax(l as u64, 1));
         }
 
-        // (4) one grouped P̂·V̂ launch over the B resident V̂ buffers.
+        // (4) one grouped P̂·V̂ launch over the B resident V̂ page lists.
         let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
+        let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
         let mut acc = MatI32::zeros(b, d);
         self.times.measure(Stage::PvGemm, || {
             let mut groups: Vec<GroupU8I8> = Vec::with_capacity(b);
-            for ((p, s), out) in ps.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupU8I8 { a: p.as_slice(), b: &s.v.data, out });
+            for ((p, vp), out) in ps.iter().zip(&v_pages).zip(acc.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupU8I8 { a: p.as_slice(), b: vp.as_slice(), out });
             }
             par_gemm_u8i8_grouped(&mut groups, d, pool);
         });
         for (p, s) in ps.iter().zip(&ints) {
             let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
-            self.ops.add(&counts::pv_gemm(nnz, s.len, d, 1, 4));
+            self.ops.add(&counts::pv_gemm(nnz, s.len(), d, 1, 4));
         }
 
         // (5) per-sequence output rescale with each state's running V scale.

@@ -11,7 +11,8 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_f16, gemm_f16_notrans, par_gemm_f16_grouped, par_gemm_f16_notrans_grouped, GroupF16,
+    gemm_f16, gemm_f16_notrans_paged, gemm_f16_paged, par_gemm_f16_grouped,
+    par_gemm_f16_notrans_grouped, GroupF16,
 };
 use crate::softmax::float_softmax::softmax_rows_f16;
 use crate::softmax::index_softmax::Mask;
@@ -101,13 +102,14 @@ impl AttentionPipeline for Fp16Attention {
         self.ops.add(&counts::encode_qkv_f16(m, k.rows(), d));
 
         let st = state.as_f16();
-        let l = st.len;
+        let l = st.len();
         let mask = Mask::CausalFrom(l - m);
 
-        // QKᵀ in f16 storage against the resident keys.
+        // QKᵀ in f16 storage against the resident key pages.
+        let k_pages = st.k.page_list();
         let mut a = MatF32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            gemm_f16(&qh, &st.k, m, l, d, a.as_mut_slice());
+            gemm_f16_paged(&qh, &k_pages, m, l, d, a.as_mut_slice());
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 2, 2));
 
@@ -121,11 +123,13 @@ impl AttentionPipeline for Fp16Attention {
         let valid = counts::valid_positions(m, l, mask);
         self.ops.add(&counts::fp32_softmax(valid, m as u64)); // same op mix, f16 units
 
-        // PV in f16 storage, V in natural row layout (no transpose copy).
+        // PV in f16 storage, V pages in natural row layout (no transpose
+        // copy, no flattening copy).
+        let v_pages = st.v.page_list();
         let mut o = MatF32::zeros(m, d);
         self.times.measure(Stage::PvGemm, || {
             let ph: Vec<F16> = encode_slice(a.as_slice());
-            gemm_f16_notrans(&ph, &st.v, o.as_mut_slice(), m, l, d);
+            gemm_f16_notrans_paged(&ph, &v_pages, o.as_mut_slice(), m, l, d);
         });
         self.ops.add(&counts::pv_gemm(valid, l, d, 2, 2));
         self.ops.add(&counts::output_rescale(m, d));
@@ -172,23 +176,24 @@ impl AttentionPipeline for Fp16Attention {
 
         let hs: Vec<&F16KvState> = states.iter().map(|st| st.as_f16()).collect();
 
-        // (2) one grouped QKᵀ launch in f16 storage.
-        let mut a_rows: Vec<MatF32> = hs.iter().map(|s| MatF32::zeros(1, s.len)).collect();
+        // (2) one grouped QKᵀ launch in f16 storage over the page lists.
+        let k_pages: Vec<Vec<&[F16]>> = hs.iter().map(|s| s.k.page_list()).collect();
+        let mut a_rows: Vec<MatF32> = hs.iter().map(|s| MatF32::zeros(1, s.len())).collect();
         self.times.measure(Stage::QkGemm, || {
             let mut groups: Vec<GroupF16> = qhs
                 .iter()
-                .zip(&hs)
+                .zip(&k_pages)
                 .zip(a_rows.iter_mut())
-                .map(|((qh, s), ar)| GroupF16 {
+                .map(|((qh, kp), ar)| GroupF16 {
                     a: qh.as_slice(),
-                    b: &s.k,
+                    b: kp.as_slice(),
                     out: ar.as_mut_slice(),
                 })
                 .collect();
             par_gemm_f16_grouped(&mut groups, d, pool);
         });
         for s in &hs {
-            self.ops.add(&counts::qk_gemm(1, s.len, d, 2, 2));
+            self.ops.add(&counts::qk_gemm(1, s.len(), d, 2, 2));
         }
 
         // (3) per-sequence scale + f16-precision softmax.
@@ -197,25 +202,27 @@ impl AttentionPipeline for Fp16Attention {
                 for x in ar.as_mut_slice() {
                     *x *= scale;
                 }
-                softmax_rows_f16(ar, Mask::CausalFrom(s.len - 1));
+                softmax_rows_f16(ar, Mask::CausalFrom(s.len() - 1));
             }
         });
         for s in &hs {
-            self.ops.add(&counts::fp32_softmax(s.len as u64, 1)); // same op mix, f16 units
+            self.ops.add(&counts::fp32_softmax(s.len() as u64, 1)); // same op mix, f16 units
         }
 
-        // (4) encode each P row + one grouped PV launch over resident V.
+        // (4) encode each P row + one grouped PV launch over the resident
+        // V page lists.
+        let v_pages: Vec<Vec<&[F16]>> = hs.iter().map(|s| s.v.page_list()).collect();
         let mut o = MatF32::zeros(b, d);
         self.times.measure(Stage::PvGemm, || {
             let phs: Vec<Vec<F16>> = a_rows.iter().map(|ar| encode_slice(ar.as_slice())).collect();
             let mut groups: Vec<GroupF16> = Vec::with_capacity(b);
-            for ((ph, s), orow) in phs.iter().zip(&hs).zip(o.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupF16 { a: ph.as_slice(), b: &s.v, out: orow });
+            for ((ph, vp), orow) in phs.iter().zip(&v_pages).zip(o.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupF16 { a: ph.as_slice(), b: vp.as_slice(), out: orow });
             }
             par_gemm_f16_notrans_grouped(&mut groups, d, pool);
         });
         for s in &hs {
-            self.ops.add(&counts::pv_gemm(s.len as u64, s.len, d, 2, 2));
+            self.ops.add(&counts::pv_gemm(s.len() as u64, s.len(), d, 2, 2));
             self.ops.add(&counts::output_rescale(1, d));
         }
         o

@@ -8,8 +8,8 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_f32_notrans_slices, par_gemm_f32, par_gemm_f32_grouped, par_gemm_f32_notrans_grouped,
-    par_gemm_f32_slices, GroupF32,
+    gemm_f32_notrans_paged, par_gemm_f32, par_gemm_f32_grouped, par_gemm_f32_notrans_grouped,
+    par_gemm_f32_paged, GroupF32,
 };
 use crate::softmax::float_softmax::softmax_rows;
 use crate::softmax::index_softmax::Mask;
@@ -83,13 +83,14 @@ impl AttentionPipeline for Fp32Attention {
 
         state.append(k, v);
         let st = state.as_f32();
-        let l = st.len;
+        let l = st.len();
         let mask = Mask::CausalFrom(l - m);
 
-        // QKᵀ — the resident K rows are already the "transposed" layout.
+        // QKᵀ — the resident K pages are already the "transposed" layout.
+        let k_pages = st.k.page_list();
         let mut a = MatF32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_f32_slices(q.as_slice(), &st.k, a.as_mut_slice(), m, l, d, pool);
+            par_gemm_f32_paged(q.as_slice(), &k_pages, a.as_mut_slice(), m, l, d, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 4, 4));
 
@@ -103,11 +104,12 @@ impl AttentionPipeline for Fp32Attention {
         let valid = counts::valid_positions(m, l, mask);
         self.ops.add(&counts::fp32_softmax(valid, m as u64));
 
-        // PV directly over the resident `L×d` rows (masked entries are
-        // exact zeros and are skipped).
+        // PV directly over the resident `L×d` row pages (masked entries
+        // are exact zeros and are skipped).
+        let v_pages = st.v.page_list();
         let mut o = MatF32::zeros(m, d);
         self.times.measure(Stage::PvGemm, || {
-            gemm_f32_notrans_slices(a.as_slice(), &st.v, o.as_mut_slice(), m, l, d);
+            gemm_f32_notrans_paged(a.as_slice(), &v_pages, o.as_mut_slice(), m, l, d);
         });
         self.ops.add(&counts::pv_gemm(valid, l, d, 4, 4));
         o
@@ -139,17 +141,18 @@ impl AttentionPipeline for Fp32Attention {
         }
         let fs: Vec<&F32KvState> = states.iter().map(|st| st.as_f32()).collect();
 
-        // One grouped QKᵀ launch over the B resident K buffers.
-        let mut a_rows: Vec<MatF32> = fs.iter().map(|s| MatF32::zeros(1, s.len)).collect();
+        // One grouped QKᵀ launch over the B resident K page lists.
+        let k_pages: Vec<Vec<&[f32]>> = fs.iter().map(|s| s.k.page_list()).collect();
+        let mut a_rows: Vec<MatF32> = fs.iter().map(|s| MatF32::zeros(1, s.len())).collect();
         self.times.measure(Stage::QkGemm, || {
             let mut groups: Vec<GroupF32> = Vec::with_capacity(b);
-            for (i, (s, ar)) in fs.iter().zip(a_rows.iter_mut()).enumerate() {
-                groups.push(GroupF32 { a: q.row(i), b: &s.k, out: ar.as_mut_slice() });
+            for (i, (kp, ar)) in k_pages.iter().zip(a_rows.iter_mut()).enumerate() {
+                groups.push(GroupF32 { a: q.row(i), b: kp.as_slice(), out: ar.as_mut_slice() });
             }
             par_gemm_f32_grouped(&mut groups, d, pool);
         });
         for s in &fs {
-            self.ops.add(&counts::qk_gemm(1, s.len, d, 4, 4));
+            self.ops.add(&counts::qk_gemm(1, s.len(), d, 4, 4));
         }
 
         // Per-sequence scale + stable softmax at that sequence's offset.
@@ -158,24 +161,25 @@ impl AttentionPipeline for Fp32Attention {
                 for x in ar.as_mut_slice() {
                     *x *= scale;
                 }
-                softmax_rows(ar, Mask::CausalFrom(s.len - 1));
+                softmax_rows(ar, Mask::CausalFrom(s.len() - 1));
             }
         });
         for s in &fs {
-            self.ops.add(&counts::fp32_softmax(s.len as u64, 1));
+            self.ops.add(&counts::fp32_softmax(s.len() as u64, 1));
         }
 
-        // One grouped PV launch over the B resident V buffers.
+        // One grouped PV launch over the B resident V page lists.
+        let v_pages: Vec<Vec<&[f32]>> = fs.iter().map(|s| s.v.page_list()).collect();
         let mut o = MatF32::zeros(b, d);
         self.times.measure(Stage::PvGemm, || {
             let mut groups: Vec<GroupF32> = Vec::with_capacity(b);
-            for ((ar, s), orow) in a_rows.iter().zip(&fs).zip(o.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupF32 { a: ar.as_slice(), b: &s.v, out: orow });
+            for ((ar, vp), orow) in a_rows.iter().zip(&v_pages).zip(o.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupF32 { a: ar.as_slice(), b: vp.as_slice(), out: orow });
             }
             par_gemm_f32_notrans_grouped(&mut groups, d, pool);
         });
         for s in &fs {
-            self.ops.add(&counts::pv_gemm(s.len as u64, s.len, d, 4, 4));
+            self.ops.add(&counts::pv_gemm(s.len() as u64, s.len(), d, 4, 4));
         }
         o
     }

@@ -20,7 +20,7 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_u8i8, gemm_u8i8_slices, par_gemm_i8, par_gemm_i8_grouped, par_gemm_i8_slices,
+    gemm_u8i8, gemm_u8i8_paged, par_gemm_i8, par_gemm_i8_grouped, par_gemm_i8_paged,
     par_gemm_u8i8_grouped, GroupI8, GroupU8I8,
 };
 use crate::quant::{
@@ -203,13 +203,15 @@ impl AttentionPipeline for IntAttention {
         }
 
         let st = state.as_int8();
-        let l = st.len;
+        let l = st.len();
         let mask = Mask::CausalFrom(l - m);
 
-        // (2) Q̂·K̂ᵀ against the resident INT8 keys.
+        // (2) Q̂·K̂ᵀ against the resident INT8 keys — walking the K̂ page
+        // list in place (an O(pages) pointer descriptor, never a copy).
+        let k_pages = st.k.data.page_list();
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8_slices(qq.data().as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, pool);
+            par_gemm_i8_paged(qq.data().as_slice(), &k_pages, logits.as_mut_slice(), m, l, d, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -221,10 +223,11 @@ impl AttentionPipeline for IntAttention {
         let valid = counts::valid_positions(m, l, mask);
         self.ops.add(&counts::index_softmax(valid, m as u64));
 
-        // (4) P̂·V̂ from the resident INT8 values, zero-skipping.
+        // (4) P̂·V̂ from the resident INT8 value pages, zero-skipping.
+        let v_pages = st.v.data.page_list();
         let mut acc = MatI32::zeros(m, d);
         self.times.measure(Stage::PvGemm, || {
-            gemm_u8i8_slices(p.as_slice(), &st.v.data, acc.as_mut_slice(), m, l, d);
+            gemm_u8i8_paged(p.as_slice(), &v_pages, acc.as_mut_slice(), m, l, d);
         });
         let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
@@ -278,25 +281,27 @@ impl AttentionPipeline for IntAttention {
             self.ops.add(&counts::kv_rescale(remapped as u64));
         }
 
-        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ buffers
-        // (per-group context length; workers split across sequences).
+        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ page lists
+        // (per-group context length; workers split across sequences,
+        // claiming whole page-aligned sequence spans).
         let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
-        let mut logits: Vec<MatI32> = ints.iter().map(|s| MatI32::zeros(1, s.len)).collect();
+        let k_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.k.data.page_list()).collect();
+        let mut logits: Vec<MatI32> = ints.iter().map(|s| MatI32::zeros(1, s.len())).collect();
         self.times.measure(Stage::QkGemm, || {
             let mut groups: Vec<GroupI8> = qqs
                 .iter()
-                .zip(&ints)
+                .zip(&k_pages)
                 .zip(logits.iter_mut())
-                .map(|((qq, s), lg)| GroupI8 {
+                .map(|((qq, kp), lg)| GroupI8 {
                     a: qq.data().as_slice(),
-                    b: &s.k.data,
+                    b: kp.as_slice(),
                     out: lg.as_mut_slice(),
                 })
                 .collect();
             par_gemm_i8_grouped(&mut groups, d, pool);
         });
         for s in &ints {
-            self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
+            self.ops.add(&counts::qk_gemm(1, s.len(), d, 1, 4));
         }
 
         // (3) per-sequence IndexSoftmax: each sequence keeps its own α
@@ -306,26 +311,27 @@ impl AttentionPipeline for IntAttention {
                 .zip(&ints)
                 .zip(&logits)
                 .map(|((qq, s), lg)| {
-                    qq.softmax(&self.softmax, lg, s.k.scale, sqrt_d, Mask::CausalFrom(s.len - 1))
+                    qq.softmax(&self.softmax, lg, s.k.scale, sqrt_d, Mask::CausalFrom(s.len() - 1))
                 })
                 .collect()
         });
         for s in &ints {
-            self.ops.add(&counts::index_softmax(s.len as u64, 1));
+            self.ops.add(&counts::index_softmax(s.len() as u64, 1));
         }
 
-        // (4) one grouped P̂·V̂ launch over the B resident V̂ buffers.
+        // (4) one grouped P̂·V̂ launch over the B resident V̂ page lists.
+        let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
         let mut acc = MatI32::zeros(b, d);
         self.times.measure(Stage::PvGemm, || {
             let mut groups: Vec<GroupU8I8> = Vec::with_capacity(b);
-            for ((p, s), out) in ps.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupU8I8 { a: p.as_slice(), b: &s.v.data, out });
+            for ((p, vp), out) in ps.iter().zip(&v_pages).zip(acc.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupU8I8 { a: p.as_slice(), b: vp.as_slice(), out });
             }
             par_gemm_u8i8_grouped(&mut groups, d, pool);
         });
         for (p, s) in ps.iter().zip(&ints) {
             let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
-            self.ops.add(&counts::pv_gemm(nnz, s.len, d, 1, 4));
+            self.ops.add(&counts::pv_gemm(nnz, s.len(), d, 1, 4));
         }
 
         // (5) per-sequence output rescale with each state's running V scale.

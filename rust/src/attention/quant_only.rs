@@ -20,8 +20,8 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_i8_notrans, gemm_i8_notrans_slices, par_gemm_i8, par_gemm_i8_grouped,
-    par_gemm_i8_notrans_grouped, par_gemm_i8_slices, GroupI8,
+    gemm_i8_notrans, gemm_i8_notrans_paged, par_gemm_i8, par_gemm_i8_grouped,
+    par_gemm_i8_notrans_grouped, par_gemm_i8_paged, GroupI8,
 };
 use crate::quant::{quantize_i8, quantize_p_i8};
 use crate::softmax::float_softmax::softmax_rows;
@@ -123,14 +123,15 @@ impl AttentionPipeline for QuantOnlyAttention {
         }
 
         let st = state.as_int8();
-        let l = st.len;
+        let l = st.len();
         let mask = Mask::CausalFrom(l - m);
         let alpha = qq.scale * st.k.scale / (d as f32).sqrt();
 
-        // (2) Q̂·K̂ᵀ against the resident INT8 keys.
+        // (2) Q̂·K̂ᵀ against the resident INT8 key pages.
+        let k_pages = st.k.data.page_list();
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
-            par_gemm_i8_slices(qq.data.as_slice(), &st.k.data, logits.as_mut_slice(), m, l, d, pool);
+            par_gemm_i8_paged(qq.data.as_slice(), &k_pages, logits.as_mut_slice(), m, l, d, pool);
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
@@ -151,10 +152,11 @@ impl AttentionPipeline for QuantOnlyAttention {
         let p8 = self.times.measure(Stage::Requantize, || quantize_p_i8(&a));
         self.ops.add(&counts::requantize_probs(valid));
 
-        // (6) aggregation against the resident INT8 values.
+        // (6) aggregation against the resident INT8 value pages.
+        let v_pages = st.v.data.page_list();
         let mut acc = MatI32::zeros(m, d);
         self.times.measure(Stage::PvGemm, || {
-            gemm_i8_notrans_slices(p8.as_slice(), &st.v.data, acc.as_mut_slice(), m, l, d);
+            gemm_i8_notrans_paged(p8.as_slice(), &v_pages, acc.as_mut_slice(), m, l, d);
         });
         let nnz = p8.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
@@ -209,23 +211,24 @@ impl AttentionPipeline for QuantOnlyAttention {
 
         let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
 
-        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ buffers.
-        let mut logits: Vec<MatI32> = ints.iter().map(|s| MatI32::zeros(1, s.len)).collect();
+        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ page lists.
+        let k_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.k.data.page_list()).collect();
+        let mut logits: Vec<MatI32> = ints.iter().map(|s| MatI32::zeros(1, s.len())).collect();
         self.times.measure(Stage::QkGemm, || {
             let mut groups: Vec<GroupI8> = qqs
                 .iter()
-                .zip(&ints)
+                .zip(&k_pages)
                 .zip(logits.iter_mut())
-                .map(|((qq, s), lg)| GroupI8 {
+                .map(|((qq, kp), lg)| GroupI8 {
                     a: qq.data.as_slice(),
-                    b: &s.k.data,
+                    b: kp.as_slice(),
                     out: lg.as_mut_slice(),
                 })
                 .collect();
             par_gemm_i8_grouped(&mut groups, d, pool);
         });
         for s in &ints {
-            self.ops.add(&counts::qk_gemm(1, s.len, d, 1, 4));
+            self.ops.add(&counts::qk_gemm(1, s.len(), d, 1, 4));
         }
 
         // (3) per-sequence dequantize with that sequence's α — the detour,
@@ -241,17 +244,17 @@ impl AttentionPipeline for QuantOnlyAttention {
                 .collect()
         });
         for s in &ints {
-            self.ops.add(&counts::dequantize_logits(s.len as u64));
+            self.ops.add(&counts::dequantize_logits(s.len() as u64));
         }
 
         // (4) per-sequence FP32 softmax over its full history.
         self.times.measure(Stage::Softmax, || {
             for (a, s) in a_rows.iter_mut().zip(&ints) {
-                softmax_rows(a, Mask::CausalFrom(s.len - 1));
+                softmax_rows(a, Mask::CausalFrom(s.len() - 1));
             }
         });
         for s in &ints {
-            self.ops.add(&counts::fp32_softmax(s.len as u64, 1));
+            self.ops.add(&counts::fp32_softmax(s.len() as u64, 1));
         }
 
         // (5) per-sequence requantize to signed INT8.
@@ -259,21 +262,22 @@ impl AttentionPipeline for QuantOnlyAttention {
             .times
             .measure(Stage::Requantize, || a_rows.iter().map(quantize_p_i8).collect());
         for s in &ints {
-            self.ops.add(&counts::requantize_probs(s.len as u64));
+            self.ops.add(&counts::requantize_probs(s.len() as u64));
         }
 
-        // (6) one grouped P̂·V̂ launch over the B resident V̂ buffers.
+        // (6) one grouped P̂·V̂ launch over the B resident V̂ page lists.
+        let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
         let mut acc = MatI32::zeros(b, d);
         self.times.measure(Stage::PvGemm, || {
             let mut groups: Vec<GroupI8> = Vec::with_capacity(b);
-            for ((p, s), out) in probs.iter().zip(&ints).zip(acc.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupI8 { a: p.as_slice(), b: &s.v.data, out });
+            for ((p, vp), out) in probs.iter().zip(&v_pages).zip(acc.as_mut_slice().chunks_mut(d)) {
+                groups.push(GroupI8 { a: p.as_slice(), b: vp.as_slice(), out });
             }
             par_gemm_i8_notrans_grouped(&mut groups, d, pool);
         });
         for (p, s) in probs.iter().zip(&ints) {
             let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
-            self.ops.add(&counts::pv_gemm(nnz, s.len, d, 1, 4));
+            self.ops.add(&counts::pv_gemm(nnz, s.len(), d, 1, 4));
         }
 
         // (7) per-sequence output rescale (running V scale / 127).

@@ -1,4 +1,8 @@
-//! Per-sequence KV state for the stateful prefill/decode attention API.
+//! Per-sequence KV state for the stateful prefill/decode attention API —
+//! now **paged**: residency is allocated in fixed-size pages (vLLM-style
+//! block tables), not one contiguous growing buffer per (layer, head, side).
+//!
+//! ## Why the paper's dataflow wants resident operands
 //!
 //! The paper's whole point is an unbroken integer dataflow; a serving path
 //! that stores FP32 K/V history and re-quantizes it on every decode step
@@ -17,20 +21,370 @@
 //! * FP32 / FP16 pipelines keep native-dtype rows ([`F32KvState`],
 //!   [`F16KvState`]).
 //!
+//! ## Paged residency ([`PagedRows`])
+//!
+//! Each side (K or V) stores its rows in a [`PagedRows`] — an ordered list
+//! of fixed-size pages of [`kv_page_rows`] rows each (`INTATTN_KV_PAGE`
+//! override, default 64; snapshotted once per process), plus a row count.
+//! Rows never span pages, so every page is a contiguous `rows×d` row-major
+//! segment the GEMM kernels consume directly (`crate::gemm`'s `*_paged`
+//! kernels and the grouped decode descriptors walk the page list — there is
+//! no "copy into one contiguous buffer" escape hatch anywhere on the decode
+//! path). This fixes three contiguous-layout costs at once:
+//!
+//! * **append** fills the tail page in place and takes a fresh page from
+//!   the pool when it is full — no `Vec`-doubling reallocation ever copies
+//!   the resident history again (the decode-throughput bench reports the
+//!   copy traffic the old layout paid);
+//! * **re-scale** re-maps page by page, in place;
+//! * **memory accounting is exact**: [`KvState::bytes`] is pages × page
+//!   bytes — allocated capacity, not a `len`-derived estimate that ignored
+//!   up to 2× of `Vec` growth slack — and the coordinator budgets whole
+//!   pages ([`crate::coordinator::batcher::BatchPolicy::max_kv_pages`]).
+//!
+//! Pages come from a **process-wide [`PagePool`]** (one per element type):
+//! a free-list of recycled page boxes, so a finished sequence's pages return
+//! to the pool the round it completes and the next admission reuses them
+//! instead of hitting the allocator. [`page_pool_stats`] exposes the
+//! allocated/recycled counters the serving metrics and benches report.
+//! Block-table residency is also the prerequisite for prefix sharing across
+//! requests (a shared prompt prefix is just a shared page run — see the
+//! ROADMAP open item).
+//!
+//! Layout changes nothing numerically: rows hold exactly the values the
+//! contiguous layout held, and every kernel computes the same per-row dot
+//! products in the same order, so paged attention output is **byte-equal**
+//! to the contiguous implementation at any page size (asserted for all six
+//! pipeline kinds in `tests/decode_equivalence.rs` and the property test in
+//! `tests/kv_paging.rs`).
+//!
 //! States also carry the running Δ-statistics EXAQ's dynamic clipping needs
 //! ([`ExaqRunningStats`]), so EXAQ decode keeps its O(1)-per-token cost
 //! instead of re-scanning history for the clip range.
 
 use crate::attention::PipelineKind;
 use crate::tensor::MatF32;
-use crate::util::f16::{encode_slice, F16};
+use crate::util::f16::F16;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
-/// One side (K or V) of an INT8-resident state: quantized rows plus the
-/// running per-tensor scale bookkeeping.
+// ---------------------------------------------------------------------------
+// Page size policy
+
+/// Default rows per KV page (vLLM's common block size; 64 rows × d=128 INT8
+/// elements is an 8 KiB page).
+pub const DEFAULT_KV_PAGE_ROWS: usize = 64;
+
+/// Rows per KV page: `INTATTN_KV_PAGE` override, else
+/// [`DEFAULT_KV_PAGE_ROWS`]. Snapshotted **once** per process (like the
+/// thread-pool size) so every state in a process agrees on the page
+/// geometry; tests that need specific page sizes use
+/// [`KvState::with_page_rows`] / [`PagedRows::with_page_rows`] instead of
+/// mutating the environment.
+pub fn kv_page_rows() -> usize {
+    static ROWS: OnceLock<usize> = OnceLock::new();
+    *ROWS.get_or_init(|| page_rows_from(std::env::var("INTATTN_KV_PAGE").ok().as_deref()))
+}
+
+/// Pure policy behind [`kv_page_rows`], unit-testable without touching the
+/// process environment (mutating env while other test threads `getenv` is
+/// UB on glibc).
+fn page_rows_from(env: Option<&str>) -> usize {
+    env.and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(DEFAULT_KV_PAGE_ROWS)
+}
+
+// ---------------------------------------------------------------------------
+// PagePool — process-wide free-list of recycled page boxes
+
+/// Total elements the free list may hold per element type before released
+/// pages go back to the allocator instead (bounds the pool's idle footprint
+/// at 16 Mi elements — 16 MiB for INT8 pages, 64 MiB for f32).
+const MAX_FREE_ELEMS: usize = 1 << 24;
+
+struct FreeList<T> {
+    /// Free pages bucketed by exact capacity: `(capacity, pages)`. A
+    /// process sees only a handful of distinct page geometries (one per
+    /// (head_dim, page-rows) pair in use), so the bucket scan is O(few)
+    /// and pop/push within a bucket is O(1) — the free list can hold
+    /// hundreds of thousands of pages without the decode-path `acquire`
+    /// ever scanning them.
+    buckets: Vec<(usize, Vec<Box<[T]>>)>,
+    elems: usize,
+}
+
+/// Process-wide recycling pool for KV pages of one element type. A
+/// [`PagedRows`] acquires pages here on growth and releases them on drop,
+/// so a finished sequence's pages are reused by the next admission instead
+/// of cycling through the allocator. Pages of different capacities (page
+/// geometry varies with head_dim and page-rows overrides) live in separate
+/// buckets; `acquire` matches on exact capacity.
+pub struct PagePool<T> {
+    free: Mutex<FreeList<T>>,
+    /// Pages created fresh from the allocator.
+    allocated: AtomicU64,
+    /// Pages handed out from the free list instead of the allocator.
+    recycled: AtomicU64,
+}
+
+impl<T: Copy + Default> PagePool<T> {
+    fn new() -> Self {
+        PagePool {
+            free: Mutex::new(FreeList { buckets: Vec::new(), elems: 0 }),
+            allocated: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    fn acquire(&self, cap: usize) -> Box<[T]> {
+        {
+            let mut f = self.free.lock().unwrap();
+            if let Some(page) = f
+                .buckets
+                .iter_mut()
+                .find(|(c, _)| *c == cap)
+                .and_then(|(_, pages)| pages.pop())
+            {
+                f.elems -= cap;
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                return page;
+            }
+        }
+        self.allocated.fetch_add(1, Ordering::Relaxed);
+        vec![T::default(); cap].into_boxed_slice()
+    }
+
+    fn release(&self, page: Box<[T]>) {
+        let cap = page.len();
+        let mut f = self.free.lock().unwrap();
+        if f.elems + cap > MAX_FREE_ELEMS {
+            // Over the cap: the page drops back to the allocator.
+            return;
+        }
+        f.elems += cap;
+        if let Some((_, pages)) = f.buckets.iter_mut().find(|(c, _)| *c == cap) {
+            pages.push(page);
+        } else {
+            f.buckets.push((cap, vec![page]));
+        }
+    }
+
+    /// (pages allocated fresh, pages recycled from the free list) since
+    /// process start. Monotone counters.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.allocated.load(Ordering::Relaxed), self.recycled.load(Ordering::Relaxed))
+    }
+}
+
+/// Element types that have a process-wide [`PagePool`].
+pub trait PageElem: Copy + Default + Send + Sync + 'static {
+    fn pool() -> &'static PagePool<Self>;
+}
+
+macro_rules! impl_page_elem {
+    ($t:ty) => {
+        impl PageElem for $t {
+            fn pool() -> &'static PagePool<Self> {
+                static POOL: OnceLock<PagePool<$t>> = OnceLock::new();
+                POOL.get_or_init(PagePool::new)
+            }
+        }
+    };
+}
+
+impl_page_elem!(i8);
+impl_page_elem!(f32);
+impl_page_elem!(F16);
+
+/// Aggregate (allocated, recycled) page counts across every element type's
+/// pool — what the serving metrics and the decode bench report.
+pub fn page_pool_stats() -> (u64, u64) {
+    let (a1, r1) = <i8 as PageElem>::pool().stats();
+    let (a2, r2) = <f32 as PageElem>::pool().stats();
+    let (a3, r3) = <F16 as PageElem>::pool().stats();
+    (a1 + a2 + a3, r1 + r2 + r3)
+}
+
+// ---------------------------------------------------------------------------
+// PagedRows — the block-table row store
+
+/// Append-only row store backed by fixed-size pages: an ordered page list
+/// plus a row count. Every page holds whole `d`-element rows (rows never
+/// span pages), so each page is a contiguous row-major segment the GEMM
+/// kernels consume directly via [`PagedRows::page_list`]. Pages are
+/// acquired from the process-wide [`PagePool`] on growth and released back
+/// on drop.
+pub struct PagedRows<T: PageElem> {
+    pages: Vec<Box<[T]>>,
+    /// Rows appended so far.
+    len: usize,
+    /// Elements per row.
+    d: usize,
+    /// Rows per page.
+    page_rows: usize,
+}
+
+impl<T: PageElem> PagedRows<T> {
+    /// Store with the process-wide page size ([`kv_page_rows`]).
+    pub fn new(d: usize) -> Self {
+        Self::with_page_rows(d, kv_page_rows())
+    }
+
+    /// Store with an explicit page size (tests sweep 1/2/64 and a
+    /// one-big-page "contiguous" oracle in a single process).
+    pub fn with_page_rows(d: usize, page_rows: usize) -> Self {
+        assert!(d > 0, "row width must be positive");
+        assert!(page_rows > 0, "page size must be positive");
+        PagedRows { pages: Vec::new(), len: 0, d, page_rows }
+    }
+
+    /// Rows stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Elements per row.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Valid elements stored (`len × d`).
+    pub fn elems(&self) -> usize {
+        self.len * self.d
+    }
+
+    /// Pages allocated.
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Allocated capacity in bytes — pages × page bytes, exactly what this
+    /// store holds from the allocator/pool (no hidden growth slack).
+    pub fn bytes_allocated(&self) -> usize {
+        self.pages.len() * self.page_cap() * std::mem::size_of::<T>()
+    }
+
+    /// Elements per page.
+    fn page_cap(&self) -> usize {
+        self.page_rows * self.d
+    }
+
+    /// Append one row and return its slice for the caller to fill — the
+    /// only growth path. Fills the tail page in place; takes a page from
+    /// the pool exactly when capacity is exhausted. Never copies resident
+    /// rows.
+    pub fn append_row(&mut self) -> &mut [T] {
+        if self.len == self.pages.len() * self.page_rows {
+            self.pages.push(T::pool().acquire(self.page_cap()));
+        }
+        let off = (self.len % self.page_rows) * self.d;
+        self.len += 1;
+        let tail = self.pages.last_mut().expect("tail page present");
+        &mut tail[off..off + self.d]
+    }
+
+    /// Row `r` (always contiguous: rows never span pages).
+    pub fn row(&self, r: usize) -> &[T] {
+        assert!(r < self.len, "row {r} out of {} stored", self.len);
+        let off = (r % self.page_rows) * self.d;
+        &self.pages[r / self.page_rows][off..off + self.d]
+    }
+
+    /// The valid row-major segment of each page, in order (tail trimmed to
+    /// the rows actually stored). This is the block table the paged GEMM
+    /// kernels walk.
+    pub fn page_slices(&self) -> impl Iterator<Item = &[T]> {
+        let (pr, d, len) = (self.page_rows, self.d, self.len);
+        self.pages.iter().enumerate().filter_map(move |(i, p)| {
+            let start = i * pr;
+            if start >= len {
+                return None;
+            }
+            Some(&p[..(len - start).min(pr) * d])
+        })
+    }
+
+    /// [`Self::page_slices`], collected — the per-call descriptor the
+    /// kernels take (O(pages) pointers, not a data copy). The collect is a
+    /// small per-call allocation, in the same class as the logit/output
+    /// buffers every attention call already allocates; if it ever shows up
+    /// in profiles, a descriptor cached on the store and refreshed on page
+    /// growth is the next step.
+    pub fn page_list(&self) -> Vec<&[T]> {
+        self.page_slices().collect()
+    }
+
+    /// Valid elements in storage order.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.page_slices().flat_map(|p| p.iter())
+    }
+
+    /// Mutate every valid element in place, page by page (the INT8
+    /// re-scale remap).
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(&mut T)) {
+        let (pr, d, len) = (self.page_rows, self.d, self.len);
+        for (i, page) in self.pages.iter_mut().enumerate() {
+            let start = i * pr;
+            if start >= len {
+                break;
+            }
+            for x in &mut page[..(len - start).min(pr) * d] {
+                f(x);
+            }
+        }
+    }
+}
+
+impl<T: PageElem> Drop for PagedRows<T> {
+    fn drop(&mut self) {
+        for p in self.pages.drain(..) {
+            T::pool().release(p);
+        }
+    }
+}
+
+impl<T: PageElem> Clone for PagedRows<T> {
+    fn clone(&self) -> Self {
+        let mut pages = Vec::with_capacity(self.pages.len());
+        for p in &self.pages {
+            let mut np = T::pool().acquire(self.page_cap());
+            np.copy_from_slice(p);
+            pages.push(np);
+        }
+        PagedRows { pages, len: self.len, d: self.d, page_rows: self.page_rows }
+    }
+}
+
+impl<T: PageElem> std::fmt::Debug for PagedRows<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedRows")
+            .field("rows", &self.len)
+            .field("d", &self.d)
+            .field("page_rows", &self.page_rows)
+            .field("pages", &self.pages.len())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KV states
+
+/// One side (K or V) of an INT8-resident state: quantized rows in pages,
+/// plus the running per-tensor scale bookkeeping.
 #[derive(Clone, Debug)]
 pub struct Int8Side {
-    /// Quantized rows, `len×d` row-major.
-    pub data: Vec<i8>,
+    /// Quantized rows, `len×d` row-major across the page list.
+    pub data: PagedRows<i8>,
     /// Dequantization scale: `x ≈ scale · x̂` (1.0 while all-zero).
     pub scale: f32,
     /// Running abs-max over every row ever appended.
@@ -40,8 +394,13 @@ pub struct Int8Side {
 }
 
 impl Int8Side {
-    fn new() -> Self {
-        Int8Side { data: Vec::new(), scale: 1.0, amax: 0.0, rescales: 0 }
+    fn with_page_rows(d: usize, page_rows: usize) -> Self {
+        Int8Side {
+            data: PagedRows::with_page_rows(d, page_rows),
+            scale: 1.0,
+            amax: 0.0,
+            rescales: 0,
+        }
     }
 
     /// Quantize and append `rows`, widening the grid first if the running
@@ -60,21 +419,24 @@ impl Int8Side {
             if !self.data.is_empty() && self.amax > 0.0 {
                 // Re-scale path: re-map resident INT8 rows onto the wider
                 // grid entirely in the quantized domain (no FP32 history
-                // exists to re-quantize from — that is the point).
+                // exists to re-quantize from — that is the point), one page
+                // at a time and in place: paging never copies rows for this.
                 let ratio = self.scale / new_scale;
-                for q in self.data.iter_mut() {
+                self.data.for_each_mut(|q| {
                     *q = ((*q as f32) * ratio).round().clamp(-127.0, 127.0) as i8;
-                }
+                });
                 self.rescales += 1;
-                remapped = self.data.len();
+                remapped = self.data.elems();
             }
             self.amax = new_amax;
             self.scale = new_scale;
         }
         let inv = 1.0 / self.scale;
-        self.data.reserve(rows.len());
-        for &x in rows.as_slice() {
-            self.data.push((x * inv).round().clamp(-127.0, 127.0) as i8);
+        for r in 0..rows.rows() {
+            let dst = self.data.append_row();
+            for (o, &x) in dst.iter_mut().zip(rows.row(r)) {
+                *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+            }
         }
         remapped
     }
@@ -109,34 +471,68 @@ impl ExaqRunningStats {
 }
 
 /// INT8-resident K/V state (Quant-Only, IntAttention, EXAQ pipelines).
+/// The cached length is **derived** from the page store (`len()`), never
+/// mirrored — there is exactly one source of truth for how many rows are
+/// resident.
 #[derive(Clone, Debug)]
 pub struct Int8KvState {
     pub d: usize,
-    pub len: usize,
     pub k: Int8Side,
     pub v: Int8Side,
     /// Used only by the EXAQ pipelines (zero-cost for the others).
     pub exaq: ExaqRunningStats,
 }
 
-/// FP32-resident K/V state.
+impl Int8KvState {
+    /// Cached positions (rows per side; K and V always advance together).
+    pub fn len(&self) -> usize {
+        self.k.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// FP32-resident K/V state. Length is derived from the page store.
 #[derive(Clone, Debug)]
 pub struct F32KvState {
     pub d: usize,
-    pub len: usize,
-    /// `len×d` row-major keys.
-    pub k: Vec<f32>,
-    /// `len×d` row-major values.
-    pub v: Vec<f32>,
+    /// `len×d` row-major keys across the page list.
+    pub k: PagedRows<f32>,
+    /// `len×d` row-major values across the page list.
+    pub v: PagedRows<f32>,
 }
 
-/// FP16-storage K/V state (binary16 rows, decoded tile-wise at compute time).
+impl F32KvState {
+    /// Cached positions (rows per side).
+    pub fn len(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// FP16-storage K/V state (binary16 rows, decoded tile-wise at compute
+/// time). Length is derived from the page store.
 #[derive(Clone, Debug)]
 pub struct F16KvState {
     pub d: usize,
-    pub len: usize,
-    pub k: Vec<F16>,
-    pub v: Vec<F16>,
+    pub k: PagedRows<F16>,
+    pub v: PagedRows<F16>,
+}
+
+impl F16KvState {
+    /// Cached positions (rows per side).
+    pub fn len(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// A per-sequence (per-head) KV cache entry owned by the pipeline kind that
@@ -150,41 +546,46 @@ pub enum KvState {
 }
 
 impl KvState {
-    /// The state format a pipeline kind keeps resident.
+    /// The state format a pipeline kind keeps resident, paged at the
+    /// process-wide page size ([`kv_page_rows`]).
     pub fn new(kind: PipelineKind, head_dim: usize) -> KvState {
+        Self::with_page_rows(kind, head_dim, kv_page_rows())
+    }
+
+    /// [`Self::new`] with an explicit page size (tests compare page sizes
+    /// 1/2/64 against a one-big-page contiguous oracle in one process).
+    pub fn with_page_rows(kind: PipelineKind, head_dim: usize, page_rows: usize) -> KvState {
         assert!(head_dim > 0, "head_dim must be positive");
         match kind {
             PipelineKind::Fp32 => KvState::F32(F32KvState {
                 d: head_dim,
-                len: 0,
-                k: Vec::new(),
-                v: Vec::new(),
+                k: PagedRows::with_page_rows(head_dim, page_rows),
+                v: PagedRows::with_page_rows(head_dim, page_rows),
             }),
             PipelineKind::Fp16 => KvState::F16(F16KvState {
                 d: head_dim,
-                len: 0,
-                k: Vec::new(),
-                v: Vec::new(),
+                k: PagedRows::with_page_rows(head_dim, page_rows),
+                v: PagedRows::with_page_rows(head_dim, page_rows),
             }),
             PipelineKind::QuantOnly
             | PipelineKind::IntAttention
             | PipelineKind::ExaqInt2
             | PipelineKind::ExaqInt3 => KvState::Int8(Int8KvState {
                 d: head_dim,
-                len: 0,
-                k: Int8Side::new(),
-                v: Int8Side::new(),
+                k: Int8Side::with_page_rows(head_dim, page_rows),
+                v: Int8Side::with_page_rows(head_dim, page_rows),
                 exaq: ExaqRunningStats::default(),
             }),
         }
     }
 
-    /// Cached positions.
+    /// Cached positions (derived from the page stores — no mirror field to
+    /// drift out of sync).
     pub fn len(&self) -> usize {
         match self {
-            KvState::F32(s) => s.len,
-            KvState::F16(s) => s.len,
-            KvState::Int8(s) => s.len,
+            KvState::F32(s) => s.len(),
+            KvState::F16(s) => s.len(),
+            KvState::Int8(s) => s.len(),
         }
     }
 
@@ -212,35 +613,71 @@ impl KvState {
         assert_eq!(v_rows.cols(), self.head_dim(), "V head_dim");
         match self {
             KvState::F32(s) => {
-                s.k.extend_from_slice(k_rows.as_slice());
-                s.v.extend_from_slice(v_rows.as_slice());
-                s.len += n;
+                for r in 0..n {
+                    s.k.append_row().copy_from_slice(k_rows.row(r));
+                    s.v.append_row().copy_from_slice(v_rows.row(r));
+                }
                 0
             }
             KvState::F16(s) => {
-                s.k.extend(encode_slice(k_rows.as_slice()));
-                s.v.extend(encode_slice(v_rows.as_slice()));
-                s.len += n;
+                for r in 0..n {
+                    for (o, &x) in s.k.append_row().iter_mut().zip(k_rows.row(r)) {
+                        *o = F16::from_f32(x);
+                    }
+                    for (o, &x) in s.v.append_row().iter_mut().zip(v_rows.row(r)) {
+                        *o = F16::from_f32(x);
+                    }
+                }
                 0
             }
+            KvState::Int8(s) => s.k.append(k_rows) + s.v.append(v_rows),
+        }
+    }
+
+    /// Actual memory footprint in bytes: **allocated page capacity** (pages
+    /// × page bytes) at the native element width, plus the scale/statistics
+    /// bookkeeping integer states carry. Exact by construction — the old
+    /// contiguous layout reported `len`-derived payload and ignored up to
+    /// 2× of `Vec` growth slack, so peak RSS could exceed the admission
+    /// budget it was checked against.
+    pub fn bytes(&self) -> usize {
+        match self {
+            KvState::F32(s) => s.k.bytes_allocated() + s.v.bytes_allocated(),
+            KvState::F16(s) => s.k.bytes_allocated() + s.v.bytes_allocated(),
+            // INT8 pages + per-side (scale, amax, rescales) + EXAQ stats.
             KvState::Int8(s) => {
-                let remapped = s.k.append(k_rows) + s.v.append(v_rows);
-                s.len += n;
-                remapped
+                s.k.data.bytes_allocated() + s.v.data.bytes_allocated() + 2 * 16 + 24
             }
         }
     }
 
-    /// Actual memory footprint in bytes: K/V payload at the native element
-    /// width, plus the scale/statistics bookkeeping integer states carry.
-    /// This is what the coordinator's admission control charges per request.
-    pub fn bytes(&self) -> usize {
+    /// Pages allocated across both sides — what the coordinator's
+    /// page-budget admission charges and frees.
+    pub fn pages(&self) -> usize {
         match self {
-            KvState::F32(s) => (s.k.len() + s.v.len()) * 4,
-            KvState::F16(s) => (s.k.len() + s.v.len()) * 2,
-            // INT8 payload + per-side (scale, amax, rescales) + EXAQ stats.
-            KvState::Int8(s) => s.k.data.len() + s.v.data.len() + 2 * 16 + 24,
+            KvState::F32(s) => s.k.pages() + s.v.pages(),
+            KvState::F16(s) => s.k.pages() + s.v.pages(),
+            KvState::Int8(s) => s.k.data.pages() + s.v.data.pages(),
         }
+    }
+
+    /// Row slots the allocated pages could hold (both sides) — the
+    /// denominator of tail-page utilization.
+    pub fn capacity_rows(&self) -> usize {
+        let side = |p: usize, pr: usize| p * pr;
+        match self {
+            KvState::F32(s) => side(s.k.pages(), s.k.page_rows()) + side(s.v.pages(), s.v.page_rows()),
+            KvState::F16(s) => side(s.k.pages(), s.k.page_rows()) + side(s.v.pages(), s.v.page_rows()),
+            KvState::Int8(s) => {
+                side(s.k.data.pages(), s.k.data.page_rows())
+                    + side(s.v.data.pages(), s.v.data.page_rows())
+            }
+        }
+    }
+
+    /// Rows stored across both sides (`2 × len`).
+    pub fn rows_stored(&self) -> usize {
+        2 * self.len()
     }
 
     /// The INT8 state, panicking if this state was built by a float pipeline.
@@ -315,8 +752,9 @@ impl KvState {
 }
 
 /// Bytes one cached token costs for `kind` at head dimension `d` across K
-/// and V (payload only — the per-state constant overhead is excluded so the
-/// estimate scales linearly for admission control).
+/// and V (payload only — page rounding and the per-state constant overhead
+/// are excluded so the estimate scales linearly; page-granular admission
+/// uses [`crate::model::lm::KvCache::pages_for_tokens`] instead).
 pub fn kv_bytes_per_token(kind: PipelineKind, d: usize) -> usize {
     let elem = match kind {
         PipelineKind::Fp32 => 4,
@@ -351,6 +789,95 @@ mod tests {
     }
 
     #[test]
+    fn page_rows_policy() {
+        assert_eq!(page_rows_from(None), DEFAULT_KV_PAGE_ROWS);
+        assert_eq!(page_rows_from(Some("2")), 2);
+        assert_eq!(page_rows_from(Some("0")), 1, "clamped to 1");
+        assert_eq!(page_rows_from(Some("junk")), DEFAULT_KV_PAGE_ROWS);
+        assert!(kv_page_rows() >= 1);
+    }
+
+    #[test]
+    fn paged_rows_append_and_page_geometry() {
+        let mut p: PagedRows<i8> = PagedRows::with_page_rows(4, 3);
+        assert!(p.is_empty());
+        assert_eq!(p.pages(), 0);
+        assert_eq!(p.bytes_allocated(), 0);
+        for r in 0..7i8 {
+            let row = p.append_row();
+            row.copy_from_slice(&[r, r + 1, r + 2, r + 3]);
+        }
+        assert_eq!(p.len(), 7);
+        assert_eq!(p.elems(), 28);
+        // 7 rows at 3 rows/page → 3 pages (tail holds 1 row).
+        assert_eq!(p.pages(), 3);
+        assert_eq!(p.bytes_allocated(), 3 * 3 * 4);
+        // Page list: full, full, trimmed tail.
+        let pl = p.page_list();
+        assert_eq!(pl.iter().map(|s| s.len()).collect::<Vec<_>>(), vec![12, 12, 4]);
+        // Rows and elementwise iteration see the appended order.
+        assert_eq!(p.row(4), &[4, 5, 6, 7]);
+        let flat: Vec<i8> = p.iter().copied().collect();
+        assert_eq!(flat.len(), 28);
+        assert_eq!(&flat[16..20], &[4, 5, 6, 7]);
+        // for_each_mut touches exactly the valid elements.
+        let mut q = p.clone();
+        let mut touched = 0;
+        q.for_each_mut(|_| touched += 1);
+        assert_eq!(touched, 28);
+    }
+
+    #[test]
+    fn paged_rows_clone_is_deep_and_equal() {
+        let mut p: PagedRows<f32> = PagedRows::with_page_rows(2, 2);
+        for r in 0..5 {
+            p.append_row().copy_from_slice(&[r as f32, -(r as f32)]);
+        }
+        let q = p.clone();
+        assert_eq!(q.len(), 5);
+        let a: Vec<f32> = p.iter().copied().collect();
+        let b: Vec<f32> = q.iter().copied().collect();
+        assert_eq!(a, b);
+        // Mutating the clone leaves the original untouched.
+        let mut q = q;
+        q.append_row().copy_from_slice(&[9.0, 9.0]);
+        assert_eq!(p.len(), 5);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn page_pool_recycles_released_pages() {
+        // Use an unusual capacity so concurrent tests can't interfere with
+        // the exact-capacity match.
+        let cap = 7 * 13;
+        let pool = <i8 as PageElem>::pool();
+        let (_, r0) = pool.stats();
+        let page = pool.acquire(cap);
+        pool.release(page);
+        let _page2 = pool.acquire(cap);
+        let (_, r1) = pool.stats();
+        assert!(r1 > r0, "released page of a unique capacity must be reused");
+    }
+
+    #[test]
+    fn dropping_paged_rows_returns_pages_to_pool() {
+        let d = 11; // unusual width → unusual page capacity
+        let (_, r0) = <f32 as PageElem>::pool().stats();
+        {
+            let mut p: PagedRows<f32> = PagedRows::with_page_rows(d, 3);
+            for _ in 0..4 {
+                p.append_row().fill(1.0);
+            }
+        } // dropped: 2 pages released
+        let mut q: PagedRows<f32> = PagedRows::with_page_rows(d, 3);
+        for _ in 0..4 {
+            q.append_row().fill(2.0);
+        }
+        let (_, r1) = <f32 as PageElem>::pool().stats();
+        assert!(r1 >= r0 + 2, "the dropped store's pages must be recycled");
+    }
+
+    #[test]
     fn int8_running_scale_matches_one_shot_quantization() {
         // Appending chunk-by-chunk must end with the same scale one-shot
         // per-tensor quantization of the concatenated rows produces.
@@ -363,13 +890,50 @@ mod tests {
         }
         let s = st.as_int8();
         let one_shot = quantize_i8(&full);
-        assert_eq!(s.len, 24);
+        assert_eq!(s.len(), 24);
         assert!((s.k.scale - one_shot.scale).abs() < 1e-12, "{} vs {}", s.k.scale, one_shot.scale);
         // Rows quantized after the amax stopped growing are bit-identical to
         // one-shot; earlier rows pick up ≤ half an LSB of extra rounding per
         // re-scale event (3 chunks after the first ⇒ ≤ 2 LSB here).
         for (a, b) in s.k.data.iter().zip(one_shot.data.as_slice()) {
             assert!((*a as i32 - *b as i32).abs() <= 2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn int8_append_identical_across_page_sizes() {
+        // The same append schedule (including re-scale events) must leave
+        // byte-identical quantized rows and identical scales at any page
+        // size — pages are pure layout.
+        let mut rng = Pcg64::seed_from_u64(9);
+        let chunks: Vec<MatF32> = (0..5)
+            .map(|i| {
+                let mut m = rand_mat(&mut rng, 3, 8);
+                for x in m.as_mut_slice() {
+                    *x *= 1.0 + i as f32; // ramp forces re-scales
+                }
+                m
+            })
+            .collect();
+        // 1024 ≥ the 15 rows appended: that state keeps a single page per
+        // side, i.e. the pre-paging contiguous layout.
+        let mut states: Vec<KvState> = [1usize, 2, 64, 1024]
+            .iter()
+            .map(|&pr| KvState::with_page_rows(PipelineKind::IntAttention, 8, pr))
+            .collect();
+        for c in &chunks {
+            for st in states.iter_mut() {
+                st.append(c, c);
+            }
+        }
+        let oracle = states.last().unwrap().as_int8();
+        let want_k: Vec<i8> = oracle.k.data.iter().copied().collect();
+        for st in &states[..3] {
+            let s = st.as_int8();
+            assert_eq!(s.k.scale, oracle.k.scale);
+            assert_eq!(s.k.rescales, oracle.k.rescales);
+            let got: Vec<i8> = s.k.data.iter().copied().collect();
+            assert_eq!(got, want_k, "page size {}", s.k.data.page_rows());
         }
     }
 
@@ -387,7 +951,7 @@ mod tests {
         assert_eq!(s.k.rescales, 1);
         assert!((s.k.amax - 4.0).abs() < 1e-12);
         // Old rows re-mapped onto the wider grid: 0.5 at scale 4/127 → 16.
-        assert_eq!(s.k.data[0], 16);
+        assert_eq!(s.k.data.row(0)[0], 16);
         st.append(&small, &small); // shrinking magnitudes never rescale
         assert_eq!(st.as_int8().k.rescales, 1);
     }
@@ -409,19 +973,27 @@ mod tests {
     }
 
     #[test]
-    fn bytes_reflect_native_widths() {
+    fn bytes_report_allocated_page_capacity() {
         let mut rng = Pcg64::seed_from_u64(2);
         let rows = rand_mat(&mut rng, 10, 16);
-        let mut f32s = KvState::new(PipelineKind::Fp32, 16);
-        let mut f16s = KvState::new(PipelineKind::Fp16, 16);
-        let mut i8s = KvState::new(PipelineKind::IntAttention, 16);
+        // Explicit page size 4: 10 rows → 3 pages per side.
+        let mut f32s = KvState::with_page_rows(PipelineKind::Fp32, 16, 4);
+        let mut f16s = KvState::with_page_rows(PipelineKind::Fp16, 16, 4);
+        let mut i8s = KvState::with_page_rows(PipelineKind::IntAttention, 16, 4);
         for s in [&mut f32s, &mut f16s, &mut i8s] {
             s.append(&rows, &rows);
         }
-        assert_eq!(f32s.bytes(), 2 * 10 * 16 * 4);
-        assert_eq!(f16s.bytes(), 2 * 10 * 16 * 2);
-        // INT8: payload + 56 B of scale/stat bookkeeping.
-        assert_eq!(i8s.bytes(), 2 * 10 * 16 + 56);
+        // Capacity is pages × page bytes — exact, includes tail slack.
+        assert_eq!(f32s.bytes(), 2 * 3 * 4 * 16 * 4);
+        assert_eq!(f16s.bytes(), 2 * 3 * 4 * 16 * 2);
+        // INT8: pages + 56 B of scale/stat bookkeeping.
+        assert_eq!(i8s.bytes(), 2 * 3 * 4 * 16 + 56);
+        for s in [&f32s, &f16s, &i8s] {
+            assert_eq!(s.pages(), 6);
+            assert_eq!(s.capacity_rows(), 24);
+            assert_eq!(s.rows_stored(), 20);
+        }
+        // The linear per-token payload estimate is unchanged.
         assert_eq!(kv_bytes_per_token(PipelineKind::Fp32, 16), 128);
         assert_eq!(kv_bytes_per_token(PipelineKind::Fp16, 16), 64);
         assert_eq!(kv_bytes_per_token(PipelineKind::IntAttention, 16), 32);

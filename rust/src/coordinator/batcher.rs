@@ -21,16 +21,22 @@ pub struct BatchPolicy {
     /// states), bounding the latency spike a long prompt injects into the
     /// round. 0 disables chunking.
     pub prefill_chunk: usize,
-    /// KV-memory budget in bytes across all active sequences, reserved with
-    /// the *pipeline-native* per-token footprint (INT8 + scales for the
-    /// integer pipelines — see `KvCache::bytes_per_token`). Each active
-    /// sequence reserves its full projected prompt+generation footprint, so
-    /// the bound holds through decode growth. A request that would overflow
-    /// the budget waits in the queue — and once one request defers, the
-    /// rest of that round's admissions defer behind it (no intra-round
-    /// leapfrogging); a request too big for the whole budget still runs
-    /// when the engine drains. 0 disables the bound.
-    pub max_kv_bytes: usize,
+    /// KV-memory budget in **pages** across all active sequences (the KV
+    /// states allocate fixed-size pages of `INTATTN_KV_PAGE` rows from a
+    /// recycling pool — see `crate::attention::state::PagedRows`). Each
+    /// active sequence reserves its full projected prompt+generation
+    /// footprint, `KvCache::pages_for_tokens`, so the bound holds through
+    /// decode growth — and because page counts are exact allocated
+    /// capacity (no hidden `Vec` growth slack), peak residency actually
+    /// stays inside the budget, which the old byte accounting could miss
+    /// by up to 2×. A request that would overflow the budget waits in the
+    /// queue — and once one request defers, the rest of that round's
+    /// admissions defer behind it (no intra-round leapfrogging); a request
+    /// too big for the whole budget still runs when the engine drains. A
+    /// finished request's pages return to the pool the round it retires,
+    /// which is what lets the next queued request admit. 0 disables the
+    /// bound.
+    pub max_kv_pages: usize,
 }
 
 impl Default for BatchPolicy {
@@ -40,13 +46,17 @@ impl Default for BatchPolicy {
             prefill_token_budget: 2048,
             shortest_first: true,
             prefill_chunk: 256,
-            max_kv_bytes: 0,
+            max_kv_pages: 0,
         }
     }
 }
 
 /// Select requests to admit from `queue` given `active` currently-running
 /// requests. Removes the admitted requests from the queue and returns them.
+/// Selection enforces the slot and prefill-token budgets; the engine then
+/// charges each selected request's projected page footprint against
+/// [`BatchPolicy::max_kv_pages`] (with head-of-line pinning for deferred
+/// requests) before it actually joins the active set.
 pub fn select_admissions(
     queue: &mut VecDeque<Request>,
     active: usize,

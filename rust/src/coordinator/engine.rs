@@ -3,16 +3,31 @@
 //!
 //! Scheduling loop (one "round"):
 //!   1. Drain the submit channel into the wait queue; reject on overflow.
-//!   2. Admit new requests per [`BatchPolicy`] (prefill phase; records TTFT).
+//!   2. Admit new requests per [`BatchPolicy`] (prefill phase; records
+//!      TTFT), under the **KV page budget**: each candidate charges its
+//!      projected footprint — [`KvCache::pages_for_tokens`] over prompt +
+//!      full generation — against [`BatchPolicy::max_kv_pages`], and a
+//!      request that would overflow waits (pinned head-of-line, so smaller
+//!      arrivals cannot leapfrog it forever). Pages are the natural unit
+//!      because KV residency *is* paged: fixed-size pages from a
+//!      process-wide recycling pool
+//!      ([`crate::attention::state::PagedRows`]), so the page count equals
+//!      allocated capacity exactly — the old byte budget estimated payload
+//!      from `len` and could undercount peak RSS by the `Vec` growth slack.
 //!   3. Advance prefills (one chunk per request per round), then **one
 //!      batched decode step** over every decoding request: the per-layer
 //!      Q/K/V projections of the B active sequences stack into single
 //!      `B×d_model` GEMMs, and each head's B attention products run as one
-//!      grouped integer-GEMM launch over the B resident KV states
+//!      grouped integer-GEMM launch over the B resident KV **page lists**
 //!      ([`TinyLm::decode_step_batch`]) — instead of B memory-bound 1-row
 //!      GEMM pairs per round. Per sequence the results are bit-identical to
-//!      the sequential loop; only the kernel shapes change.
-//!   4. Retire finished requests, replying on their channels. A request the
+//!      the sequential loop; only the kernel shapes change. Appends fill
+//!      each state's tail page in place, so a long-running sequence never
+//!      re-copies its history the way contiguous `Vec` growth did.
+//!   4. Retire finished requests, replying on their channels. Dropping a
+//!      retired request's [`KvCache`] returns its pages to the pool **that
+//!      same round**, which is what lets the next KV-deferred request in
+//!      the queue admit (and reuse those very pages). A request the
 //!      context cuts off early is truncated (never padded) and finishes
 //!      with [`FinishReason::Length`].
 //!
@@ -261,7 +276,7 @@ fn scheduler_loop(
             }
         }
 
-        // (2) admissions, under the KV-byte budget. While a KV-deferred
+        // (2) admissions, under the KV page budget. While a KV-deferred
         // request is pinned as kv_head, it is the *only* admission
         // candidate: selecting others and then vetoing them post-hoc would
         // livelock under sustained load (shortest-first may never re-select
@@ -281,25 +296,23 @@ fn scheduler_loop(
         } else {
             select_admissions(&mut waiting, active.len(), &opts.policy)
         };
-        let bytes_per_tok = KvCache::bytes_per_token(opts.attention, &cfg);
-        // Reserve each active sequence's *projected* footprint (prompt +
-        // full generation at the pipeline-native width), not just what its
-        // cache holds right now — otherwise concurrent decodes grow past
-        // the budget after admission.
+        // Reserve each active sequence's *projected* footprint in pages
+        // (prompt + full generation, every layer/head/side rounded up to
+        // whole pages — exactly what the paged states will allocate), not
+        // just what its cache holds right now — otherwise concurrent
+        // decodes grow past the budget after admission.
         // A projection can never exceed the model context: overrunning
         // requests are truncated at max_seq (FinishReason::Length).
         let projected_tokens =
             |req: &Request| (req.prompt.len() + req.gen_len).min(cfg.max_seq);
-        let mut kv_reserved: usize = active
-            .iter()
-            .map(|a| projected_tokens(&a.req) * bytes_per_tok)
-            .sum();
+        let projected_pages = |req: &Request| KvCache::pages_for_tokens(projected_tokens(req), &cfg);
+        let mut kv_reserved: usize = active.iter().map(|a| projected_pages(&a.req)).sum();
         let mut deferred: Vec<Request> = Vec::new();
         for req in admitted {
-            let projected = projected_tokens(&req) * bytes_per_tok;
+            let projected = projected_pages(&req);
             if kv_head.is_some_and(|id| id != req.id)
-                || (opts.policy.max_kv_bytes > 0
-                    && kv_reserved + projected > opts.policy.max_kv_bytes
+                || (opts.policy.max_kv_pages > 0
+                    && kv_reserved + projected > opts.policy.max_kv_pages
                     && !active.is_empty())
             {
                 // Over budget (or behind a previously KV-deferred request):
@@ -408,6 +421,11 @@ fn scheduler_loop(
         // frees them (sampling pre-decode missed every sequence's final,
         // largest state).
         metrics.on_kv_bytes(active.iter().map(|a| a.cache.bytes()).sum());
+        metrics.on_kv_pages(
+            active.iter().map(|a| a.cache.pages()).sum(),
+            active.iter().map(|a| a.cache.rows_stored()).sum(),
+            active.iter().map(|a| a.cache.capacity_rows()).sum(),
+        );
 
         // (4) retire finished (gen_len reached, or cut off by the context).
         let mut i = 0;
@@ -428,6 +446,10 @@ fn scheduler_loop(
                 };
                 metrics.on_complete(&resp);
                 let _ = a.req.reply.send(resp); // receiver may have gone away
+                // `a` (and its KvCache) drops here: every page the sequence
+                // held returns to the process-wide pool this round, so the
+                // freed budget — and the pages themselves — are available
+                // to the next admission.
             } else {
                 i += 1;
             }
@@ -553,13 +575,17 @@ mod tests {
 
     #[test]
     fn kv_budget_defers_but_serves_eventually() {
-        // A budget that fits roughly one sequence: requests must serialize
-        // through the KV bound, not be rejected or deadlocked.
+        // A page budget that fits exactly one sequence's projection:
+        // requests must serialize through the KV bound, not be rejected or
+        // deadlocked. (Projection: 3 prompt + 4 gen = 7 tokens across 1
+        // layer × 2 heads × K/V, each side ⌈7/page_rows⌉ pages.)
+        let w = small_weights();
+        let one_seq = KvCache::pages_for_tokens(7, &w.cfg);
         let opts = EngineOptions {
-            policy: BatchPolicy { max_kv_bytes: 300, ..Default::default() },
+            policy: BatchPolicy { max_kv_pages: one_seq, ..Default::default() },
             ..Default::default()
         };
-        let h = Engine::start(small_weights(), opts);
+        let h = Engine::start(w, opts);
         let rxs: Vec<_> = (0..4)
             .map(|i| h.submit(vec![1, 2, (i + 1) as u16], 4, 0.0, 1).unwrap())
             .collect();
@@ -569,11 +595,17 @@ mod tests {
         }
         let snap = h.shutdown();
         assert_eq!(snap.completed, 4);
-        assert!(snap.peak_kv_bytes > 0, "kv accounting must be recorded");
+        assert!(snap.peak_kv_bytes > 0, "kv byte accounting must be recorded");
+        assert!(snap.peak_kv_pages > 0, "kv page accounting must be recorded");
         assert!(
-            snap.peak_kv_bytes <= 400,
-            "budget must keep concurrent kv small: {} B",
-            snap.peak_kv_bytes
+            snap.peak_kv_pages <= one_seq,
+            "page budget must keep one sequence resident at a time: {} > {one_seq}",
+            snap.peak_kv_pages
+        );
+        assert!(
+            snap.kv_tail_utilization > 0.0 && snap.kv_tail_utilization <= 1.0,
+            "utilization sample out of range: {}",
+            snap.kv_tail_utilization
         );
     }
 

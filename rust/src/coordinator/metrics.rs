@@ -20,9 +20,16 @@ pub struct MetricsInner {
     pub per_token_us: LogHistogram,
     /// Max concurrent active (decoding) requests observed.
     pub peak_active: usize,
-    /// Max total KV-cache bytes held by active requests (pipeline-native
-    /// widths: INT8 + scales for the integer pipelines).
+    /// Max total KV-cache bytes held by active requests (allocated page
+    /// capacity at pipeline-native widths: INT8 + scales for the integer
+    /// pipelines).
     pub peak_kv_bytes: usize,
+    /// Max total KV pages held by active requests — the unit the admission
+    /// budget (`BatchPolicy::max_kv_pages`) bounds.
+    pub peak_kv_pages: usize,
+    /// Tail-page utilization (stored rows / allocated row slots) sampled at
+    /// the page peak — how much of the reserved page capacity held data.
+    pub kv_tail_utilization: f64,
 }
 
 impl Default for MetricsInner {
@@ -39,6 +46,8 @@ impl Default for MetricsInner {
             per_token_us: LogHistogram::new(),
             peak_active: 0,
             peak_kv_bytes: 0,
+            peak_kv_pages: 0,
+            kv_tail_utilization: 0.0,
         }
     }
 }
@@ -71,6 +80,19 @@ impl Metrics {
         m.peak_kv_bytes = m.peak_kv_bytes.max(bytes);
     }
 
+    /// Record the current KV page residency of all active sequences:
+    /// allocated pages, stored rows, and the row slots those pages could
+    /// hold. Utilization is sampled at the page peak.
+    pub fn on_kv_pages(&self, pages: usize, rows_stored: usize, capacity_rows: usize) {
+        let mut m = self.0.lock().unwrap();
+        if pages >= m.peak_kv_pages {
+            m.peak_kv_pages = pages;
+            if capacity_rows > 0 {
+                m.kv_tail_utilization = rows_stored as f64 / capacity_rows as f64;
+            }
+        }
+    }
+
     pub fn on_complete(&self, resp: &crate::coordinator::request::Response) {
         let mut m = self.0.lock().unwrap();
         m.completed += 1;
@@ -87,10 +109,13 @@ impl Metrics {
         self.0.lock().unwrap().prefill_tokens += n as u64;
     }
 
-    /// Snapshot for reporting.
+    /// Snapshot for reporting. Page-pool counters come from the
+    /// process-wide pools ([`crate::attention::page_pool_stats`]) — they
+    /// are monotone process totals, not per-engine deltas.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.0.lock().unwrap();
         let elapsed_s = m.started.elapsed().as_secs_f64().max(1e-9);
+        let (kv_pages_allocated, kv_pages_recycled) = crate::attention::page_pool_stats();
         MetricsSnapshot {
             submitted: m.submitted,
             rejected: m.rejected,
@@ -107,6 +132,10 @@ impl Metrics {
             per_token_mean_us: m.per_token_us.mean_us(),
             peak_active: m.peak_active,
             peak_kv_bytes: m.peak_kv_bytes,
+            peak_kv_pages: m.peak_kv_pages,
+            kv_tail_utilization: m.kv_tail_utilization,
+            kv_pages_allocated,
+            kv_pages_recycled,
         }
     }
 }
@@ -129,6 +158,14 @@ pub struct MetricsSnapshot {
     pub per_token_mean_us: f64,
     pub peak_active: usize,
     pub peak_kv_bytes: usize,
+    /// Peak concurrent KV pages across active requests.
+    pub peak_kv_pages: usize,
+    /// Stored rows / allocated row slots at the page peak.
+    pub kv_tail_utilization: f64,
+    /// Process-wide pages allocated fresh from the allocator (monotone).
+    pub kv_pages_allocated: u64,
+    /// Process-wide pages recycled from the pool free list (monotone).
+    pub kv_pages_recycled: u64,
 }
 
 impl MetricsSnapshot {
@@ -136,7 +173,7 @@ impl MetricsSnapshot {
         format!(
             "requests: {} ok / {} rejected / {} submitted | tokens: {} prefill + {} decode \
              | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms | peak batch {} \
-             | peak kv {:.1} KiB",
+             | peak kv {:.1} KiB ({} pages, {:.0}% util) | pool {} alloc / {} recycled",
             self.completed,
             self.rejected,
             self.submitted,
@@ -148,6 +185,10 @@ impl MetricsSnapshot {
             self.e2e_p50_us / 1e3,
             self.peak_active,
             self.peak_kv_bytes as f64 / 1024.0,
+            self.peak_kv_pages,
+            100.0 * self.kv_tail_utilization,
+            self.kv_pages_allocated,
+            self.kv_pages_recycled,
         )
     }
 }
@@ -176,6 +217,9 @@ mod tests {
             total_us: 400,
         };
         m.on_complete(&r);
+        m.on_kv_bytes(2048);
+        m.on_kv_pages(10, 18, 20);
+        m.on_kv_pages(4, 4, 8); // below peak: utilization sample kept
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected, 1);
@@ -183,7 +227,13 @@ mod tests {
         assert_eq!(s.prefill_tokens, 100);
         assert_eq!(s.decode_tokens, 3);
         assert_eq!(s.peak_active, 3);
+        assert_eq!(s.peak_kv_bytes, 2048);
+        assert_eq!(s.peak_kv_pages, 10);
+        assert!((s.kv_tail_utilization - 0.9).abs() < 1e-12);
         assert!(s.ttft_p50_us > 0.0);
-        assert!(s.render().contains("requests: 1 ok"));
+        let rendered = s.render();
+        assert!(rendered.contains("requests: 1 ok"));
+        assert!(rendered.contains("10 pages"), "{rendered}");
+        assert!(rendered.contains("recycled"), "{rendered}");
     }
 }

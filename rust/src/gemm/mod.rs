@@ -32,6 +32,23 @@
 //! the threshold drops by ~1.5 orders of magnitude, so grouped int8 decode
 //! launches parallelize far below the old 2^20 bar.
 //!
+//! ## Paged resident operands
+//!
+//! The stateful attention path's K̂/V̂ history lives in fixed-size pages
+//! ([`crate::attention::state::PagedRows`]), not one contiguous buffer. The
+//! `*_paged` kernels take the resident operand as a **page list**
+//! (`&[&[T]]`, each page a contiguous run of whole `k`- or `d`-element
+//! rows) and walk it in order — contiguity is never required and nothing is
+//! ever copied into a flat staging buffer. Paging is pure layout: each
+//! output element is still the same per-row dot product (or the same
+//! ascending-`j` SAXPY accumulation) the contiguous `*_slices` kernels
+//! compute, evaluated by the same row kernel per page segment, so paged
+//! output is **byte-equal** to the contiguous kernels at every page size
+//! (integer kernels are exact; the float kernels run identical operations
+//! in identical order). The AVX-512 i8 row kernel applies per page — a page
+//! is a contiguous `rows×k` block, so the 4-wide N-blocking survives paging
+//! intact.
+//!
 //! ## Grouped (batched multi-sequence decode) kernels
 //!
 //! The serving engine's decode phase issues one `1×L_b` similarity product
@@ -39,14 +56,15 @@
 //! row cannot be split across threads (the `par_*` drivers partition output
 //! *rows*, and there is only one), so at batch B the pre-batching engine ran
 //! B memory-bound kernel launches back to back. The `*_grouped` drivers take
-//! B independent [`GemmGroup`]s — each with its own resident KV buffer and
-//! per-group context length `L_b` — and run them in **one** pool launch.
-//! Workers claim groups one at a time through the launch's atomic cursor
-//! ([`ParallelPool::parallel_groups`]), so ragged batches load-balance
-//! dynamically instead of relying on a static strided assignment. Worker
-//! count and claim order never affect results: every group owns a disjoint
-//! output slice and is computed by the same row kernel the sequential path
-//! uses.
+//! B independent [`GemmGroup`]s — each with its own **page-segmented**
+//! resident KV operand and per-group context length `L_b` — and run them in
+//! **one** pool launch. Workers claim whole groups (page-aligned spans — a
+//! sequence's entire page list) one at a time through the launch's atomic
+//! cursor ([`ParallelPool::parallel_groups`]), so ragged batches
+//! load-balance dynamically instead of relying on a static strided
+//! assignment. Worker count and claim order never affect results: every
+//! group owns a disjoint output slice and is computed by the same paged row
+//! kernel the sequential path uses.
 
 use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
 use crate::util::f16::F16;
@@ -648,19 +666,302 @@ pub fn gemm_f16_notrans(p: &[F16], v: &[F16], c: &mut [f32], m: usize, l: usize,
 }
 
 // ---------------------------------------------------------------------------
+// Paged kernels — resident operand as a page list (block table)
+
+/// Total rows across a page list whose rows are `width` elements wide.
+/// Every page must hold whole rows (the [`crate::attention::state::PagedRows`]
+/// contract: rows never span pages).
+fn paged_rows<T>(pages: &[&[T]], width: usize) -> usize {
+    debug_assert!(pages.iter().all(|p| p.len() % width == 0), "partial row in page");
+    pages.iter().map(|p| p.len() / width).sum()
+}
+
+fn gemm_i8_paged_rows(
+    a: &[i8],
+    kp: &[&[i8]],
+    c: &mut [i32],
+    n: usize,
+    k: usize,
+    r0: usize,
+    r1: usize,
+) {
+    for i in r0..r1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut off = 0;
+        for page in kp {
+            let np = page.len() / k;
+            // A page is a contiguous np×k block: the blocked (AVX-512 where
+            // available) row kernel applies to it unchanged.
+            gemm_i8_rows(arow, page, &mut crow[off..off + np], 1, np, k, 0, 1);
+            off += np;
+        }
+    }
+}
+
+/// `Q̂·K̂ᵀ` against paged resident keys: `kp` is the page list (each page
+/// `rows×k` keys-as-rows). Byte-equal to [`gemm_i8_slices`] over the
+/// concatenated pages (integer dot products are exact and per-row).
+pub fn gemm_i8_paged(a: &[i8], kp: &[&[i8]], c: &mut [i32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(paged_rows(kp, k), n, "K̂ page rows");
+    assert_eq!(c.len(), m * n, "C shape");
+    gemm_i8_paged_rows(a, kp, c, n, k, 0, m);
+}
+
+/// Pool-parallel [`gemm_i8_paged`]: output (query) rows split across
+/// workers; every worker walks the shared read-only page list.
+pub fn par_gemm_i8_paged(
+    a: &[i8],
+    kp: &[&[i8]],
+    c: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    pool: &ParallelPool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(paged_rows(kp, k), n, "K̂ page rows");
+    assert_eq!(c.len(), m * n);
+    let work = m * n * k;
+    if pool.workers_for(work) <= 1 {
+        return gemm_i8_paged_rows(a, kp, c, n, k, 0, m);
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    pool.parallel_for(m, work, |r0, r1| {
+        // Each chunk writes only rows [r0, r1): disjoint regions of C.
+        let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
+        gemm_i8_paged_rows(a, kp, c_full, n, k, r0, r1);
+    });
+}
+
+fn gemm_f32_paged_rows(
+    a: &[f32],
+    kp: &[&[f32]],
+    c: &mut [f32],
+    n: usize,
+    k: usize,
+    r0: usize,
+    r1: usize,
+) {
+    for i in r0..r1 {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut off = 0;
+        for page in kp {
+            let np = page.len() / k;
+            for (j, out) in crow[off..off + np].iter_mut().enumerate() {
+                *out = dot_f32(arow, &page[j * k..(j + 1) * k]);
+            }
+            off += np;
+        }
+    }
+}
+
+/// `Q·Kᵀ` against paged resident keys; byte-equal to [`gemm_f32_slices`]
+/// over the concatenated pages (same [`dot_f32`] per output element).
+pub fn gemm_f32_paged(a: &[f32], kp: &[&[f32]], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(paged_rows(kp, k), n, "K page rows");
+    assert_eq!(c.len(), m * n, "C shape");
+    gemm_f32_paged_rows(a, kp, c, n, k, 0, m);
+}
+
+/// Pool-parallel [`gemm_f32_paged`].
+pub fn par_gemm_f32_paged(
+    a: &[f32],
+    kp: &[&[f32]],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    pool: &ParallelPool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(paged_rows(kp, k), n, "K page rows");
+    assert_eq!(c.len(), m * n);
+    let work = m * n * k;
+    if pool.workers_for(work) <= 1 {
+        return gemm_f32_paged_rows(a, kp, c, n, k, 0, m);
+    }
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    pool.parallel_for(m, work, |r0, r1| {
+        let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
+        gemm_f32_paged_rows(a, kp, c_full, n, k, r0, r1);
+    });
+}
+
+/// FP16-storage `Q·Kᵀ` against paged resident keys. Decodes A once and each
+/// K page once per call (amortized across all M query rows, like
+/// [`gemm_f16`]'s whole-operand decode); the per-element decode and the
+/// per-row [`dot_f32`] are identical to the contiguous path, so the output
+/// is byte-equal to [`gemm_f16`] over the concatenated pages.
+pub fn gemm_f16_paged(a: &[F16], kp: &[&[F16]], m: usize, n: usize, k: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(paged_rows(kp, k), n, "K page rows");
+    assert_eq!(c.len(), m * n, "C shape");
+    let mut adec = vec![0f32; m * k];
+    for (d, &h) in adec.iter_mut().zip(a) {
+        *d = h.to_f32();
+    }
+    let max_page = kp.iter().map(|p| p.len()).max().unwrap_or(0);
+    let mut bdec = vec![0f32; max_page];
+    let mut off = 0;
+    for page in kp {
+        let np = page.len() / k;
+        for (d, &h) in bdec[..page.len()].iter_mut().zip(*page) {
+            *d = h.to_f32();
+        }
+        for i in 0..m {
+            let arow = &adec[i * k..(i + 1) * k];
+            let crow = &mut c[i * n + off..i * n + off + np];
+            for (j, out) in crow.iter_mut().enumerate() {
+                *out = dot_f32(arow, &bdec[j * k..(j + 1) * k]);
+            }
+        }
+        off += np;
+    }
+}
+
+/// `P̂·V̂` aggregation over paged resident values (`vp` pages of `rows×d`
+/// value rows, natural layout). Zero-skipping like [`gemm_u8i8_slices`] and
+/// byte-equal to it over the concatenated pages: the ascending-`j`
+/// accumulation order is preserved across page boundaries.
+pub fn gemm_u8i8_paged(p: &[u8], vp: &[&[i8]], c: &mut [i32], m: usize, l: usize, d: usize) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(paged_rows(vp, d), l, "V̂ page rows");
+    assert_eq!(c.len(), m * d, "C shape");
+    for i in 0..m {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0);
+        let mut j = 0;
+        for page in vp {
+            for vrow in page.chunks_exact(d) {
+                let pij = prow[j];
+                j += 1;
+                if pij == 0 {
+                    continue;
+                }
+                let pv = pij as i32;
+                for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                    *acc += pv * (vx as i32);
+                }
+            }
+        }
+    }
+}
+
+/// Signed-P̂ aggregation over paged resident values (Quant-Only's PV side);
+/// byte-equal to [`gemm_i8_notrans_slices`] over the concatenated pages.
+pub fn gemm_i8_notrans_paged(p: &[i8], vp: &[&[i8]], c: &mut [i32], m: usize, l: usize, d: usize) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(paged_rows(vp, d), l, "V̂ page rows");
+    assert_eq!(c.len(), m * d, "C shape");
+    for i in 0..m {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0);
+        let mut j = 0;
+        for page in vp {
+            for vrow in page.chunks_exact(d) {
+                let pij = prow[j];
+                j += 1;
+                if pij == 0 {
+                    continue;
+                }
+                let pv = pij as i32;
+                for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                    *acc += pv * (vx as i32);
+                }
+            }
+        }
+    }
+}
+
+/// `P·V` over paged resident f32 values (natural layout, zero-skipping);
+/// byte-equal to [`gemm_f32_notrans_slices`] over the concatenated pages
+/// (same accumulation order).
+pub fn gemm_f32_notrans_paged(
+    p: &[f32],
+    vp: &[&[f32]],
+    c: &mut [f32],
+    m: usize,
+    l: usize,
+    d: usize,
+) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(paged_rows(vp, d), l, "V page rows");
+    assert_eq!(c.len(), m * d, "C shape");
+    for i in 0..m {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0.0);
+        let mut j = 0;
+        for page in vp {
+            for vrow in page.chunks_exact(d) {
+                let pij = prow[j];
+                j += 1;
+                if pij == 0.0 {
+                    continue;
+                }
+                for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                    *acc += pij * vx;
+                }
+            }
+        }
+    }
+}
+
+/// `P·V` over paged resident f16 values; byte-equal to
+/// [`gemm_f16_notrans`] over the concatenated pages.
+pub fn gemm_f16_notrans_paged(
+    p: &[F16],
+    vp: &[&[F16]],
+    c: &mut [f32],
+    m: usize,
+    l: usize,
+    d: usize,
+) {
+    assert_eq!(p.len(), m * l, "P shape");
+    assert_eq!(paged_rows(vp, d), l, "V page rows");
+    assert_eq!(c.len(), m * d, "C shape");
+    for i in 0..m {
+        let prow = &p[i * l..(i + 1) * l];
+        let crow = &mut c[i * d..(i + 1) * d];
+        crow.fill(0.0);
+        let mut j = 0;
+        for page in vp {
+            for vrow in page.chunks_exact(d) {
+                let pf = prow[j].to_f32();
+                j += 1;
+                if pf == 0.0 {
+                    continue;
+                }
+                for (acc, &vx) in crow.iter_mut().zip(vrow) {
+                    *acc += pf * vx.to_f32();
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Grouped (batched multi-sequence decode) kernels
 
 /// One sequence's slice of a grouped decode GEMM round: its 1-row left
 /// operand (query row on the QK side, probability row on the PV side), its
-/// resident KV buffer, and its output row. The per-group context length is
-/// implied by the slice lengths (`out.len()` keys on the QK side, `a.len()`
-/// positions on the PV side), so a ragged batch needs no padding.
+/// **page-segmented** resident KV operand, and its output row. The per-group
+/// context length is implied by the slice lengths (`out.len()` keys on the
+/// QK side, `a.len()` positions on the PV side), so a ragged batch needs no
+/// padding.
 pub struct GemmGroup<'a, A, B, C> {
     /// 1-row left operand.
     pub a: &'a [A],
-    /// Resident right operand (`n×k` keys-as-rows for QK, `l×d` value rows
-    /// for PV — never copied or transposed).
-    pub b: &'a [B],
+    /// Resident right operand as a page list (each page a contiguous run of
+    /// whole rows: `rows×k` keys-as-rows for QK, `rows×d` value rows for PV
+    /// — never copied, never transposed, never flattened).
+    pub b: &'a [&'a [B]],
     /// Output row (`n` logits for QK, `d` accumulators for PV).
     pub out: &'a mut [C],
 }
@@ -674,22 +975,24 @@ pub type GroupF32<'a> = GemmGroup<'a, f32, f32, f32>;
 /// f16-storage group (FP16 baseline pipeline).
 pub type GroupF16<'a> = GemmGroup<'a, F16, F16, f32>;
 
-/// Total resident-operand elements across a grouped launch — proportional
-/// to its MAC count on both the QK (`n·k` keys) and PV (`l·d` values) sides.
-/// This is the work estimate the pool's grain policy sees; whether (and how
-/// wide) the launch parallelizes is decided by [`ParallelPool::workers_for`]
-/// — one env-tunable threshold instead of the old per-dtype `PAR_GRAIN_*`
-/// constants.
+/// Total resident-operand elements across a grouped launch (summed over
+/// every group's pages) — proportional to its MAC count on both the QK
+/// (`n·k` keys) and PV (`l·d` values) sides. This is the work estimate the
+/// pool's grain policy sees; whether (and how wide) the launch parallelizes
+/// is decided by [`ParallelPool::workers_for`] — one env-tunable threshold
+/// instead of the old per-dtype `PAR_GRAIN_*` constants.
 fn grouped_work<A, B, C>(groups: &[GemmGroup<A, B, C>]) -> usize {
-    groups.iter().map(|g| g.b.len()).sum()
+    groups
+        .iter()
+        .map(|g| g.b.iter().map(|p| p.len()).sum::<usize>())
+        .sum()
 }
 
 #[inline]
 fn gemm_i8_group(g: &mut GroupI8, k: usize) {
     let n = g.out.len();
     assert_eq!(g.a.len(), k, "query row length");
-    assert_eq!(g.b.len(), n * k, "K̂ buffer shape");
-    gemm_i8_rows(g.a, g.b, g.out, 1, n, k, 0, 1);
+    gemm_i8_paged(g.a, g.b, g.out, 1, n, k);
 }
 
 /// Grouped `Q̂·K̂ᵀ` for batched decode: each group is one sequence's
@@ -710,9 +1013,8 @@ pub fn par_gemm_i8_grouped(groups: &mut [GroupI8], k: usize, pool: &ParallelPool
 #[inline]
 fn gemm_u8i8_group(g: &mut GroupU8I8, d: usize) {
     let l = g.a.len();
-    assert_eq!(g.b.len(), l * d, "V̂ buffer shape");
     assert_eq!(g.out.len(), d, "output row length");
-    gemm_u8i8_rows(g.a, g.b, g.out, l, d, 0, 1);
+    gemm_u8i8_paged(g.a, g.b, g.out, 1, l, d);
 }
 
 /// Grouped `P̂·V̂` for batched decode: each group aggregates one sequence's
@@ -733,9 +1035,8 @@ pub fn par_gemm_u8i8_grouped(groups: &mut [GroupU8I8], d: usize, pool: &Parallel
 #[inline]
 fn gemm_i8_notrans_group(g: &mut GroupI8, d: usize) {
     let l = g.a.len();
-    assert_eq!(g.b.len(), l * d, "V̂ buffer shape");
     assert_eq!(g.out.len(), d, "output row length");
-    gemm_i8_notrans_slices(g.a, g.b, g.out, 1, l, d);
+    gemm_i8_notrans_paged(g.a, g.b, g.out, 1, l, d);
 }
 
 /// Grouped signed-P̂ aggregation (Quant-Only's batched PV side).
@@ -751,40 +1052,37 @@ pub fn par_gemm_i8_notrans_grouped(groups: &mut [GroupI8], d: usize, pool: &Para
     pool.parallel_groups(groups, work, |g| gemm_i8_notrans_group(g, d));
 }
 
-/// Grouped f32 `Q·Kᵀ` (per-group `1×L_b` against resident keys); bit-exact
-/// with per-group [`gemm_f32_slices`] calls — the grouping only moves work
-/// between workers, never within a dot product.
+/// Grouped f32 `Q·Kᵀ` (per-group `1×L_b` against paged resident keys);
+/// bit-exact with per-group [`gemm_f32_paged`] calls — the grouping only
+/// moves work between workers, never within a dot product.
 pub fn par_gemm_f32_grouped(groups: &mut [GroupF32], k: usize, pool: &ParallelPool) {
     let work = grouped_work(groups);
     pool.parallel_groups(groups, work, |g| {
         let n = g.out.len();
         assert_eq!(g.a.len(), k, "query row length");
-        assert_eq!(g.b.len(), n * k, "K buffer shape");
-        gemm_f32_slices_rows(g.a, g.b, g.out, n, k, 0, 1);
+        gemm_f32_paged(g.a, g.b, g.out, 1, n, k);
     });
 }
 
 /// Grouped f32 `P·V` with V in natural row layout (zero-skipping, like
-/// [`gemm_f32_notrans_slices`]).
+/// [`gemm_f32_notrans_paged`]).
 pub fn par_gemm_f32_notrans_grouped(groups: &mut [GroupF32], d: usize, pool: &ParallelPool) {
     let work = grouped_work(groups);
     pool.parallel_groups(groups, work, |g| {
         let l = g.a.len();
-        assert_eq!(g.b.len(), l * d, "V buffer shape");
         assert_eq!(g.out.len(), d, "output row length");
-        gemm_f32_notrans_slices(g.a, g.b, g.out, 1, l, d);
+        gemm_f32_notrans_paged(g.a, g.b, g.out, 1, l, d);
     });
 }
 
-/// Grouped f16-storage `Q·Kᵀ`: per group, exactly one [`gemm_f16`] call
-/// (same decode-then-dot dataflow as the sequential path).
+/// Grouped f16-storage `Q·Kᵀ`: per group, exactly one [`gemm_f16_paged`]
+/// call (same decode-then-dot dataflow as the sequential path).
 pub fn par_gemm_f16_grouped(groups: &mut [GroupF16], k: usize, pool: &ParallelPool) {
     let work = grouped_work(groups);
     pool.parallel_groups(groups, work, |g| {
         let n = g.out.len();
         assert_eq!(g.a.len(), k, "query row length");
-        assert_eq!(g.b.len(), n * k, "K buffer shape");
-        gemm_f16(g.a, g.b, 1, n, k, g.out);
+        gemm_f16_paged(g.a, g.b, 1, n, k, g.out);
     });
 }
 
@@ -793,9 +1091,8 @@ pub fn par_gemm_f16_notrans_grouped(groups: &mut [GroupF16], d: usize, pool: &Pa
     let work = grouped_work(groups);
     pool.parallel_groups(groups, work, |g| {
         let l = g.a.len();
-        assert_eq!(g.b.len(), l * d, "V buffer shape");
         assert_eq!(g.out.len(), d, "output row length");
-        gemm_f16_notrans(g.a, g.b, g.out, 1, l, d);
+        gemm_f16_notrans_paged(g.a, g.b, g.out, 1, l, d);
     });
 }
 
@@ -841,6 +1138,18 @@ mod tests {
     /// persistent workers regardless of how small the test shapes are.
     fn tpool(n: usize) -> ParallelPool {
         ParallelPool::with_grain(n, 1)
+    }
+
+    /// Split a contiguous `rows×width` buffer into pages of at most
+    /// `rows_per_page` whole rows — the layout `PagedRows` hands the
+    /// kernels.
+    fn split_pages<T>(buf: &[T], width: usize, rows_per_page: usize) -> Vec<&[T]> {
+        assert_eq!(buf.len() % width, 0);
+        if buf.is_empty() {
+            return Vec::new();
+        }
+        let rows = buf.len() / width;
+        buf.chunks(rows_per_page.clamp(1, rows) * width).collect()
     }
 
     fn rand_f32(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
@@ -1085,7 +1394,8 @@ mod tests {
     #[test]
     fn grouped_i8_matches_per_group_slice_kernels() {
         // Ragged batch: per-group context lengths differ; grouped output
-        // must equal B independent slice-kernel calls, serial and pooled.
+        // must equal B independent slice-kernel calls, serial and pooled,
+        // for single-page ("contiguous") and page-split resident operands.
         let mut rng = Pcg64::seed_from_u64(20);
         let k = 48;
         let ns = [1usize, 7, 33, 12, 64];
@@ -1098,27 +1408,108 @@ mod tests {
             want.push(c);
         }
         // Serial driver, then the pooled one at several widths (the dynamic
-        // cursor must hand out every group exactly once).
-        for threads in [0, 1, 2, 3, 16] {
-            let pool = tpool(threads.max(1));
-            let mut outs: Vec<Vec<i32>> = ns.iter().map(|&n| vec![0i32; n]).collect();
-            let mut groups: Vec<GroupI8> = qs
-                .iter()
-                .zip(&kvs)
-                .zip(outs.iter_mut())
-                .map(|((q, kv), out)| GroupI8 {
-                    a: q.as_slice(),
-                    b: kv.as_slice(),
-                    out: out.as_mut_slice(),
-                })
-                .collect();
-            if threads == 0 {
-                gemm_i8_grouped(&mut groups, k);
-            } else {
-                par_gemm_i8_grouped(&mut groups, k, &pool);
+        // cursor must hand out every group exactly once); per-group page
+        // sizes vary within a batch (real batches mix state geometries).
+        for page_rows in [usize::MAX, 1, 2, 5] {
+            for threads in [0, 1, 2, 3, 16] {
+                let pool = tpool(threads.max(1));
+                let pages: Vec<Vec<&[i8]>> = kvs
+                    .iter()
+                    .map(|kv| split_pages(kv.as_slice(), k, page_rows))
+                    .collect();
+                let mut outs: Vec<Vec<i32>> = ns.iter().map(|&n| vec![0i32; n]).collect();
+                let mut groups: Vec<GroupI8> = qs
+                    .iter()
+                    .zip(&pages)
+                    .zip(outs.iter_mut())
+                    .map(|((q, kp), out)| GroupI8 {
+                        a: q.as_slice(),
+                        b: kp.as_slice(),
+                        out: out.as_mut_slice(),
+                    })
+                    .collect();
+                if threads == 0 {
+                    gemm_i8_grouped(&mut groups, k);
+                } else {
+                    par_gemm_i8_grouped(&mut groups, k, &pool);
+                }
+                drop(groups);
+                assert_eq!(outs, want, "threads={threads} page_rows={page_rows}");
             }
-            drop(groups);
-            assert_eq!(outs, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn paged_kernels_byte_match_slice_kernels_across_page_splits() {
+        // The paged-residency contract: every *_paged kernel is byte-equal
+        // to its contiguous *_slices sibling over the concatenated pages,
+        // at page sizes that land mid-row-run and at the degenerate 1-row
+        // page. Exact equality, floats included (same ops, same order).
+        let mut rng = Pcg64::seed_from_u64(55);
+        let (m, n, k, d) = (5, 23, 32, 12);
+        let ai = rand_i8(&mut rng, m, k);
+        let ki = rand_i8(&mut rng, n, k);
+        let af = rand_f32(&mut rng, m, k);
+        let kf = rand_f32(&mut rng, n, k);
+        let pu = rand_u8(&mut rng, m, n);
+        let vi = rand_i8(&mut rng, n, d);
+        let pf = rand_f32(&mut rng, m, n);
+        let vf = rand_f32(&mut rng, n, d);
+        let ah: Vec<F16> = af.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        let kh: Vec<F16> = kf.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        let ph: Vec<F16> = pf.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        let vh: Vec<F16> = vf.as_slice().iter().map(|&x| F16::from_f32(x)).collect();
+        // Contiguous oracles.
+        let mut ci_ref = vec![0i32; m * n];
+        gemm_i8_slices(ai.as_slice(), ki.as_slice(), &mut ci_ref, m, n, k);
+        let mut cf_ref = vec![0f32; m * n];
+        gemm_f32_slices(af.as_slice(), kf.as_slice(), &mut cf_ref, m, n, k);
+        let mut ch_ref = vec![0f32; m * n];
+        gemm_f16(&ah, &kh, m, n, k, &mut ch_ref);
+        let mut cu_ref = vec![0i32; m * d];
+        gemm_u8i8_slices(pu.as_slice(), vi.as_slice(), &mut cu_ref, m, n, d);
+        let pi: MatI8 = pu.map(|x| (x / 2) as i8);
+        let mut cn_ref = vec![0i32; m * d];
+        gemm_i8_notrans_slices(pi.as_slice(), vi.as_slice(), &mut cn_ref, m, n, d);
+        let mut cfn_ref = vec![0f32; m * d];
+        gemm_f32_notrans_slices(pf.as_slice(), vf.as_slice(), &mut cfn_ref, m, n, d);
+        let mut chn_ref = vec![0f32; m * d];
+        gemm_f16_notrans(&ph, &vh, &mut chn_ref, m, n, d);
+        let pool = tpool(3);
+        for page_rows in [1usize, 2, 3, 7, 64] {
+            let kip = split_pages(ki.as_slice(), k, page_rows);
+            let kfp = split_pages(kf.as_slice(), k, page_rows);
+            let khp = split_pages(&kh, k, page_rows);
+            let vip = split_pages(vi.as_slice(), d, page_rows);
+            let vfp = split_pages(vf.as_slice(), d, page_rows);
+            let vhp = split_pages(&vh, d, page_rows);
+            let mut ci = vec![0i32; m * n];
+            gemm_i8_paged(ai.as_slice(), &kip, &mut ci, m, n, k);
+            assert_eq!(ci, ci_ref, "i8 QK @ {page_rows}");
+            let mut ci_par = vec![0i32; m * n];
+            par_gemm_i8_paged(ai.as_slice(), &kip, &mut ci_par, m, n, k, &pool);
+            assert_eq!(ci_par, ci_ref, "par i8 QK @ {page_rows}");
+            let mut cf = vec![0f32; m * n];
+            gemm_f32_paged(af.as_slice(), &kfp, &mut cf, m, n, k);
+            assert_eq!(cf, cf_ref, "f32 QK @ {page_rows}");
+            let mut cf_par = vec![0f32; m * n];
+            par_gemm_f32_paged(af.as_slice(), &kfp, &mut cf_par, m, n, k, &pool);
+            assert_eq!(cf_par, cf_ref, "par f32 QK @ {page_rows}");
+            let mut ch = vec![0f32; m * n];
+            gemm_f16_paged(&ah, &khp, m, n, k, &mut ch);
+            assert_eq!(ch, ch_ref, "f16 QK @ {page_rows}");
+            let mut cu = vec![0i32; m * d];
+            gemm_u8i8_paged(pu.as_slice(), &vip, &mut cu, m, n, d);
+            assert_eq!(cu, cu_ref, "u8i8 PV @ {page_rows}");
+            let mut cn = vec![0i32; m * d];
+            gemm_i8_notrans_paged(pi.as_slice(), &vip, &mut cn, m, n, d);
+            assert_eq!(cn, cn_ref, "i8 notrans PV @ {page_rows}");
+            let mut cfn = vec![0f32; m * d];
+            gemm_f32_notrans_paged(pf.as_slice(), &vfp, &mut cfn, m, n, d);
+            assert_eq!(cfn, cfn_ref, "f32 PV @ {page_rows}");
+            let mut chn = vec![0f32; m * d];
+            gemm_f16_notrans_paged(&ph, &vhp, &mut chn, m, n, d);
+            assert_eq!(chn, chn_ref, "f16 PV @ {page_rows}");
         }
     }
 
@@ -1136,27 +1527,34 @@ mod tests {
             gemm_u8i8_slices(p.as_slice(), v.as_slice(), &mut c, 1, l, d);
             want.push(c);
         }
-        // Serial driver first, then the pooled one.
-        for threads in [0usize, 2] {
-            let pool = tpool(threads.max(1));
-            let mut outs: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
-            let mut groups: Vec<GroupU8I8> = ps
-                .iter()
-                .zip(&vs)
-                .zip(outs.iter_mut())
-                .map(|((p, v), out)| GroupU8I8 {
-                    a: p.as_slice(),
-                    b: v.as_slice(),
-                    out: out.as_mut_slice(),
-                })
-                .collect();
-            if threads == 0 {
-                gemm_u8i8_grouped(&mut groups, d);
-            } else {
-                par_gemm_u8i8_grouped(&mut groups, d, &pool);
+        // Serial driver first, then the pooled one; contiguous (one page)
+        // and page-split resident values.
+        for page_rows in [usize::MAX, 2] {
+            for threads in [0usize, 2] {
+                let pool = tpool(threads.max(1));
+                let pages: Vec<Vec<&[i8]>> = vs
+                    .iter()
+                    .map(|v| split_pages(v.as_slice(), d, page_rows))
+                    .collect();
+                let mut outs: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
+                let mut groups: Vec<GroupU8I8> = ps
+                    .iter()
+                    .zip(&pages)
+                    .zip(outs.iter_mut())
+                    .map(|((p, vp), out)| GroupU8I8 {
+                        a: p.as_slice(),
+                        b: vp.as_slice(),
+                        out: out.as_mut_slice(),
+                    })
+                    .collect();
+                if threads == 0 {
+                    gemm_u8i8_grouped(&mut groups, d);
+                } else {
+                    par_gemm_u8i8_grouped(&mut groups, d, &pool);
+                }
+                drop(groups);
+                assert_eq!(outs, want, "threads={threads} page_rows={page_rows}");
             }
-            drop(groups);
-            assert_eq!(outs, want, "threads={threads}");
         }
         // Signed i8 probabilities (Quant-Only).
         let pis: Vec<MatI8> = ps.iter().map(|p| p.map(|x| (x / 2) as i8)).collect();
@@ -1166,26 +1564,32 @@ mod tests {
             gemm_i8_notrans_slices(p.as_slice(), v.as_slice(), &mut c, 1, l, d);
             want_i.push(c);
         }
-        for threads in [0usize, 3] {
-            let pool = tpool(threads.max(1));
-            let mut outs_i: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
-            let mut groups_i: Vec<GroupI8> = pis
-                .iter()
-                .zip(&vs)
-                .zip(outs_i.iter_mut())
-                .map(|((p, v), out)| GroupI8 {
-                    a: p.as_slice(),
-                    b: v.as_slice(),
-                    out: out.as_mut_slice(),
-                })
-                .collect();
-            if threads == 0 {
-                gemm_i8_notrans_grouped(&mut groups_i, d);
-            } else {
-                par_gemm_i8_notrans_grouped(&mut groups_i, d, &pool);
+        for page_rows in [usize::MAX, 3] {
+            for threads in [0usize, 3] {
+                let pool = tpool(threads.max(1));
+                let pages: Vec<Vec<&[i8]>> = vs
+                    .iter()
+                    .map(|v| split_pages(v.as_slice(), d, page_rows))
+                    .collect();
+                let mut outs_i: Vec<Vec<i32>> = ls.iter().map(|_| vec![0i32; d]).collect();
+                let mut groups_i: Vec<GroupI8> = pis
+                    .iter()
+                    .zip(&pages)
+                    .zip(outs_i.iter_mut())
+                    .map(|((p, vp), out)| GroupI8 {
+                        a: p.as_slice(),
+                        b: vp.as_slice(),
+                        out: out.as_mut_slice(),
+                    })
+                    .collect();
+                if threads == 0 {
+                    gemm_i8_notrans_grouped(&mut groups_i, d);
+                } else {
+                    par_gemm_i8_notrans_grouped(&mut groups_i, d, &pool);
+                }
+                drop(groups_i);
+                assert_eq!(outs_i, want_i, "threads={threads} page_rows={page_rows}");
             }
-            drop(groups_i);
-            assert_eq!(outs_i, want_i, "threads={threads}");
         }
     }
 
@@ -1204,13 +1608,17 @@ mod tests {
             want.push(c);
         }
         let mut outs: Vec<Vec<f32>> = ns.iter().map(|&n| vec![0f32; n]).collect();
+        let k_pages: Vec<Vec<&[f32]>> = ks
+            .iter()
+            .map(|kk| split_pages(kk.as_slice(), k, 2))
+            .collect();
         let mut groups: Vec<GroupF32> = qs
             .iter()
-            .zip(&ks)
+            .zip(&k_pages)
             .zip(outs.iter_mut())
-            .map(|((q, kk), out)| GroupF32 {
+            .map(|((q, kp), out)| GroupF32 {
                 a: q.as_slice(),
-                b: kk.as_slice(),
+                b: kp.as_slice(),
                 out: out.as_mut_slice(),
             })
             .collect();
@@ -1238,13 +1646,14 @@ mod tests {
             want_h.push(c);
         }
         let mut outs_h: Vec<Vec<f32>> = ls.iter().map(|_| vec![0f32; d]).collect();
+        let v_pages: Vec<Vec<&[F16]>> = vh.iter().map(|v| split_pages(v, d, 3)).collect();
         let mut groups_h: Vec<GroupF16> = ph
             .iter()
-            .zip(&vh)
+            .zip(&v_pages)
             .zip(outs_h.iter_mut())
-            .map(|((p, v), out)| GroupF16 {
+            .map(|((p, vp), out)| GroupF16 {
                 a: p.as_slice(),
-                b: v.as_slice(),
+                b: vp.as_slice(),
                 out: out.as_mut_slice(),
             })
             .collect();
@@ -1307,14 +1716,15 @@ mod tests {
         }
         for threads in [1usize, 2, 8] {
             let pool = tpool(threads);
+            let k_pages: Vec<Vec<&[F16]>> = kh.iter().map(|kk| split_pages(kk, k, 4)).collect();
             let mut outs: Vec<Vec<f32>> = ns.iter().map(|&nn| vec![0f32; nn]).collect();
             let mut groups: Vec<GroupF16> = qh
                 .iter()
-                .zip(&kh)
+                .zip(&k_pages)
                 .zip(outs.iter_mut())
-                .map(|((q, kk), out)| GroupF16 {
+                .map(|((q, kp), out)| GroupF16 {
                     a: q.as_slice(),
-                    b: kk.as_slice(),
+                    b: kp.as_slice(),
                     out: out.as_mut_slice(),
                 })
                 .collect();

@@ -245,8 +245,36 @@ pub struct DecodeRow {
     /// integer pipelines this is O(1) in `ctx` — the step quantizes only the
     /// new K/V row and the 1-row query, never the resident history.
     pub quantize_ns_per_tok: f64,
-    /// KV state footprint (native widths) at the end of the run.
+    /// KV state footprint (allocated page capacity, native widths) at the
+    /// end of the run.
     pub kv_bytes: usize,
+    /// Pages the state holds at the end of the run.
+    pub kv_pages: usize,
+    /// Bytes the pre-paging contiguous layout would have memcpy'd growing
+    /// this run's K+V `Vec`s (amortized doubling over the same append
+    /// schedule: one prefill block + per-token rows). The paged layout's
+    /// append-path copy traffic is **zero** — appends fill the tail page in
+    /// place and new pages come from the pool.
+    pub append_copy_bytes_contiguous: u64,
+}
+
+/// Bytes a contiguous growing `Vec` memcpy's across an append schedule of
+/// `blocks` row-counts (`d` elements per row, `elem_bytes` wide), under the
+/// standard amortized-doubling growth policy the pre-paging KV layout used:
+/// every time capacity is exhausted the whole resident prefix is copied to
+/// the new allocation. One K or V side; the caller doubles it for a state.
+/// Paged residency pays none of this — the decode bench reports both.
+pub fn contiguous_realloc_copy_bytes(blocks: &[usize], d: usize, elem_bytes: usize) -> u64 {
+    let (mut cap, mut len, mut copied) = (0usize, 0usize, 0u64);
+    for &rows in blocks {
+        let need = rows * d;
+        if cap - len < need {
+            copied += len as u64;
+            cap = (cap * 2).max(len + need);
+        }
+        len += need;
+    }
+    copied * elem_bytes as u64
 }
 
 /// Single-head decode throughput: prefill `ctx` positions into a KV state,
@@ -276,12 +304,21 @@ pub fn decode_sweep(ctx_lens: &[usize], d: usize, gen_tokens: usize, threads: us
                 .stage_times()
                 .get_ns(crate::util::timer::Stage::Quantize) as f64
                 / gen_tokens as f64;
+            // What the pre-paging layout would have copied growing its K/V
+            // Vecs over this exact schedule (one prefill block, then one
+            // row per decoded token), both sides.
+            let elem = crate::attention::kv_bytes_per_token(kind, 1) / 2;
+            let mut schedule = vec![ctx];
+            schedule.resize(1 + gen_tokens, 1);
+            let copy_contig = 2 * contiguous_realloc_copy_bytes(&schedule, d, elem);
             rows.push(DecodeRow {
                 pipeline: kind,
                 ctx,
                 tok_s: gen_tokens as f64 / dt,
                 quantize_ns_per_tok,
                 kv_bytes: st.bytes(),
+                kv_pages: st.pages(),
+                append_copy_bytes_contiguous: copy_contig,
             });
         }
     }
@@ -290,8 +327,17 @@ pub fn decode_sweep(ctx_lens: &[usize], d: usize, gen_tokens: usize, threads: us
 
 pub fn render_decode(rows: &[DecodeRow]) -> Table {
     let mut t = Table::new(
-        "Decode throughput — stateful KV path (single head, incremental decode)",
-        &["pipeline", "ctx", "tok/s", "quantize ns/tok", "kv bytes", "speedup vs FP16"],
+        "Decode throughput — stateful paged-KV path (single head, incremental decode)",
+        &[
+            "pipeline",
+            "ctx",
+            "tok/s",
+            "quantize ns/tok",
+            "kv bytes",
+            "kv pages",
+            "append copy B (contig→paged)",
+            "speedup vs FP16",
+        ],
     );
     for r in rows {
         let fp16 = rows
@@ -305,6 +351,8 @@ pub fn render_decode(rows: &[DecodeRow]) -> Table {
             format!("{:.0}", r.tok_s),
             format!("{:.0}", r.quantize_ns_per_tok),
             r.kv_bytes.to_string(),
+            r.kv_pages.to_string(),
+            format!("{}→0", r.append_copy_bytes_contiguous),
             format!("{:.2}x", r.tok_s / fp16),
         ]);
     }
@@ -324,6 +372,14 @@ pub fn decode_rows_json(rows: &[DecodeRow]) -> Vec<(String, f64)> {
         out.push((
             format!("{}@ctx{}:kv_bytes", r.pipeline.name(), r.ctx),
             r.kv_bytes as f64,
+        ));
+        out.push((
+            format!("{}@ctx{}:kv_pages", r.pipeline.name(), r.ctx),
+            r.kv_pages as f64,
+        ));
+        out.push((
+            format!("{}@ctx{}:append_copy_bytes_contiguous", r.pipeline.name(), r.ctx),
+            r.append_copy_bytes_contiguous as f64,
         ));
     }
     out
@@ -913,15 +969,42 @@ mod tests {
             rows.iter().find(|r| r.pipeline == k && r.ctx == c).unwrap()
         };
         assert!(rows.iter().all(|r| r.tok_s > 0.0));
-        // INT8-resident states are ~4× smaller than FP32's.
+        // INT8-resident states are ~4× smaller than FP32's (same page
+        // count, quarter the page bytes).
         let ia = get(PipelineKind::IntAttention, 64);
         let fp = get(PipelineKind::Fp32, 64);
         assert!(ia.kv_bytes * 3 < fp.kv_bytes, "{} vs {}", ia.kv_bytes, fp.kv_bytes);
-        // Exact payload: (ctx + gen) rows × (K+V) × d × 1 B + bookkeeping.
-        assert_eq!(ia.kv_bytes, (64 + 4) * 2 * 32 + 56);
-        assert_eq!(fp.kv_bytes, (64 + 4) * 2 * 32 * 4);
-        // JSON payload covers every row's three metrics.
-        assert_eq!(decode_rows_json(&rows).len(), 3 * rows.len());
+        // Exact allocated capacity: (K+V) × ⌈(ctx+gen)/page⌉ pages of
+        // page × d elements at the native width (+ INT8 bookkeeping).
+        let pr = crate::attention::kv_page_rows();
+        let pages_per_side = (64usize + 4).div_ceil(pr);
+        assert_eq!(ia.kv_pages, 2 * pages_per_side);
+        assert_eq!(fp.kv_pages, 2 * pages_per_side);
+        assert_eq!(ia.kv_bytes, 2 * pages_per_side * pr * 32 + 56);
+        assert_eq!(fp.kv_bytes, 2 * pages_per_side * pr * 32 * 4);
+        // The contiguous layout would have paid growth copies; paging pays
+        // none (wider elements ⇒ more copied bytes).
+        assert!(ia.append_copy_bytes_contiguous > 0);
+        assert!(fp.append_copy_bytes_contiguous > ia.append_copy_bytes_contiguous);
+        // JSON payload covers every row's five metrics.
+        assert_eq!(decode_rows_json(&rows).len(), 5 * rows.len());
+    }
+
+    #[test]
+    fn contiguous_realloc_copy_model() {
+        // Appending 4 rows of 2 elems one at a time with doubling growth:
+        // caps 2→4→8; copies of 2 then 4 resident elems = 6 elems.
+        assert_eq!(contiguous_realloc_copy_bytes(&[1, 1, 1, 1], 2, 1), 6);
+        // Element width scales linearly; a single block append copies
+        // nothing (one allocation, no resident prefix).
+        assert_eq!(contiguous_realloc_copy_bytes(&[1, 1, 1, 1], 2, 4), 24);
+        assert_eq!(contiguous_realloc_copy_bytes(&[64], 8, 1), 0);
+        // Long decode tails dominate: copies grow with the resident length.
+        let short = contiguous_realloc_copy_bytes(&[16, 1, 1], 8, 1);
+        let mut long_schedule = vec![16usize];
+        long_schedule.resize(1 + 256, 1);
+        let long = contiguous_realloc_copy_bytes(&long_schedule, 8, 1);
+        assert!(long > short);
     }
 
     #[test]

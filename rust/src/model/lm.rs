@@ -5,7 +5,7 @@
 //! Pre-norm GPT-style blocks:
 //! `x += attn(LN1(x)); x += mlp(LN2(x)); logits = LN_f(x)·tok_embᵀ` (tied head).
 //!
-//! ## The KV cache is pipeline-owned state
+//! ## The KV cache is pipeline-owned, **paged** state
 //!
 //! [`KvCache`] holds one [`KvState`] per (layer, head), created lazily in
 //! the attention backend's native operand format the first time the cache is
@@ -13,7 +13,12 @@
 //! per-tensor scales — a decode step quantizes exactly one new row per
 //! layer/head and **never** materializes or re-quantizes the FP32 history
 //! (the old design's O(len·d_model) per-token conversion cost). For
-//! FP32/FP16 backends the states hold native-dtype rows.
+//! FP32/FP16 backends the states hold native-dtype rows. Rows live in
+//! fixed-size pages drawn from a process-wide recycling pool
+//! ([`crate::attention::state::PagedRows`]): appends never re-copy history,
+//! [`KvCache::bytes`] is exact allocated capacity, and dropping a finished
+//! request's cache returns its pages to the pool for the next admission.
+//! The engine budgets [`KvCache::pages_for_tokens`] pages per request.
 //!
 //! ## Chunked prefill
 //!
@@ -23,7 +28,7 @@
 //! prefilled in scheduler-friendly chunks. [`TinyLm::decode_step`] is the
 //! 1-token special case.
 
-use crate::attention::{kv_bytes_per_token, KvState, PipelineKind};
+use crate::attention::{kv_page_rows, KvState, PipelineKind};
 use crate::energy::OpCounts;
 use crate::gemm::gemm_f32;
 use crate::model::config::ModelConfig;
@@ -70,8 +75,9 @@ impl KvCache {
     }
 
     /// Actual memory footprint in bytes at each state's native element
-    /// width — INT8 + scales for the integer pipelines, not a hardcoded
-    /// 4 B/elem. This is what the coordinator's admission control charges.
+    /// width — allocated page capacity (pages × page bytes), INT8 + scales
+    /// for the integer pipelines, not a hardcoded 4 B/elem and not a
+    /// `len`-derived estimate that hides growth slack.
     pub fn bytes(&self) -> usize {
         self.layers
             .iter()
@@ -80,12 +86,45 @@ impl KvCache {
             .sum()
     }
 
-    /// Estimated payload bytes one additional cached token costs for `kind`
-    /// under `cfg` (all layers, K+V, native width) — the linear coefficient
-    /// the batcher uses to project a request's footprint before admitting it.
-    pub fn bytes_per_token(kind: PipelineKind, cfg: &ModelConfig) -> usize {
-        cfg.n_layers * cfg.n_heads * kv_bytes_per_token(kind, cfg.d_head())
+    /// Pages allocated across every (layer, head, side) state — the unit
+    /// the coordinator's admission budget charges and the retirement path
+    /// frees back to the pool.
+    pub fn pages(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|heads| heads.iter())
+            .map(|s| s.pages())
+            .sum()
     }
+
+    /// Rows stored across every state (K and V sides both count).
+    pub fn rows_stored(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|heads| heads.iter())
+            .map(|s| s.rows_stored())
+            .sum()
+    }
+
+    /// Row slots the allocated pages could hold — with [`Self::rows_stored`]
+    /// this yields tail-page utilization (1.0 = every page full).
+    pub fn capacity_rows(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|heads| heads.iter())
+            .map(|s| s.capacity_rows())
+            .sum()
+    }
+
+    /// Pages a sequence of `tokens` cached positions occupies for any
+    /// pipeline under `cfg` (all layers × heads × K/V sides, each side
+    /// `ceil(tokens / page_rows)` pages) — the projection the coordinator's
+    /// page-budget admission charges per request before admitting it. Page
+    /// count is dtype-independent; page *bytes* differ by pipeline.
+    pub fn pages_for_tokens(tokens: usize, cfg: &ModelConfig) -> usize {
+        cfg.n_layers * cfg.n_heads * 2 * tokens.div_ceil(kv_page_rows())
+    }
+
 }
 
 /// The model. Cheap to clone conceptually but weights are large; the serving
@@ -444,8 +483,17 @@ mod tests {
         assert_eq!(cache.len, 3);
         let _ = lm.decode_step(4, &mut cache);
         assert_eq!(cache.len, 4);
-        // FP32 states: 2 layers × 2 heads × (K+V) × 4 rows × 8 dims × 4 B.
-        assert_eq!(cache.bytes(), 2 * 2 * 4 * 16 * 4);
+        // FP32 states: 2 layers × 2 heads × (K+V) sides, each side
+        // ceil(4 / page_rows) pages of page_rows × 8 dims × 4 B.
+        let pr = crate::attention::kv_page_rows();
+        let pages_per_side = 4usize.div_ceil(pr);
+        assert_eq!(cache.pages(), 2 * 2 * 2 * pages_per_side);
+        assert_eq!(cache.bytes(), 2 * 2 * 2 * pages_per_side * pr * 8 * 4);
+        assert_eq!(cache.rows_stored(), 2 * 2 * 2 * 4);
+        assert_eq!(cache.capacity_rows(), 2 * 2 * 2 * pages_per_side * pr);
+        // The admission projection charges the same page count.
+        let cfg = lm.config();
+        assert_eq!(KvCache::pages_for_tokens(4, cfg), cache.pages());
     }
 
     #[test]
@@ -484,17 +532,19 @@ mod tests {
         let mut ci = int.new_cache();
         let _ = fp.forward(&[1, 2, 3, 4, 5, 6, 7, 8], Some(&mut cf));
         let _ = int.forward(&[1, 2, 3, 4, 5, 6, 7, 8], Some(&mut ci));
-        // INT8 payload is 4× smaller; allow the states' fixed scale
-        // bookkeeping on top.
+        // INT8 pages are 4× smaller than FP32 pages of the same geometry;
+        // allow the states' fixed scale bookkeeping on top.
         let payload_fp32 = cf.bytes();
         let payload_int = ci.bytes();
         assert!(
             payload_int < payload_fp32 / 3,
             "int cache {payload_int} B not materially smaller than fp32 {payload_fp32} B"
         );
-        // And the projected per-token cost matches the stored reality.
-        let per_tok = KvCache::bytes_per_token(PipelineKind::Fp32, &cfg);
-        assert_eq!(payload_fp32, 8 * per_tok);
+        // Allocated capacity is exact: pages × page bytes per side.
+        let pr = crate::attention::kv_page_rows();
+        let pages_per_side = 8usize.div_ceil(pr);
+        assert_eq!(payload_fp32, 2 * 2 * 2 * pages_per_side * pr * 8 * 4);
+        assert_eq!(cf.pages(), ci.pages(), "page count is dtype-independent");
     }
 
     #[test]

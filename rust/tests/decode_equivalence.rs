@@ -135,6 +135,54 @@ fn rescale_path_keeps_fidelity_under_growing_magnitudes() {
 }
 
 #[test]
+fn paged_states_byte_identical_across_page_sizes() {
+    // The paged-KV acceptance criterion: paging is pure layout. For every
+    // pipeline kind, an identical chunked-prefill + decode schedule over
+    // states paged at 1, 2 and 64 rows/page produces outputs **byte-equal**
+    // to a one-big-page state (page size 128 ≥ every row appended here —
+    // exactly the pre-paging contiguous layout): rows hold the same values
+    // and every kernel computes the same per-row products in the same
+    // order, pages or not. l = 80 > 64 so even 64-row pages split, and
+    // ramping K/V magnitudes force the INT8 re-scale remap to run its page
+    // walk, too.
+    let (l, d, prefill) = (80, 16, 40);
+    for kind in PipelineKind::all() {
+        let mut rng = Pcg64::seed_from_u64(1000);
+        let q = rand_mat(&mut rng, l, d);
+        let mut k = rand_mat(&mut rng, l, d);
+        let mut v = rand_mat(&mut rng, l, d);
+        for r in 0..l {
+            let gain = 1.0 + r as f32 * 0.1;
+            for x in k.row_mut(r) {
+                *x *= gain;
+            }
+            for x in v.row_mut(r) {
+                *x *= gain;
+            }
+        }
+        let mut pipe = build_pipeline(kind, AttentionConfig::new(l, d));
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for page_rows in [1usize, 2, 64, 128] {
+            let mut st = KvState::with_page_rows(kind, d, page_rows);
+            let got = incremental_output(pipe.as_mut(), &mut st, &q, &k, &v, prefill);
+            assert_eq!(st.len(), l, "{}", kind.name());
+            if page_rows == 128 {
+                assert_eq!(st.pages(), 2, "one page per side = contiguous layout");
+            }
+            outs.push(got.as_slice().to_vec());
+        }
+        let oracle = outs.last().unwrap().clone();
+        for (got, &pr) in outs.iter().zip(&[1usize, 2, 64]) {
+            assert_eq!(
+                got, &oracle,
+                "{} at page size {pr}: paged output must be byte-identical to contiguous",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
 fn batched_decode_bit_identical_to_sequential_for_every_pipeline_kind() {
     // decode_step_batch must be *bit-identical* to B sequential decode_step
     // calls for every pipeline kind AND every pool width: the integer GEMMs

@@ -1,0 +1,148 @@
+//! Paged-KV residency properties, driven by the in-crate miniature proptest
+//! harness (`util/proptest.rs`; failing seeds are reported for exact
+//! reproduction).
+//!
+//! The core contract under test: **paging is pure layout**. A KV state
+//! paged at 1, 2 or 64 rows/page must behave byte-identically to a
+//! one-big-page state (the pre-paging contiguous layout) under arbitrary
+//! interleavings of multi-row appends (prefill chunks), magnitude ramps
+//! (INT8 re-scale remaps across page boundaries) and single-row decode
+//! steps — for every pipeline kind, including the float ones.
+
+use intattention::attention::{
+    build_pipeline, page_pool_stats, AttentionConfig, KvState, PipelineKind,
+};
+use intattention::tensor::MatF32;
+use intattention::util::proptest::{check, Config};
+use intattention::util::prng::Pcg64;
+
+fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, gain: f32) -> MatF32 {
+    MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal() * gain).collect())
+}
+
+// Last entry exceeds any row count a schedule below reaches (≤ ~40 rows),
+// so that state keeps one page per side — the pre-paging contiguous layout.
+const PAGE_SIZES: [usize; 4] = [1, 2, 64, 256];
+
+#[test]
+fn prop_paged_states_bit_identical_across_interleavings() {
+    check(
+        "paged == contiguous under random append/rescale/decode schedules",
+        Config::cases(24),
+        |rng| {
+            let kind = PipelineKind::all()[rng.below(6) as usize];
+            let d = 4 + rng.below(13) as usize; // 4..=16
+            let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d));
+            let mut states: Vec<KvState> = PAGE_SIZES
+                .iter()
+                .map(|&p| KvState::with_page_rows(kind, d, p))
+                .collect();
+            // Random schedule of prefill blocks; occasional magnitude jumps
+            // force the INT8 running-scale remap mid-history.
+            let blocks = 2 + rng.below(5) as usize;
+            for _ in 0..blocks {
+                let rows = 1 + rng.below(5) as usize;
+                let gain = match rng.below(3) {
+                    0 => 0.5,
+                    1 => 1.0,
+                    _ => 2.0 + rng.below(5) as f32, // grows amax → rescale
+                };
+                let q = rand_mat(rng, rows, d, 1.0);
+                let k = rand_mat(rng, rows, d, gain);
+                let v = rand_mat(rng, rows, d, gain);
+                let mut outs: Vec<Vec<f32>> = Vec::with_capacity(states.len());
+                for st in states.iter_mut() {
+                    outs.push(pipe.prefill(st, &q, &k, &v).as_slice().to_vec());
+                }
+                for (o, &p) in outs.iter().zip(&PAGE_SIZES) {
+                    assert_eq!(
+                        o, &outs[3],
+                        "{} prefill at page size {p} diverged from contiguous",
+                        kind.name()
+                    );
+                }
+            }
+            // Decode steps on top of the shared history.
+            for _ in 0..3 {
+                let q = rand_mat(rng, 1, d, 1.0);
+                let k = rand_mat(rng, 1, d, 1.0);
+                let v = rand_mat(rng, 1, d, 1.0);
+                let mut outs: Vec<Vec<f32>> = Vec::with_capacity(states.len());
+                for st in states.iter_mut() {
+                    outs.push(pipe.decode_step(st, &q, &k, &v).as_slice().to_vec());
+                }
+                for (o, &p) in outs.iter().zip(&PAGE_SIZES) {
+                    assert_eq!(
+                        o, &outs[3],
+                        "{} decode at page size {p} diverged from contiguous",
+                        kind.name()
+                    );
+                }
+            }
+            // Structural invariants: same logical content, geometry-exact
+            // accounting.
+            let len = states[3].len();
+            for (st, &p) in states.iter().zip(&PAGE_SIZES) {
+                assert_eq!(st.len(), len);
+                assert_eq!(st.rows_stored(), 2 * len);
+                // ceil-rounded per side: 2 sides × ⌈len/p⌉ pages.
+                assert_eq!(st.pages(), 2 * len.div_ceil(p), "page size {p}");
+                assert!(st.capacity_rows() >= st.rows_stored());
+            }
+        },
+    );
+}
+
+#[test]
+fn dropped_state_pages_return_to_the_pool() {
+    // Build and drop a paged state, then build another with the same
+    // geometry: the pool must hand pages out of its free list (the
+    // recycling that lets a retired request's memory serve the next one).
+    let d = 9; // unusual head_dim → page capacities other tests don't use
+    let mk = |rng: &mut Pcg64| {
+        let mut st = KvState::with_page_rows(PipelineKind::IntAttention, d, 3);
+        let rows = rand_mat(rng, 10, d, 1.0);
+        st.append(&rows, &rows);
+        assert_eq!(st.pages(), 2 * 4); // ⌈10/3⌉ per side
+        st
+    };
+    let mut rng = Pcg64::seed_from_u64(7);
+    let (_, recycled_before) = page_pool_stats();
+    let st = mk(&mut rng);
+    drop(st);
+    let st2 = mk(&mut rng);
+    let (_, recycled_after) = page_pool_stats();
+    assert!(
+        recycled_after > recycled_before,
+        "rebuilding the same geometry after a drop must recycle pages \
+         ({recycled_before} → {recycled_after})"
+    );
+    drop(st2);
+}
+
+#[test]
+fn cloned_state_is_independent_and_equal() {
+    // KvCache snapshots (tests, speculative schedulers) rely on deep
+    // page-level clones: equal content, disjoint pages.
+    let mut rng = Pcg64::seed_from_u64(11);
+    for kind in PipelineKind::all() {
+        let d = 8;
+        let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d));
+        let mut st = KvState::with_page_rows(kind, d, 2);
+        let block = rand_mat(&mut rng, 5, d, 1.0);
+        let _ = pipe.prefill(&mut st, &block, &block, &block);
+        let mut cl = st.clone();
+        assert_eq!(cl.len(), st.len());
+        assert_eq!(cl.bytes(), st.bytes());
+        assert_eq!(cl.pages(), st.pages());
+        // Decoding on the clone must match decoding on the original...
+        let q = rand_mat(&mut rng, 1, d, 1.0);
+        let k = rand_mat(&mut rng, 1, d, 1.0);
+        let v = rand_mat(&mut rng, 1, d, 1.0);
+        let a = pipe.decode_step(&mut st, &q, &k, &v);
+        let b = pipe.decode_step(&mut cl, &q, &k, &v);
+        assert_eq!(a.as_slice(), b.as_slice(), "{}", kind.name());
+        // ...and never aliases its pages.
+        assert_eq!(st.len(), cl.len());
+    }
+}

@@ -1,10 +1,11 @@
 //! Serving-engine end-to-end: trace replay, batching overlap, backpressure
 //! and per-pipeline throughput sanity under the coordinator.
 
-use intattention::attention::PipelineKind;
+use intattention::attention::{page_pool_stats, PipelineKind};
 use intattention::coordinator::batcher::BatchPolicy;
 use intattention::coordinator::{Engine, EngineOptions, SubmitError};
 use intattention::model::config::ModelConfig;
+use intattention::model::lm::KvCache;
 use intattention::model::weights::Weights;
 
 fn weights() -> Weights {
@@ -82,15 +83,20 @@ fn kv_budget_head_of_line_big_request_not_starved() {
     // every round; the engine's kv_head pinning must keep them from
     // leapfrogging the deferred big request forever. Everything completes.
     //
-    // IntAttention at this geometry charges 32 B per projected token, so
-    // max_kv_bytes 1600 fits the big request (40 prompt + 8 gen = 1536 B)
-    // only when the active set is (nearly) drained.
+    // The page budget fits exactly one small request's projection (4 prompt
+    // + 4 gen = 8 tokens), so requests serialize; the big request (40 + 8 =
+    // 48 tokens) projects at least as many pages and runs only when the
+    // active set drains. (Computed from the live page size so the test
+    // holds under the CI `INTATTN_KV_PAGE=2` run too.)
+    let w = weights();
+    let small_pages = KvCache::pages_for_tokens(8, &w.cfg);
+    let big_pages = KvCache::pages_for_tokens(48, &w.cfg);
     let opts = EngineOptions {
         attention: PipelineKind::IntAttention,
-        policy: BatchPolicy { max_kv_bytes: 1600, ..Default::default() },
+        policy: BatchPolicy { max_kv_pages: small_pages, ..Default::default() },
         ..Default::default()
     };
-    let h = Engine::start(weights(), opts);
+    let h = Engine::start(w, opts);
     let mut rxs = Vec::new();
     for i in 0..2 {
         rxs.push(h.submit(vec![1, 2, (i + 1) as u16, 4], 4, 0.0, 1).unwrap());
@@ -111,12 +117,53 @@ fn kv_budget_head_of_line_big_request_not_starved() {
     }
     let snap = h.shutdown();
     assert_eq!(snap.completed, 15);
-    // The budget bounds *projected payload* bytes; actual state bytes add a
-    // fixed 112 B of scale bookkeeping per sequence (≤ 6 concurrent here).
+    // Page accounting is exact allocated capacity, so the observed peak can
+    // never exceed the largest single admission (the over-budget big
+    // request runs alone) or the budget itself.
     assert!(
-        snap.peak_kv_bytes <= 1600 + 6 * 112,
-        "kv budget overshoot: {} B",
-        snap.peak_kv_bytes
+        snap.peak_kv_pages <= big_pages.max(small_pages),
+        "kv page budget overshoot: {} pages (budget {small_pages}, big {big_pages})",
+        snap.peak_kv_pages
+    );
+}
+
+#[test]
+fn page_recycling_lets_queued_request_admit_after_another_finishes() {
+    // A page budget sized for exactly one request forces the queue to wait
+    // on retirement: each finishing request frees its pages back to the
+    // process-wide pool that round, the freed budget admits the next
+    // request, and the pool hands the recycled pages straight back out.
+    let w = weights();
+    let one_seq = KvCache::pages_for_tokens(8, &w.cfg); // 4 prompt + 4 gen
+    let (_, recycled_before) = page_pool_stats();
+    let opts = EngineOptions {
+        attention: PipelineKind::IntAttention,
+        policy: BatchPolicy { max_kv_pages: one_seq, ..Default::default() },
+        ..Default::default()
+    };
+    let h = Engine::start(w, opts);
+    let rxs: Vec<_> = (0..3)
+        .map(|i| h.submit(vec![1, 2, 3, (4 + i) as u16], 4, 0.0, 1).unwrap())
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+    }
+    let snap = h.shutdown();
+    assert_eq!(snap.completed, 3);
+    assert!(
+        snap.peak_kv_pages <= one_seq,
+        "budget of one sequence held: peak {} > {one_seq}",
+        snap.peak_kv_pages
+    );
+    // Requests 2 and 3 could only admit after a predecessor finished; their
+    // identical page geometry means the pool's free list served them, so
+    // the process-wide recycle counter must have advanced.
+    let (_, recycled_after) = page_pool_stats();
+    assert!(
+        recycled_after > recycled_before,
+        "retired pages must be recycled, not re-allocated \
+         ({recycled_before} → {recycled_after})"
     );
 }
 
