@@ -27,6 +27,10 @@
 //!    the resident length while the paged layout never re-copies history.
 //!    Also reports the process-wide page-pool counters
 //!    (allocated/recycled).
+//! 5. **Shared-system-prompt sweep** — the prefix-sharing headline: N
+//!    requests admitting the same prompt prefix, unshared (N quantize+store
+//!    passes, N page sets) vs copy-on-write shared (1 pass, 1 prefix page
+//!    set + per-request suffixes) — the `decode_prefix_shared` report.
 
 use intattention::harness::experiments as exp;
 use intattention::harness::report::{kv_rows_json, write_report};
@@ -150,11 +154,13 @@ fn main() {
     let long_gen = if fast { 16 } else { 256 };
     // Snapshot the process-wide pool counters around the sweep so the
     // report describes *this* mode's page traffic, not the whole bench run.
-    let (alloc_before, recycled_before) = intattention::attention::page_pool_stats();
+    let pool_before = intattention::attention::page_pool_stats();
     let lrows = exp::decode_sweep(&long_ctxs, exp::HEAD_DIM, long_gen, 1);
-    let (alloc_after, recycled_after) = intattention::attention::page_pool_stats();
-    let (pages_alloc, pages_recycled) =
-        (alloc_after - alloc_before, recycled_after - recycled_before);
+    let pool_after = intattention::attention::page_pool_stats();
+    let (pages_alloc, pages_recycled) = (
+        pool_after.allocated - pool_before.allocated,
+        pool_after.recycled - pool_before.recycled,
+    );
     let ltable = exp::render_decode(&lrows);
     ltable.print();
     println!("page pool (this sweep): {pages_alloc} allocated, {pages_recycled} recycled");
@@ -162,4 +168,24 @@ fn main() {
     ljson.push(("kv_pages_allocated".to_string(), pages_alloc as f64));
     ljson.push(("kv_pages_recycled".to_string(), pages_recycled as f64));
     let _ = write_report("decode_longctx_paged", &ltable.render(), Some(kv_rows_json(&ljson)));
+
+    // -- Mode 5: shared-system-prompt prefix sharing ---------------------
+    // N requests admit the same system prompt: the unshared arm quantizes
+    // and stores the prefix N times, the shared arm once (adopters take the
+    // pages by copy-on-write reference and pay only their suffixes). The
+    // report starts the BENCH_* perf trajectory for admission-path sharing:
+    // prefix quantization passes, exact page traffic, and wall time.
+    let (n_list, prefix_rows, suffix_rows) = if fast {
+        (vec![4usize], 64, 8)
+    } else {
+        (vec![4usize, 16], 512, 32)
+    };
+    let prows = exp::prefix_share_sweep(&n_list, prefix_rows, suffix_rows, exp::HEAD_DIM);
+    let ptable = exp::render_prefix_share(&prows);
+    ptable.print();
+    let _ = write_report(
+        "decode_prefix_shared",
+        &ptable.render(),
+        Some(kv_rows_json(&exp::prefix_share_rows_json(&prows))),
+    );
 }

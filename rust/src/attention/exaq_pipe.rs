@@ -3,6 +3,12 @@
 //! the paper's ablation (Tables 4–7). EXAQ's dynamic statistics pass and
 //! float normalization show up in the Softmax stage timing; its probability
 //! output is requantized to UINT8 to keep the PV stage integer.
+//!
+//! Stateful paths are prefix-sharing safe: K̂/V̂ reads go through
+//! `page_list()` descriptors over possibly-shared pages, appends and the
+//! Δ-stat-driven re-scale fork shared pages copy-on-write, and a shared
+//! prefix carries its Δ statistics with the snapshot (the running clip
+//! range is part of the pinned scale state — `crate::attention::state`).
 
 use crate::attention::state::{Int8KvState, KvState};
 use crate::attention::{

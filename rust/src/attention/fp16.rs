@@ -3,6 +3,11 @@
 //! conversion costs at each boundary — matching the dataflow, if not the ALU
 //! economics, of a native FP16 edge path. Energy accounting prices the GEMMs
 //! at fp16-MAC cost, which is where the real-hardware advantage lives.
+//!
+//! Stateful paths read resident K/V through `page_list()` descriptors, so
+//! they tolerate pages shared copy-on-write across sequences; the append
+//! path forks a shared tail page before writing
+//! (see `crate::attention::state`).
 
 use crate::attention::state::{F16KvState, KvState};
 use crate::attention::{

@@ -1,5 +1,11 @@
 //! FP32 baseline attention (paper eq. 1 + eq. 6): `A = QKᵀ/√d`,
 //! `P = softmax(A)`, `O = PV`, everything in f32.
+//!
+//! The stateful paths are prefix-sharing safe by construction: every read
+//! of resident K/V goes through `page_list()` descriptors (`&[f32]` slices
+//! that tolerate pages shared copy-on-write with other sequences), and the
+//! only mutation — `KvState::append` — forks a shared tail page before
+//! writing (see `crate::attention::state`).
 
 use crate::attention::state::{F32KvState, KvState};
 use crate::attention::{

@@ -12,6 +12,12 @@
 //!                 element, outside the attention loop — eq. 5 + eq. 15 scale)
 //!
 //! Supports per-tensor (default) and grouped (§3.3) quantization of Q.
+//!
+//! Stateful paths are prefix-sharing safe: K̂/V̂ reads go through
+//! `page_list()` descriptors (the grouped decode GEMMs tolerate pages
+//! shared copy-on-write with other sequences), and both mutations —
+//! append-quantize and the running-scale re-map — fork shared pages before
+//! writing (see `crate::attention::state`).
 
 use crate::attention::state::{Int8KvState, KvState};
 use crate::attention::{

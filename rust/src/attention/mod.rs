@@ -45,7 +45,9 @@ use crate::util::threadpool::ParallelPool;
 use crate::util::timer::StageTimes;
 
 pub use crate::softmax::index_softmax::Mask as AttentionMask;
-pub use state::{kv_bytes_per_token, kv_page_rows, page_pool_stats, KvState, PagedRows};
+pub use state::{
+    kv_bytes_per_token, kv_page_rows, page_pool_stats, KvState, PagePoolStats, PagedRows,
+};
 
 /// Static configuration of an attention head computation.
 #[derive(Clone, Copy, Debug)]

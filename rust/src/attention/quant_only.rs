@@ -12,6 +12,13 @@
 //!                    the paper ablates in Table 9)
 //!   6. PvGemm     — `P̂·V̂` in i8×i8→i32
 //!   7. Output     — `O = (s_V/127)·(P̂V̂)`
+//!
+//! Stateful paths are prefix-sharing safe: K̂/V̂ reads go through
+//! `page_list()` descriptors (fine over pages shared copy-on-write across
+//! sequences), and both mutations — append-quantize and the running-scale
+//! re-map — fork shared pages before writing, so a sharer's re-scale never
+//! rewrites another sequence's resident grid
+//! (see `crate::attention::state`).
 
 use crate::attention::state::{Int8KvState, KvState};
 use crate::attention::{

@@ -46,17 +46,51 @@
 //! a free-list of recycled page boxes, so a finished sequence's pages return
 //! to the pool the round it completes and the next admission reuses them
 //! instead of hitting the allocator. [`page_pool_stats`] exposes the
-//! allocated/recycled counters the serving metrics and benches report.
-//! Block-table residency is also the prerequisite for prefix sharing across
-//! requests (a shared prompt prefix is just a shared page run — see the
-//! ROADMAP open item).
+//! allocated/recycled/released/CoW counters the serving metrics and benches
+//! report.
+//!
+//! ## Copy-on-write page sharing (prefix sharing across requests)
+//!
+//! Pages are **refcounted** (`Arc`), so two stores can reference the same
+//! physical page: [`PagedRows::share_prefix`] builds a new store whose first
+//! `rows` rows alias the donor's pages without copying them — the mechanism
+//! behind request-level prefix sharing (N requests with the same system
+//! prompt hold one set of prefix pages plus per-request suffixes; see
+//! `crate::coordinator::prefix`). The ownership rules are:
+//!
+//! * **A shared page is immutable.** Every read path (`row`,
+//!   [`PagedRows::page_slices`] / [`PagedRows::page_list`] — and therefore
+//!   every GEMM descriptor the pipelines build) works on `&[T]` and never
+//!   cares whether the page is exclusively owned.
+//! * **Every mutation forks first.** The only two mutation paths —
+//!   [`PagedRows::append_row`] (which touches the tail page) and
+//!   [`PagedRows::for_each_mut`] (the INT8 re-scale remap, which touches
+//!   every page) — check the refcount and, if the page is shared, copy it
+//!   into a fresh pool page before writing (`cow_forks` counts these).
+//!   Sharers therefore **never observe each other's rewrites**: a donor
+//!   whose running abs-max grows re-maps private copies, and the adopters
+//!   keep the original bytes.
+//! * **Scales pin with the share.** The integer states' scale/abs-max/Δ-stat
+//!   bookkeeping is *copied* (not aliased) at share time, so a shared page
+//!   run is always paired with the scale that produced it. Callers who need
+//!   byte-identity with unshared execution must share at a moment when the
+//!   donor's running scale covers exactly the shared rows — i.e.
+//!   `rows == len()`, which the coordinator guarantees by snapshotting only
+//!   at aligned prefill-chunk boundaries.
+//! * **The last holder releases.** Dropping a store releases only the pages
+//!   whose refcount hits zero back to the pool (`released` counts returns),
+//!   so `allocated + recycled − released` is the exact number of
+//!   outstanding pages — what the leak property test in `tests/kv_paging.rs`
+//!   drives back to baseline.
 //!
 //! Layout changes nothing numerically: rows hold exactly the values the
 //! contiguous layout held, and every kernel computes the same per-row dot
 //! products in the same order, so paged attention output is **byte-equal**
 //! to the contiguous implementation at any page size (asserted for all six
 //! pipeline kinds in `tests/decode_equivalence.rs` and the property test in
-//! `tests/kv_paging.rs`).
+//! `tests/kv_paging.rs`); and because every mutation forks shared pages
+//! first, shared-prefix execution is byte-equal to unshared execution under
+//! the same chunk schedule (asserted there too).
 //!
 //! States also carry the running Δ-statistics EXAQ's dynamic clipping needs
 //! ([`ExaqRunningStats`]), so EXAQ decode keeps its O(1)-per-token cost
@@ -66,7 +100,7 @@ use crate::attention::PipelineKind;
 use crate::tensor::MatF32;
 use crate::util::f16::F16;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 // ---------------------------------------------------------------------------
 // Page size policy
@@ -126,6 +160,12 @@ pub struct PagePool<T> {
     allocated: AtomicU64,
     /// Pages handed out from the free list instead of the allocator.
     recycled: AtomicU64,
+    /// Pages returned by stores (whether pooled or dropped over the cap).
+    /// `allocated + recycled − released` = pages currently held by stores.
+    released: AtomicU64,
+    /// Copy-on-write forks: times a store copied a shared page before
+    /// mutating it (tail-append divergence or a re-scale remap unsharing).
+    cow_forks: AtomicU64,
 }
 
 impl<T: Copy + Default> PagePool<T> {
@@ -134,6 +174,8 @@ impl<T: Copy + Default> PagePool<T> {
             free: Mutex::new(FreeList { buckets: Vec::new(), elems: 0 }),
             allocated: AtomicU64::new(0),
             recycled: AtomicU64::new(0),
+            released: AtomicU64::new(0),
+            cow_forks: AtomicU64::new(0),
         }
     }
 
@@ -156,6 +198,7 @@ impl<T: Copy + Default> PagePool<T> {
     }
 
     fn release(&self, page: Box<[T]>) {
+        self.released.fetch_add(1, Ordering::Relaxed);
         let cap = page.len();
         let mut f = self.free.lock().unwrap();
         if f.elems + cap > MAX_FREE_ELEMS {
@@ -170,10 +213,49 @@ impl<T: Copy + Default> PagePool<T> {
         }
     }
 
-    /// (pages allocated fresh, pages recycled from the free list) since
-    /// process start. Monotone counters.
-    pub fn stats(&self) -> (u64, u64) {
-        (self.allocated.load(Ordering::Relaxed), self.recycled.load(Ordering::Relaxed))
+    fn note_cow(&self) {
+        self.cow_forks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Monotone counters since process start.
+    pub fn stats(&self) -> PagePoolStats {
+        PagePoolStats {
+            allocated: self.allocated.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+            released: self.released.load(Ordering::Relaxed),
+            cow_forks: self.cow_forks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Monotone page-pool counters (one [`PagePool`] per element type;
+/// [`page_pool_stats`] sums across them).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PagePoolStats {
+    /// Pages created fresh from the allocator.
+    pub allocated: u64,
+    /// Pages handed out from the free list instead of the allocator.
+    pub recycled: u64,
+    /// Pages returned by stores (pooled or dropped over the free-list cap).
+    pub released: u64,
+    /// Copy-on-write forks of shared pages.
+    pub cow_forks: u64,
+}
+
+impl PagePoolStats {
+    /// Pages currently held by live stores: every handout
+    /// (`allocated + recycled`) minus every return (`released`). A schedule
+    /// that builds and then drops an arbitrary web of shared states must
+    /// bring this back to its starting value — the refcount-leak invariant.
+    pub fn outstanding(&self) -> u64 {
+        self.allocated + self.recycled - self.released
+    }
+
+    fn add(&mut self, o: PagePoolStats) {
+        self.allocated += o.allocated;
+        self.recycled += o.recycled;
+        self.released += o.released;
+        self.cow_forks += o.cow_forks;
     }
 }
 
@@ -197,13 +279,13 @@ impl_page_elem!(i8);
 impl_page_elem!(f32);
 impl_page_elem!(F16);
 
-/// Aggregate (allocated, recycled) page counts across every element type's
-/// pool — what the serving metrics and the decode bench report.
-pub fn page_pool_stats() -> (u64, u64) {
-    let (a1, r1) = <i8 as PageElem>::pool().stats();
-    let (a2, r2) = <f32 as PageElem>::pool().stats();
-    let (a3, r3) = <F16 as PageElem>::pool().stats();
-    (a1 + a2 + a3, r1 + r2 + r3)
+/// Aggregate page-pool counters across every element type's pool — what the
+/// serving metrics and the decode bench report.
+pub fn page_pool_stats() -> PagePoolStats {
+    let mut s = <i8 as PageElem>::pool().stats();
+    s.add(<f32 as PageElem>::pool().stats());
+    s.add(<F16 as PageElem>::pool().stats());
+    s
 }
 
 // ---------------------------------------------------------------------------
@@ -214,9 +296,15 @@ pub fn page_pool_stats() -> (u64, u64) {
 /// span pages), so each page is a contiguous row-major segment the GEMM
 /// kernels consume directly via [`PagedRows::page_list`]. Pages are
 /// acquired from the process-wide [`PagePool`] on growth and released back
-/// on drop.
+/// when the last reference drops.
+///
+/// Pages are **refcounted**: [`PagedRows::share_prefix`] (and `Clone`)
+/// alias pages between stores instead of copying them, and both mutation
+/// paths ([`PagedRows::append_row`], [`PagedRows::for_each_mut`]) fork a
+/// shared page copy-on-write before writing — see the module docs for the
+/// ownership rules.
 pub struct PagedRows<T: PageElem> {
-    pages: Vec<Box<[T]>>,
+    pages: Vec<Arc<Box<[T]>>>,
     /// Rows appended so far.
     len: usize,
     /// Elements per row.
@@ -282,15 +370,61 @@ impl<T: PageElem> PagedRows<T> {
     /// Append one row and return its slice for the caller to fill — the
     /// only growth path. Fills the tail page in place; takes a page from
     /// the pool exactly when capacity is exhausted. Never copies resident
-    /// rows.
+    /// rows, with one exception: if the tail page is shared (a prefix
+    /// adoption ended mid-page), the **first divergent append forks it**
+    /// copy-on-write so the other sharers never see the new row.
     pub fn append_row(&mut self) -> &mut [T] {
         if self.len == self.pages.len() * self.page_rows {
-            self.pages.push(T::pool().acquire(self.page_cap()));
+            self.pages.push(Arc::new(T::pool().acquire(self.page_cap())));
         }
         let off = (self.len % self.page_rows) * self.d;
+        let end = off + self.d;
         self.len += 1;
-        let tail = self.pages.last_mut().expect("tail page present");
-        &mut tail[off..off + self.d]
+        let tail = self.pages.len() - 1;
+        &mut self.page_mut(tail)[off..end]
+    }
+
+    /// Mutable access to page `i`, forking it copy-on-write first if any
+    /// other store holds a reference. After this call the page is
+    /// exclusively owned.
+    fn page_mut(&mut self, i: usize) -> &mut [T] {
+        if Arc::get_mut(&mut self.pages[i]).is_none() {
+            let mut fresh = T::pool().acquire(self.page_cap());
+            fresh.copy_from_slice(&self.pages[i]);
+            // Swap our reference out and route it through `into_inner`: if
+            // the other holder dropped concurrently between our refcount
+            // check and here, we may now BE the last reference, and a plain
+            // Arc drop would free the page behind the pool's back. The
+            // remaining sharers (if any) keep the original bytes.
+            let old = std::mem::replace(&mut self.pages[i], Arc::new(fresh));
+            if let Some(page) = Arc::into_inner(old) {
+                T::pool().release(page);
+            }
+            T::pool().note_cow();
+        }
+        Arc::get_mut(&mut self.pages[i]).expect("page just unshared")
+    }
+
+    /// Pages currently shared with at least one other store (refcount > 1).
+    pub fn shared_pages(&self) -> usize {
+        self.pages.iter().filter(|p| Arc::strong_count(p) > 1).count()
+    }
+
+    /// A new store whose first `rows` rows alias this store's pages
+    /// (refcounted, no copy) — the copy-on-write prefix-sharing entry
+    /// point. If `rows` ends mid-page the tail page is shared too; the
+    /// first divergent append on either side forks it. For integer states
+    /// the caller must pair the shared run with the scale that produced it
+    /// (see [`KvState::share_prefix`]).
+    pub fn share_prefix(&self, rows: usize) -> PagedRows<T> {
+        assert!(rows <= self.len, "cannot share {rows} of {} rows", self.len);
+        let pages_needed = rows.div_ceil(self.page_rows);
+        PagedRows {
+            pages: self.pages[..pages_needed].to_vec(),
+            len: rows,
+            d: self.d,
+            page_rows: self.page_rows,
+        }
     }
 
     /// Row `r` (always contiguous: rows never span pages).
@@ -330,15 +464,18 @@ impl<T: PageElem> PagedRows<T> {
     }
 
     /// Mutate every valid element in place, page by page (the INT8
-    /// re-scale remap).
+    /// re-scale remap). Shared pages are **unshared first** (forked
+    /// copy-on-write), so a re-scale rewrites private copies and the other
+    /// holders of a shared prefix keep the bytes their own scale describes.
     pub fn for_each_mut(&mut self, mut f: impl FnMut(&mut T)) {
         let (pr, d, len) = (self.page_rows, self.d, self.len);
-        for (i, page) in self.pages.iter_mut().enumerate() {
+        for i in 0..self.pages.len() {
             let start = i * pr;
             if start >= len {
                 break;
             }
-            for x in &mut page[..(len - start).min(pr) * d] {
+            let valid = (len - start).min(pr) * d;
+            for x in &mut self.page_mut(i)[..valid] {
                 f(x);
             }
         }
@@ -348,20 +485,30 @@ impl<T: PageElem> PagedRows<T> {
 impl<T: PageElem> Drop for PagedRows<T> {
     fn drop(&mut self) {
         for p in self.pages.drain(..) {
-            T::pool().release(p);
+            // Only the last holder returns the page to the pool; earlier
+            // drops just lower the refcount. `into_inner` (not `try_unwrap`)
+            // so two holders dropping concurrently on different threads
+            // cannot both observe count > 1 and leak the page — exactly one
+            // caller wins the unwrap.
+            if let Some(page) = Arc::into_inner(p) {
+                T::pool().release(page);
+            }
         }
     }
 }
 
 impl<T: PageElem> Clone for PagedRows<T> {
+    /// Clones **share** pages (refcount bump, no copy): with every mutation
+    /// path forking shared pages first, an aliased clone is observationally
+    /// identical to a deep copy — the copies happen lazily, only for pages
+    /// a side actually rewrites.
     fn clone(&self) -> Self {
-        let mut pages = Vec::with_capacity(self.pages.len());
-        for p in &self.pages {
-            let mut np = T::pool().acquire(self.page_cap());
-            np.copy_from_slice(p);
-            pages.push(np);
+        PagedRows {
+            pages: self.pages.clone(),
+            len: self.len,
+            d: self.d,
+            page_rows: self.page_rows,
         }
-        PagedRows { pages, len: self.len, d: self.d, page_rows: self.page_rows }
     }
 }
 
@@ -403,6 +550,21 @@ impl Int8Side {
         }
     }
 
+    /// Share the first `rows` quantized rows (refcounted pages, no copy)
+    /// and **pin the current scale to the share**: the new side carries
+    /// this side's scale/abs-max bookkeeping, so the shared bytes stay
+    /// paired with the grid that produced them. Byte-identity with
+    /// unshared execution additionally requires `rows == len()` at share
+    /// time (the running scale then covers exactly the shared rows).
+    fn share_prefix(&self, rows: usize) -> Int8Side {
+        Int8Side {
+            data: self.data.share_prefix(rows),
+            scale: self.scale,
+            amax: self.amax,
+            rescales: self.rescales,
+        }
+    }
+
     /// Quantize and append `rows`, widening the grid first if the running
     /// abs-max grew. Matches `quantize_i8`'s conventions (symmetric ±127,
     /// scale 1.0 for all-zero data), so after any append sequence the scale
@@ -420,7 +582,10 @@ impl Int8Side {
                 // Re-scale path: re-map resident INT8 rows onto the wider
                 // grid entirely in the quantized domain (no FP32 history
                 // exists to re-quantize from — that is the point), one page
-                // at a time and in place: paging never copies rows for this.
+                // at a time. Exclusively-owned pages remap in place; pages
+                // shared with a prefix sharer are forked first
+                // (`for_each_mut`'s copy-on-write), so the sharers keep the
+                // bytes their own pinned scale describes.
                 let ratio = self.scale / new_scale;
                 self.data.for_each_mut(|q| {
                     *q = ((*q as f32) * ratio).round().clamp(-127.0, 127.0) as i8;
@@ -680,6 +845,48 @@ impl KvState {
         2 * self.len()
     }
 
+    /// Pages (both sides) currently shared with another state (refcount
+    /// > 1) — zero once every sharer has forked or dropped.
+    pub fn shared_pages(&self) -> usize {
+        match self {
+            KvState::F32(s) => s.k.shared_pages() + s.v.shared_pages(),
+            KvState::F16(s) => s.k.shared_pages() + s.v.shared_pages(),
+            KvState::Int8(s) => s.k.data.shared_pages() + s.v.data.shared_pages(),
+        }
+    }
+
+    /// A state whose first `rows` positions alias this state's pages
+    /// copy-on-write ([`PagedRows::share_prefix`]) — the adoption step of
+    /// request-level prefix sharing. The integer states' running
+    /// scale/abs-max (and EXAQ Δ-stats) are **copied** alongside the page
+    /// refs, pinning the shared run to the grid that produced it; for the
+    /// result to be byte-identical to the adopter having computed the
+    /// prefix itself, share at a moment when `rows == len()` (the
+    /// coordinator snapshots only at aligned prefill-chunk boundaries for
+    /// exactly this reason). Neither state can observe the other's later
+    /// mutations: appends and re-scale remaps fork shared pages first.
+    pub fn share_prefix(&self, rows: usize) -> KvState {
+        assert!(rows <= self.len(), "cannot share {rows} of {} cached rows", self.len());
+        match self {
+            KvState::F32(s) => KvState::F32(F32KvState {
+                d: s.d,
+                k: s.k.share_prefix(rows),
+                v: s.v.share_prefix(rows),
+            }),
+            KvState::F16(s) => KvState::F16(F16KvState {
+                d: s.d,
+                k: s.k.share_prefix(rows),
+                v: s.v.share_prefix(rows),
+            }),
+            KvState::Int8(s) => KvState::Int8(Int8KvState {
+                d: s.d,
+                k: s.k.share_prefix(rows),
+                v: s.v.share_prefix(rows),
+                exaq: s.exaq,
+            }),
+        }
+    }
+
     /// The INT8 state, panicking if this state was built by a float pipeline.
     pub fn as_int8(&self) -> &Int8KvState {
         match self {
@@ -828,21 +1035,27 @@ mod tests {
     }
 
     #[test]
-    fn paged_rows_clone_is_deep_and_equal() {
+    fn paged_rows_clone_is_cow_and_equal() {
         let mut p: PagedRows<f32> = PagedRows::with_page_rows(2, 2);
         for r in 0..5 {
             p.append_row().copy_from_slice(&[r as f32, -(r as f32)]);
         }
         let q = p.clone();
         assert_eq!(q.len(), 5);
+        // The clone aliases every page (copy-on-write, not a deep copy).
+        assert_eq!(q.shared_pages(), 3);
         let a: Vec<f32> = p.iter().copied().collect();
         let b: Vec<f32> = q.iter().copied().collect();
         assert_eq!(a, b);
-        // Mutating the clone leaves the original untouched.
+        // Mutating the clone forks the tail page and leaves the original
+        // untouched.
         let mut q = q;
         q.append_row().copy_from_slice(&[9.0, 9.0]);
         assert_eq!(p.len(), 5);
         assert_eq!(q.len(), 6);
+        assert_eq!(p.row(4), &[4.0, -4.0]);
+        // Full pages are still shared; only the diverged tail forked.
+        assert_eq!(q.shared_pages(), 2);
     }
 
     #[test]
@@ -851,18 +1064,18 @@ mod tests {
         // the exact-capacity match.
         let cap = 7 * 13;
         let pool = <i8 as PageElem>::pool();
-        let (_, r0) = pool.stats();
+        let r0 = pool.stats().recycled;
         let page = pool.acquire(cap);
         pool.release(page);
         let _page2 = pool.acquire(cap);
-        let (_, r1) = pool.stats();
+        let r1 = pool.stats().recycled;
         assert!(r1 > r0, "released page of a unique capacity must be reused");
     }
 
     #[test]
     fn dropping_paged_rows_returns_pages_to_pool() {
         let d = 11; // unusual width → unusual page capacity
-        let (_, r0) = <f32 as PageElem>::pool().stats();
+        let r0 = <f32 as PageElem>::pool().stats().recycled;
         {
             let mut p: PagedRows<f32> = PagedRows::with_page_rows(d, 3);
             for _ in 0..4 {
@@ -873,8 +1086,113 @@ mod tests {
         for _ in 0..4 {
             q.append_row().fill(2.0);
         }
-        let (_, r1) = <f32 as PageElem>::pool().stats();
+        let r1 = <f32 as PageElem>::pool().stats().recycled;
         assert!(r1 >= r0 + 2, "the dropped store's pages must be recycled");
+    }
+
+    #[test]
+    fn share_prefix_aliases_pages_and_forks_on_append() {
+        let mut donor: PagedRows<i8> = PagedRows::with_page_rows(2, 2);
+        for r in 0..5i8 {
+            donor.append_row().copy_from_slice(&[r, -r]);
+        }
+        // Page-aligned share: 4 rows = 2 full pages, tail page not shared.
+        let mut adopter = donor.share_prefix(4);
+        assert_eq!(adopter.len(), 4);
+        assert_eq!(adopter.pages(), 2);
+        assert_eq!(adopter.shared_pages(), 2);
+        assert_eq!(donor.shared_pages(), 2, "donor's tail page stays private");
+        let a: Vec<i8> = adopter.iter().copied().collect();
+        let b: Vec<i8> = donor.iter().take(8).copied().collect();
+        assert_eq!(a, b);
+        // Aligned adoption appends into a fresh page — no fork needed: both
+        // shared pages stay shared (a fork would have unshared one).
+        let forks0 = <i8 as PageElem>::pool().stats().cow_forks;
+        adopter.append_row().copy_from_slice(&[7, 7]);
+        assert_eq!(adopter.shared_pages(), 2);
+        assert_eq!(donor.shared_pages(), 2);
+
+        // Mid-page share: the tail page is aliased, so the first divergent
+        // append must fork it — and the donor must not see the new row.
+        let mut mid = donor.share_prefix(3);
+        assert_eq!(mid.pages(), 2);
+        assert_eq!(mid.shared_pages(), 2);
+        mid.append_row().copy_from_slice(&[9, 9]);
+        assert!(<i8 as PageElem>::pool().stats().cow_forks > forks0);
+        assert_eq!(mid.row(3), &[9, 9]);
+        assert_eq!(donor.row(3), &[3, -3], "donor bytes must survive the fork");
+    }
+
+    #[test]
+    fn rescale_on_sharer_forks_instead_of_rewriting_shared_pages() {
+        // Donor and adopter share an INT8 prefix; the adopter then appends
+        // a large-magnitude row, so *its* running scale grows and its
+        // resident rows re-map. The remap must fork the shared pages: the
+        // donor's bytes (and scale) are untouched.
+        let mut donor = KvState::with_page_rows(PipelineKind::IntAttention, 2, 2);
+        let rows = MatF32::from_vec(4, 2, vec![0.5, -0.25, 0.25, 0.5, -0.5, 0.125, 0.5, 0.25]);
+        donor.append(&rows, &rows);
+        let mut adopter = donor.share_prefix(4);
+        assert_eq!(adopter.shared_pages(), 4); // 2 pages per side × K and V
+        let donor_bytes: Vec<i8> = donor.as_int8().k.data.iter().copied().collect();
+        let big = MatF32::from_vec(1, 2, vec![4.0, 1.0]);
+        adopter.append(&big, &big);
+        let s = adopter.as_int8();
+        assert_eq!(s.k.rescales, 1, "amax grew: the adopter must re-map");
+        // The donor's resident bytes and scale are exactly as before.
+        let donor_after: Vec<i8> = donor.as_int8().k.data.iter().copied().collect();
+        assert_eq!(donor_bytes, donor_after);
+        assert!((donor.as_int8().k.amax - 0.5).abs() < 1e-12);
+        // Nothing is shared anymore: every shared page was forked.
+        assert_eq!(adopter.shared_pages(), 0);
+        assert_eq!(donor.shared_pages(), 0);
+    }
+
+    #[test]
+    fn share_prefix_survives_donor_drop_and_unshares_at_last_holder() {
+        // Intermediate drops must not release pages a sharer still
+        // references, and once only one holder remains nothing may still be
+        // marked shared. (The exact pool-outstanding leak check lives in
+        // tests/kv_paging.rs, where the whole test binary serializes its
+        // pool access — unit tests here run concurrently with other
+        // page-allocating tests, so counter-delta assertions would race.)
+        let d = 13;
+        let mut donor: PagedRows<f32> = PagedRows::with_page_rows(d, 2);
+        for _ in 0..6 {
+            donor.append_row().fill(1.0);
+        }
+        let a = donor.share_prefix(6);
+        let b = donor.share_prefix(4);
+        drop(donor); // sharers a and b still hold every page they see
+        let got: Vec<f32> = a.iter().copied().collect();
+        assert_eq!(got.len(), 6 * d);
+        assert!(got.iter().all(|&x| x == 1.0));
+        assert_eq!(a.shared_pages(), 2, "first two pages still shared with b");
+        drop(a);
+        let got: Vec<f32> = b.iter().copied().collect();
+        assert!(got.iter().all(|&x| x == 1.0));
+        assert_eq!(b.shared_pages(), 0, "sole surviving holder owns its pages");
+    }
+
+    #[test]
+    fn kvstate_share_prefix_copies_scales_for_every_storage() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let rows = rand_mat(&mut rng, 6, 4);
+        for kind in [PipelineKind::Fp32, PipelineKind::Fp16, PipelineKind::IntAttention] {
+            let mut donor = KvState::with_page_rows(kind, 4, 2);
+            donor.append(&rows, &rows);
+            let shared = donor.share_prefix(6);
+            assert_eq!(shared.len(), 6);
+            assert_eq!(shared.storage_name(), donor.storage_name());
+            assert!(shared.shared_pages() > 0);
+            if let (KvState::Int8(a), KvState::Int8(b)) = (&donor, &shared) {
+                assert_eq!(a.k.scale, b.k.scale);
+                assert_eq!(a.v.amax, b.v.amax);
+                let x: Vec<i8> = a.k.data.iter().copied().collect();
+                let y: Vec<i8> = b.k.data.iter().copied().collect();
+                assert_eq!(x, y);
+            }
+        }
     }
 
     #[test]

@@ -36,7 +36,22 @@ pub struct BatchPolicy {
     /// finished request's pages return to the pool the round it retires,
     /// which is what lets the next queued request admit. 0 disables the
     /// bound.
+    ///
+    /// With prefix sharing on, an adopted prefix's pages are **charged
+    /// once** — to the prefix index that pins them: each active request
+    /// reserves its projection *minus* the pages it adopted, and the
+    /// index's pinned pages join the reservation total. Under budget
+    /// pressure the engine evicts cached-but-idle index entries before
+    /// deferring a live request.
     pub max_kv_pages: usize,
+    /// Copy-on-write prefix sharing across requests
+    /// (`crate::coordinator::prefix`): hash prompt prefixes at aligned
+    /// chunk boundaries, adopt the longest registered match by page
+    /// reference, and quantize only the unshared suffix. Byte-invisible by
+    /// construction (see the module docs); effective only when
+    /// `prefill_chunk > 0`. Defaults from `INTATTN_PREFIX_SHARE`
+    /// ([`crate::coordinator::prefix::default_prefix_share`]).
+    pub prefix_share: bool,
 }
 
 impl Default for BatchPolicy {
@@ -47,6 +62,7 @@ impl Default for BatchPolicy {
             shortest_first: true,
             prefill_chunk: 256,
             max_kv_pages: 0,
+            prefix_share: crate::coordinator::prefix::default_prefix_share(),
         }
     }
 }

@@ -14,6 +14,13 @@
 //!      ([`crate::attention::state::PagedRows`]), so the page count equals
 //!      allocated capacity exactly — the old byte budget estimated payload
 //!      from `len` and could undercount peak RSS by the `Vec` growth slack.
+//!      With **prefix sharing** on ([`BatchPolicy::prefix_share`]), an
+//!      admission first consults the [`PrefixIndex`]: if the prompt's
+//!      longest aligned prefix is registered, the request **adopts** the
+//!      snapshot's pages by copy-on-write reference and starts its prefill
+//!      at the adopted position — and its budget charge drops by the
+//!      adopted pages, so a shared prefix is charged once, by whichever
+//!      request first computed it.
 //!   3. Advance prefills (one chunk per request per round), then **one
 //!      batched decode step** over every decoding request: the per-layer
 //!      Q/K/V projections of the B active sequences stack into single
@@ -27,9 +34,34 @@
 //!   4. Retire finished requests, replying on their channels. Dropping a
 //!      retired request's [`KvCache`] returns its pages to the pool **that
 //!      same round**, which is what lets the next KV-deferred request in
-//!      the queue admit (and reuse those very pages). A request the
-//!      context cuts off early is truncated (never padded) and finishes
-//!      with [`FinishReason::Length`].
+//!      the queue admit (and reuse those very pages); pages the prefix
+//!      index still references stay alive for future adopters and are
+//!      released when their entry is evicted. A request the context cuts
+//!      off early is truncated (never padded) and finishes with
+//!      [`FinishReason::Length`].
+//!
+//! ## Copy-on-write prefix sharing (ownership rules)
+//!
+//! The scheduler owns one [`PrefixIndex`] (built only when
+//! `policy.prefix_share && policy.prefill_chunk > 0`). Each prefill chunk
+//! that ends exactly on an aligned boundary (`lcm(page_rows,
+//! prefill_chunk)` tokens) **registers** a snapshot: the prompt run so far
+//! plus a [`KvCache::share_prefix`] of the live cache — page references,
+//! not copies, paired with the integer states' running scales *at that
+//! boundary* (that pairing is what makes the snapshot adoptable
+//! byte-identically; see `crate::coordinator::prefix`). A request may adopt
+//! at admission or **mid-prefill** (a later round may register a longer
+//! prefix of the same prompt — trailing same-prompt requests upgrade to it,
+//! which is how N simultaneous identical prompts converge onto one page
+//! set). After adoption nobody owns shared pages exclusively: the donor,
+//! the index entry and every adopter each hold references, every one of
+//! them forks a shared page before mutating it (tail-page append at an
+//! unaligned boundary, INT8 re-scale when a suffix row grows the running
+//! abs-max), and the last holder returns the page to the pool. Sharing is
+//! therefore *invisible*: outputs are byte-identical to unshared execution
+//! (`decode_equivalence` + `serving_e2e` assert this), only the
+//! `prefix_hits` / `shared_kv_pages` / `kv_cow_forks` metrics and the page
+//! traffic change.
 //!
 //! Single scheduler thread: on the target class of devices (and this host)
 //! compute is the bottleneck, not I/O, so the engine keeps the model on one
@@ -44,9 +76,10 @@
 //! useful work during decode: a single sequence's 1-row GEMM cannot be
 //! split across workers, a batch of sequences can.
 
-use crate::attention::PipelineKind;
+use crate::attention::{kv_page_rows, PipelineKind};
 use crate::coordinator::batcher::{select_admissions, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::prefix::{PrefixIndex, PREFIX_INDEX_CAP};
 use crate::coordinator::request::{FinishReason, Request, Response, SubmitError};
 use crate::model::lm::{sample_row, KvCache, TinyLm};
 use crate::model::weights::Weights;
@@ -82,6 +115,11 @@ struct Active {
     cache: KvCache,
     /// Prompt tokens already prefilled into the cache.
     prompt_pos: usize,
+    /// Prompt tokens adopted from the prefix index (copy-on-write page
+    /// references) rather than computed — the request's KV budget charge
+    /// excludes their pages (a shared prefix is charged once, by the
+    /// request that first computed it).
+    adopted_rows: usize,
     generated: Vec<u16>,
     /// Set when the model's context fills before `gen_len` tokens: the
     /// request retires with what it actually generated
@@ -233,6 +271,14 @@ fn scheduler_loop(
     let cfg = *lm.config();
     let mut waiting: VecDeque<Request> = VecDeque::new();
     let mut active: Vec<Active> = Vec::new();
+    // Prefix-sharing index (None when disabled, or when prefill chunking is
+    // off — without chunk boundaries a shared prefix could not be resumed
+    // byte-identically; see `crate::coordinator::prefix`).
+    let mut prefix_index: Option<PrefixIndex> = if opts.policy.prefix_share {
+        PrefixIndex::new(kv_page_rows(), opts.policy.prefill_chunk, PREFIX_INDEX_CAP)
+    } else {
+        None
+    };
     // Head-of-line guarantee for the KV budget: once a request is deferred
     // for KV memory, its id is pinned here and no other request may admit
     // ahead of it on any later round (shortest-first would otherwise let a
@@ -306,13 +352,52 @@ fn scheduler_loop(
         let projected_tokens =
             |req: &Request| (req.prompt.len() + req.gen_len).min(cfg.max_seq);
         let projected_pages = |req: &Request| KvCache::pages_for_tokens(projected_tokens(req), &cfg);
-        let mut kv_reserved: usize = active.iter().map(|a| projected_pages(&a.req)).sum();
+        // Shared prefix pages are charged once: every active request's
+        // reservation excludes the pages it adopted by reference (adopted
+        // lengths are page-aligned, so the subtraction removes exactly the
+        // whole pages the adopter did not allocate).
+        let mut kv_reserved: usize = active
+            .iter()
+            .map(|a| projected_pages(&a.req) - KvCache::pages_for_tokens(a.adopted_rows, &cfg))
+            .sum();
+        // Prefix-index pages count against the same physical budget: shared
+        // prefix pages are charged **once** — to the index that pins them —
+        // while every adopter's reservation excludes them. (Entry sums may
+        // overlap chained snapshots of one prompt, which only overcharges —
+        // the safe direction; the one uncovered window is pages adopted
+        // from a since-evicted entry, which stay resident with their
+        // adopters but charged to none until those adopters retire.)
+        let pinned = |ix: &Option<PrefixIndex>| ix.as_ref().map_or(0, |i| i.pinned_pages());
         let mut deferred: Vec<Request> = Vec::new();
         for req in admitted {
-            let projected = projected_pages(&req);
+            // Peek the longest adoptable prefix — a hash scan only; the CoW
+            // cache is materialized after the request passes admission, so
+            // deferred requests never pay for page-reference clones.
+            let adopted_rows =
+                prefix_index.as_ref().map_or(0, |ix| ix.match_len(&req.prompt, 0));
+            let projected =
+                projected_pages(&req) - KvCache::pages_for_tokens(adopted_rows, &cfg);
+            // Under budget pressure, cached-but-idle prefixes yield first:
+            // evict index entries (oldest first, sparing only the exact
+            // entry this candidate is about to adopt — evicting it would
+            // invalidate the peeked discount) before deferring a live
+            // request. Skipped when eviction cannot change the outcome:
+            // a candidate behind the kv_head pin defers regardless, and
+            // with an empty active set the over-budget bypass admits
+            // regardless — draining the cache would be pure waste.
+            if opts.policy.max_kv_pages > 0
+                && !active.is_empty()
+                && !kv_head.is_some_and(|id| id != req.id)
+            {
+                while kv_reserved + pinned(&prefix_index) + projected > opts.policy.max_kv_pages
+                    && prefix_index
+                        .as_mut()
+                        .is_some_and(|ix| ix.evict_oldest_excluding(&req.prompt[..adopted_rows]))
+                {}
+            }
             if kv_head.is_some_and(|id| id != req.id)
                 || (opts.policy.max_kv_pages > 0
-                    && kv_reserved + projected > opts.policy.max_kv_pages
+                    && kv_reserved + pinned(&prefix_index) + projected > opts.policy.max_kv_pages
                     && !active.is_empty())
             {
                 // Over budget (or behind a previously KV-deferred request):
@@ -330,10 +415,27 @@ fn scheduler_loop(
                 kv_head = None;
             }
             kv_reserved += projected;
+            // Materialize the adoption the projection was charged for
+            // (nothing registers between the peek and here, and eviction
+            // spared the candidate's own match, so the peeked length is
+            // still valid — adopt_at re-verifies the tokens without
+            // re-scanning the whole prompt chain).
+            let cache = match prefix_index
+                .as_ref()
+                .and_then(|ix| ix.adopt_at(&req.prompt, adopted_rows))
+            {
+                Some((rows, cache)) => {
+                    debug_assert_eq!(rows, adopted_rows, "peeked match must survive admission");
+                    metrics.on_prefix_hit(rows, cache.pages());
+                    cache
+                }
+                None => lm.new_cache(),
+            };
             let queue_us = req.arrived.elapsed().as_micros() as u64;
             active.push(Active {
-                cache: lm.new_cache(),
-                prompt_pos: 0,
+                cache,
+                prompt_pos: adopted_rows,
+                adopted_rows,
                 generated: Vec::new(),
                 capped: false,
                 queue_us,
@@ -357,6 +459,29 @@ fn scheduler_loop(
             if !a.prefilling() {
                 continue;
             }
+            // Mid-prefill adoption upgrade: a donor ahead of us (possibly in
+            // this very round — requests are advanced in admission order)
+            // may have registered a longer prefix of this prompt since our
+            // last chunk. Our own computed rows [0, prompt_pos) are
+            // byte-identical to the snapshot's (same tokens, same chunk
+            // boundaries), so jumping the cache forward to the shared run
+            // changes nothing observable — it just stops re-computing what
+            // a sharer already paid for. This is how N simultaneous
+            // identical prompts converge onto one set of prefix pages.
+            let upgrade =
+                prefix_index.as_ref().and_then(|ix| ix.adopt(&a.req.prompt, a.prompt_pos));
+            if let Some((rows, cache)) = upgrade {
+                // Incremental accounting on the same basis as the token
+                // count: only pages for rows this request never computed
+                // (beyond prompt_pos) count as "adopted instead of
+                // allocated" — pages it built itself and is now swapping
+                // for references were allocated either way.
+                let new_pages = cache.pages() - KvCache::pages_for_tokens(a.prompt_pos, &cfg);
+                metrics.on_prefix_hit(rows - a.prompt_pos, new_pages);
+                a.cache = cache; // own pages drop back to the pool
+                a.prompt_pos = rows;
+                a.adopted_rows = rows;
+            }
             let chunk = if opts.policy.prefill_chunk == 0 {
                 a.req.prompt.len()
             } else {
@@ -366,6 +491,15 @@ fn scheduler_loop(
             let logits = lm.forward(&a.req.prompt[a.prompt_pos..end], Some(&mut a.cache));
             metrics.on_prefill_tokens(end - a.prompt_pos);
             a.prompt_pos = end;
+            // Register a snapshot at every aligned chunk boundary: page
+            // references plus the running scales that cover exactly the
+            // rows prefilled so far (the byte-identity precondition for
+            // later adopters).
+            if let Some(ix) = prefix_index.as_mut() {
+                if ix.aligned(a.prompt_pos) {
+                    ix.register(&a.req.prompt[..a.prompt_pos], &a.cache);
+                }
+            }
             if !a.prefilling() {
                 // Prefill complete: sample the first token.
                 let first = sample_row(

@@ -25,11 +25,22 @@ pub struct MetricsInner {
     /// pipelines).
     pub peak_kv_bytes: usize,
     /// Max total KV pages held by active requests — the unit the admission
-    /// budget (`BatchPolicy::max_kv_pages`) bounds.
+    /// budget (`BatchPolicy::max_kv_pages`) bounds. Summed per holder, so
+    /// under prefix sharing a page adopted by several live requests counts
+    /// once per sharer (logical residency); physical page traffic is the
+    /// pool counters' domain.
     pub peak_kv_pages: usize,
     /// Tail-page utilization (stored rows / allocated row slots) sampled at
     /// the page peak — how much of the reserved page capacity held data.
     pub kv_tail_utilization: f64,
+    /// Prompt-prefix adoptions: requests that started from a shared
+    /// copy-on-write prefix instead of re-quantizing it.
+    pub prefix_hits: u64,
+    /// Prompt tokens those adoptions skipped re-computing (cumulative).
+    pub shared_prefix_tokens: u64,
+    /// KV pages adopted by reference instead of allocated (cumulative over
+    /// adoptions; every adopted page is shared at adoption time).
+    pub shared_kv_pages: u64,
 }
 
 impl Default for MetricsInner {
@@ -48,6 +59,9 @@ impl Default for MetricsInner {
             peak_kv_bytes: 0,
             peak_kv_pages: 0,
             kv_tail_utilization: 0.0,
+            prefix_hits: 0,
+            shared_prefix_tokens: 0,
+            shared_kv_pages: 0,
         }
     }
 }
@@ -109,13 +123,22 @@ impl Metrics {
         self.0.lock().unwrap().prefill_tokens += n as u64;
     }
 
+    /// Record one prefix adoption: `tokens` prompt positions and `pages` KV
+    /// pages taken by reference instead of recomputed/allocated.
+    pub fn on_prefix_hit(&self, tokens: usize, pages: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.prefix_hits += 1;
+        m.shared_prefix_tokens += tokens as u64;
+        m.shared_kv_pages += pages as u64;
+    }
+
     /// Snapshot for reporting. Page-pool counters come from the
     /// process-wide pools ([`crate::attention::page_pool_stats`]) — they
     /// are monotone process totals, not per-engine deltas.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.0.lock().unwrap();
         let elapsed_s = m.started.elapsed().as_secs_f64().max(1e-9);
-        let (kv_pages_allocated, kv_pages_recycled) = crate::attention::page_pool_stats();
+        let pool = crate::attention::page_pool_stats();
         MetricsSnapshot {
             submitted: m.submitted,
             rejected: m.rejected,
@@ -134,8 +157,12 @@ impl Metrics {
             peak_kv_bytes: m.peak_kv_bytes,
             peak_kv_pages: m.peak_kv_pages,
             kv_tail_utilization: m.kv_tail_utilization,
-            kv_pages_allocated,
-            kv_pages_recycled,
+            prefix_hits: m.prefix_hits,
+            shared_prefix_tokens: m.shared_prefix_tokens,
+            shared_kv_pages: m.shared_kv_pages,
+            kv_pages_allocated: pool.allocated,
+            kv_pages_recycled: pool.recycled,
+            kv_cow_forks: pool.cow_forks,
         }
     }
 }
@@ -158,14 +185,24 @@ pub struct MetricsSnapshot {
     pub per_token_mean_us: f64,
     pub peak_active: usize,
     pub peak_kv_bytes: usize,
-    /// Peak concurrent KV pages across active requests.
+    /// Peak concurrent KV pages across active requests (per holder: a
+    /// prefix-shared page counts once per live sharer).
     pub peak_kv_pages: usize,
     /// Stored rows / allocated row slots at the page peak.
     pub kv_tail_utilization: f64,
+    /// Requests that adopted a shared prompt prefix (copy-on-write pages).
+    pub prefix_hits: u64,
+    /// Prompt tokens adoption skipped re-computing (cumulative).
+    pub shared_prefix_tokens: u64,
+    /// KV pages adopted by reference instead of allocated (cumulative).
+    pub shared_kv_pages: u64,
     /// Process-wide pages allocated fresh from the allocator (monotone).
     pub kv_pages_allocated: u64,
     /// Process-wide pages recycled from the pool free list (monotone).
     pub kv_pages_recycled: u64,
+    /// Process-wide copy-on-write page forks — shared pages copied before a
+    /// divergent append or re-scale remap (monotone).
+    pub kv_cow_forks: u64,
 }
 
 impl MetricsSnapshot {
@@ -173,7 +210,8 @@ impl MetricsSnapshot {
         format!(
             "requests: {} ok / {} rejected / {} submitted | tokens: {} prefill + {} decode \
              | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms | peak batch {} \
-             | peak kv {:.1} KiB ({} pages, {:.0}% util) | pool {} alloc / {} recycled",
+             | peak kv {:.1} KiB ({} pages, {:.0}% util) | pool {} alloc / {} recycled \
+             | prefix hits {} ({} pages shared, {} cow forks)",
             self.completed,
             self.rejected,
             self.submitted,
@@ -189,6 +227,9 @@ impl MetricsSnapshot {
             100.0 * self.kv_tail_utilization,
             self.kv_pages_allocated,
             self.kv_pages_recycled,
+            self.prefix_hits,
+            self.shared_kv_pages,
+            self.kv_cow_forks,
         )
     }
 }
@@ -220,6 +261,8 @@ mod tests {
         m.on_kv_bytes(2048);
         m.on_kv_pages(10, 18, 20);
         m.on_kv_pages(4, 4, 8); // below peak: utilization sample kept
+        m.on_prefix_hit(64, 12);
+        m.on_prefix_hit(64, 12);
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected, 1);
@@ -230,10 +273,14 @@ mod tests {
         assert_eq!(s.peak_kv_bytes, 2048);
         assert_eq!(s.peak_kv_pages, 10);
         assert!((s.kv_tail_utilization - 0.9).abs() < 1e-12);
+        assert_eq!(s.prefix_hits, 2);
+        assert_eq!(s.shared_prefix_tokens, 128);
+        assert_eq!(s.shared_kv_pages, 24);
         assert!(s.ttft_p50_us > 0.0);
         let rendered = s.render();
         assert!(rendered.contains("requests: 1 ok"));
         assert!(rendered.contains("10 pages"), "{rendered}");
         assert!(rendered.contains("recycled"), "{rendered}");
+        assert!(rendered.contains("prefix hits 2"), "{rendered}");
     }
 }

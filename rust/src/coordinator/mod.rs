@@ -11,6 +11,7 @@
 pub mod request;
 pub mod metrics;
 pub mod batcher;
+pub mod prefix;
 pub mod engine;
 
 pub use engine::{Engine, EngineHandle, EngineOptions};

@@ -1,0 +1,383 @@
+//! Request-level prefix sharing: a hash index from prompt-token prefixes to
+//! copy-on-write KV-cache snapshots, so N requests carrying the same system
+//! prompt cost **one** set of prefix pages and **one** quantization pass
+//! plus per-request suffixes.
+//!
+//! ## Why alignment makes sharing invisible
+//!
+//! The hard invariant is that sharing must be *byte-invisible*: a request
+//! that adopts a prefix must produce exactly the outputs it would have
+//! produced computing the prefix itself. Two mechanisms interact:
+//!
+//! * **Pages** — a snapshot's page run is adopted by reference
+//!   ([`KvCache::share_prefix`]); any later rewrite (tail-page append, INT8
+//!   re-scale remap) forks the shared page first, so sharers never observe
+//!   each other (see `crate::attention::state`).
+//! * **Scales and chunk boundaries** — the integer pipelines quantize each
+//!   prefill chunk's query block per call and carry running K/V scales, so
+//!   resident bytes depend on *where the chunk boundaries fell*. A snapshot
+//!   is therefore only adoptable if (a) it was taken when the donor's
+//!   running scales covered exactly the snapshotted rows, and (b) the
+//!   adopter's remaining chunk boundaries coincide with the boundaries an
+//!   unshared run would have used.
+//!
+//! Both hold iff snapshots live only at multiples of
+//! `align = lcm(page_rows, prefill_chunk)`: every such boundary is hit
+//! exactly by the engine's chunk schedule (chunks step `prefill_chunk`
+//! tokens from position 0), prefix pages are whole pages (the donor's later
+//! appends open fresh pages instead of touching shared ones), and an
+//! adopter resuming at a multiple of `prefill_chunk` reproduces the
+//! unshared boundary sequence. With chunking disabled (`prefill_chunk ==
+//! 0`) no boundary can be reproduced, so the index is simply not built.
+//!
+//! Keys are chained FNV-1a hashes of `align`-sized token chunks (vLLM-style
+//! block hashing), and every hit is verified by full token comparison, so a
+//! hash collision can never splice the wrong prefix into a request. Entries
+//! hold page *references*; a bounded FIFO eviction caps how many pages the
+//! index pins once donors retire.
+
+use crate::model::lm::KvCache;
+use std::collections::{HashMap, VecDeque};
+use std::sync::OnceLock;
+
+/// Entries the index keeps before evicting the oldest (each entry pins its
+/// snapshot's pages until evicted).
+pub const PREFIX_INDEX_CAP: usize = 32;
+
+/// Default on/off for prefix sharing: `INTATTN_PREFIX_SHARE` (`0`/`false`/
+/// `off` disable; anything else — including unset — enables). Snapshotted
+/// once per process like the page-size and thread-count knobs; tests that
+/// need both modes set [`crate::coordinator::batcher::BatchPolicy::prefix_share`]
+/// directly instead of mutating the environment.
+pub fn default_prefix_share() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| prefix_share_from(std::env::var("INTATTN_PREFIX_SHARE").ok().as_deref()))
+}
+
+/// Pure policy behind [`default_prefix_share`], unit-testable without
+/// touching the process environment.
+pub(crate) fn prefix_share_from(env: Option<&str>) -> bool {
+    !matches!(env, Some("0") | Some("false") | Some("off"))
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// Chained FNV-1a over token chunks: `h_n = fnv(h_{n-1}, chunk_n)`, so all
+/// aligned prefix hashes of a prompt come out of one linear pass.
+fn fnv1a(mut h: u64, tokens: &[u16]) -> u64 {
+    for &t in tokens {
+        h = (h ^ t as u64).wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+struct Frozen {
+    /// The exact token run the snapshot covers — every lookup hit is
+    /// verified against it, so hash collisions cannot splice wrong pages.
+    tokens: Vec<u16>,
+    /// Page-sharing snapshot taken when the donor's cache held exactly
+    /// `tokens.len()` positions (scales cover exactly the shared rows).
+    cache: KvCache,
+}
+
+/// The admission-time prefix index. Owned by the scheduler thread (no
+/// locking); dropped with the engine, releasing every pinned page.
+pub struct PrefixIndex {
+    align: usize,
+    cap: usize,
+    entries: HashMap<u64, Frozen>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<u64>,
+}
+
+impl PrefixIndex {
+    /// Build an index for the given page/chunk geometry, or `None` when
+    /// sharing cannot be byte-invisible (chunking disabled — there is no
+    /// boundary an adopter could resume from without changing the unshared
+    /// run's quantization granularity).
+    pub fn new(page_rows: usize, prefill_chunk: usize, cap: usize) -> Option<PrefixIndex> {
+        if prefill_chunk == 0 || page_rows == 0 {
+            return None;
+        }
+        Some(PrefixIndex {
+            align: lcm(page_rows, prefill_chunk),
+            cap: cap.max(1),
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+        })
+    }
+
+    /// Registration/adoption granularity: `lcm(page_rows, prefill_chunk)`.
+    pub fn align(&self) -> usize {
+        self.align
+    }
+
+    /// Is `pos` a snapshot boundary (aligned, non-zero)?
+    pub fn aligned(&self, pos: usize) -> bool {
+        pos > 0 && pos % self.align == 0
+    }
+
+    /// Entries currently held (each pins one snapshot's pages).
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// KV pages the entries currently pin (page references held by the
+    /// snapshots). Chained entries of one prompt alias the same physical
+    /// pages, so this sum is an upper bound on distinct pinned pages —
+    /// the conservative direction for the engine's page-budget charge
+    /// (shared prefix pages are charged once, to the index).
+    pub fn pinned_pages(&self) -> usize {
+        self.entries.values().map(|f| f.cache.pages()).sum()
+    }
+
+    /// Evict the oldest entry whose token run is not exactly `keep`,
+    /// releasing its page references. The engine calls this under
+    /// page-budget pressure with `keep` = the token run the pressured
+    /// candidate is about to adopt (empty when it matched nothing), so
+    /// cached-but-idle prefixes — including *shorter chained snapshots of
+    /// the same prompt*, whose pages overlap the kept entry's and only
+    /// inflate [`Self::pinned_pages`] — yield to live admissions without
+    /// invalidating the peeked match. Returns false when no entry is
+    /// evictable — at that point at most the kept entry remains, so the
+    /// pinned-page sum is overlap-free (exact).
+    pub fn evict_oldest_excluding(&mut self, keep: &[u16]) -> bool {
+        let pos = self
+            .order
+            .iter()
+            .position(|k| !self.entries.get(k).is_some_and(|f| f.tokens[..] == *keep));
+        match pos {
+            Some(i) => {
+                let key = self.order.remove(i).expect("position valid");
+                self.entries.remove(&key);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Chain hash of `prefix` (whole aligned chunks only).
+    fn key_of(&self, prefix: &[u16]) -> u64 {
+        debug_assert!(self.aligned(prefix.len()));
+        prefix.chunks(self.align).fold(FNV_SEED, fnv1a)
+    }
+
+    /// Record a snapshot of `cache`'s first `prefix.len()` positions.
+    /// `prefix` must be the prompt run the cache was prefilled with, its
+    /// length must be an aligned boundary, and the cache must hold exactly
+    /// that many positions (so the integer states' running scales describe
+    /// precisely the shared rows). First writer wins; an existing entry for
+    /// the same token run is kept (its pages are already shared around).
+    pub fn register(&mut self, prefix: &[u16], cache: &KvCache) {
+        debug_assert_eq!(cache.len, prefix.len(), "snapshot must cover exactly the prefix");
+        if !self.aligned(prefix.len()) {
+            return;
+        }
+        let key = self.key_of(prefix);
+        if self.entries.contains_key(&key) {
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            if let Some(old) = self.order.pop_front() {
+                self.entries.remove(&old); // dropping the Frozen releases its page refs
+            }
+        }
+        let frozen = Frozen { tokens: prefix.to_vec(), cache: cache.share_prefix(prefix.len()) };
+        self.entries.insert(key, frozen);
+        self.order.push_back(key);
+    }
+
+    /// Length of the longest adoptable prefix of `prompt` strictly beyond
+    /// `beyond` (0 = none): aligned, registered, token-verified, and short
+    /// enough to leave at least one prompt token to prefill (the last
+    /// token's logits are what the first sampled token comes from).
+    pub fn match_len(&self, prompt: &[u16], beyond: usize) -> usize {
+        if prompt.len() <= 1 {
+            return 0;
+        }
+        let max_len = prompt.len() - 1;
+        let mut h = FNV_SEED;
+        let mut best = 0;
+        for n in 1..=max_len / self.align {
+            let len = n * self.align;
+            h = fnv1a(h, &prompt[len - self.align..len]);
+            if len <= beyond {
+                continue;
+            }
+            if self.entries.get(&h).is_some_and(|e| e.tokens == prompt[..len]) {
+                best = len;
+            }
+        }
+        best
+    }
+
+    /// Adopt the longest registered prefix of `prompt` strictly beyond
+    /// position `beyond` (the caller's already-prefilled length — pass 0 at
+    /// admission). Returns the adopted length and a cache aliasing the
+    /// snapshot's pages copy-on-write; the caller replaces its cache with
+    /// it and resumes prefill at that position. Because registration and
+    /// adoption both live on aligned boundaries, the resumed chunk
+    /// schedule is exactly the unshared one — sharing stays byte-invisible.
+    pub fn adopt(&self, prompt: &[u16], beyond: usize) -> Option<(usize, KvCache)> {
+        self.adopt_at(prompt, self.match_len(prompt, beyond))
+    }
+
+    /// [`Self::adopt`] for a length already known from a
+    /// [`Self::match_len`] peek — hashes only the `len`-token prefix
+    /// instead of re-scanning the whole prompt chain (the engine peeks for
+    /// its budget projection first and materializes the CoW cache only
+    /// after the request passes admission). Verifies the entry still
+    /// token-matches; returns `None` for `len == 0`.
+    pub fn adopt_at(&self, prompt: &[u16], len: usize) -> Option<(usize, KvCache)> {
+        if len == 0 || len > prompt.len() || !self.aligned(len) {
+            return None;
+        }
+        let entry = self.entries.get(&self.key_of(&prompt[..len]))?;
+        if entry.tokens != prompt[..len] {
+            return None;
+        }
+        Some((len, entry.cache.share_prefix(len)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::PipelineKind;
+    use crate::model::config::ModelConfig;
+    use crate::model::lm::TinyLm;
+    use crate::model::weights::Weights;
+
+    fn lm() -> TinyLm {
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 64, mlp_mult: 2 };
+        TinyLm::new(Weights::random(cfg, 5), PipelineKind::IntAttention)
+    }
+
+    fn prefilled(lm: &mut TinyLm, tokens: &[u16], chunk: usize) -> KvCache {
+        let mut c = lm.new_cache();
+        for start in (0..tokens.len()).step_by(chunk) {
+            let end = (start + chunk).min(tokens.len());
+            let _ = lm.forward(&tokens[start..end], Some(&mut c));
+        }
+        c
+    }
+
+    #[test]
+    fn prefix_share_env_policy() {
+        assert!(prefix_share_from(None));
+        assert!(prefix_share_from(Some("1")));
+        assert!(prefix_share_from(Some("yes")));
+        assert!(!prefix_share_from(Some("0")));
+        assert!(!prefix_share_from(Some("false")));
+        assert!(!prefix_share_from(Some("off")));
+    }
+
+    #[test]
+    fn alignment_is_lcm_and_chunk_zero_disables() {
+        assert!(PrefixIndex::new(64, 0, 8).is_none(), "no chunking → no sharing");
+        let ix = PrefixIndex::new(4, 6, 8).unwrap();
+        assert_eq!(ix.align(), 12);
+        assert!(ix.aligned(24));
+        assert!(!ix.aligned(0));
+        assert!(!ix.aligned(18));
+        assert_eq!(PrefixIndex::new(2, 8, 8).unwrap().align(), 8);
+    }
+
+    #[test]
+    fn register_then_adopt_longest_verified_match() {
+        let mut lm = lm();
+        let mut ix = PrefixIndex::new(2, 4, 8).unwrap(); // align 4
+        let prompt: Vec<u16> = (0..12).map(|i| (i * 3 % 32) as u16).collect();
+        let c8 = prefilled(&mut lm, &prompt[..8], 4);
+        ix.register(&prompt[..4], &prefilled(&mut lm, &prompt[..4], 4));
+        ix.register(&prompt[..8], &c8);
+        // Longest match below the last token wins.
+        let (len, cache) = ix.adopt(&prompt, 0).expect("hit");
+        assert_eq!(len, 8);
+        assert_eq!(cache.len, 8);
+        assert!(cache.shared_pages() > 0, "adoption must alias, not copy");
+        // `beyond` filters matches the caller already passed.
+        assert_eq!(ix.match_len(&prompt, 8), 0);
+        assert_eq!(ix.match_len(&prompt, 4), 8);
+        // adopt_at re-verifies a peeked length without a full re-scan.
+        let (len, cache) = ix.adopt_at(&prompt, 8).expect("peeked length adoptable");
+        assert_eq!((len, cache.len), (8, 8));
+        assert!(ix.adopt_at(&prompt, 0).is_none());
+        assert!(ix.adopt_at(&prompt, 6).is_none(), "unaligned length never adopts");
+        // A prompt diverging inside the first chunk misses entirely.
+        let mut other = prompt.clone();
+        other[1] ^= 1;
+        assert_eq!(ix.match_len(&other, 0), 0);
+        // A prompt equal to a registered prefix cannot adopt all of itself
+        // (no token left to prefill): it falls back to the shorter entry.
+        assert_eq!(ix.match_len(&prompt[..8], 0), 4);
+    }
+
+    #[test]
+    fn eviction_is_fifo_and_bounded() {
+        let mut lm = lm();
+        let mut ix = PrefixIndex::new(2, 2, 2).unwrap(); // cap 2, align 2
+        let prompts: Vec<Vec<u16>> = (0..3u16).map(|s| vec![s + 1, s + 2]).collect();
+        for p in &prompts {
+            ix.register(p, &prefilled(&mut lm, p, 2));
+        }
+        assert_eq!(ix.entries(), 2);
+        // Oldest entry evicted; the two newest still adoptable.
+        assert_eq!(ix.match_len(&[1, 2, 9], 0), 0);
+        assert_eq!(ix.match_len(&[2, 3, 9], 0), 2);
+        assert_eq!(ix.match_len(&[3, 4, 9], 0), 2);
+    }
+
+    #[test]
+    fn pressure_eviction_spares_only_the_adopted_entry() {
+        let mut lm = lm();
+        let mut ix = PrefixIndex::new(2, 2, 8).unwrap(); // align 2
+        let mine: Vec<u16> = vec![5, 6, 7, 8, 9];
+        ix.register(&mine[..2], &prefilled(&mut lm, &mine[..2], 2));
+        ix.register(&[1, 2], &prefilled(&mut lm, &[1, 2], 2));
+        ix.register(&mine[..4], &prefilled(&mut lm, &mine[..4], 2));
+        assert!(ix.pinned_pages() > 0);
+        // A candidate adopting `mine[..4]` protects exactly that entry;
+        // everything else — other prompts AND shorter chained snapshots of
+        // the same prompt (their pages overlap the kept entry's and only
+        // inflate pinned_pages) — yields FIFO-first under pressure.
+        let keep = &mine[..4];
+        assert!(ix.evict_oldest_excluding(keep)); // mine[..2] (oldest)
+        assert!(ix.evict_oldest_excluding(keep)); // [1,2]
+        assert_eq!(ix.entries(), 1);
+        assert_eq!(ix.match_len(&mine, 0), 4, "adopted match survives pressure");
+        assert!(!ix.evict_oldest_excluding(keep), "kept entry is never evicted");
+        // Once only the kept entry remains, the pinned sum is overlap-free.
+        let kept_pages = ix.pinned_pages();
+        assert!(kept_pages > 0);
+        // With nothing to protect, eviction proceeds to empty.
+        assert!(ix.evict_oldest_excluding(&[]));
+        assert_eq!(ix.entries(), 0);
+        assert_eq!(ix.pinned_pages(), 0);
+    }
+
+    #[test]
+    fn register_ignores_unaligned_and_duplicate_prefixes() {
+        let mut lm = lm();
+        let mut ix = PrefixIndex::new(2, 4, 8).unwrap(); // align 4
+        let prompt: Vec<u16> = (0..6).map(|i| i as u16 + 1).collect();
+        ix.register(&prompt[..6], &prefilled(&mut lm, &prompt[..6], 4));
+        assert_eq!(ix.entries(), 0, "6 is not a multiple of align 4");
+        let c = prefilled(&mut lm, &prompt[..4], 4);
+        ix.register(&prompt[..4], &c);
+        ix.register(&prompt[..4], &c);
+        assert_eq!(ix.entries(), 1, "duplicate registration is a no-op");
+    }
+}

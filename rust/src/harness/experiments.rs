@@ -5,7 +5,10 @@
 //! Benchmarks default to this host's practical sizes; `INTATTN_FULL=1`
 //! extends sweeps to the paper's 16 K maximum.
 
-use crate::attention::{batch_row, build_pipeline, AttentionConfig, KvState, PipelineKind};
+use crate::attention::{
+    batch_row, build_pipeline, kv_page_rows, page_pool_stats, AttentionConfig, KvState,
+    PipelineKind,
+};
 use crate::energy::{EnergyModel, OpCounts};
 use crate::harness::fidelity::{eval_lm_fidelity, eval_sequences, exact_probs, LmFidelity, ProbFidelity};
 use crate::harness::workload::{clustered_qkv, random_qkv};
@@ -509,6 +512,171 @@ pub fn batched_decode_rows_json(rows: &[BatchedDecodeRow]) -> Vec<(String, f64)>
         out.push((format!("{key}:seq_tok_s"), r.seq_tok_s));
         out.push((format!("{key}:batch_tok_s"), r.batch_tok_s));
         out.push((format!("{key}:speedup"), r.speedup()));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Shared-system-prompt admission — prefix sharing vs unshared
+
+#[derive(Clone, Debug)]
+pub struct PrefixShareRow {
+    pub pipeline: PipelineKind,
+    /// Requests admitting the same system prompt.
+    pub requests: usize,
+    /// Shared prefix length (rows; page-aligned).
+    pub prefix_rows: usize,
+    /// Per-request unshared suffix length (rows).
+    pub suffix_rows: usize,
+    /// Prefix quantize-and-store passes: `requests` unshared, 1 shared.
+    pub unshared_quant_passes: usize,
+    pub shared_quant_passes: usize,
+    /// KV pages handed out by the pool (allocated + recycled) while
+    /// building all requests' resident states, per arm. The shared arm pays
+    /// one prefix page set plus per-request suffix pages.
+    pub unshared_pages: u64,
+    pub shared_pages: u64,
+    /// Wall time to bring all requests' states up (prefix + suffix), per
+    /// arm.
+    pub unshared_prefill_s: f64,
+    pub shared_prefill_s: f64,
+}
+
+impl PrefixShareRow {
+    pub fn speedup(&self) -> f64 {
+        if self.shared_prefill_s > 0.0 {
+            self.unshared_prefill_s / self.shared_prefill_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Admission cost of N same-prompt requests, unshared vs prefix-shared, at
+/// the single-head pipeline level: the unshared arm quantizes and stores
+/// the prefix N times; the shared arm computes it once, snapshots it
+/// ([`KvState::share_prefix`]) and every further request adopts the pages
+/// by copy-on-write reference, paying only its suffix. Pool handouts are
+/// exact here (the bench binary is single-threaded), so `*_pages` is the
+/// real page traffic of each arm; all states stay live until the arm is
+/// measured, modeling concurrent residency.
+pub fn prefix_share_sweep(
+    request_counts: &[usize],
+    prefix_target: usize,
+    suffix_rows: usize,
+    d: usize,
+) -> Vec<PrefixShareRow> {
+    let mut rng = Pcg64::seed_from_u64(37);
+    // Whole pages only: adoption shares page runs.
+    let prefix_rows = prefix_target.div_ceil(kv_page_rows()).max(1) * kv_page_rows();
+    let mut rows = Vec::new();
+    for &n in request_counts {
+        for kind in PipelineKind::headline() {
+            let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d));
+            let (pq, pk, pv) = random_qkv(&mut rng, prefix_rows, d, 1.0);
+            let suffixes: Vec<(MatF32, MatF32, MatF32)> =
+                (0..n).map(|_| random_qkv(&mut rng, suffix_rows, d, 1.0)).collect();
+
+            // Unshared: every request computes prefix + suffix itself.
+            let before = page_pool_stats();
+            let t0 = std::time::Instant::now();
+            let unshared: Vec<KvState> = suffixes
+                .iter()
+                .map(|(sq, sk, sv)| {
+                    let mut st = pipe.begin_state();
+                    crate::util::bench::black_box(pipe.prefill(&mut st, &pq, &pk, &pv));
+                    crate::util::bench::black_box(pipe.prefill(&mut st, sq, sk, sv));
+                    st
+                })
+                .collect();
+            let unshared_prefill_s = t0.elapsed().as_secs_f64();
+            let after = page_pool_stats();
+            let unshared_pages =
+                after.allocated + after.recycled - before.allocated - before.recycled;
+            drop(unshared);
+
+            // Shared: one prefix pass, N adoptions + suffixes.
+            let before = page_pool_stats();
+            let t0 = std::time::Instant::now();
+            let mut donor = pipe.begin_state();
+            crate::util::bench::black_box(pipe.prefill(&mut donor, &pq, &pk, &pv));
+            let snapshot = donor.share_prefix(prefix_rows);
+            let shared: Vec<KvState> = suffixes
+                .iter()
+                .map(|(sq, sk, sv)| {
+                    let mut st = snapshot.share_prefix(prefix_rows);
+                    crate::util::bench::black_box(pipe.prefill(&mut st, sq, sk, sv));
+                    st
+                })
+                .collect();
+            let shared_prefill_s = t0.elapsed().as_secs_f64();
+            let after = page_pool_stats();
+            let shared_pages =
+                after.allocated + after.recycled - before.allocated - before.recycled;
+            drop(shared);
+            drop(snapshot);
+            drop(donor);
+
+            rows.push(PrefixShareRow {
+                pipeline: kind,
+                requests: n,
+                prefix_rows,
+                suffix_rows,
+                unshared_quant_passes: n,
+                shared_quant_passes: 1,
+                unshared_pages,
+                shared_pages,
+                unshared_prefill_s,
+                shared_prefill_s,
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_prefix_share(rows: &[PrefixShareRow]) -> Table {
+    let mut t = Table::new(
+        "Shared-system-prompt admission — copy-on-write prefix sharing vs unshared (single head)",
+        &[
+            "pipeline",
+            "requests",
+            "prefix",
+            "suffix",
+            "prefix quant passes",
+            "kv pages",
+            "prefill ms",
+            "speedup",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.pipeline.name().into(),
+            r.requests.to_string(),
+            r.prefix_rows.to_string(),
+            r.suffix_rows.to_string(),
+            format!("{}→{}", r.unshared_quant_passes, r.shared_quant_passes),
+            format!("{}→{}", r.unshared_pages, r.shared_pages),
+            format!("{:.2}→{:.2}", r.unshared_prefill_s * 1e3, r.shared_prefill_s * 1e3),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    t
+}
+
+/// JSON payload for the prefix-share bench (label/value rows).
+pub fn prefix_share_rows_json(rows: &[PrefixShareRow]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for r in rows {
+        let key = format!("{}@n{}p{}", r.pipeline.name(), r.requests, r.prefix_rows);
+        out.push((format!("{key}:unshared_pages"), r.unshared_pages as f64));
+        out.push((format!("{key}:shared_pages"), r.shared_pages as f64));
+        out.push((format!("{key}:unshared_prefill_s"), r.unshared_prefill_s));
+        out.push((format!("{key}:shared_prefill_s"), r.shared_prefill_s));
+        out.push((format!("{key}:speedup"), r.speedup()));
+        out.push((
+            format!("{key}:quant_passes_saved"),
+            (r.unshared_quant_passes - r.shared_quant_passes) as f64,
+        ));
     }
     out
 }

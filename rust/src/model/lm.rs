@@ -125,6 +125,39 @@ impl KvCache {
         cfg.n_layers * cfg.n_heads * 2 * tokens.div_ceil(kv_page_rows())
     }
 
+    /// Pages (across every layer/head/side state) currently shared with
+    /// another cache — the refcount view behind the `shared_pages` metric.
+    pub fn shared_pages(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|heads| heads.iter())
+            .map(|s| s.shared_pages())
+            .sum()
+    }
+
+    /// A cache whose first `rows` positions alias this cache's pages
+    /// copy-on-write ([`KvState::share_prefix`] per layer/head state) — how
+    /// the coordinator's prefix index snapshots a prompt prefix and how an
+    /// adopting request starts with it. Every layer must already be
+    /// populated through `rows` positions, and byte-identity with unshared
+    /// execution requires `rows == self.len` at snapshot time (the integer
+    /// states' running scales then cover exactly the shared rows — the
+    /// engine only snapshots at aligned prefill-chunk boundaries).
+    pub fn share_prefix(&self, rows: usize) -> KvCache {
+        assert!(rows <= self.len, "cannot share {rows} of {} cached positions", self.len);
+        let layers = self
+            .layers
+            .iter()
+            .map(|heads| {
+                assert!(
+                    rows == 0 || !heads.is_empty(),
+                    "cannot share a prefix of an unpopulated layer"
+                );
+                heads.iter().map(|s| s.share_prefix(rows)).collect()
+            })
+            .collect();
+        KvCache { layers, len: rows, d_model: self.d_model }
+    }
 }
 
 /// The model. Cheap to clone conceptually but weights are large; the serving
@@ -580,6 +613,36 @@ mod tests {
                 assert_eq!(a.len, b.len);
                 assert_eq!(a.bytes(), b.bytes());
             }
+        }
+    }
+
+    #[test]
+    fn cache_share_prefix_is_invisible_to_decode() {
+        // Adopting a shared prefix (refcounted pages + pinned scales) must
+        // decode bit-identically to having prefilled the same tokens
+        // directly — and the donor must be unaffected by the adopter.
+        let cfg = ModelConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 32, mlp_mult: 2 };
+        let w = Weights::random(cfg, 3);
+        for kind in [PipelineKind::Fp32, PipelineKind::IntAttention] {
+            let mut lm = TinyLm::new(w.clone(), kind);
+            let prompt = [1u16, 9, 4, 22, 7, 13];
+            let mut donor = lm.new_cache();
+            let _ = lm.forward(&prompt, Some(&mut donor));
+            let mut adopted = donor.share_prefix(donor.len);
+            assert_eq!(adopted.len, prompt.len());
+            assert!(adopted.shared_pages() > 0, "adoption must alias pages");
+            // Oracle: an independent cache prefilled the same way.
+            let mut fresh = lm.new_cache();
+            let _ = lm.forward(&prompt, Some(&mut fresh));
+            let a = lm.decode_step(7, &mut adopted);
+            let b = lm.decode_step(7, &mut fresh);
+            assert_eq!(a.as_slice(), b.as_slice(), "{}", kind.name());
+            // The donor decodes as if the share never happened.
+            let mut fresh2 = lm.new_cache();
+            let _ = lm.forward(&prompt, Some(&mut fresh2));
+            let c = lm.decode_step(11, &mut donor);
+            let d = lm.decode_step(11, &mut fresh2);
+            assert_eq!(c.as_slice(), d.as_slice(), "{}", kind.name());
         }
     }
 

@@ -182,6 +182,163 @@ fn paged_states_byte_identical_across_page_sizes() {
     }
 }
 
+/// Quantized/native resident bytes + scale bookkeeping of a state, for
+/// exact content comparison across the shared and unshared paths.
+fn state_fingerprint(st: &KvState) -> Vec<u64> {
+    let mut out = Vec::new();
+    match st {
+        KvState::F32(s) => {
+            out.extend(s.k.iter().map(|x| x.to_bits() as u64));
+            out.extend(s.v.iter().map(|x| x.to_bits() as u64));
+        }
+        KvState::F16(s) => {
+            out.extend(s.k.iter().map(|x| x.0 as u64));
+            out.extend(s.v.iter().map(|x| x.0 as u64));
+        }
+        KvState::Int8(s) => {
+            out.extend(s.k.data.iter().map(|&x| x as u8 as u64));
+            out.extend(s.v.data.iter().map(|&x| x as u8 as u64));
+            out.push(s.k.scale.to_bits() as u64);
+            out.push(s.v.scale.to_bits() as u64);
+            out.push(s.k.amax.to_bits() as u64);
+            out.push(s.v.amax.to_bits() as u64);
+        }
+    }
+    out
+}
+
+#[test]
+fn shared_prefix_outputs_byte_identical_to_unshared() {
+    // The prefix-sharing acceptance criterion: a state that ADOPTS a shared
+    // prefix (copy-on-write page references + pinned scales) and then runs
+    // a suffix schedule must produce outputs — and resident bytes — exactly
+    // equal to a state that computed the whole schedule itself, for every
+    // pipeline kind. The donor then diverges with large-magnitude appends
+    // (forcing its INT8 re-scale to remap); the adopter must be unaffected
+    // because the remap forks the shared pages instead of rewriting them.
+    let (d, page_rows) = (16, 4);
+    // Prefix: two chunks ending page-aligned at row 12; suffix: one 5-row
+    // chunk + decode steps. The oracle runs the SAME boundaries (sharing is
+    // only byte-invisible under an identical chunk schedule — the integer
+    // pipelines quantize each chunk's query block per call).
+    let (prefix_rows, l) = (12, 20);
+    let chunk_bounds = [(0usize, 6usize), (6, 12), (12, 17)];
+    for kind in PipelineKind::all() {
+        let mut rng = Pcg64::seed_from_u64(1400);
+        let q = rand_mat(&mut rng, l, d);
+        let mut k = rand_mat(&mut rng, l, d);
+        let mut v = rand_mat(&mut rng, l, d);
+        for r in 0..l {
+            let gain = 1.0 + r as f32 * 0.2; // force re-scales along the way
+            for x in k.row_mut(r).iter_mut().chain(v.row_mut(r)) {
+                *x *= gain;
+            }
+        }
+        let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d));
+
+        // Donor computes the prefix; snapshot shares it at exactly len().
+        let chunk_of =
+            |st: &mut KvState, pipe: &mut dyn AttentionPipeline, r0: usize, r1: usize| {
+                pipe.prefill(st, &rows_of(&q, r0, r1), &rows_of(&k, r0, r1), &rows_of(&v, r0, r1))
+            };
+        let mut donor = KvState::with_page_rows(kind, d, page_rows);
+        for &(r0, r1) in &chunk_bounds[..2] {
+            let _ = chunk_of(&mut donor, pipe.as_mut(), r0, r1);
+        }
+        let snapshot = donor.share_prefix(prefix_rows);
+
+        // Unshared oracle: full schedule from scratch.
+        let mut oracle = KvState::with_page_rows(kind, d, page_rows);
+        let mut oracle_out: Vec<f32> = Vec::new();
+        for &(r0, r1) in &chunk_bounds {
+            let o = chunk_of(&mut oracle, pipe.as_mut(), r0, r1);
+            oracle_out.extend_from_slice(o.as_slice());
+        }
+
+        // Adopter: shared prefix + the same suffix schedule.
+        let mut adopter = snapshot.share_prefix(prefix_rows);
+        assert!(adopter.shared_pages() > 0, "{}: adoption must alias pages", kind.name());
+        let (r0, r1) = chunk_bounds[2];
+        let adopter_out = chunk_of(&mut adopter, pipe.as_mut(), r0, r1);
+        // Suffix prefill outputs must match the oracle's suffix rows.
+        assert_eq!(
+            adopter_out.as_slice(),
+            &oracle_out[prefix_rows * d..],
+            "{}: shared suffix prefill must be byte-identical",
+            kind.name()
+        );
+
+        // Donor diverges hard: huge rows grow its running abs-max, so its
+        // re-scale remap runs — over pages the snapshot/adopter still hold.
+        let mut big = rand_mat(&mut rng, 2, d);
+        for x in big.as_mut_slice() {
+            *x *= 40.0;
+        }
+        let _ = pipe.prefill(&mut donor, &rand_mat(&mut rng, 2, d), &big, &big);
+
+        // Decode steps on the adopter vs the oracle: still byte-identical,
+        // including the resident state content.
+        for r in 17..l {
+            let (q1, k1, v1) =
+                (rows_of(&q, r, r + 1), rows_of(&k, r, r + 1), rows_of(&v, r, r + 1));
+            let a = pipe.decode_step(&mut adopter, &q1, &k1, &v1);
+            let b = pipe.decode_step(&mut oracle, &q1, &k1, &v1);
+            assert_eq!(
+                a.as_slice(),
+                b.as_slice(),
+                "{}: decode at row {r} diverged after donor re-scale",
+                kind.name()
+            );
+        }
+        assert_eq!(
+            state_fingerprint(&adopter),
+            state_fingerprint(&oracle),
+            "{}: resident bytes/scales must match the unshared oracle",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn unaligned_share_forks_tail_page_on_first_divergent_append() {
+    // A share whose boundary lands mid-page aliases the tail page too; the
+    // first divergent append on the adopter must fork it (copy-on-write)
+    // and still reproduce the unshared oracle byte-for-byte — while the
+    // donor's resident bytes survive untouched.
+    let (d, page_rows, prefix_rows) = (8, 4, 6); // 6 rows = 1.5 pages
+    for kind in PipelineKind::all() {
+        let mut rng = Pcg64::seed_from_u64(1500);
+        let block = rand_mat(&mut rng, prefix_rows, d);
+        let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d));
+        let mut donor = KvState::with_page_rows(kind, d, page_rows);
+        let _ = pipe.prefill(&mut donor, &block, &block, &block);
+        let donor_before = state_fingerprint(&donor);
+
+        let mut oracle = KvState::with_page_rows(kind, d, page_rows);
+        let _ = pipe.prefill(&mut oracle, &block, &block, &block);
+
+        let mut adopter = donor.share_prefix(prefix_rows);
+        assert_eq!(adopter.shared_pages(), 4, "{}: 2 pages × K/V shared", kind.name());
+        for r in 0..3 {
+            let (q1, k1, v1) = (
+                rand_mat(&mut rng, 1, d),
+                rand_mat(&mut rng, 1, d),
+                rand_mat(&mut rng, 1, d),
+            );
+            let a = pipe.decode_step(&mut adopter, &q1, &k1, &v1);
+            let b = pipe.decode_step(&mut oracle, &q1, &k1, &v1);
+            assert_eq!(a.as_slice(), b.as_slice(), "{} decode {r}", kind.name());
+        }
+        assert_eq!(state_fingerprint(&adopter), state_fingerprint(&oracle), "{}", kind.name());
+        assert_eq!(
+            state_fingerprint(&donor),
+            donor_before,
+            "{}: donor must never observe the adopter's appends",
+            kind.name()
+        );
+    }
+}
+
 #[test]
 fn batched_decode_bit_identical_to_sequential_for_every_pipeline_kind() {
     // decode_step_batch must be *bit-identical* to B sequential decode_step

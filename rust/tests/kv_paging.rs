@@ -15,6 +15,17 @@ use intattention::attention::{
 use intattention::tensor::MatF32;
 use intattention::util::proptest::{check, Config};
 use intattention::util::prng::Pcg64;
+use std::sync::Mutex;
+
+/// Tests in this binary that assert *exact* page-pool counter deltas take
+/// this lock: the pools are process-wide, so only serialization (within
+/// this test process — each integration-test file is its own process)
+/// makes `outstanding()` comparisons sound.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn pool_lock() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, gain: f32) -> MatF32 {
     MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal() * gain).collect())
@@ -26,6 +37,7 @@ const PAGE_SIZES: [usize; 4] = [1, 2, 64, 256];
 
 #[test]
 fn prop_paged_states_bit_identical_across_interleavings() {
+    let _g = pool_lock();
     check(
         "paged == contiguous under random append/rescale/decode schedules",
         Config::cases(24),
@@ -106,12 +118,13 @@ fn dropped_state_pages_return_to_the_pool() {
         assert_eq!(st.pages(), 2 * 4); // ⌈10/3⌉ per side
         st
     };
+    let _g = pool_lock();
     let mut rng = Pcg64::seed_from_u64(7);
-    let (_, recycled_before) = page_pool_stats();
+    let recycled_before = page_pool_stats().recycled;
     let st = mk(&mut rng);
     drop(st);
     let st2 = mk(&mut rng);
-    let (_, recycled_after) = page_pool_stats();
+    let recycled_after = page_pool_stats().recycled;
     assert!(
         recycled_after > recycled_before,
         "rebuilding the same geometry after a drop must recycle pages \
@@ -122,8 +135,11 @@ fn dropped_state_pages_return_to_the_pool() {
 
 #[test]
 fn cloned_state_is_independent_and_equal() {
-    // KvCache snapshots (tests, speculative schedulers) rely on deep
-    // page-level clones: equal content, disjoint pages.
+    // KvCache snapshots (tests, speculative schedulers) rely on clone
+    // independence: equal content, and no observable aliasing — clones now
+    // share pages copy-on-write, so independence comes from every mutation
+    // path forking shared pages before writing.
+    let _g = pool_lock();
     let mut rng = Pcg64::seed_from_u64(11);
     for kind in PipelineKind::all() {
         let d = 8;
@@ -145,4 +161,124 @@ fn cloned_state_is_independent_and_equal() {
         // ...and never aliases its pages.
         assert_eq!(st.len(), cl.len());
     }
+}
+
+#[test]
+fn prop_shared_prefix_cow_never_leaks_and_matches_unshared_oracle() {
+    // The prefix-sharing contract under adversarial interleavings: a donor
+    // computes a prefix, a snapshot shares it, several adopters ride the
+    // shared pages through divergent appends (including magnitude ramps
+    // that fire the INT8 re-scale remap — which must fork, not rewrite,
+    // shared pages) while the donor keeps diverging and sharers retire in
+    // random order. Every adopter must match its own unshared oracle
+    // byte-for-byte at every step, references must not leak (after the last
+    // sharer forks or drops, no page stays marked shared), and the pool's
+    // outstanding page count must return exactly to baseline once the whole
+    // web drops.
+    let _g = pool_lock(); // exact outstanding() deltas need serialization
+    check(
+        "shared-prefix CoW == unshared oracle, no page leaks",
+        Config::cases(16),
+        |rng| {
+            let baseline = page_pool_stats().outstanding();
+            {
+                let kind = PipelineKind::all()[rng.below(6) as usize];
+                let d = 4 + rng.below(9) as usize; // 4..=12
+                let page_rows = 1 + rng.below(4) as usize; // 1..=4
+                let mut pipe = build_pipeline(kind, AttentionConfig::new(0, d));
+
+                // Donor prefix: 1–3 chunks, arbitrary (possibly unaligned)
+                // total length, with occasional gain ramps.
+                let chunks: Vec<MatF32> = (0..1 + rng.below(3) as usize)
+                    .map(|_| {
+                        let rows = 1 + rng.below(5) as usize;
+                        let gain = [0.5, 1.0, 3.0][rng.below(3) as usize];
+                        rand_mat(rng, rows, d, gain)
+                    })
+                    .collect();
+                let mut donor = KvState::with_page_rows(kind, d, page_rows);
+                for c in &chunks {
+                    let _ = pipe.prefill(&mut donor, c, c, c);
+                }
+                let prefix_rows = donor.len();
+                let snapshot = donor.share_prefix(prefix_rows);
+
+                // Adopters + per-adopter unshared oracles (which replay the
+                // donor's exact chunk schedule first).
+                let n_adopt = 1 + rng.below(3) as usize;
+                let mut pairs: Vec<(KvState, KvState)> = (0..n_adopt)
+                    .map(|_| {
+                        let mut oracle = KvState::with_page_rows(kind, d, page_rows);
+                        for c in &chunks {
+                            let _ = pipe.prefill(&mut oracle, c, c, c);
+                        }
+                        (snapshot.share_prefix(prefix_rows), oracle)
+                    })
+                    .collect();
+
+                // Random interleaving of divergent appends, re-scale ramps,
+                // donor divergence and retirements.
+                for _ in 0..4 + rng.below(5) {
+                    match rng.below(4) {
+                        0 if !pairs.is_empty() => {
+                            // Retire a random sharer (its refs must release).
+                            let i = rng.below(pairs.len() as u64) as usize;
+                            pairs.swap_remove(i);
+                        }
+                        1 => {
+                            // Donor diverges; sharers must never notice.
+                            let rows = 1 + rng.below(3) as usize;
+                            let big = rand_mat(rng, rows, d, 8.0);
+                            let _ = pipe.prefill(&mut donor, &big, &big, &big);
+                        }
+                        _ => {
+                            // Every live adopter takes the same step as its
+                            // oracle; magnitude jumps force re-scale forks.
+                            let gain = [1.0, 6.0][rng.below(2) as usize];
+                            let q = rand_mat(rng, 1, d, 1.0);
+                            let kv = rand_mat(rng, 1, d, gain);
+                            for (adopter, oracle) in pairs.iter_mut() {
+                                let a = pipe.decode_step(adopter, &q, &kv, &kv);
+                                let b = pipe.decode_step(oracle, &q, &kv, &kv);
+                                assert_eq!(
+                                    a.as_slice(),
+                                    b.as_slice(),
+                                    "{} adopter diverged from unshared oracle",
+                                    kind.name()
+                                );
+                            }
+                        }
+                    }
+                }
+
+                // Drop the donor and snapshot; survivors must still decode
+                // like their oracles (they own or share only live pages).
+                drop(donor);
+                drop(snapshot);
+                let q = rand_mat(rng, 1, d, 1.0);
+                let kv = rand_mat(rng, 1, d, 1.0);
+                for (adopter, oracle) in pairs.iter_mut() {
+                    let a = pipe.decode_step(adopter, &q, &kv, &kv);
+                    let b = pipe.decode_step(oracle, &q, &kv, &kv);
+                    assert_eq!(a.as_slice(), b.as_slice(), "{} after retirements", kind.name());
+                }
+                // With at most one sharer left per page web, nothing may
+                // still be marked shared once the others are gone.
+                if pairs.len() == 1 {
+                    assert_eq!(
+                        pairs[0].0.shared_pages(),
+                        0,
+                        "sole surviving sharer must own every page"
+                    );
+                }
+            }
+            // The entire web dropped: exactly as many pages released as
+            // handed out — refcounts never leak a page.
+            assert_eq!(
+                page_pool_stats().outstanding(),
+                baseline,
+                "pool outstanding pages must return to baseline"
+            );
+        },
+    );
 }

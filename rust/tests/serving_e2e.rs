@@ -1,8 +1,9 @@
-//! Serving-engine end-to-end: trace replay, batching overlap, backpressure
-//! and per-pipeline throughput sanity under the coordinator.
+//! Serving-engine end-to-end: trace replay, batching overlap, backpressure,
+//! prefix sharing and per-pipeline throughput sanity under the coordinator.
 
-use intattention::attention::{page_pool_stats, PipelineKind};
+use intattention::attention::{kv_page_rows, page_pool_stats, PipelineKind};
 use intattention::coordinator::batcher::BatchPolicy;
+use intattention::coordinator::prefix::PrefixIndex;
 use intattention::coordinator::{Engine, EngineOptions, SubmitError};
 use intattention::model::config::ModelConfig;
 use intattention::model::lm::KvCache;
@@ -135,7 +136,7 @@ fn page_recycling_lets_queued_request_admit_after_another_finishes() {
     // request, and the pool hands the recycled pages straight back out.
     let w = weights();
     let one_seq = KvCache::pages_for_tokens(8, &w.cfg); // 4 prompt + 4 gen
-    let (_, recycled_before) = page_pool_stats();
+    let recycled_before = page_pool_stats().recycled;
     let opts = EngineOptions {
         attention: PipelineKind::IntAttention,
         policy: BatchPolicy { max_kv_pages: one_seq, ..Default::default() },
@@ -159,7 +160,7 @@ fn page_recycling_lets_queued_request_admit_after_another_finishes() {
     // Requests 2 and 3 could only admit after a predecessor finished; their
     // identical page geometry means the pool's free list served them, so
     // the process-wide recycle counter must have advanced.
-    let (_, recycled_after) = page_pool_stats();
+    let recycled_after = page_pool_stats().recycled;
     assert!(
         recycled_after > recycled_before,
         "retired pages must be recycled, not re-allocated \
@@ -197,6 +198,117 @@ fn batched_decode_rounds_preserve_greedy_outputs() {
         out
     };
     assert_eq!(run(1), run(6), "greedy decode must not depend on batch width");
+}
+
+/// The engine's prefix-sharing granularity for a given prefill chunk, read
+/// from the real policy (`PrefixIndex`) so these tests track any future
+/// change to the alignment rule instead of re-deriving it.
+fn share_align(chunk: usize) -> usize {
+    PrefixIndex::new(kv_page_rows(), chunk, 1)
+        .expect("chunked prefill → sharing is possible")
+        .align()
+}
+
+#[test]
+fn prefix_sharing_is_invisible_and_charges_prefix_pages_once() {
+    // Two sequential requests with the same prompt: the second must adopt
+    // the registered prefix (prefix_hits == 1, shared_kv_pages == exactly
+    // the prefix's page set — the refcount-counter evidence that it
+    // allocated only its suffix), and greedy outputs must be byte-identical
+    // to a sharing-disabled engine — sharing is invisible.
+    let w = weights();
+    let chunk = 8usize;
+    let prompt: Vec<u16> = (0..80).map(|i| (i * 13 % 64) as u16).collect();
+    let align = share_align(chunk);
+    // Longest adoptable prefix: aligned, and short of the last token.
+    let adopt_len = (prompt.len() - 1) / align * align;
+    assert!(
+        adopt_len > 0,
+        "test geometry must allow sharing (align {align} vs prompt {})",
+        prompt.len()
+    );
+    for kind in [PipelineKind::IntAttention, PipelineKind::ExaqInt2] {
+        let run = |share: bool| {
+            let opts = EngineOptions {
+                attention: kind,
+                policy: BatchPolicy {
+                    prefill_chunk: chunk,
+                    prefix_share: share,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let h = Engine::start(w.clone(), opts);
+            let mut outs = Vec::new();
+            for _ in 0..2 {
+                // Sequential: the second submit only enters after the first
+                // completed, so its adoption length is deterministic.
+                let rx = h.submit(prompt.clone(), 4, 0.0, 1).unwrap();
+                outs.push(rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().tokens);
+            }
+            (outs, h.shutdown())
+        };
+        let (shared_outs, shared_snap) = run(true);
+        let (unshared_outs, unshared_snap) = run(false);
+        assert_eq!(
+            shared_outs, unshared_outs,
+            "{}: sharing must be byte-invisible to greedy serving",
+            kind.name()
+        );
+        assert_eq!(shared_snap.prefix_hits, 1, "{}", kind.name());
+        assert_eq!(
+            shared_snap.shared_kv_pages,
+            KvCache::pages_for_tokens(adopt_len, &w.cfg) as u64,
+            "{}: the adopter must take exactly the prefix page set by reference",
+            kind.name()
+        );
+        assert_eq!(shared_snap.shared_prefix_tokens, adopt_len as u64, "{}", kind.name());
+        assert_eq!(unshared_snap.prefix_hits, 0, "{}", kind.name());
+        // The adopter skipped recomputing the prefix: strictly fewer prefill
+        // tokens were processed than in the unshared run.
+        assert_eq!(
+            shared_snap.prefill_tokens + adopt_len as u64,
+            unshared_snap.prefill_tokens,
+            "{}: adopted tokens must not be re-prefilled",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn concurrent_same_prompt_requests_converge_on_shared_prefix() {
+    // N identical prompts submitted together: trailing requests upgrade to
+    // the leader's registered prefixes mid-prefill, so the fleet converges
+    // onto one set of prefix pages. Outputs stay identical per request
+    // (greedy + byte-invisible sharing).
+    let w = weights();
+    let chunk = 8usize;
+    let prompt: Vec<u16> = (0..72).map(|i| (i * 7 % 64) as u16).collect();
+    let adopt_possible = (prompt.len() - 1) / share_align(chunk) * share_align(chunk) > 0;
+    let opts = EngineOptions {
+        attention: PipelineKind::IntAttention,
+        policy: BatchPolicy { prefill_chunk: chunk, prefix_share: true, ..Default::default() },
+        ..Default::default()
+    };
+    let h = Engine::start(w, opts);
+    let rxs: Vec<_> = (0..4).map(|_| h.submit(prompt.clone(), 5, 0.0, 1).unwrap()).collect();
+    let outs: Vec<Vec<u16>> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().tokens)
+        .collect();
+    let snap = h.shutdown();
+    assert_eq!(snap.completed, 4);
+    for o in &outs[1..] {
+        assert_eq!(o, &outs[0], "identical prompts must produce identical greedy outputs");
+    }
+    if adopt_possible {
+        assert!(
+            snap.prefix_hits >= 3,
+            "trailing same-prompt requests must adopt ({} hits)",
+            snap.prefix_hits
+        );
+        assert!(snap.shared_kv_pages > 0);
+    }
 }
 
 #[test]
