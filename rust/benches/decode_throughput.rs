@@ -31,6 +31,12 @@
 //!    requests admitting the same prompt prefix, unshared (N quantize+store
 //!    passes, N page sets) vs copy-on-write shared (1 pass, 1 prefix page
 //!    set + per-request suffixes) — the `decode_prefix_shared` report.
+//! 6. **Fused flash-decode sweep** — the fused-walk headline: tok/s for the
+//!    fused-capable integer pipelines with `fused_decode` forced off vs on
+//!    over identical inputs, deep contexts included (≥ 2048 outside fast
+//!    mode, where the unfused path's L-length score row hurts most) — the
+//!    `decode_fused` report, with the fused/unfused output cosine riding
+//!    along as a fidelity witness.
 
 use intattention::harness::experiments as exp;
 use intattention::harness::report::{kv_rows_json, write_report};
@@ -187,5 +193,26 @@ fn main() {
         "decode_prefix_shared",
         &ptable.render(),
         Some(kv_rows_json(&exp::prefix_share_rows_json(&prows))),
+    );
+
+    // -- Mode 6: fused flash-decode sweep --------------------------------
+    // Deep contexts are the acceptance regime: at L ≥ 2048 the fused walk
+    // (one K̂/V̂ page pass, no L-length row) must hold tok/s at or above the
+    // unfused three-pass decode.
+    let fctxs: Vec<usize> = if fast {
+        vec![64, 256]
+    } else if std::env::var("INTATTN_FULL").map(|v| v == "1").unwrap_or(false) {
+        vec![512, 2048, 4096, 8192]
+    } else {
+        vec![512, 2048, 4096]
+    };
+    let fgen = if fast { 8 } else { 64 };
+    let frows = exp::fused_decode_sweep(&fctxs, exp::HEAD_DIM, fgen, threads);
+    let ftable = exp::render_fused_decode(&frows);
+    ftable.print();
+    let _ = write_report(
+        "decode_fused",
+        &ftable.render(),
+        Some(kv_rows_json(&exp::fused_decode_rows_json(&frows))),
     );
 }

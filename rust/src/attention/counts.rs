@@ -147,6 +147,23 @@ pub fn exaq_softmax(valid: u64, rows: u64) -> OpCounts {
     }
 }
 
+/// EXAQ softmax on the fused decode walk: the same integer max/sub, LUT
+/// gathers and float accumulation as [`exaq_softmax`], but the Δ-statistics
+/// ride the same single pass (no separate stats sweep reads) and the ×255
+/// `P̂` requantization is gone entirely — the float accumulator is
+/// normalized once per output *lane* instead of rounding every probability,
+/// so the per-element dtype conversion disappears from the hot loop.
+pub fn exaq_softmax_fused(valid: u64, rows: u64) -> OpCounts {
+    OpCounts {
+        int32_alu: 2 * valid,
+        fp32_alu: 3 * valid + 2 * valid,
+        lut_gather: valid,
+        fp32_div: rows,
+        mem_bytes: valid * 9, // no P̂ row written back
+        ..Default::default()
+    }
+}
+
 /// Final output rescale (`s_V/255 · P̂V̂` or f16→f32 restore).
 pub fn output_rescale(m: usize, d: usize) -> OpCounts {
     let elems = (m * d) as u64;
@@ -193,6 +210,13 @@ mod tests {
         assert_eq!(index_softmax(v, 10).dtype_conv, 0);
         assert_eq!(index_softmax(v, 10).fp32_exp, 0);
         assert_eq!(fp32_softmax(v, 10).fp32_exp, v);
+    }
+
+    #[test]
+    fn fused_exaq_drops_the_requantize_conversion() {
+        assert_eq!(exaq_softmax(500, 1).dtype_conv, 500);
+        assert_eq!(exaq_softmax_fused(500, 1).dtype_conv, 0);
+        assert_eq!(exaq_softmax_fused(500, 1).lut_gather, 500);
     }
 
     #[test]

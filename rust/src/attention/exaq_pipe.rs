@@ -17,13 +17,13 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_u8i8, gemm_u8i8_paged, par_gemm_i8, par_gemm_i8_grouped, par_gemm_i8_paged,
-    par_gemm_u8i8_grouped, GroupI8, GroupU8I8,
+    gemm_u8i8, gemm_u8i8_paged, par_fused_decode_exaq_grouped, par_gemm_i8, par_gemm_i8_grouped,
+    par_gemm_i8_paged, par_gemm_u8i8_grouped, FusedJobExaq, GroupI8, GroupU8I8,
 };
 use crate::quant::quantize_i8;
 use crate::softmax::exaq::{ExaqConfig, ExaqSoftmax};
 use crate::softmax::index_softmax::Mask;
-use crate::tensor::{MatF32, MatI32, MatU8};
+use crate::tensor::{MatF32, MatI32};
 use crate::util::timer::{Stage, StageTimes};
 
 pub struct ExaqAttention {
@@ -31,6 +31,14 @@ pub struct ExaqAttention {
     softmax: ExaqSoftmax,
     times: StageTimes,
     ops: OpCounts,
+    /// Reusable decode-step scratch (see `IntAttention`): flat unfused
+    /// logit/prob/acc rows plus the fused path's f32 accumulators and QK
+    /// page tiles — allocation-free once capacities reach the working shape.
+    dec_logits: Vec<i32>,
+    dec_probs: Vec<u8>,
+    dec_acc: Vec<i32>,
+    dec_facc: Vec<f32>,
+    dec_tile: Vec<i32>,
 }
 
 impl ExaqAttention {
@@ -40,6 +48,11 @@ impl ExaqAttention {
             softmax: ExaqSoftmax::new(exaq),
             times: StageTimes::new(),
             ops: OpCounts::default(),
+            dec_logits: Vec::new(),
+            dec_probs: Vec::new(),
+            dec_acc: Vec::new(),
+            dec_facc: Vec::new(),
+            dec_tile: Vec::new(),
         }
     }
 }
@@ -74,10 +87,13 @@ impl AttentionPipeline for ExaqAttention {
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
-        // EXAQ softmax (dynamic clipping stats + LUT + float normalization).
-        let p = self
-            .times
-            .measure(Stage::Softmax, || self.softmax.forward(&logits, alpha, self.cfg.mask));
+        // EXAQ softmax (dynamic clipping stats + LUT + float normalization);
+        // the operator reports the nonzero-P̂ count — no re-scan.
+        let (p, nnz) = self.times.measure(Stage::Softmax, || {
+            let clip = self.softmax.dynamic_clip(&logits, alpha, self.cfg.mask);
+            self.softmax
+                .forward_with_clip_counted(&logits, alpha, self.cfg.mask, clip)
+        });
         let valid = counts::valid_positions(m, l, self.cfg.mask);
         self.ops.add(&counts::exaq_softmax(valid, m as u64));
 
@@ -85,7 +101,6 @@ impl AttentionPipeline for ExaqAttention {
         self.times.measure(Stage::PvGemm, || {
             gemm_u8i8(&p, &vq.data, &mut acc);
         });
-        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
 
         let out_scale = vq.scale / 255.0;
@@ -131,11 +146,11 @@ impl AttentionPipeline for ExaqAttention {
 
         // EXAQ softmax: merge this block's Δ stats into the running
         // accumulator, clip from the running σ.
-        let p = self.times.measure(Stage::Softmax, || {
+        let (p, nnz) = self.times.measure(Stage::Softmax, || {
             let (sum, sumsq, n) = ExaqSoftmax::delta_stats(&logits, alpha, mask);
             st.exaq.merge(sum, sumsq, n);
             let clip = self.softmax.clip_from_sigma(st.exaq.sigma());
-            self.softmax.forward_with_clip(&logits, alpha, mask, clip)
+            self.softmax.forward_with_clip_counted(&logits, alpha, mask, clip)
         });
         let valid = counts::valid_positions(m, l, mask);
         self.ops.add(&counts::exaq_softmax(valid, m as u64));
@@ -145,7 +160,6 @@ impl AttentionPipeline for ExaqAttention {
         self.times.measure(Stage::PvGemm, || {
             gemm_u8i8_paged(p.as_slice(), &v_pages, acc.as_mut_slice(), m, l, d);
         });
-        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
 
         let out_scale = st.v.scale / 255.0;
@@ -156,10 +170,32 @@ impl AttentionPipeline for ExaqAttention {
         o
     }
 
+    /// Single-sequence decode routes through [`Self::decode_step_batch`]
+    /// with one lane — one code path (fused or unfused) and shared scratch.
+    fn decode_step(
+        &mut self,
+        state: &mut KvState,
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        debug_assert_eq!(q.rows(), 1, "decode_step takes a single query row");
+        self.decode_step_batch(&mut [state], q, k_new, v_new)
+    }
+
     /// Batched decode: grouped integer GEMMs with per-sequence EXAQ
     /// statistics — each sequence merges its own Δ stats into its own
     /// running accumulator and clips from its own σ, so the result is
-    /// bit-identical to [`AttentionPipeline::decode_step`] per sequence.
+    /// bit-identical to single-lane [`AttentionPipeline::decode_step`].
+    ///
+    /// With `cfg.fused_decode` set, each sequence's KV pages are walked
+    /// exactly once with an online float renormalization. The dynamic clip
+    /// then comes from the *pre-step* running σ (the fused walk cannot see
+    /// this step's Δ distribution before gathering) and the step's exact
+    /// Δ-moments are merged after the walk — stale by exactly one token
+    /// relative to the unfused oracle, which converges as L grows. The
+    /// fused output also skips the ×255 `P̂` requantization entirely
+    /// (`counts::exaq_softmax_fused`).
     fn decode_step_batch(
         &mut self,
         states: &mut [&mut KvState],
@@ -194,68 +230,184 @@ impl AttentionPipeline for ExaqAttention {
             self.ops.add(&counts::kv_rescale(remapped as u64));
         }
 
-        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ buffers.
-        let lens: Vec<usize>;
-        let mut logits: Vec<MatI32>;
+        let ls: Vec<usize> = states.iter().map(|st| st.len()).collect();
+
+        if self.cfg.fused_decode {
+            // Fused flash-decode: pre-step clips/LUTs, one page-walk per
+            // sequence, exact Δ-moments merged afterwards.
+            let stats: Vec<(f64, f64, u64)>;
+            let o;
+            {
+                let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
+                let k_pages: Vec<Vec<&[i8]>> =
+                    ints.iter().map(|s| s.k.data.page_list()).collect();
+                let v_pages: Vec<Vec<&[i8]>> =
+                    ints.iter().map(|s| s.v.data.page_list()).collect();
+                let alphas: Vec<f32> = qqs
+                    .iter()
+                    .zip(&ints)
+                    .map(|(qq, s)| qq.scale * s.k.scale / sqrt_d)
+                    .collect();
+                let clips: Vec<f32> = ints
+                    .iter()
+                    .map(|s| self.softmax.clip_from_sigma(s.exaq.sigma()))
+                    .collect();
+                let luts: Vec<Vec<f32>> =
+                    clips.iter().map(|&c| self.softmax.lut_f32(c)).collect();
+
+                let tile_rows: Vec<usize> = k_pages
+                    .iter()
+                    .map(|kp| kp.iter().map(|p| p.len() / d).max().unwrap_or(0))
+                    .collect();
+                let mut facc = std::mem::take(&mut self.dec_facc);
+                let mut tile = std::mem::take(&mut self.dec_tile);
+                facc.clear();
+                facc.resize(b * d, 0.0);
+                tile.clear();
+                tile.resize(tile_rows.iter().sum(), 0);
+
+                let softmax = &self.softmax;
+                let mut jobs: Vec<FusedJobExaq> = Vec::with_capacity(b);
+                let mut acc_rest: &mut [f32] = &mut facc;
+                let mut tile_rest: &mut [i32] = &mut tile;
+                for (i, qq) in qqs.iter().enumerate() {
+                    let (acc, ar) = acc_rest.split_at_mut(d);
+                    acc_rest = ar;
+                    let (tl, tr) = tile_rest.split_at_mut(tile_rows[i]);
+                    tile_rest = tr;
+                    jobs.push(FusedJobExaq {
+                        q: qq.data.as_slice(),
+                        kp: &k_pages[i],
+                        vp: &v_pages[i],
+                        row: softmax.online_begin(alphas[i], clips[i]),
+                        lut: &luts[i],
+                        acc,
+                        tile: tl,
+                    });
+                }
+
+                self.times.measure(Stage::QkGemm, || {
+                    par_fused_decode_exaq_grouped(&mut jobs, pool);
+                });
+                for (job, &l) in jobs.iter().zip(&ls) {
+                    self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
+                    self.ops.add(&counts::exaq_softmax_fused(l as u64, 1));
+                    self.ops.add(&counts::pv_gemm(
+                        job.row.nnz() + job.row.rescales(),
+                        l,
+                        d,
+                        1,
+                        4,
+                    ));
+                }
+
+                // Final `acc/Σe · s_V` per lane — no ×255 requantize, no
+                // /255 restore: the probabilities never left float.
+                o = self.times.measure(Stage::Output, || {
+                    let mut out = MatF32::zeros(b, d);
+                    for ((job, s), orow) in
+                        jobs.iter().zip(&ints).zip(out.as_mut_slice().chunks_mut(d))
+                    {
+                        let inv = 1.0 / job.row.fsum();
+                        let out_scale = s.v.scale;
+                        for (ov, &av) in orow.iter_mut().zip(job.acc.iter()) {
+                            *ov = av * inv * out_scale;
+                        }
+                    }
+                    out
+                });
+                for _ in 0..b {
+                    self.ops.add(&counts::output_rescale(1, d));
+                }
+                stats = jobs
+                    .iter()
+                    .zip(&alphas)
+                    .map(|(job, &a)| job.row.stats(a))
+                    .collect();
+                drop(jobs);
+                self.dec_facc = facc;
+                self.dec_tile = tile;
+            }
+            // Merge the walk's exact Δ-moments into each running accumulator
+            // (the *next* step's clip sees them — stale-by-one contract).
+            for (st, (sum, sumsq, n)) in states.iter_mut().zip(stats) {
+                st.as_int8_mut().exaq.merge(sum, sumsq, n);
+            }
+            return o;
+        }
+
+        // ------------------------- unfused oracle -------------------------
+        // (2) one grouped Q̂·K̂ᵀ launch into one flat reusable logit buffer.
+        let total: usize = ls.iter().sum();
+        let mut logits = std::mem::take(&mut self.dec_logits);
+        let mut probs = std::mem::take(&mut self.dec_probs);
+        let mut acc = std::mem::take(&mut self.dec_acc);
+        logits.clear();
+        logits.resize(total, 0);
+        probs.clear();
+        probs.resize(total, 0);
+        acc.clear();
+        acc.resize(b * d, 0);
         {
             let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
             let k_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.k.data.page_list()).collect();
-            lens = ints.iter().map(|s| s.len()).collect();
-            logits = ints.iter().map(|s| MatI32::zeros(1, s.len())).collect();
             self.times.measure(Stage::QkGemm, || {
-                let mut groups: Vec<GroupI8> = qqs
-                    .iter()
-                    .zip(&k_pages)
-                    .zip(logits.iter_mut())
-                    .map(|((qq, kp), lg)| GroupI8 {
-                        a: qq.data.as_slice(),
-                        b: kp.as_slice(),
-                        out: lg.as_mut_slice(),
-                    })
-                    .collect();
+                let mut groups: Vec<GroupI8> = Vec::with_capacity(b);
+                let mut rest: &mut [i32] = &mut logits;
+                for (qq, (kp, &l)) in qqs.iter().zip(k_pages.iter().zip(&ls)) {
+                    let (lg, r) = rest.split_at_mut(l);
+                    rest = r;
+                    groups.push(GroupI8 { a: qq.data.as_slice(), b: kp, out: lg });
+                }
                 par_gemm_i8_grouped(&mut groups, d, pool);
             });
-            for s in &ints {
-                self.ops.add(&counts::qk_gemm(1, s.len(), d, 1, 4));
+            for &l in &ls {
+                self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
             }
         }
 
-        // (3) per-sequence EXAQ softmax: merge each sequence's Δ stats into
-        // its own running accumulator, clip from its own running σ.
-        let ps: Vec<MatU8> = self.times.measure(Stage::Softmax, || {
-            states
-                .iter_mut()
-                .zip(&qqs)
-                .zip(&logits)
-                .map(|((st, qq), lg)| {
-                    let s = st.as_int8_mut();
-                    let mask = Mask::CausalFrom(s.len() - 1);
-                    let alpha = qq.scale * s.k.scale / sqrt_d;
-                    let (sum, sumsq, n) = ExaqSoftmax::delta_stats(lg, alpha, mask);
-                    s.exaq.merge(sum, sumsq, n);
-                    let clip = self.softmax.clip_from_sigma(s.exaq.sigma());
-                    self.softmax.forward_with_clip(lg, alpha, mask, clip)
-                })
-                .collect()
+        // (3) per-sequence EXAQ softmax over the flat spans: merge each
+        // sequence's Δ stats into its own running accumulator, clip from its
+        // own running σ, normalize into the reusable P̂ row.
+        let nnzs: Vec<u64> = self.times.measure(Stage::Softmax, || {
+            let softmax = &self.softmax;
+            let mut nnzs = Vec::with_capacity(b);
+            let mut lg_rest: &[i32] = &logits;
+            let mut pr_rest: &mut [u8] = &mut probs;
+            for (st, (qq, &l)) in states.iter_mut().zip(qqs.iter().zip(&ls)) {
+                let (lg, lr) = lg_rest.split_at(l);
+                lg_rest = lr;
+                let (pr, prr) = pr_rest.split_at_mut(l);
+                pr_rest = prr;
+                let s = st.as_int8_mut();
+                let alpha = qq.scale * s.k.scale / sqrt_d;
+                let (sum, sumsq, n) = ExaqSoftmax::delta_stats_row(lg, alpha);
+                s.exaq.merge(sum, sumsq, n);
+                let clip = softmax.clip_from_sigma(s.exaq.sigma());
+                let lut = softmax.lut_f32(clip);
+                nnzs.push(softmax.forward_row_with_clip(lg, alpha, clip, &lut, pr));
+            }
+            nnzs
         });
-        for &l in &lens {
+        for &l in &ls {
             self.ops.add(&counts::exaq_softmax(l as u64, 1));
         }
 
         // (4) one grouped P̂·V̂ launch over the B resident V̂ page lists.
         let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
         let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
-        let mut acc = MatI32::zeros(b, d);
         self.times.measure(Stage::PvGemm, || {
             let mut groups: Vec<GroupU8I8> = Vec::with_capacity(b);
-            for ((p, vp), out) in ps.iter().zip(&v_pages).zip(acc.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupU8I8 { a: p.as_slice(), b: vp.as_slice(), out });
+            let mut pr_rest: &[u8] = &probs;
+            for ((vp, &l), out) in v_pages.iter().zip(&ls).zip(acc.chunks_mut(d)) {
+                let (pr, r) = pr_rest.split_at(l);
+                pr_rest = r;
+                groups.push(GroupU8I8 { a: pr, b: vp, out });
             }
             par_gemm_u8i8_grouped(&mut groups, d, pool);
         });
-        for (p, s) in ps.iter().zip(&ints) {
-            let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
-            self.ops.add(&counts::pv_gemm(nnz, s.len(), d, 1, 4));
+        for (&nnz, &l) in nnzs.iter().zip(&ls) {
+            self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
         }
 
         // (5) per-sequence output rescale with each state's running V scale.
@@ -267,6 +419,9 @@ impl AttentionPipeline for ExaqAttention {
         for _ in 0..b {
             self.ops.add(&counts::output_rescale(1, d));
         }
+        self.dec_logits = logits;
+        self.dec_probs = probs;
+        self.dec_acc = acc;
         o
     }
 

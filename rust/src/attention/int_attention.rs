@@ -26,8 +26,8 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_u8i8, gemm_u8i8_paged, par_gemm_i8, par_gemm_i8_grouped, par_gemm_i8_paged,
-    par_gemm_u8i8_grouped, GroupI8, GroupU8I8,
+    gemm_u8i8, gemm_u8i8_paged, par_fused_decode_i8_grouped, par_gemm_i8, par_gemm_i8_grouped,
+    par_gemm_i8_paged, par_gemm_u8i8_grouped, FusedJobI8, GroupI8, GroupU8I8,
 };
 use crate::quant::{
     quantize_grouped_i8, quantize_i8, GroupQuantizedI8, GroupScheme, QuantizedI8,
@@ -60,6 +60,8 @@ impl QQuant {
     }
 
     /// IndexSoftmax over `logits` with this Q's scale(s) × `k_scale`/√d.
+    /// Also returns the nonzero-`P̂` count (the PV GEMM's exact work) so
+    /// callers never re-scan the probability matrix.
     fn softmax(
         &self,
         softmax: &IndexSoftmax,
@@ -67,11 +69,13 @@ impl QQuant {
         k_scale: f32,
         sqrt_d: f32,
         mask: Mask,
-    ) -> MatU8 {
+    ) -> (MatU8, u64) {
         match self {
             QQuant::PerTensor(t) => {
                 let alpha = t.scale * k_scale / sqrt_d;
-                softmax.forward(logits, alpha, mask)
+                let mut out = MatU8::zeros(logits.rows(), logits.cols());
+                let nnz = softmax.forward_into(logits, alpha, mask, &mut out);
+                (out, nnz)
             }
             QQuant::Grouped(g) => {
                 let alphas: Vec<f32> =
@@ -90,6 +94,16 @@ impl QQuant {
             }
         }
     }
+
+    /// The `α` of this (single-row) decode query: a decode block has exactly
+    /// one row, so every grouped scheme maps it to group 0 — identical to
+    /// what [`Self::softmax`] would derive for row 0.
+    fn decode_alpha(&self, k_scale: f32, sqrt_d: f32) -> f32 {
+        match self {
+            QQuant::PerTensor(t) => t.scale * k_scale / sqrt_d,
+            QQuant::Grouped(g) => g.scales[0] * k_scale / sqrt_d,
+        }
+    }
 }
 
 pub struct IntAttention {
@@ -101,6 +115,15 @@ pub struct IntAttention {
     pub q_scheme: GroupScheme,
     times: StageTimes,
     ops: OpCounts,
+    /// Reusable decode-step scratch: the unfused path's flat logit/prob/acc
+    /// rows and the fused path's i64 accumulators + page tiles. Capacity
+    /// grows to the working batch shape once, then every decode step runs
+    /// allocation-free (asserted in `tests/fused_decode.rs`).
+    dec_logits: Vec<i32>,
+    dec_probs: Vec<u8>,
+    dec_acc: Vec<i32>,
+    dec_facc: Vec<i64>,
+    dec_tile: Vec<i32>,
 }
 
 impl IntAttention {
@@ -111,6 +134,11 @@ impl IntAttention {
             q_scheme: GroupScheme::PerTensor,
             times: StageTimes::new(),
             ops: OpCounts::default(),
+            dec_logits: Vec::new(),
+            dec_probs: Vec::new(),
+            dec_acc: Vec::new(),
+            dec_facc: Vec::new(),
+            dec_tile: Vec::new(),
         }
     }
 
@@ -162,8 +190,9 @@ impl AttentionPipeline for IntAttention {
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
         // (3) IndexSoftmax — integer in, UINT8 out. No Dequantize stage,
-        // no Requantize stage: this is the paper's point.
-        let p = self.times.measure(Stage::Softmax, || {
+        // no Requantize stage: this is the paper's point. The operator
+        // reports the nonzero-P̂ count as it normalizes — no re-scan.
+        let (p, nnz) = self.times.measure(Stage::Softmax, || {
             qq.softmax(&self.softmax, &logits, kq.scale, sqrt_d, self.cfg.mask)
         });
         let valid = counts::valid_positions(m, l, self.cfg.mask);
@@ -174,7 +203,6 @@ impl AttentionPipeline for IntAttention {
         self.times.measure(Stage::PvGemm, || {
             gemm_u8i8(&p, &vq.data, &mut acc);
         });
-        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
 
         // (5) single output rescale: s_V/255 (eq. 5 with the ×255 P scale).
@@ -221,9 +249,9 @@ impl AttentionPipeline for IntAttention {
         });
         self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
 
-        // (3) IndexSoftmax with the offset-causal mask (decode: a single
-        // row at offset L−1, which sees the whole history).
-        let p = self.times.measure(Stage::Softmax, || {
+        // (3) IndexSoftmax with the offset-causal mask (a chunked-prefill
+        // block sees the whole history up to each row's position).
+        let (p, nnz) = self.times.measure(Stage::Softmax, || {
             qq.softmax(&self.softmax, &logits, st.k.scale, sqrt_d, mask)
         });
         let valid = counts::valid_positions(m, l, mask);
@@ -235,7 +263,6 @@ impl AttentionPipeline for IntAttention {
         self.times.measure(Stage::PvGemm, || {
             gemm_u8i8_paged(p.as_slice(), &v_pages, acc.as_mut_slice(), m, l, d);
         });
-        let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
 
         // (5) single output rescale with the state's running V scale.
@@ -247,10 +274,31 @@ impl AttentionPipeline for IntAttention {
         o
     }
 
+    /// Single-sequence decode is batched decode with one lane: routing it
+    /// through [`Self::decode_step_batch`] keeps one code path (fused or
+    /// unfused by `cfg.fused_decode`) and reuses the same scratch buffers.
+    fn decode_step(
+        &mut self,
+        state: &mut KvState,
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        debug_assert_eq!(q.rows(), 1, "decode_step takes a single query row");
+        self.decode_step_batch(&mut [state], q, k_new, v_new)
+    }
+
     /// Batched decode over the grouped integer kernels. Per sequence this is
-    /// bit-identical to [`AttentionPipeline::decode_step`]: quantization,
-    /// running scales and IndexSoftmax thresholds stay per-sequence — only
-    /// the GEMM launches are fused, and integer GEMMs are exact.
+    /// bit-identical to single-lane [`AttentionPipeline::decode_step`]:
+    /// quantization, running scales and IndexSoftmax thresholds stay
+    /// per-sequence — only the launches are grouped, the kernels are walked
+    /// sequentially per sequence, and integer arithmetic is exact.
+    ///
+    /// With `cfg.fused_decode` set (the default) each sequence's KV pages
+    /// are walked exactly once: per-page `Q̂K̂ᵀ` tile → online IndexSoftmax
+    /// renormalization → `Ê·V̂` accumulation, never materializing an
+    /// L-length score row (see the module docs of `crate::attention` for
+    /// the fidelity contract against the unfused oracle).
     fn decode_step_batch(
         &mut self,
         states: &mut [&mut KvState],
@@ -287,57 +335,152 @@ impl AttentionPipeline for IntAttention {
             self.ops.add(&counts::kv_rescale(remapped as u64));
         }
 
-        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ page lists
-        // (per-group context length; workers split across sequences,
-        // claiming whole page-aligned sequence spans).
         let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
+        let ls: Vec<usize> = ints.iter().map(|s| s.len()).collect();
         let k_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.k.data.page_list()).collect();
-        let mut logits: Vec<MatI32> = ints.iter().map(|s| MatI32::zeros(1, s.len())).collect();
-        self.times.measure(Stage::QkGemm, || {
-            let mut groups: Vec<GroupI8> = qqs
+        let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
+
+        if self.cfg.fused_decode {
+            // Fused flash-decode: one K̂/V̂ page-walk per sequence. Working
+            // set per lane is the i64 accumulator (O(d)) plus a QK tile the
+            // size of the widest resident page — no L-length row anywhere.
+            let tile_rows: Vec<usize> = k_pages
                 .iter()
-                .zip(&k_pages)
-                .zip(logits.iter_mut())
-                .map(|((qq, kp), lg)| GroupI8 {
-                    a: qq.data().as_slice(),
-                    b: kp.as_slice(),
-                    out: lg.as_mut_slice(),
-                })
+                .map(|kp| kp.iter().map(|p| p.len() / d).max().unwrap_or(0))
                 .collect();
-            par_gemm_i8_grouped(&mut groups, d, pool);
-        });
-        for s in &ints {
-            self.ops.add(&counts::qk_gemm(1, s.len(), d, 1, 4));
+            let tile_total: usize = tile_rows.iter().sum();
+            let mut facc = std::mem::take(&mut self.dec_facc);
+            let mut tile = std::mem::take(&mut self.dec_tile);
+            facc.clear();
+            facc.resize(b * d, 0);
+            tile.clear();
+            tile.resize(tile_total, 0);
+
+            let softmax = &self.softmax;
+            let mut jobs: Vec<FusedJobI8> = Vec::with_capacity(b);
+            let mut acc_rest: &mut [i64] = &mut facc;
+            let mut tile_rest: &mut [i32] = &mut tile;
+            for (i, qq) in qqs.iter().enumerate() {
+                let (acc, ar) = acc_rest.split_at_mut(d);
+                acc_rest = ar;
+                let (tl, tr) = tile_rest.split_at_mut(tile_rows[i]);
+                tile_rest = tr;
+                jobs.push(FusedJobI8 {
+                    q: qq.data().as_slice(),
+                    kp: &k_pages[i],
+                    vp: &v_pages[i],
+                    row: softmax.online_begin(qq.decode_alpha(ints[i].k.scale, sqrt_d)),
+                    acc,
+                    tile: tl,
+                });
+            }
+
+            // The whole walk (QK tiles, online softmax, Ê·V̂ accumulation)
+            // is one launch; it is booked under QkGemm, the stage that
+            // dominates it. The op counters still split per operator.
+            let table = &softmax.lut.u8_table;
+            self.times.measure(Stage::QkGemm, || {
+                par_fused_decode_i8_grouped(&mut jobs, table, pool);
+            });
+            for (job, &l) in jobs.iter().zip(&ls) {
+                self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
+                self.ops.add(&counts::index_softmax(l as u64, 1));
+                self.ops
+                    .add(&counts::pv_gemm(job.row.nnz() + job.row.rescales(), l, d, 1, 4));
+            }
+
+            // Final per-lane normalize `round(255·acc/ΣÊ)` and the single
+            // float rescale — the only rounding the fused path applies.
+            let o = self.times.measure(Stage::Output, || {
+                let mut out = MatF32::zeros(b, d);
+                for ((job, s), orow) in
+                    jobs.iter().zip(&ints).zip(out.as_mut_slice().chunks_mut(d))
+                {
+                    let nd = job.row.norm_div();
+                    let out_scale = s.v.scale / 255.0;
+                    for (ov, &av) in orow.iter_mut().zip(job.acc.iter()) {
+                        let pv = if av >= 0 {
+                            nd.div_round(255 * av as u64) as i64
+                        } else {
+                            -(nd.div_round(255 * (-av) as u64) as i64)
+                        };
+                        *ov = pv as f32 * out_scale;
+                    }
+                }
+                out
+            });
+            for _ in 0..b {
+                self.ops.add(&counts::output_rescale(1, d));
+            }
+            drop(jobs);
+            self.dec_facc = facc;
+            self.dec_tile = tile;
+            return o;
         }
 
-        // (3) per-sequence IndexSoftmax: each sequence keeps its own α
-        // (its Q/K scales) and causal offset L_b − 1.
-        let ps: Vec<MatU8> = self.times.measure(Stage::Softmax, || {
-            qqs.iter()
-                .zip(&ints)
-                .zip(&logits)
-                .map(|((qq, s), lg)| {
-                    qq.softmax(&self.softmax, lg, s.k.scale, sqrt_d, Mask::CausalFrom(s.len() - 1))
-                })
-                .collect()
+        // ------------------------- unfused oracle -------------------------
+        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ page lists
+        // into one flat reusable logit buffer (per-sequence spans).
+        let total: usize = ls.iter().sum();
+        let mut logits = std::mem::take(&mut self.dec_logits);
+        let mut probs = std::mem::take(&mut self.dec_probs);
+        let mut acc = std::mem::take(&mut self.dec_acc);
+        logits.clear();
+        logits.resize(total, 0);
+        probs.clear();
+        probs.resize(total, 0);
+        acc.clear();
+        acc.resize(b * d, 0);
+
+        self.times.measure(Stage::QkGemm, || {
+            let mut groups: Vec<GroupI8> = Vec::with_capacity(b);
+            let mut rest: &mut [i32] = &mut logits;
+            for (qq, (kp, &l)) in qqs.iter().zip(k_pages.iter().zip(&ls)) {
+                let (lg, r) = rest.split_at_mut(l);
+                rest = r;
+                groups.push(GroupI8 { a: qq.data().as_slice(), b: kp, out: lg });
+            }
+            par_gemm_i8_grouped(&mut groups, d, pool);
         });
-        for s in &ints {
-            self.ops.add(&counts::index_softmax(s.len() as u64, 1));
+        for &l in &ls {
+            self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
+        }
+
+        // (3) per-sequence IndexSoftmax: each sequence keeps its own α (its
+        // Q/K scales; a decode row is group 0 under every grouped scheme).
+        // A decode row at offset L−1 sees the whole history, so the row form
+        // needs no mask. Nonzero counts come back with the normalize pass.
+        let nnzs: Vec<u64> = self.times.measure(Stage::Softmax, || {
+            let softmax = &self.softmax;
+            let mut nnzs = Vec::with_capacity(b);
+            let mut lg_rest: &[i32] = &logits;
+            let mut pr_rest: &mut [u8] = &mut probs;
+            for (qq, (s, &l)) in qqs.iter().zip(ints.iter().zip(&ls)) {
+                let (lg, lr) = lg_rest.split_at(l);
+                lg_rest = lr;
+                let (pr, prr) = pr_rest.split_at_mut(l);
+                pr_rest = prr;
+                nnzs.push(softmax.forward_row_into(lg, qq.decode_alpha(s.k.scale, sqrt_d), pr));
+            }
+            nnzs
+        });
+        for &l in &ls {
+            self.ops.add(&counts::index_softmax(l as u64, 1));
         }
 
         // (4) one grouped P̂·V̂ launch over the B resident V̂ page lists.
-        let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
-        let mut acc = MatI32::zeros(b, d);
         self.times.measure(Stage::PvGemm, || {
             let mut groups: Vec<GroupU8I8> = Vec::with_capacity(b);
-            for ((p, vp), out) in ps.iter().zip(&v_pages).zip(acc.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupU8I8 { a: p.as_slice(), b: vp.as_slice(), out });
+            let mut pr_rest: &[u8] = &probs;
+            for ((vp, &l), out) in v_pages.iter().zip(&ls).zip(acc.chunks_mut(d)) {
+                let (pr, r) = pr_rest.split_at(l);
+                pr_rest = r;
+                groups.push(GroupU8I8 { a: pr, b: vp, out });
             }
             par_gemm_u8i8_grouped(&mut groups, d, pool);
         });
-        for (p, s) in ps.iter().zip(&ints) {
-            let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
-            self.ops.add(&counts::pv_gemm(nnz, s.len(), d, 1, 4));
+        for (&nnz, &l) in nnzs.iter().zip(&ls) {
+            self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
         }
 
         // (5) per-sequence output rescale with each state's running V scale.
@@ -349,6 +492,9 @@ impl AttentionPipeline for IntAttention {
         for _ in 0..b {
             self.ops.add(&counts::output_rescale(1, d));
         }
+        self.dec_logits = logits;
+        self.dec_probs = probs;
+        self.dec_acc = acc;
         o
     }
 

@@ -29,6 +29,49 @@
 //! Both modes are instrumented with per-stage wall-clock ([`StageTimes`])
 //! and op counters ([`OpCounts`]) — the raw data for Figure 2, Figure 8,
 //! Table 8 and the decode-throughput bench.
+//!
+//! ## Fused flash-decode (integer pipelines)
+//!
+//! Decode is memory-bound, and the unfused step walks each sequence's KV
+//! page list **three** times per token: the paged `Q̂K̂ᵀ` materializes a full
+//! `1×L` score row, IndexSoftmax normalizes it, and the paged `P̂V̂` reads it
+//! back. With [`AttentionConfig::fused_decode`] on (the default; env
+//! `INTATTN_FUSED_DECODE=0` turns it off, snapshotted once per process like
+//! the page size), the IntAttention and EXAQ pipelines instead run
+//! [`crate::gemm::fused_decode_i8`] / [`crate::gemm::fused_decode_exaq`]:
+//! **one** zipped K̂/V̂ page walk per sequence — per page a `1×rows` logit
+//! tile, each logit streamed through the online softmax row
+//! ([`crate::softmax::index_softmax::OnlineIndexRow`] /
+//! [`crate::softmax::exaq::ExaqOnlineRow`]) straight onto a single `d`-lane
+//! accumulator, rescaling the accumulated partial `P̂V̂` by the LUT carry
+//! factor whenever the running max moves. No `L`-length score row exists at
+//! any point: the working set is O(d) + one page-sized tile. Batched rounds
+//! dispatch the per-sequence walks as grouped jobs on the pool
+//! ([`crate::gemm::par_fused_decode_i8_grouped`]); a single row's walk is
+//! sequential (the online renorm is a loop-carried dependence), so the
+//! running max advances per *element* and the fused output is byte-identical
+//! at every page size, pool width, and batch split.
+//!
+//! **Fidelity contract vs the unfused oracle.** The unfused path rounds each
+//! probability to UINT8 (`P̂ = round(255·Ê/ΣÊ)`) *before* the `P̂V̂` sum; the
+//! fused path accumulates un-normalized `Ê·V̂` and applies one final
+//! `round(255·acc/ΣÊ)` per output lane, composing LUT carry factors across
+//! max moves instead of re-gathering against the final max. The two paths
+//! are therefore **bit-exact only where that reordering is degenerate** — a
+//! single surviving entry (e.g. the first decode token: `acc = 255·V̂`,
+//! `ΣÊ = 255`) — and elsewhere agree to a documented ε: per-step cosine
+//! ≥ 0.999 against the unfused oracle and per-lane error bounded by a few
+//! output quanta (asserted with explicit bounds in
+//! `tests/decode_equivalence.rs` and `tests/fused_decode.rs`). EXAQ's fused
+//! form additionally skips the ×255 P̂ requantization entirely (float
+//! `acc/Σe` normalization — one fewer dtype conversion per element, see
+//! [`counts::exaq_softmax_fused`]) and derives its dynamic clip from the
+//! *pre-step* running σ, merging the step's exact Δ-moments after the walk
+//! (the unfused path folds the new row's stats in before clipping — a
+//! stale-by-one-token clip difference that the equivalence tests bound).
+//! Quant-Only keeps the unfused three-pass dataflow: its purpose is to
+//! measure the FP32-softmax conversion detour, which a fused integer walk
+//! would define away.
 
 pub mod counts;
 pub mod state;
@@ -40,9 +83,10 @@ pub mod exaq_pipe;
 
 use crate::energy::OpCounts;
 use crate::softmax::index_softmax::{IndexSoftmaxConfig, Mask};
-use crate::tensor::{MatF32, MatI32};
+use crate::tensor::MatF32;
 use crate::util::threadpool::ParallelPool;
 use crate::util::timer::StageTimes;
+use std::sync::OnceLock;
 
 pub use crate::softmax::index_softmax::Mask as AttentionMask;
 pub use state::{
@@ -64,6 +108,25 @@ pub struct AttentionConfig {
     pub pool: &'static ParallelPool,
     /// IndexSoftmax hyperparameters (used by the IntAttention pipeline).
     pub isx: IndexSoftmaxConfig,
+    /// Use the fused one-page-walk decode path in the integer pipelines
+    /// (see the module docs). Defaults to the process-wide
+    /// [`fused_decode_default`] snapshot (`INTATTN_FUSED_DECODE`, on unless
+    /// set to `0`/`false`/`off`); tests build both paths explicitly with
+    /// [`Self::with_fused_decode`].
+    pub fused_decode: bool,
+}
+
+/// Process-wide fused-decode default: `INTATTN_FUSED_DECODE` snapshotted
+/// once (like [`state::kv_page_rows`]), on unless explicitly disabled.
+pub fn fused_decode_default() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| fused_decode_from(std::env::var("INTATTN_FUSED_DECODE").ok().as_deref()))
+}
+
+/// Pure policy behind [`fused_decode_default`], unit-testable without
+/// touching the process environment.
+fn fused_decode_from(env: Option<&str>) -> bool {
+    !matches!(env.map(str::trim), Some("0") | Some("false") | Some("off"))
 }
 
 impl AttentionConfig {
@@ -74,6 +137,7 @@ impl AttentionConfig {
             mask: Mask::None,
             pool: ParallelPool::sized(1),
             isx: IndexSoftmaxConfig::default(),
+            fused_decode: fused_decode_default(),
         }
     }
 
@@ -105,6 +169,14 @@ impl AttentionConfig {
 
     pub fn with_isx(mut self, isx: IndexSoftmaxConfig) -> Self {
         self.isx = isx;
+        self
+    }
+
+    /// Force the fused (or unfused) decode path regardless of the process
+    /// default — the equivalence tests and the `decode_fused` bench build
+    /// both sides of the comparison this way.
+    pub fn with_fused_decode(mut self, on: bool) -> Self {
+        self.fused_decode = on;
         self
     }
 
@@ -345,20 +417,18 @@ pub(crate) fn batch_rows(q: &MatF32, k: &MatF32, v: &MatF32) -> Vec<(MatF32, Mat
 }
 
 /// Per-sequence output rescale shared by the integer pipelines' batched
-/// decode: row `i` of the `B×d` INT32 accumulator scaled by `scale_of(i)`
-/// (each sequence's running V scale over the P̂ denominator).
+/// decode: row `i` of the flat `B×d` INT32 accumulator scaled by
+/// `scale_of(i)` (each sequence's running V scale over the P̂ denominator).
+/// Takes a plain slice so the callers' reusable scratch accumulators (no
+/// per-token `MatI32` allocation) feed it directly.
 pub(crate) fn batch_output_rescale(
-    acc: &MatI32,
+    acc: &[i32],
     d: usize,
     scale_of: impl Fn(usize) -> f32,
 ) -> MatF32 {
-    let mut o = MatF32::zeros(acc.rows(), d);
-    for (i, (orow, arow)) in o
-        .as_mut_slice()
-        .chunks_mut(d)
-        .zip(acc.as_slice().chunks(d))
-        .enumerate()
-    {
+    debug_assert_eq!(acc.len() % d, 0);
+    let mut o = MatF32::zeros(acc.len() / d, d);
+    for (i, (orow, arow)) in o.as_mut_slice().chunks_mut(d).zip(acc.chunks(d)).enumerate() {
         let s = scale_of(i);
         for (ov, &av) in orow.iter_mut().zip(arow) {
             *ov = av as f32 * s;
@@ -416,6 +486,21 @@ mod tests {
         let cfg = AttentionConfig::new(128, 64).causal_from(96);
         assert_eq!(cfg.mask, Mask::CausalFrom(96));
         assert_eq!(cfg.pool.size(), 1, "default pool is single-thread");
+    }
+
+    #[test]
+    fn fused_decode_policy() {
+        // On by default; only an explicit 0/false/off disables it.
+        assert!(fused_decode_from(None));
+        assert!(fused_decode_from(Some("1")));
+        assert!(fused_decode_from(Some("yes")));
+        assert!(!fused_decode_from(Some("0")));
+        assert!(!fused_decode_from(Some("false")));
+        assert!(!fused_decode_from(Some("off")));
+        assert!(!fused_decode_from(Some(" 0 ")));
+        let cfg = AttentionConfig::new(8, 4).with_fused_decode(false);
+        assert!(!cfg.fused_decode);
+        assert!(cfg.with_fused_decode(true).fused_decode);
     }
 
     #[test]

@@ -30,21 +30,37 @@ use crate::gemm::{
     gemm_i8_notrans, gemm_i8_notrans_paged, par_gemm_i8, par_gemm_i8_grouped,
     par_gemm_i8_notrans_grouped, par_gemm_i8_paged, GroupI8,
 };
-use crate::quant::{quantize_i8, quantize_p_i8};
-use crate::softmax::float_softmax::softmax_rows;
+use crate::quant::{quantize_i8, quantize_p_i8_counted, quantize_p_i8_into};
+use crate::softmax::float_softmax::{softmax_row, softmax_rows};
 use crate::softmax::index_softmax::Mask;
-use crate::tensor::{MatF32, MatI32, MatI8};
+use crate::tensor::{MatF32, MatI32};
 use crate::util::timer::{Stage, StageTimes};
 
 pub struct QuantOnlyAttention {
     cfg: AttentionConfig,
     times: StageTimes,
     ops: OpCounts,
+    /// Reusable decode-step scratch: flat logit/dequantized/prob/acc rows.
+    /// Quant-Only keeps the unfused three-pass decode on purpose — the
+    /// pipeline exists to measure the conversion detour, which a fused walk
+    /// would hide — but still runs allocation-free in steady state.
+    dec_logits: Vec<i32>,
+    dec_deq: Vec<f32>,
+    dec_probs: Vec<i8>,
+    dec_acc: Vec<i32>,
 }
 
 impl QuantOnlyAttention {
     pub fn new(cfg: AttentionConfig) -> Self {
-        QuantOnlyAttention { cfg, times: StageTimes::new(), ops: OpCounts::default() }
+        QuantOnlyAttention {
+            cfg,
+            times: StageTimes::new(),
+            ops: OpCounts::default(),
+            dec_logits: Vec::new(),
+            dec_deq: Vec::new(),
+            dec_probs: Vec::new(),
+            dec_acc: Vec::new(),
+        }
     }
 }
 
@@ -89,8 +105,9 @@ impl AttentionPipeline for QuantOnlyAttention {
         });
         self.ops.add(&counts::fp32_softmax(valid, m as u64));
 
-        // (5) requantize probabilities to signed INT8 (×127).
-        let p8 = self.times.measure(Stage::Requantize, || quantize_p_i8(&a));
+        // (5) requantize probabilities to signed INT8 (×127); the operator
+        // reports the nonzero count — no re-scan.
+        let (p8, nnz) = self.times.measure(Stage::Requantize, || quantize_p_i8_counted(&a));
         self.ops.add(&counts::requantize_probs(valid));
 
         // (6) integer aggregation GEMM.
@@ -98,7 +115,6 @@ impl AttentionPipeline for QuantOnlyAttention {
         self.times.measure(Stage::PvGemm, || {
             gemm_i8_notrans(&p8, &vq.data, &mut acc);
         });
-        let nnz = p8.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
 
         // (7) output rescale.
@@ -156,7 +172,7 @@ impl AttentionPipeline for QuantOnlyAttention {
         self.ops.add(&counts::fp32_softmax(valid, m as u64));
 
         // (5) requantize probabilities to signed INT8.
-        let p8 = self.times.measure(Stage::Requantize, || quantize_p_i8(&a));
+        let (p8, nnz) = self.times.measure(Stage::Requantize, || quantize_p_i8_counted(&a));
         self.ops.add(&counts::requantize_probs(valid));
 
         // (6) aggregation against the resident INT8 value pages.
@@ -165,7 +181,6 @@ impl AttentionPipeline for QuantOnlyAttention {
         self.times.measure(Stage::PvGemm, || {
             gemm_i8_notrans_paged(p8.as_slice(), &v_pages, acc.as_mut_slice(), m, l, d);
         });
-        let nnz = p8.as_slice().iter().filter(|&&x| x != 0).count() as u64;
         self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
 
         // (7) output rescale with the state's running V scale.
@@ -177,11 +192,26 @@ impl AttentionPipeline for QuantOnlyAttention {
         o
     }
 
+    /// Single-token decode: delegates to the batched path with one state so
+    /// both entry points share the reusable-scratch implementation below.
+    fn decode_step(
+        &mut self,
+        state: &mut KvState,
+        q: &MatF32,
+        k_new: &MatF32,
+        v_new: &MatF32,
+    ) -> MatF32 {
+        debug_assert_eq!(q.rows(), 1, "decode_step takes a single query row");
+        self.decode_step_batch(&mut [state], q, k_new, v_new)
+    }
+
     /// Batched decode: grouped integer GEMMs around the per-sequence
     /// dequantize→softmax→requantize detour (the detour itself cannot be
     /// batched across sequences — each row has its own α and history
-    /// length, which is the paper's point about this pipeline). Bit-
-    /// identical per sequence to [`AttentionPipeline::decode_step`].
+    /// length, which is the paper's point about this pipeline). All stage
+    /// buffers live in the pipeline's reusable scratch, so steady-state
+    /// decode allocates nothing per token. Bit-identical per sequence to
+    /// [`AttentionPipeline::decode_step`].
     fn decode_step_batch(
         &mut self,
         states: &mut [&mut KvState],
@@ -217,74 +247,98 @@ impl AttentionPipeline for QuantOnlyAttention {
         }
 
         let ints: Vec<&Int8KvState> = states.iter().map(|st| st.as_int8()).collect();
+        let ls: Vec<usize> = ints.iter().map(|s| s.len()).collect();
+        let total: usize = ls.iter().sum();
 
-        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ page lists.
+        // (2) one grouped Q̂·K̂ᵀ launch over the B resident K̂ page lists,
+        // into per-sequence spans of the flat logit scratch.
         let k_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.k.data.page_list()).collect();
-        let mut logits: Vec<MatI32> = ints.iter().map(|s| MatI32::zeros(1, s.len())).collect();
+        let mut logits = std::mem::take(&mut self.dec_logits);
+        logits.clear();
+        logits.resize(total, 0);
         self.times.measure(Stage::QkGemm, || {
-            let mut groups: Vec<GroupI8> = qqs
-                .iter()
-                .zip(&k_pages)
-                .zip(logits.iter_mut())
-                .map(|((qq, kp), lg)| GroupI8 {
-                    a: qq.data.as_slice(),
-                    b: kp.as_slice(),
-                    out: lg.as_mut_slice(),
-                })
-                .collect();
+            let mut groups: Vec<GroupI8> = Vec::with_capacity(b);
+            let mut rest: &mut [i32] = &mut logits;
+            for ((qq, kp), &l) in qqs.iter().zip(&k_pages).zip(&ls) {
+                let (lg, tail) = rest.split_at_mut(l);
+                rest = tail;
+                groups.push(GroupI8 { a: qq.data.as_slice(), b: kp.as_slice(), out: lg });
+            }
             par_gemm_i8_grouped(&mut groups, d, pool);
         });
-        for s in &ints {
-            self.ops.add(&counts::qk_gemm(1, s.len(), d, 1, 4));
+        for &l in &ls {
+            self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
         }
 
         // (3) per-sequence dequantize with that sequence's α — the detour,
         // every step, every sequence.
-        let mut a_rows: Vec<MatF32> = self.times.measure(Stage::Dequantize, || {
-            qqs.iter()
-                .zip(&ints)
-                .zip(&logits)
-                .map(|((qq, s), lg)| {
-                    let alpha = qq.scale * s.k.scale / sqrt_d;
-                    lg.map(|x| x as f32 * alpha)
-                })
-                .collect()
-        });
-        for s in &ints {
-            self.ops.add(&counts::dequantize_logits(s.len() as u64));
-        }
-
-        // (4) per-sequence FP32 softmax over its full history.
-        self.times.measure(Stage::Softmax, || {
-            for (a, s) in a_rows.iter_mut().zip(&ints) {
-                softmax_rows(a, Mask::CausalFrom(s.len() - 1));
+        let mut deq = std::mem::take(&mut self.dec_deq);
+        deq.clear();
+        deq.resize(total, 0.0);
+        self.times.measure(Stage::Dequantize, || {
+            let mut off = 0usize;
+            for ((qq, s), &l) in qqs.iter().zip(&ints).zip(&ls) {
+                let alpha = qq.scale * s.k.scale / sqrt_d;
+                for (dv, &lv) in deq[off..off + l].iter_mut().zip(&logits[off..off + l]) {
+                    *dv = lv as f32 * alpha;
+                }
+                off += l;
             }
         });
-        for s in &ints {
-            self.ops.add(&counts::fp32_softmax(s.len() as u64, 1));
+        for &l in &ls {
+            self.ops.add(&counts::dequantize_logits(l as u64));
         }
 
-        // (5) per-sequence requantize to signed INT8.
-        let probs: Vec<MatI8> = self
-            .times
-            .measure(Stage::Requantize, || a_rows.iter().map(quantize_p_i8).collect());
-        for s in &ints {
-            self.ops.add(&counts::requantize_probs(s.len() as u64));
+        // (4) per-sequence FP32 softmax over its full history (a decode row
+        // attends everywhere, so the row form needs no mask).
+        self.times.measure(Stage::Softmax, || {
+            let mut off = 0usize;
+            for &l in &ls {
+                softmax_row(&mut deq[off..off + l]);
+                off += l;
+            }
+        });
+        for &l in &ls {
+            self.ops.add(&counts::fp32_softmax(l as u64, 1));
+        }
+
+        // (5) per-sequence requantize to signed INT8; the operator reports
+        // each span's nonzero count — no re-scan.
+        let mut probs = std::mem::take(&mut self.dec_probs);
+        probs.clear();
+        probs.resize(total, 0);
+        let nnzs: Vec<u64> = self.times.measure(Stage::Requantize, || {
+            let mut nnzs = Vec::with_capacity(b);
+            let mut off = 0usize;
+            for &l in &ls {
+                nnzs.push(quantize_p_i8_into(&deq[off..off + l], &mut probs[off..off + l]));
+                off += l;
+            }
+            nnzs
+        });
+        for &l in &ls {
+            self.ops.add(&counts::requantize_probs(l as u64));
         }
 
         // (6) one grouped P̂·V̂ launch over the B resident V̂ page lists.
         let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
-        let mut acc = MatI32::zeros(b, d);
+        let mut acc = std::mem::take(&mut self.dec_acc);
+        acc.clear();
+        acc.resize(b * d, 0);
         self.times.measure(Stage::PvGemm, || {
             let mut groups: Vec<GroupI8> = Vec::with_capacity(b);
-            for ((p, vp), out) in probs.iter().zip(&v_pages).zip(acc.as_mut_slice().chunks_mut(d)) {
-                groups.push(GroupI8 { a: p.as_slice(), b: vp.as_slice(), out });
+            let mut rest: &mut [i32] = &mut acc;
+            let mut off = 0usize;
+            for (vp, &l) in v_pages.iter().zip(&ls) {
+                let (out, tail) = rest.split_at_mut(d);
+                rest = tail;
+                groups.push(GroupI8 { a: &probs[off..off + l], b: vp.as_slice(), out });
+                off += l;
             }
             par_gemm_i8_notrans_grouped(&mut groups, d, pool);
         });
-        for (p, s) in probs.iter().zip(&ints) {
-            let nnz = p.as_slice().iter().filter(|&&x| x != 0).count() as u64;
-            self.ops.add(&counts::pv_gemm(nnz, s.len(), d, 1, 4));
+        for (&nnz, &l) in nnzs.iter().zip(&ls) {
+            self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
         }
 
         // (7) per-sequence output rescale (running V scale / 127).
@@ -296,6 +350,11 @@ impl AttentionPipeline for QuantOnlyAttention {
         for _ in 0..b {
             self.ops.add(&counts::output_rescale(1, d));
         }
+
+        self.dec_logits = logits;
+        self.dec_deq = deq;
+        self.dec_probs = probs;
+        self.dec_acc = acc;
         o
     }
 

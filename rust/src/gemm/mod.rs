@@ -66,6 +66,8 @@
 //! group owns a disjoint output slice and is computed by the same paged row
 //! kernel the sequential path uses.
 
+use crate::softmax::exaq::{ExaqOnlineRow, ExaqPush};
+use crate::softmax::index_softmax::{rescale_lane_i64, OnlineIndexRow, OnlinePush};
 use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
 use crate::util::f16::F16;
 use crate::util::threadpool::{ParallelPool, SendPtr};
@@ -1097,6 +1099,199 @@ pub fn par_gemm_f16_notrans_grouped(groups: &mut [GroupF16], d: usize, pool: &Pa
 }
 
 // ---------------------------------------------------------------------------
+// Fused flash-decode kernels (one KV page-walk per head)
+
+/// One sequence's fused integer flash-decode walk: per K̂ page, one
+/// `1×rows` `Q̂K̂ᵀ` tile (the same blocked — AVX-512 where available — row
+/// kernel the paged QK path uses), then every tile logit streams through the
+/// caller's [`OnlineIndexRow`] and its verdict lands directly on the
+/// `d`-lane i64 accumulator: `Ê·V̂_row` accumulate, skip (clipped / zero
+/// bucket), or running-max rescale ([`rescale_lane_i64`] per lane; factor 0
+/// resets the lanes, then the new max contributes `LÛT[0]·V̂_row = 255·V̂_row`).
+/// K̂ and V̂ pages pair up row-for-row (same [`crate::attention::state`]
+/// paging on both sides), so one zipped walk covers the whole history —
+/// the working set is the accumulator (O(d)) plus one page-sized logit tile
+/// (O(page_rows)); no L-length score row exists at any point.
+///
+/// The row max is updated per *element*, not per page, so the arithmetic —
+/// and therefore the output — is byte-identical at every page size. Final
+/// normalization (`round(255·acc/ΣÊ)` via [`OnlineIndexRow::norm_div`]) is
+/// the caller's job; `row` carries `ΣÊ` and the nnz/rescale op accounting
+/// out of the walk.
+pub fn fused_decode_i8(
+    q: &[i8],
+    kp: &[&[i8]],
+    vp: &[&[i8]],
+    row: &mut OnlineIndexRow,
+    table: &[u8],
+    acc: &mut [i64],
+    tile: &mut [i32],
+) {
+    let k = q.len();
+    let d = acc.len();
+    debug_assert_eq!(paged_rows(kp, k), paged_rows(vp, d), "K̂/V̂ row counts");
+    acc.fill(0);
+    for (kpage, vpage) in kp.iter().zip(vp) {
+        let np = kpage.len() / k;
+        debug_assert_eq!(vpage.len() / d, np, "K̂/V̂ pages pair row-for-row");
+        let t = &mut tile[..np];
+        gemm_i8_rows(q, kpage, t, 1, np, k, 0, 1);
+        for (j, &a) in t.iter().enumerate() {
+            match row.push(a, table) {
+                OnlinePush::Skip => {}
+                OnlinePush::Acc { e } => {
+                    let w = e as i64;
+                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
+                        *x += w * (vx as i64);
+                    }
+                }
+                OnlinePush::Rescale { factor } => {
+                    if factor == 0 {
+                        acc.fill(0);
+                    } else {
+                        for x in acc.iter_mut() {
+                            *x = rescale_lane_i64(*x, factor);
+                        }
+                    }
+                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
+                        *x += 255 * (vx as i64);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// EXAQ's fused flash-decode walk: same one-pass page structure as
+/// [`fused_decode_i8`], but the streamed row is EXAQ's mixed-precision
+/// [`ExaqOnlineRow`] — f32 LUT gathers onto an f32 accumulator, exact
+/// integer Δ-moments riding along for the dynamic-clip statistics. On a
+/// running-max move every lane shrinks by the LUT carry factor and the new
+/// max contributes `LUT[0]·V̂_row = 1.0·V̂_row`. Final `acc/Σe` normalization
+/// (and the stats merge) is the caller's job.
+pub fn fused_decode_exaq(
+    q: &[i8],
+    kp: &[&[i8]],
+    vp: &[&[i8]],
+    row: &mut ExaqOnlineRow,
+    lut: &[f32],
+    acc: &mut [f32],
+    tile: &mut [i32],
+) {
+    let k = q.len();
+    let d = acc.len();
+    debug_assert_eq!(paged_rows(kp, k), paged_rows(vp, d), "K̂/V̂ row counts");
+    acc.fill(0.0);
+    for (kpage, vpage) in kp.iter().zip(vp) {
+        let np = kpage.len() / k;
+        debug_assert_eq!(vpage.len() / d, np, "K̂/V̂ pages pair row-for-row");
+        let t = &mut tile[..np];
+        gemm_i8_rows(q, kpage, t, 1, np, k, 0, 1);
+        for (j, &a) in t.iter().enumerate() {
+            match row.push(a, lut) {
+                ExaqPush::Skip => {}
+                ExaqPush::Acc { e } => {
+                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
+                        *x += e * (vx as f32);
+                    }
+                }
+                ExaqPush::Rescale { factor } => {
+                    for x in acc.iter_mut() {
+                        *x *= factor;
+                    }
+                    // The new max itself contributes LUT[0] = exp(0) = 1.
+                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
+                        *x += vx as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One sequence's slice of a grouped fused flash-decode round
+/// (IndexSoftmax pipelines): its query row, its zipped K̂/V̂ page lists, its
+/// streaming softmax state (carried by value — read the `ΣÊ`/nnz/rescale
+/// accounting back out after the launch), and its disjoint accumulator +
+/// page-tile scratch. `OnlineIndexRow` bakes in the per-sequence `α` (and
+/// thus `c_int`), so grouped-Q batches need no extra per-job fields.
+pub struct FusedJobI8<'a> {
+    pub q: &'a [i8],
+    pub kp: &'a [&'a [i8]],
+    pub vp: &'a [&'a [i8]],
+    pub row: OnlineIndexRow,
+    pub acc: &'a mut [i64],
+    pub tile: &'a mut [i32],
+}
+
+/// One sequence's slice of a grouped fused EXAQ decode round. The f32 LUT
+/// rides in the job because each sequence's dynamic clip (and therefore its
+/// table) differs.
+pub struct FusedJobExaq<'a> {
+    pub q: &'a [i8],
+    pub kp: &'a [&'a [i8]],
+    pub vp: &'a [&'a [i8]],
+    pub row: ExaqOnlineRow,
+    pub lut: &'a [f32],
+    pub acc: &'a mut [f32],
+    pub tile: &'a mut [i32],
+}
+
+/// MAC-proportional work estimate of a fused grouped launch: the K̂ pages
+/// are read once for the QK tiles and the V̂ pages at most once for the
+/// accumulation, so the summed resident elements of both sides bound the
+/// walk — the same currency [`grouped_work`] reports for unfused launches.
+fn fused_work(kvs: impl Iterator<Item = (usize, usize)>) -> usize {
+    kvs.map(|(kb, vb)| kb + vb).sum()
+}
+
+/// Sequential grouped [`fused_decode_i8`]: one job per sequence. The u8 LUT
+/// is shared across the batch (fixed `(b, c)` — that is IndexSoftmax's
+/// point).
+pub fn fused_decode_i8_grouped(jobs: &mut [FusedJobI8], table: &[u8]) {
+    for j in jobs.iter_mut() {
+        fused_decode_i8(j.q, j.kp, j.vp, &mut j.row, table, j.acc, j.tile);
+    }
+}
+
+/// Pool-parallel [`fused_decode_i8_grouped`]: workers claim whole jobs
+/// through the launch's atomic cursor ([`ParallelPool::parallel_groups`]) —
+/// a single decode row is walked sequentially (the online renorm is a
+/// loop-carried dependence), so the parallelism is across sequences, and
+/// worker count / claim order never affect results.
+pub fn par_fused_decode_i8_grouped(jobs: &mut [FusedJobI8], table: &[u8], pool: &ParallelPool) {
+    let work = fused_work(jobs.iter().map(|j| {
+        (
+            j.kp.iter().map(|p| p.len()).sum::<usize>(),
+            j.vp.iter().map(|p| p.len()).sum::<usize>(),
+        )
+    }));
+    pool.parallel_groups(jobs, work, |j| {
+        fused_decode_i8(j.q, j.kp, j.vp, &mut j.row, table, j.acc, j.tile)
+    });
+}
+
+/// Sequential grouped [`fused_decode_exaq`].
+pub fn fused_decode_exaq_grouped(jobs: &mut [FusedJobExaq]) {
+    for j in jobs.iter_mut() {
+        fused_decode_exaq(j.q, j.kp, j.vp, &mut j.row, j.lut, j.acc, j.tile);
+    }
+}
+
+/// Pool-parallel [`fused_decode_exaq_grouped`].
+pub fn par_fused_decode_exaq_grouped(jobs: &mut [FusedJobExaq], pool: &ParallelPool) {
+    let work = fused_work(jobs.iter().map(|j| {
+        (
+            j.kp.iter().map(|p| p.len()).sum::<usize>(),
+            j.vp.iter().map(|p| p.len()).sum::<usize>(),
+        )
+    }));
+    pool.parallel_groups(jobs, work, |j| {
+        fused_decode_exaq(j.q, j.kp, j.vp, &mut j.row, j.lut, j.acc, j.tile)
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Reference (naive) implementations for testing
 
 /// Naive triple loop, f32 — the oracle the blocked kernels are tested against.
@@ -1731,6 +1926,196 @@ mod tests {
             par_gemm_f16_grouped(&mut groups, k, &pool);
             drop(groups);
             assert_eq!(outs, want, "grouped f16 QK @ {threads}");
+        }
+    }
+
+    use crate::softmax::exaq::{ExaqConfig, ExaqSoftmax};
+    use crate::softmax::index_softmax::IndexSoftmax;
+
+    /// Flat-layout reference for the fused integer walk: the same online
+    /// row streamed over pre-computed whole-row logits. Any divergence from
+    /// [`fused_decode_i8`] is a paging/wiring bug (tile offsets, V̂-row
+    /// indexing), not an arithmetic one.
+    fn fused_ref_i8(
+        ix: &IndexSoftmax,
+        alpha: f32,
+        logits: &[i32],
+        v: &[i8],
+        d: usize,
+    ) -> (Vec<i64>, u64, u64, u64) {
+        let mut row = ix.online_begin(alpha);
+        let mut acc = vec![0i64; d];
+        for (j, &a) in logits.iter().enumerate() {
+            match row.push(a, &ix.lut.u8_table) {
+                OnlinePush::Skip => {}
+                OnlinePush::Acc { e } => {
+                    for (x, &vx) in acc.iter_mut().zip(&v[j * d..(j + 1) * d]) {
+                        *x += e as i64 * vx as i64;
+                    }
+                }
+                OnlinePush::Rescale { factor } => {
+                    for x in acc.iter_mut() {
+                        *x = rescale_lane_i64(*x, factor);
+                    }
+                    for (x, &vx) in acc.iter_mut().zip(&v[j * d..(j + 1) * d]) {
+                        *x += 255 * vx as i64;
+                    }
+                }
+            }
+        }
+        (acc, row.esum(), row.nnz(), row.rescales())
+    }
+
+    #[test]
+    fn fused_i8_matches_flat_reference_at_every_page_size() {
+        let mut rng = Pcg64::seed_from_u64(40);
+        let ix = IndexSoftmax::default();
+        let (k, d, alpha) = (64usize, 16usize, 0.002f32);
+        for l in [1usize, 7, 33, 128] {
+            let q = rand_i8(&mut rng, 1, k);
+            let kmat = rand_i8(&mut rng, l, k);
+            let vmat = rand_i8(&mut rng, l, d);
+            let mut logits = MatI32::zeros(1, l);
+            gemm_i8(&q, &kmat, &mut logits);
+            let (want_acc, want_esum, want_nnz, want_resc) =
+                fused_ref_i8(&ix, alpha, logits.as_slice(), vmat.as_slice(), d);
+            for pr in [1usize, 2, 5, 64, 128] {
+                let kp = split_pages(kmat.as_slice(), k, pr);
+                let vp = split_pages(vmat.as_slice(), d, pr);
+                let mut row = ix.online_begin(alpha);
+                let mut acc = vec![0i64; d];
+                let mut tile = vec![0i32; pr.min(l)];
+                fused_decode_i8(
+                    q.as_slice(),
+                    &kp,
+                    &vp,
+                    &mut row,
+                    &ix.lut.u8_table,
+                    &mut acc,
+                    &mut tile,
+                );
+                // Per-element renorm ⇒ byte-identical at every page size.
+                assert_eq!(acc, want_acc, "l={l} pr={pr}");
+                assert_eq!(row.esum(), want_esum, "l={l} pr={pr}");
+                assert_eq!(row.nnz(), want_nnz, "l={l} pr={pr}");
+                assert_eq!(row.rescales(), want_resc, "l={l} pr={pr}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_i8_single_key_is_exact() {
+        // Degenerate row: one key ⇒ acc = 255·V̂_row, ΣÊ = 255 — the case
+        // where fused and two-pass normalize identically (P̂ = 255 exactly).
+        let ix = IndexSoftmax::default();
+        let (k, d) = (8usize, 4usize);
+        let q = vec![3i8; k];
+        let kv = vec![-2i8; k];
+        let v: Vec<i8> = vec![7, -7, 0, 127];
+        let mut row = ix.online_begin(0.01);
+        let mut acc = vec![0i64; d];
+        let mut tile = vec![0i32; 1];
+        fused_decode_i8(&q, &[&kv], &[&v], &mut row, &ix.lut.u8_table, &mut acc, &mut tile);
+        let want: Vec<i64> = v.iter().map(|&x| 255 * x as i64).collect();
+        assert_eq!(acc, want);
+        assert_eq!(row.esum(), 255);
+        assert_eq!(row.norm_div().div_round(255 * 255 * 7), 255 * 7);
+    }
+
+    #[test]
+    fn fused_exaq_matches_flat_reference_at_every_page_size() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let (k, d, l, alpha, clip) = (32usize, 8usize, 50usize, 0.004f32, 1.9f32);
+        let lut = ex.lut_f32(clip);
+        let q = rand_i8(&mut rng, 1, k);
+        let kmat = rand_i8(&mut rng, l, k);
+        let vmat = rand_i8(&mut rng, l, d);
+        let mut logits = MatI32::zeros(1, l);
+        gemm_i8(&q, &kmat, &mut logits);
+        // Flat reference: identical op sequence, so equality is exact (f32
+        // included — paging never reorders the per-element stream).
+        let mut rref = ex.online_begin(alpha, clip);
+        let mut want = vec![0f32; d];
+        for (j, &a) in logits.as_slice().iter().enumerate() {
+            let vrow = &vmat.as_slice()[j * d..(j + 1) * d];
+            match rref.push(a, &lut) {
+                ExaqPush::Skip => {}
+                ExaqPush::Acc { e } => {
+                    for (x, &vx) in want.iter_mut().zip(vrow) {
+                        *x += e * vx as f32;
+                    }
+                }
+                ExaqPush::Rescale { factor } => {
+                    for x in want.iter_mut() {
+                        *x *= factor;
+                    }
+                    for (x, &vx) in want.iter_mut().zip(vrow) {
+                        *x += vx as f32;
+                    }
+                }
+            }
+        }
+        for pr in [1usize, 2, 64] {
+            let kp = split_pages(kmat.as_slice(), k, pr);
+            let vp = split_pages(vmat.as_slice(), d, pr);
+            let mut row = ex.online_begin(alpha, clip);
+            let mut acc = vec![0f32; d];
+            let mut tile = vec![0i32; pr.min(l)];
+            fused_decode_exaq(q.as_slice(), &kp, &vp, &mut row, &lut, &mut acc, &mut tile);
+            assert_eq!(acc, want, "pr={pr}");
+            assert_eq!(row.fsum(), rref.fsum(), "pr={pr}");
+            assert_eq!(row.stats(alpha), rref.stats(alpha), "pr={pr}");
+        }
+    }
+
+    #[test]
+    fn fused_grouped_parallel_matches_sequential_exactly() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let ix = IndexSoftmax::default();
+        let (k, d, alpha) = (32usize, 8usize, 0.003f32);
+        let ls = [19usize, 1, 64, 5];
+        let qs: Vec<MatI8> = ls.iter().map(|_| rand_i8(&mut rng, 1, k)).collect();
+        let ks: Vec<MatI8> = ls.iter().map(|&l| rand_i8(&mut rng, l, k)).collect();
+        let vs: Vec<MatI8> = ls.iter().map(|&l| rand_i8(&mut rng, l, d)).collect();
+        let run = |pool: Option<&ParallelPool>| -> (Vec<Vec<i64>>, Vec<(u64, u64, u64)>) {
+            let kps: Vec<Vec<&[i8]>> =
+                ks.iter().map(|m| split_pages(m.as_slice(), k, 4)).collect();
+            let vps: Vec<Vec<&[i8]>> =
+                vs.iter().map(|m| split_pages(m.as_slice(), d, 4)).collect();
+            let mut accs: Vec<Vec<i64>> = ls.iter().map(|_| vec![0i64; d]).collect();
+            let mut tiles: Vec<Vec<i32>> = ls.iter().map(|&l| vec![0i32; l.min(4)]).collect();
+            let mut jobs: Vec<FusedJobI8> = Vec::new();
+            for (((q, kp), vp), (acc, tile)) in qs
+                .iter()
+                .zip(&kps)
+                .zip(&vps)
+                .zip(accs.iter_mut().zip(tiles.iter_mut()))
+            {
+                jobs.push(FusedJobI8 {
+                    q: q.as_slice(),
+                    kp,
+                    vp,
+                    row: ix.online_begin(alpha),
+                    acc,
+                    tile,
+                });
+            }
+            match pool {
+                Some(p) => par_fused_decode_i8_grouped(&mut jobs, &ix.lut.u8_table, p),
+                None => fused_decode_i8_grouped(&mut jobs, &ix.lut.u8_table),
+            }
+            let stats =
+                jobs.iter().map(|j| (j.row.esum(), j.row.nnz(), j.row.rescales())).collect();
+            drop(jobs);
+            (accs, stats)
+        };
+        let (acc_ref, stats_ref) = run(None);
+        for threads in [2usize, 8] {
+            let pool = tpool(threads);
+            let (acc, stats) = run(Some(&pool));
+            assert_eq!(acc, acc_ref, "fused grouped @ {threads}");
+            assert_eq!(stats, stats_ref, "fused grouped stats @ {threads}");
         }
     }
 }

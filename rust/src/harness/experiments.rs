@@ -517,6 +517,121 @@ pub fn batched_decode_rows_json(rows: &[BatchedDecodeRow]) -> Vec<(String, f64)>
 }
 
 // ---------------------------------------------------------------------------
+// Fused flash-decode — one-page-walk fused kernel vs unfused three-pass
+
+#[derive(Clone, Debug)]
+pub struct FusedDecodeRow {
+    pub pipeline: PipelineKind,
+    /// Context length resident in the KV state when decoding starts.
+    pub ctx: usize,
+    /// Decoded tok/s through the unfused three-pass decode (materialized
+    /// L-length logit/probability rows, `fused_decode(false)`).
+    pub unfused_tok_s: f64,
+    /// Decoded tok/s through the fused walk (one KV page-walk per step,
+    /// online renormalization, no L-length row).
+    pub fused_tok_s: f64,
+    /// Cosine similarity of the two arms' final decode outputs — the
+    /// documented ε-bound riding along as a fidelity witness (the hard
+    /// assertions live in `tests/decode_equivalence.rs`).
+    pub cosine: f64,
+}
+
+impl FusedDecodeRow {
+    pub fn speedup(&self) -> f64 {
+        if self.unfused_tok_s > 0.0 {
+            self.fused_tok_s / self.unfused_tok_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Fused-vs-unfused decode throughput for the fused-capable integer
+/// pipelines: prefill one KV state per arm (the prefill path ignores the
+/// toggle), then time `gen_tokens` decode steps per arm over identical
+/// pre-generated inputs. The fused walk reads each resident K̂/V̂ page once
+/// per step where the unfused path reads K̂ pages, writes + re-reads an
+/// L-length score row, and reads V̂ pages — so its advantage grows with the
+/// resident context.
+pub fn fused_decode_sweep(
+    ctx_lens: &[usize],
+    d: usize,
+    gen_tokens: usize,
+    threads: usize,
+) -> Vec<FusedDecodeRow> {
+    let mut rng = Pcg64::seed_from_u64(37);
+    let mut rows = Vec::new();
+    for &ctx in ctx_lens {
+        for kind in [PipelineKind::IntAttention, PipelineKind::ExaqInt2, PipelineKind::ExaqInt3] {
+            let cfg = AttentionConfig::new(ctx + gen_tokens, d).with_threads(threads);
+            let mut plain = build_pipeline(kind, cfg.with_fused_decode(false));
+            let mut fused = build_pipeline(kind, cfg.with_fused_decode(true));
+            let mut st_u = plain.begin_state();
+            let (q, k, v) = random_qkv(&mut rng, ctx, d, 1.0);
+            let _ = plain.prefill(&mut st_u, &q, &k, &v);
+            let mut st_f = st_u.clone();
+            let steps: Vec<_> = (0..gen_tokens).map(|_| random_qkv(&mut rng, 1, d, 1.0)).collect();
+
+            let mut last_u = MatF32::zeros(0, 0);
+            let t0 = std::time::Instant::now();
+            for (q1, k1, v1) in &steps {
+                last_u = plain.decode_step(&mut st_u, q1, k1, v1);
+                crate::util::bench::black_box(&last_u);
+            }
+            let dt_u = t0.elapsed().as_secs_f64().max(1e-12);
+
+            let mut last_f = MatF32::zeros(0, 0);
+            let t0 = std::time::Instant::now();
+            for (q1, k1, v1) in &steps {
+                last_f = fused.decode_step(&mut st_f, q1, k1, v1);
+                crate::util::bench::black_box(&last_f);
+            }
+            let dt_f = t0.elapsed().as_secs_f64().max(1e-12);
+
+            rows.push(FusedDecodeRow {
+                pipeline: kind,
+                ctx,
+                unfused_tok_s: gen_tokens as f64 / dt_u,
+                fused_tok_s: gen_tokens as f64 / dt_f,
+                cosine: crate::util::stats::cosine_similarity(last_f.as_slice(), last_u.as_slice()),
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_fused_decode(rows: &[FusedDecodeRow]) -> Table {
+    let mut t = Table::new(
+        "Fused flash-decode — one KV page-walk per step vs unfused three-pass (tok/s)",
+        &["pipeline", "ctx", "unfused tok/s", "fused tok/s", "speedup", "cosine"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.pipeline.name().into(),
+            r.ctx.to_string(),
+            format!("{:.0}", r.unfused_tok_s),
+            format!("{:.0}", r.fused_tok_s),
+            format!("{:.2}x", r.speedup()),
+            format!("{:.6}", r.cosine),
+        ]);
+    }
+    t
+}
+
+/// JSON payload for the fused-decode bench (label/value rows).
+pub fn fused_decode_rows_json(rows: &[FusedDecodeRow]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for r in rows {
+        let key = format!("{}@ctx{}", r.pipeline.name(), r.ctx);
+        out.push((format!("{key}:unfused_tok_s"), r.unfused_tok_s));
+        out.push((format!("{key}:fused_tok_s"), r.fused_tok_s));
+        out.push((format!("{key}:speedup"), r.speedup()));
+        out.push((format!("{key}:cosine"), r.cosine));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Shared-system-prompt admission — prefix sharing vs unshared
 
 #[derive(Clone, Debug)]

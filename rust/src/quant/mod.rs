@@ -53,6 +53,32 @@ pub fn quantize_p_i8(p: &MatF32) -> MatI8 {
     p.map(|v| (v * 127.0).round().clamp(-127.0, 127.0) as i8)
 }
 
+/// [`quantize_p_i8`] that also reports the nonzero count (the PV GEMM's
+/// exact zero-skipping work) so pipelines never re-scan the matrix.
+pub fn quantize_p_i8_counted(p: &MatF32) -> (MatI8, u64) {
+    let mut out = MatI8::zeros(p.rows(), p.cols());
+    let mut nnz = 0u64;
+    for (o, &v) in out.as_mut_slice().iter_mut().zip(p.as_slice()) {
+        let q = (v * 127.0).round().clamp(-127.0, 127.0) as i8;
+        *o = q;
+        nnz += (q != 0) as u64;
+    }
+    (out, nnz)
+}
+
+/// Slice form of [`quantize_p_i8`] for the decode hot path: quantizes one
+/// probability row into a reusable buffer and returns the nonzero count.
+pub fn quantize_p_i8_into(p: &[f32], out: &mut [i8]) -> u64 {
+    assert_eq!(p.len(), out.len());
+    let mut nnz = 0u64;
+    for (o, &v) in out.iter_mut().zip(p) {
+        let q = (v * 127.0).round().clamp(-127.0, 127.0) as i8;
+        *o = q;
+        nnz += (q != 0) as u64;
+    }
+    nnz
+}
+
 /// Dequantize a ×255 UINT8 probability matrix.
 pub fn dequantize_p_u8(p: &MatU8) -> MatF32 {
     p.map(|v| v as f32 / 255.0)
@@ -233,6 +259,20 @@ mod tests {
         let p = MatF32::from_vec(1, 2, vec![0.0, 1.0]);
         let q = quantize_p_i8(&p);
         assert_eq!(q.as_slice(), &[0, 127]);
+    }
+
+    #[test]
+    fn p_i8_counted_and_into_match_map_form() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let p = random_mat(&mut rng, 3, 17, 0.02).map(f32::abs);
+        let want = quantize_p_i8(&p);
+        let (got, nnz) = quantize_p_i8_counted(&p);
+        assert_eq!(got, want);
+        assert_eq!(nnz, want.as_slice().iter().filter(|&&x| x != 0).count() as u64);
+        let mut row = vec![0i8; 17];
+        let row_nnz = quantize_p_i8_into(p.row(1), &mut row);
+        assert_eq!(&row[..], want.row(1));
+        assert_eq!(row_nnz, row.iter().filter(|&&x| x != 0).count() as u64);
     }
 
     #[test]

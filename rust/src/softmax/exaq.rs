@@ -108,13 +108,13 @@ impl ExaqSoftmax {
         self.forward_with_clip(logits, alpha, mask, clip)
     }
 
-    /// Forward with an externally supplied clip range (the stateful decode
-    /// path derives it from running statistics rather than this block's).
-    pub fn forward_with_clip(&self, logits: &MatI32, alpha: f32, mask: Mask, clip: f32) -> MatU8 {
+    /// f32 LUT over `[0, clip]`: `LUT[i] = exp(−clip·i/(n−1))`, last entry 0.
+    /// Rebuilt whenever the dynamic clip moves (the per-tensor overhead the
+    /// paper charges EXAQ for); shared by the two-pass and fused paths.
+    pub fn lut_f32(&self, clip: f32) -> Vec<f32> {
         let clip = clip.max(1e-3);
         let n = self.entries();
-        // f32 LUT over [0, clip]: LUT[i] = exp(−clip·i/(n−1)), last entry 0.
-        let lut: Vec<f32> = (0..n)
+        (0..n)
             .map(|i| {
                 if i == n - 1 {
                     0.0
@@ -122,10 +122,31 @@ impl ExaqSoftmax {
                     (-(clip * i as f32 / (n - 1) as f32)).exp()
                 }
             })
-            .collect();
+            .collect()
+    }
+
+    /// Forward with an externally supplied clip range (the stateful decode
+    /// path derives it from running statistics rather than this block's).
+    pub fn forward_with_clip(&self, logits: &MatI32, alpha: f32, mask: Mask, clip: f32) -> MatU8 {
+        self.forward_with_clip_counted(logits, alpha, mask, clip).0
+    }
+
+    /// [`Self::forward_with_clip`] that also reports the nonzero-`P̂` count
+    /// (the PV GEMM's exact work) so pipelines never re-scan the matrix.
+    pub fn forward_with_clip_counted(
+        &self,
+        logits: &MatI32,
+        alpha: f32,
+        mask: Mask,
+        clip: f32,
+    ) -> (MatU8, u64) {
+        let clip = clip.max(1e-3);
+        let n = self.entries();
+        let lut = self.lut_f32(clip);
         let l = logits.cols();
         let mut out = MatU8::zeros(logits.rows(), l);
         let clip_int = (clip / alpha).max(1.0);
+        let mut nnz = 0u64;
         for r in 0..logits.rows() {
             let valid = mask.valid_cols(r, l);
             let row = &logits.row(r)[..valid];
@@ -143,15 +164,190 @@ impl ExaqSoftmax {
             let inv = 1.0 / sum;
             let out_row = out.row_mut(r);
             for (o, &ev) in out_row[..valid].iter_mut().zip(&e) {
-                *o = (ev * inv * 255.0).round().clamp(0.0, 255.0) as u8;
+                let p = (ev * inv * 255.0).round().clamp(0.0, 255.0) as u8;
+                *o = p;
+                nnz += (p != 0) as u64;
             }
         }
-        out
+        (out, nnz)
+    }
+
+    /// Δ statistics of one fully-valid row — the unfused decode hot path's
+    /// slice-level [`Self::delta_stats`] (bit-identical accumulation order
+    /// to a `1×L` matrix under `Mask::None`).
+    pub fn delta_stats_row(row: &[i32], alpha: f32) -> (f64, f64, u64) {
+        let m = *row.iter().max().expect("non-empty row") as i64;
+        let mut sum = 0f64;
+        let mut sumsq = 0f64;
+        for &a in row {
+            let d = (m - a as i64) as f64 * alpha as f64;
+            sum += d;
+            sumsq += d * d;
+        }
+        (sum, sumsq, row.len() as u64)
+    }
+
+    /// Single-row forward over a plain slice (the unfused decode hot path —
+    /// a decode row is fully valid, so no mask argument). Writes `P̂` into
+    /// `out` and returns the nonzero count, so callers never re-scan for op
+    /// accounting. `lut` must come from [`Self::lut_f32`] at the same clip.
+    pub fn forward_row_with_clip(
+        &self,
+        row: &[i32],
+        alpha: f32,
+        clip: f32,
+        lut: &[f32],
+        out: &mut [u8],
+    ) -> u64 {
+        assert_eq!(row.len(), out.len());
+        let n = self.entries();
+        debug_assert_eq!(lut.len(), n);
+        let clip_int = (clip.max(1e-3) / alpha).max(1.0);
+        let m = *row.iter().max().expect("non-empty row") as i64;
+        let mut sum = 0f32;
+        for (o, &a) in out.iter_mut().zip(row) {
+            let delta = (m - a as i64) as f32;
+            let idx = ((delta / clip_int * (n - 1) as f32).round() as usize).min(n - 1);
+            // Stash the gather index; the normalize pass re-gathers — same
+            // two-pass structure as forward_with_clip without a float row.
+            *o = idx as u8;
+            sum += lut[idx];
+        }
+        let inv = 1.0 / sum;
+        let mut nnz = 0u64;
+        for o in out.iter_mut() {
+            let p = (lut[*o as usize] * inv * 255.0).round().clamp(0.0, 255.0) as u8;
+            *o = p;
+            nnz += (p != 0) as u64;
+        }
+        nnz
+    }
+
+    /// Begin a streamed row for the fused decode walk: online float softmax
+    /// over the EXAQ LUT plus **exact** integer Δ-moment accounting about
+    /// the running max, so the per-sequence running statistics (and thus the
+    /// next dynamic clip) come out of the same single page walk.
+    pub fn online_begin(&self, alpha: f32, clip: f32) -> ExaqOnlineRow {
+        ExaqOnlineRow {
+            clip_int: (clip.max(1e-3) / alpha).max(1.0),
+            entries: self.entries(),
+            m: 0,
+            started: false,
+            fsum: 0.0,
+            n: 0,
+            dsum: 0,
+            dsumsq: 0,
+            nnz: 0,
+            rescales: 0,
+        }
     }
 
     /// Float view (`P̂/255`) for fidelity metrics.
     pub fn forward_probs_f32(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatF32 {
         self.forward(logits, alpha, mask).map(|v| v as f32 / 255.0)
+    }
+}
+
+/// What the fused EXAQ accumulator must do with one streamed logit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExaqPush {
+    /// Zero contribution: skip the `d`-wide accumulate.
+    Skip,
+    /// Accumulate `e · V̂_row` into the float accumulator.
+    Acc { e: f32 },
+    /// The running max moved: multiply every accumulator lane by `factor`
+    /// (`exp(−αΔm)` through the LUT), then accumulate `1.0 · V̂_row`.
+    Rescale { factor: f32 },
+}
+
+/// Streaming row state for EXAQ's fused decode walk. Tracks the running
+/// max, the float `Σe`, and integer Δ-moments `(n, ΣΔ, ΣΔ²)` **about the
+/// running max**, shifted exactly when the max moves
+/// (`ΣΔ² += 2·Δm·ΣΔ + n·Δm²`, then `ΣΔ += n·Δm`) — so [`Self::stats`]
+/// reproduces `delta_stats` semantics without a second pass, with exact
+/// integer arithmetic where the two-pass form sums rounded f64 terms.
+#[derive(Clone, Copy, Debug)]
+pub struct ExaqOnlineRow {
+    clip_int: f32,
+    entries: usize,
+    m: i32,
+    started: bool,
+    fsum: f32,
+    n: u64,
+    dsum: i128,
+    dsumsq: i128,
+    nnz: u64,
+    rescales: u64,
+}
+
+impl ExaqOnlineRow {
+    /// Stream one logit; `lut` is [`ExaqSoftmax::lut_f32`] at this row's clip.
+    #[inline]
+    pub fn push(&mut self, a: i32, lut: &[f32]) -> ExaqPush {
+        if !self.started {
+            self.started = true;
+            self.m = a;
+            self.fsum = lut[0]; // Δ = 0 → exp(0) = 1
+            self.n = 1;
+            self.nnz = 1;
+            return ExaqPush::Acc { e: lut[0] };
+        }
+        if a > self.m {
+            let dm = (a as i64 - self.m as i64) as i128;
+            self.m = a;
+            self.rescales += 1;
+            // Shift the exact moments to the new max, then admit Δ = 0.
+            self.dsumsq += 2 * dm * self.dsum + self.n as i128 * dm * dm;
+            self.dsum += self.n as i128 * dm;
+            self.n += 1;
+            let idx = ((dm as f32 / self.clip_int * (self.entries - 1) as f32).round()
+                as usize)
+                .min(self.entries - 1);
+            let factor = lut[idx];
+            self.fsum = self.fsum * factor + lut[0];
+            self.nnz += 1;
+            return ExaqPush::Rescale { factor };
+        }
+        let delta = (self.m as i64 - a as i64) as u64;
+        self.dsum += delta as i128;
+        self.dsumsq += (delta as i128) * (delta as i128);
+        self.n += 1;
+        let idx = ((delta as f32 / self.clip_int * (self.entries - 1) as f32).round()
+            as usize)
+            .min(self.entries - 1);
+        let e = lut[idx];
+        if e == 0.0 {
+            return ExaqPush::Skip;
+        }
+        self.fsum += e;
+        self.nnz += 1;
+        ExaqPush::Acc { e }
+    }
+
+    /// Running `Σe` for the final `acc/Σe` normalization.
+    #[inline]
+    pub fn fsum(&self) -> f32 {
+        self.fsum
+    }
+
+    /// Elements accumulated with nonzero weight (`pv_gemm` op-count basis).
+    #[inline]
+    pub fn nnz(&self) -> u64 {
+        self.nnz
+    }
+
+    /// Times the running max moved.
+    #[inline]
+    pub fn rescales(&self) -> u64 {
+        self.rescales
+    }
+
+    /// The row's Δ-statistics in [`ExaqSoftmax::delta_stats`] units
+    /// (`(Σδ·α, Σδ²·α², n)`), for merging into the running per-sequence
+    /// accumulator after the walk.
+    pub fn stats(&self, alpha: f32) -> (f64, f64, u64) {
+        let a = alpha as f64;
+        (self.dsum as f64 * a, self.dsumsq as f64 * a * a, self.n)
     }
 }
 
@@ -286,5 +482,91 @@ mod tests {
                 assert_eq!(p.get(r, c), 0);
             }
         }
+    }
+
+    #[test]
+    fn row_forward_bit_identical_to_two_pass_and_counts_nnz() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let alpha = 0.004f32;
+        for l in [1usize, 7, 64] {
+            let logits = gaussian_logits(&mut rng, 1, l, 500.0);
+            let clip = 1.7f32;
+            let want = ex.forward_with_clip(&logits, alpha, Mask::None, clip);
+            let lut = ex.lut_f32(clip);
+            let mut out = vec![0u8; l];
+            let nnz = ex.forward_row_with_clip(logits.row(0), alpha, clip, &lut, &mut out);
+            assert_eq!(&out[..], want.row(0), "l={l}");
+            assert_eq!(nnz, out.iter().filter(|&&x| x != 0).count() as u64);
+        }
+    }
+
+    #[test]
+    fn counted_forward_matches_rescan_and_row_stats_match_matrix() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let alpha = 0.004f32;
+        let logits = gaussian_logits(&mut rng, 6, 40, 500.0);
+        let (p, nnz) = ex.forward_with_clip_counted(&logits, alpha, Mask::Causal, 1.5);
+        assert_eq!(nnz, p.as_slice().iter().filter(|&&x| x != 0).count() as u64);
+        // Slice-level Δ stats reproduce the matrix reduction bit-for-bit on
+        // a single fully-valid row.
+        let one = gaussian_logits(&mut rng, 1, 33, 500.0);
+        assert_eq!(
+            ExaqSoftmax::delta_stats_row(one.row(0), alpha),
+            ExaqSoftmax::delta_stats(&one, alpha, Mask::None)
+        );
+    }
+
+    #[test]
+    fn online_stats_match_delta_stats_exactly_under_moves() {
+        // Max arrives mid-stream twice; the shifted integer moments must
+        // equal a direct final-max reduction (delta_stats) to the last bit
+        // of the integer sums.
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let alpha = 0.004f32;
+        let vals = [100i32, -50, 900, 250, 1800, 1800 - 3, -2000];
+        let clip = 2.0f32;
+        let lut = ex.lut_f32(clip);
+        let mut row = ex.online_begin(alpha, clip);
+        let mut moves = 0;
+        for &a in &vals {
+            if let ExaqPush::Rescale { .. } = row.push(a, &lut) {
+                moves += 1;
+            }
+        }
+        assert_eq!(moves, 2);
+        assert_eq!(row.rescales(), 2);
+        let (sum, sumsq, n) = row.stats(alpha);
+        let m = *vals.iter().max().unwrap() as i64;
+        let dsum: i64 = vals.iter().map(|&a| m - a as i64).sum();
+        let dsumsq: i64 = vals.iter().map(|&a| (m - a as i64).pow(2)).sum();
+        assert_eq!(n, vals.len() as u64);
+        assert_eq!(sum, dsum as f64 * alpha as f64);
+        assert_eq!(sumsq, dsumsq as f64 * (alpha as f64) * (alpha as f64));
+    }
+
+    #[test]
+    fn online_fsum_matches_two_pass_when_max_first() {
+        // Max first → no rescales → fsum accumulates the same lut gathers in
+        // the same order as the two-pass row sum.
+        let ex = ExaqSoftmax::new(ExaqConfig::int2());
+        let alpha = 0.01f32;
+        let vals = [500i32, 400, 100, 480, -100];
+        let clip = 3.0f32;
+        let lut = ex.lut_f32(clip);
+        let mut row = ex.online_begin(alpha, clip);
+        for &a in &vals {
+            assert!(!matches!(row.push(a, &lut), ExaqPush::Rescale { .. }));
+        }
+        let clip_int = (clip / alpha).max(1.0);
+        let n = ex.entries();
+        let mut want = 0f32;
+        for &a in &vals {
+            let delta = (500 - a) as f32;
+            let idx = ((delta / clip_int * (n - 1) as f32).round() as usize).min(n - 1);
+            want += lut[idx];
+        }
+        assert_eq!(row.fsum(), want);
     }
 }

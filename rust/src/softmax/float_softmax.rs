@@ -37,6 +37,24 @@ pub fn softmax_rows(x: &mut MatF32, mask: Mask) {
     }
 }
 
+/// In-place stable softmax of one fully-valid row over a plain slice (the
+/// decode hot path — a decode row attends to its whole history, so no mask
+/// argument and no matrix wrapper). Identical arithmetic, in identical
+/// order, to [`softmax_rows`] on the same data as a `1×L` matrix.
+pub fn softmax_row(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        let diff = *v - m;
+        *v = if diff < -80.0 { 0.0 } else { diff.exp() };
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
 /// Stable softmax with every elementary result rounded to f16 precision —
 /// the FP16 pipeline's softmax stage. The max subtraction happens *before*
 /// rounding (as real FP16 kernels do): the difference is ≤ 0, so `exp` and
@@ -117,6 +135,19 @@ mod tests {
             }
             let s: f32 = x.row(r).iter().sum();
             assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn row_form_bit_identical_to_matrix_form() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        for l in [1usize, 9, 77] {
+            let data: Vec<f32> = (0..l).map(|_| rng.normal_ms(0.0, 5.0)).collect();
+            let mut want = MatF32::from_vec(1, l, data.clone());
+            softmax_rows(&mut want, Mask::None);
+            let mut row = data;
+            softmax_row(&mut row);
+            assert_eq!(&row[..], want.as_slice(), "l={l}");
         }
     }
 

@@ -18,6 +18,31 @@
 //! No floating-point operation occurs between the INT32 logits and the UINT8
 //! probability matrix. The only float input is the *scalar* `α`, used once
 //! per tensor (or per group, §3.3) to derive `c_int`.
+//!
+//! ## Online (fused-decode) form
+//!
+//! The fused decode path walks the KV page list once, so the softmax can
+//! never see a whole row before normalizing — there is no materialized row
+//! to normalize. [`OnlineIndexRow`] is the streaming counterpart: it keeps
+//! the running row max `m`, the running sum `ΣÊ`, and tells the caller's
+//! `P̂V̂` accumulator what to do with each streamed logit ([`OnlinePush`]):
+//!
+//! * `a ≤ m`: gather `Ê = LÛT[idx(m − a)]` exactly as the two-pass form
+//!   would, and accumulate `Ê·V̂` (skipped when the gather lands in a zero
+//!   bucket — the same §3.1 sparsity).
+//! * `a > m`: the max moved by `Δm`. All prior mass shrinks by
+//!   `Ê(Δm)/255` — one LUT gather plus one rounded integer multiply per
+//!   accumulator lane ([`rescale_lane_i64`]), the integer analogue of online
+//!   softmax's `e^{m_old − m_new}` carry factor — and the element itself
+//!   contributes `LÛT[0] = 255`.
+//!
+//! The final outputs are produced by a single `round(255·acc / ΣÊ)` per
+//! lane ([`OnlineIndexRow::norm_div`]) instead of rounding each `P̂` before
+//! the `P̂V̂` sum. That reordering (plus the LUT-composed carry factors) is
+//! why the fused path is ε-bounded rather than bit-identical against the
+//! two-pass oracle except in degenerate rows (single surviving entry); the
+//! exact contract lives in the `attention` module docs and is asserted in
+//! `tests/decode_equivalence.rs`.
 
 use crate::softmax::lut::ExpLut;
 use crate::tensor::{MatF32, MatI32, MatU8};
@@ -178,12 +203,15 @@ impl IndexSoftmax {
     /// to ≈255; exactly 0 in masked-out columns).
     pub fn forward(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatU8 {
         let mut out = MatU8::zeros(logits.rows(), logits.cols());
-        self.forward_into(logits, alpha, mask, &mut out);
+        let _ = self.forward_into(logits, alpha, mask, &mut out);
         out
     }
 
-    /// Allocation-free forward for the serving hot path.
-    pub fn forward_into(&self, logits: &MatI32, alpha: f32, mask: Mask, out: &mut MatU8) {
+    /// Allocation-free forward for the serving hot path. Returns the number
+    /// of nonzero `P̂` entries written — the exact PV-GEMM work the §3.1
+    /// sparsity leaves behind — so callers never re-scan the matrix for op
+    /// accounting.
+    pub fn forward_into(&self, logits: &MatI32, alpha: f32, mask: Mask, out: &mut MatU8) -> u64 {
         assert_eq!((out.rows(), out.cols()), (logits.rows(), logits.cols()));
         let c_int = self.c_int(alpha);
         let l = logits.cols();
@@ -192,6 +220,7 @@ impl IndexSoftmax {
         let idx_div = MulShiftDiv::new(c_int as u64);
         let table = &self.lut.u8_table;
         let mut scratch: Vec<u8> = vec![0; l];
+        let mut nnz = 0u64;
 
         for r in 0..logits.rows() {
             let valid = mask.valid_cols(r, l);
@@ -222,24 +251,62 @@ impl IndexSoftmax {
             let norm_div = MulShiftDiv::new(sum as u64);
             let out_row = out.row_mut(r);
             for (o, &e) in out_row[..valid].iter_mut().zip(e_row.iter()) {
-                *o = norm_div.div_round(255 * e as u64) as u8;
+                let p = norm_div.div_round(255 * e as u64) as u8;
+                *o = p;
+                nnz += (p != 0) as u64;
             }
             for o in out_row[valid..].iter_mut() {
                 *o = 0;
             }
         }
+        nnz
+    }
+
+    /// Single fully-valid row over plain slices (the unfused decode hot
+    /// path — a decode row attends to the whole history, so no mask
+    /// argument and no matrix wrapper). Stashes `Ê` in `out`, normalizes in
+    /// place, and returns the nonzero-`P̂` count. Bit-identical to
+    /// [`Self::forward_into`] on the same row as a `1×L` matrix.
+    pub fn forward_row_into(&self, row: &[i32], alpha: f32, out: &mut [u8]) -> u64 {
+        assert_eq!(row.len(), out.len());
+        let c_int = self.c_int(alpha);
+        let n1 = self.lut.max_index() as u64;
+        let idx_div = MulShiftDiv::new(c_int as u64);
+        let table = &self.lut.u8_table;
+        let m = *row.iter().max().expect("non-empty row");
+        let mut sum: u32 = 0;
+        for (e, &a) in out.iter_mut().zip(row) {
+            let delta = (m as i64 - a as i64) as u64;
+            let v = if delta >= c_int as u64 {
+                0u8
+            } else {
+                table[idx_div.div_round(delta * n1) as usize]
+            };
+            *e = v;
+            sum += v as u32;
+        }
+        debug_assert!(sum >= 255);
+        let norm_div = MulShiftDiv::new(sum as u64);
+        let mut nnz = 0u64;
+        for o in out.iter_mut() {
+            let p = norm_div.div_round(255 * *o as u64) as u8;
+            *o = p;
+            nnz += (p != 0) as u64;
+        }
+        nnz
     }
 
     /// Group-wise forward (§3.3, eq. 16–18): `alphas[g]` is `α^(g)` for the
     /// Q-row group of each row (e.g. per-row or per-row-block Q scales); the
-    /// LUT is shared, only `c_int^(g)` varies.
+    /// LUT is shared, only `c_int^(g)` varies. Also returns the nonzero-`P̂`
+    /// count, like [`Self::forward_into`].
     pub fn forward_grouped(
         &self,
         logits: &MatI32,
         row_group: impl Fn(usize) -> usize,
         alphas: &[f32],
         mask: Mask,
-    ) -> MatU8 {
+    ) -> (MatU8, u64) {
         let mut out = MatU8::zeros(logits.rows(), logits.cols());
         let l = logits.cols();
         let n1 = self.lut.max_index() as u64;
@@ -253,6 +320,7 @@ impl IndexSoftmax {
             })
             .collect();
         let mut scratch: Vec<u8> = vec![0; l];
+        let mut nnz = 0u64;
         for r in 0..logits.rows() {
             let (c_int, idx_div) = dividers[row_group(r)];
             let valid = mask.valid_cols(r, l);
@@ -273,16 +341,147 @@ impl IndexSoftmax {
             let norm_div = MulShiftDiv::new(sum as u64);
             let out_row = out.row_mut(r);
             for (o, &e) in out_row[..valid].iter_mut().zip(e_row.iter()) {
-                *o = norm_div.div_round(255 * e as u64) as u8;
+                let p = norm_div.div_round(255 * e as u64) as u8;
+                *o = p;
+                nnz += (p != 0) as u64;
             }
         }
-        out
+        (out, nnz)
     }
 
     /// Float view of the produced probabilities (`P̂/255`) — used by the
     /// fidelity evaluations, never by the runtime path.
     pub fn forward_probs_f32(&self, logits: &MatI32, alpha: f32, mask: Mask) -> MatF32 {
         self.forward(logits, alpha, mask).map(|v| v as f32 / 255.0)
+    }
+
+    /// Begin a streamed row for the fused decode path (see module docs).
+    /// One per (sequence, decode step); elements are fed with
+    /// [`OnlineIndexRow::push`].
+    pub fn online_begin(&self, alpha: f32) -> OnlineIndexRow {
+        let c_int = self.c_int(alpha) as u64;
+        OnlineIndexRow {
+            c_int,
+            n1: self.lut.max_index() as u64,
+            idx_div: MulShiftDiv::new(c_int),
+            m: 0,
+            esum: 0,
+            nnz: 0,
+            rescales: 0,
+            started: false,
+        }
+    }
+}
+
+/// What the fused `P̂V̂` accumulator must do with one streamed logit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OnlinePush {
+    /// Contribution is zero (clipped, or the gather landed in a zero
+    /// bucket): nothing to accumulate.
+    Skip,
+    /// Accumulate `e · V̂_row` (`e > 0`) into the accumulator.
+    Acc { e: u8 },
+    /// The element raised the running max: first rescale every accumulator
+    /// lane by `factor/255`, round to nearest ([`rescale_lane_i64`];
+    /// `factor == 0` means all prior mass clipped away — reset the lanes),
+    /// then accumulate `255 · V̂_row` for the element itself.
+    Rescale { factor: u8 },
+}
+
+/// Streaming (online) row state for the fused decode walk: running row max,
+/// running `ΣÊ`, and the sparsity/rescale accounting the op counters need.
+/// The LUT is passed per [`Self::push`] so the state stays `'static` and can
+/// live inside per-sequence job descriptors.
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineIndexRow {
+    c_int: u64,
+    n1: u64,
+    idx_div: MulShiftDiv,
+    m: i32,
+    esum: u64,
+    nnz: u64,
+    rescales: u64,
+    started: bool,
+}
+
+impl OnlineIndexRow {
+    /// Stream one logit; `table` is the operator's `lut.u8_table`.
+    #[inline]
+    pub fn push(&mut self, a: i32, table: &[u8]) -> OnlinePush {
+        if !self.started {
+            // First element is its own max: Δ = 0 → LUT[0] = 255.
+            self.started = true;
+            self.m = a;
+            self.esum = 255;
+            self.nnz = 1;
+            return OnlinePush::Acc { e: 255 };
+        }
+        if a > self.m {
+            let dm = (a as i64 - self.m as i64) as u64;
+            self.m = a;
+            self.rescales += 1;
+            let factor = if dm >= self.c_int {
+                0
+            } else {
+                table[self.idx_div.div_round(dm * self.n1) as usize]
+            };
+            // Prior mass shrinks by factor/255 (round to nearest — the same
+            // rounding the lanes apply); the new max contributes LUT[0]=255.
+            self.esum = (self.esum * factor as u64 + 127) / 255 + 255;
+            self.nnz += 1;
+            return OnlinePush::Rescale { factor };
+        }
+        let delta = (self.m as i64 - a as i64) as u64;
+        let e = if delta >= self.c_int {
+            0
+        } else {
+            table[self.idx_div.div_round(delta * self.n1) as usize]
+        };
+        if e == 0 {
+            return OnlinePush::Skip;
+        }
+        self.esum += e as u64;
+        self.nnz += 1;
+        OnlinePush::Acc { e }
+    }
+
+    /// Running `ΣÊ` (≥ 255 once any element was pushed).
+    #[inline]
+    pub fn esum(&self) -> u64 {
+        self.esum
+    }
+
+    /// Elements accumulated with a nonzero weight — the fused path's
+    /// `pv_gemm` op-count basis (each one cost `d` MACs).
+    #[inline]
+    pub fn nnz(&self) -> u64 {
+        self.nnz
+    }
+
+    /// Times the running max moved (each cost `d` rescale multiplies).
+    #[inline]
+    pub fn rescales(&self) -> u64 {
+        self.rescales
+    }
+
+    /// Divider for the final `P̂V̂ = round(255·acc / ΣÊ)` normalization —
+    /// one per row, like the two-pass form's `norm_div`.
+    pub fn norm_div(&self) -> MulShiftDiv {
+        debug_assert!(self.esum >= 255, "norm_div before any push");
+        MulShiftDiv::new(self.esum)
+    }
+}
+
+/// `round(x · factor / 255)` on a signed accumulator lane — the integer
+/// rescale applied when the running max moves (ties away from zero, the
+/// same convention as [`MulShiftDiv::div_round`]).
+#[inline]
+pub fn rescale_lane_i64(x: i64, factor: u8) -> i64 {
+    let p = x * factor as i64;
+    if p >= 0 {
+        (p + 127) / 255
+    } else {
+        -((-p + 127) / 255)
     }
 }
 
@@ -545,7 +744,7 @@ mod tests {
         let logits = random_logits(&mut rng, 8, 32, 15_000);
         let alpha = 0.002;
         let a = ix.forward(&logits, alpha, Mask::None);
-        let b = ix.forward_grouped(&logits, |_| 0, &[alpha], Mask::None);
+        let (b, _) = ix.forward_grouped(&logits, |_| 0, &[alpha], Mask::None);
         assert_eq!(a, b);
     }
 
@@ -556,7 +755,7 @@ mod tests {
         let logits = random_logits(&mut rng, 4, 32, 15_000);
         // Two groups with very different alphas must differ from forcing
         // either single alpha everywhere.
-        let grouped = ix.forward_grouped(&logits, |r| r / 2, &[0.001, 0.05], Mask::None);
+        let (grouped, _) = ix.forward_grouped(&logits, |r| r / 2, &[0.001, 0.05], Mask::None);
         let all_a = ix.forward(&logits, 0.001, Mask::None);
         let all_b = ix.forward(&logits, 0.05, Mask::None);
         assert_eq!(grouped.row(0), all_a.row(0));
@@ -579,5 +778,106 @@ mod tests {
         let logits = MatI32::from_vec(1, 1, vec![-12345]);
         let p = ix.forward(&logits, 0.01, Mask::None);
         assert_eq!(p.get(0, 0), 255);
+    }
+
+    #[test]
+    fn forward_into_nnz_matches_rescan() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let ix = IndexSoftmax::default();
+        for mask in [Mask::None, Mask::Causal] {
+            let logits = random_logits(&mut rng, 12, 48, 25_000);
+            let mut out = MatU8::zeros(12, 48);
+            let nnz = ix.forward_into(&logits, 0.001, mask, &mut out);
+            let scan = out.as_slice().iter().filter(|&&x| x != 0).count() as u64;
+            assert_eq!(nnz, scan, "{mask:?}");
+        }
+        // Grouped path reports the same count as a rescan, too.
+        let logits = random_logits(&mut rng, 6, 32, 25_000);
+        let (p, nnz) = ix.forward_grouped(&logits, |r| r / 3, &[0.001, 0.02], Mask::Causal);
+        assert_eq!(nnz, p.as_slice().iter().filter(|&&x| x != 0).count() as u64);
+    }
+
+    #[test]
+    fn row_forward_bit_identical_to_matrix_forward() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let ix = IndexSoftmax::default();
+        for l in [1usize, 5, 80] {
+            let logits = random_logits(&mut rng, 1, l, 20_000);
+            let mut want = MatU8::zeros(1, l);
+            let want_nnz = ix.forward_into(&logits, 0.0015, Mask::None, &mut want);
+            let mut out = vec![0u8; l];
+            let nnz = ix.forward_row_into(logits.row(0), 0.0015, &mut out);
+            assert_eq!(&out[..], want.row(0), "l={l}");
+            assert_eq!(nnz, want_nnz, "l={l}");
+        }
+    }
+
+    #[test]
+    fn online_row_tracks_two_pass_e_values_when_max_comes_first() {
+        // With the row max streamed first the running max never moves, so
+        // every gathered Ê (and the final ΣÊ) must equal the two-pass form's.
+        let ix = IndexSoftmax::default();
+        let alpha = 0.002f32;
+        let vals = [9000i32, 2000, 8999, -500, 5000, 9000 - 3200];
+        let mut row = ix.online_begin(alpha);
+        let mut got_e = Vec::new();
+        for &a in &vals {
+            match row.push(a, &ix.lut.u8_table) {
+                OnlinePush::Acc { e } => got_e.push(e),
+                OnlinePush::Skip => got_e.push(0),
+                OnlinePush::Rescale { .. } => panic!("max never moves"),
+            }
+        }
+        assert_eq!(row.rescales(), 0);
+        // Two-pass reference over the same values.
+        let logits = MatI32::from_vec(1, vals.len(), vals.to_vec());
+        let c_int = ix.c_int(alpha) as i64;
+        let n1 = ix.lut.max_index() as i64;
+        let m = *vals.iter().max().unwrap() as i64;
+        let mut esum = 0u64;
+        for (i, &a) in vals.iter().enumerate() {
+            let delta = m - a as i64;
+            let want = if delta >= c_int {
+                0
+            } else {
+                ix.lut.u8_table[((delta * n1 * 2 + c_int) / (2 * c_int)) as usize]
+            };
+            assert_eq!(got_e[i], want, "element {i}");
+            esum += want as u64;
+        }
+        assert_eq!(row.esum(), esum);
+        let _ = ix.forward(&logits, alpha, Mask::None); // sanity: same shapes
+    }
+
+    #[test]
+    fn online_rescale_factor_matches_lut_of_max_delta() {
+        let ix = IndexSoftmax::default();
+        let alpha = 0.002f32; // c_int = 3300
+        let mut row = ix.online_begin(alpha);
+        assert_eq!(row.push(100, &ix.lut.u8_table), OnlinePush::Acc { e: 255 });
+        // Max moves by 1000 → factor = LUT[round(1000·31/3300)] = LUT[9].
+        let p = row.push(1100, &ix.lut.u8_table);
+        assert_eq!(p, OnlinePush::Rescale { factor: ix.lut.u8_table[9] });
+        assert_eq!(row.rescales(), 1);
+        // ΣÊ = round(255·factor/255) + 255.
+        let f = ix.lut.u8_table[9] as u64;
+        assert_eq!(row.esum(), (255 * f + 127) / 255 + 255);
+        // A move past c_int clips all prior mass: factor 0, ΣÊ resets to 255.
+        let p = row.push(1100 + 3300, &ix.lut.u8_table);
+        assert_eq!(p, OnlinePush::Rescale { factor: 0 });
+        assert_eq!(row.esum(), 255);
+    }
+
+    #[test]
+    fn rescale_lane_rounds_ties_away_from_zero() {
+        assert_eq!(rescale_lane_i64(255, 255), 255);
+        assert_eq!(rescale_lane_i64(-255, 255), -255);
+        assert_eq!(rescale_lane_i64(1, 128), 1); // 128/255 ≈ 0.502 → 1
+        assert_eq!(rescale_lane_i64(1, 127), 0); // 127/255 ≈ 0.498 → 0
+        assert_eq!(rescale_lane_i64(-1, 128), -1);
+        assert_eq!(rescale_lane_i64(1000, 0), 0);
+        // Exact halves round away from zero, matching div_round.
+        assert_eq!(rescale_lane_i64(1, 255), 1);
+        assert_eq!(rescale_lane_i64(3, 85), 1); // 255/255 = 1 exactly
     }
 }

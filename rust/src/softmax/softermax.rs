@@ -41,12 +41,15 @@ impl Softermax {
         // Per-element exponent in Q8: x_q8 = (m − a)·alpha·log2(e)·256,
         // computed with one fixed-point multiplier per tensor.
         let scale_q8 = (alpha as f64 * std::f64::consts::LOG2_E * 256.0 * 65536.0) as u64; // Q8<<16
+        // One scratch row reused across rows — every element is written
+        // before it is read, so no per-row clear (or per-row alloc) needed.
+        let mut scratch = vec![0u32; l];
         for r in 0..logits.rows() {
             let valid = mask.valid_cols(r, l);
             let row = &logits.row(r)[..valid];
             let m = *row.iter().max().expect("non-empty row") as i64;
             // 2^(−x) in Q24 per element; sum in Q24.
-            let mut vals = vec![0u32; valid];
+            let vals = &mut scratch[..valid];
             let mut sum: u64 = 0;
             for (o, &a) in vals.iter_mut().zip(row) {
                 let delta = (m - a as i64) as u64;
@@ -64,7 +67,7 @@ impl Softermax {
                 sum += *o as u64;
             }
             let out_row = out.row_mut(r);
-            for (o, &v) in out_row[..valid].iter_mut().zip(&vals) {
+            for (o, &v) in out_row[..valid].iter_mut().zip(vals.iter()) {
                 *o = (((255 * v as u64) * 2 + sum) / (2 * sum)) as u8;
             }
             for o in out_row[valid..].iter_mut() {

@@ -1,0 +1,156 @@
+//! Property test for the fused flash-decode path: interleave single-call
+//! batched decode with everything that mutates or aliases resident KV state
+//! — running-scale re-maps, copy-on-write shared prefixes, ragged batch
+//! widths — across every integer `PipelineKind`, grouped-Q quantization and
+//! page sizes 1/2/64, and hold the fused path to its two contracts:
+//!
+//! 1. **Page-size invariance, bit-for-bit.** The fused walk renormalizes
+//!    per element with a sequential per-sequence walk, so page boundaries
+//!    are pure layout: the same schedule at page sizes 1, 2 and 64 must
+//!    produce byte-identical outputs.
+//! 2. **Fidelity to the unfused oracle.** Quant-Only ignores the toggle
+//!    (byte-equal by construction); the IndexSoftmax/EXAQ fused forms are
+//!    ε-bounded against `fused_decode(false)` (see the documented rounding
+//!    contract in `attention::int_attention`), asserted as per-round
+//!    cosine ≥ 0.999.
+//!
+//! The allocation-accounting side of the acceptance criterion (no L-length
+//! row materialized per step) lives in `tests/decode_alloc.rs`.
+
+use intattention::attention::int_attention::IntAttention;
+use intattention::attention::{
+    build_pipeline, AttentionConfig, AttentionPipeline, KvState, PipelineKind,
+};
+use intattention::quant::GroupScheme;
+use intattention::tensor::MatF32;
+use intattention::util::prng::Pcg64;
+use intattention::util::stats::cosine_similarity;
+
+fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> MatF32 {
+    MatF32::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+}
+
+fn make(
+    kind: PipelineKind,
+    scheme: Option<GroupScheme>,
+    cfg: AttentionConfig,
+) -> Box<dyn AttentionPipeline> {
+    match scheme {
+        Some(s) => Box::new(IntAttention::new(cfg).with_q_scheme(s)),
+        None => build_pipeline(kind, cfg),
+    }
+}
+
+/// One deterministic serving schedule: a donor prefilled with ramping
+/// magnitudes (re-scales fire during prefill), two CoW adopters sharing its
+/// prefix at a page-aligned and a mid-page boundary, one fresh short state —
+/// then six batched decode rounds over shrinking (ragged) batch widths with
+/// two magnitude spikes that force the running-scale remap to rewrite (and
+/// CoW-fork) resident history mid-run. Returns the concatenated outputs.
+fn run_schedule(
+    kind: PipelineKind,
+    scheme: Option<GroupScheme>,
+    fused: bool,
+    page_rows: usize,
+    d: usize,
+) -> Vec<f32> {
+    let mut rng = Pcg64::seed_from_u64(42);
+    let mut pipe = make(kind, scheme, AttentionConfig::new(0, d).with_fused_decode(fused));
+
+    // Donor prefix with ramping K/V magnitudes: the running abs-max grows
+    // repeatedly, so the INT8 re-scale remap runs during prefill too.
+    let prefix = 12usize;
+    let q = rand_mat(&mut rng, prefix, d);
+    let mut k = rand_mat(&mut rng, prefix, d);
+    let mut v = rand_mat(&mut rng, prefix, d);
+    for r in 0..prefix {
+        let gain = 1.0 + r as f32 * 0.3;
+        for x in k.row_mut(r).iter_mut().chain(v.row_mut(r)) {
+            *x *= gain;
+        }
+    }
+    let mut donor = KvState::with_page_rows(kind, d, page_rows);
+    let _ = pipe.prefill(&mut donor, &q, &k, &v);
+
+    // CoW adopters: row 8 is page-aligned for sizes 1/2 and mid-page for
+    // 64; row 5 is mid-page for 2 and 64 — both tail-fork paths run.
+    let mut adopter_a = donor.share_prefix(8);
+    let mut adopter_b = donor.share_prefix(5);
+    assert!(adopter_a.shared_pages() > 0, "{}: adoption must alias pages", kind.name());
+
+    let mut fresh = KvState::with_page_rows(kind, d, page_rows);
+    let fq = rand_mat(&mut rng, 3, d);
+    let fk = rand_mat(&mut rng, 3, d);
+    let fv = rand_mat(&mut rng, 3, d);
+    let _ = pipe.prefill(&mut fresh, &fq, &fk, &fv);
+
+    let mut states = [donor, adopter_a, adopter_b, fresh];
+    let widths = [4usize, 4, 4, 3, 3, 2]; // ragged: trailing states sit rounds out
+    let mut out = Vec::new();
+    for (round, &w) in widths.iter().enumerate() {
+        let qr = rand_mat(&mut rng, w, d);
+        let mut kr = rand_mat(&mut rng, w, d);
+        let mut vr = rand_mat(&mut rng, w, d);
+        if round == 2 || round == 4 {
+            // Magnitude spike: grows every running abs-max, forcing the
+            // op-counted remap over resident (partly shared) pages.
+            for x in kr.as_mut_slice().iter_mut().chain(vr.as_mut_slice()) {
+                *x *= 8.0;
+            }
+        }
+        let mut refs: Vec<&mut KvState> = states[..w].iter_mut().collect();
+        let o = pipe.decode_step_batch(&mut refs, &qr, &kr, &vr);
+        assert!(o.as_slice().iter().all(|x| x.is_finite()), "{} round {round}", kind.name());
+        out.extend_from_slice(o.as_slice());
+    }
+    // The spikes must actually have exercised the re-scale path.
+    assert!(
+        states[0].as_int8().k.rescales > 0,
+        "{}: schedule must trigger re-scale remaps",
+        kind.name()
+    );
+    out
+}
+
+#[test]
+fn fused_decode_page_invariant_and_faithful_under_remaps_sharing_and_ragged_batches() {
+    let d = 16;
+    let cases = [
+        (PipelineKind::QuantOnly, None),
+        (PipelineKind::IntAttention, None),
+        (PipelineKind::IntAttention, Some(GroupScheme::PerRow)),
+        (PipelineKind::ExaqInt2, None),
+        (PipelineKind::ExaqInt3, None),
+    ];
+    for (kind, scheme) in cases {
+        let mut fused_outs: Vec<Vec<f32>> = Vec::new();
+        for page_rows in [1usize, 2, 64] {
+            let f = run_schedule(kind, scheme, true, page_rows, d);
+            let u = run_schedule(kind, scheme, false, page_rows, d);
+            assert_eq!(f.len(), u.len());
+            if kind == PipelineKind::QuantOnly {
+                // No fused form: the toggle must be a no-op.
+                assert_eq!(f, u, "QuantOnly page {page_rows}: toggle must not change outputs");
+            } else {
+                let cos = cosine_similarity(&f, &u);
+                assert!(
+                    cos >= 0.999,
+                    "{} {scheme:?} page {page_rows}: fused vs unfused cos={cos}",
+                    kind.name()
+                );
+            }
+            fused_outs.push(f);
+        }
+        // Contract 1: the fused walk is pure layout over pages.
+        assert_eq!(
+            fused_outs[0], fused_outs[1],
+            "{} {scheme:?}: fused output must be byte-identical at page sizes 1 vs 2",
+            kind.name()
+        );
+        assert_eq!(
+            fused_outs[0], fused_outs[2],
+            "{} {scheme:?}: fused output must be byte-identical at page sizes 1 vs 64",
+            kind.name()
+        );
+    }
+}
