@@ -86,7 +86,7 @@ fn launch_overhead(threads: usize, reps: usize) -> (f64, f64) {
 }
 
 fn main() {
-    let fast = std::env::var("INTATTN_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let fast = intattention::util::env::knobs().bench_fast;
 
     // -- Mode 1: launch overhead ----------------------------------------
     // Fixed 4-wide launches (oversubscription on small hosts only adds

@@ -391,6 +391,10 @@ impl AttentionPipeline for IntAttention {
 
             // Final per-lane normalize `round(255·acc/ΣÊ)` and the single
             // float rescale — the only rounding the fused path applies.
+            // AUDIT: int-only begin int-decode-output-rescale
+            // (`s_V/255` and the one `as f32` per output lane are the
+            //  allowlisted boundary conversions `counts::output_rescale`
+            //  bills — everything upstream of this closure is integer.)
             let o = self.times.measure(Stage::Output, || {
                 let mut out = MatF32::zeros(b, d);
                 for ((job, s), orow) in
@@ -409,6 +413,7 @@ impl AttentionPipeline for IntAttention {
                 }
                 out
             });
+            // AUDIT: int-only end
             for _ in 0..b {
                 self.ops.add(&counts::output_rescale(1, d));
             }
@@ -450,6 +455,7 @@ impl AttentionPipeline for IntAttention {
         // Q/K scales; a decode row is group 0 under every grouped scheme).
         // A decode row at offset L−1 sees the whole history, so the row form
         // needs no mask. Nonzero counts come back with the normalize pass.
+        // AUDIT: int-only begin int-decode-softmax
         let nnzs: Vec<u64> = self.times.measure(Stage::Softmax, || {
             let softmax = &self.softmax;
             let mut nnzs = Vec::with_capacity(b);
@@ -464,6 +470,7 @@ impl AttentionPipeline for IntAttention {
             }
             nnzs
         });
+        // AUDIT: int-only end
         for &l in &ls {
             self.ops.add(&counts::index_softmax(l as u64, 1));
         }

@@ -110,23 +110,14 @@ use std::sync::{Arc, Mutex, OnceLock};
 pub const DEFAULT_KV_PAGE_ROWS: usize = 64;
 
 /// Rows per KV page: `INTATTN_KV_PAGE` override, else
-/// [`DEFAULT_KV_PAGE_ROWS`]. Snapshotted **once** per process (like the
-/// thread-pool size) so every state in a process agrees on the page
-/// geometry; tests that need specific page sizes use
+/// [`DEFAULT_KV_PAGE_ROWS`]. Snapshotted **once** per process (with the
+/// other knobs, [`crate::util::env::knobs`]) so every state in a process
+/// agrees on the page geometry; tests that need specific page sizes use
 /// [`KvState::with_page_rows`] / [`PagedRows::with_page_rows`] instead of
-/// mutating the environment.
+/// mutating the environment (parse policy:
+/// [`crate::util::env::page_rows_from`]).
 pub fn kv_page_rows() -> usize {
-    static ROWS: OnceLock<usize> = OnceLock::new();
-    *ROWS.get_or_init(|| page_rows_from(std::env::var("INTATTN_KV_PAGE").ok().as_deref()))
-}
-
-/// Pure policy behind [`kv_page_rows`], unit-testable without touching the
-/// process environment (mutating env while other test threads `getenv` is
-/// UB on glibc).
-fn page_rows_from(env: Option<&str>) -> usize {
-    env.and_then(|v| v.parse::<usize>().ok())
-        .map(|n| n.max(1))
-        .unwrap_or(DEFAULT_KV_PAGE_ROWS)
+    crate::util::env::knobs().kv_page_rows
 }
 
 // ---------------------------------------------------------------------------
@@ -997,11 +988,10 @@ mod tests {
 
     #[test]
     fn page_rows_policy() {
-        assert_eq!(page_rows_from(None), DEFAULT_KV_PAGE_ROWS);
-        assert_eq!(page_rows_from(Some("2")), 2);
-        assert_eq!(page_rows_from(Some("0")), 1, "clamped to 1");
-        assert_eq!(page_rows_from(Some("junk")), DEFAULT_KV_PAGE_ROWS);
+        // The parse policy lives (and is exercised) in `crate::util::env`;
+        // this checks only the snapshot wiring.
         assert!(kv_page_rows() >= 1);
+        assert_eq!(kv_page_rows(), crate::util::env::knobs().kv_page_rows);
     }
 
     #[test]

@@ -1,0 +1,444 @@
+//! A minimal Rust tokenizer for the audit passes.
+//!
+//! This is not a full lexer — it classifies exactly what the passes need
+//! to reason about source without being fooled by comments and literals:
+//!
+//! * identifiers/keywords (`f32`, `unsafe`, `fn`, …),
+//! * numeric literals, split into **integer** vs **float** (the purity
+//!   lint's hard case: `1.0`, `1e-3`, `2f32` are floats; `0..n`, tuple
+//!   index `.0`, `0x1e3` and `1.max(2)` are not),
+//! * string / raw-string / byte-string / char literals (with contents, so
+//!   the env pass can find `"INTATTN_*"` reads),
+//! * lifetimes (so `'a` is not mistaken for an unterminated char),
+//! * comments (with contents, so the purity pass can see `AUDIT:` fence
+//!   markers and the unsafety pass can see `SAFETY:` tags),
+//! * every other byte as punctuation.
+//!
+//! Offline-cache constraint: no `syn`/`proc-macro2`, so this is written
+//! from scratch against the token grammar the crate actually uses.
+
+/// One classified token with the 1-indexed line it starts on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub line: usize,
+    pub kind: TokKind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Integer literal (including `0x`/`0o`/`0b` and int-suffixed forms).
+    Int,
+    /// Float literal (`1.0`, `1.`, `1e-3`, `1f32`, `1.5e2f64`, …).
+    Float(String),
+    /// String-ish literal (`"…"`, `r"…"`, `r#"…"#`, `b"…"`, `c"…"`)
+    /// with its unquoted contents (escapes left as written).
+    Str(String),
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`).
+    Lifetime,
+    /// `//`/`/*…*/` comment with its contents (markers included).
+    Comment(String),
+    /// Any other single byte of punctuation.
+    Punct(char),
+}
+
+/// Tokenize `src`. Unterminated constructs (string, block comment) consume
+/// to end of input rather than erroring — the audit runs on code that the
+/// compiler will reject anyway if truly malformed.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: usize,
+    out: Vec<Tok>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+impl Lexer<'_> {
+    fn peek(&self, ahead: usize) -> u8 {
+        *self.b.get(self.i + ahead).unwrap_or(&0)
+    }
+
+    /// Advance one byte, tracking line numbers.
+    fn bump(&mut self) -> u8 {
+        let c = self.b[self.i];
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+        }
+        c
+    }
+
+    fn push(&mut self, line: usize, kind: TokKind) {
+        self.out.push(Tok { line, kind });
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while self.i < self.b.len() {
+            let line = self.line;
+            let c = self.peek(0);
+            match c {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek(1) == b'/' => self.line_comment(line),
+                b'/' if self.peek(1) == b'*' => self.block_comment(line),
+                b'r' if self.peek(1) == b'"' || (self.peek(1) == b'#' && self.raw_str_ahead(1)) => {
+                    self.bump();
+                    self.raw_string(line);
+                }
+                // b"…" / br#"…"# / c"…" byte- and C-string forms.
+                b'b' | b'c'
+                    if self.peek(1) == b'"'
+                        || (self.peek(1) == b'r' && (self.peek(2) == b'"' || self.peek(2) == b'#')) =>
+                {
+                    self.bump();
+                    if self.peek(0) == b'r' {
+                        self.bump();
+                        self.raw_string(line);
+                    } else {
+                        self.bump();
+                        self.quoted_string(line);
+                    }
+                }
+                b'b' if self.peek(1) == b'\'' => {
+                    self.bump();
+                    self.bump();
+                    self.char_body(line);
+                }
+                _ if is_ident_start(c) => self.ident(line),
+                _ if c.is_ascii_digit() => self.number(line),
+                b'"' => {
+                    self.bump();
+                    self.quoted_string(line);
+                }
+                b'\'' => self.quote(line),
+                _ => {
+                    self.bump();
+                    self.push(line, TokKind::Punct(c as char));
+                }
+            }
+        }
+        self.out
+    }
+
+    /// Is `r` followed (after `hashes_at` offset) by `#…#"`? Distinguishes
+    /// `r#"raw"#` from the raw identifier `r#match`.
+    fn raw_str_ahead(&self, mut at: usize) -> bool {
+        while self.peek(at) == b'#' {
+            at += 1;
+        }
+        self.peek(at) == b'"'
+    }
+
+    fn line_comment(&mut self, line: usize) {
+        let start = self.i;
+        while self.i < self.b.len() && self.peek(0) != b'\n' {
+            self.bump();
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.push(line, TokKind::Comment(text));
+    }
+
+    fn block_comment(&mut self, line: usize) {
+        let start = self.i;
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                depth += 1;
+                self.bump();
+                self.bump();
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                depth -= 1;
+                self.bump();
+                self.bump();
+            } else {
+                self.bump();
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.push(line, TokKind::Comment(text));
+    }
+
+    fn ident(&mut self, line: usize) {
+        let start = self.i;
+        while self.i < self.b.len() && is_ident_cont(self.peek(0)) {
+            self.bump();
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        self.push(line, TokKind::Ident(text));
+    }
+
+    /// `"…"` body after the opening quote was consumed.
+    fn quoted_string(&mut self, line: usize) {
+        let start = self.i;
+        while self.i < self.b.len() {
+            match self.peek(0) {
+                b'\\' => {
+                    self.bump();
+                    if self.i < self.b.len() {
+                        self.bump();
+                    }
+                }
+                b'"' => break,
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+        if self.i < self.b.len() {
+            self.bump(); // closing quote
+        }
+        self.push(line, TokKind::Str(text));
+    }
+
+    /// `#…#"…"#…#` body after `r` was consumed.
+    fn raw_string(&mut self, line: usize) {
+        let mut hashes = 0usize;
+        while self.peek(0) == b'#' {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        let start = self.i;
+        let mut end = self.i;
+        while self.i < self.b.len() {
+            if self.peek(0) == b'"' {
+                let mut h = 0;
+                while h < hashes && self.peek(1 + h) == b'#' {
+                    h += 1;
+                }
+                if h == hashes {
+                    end = self.i;
+                    self.bump();
+                    for _ in 0..hashes {
+                        self.bump();
+                    }
+                    break;
+                }
+            }
+            self.bump();
+            end = self.i;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..end]).into_owned();
+        self.push(line, TokKind::Str(text));
+    }
+
+    /// `'` dispatch: lifetime (`'a`) vs char literal (`'a'`, `'\n'`).
+    fn quote(&mut self, line: usize) {
+        self.bump(); // the quote
+        if self.peek(0) == b'\\' {
+            // Escaped char literal.
+            self.char_body(line);
+        } else if is_ident_start(self.peek(0)) && self.peek(1) != b'\'' {
+            // `'ident` not followed by a closing quote: lifetime.
+            while self.i < self.b.len() && is_ident_cont(self.peek(0)) {
+                self.bump();
+            }
+            self.push(line, TokKind::Lifetime);
+        } else {
+            self.char_body(line);
+        }
+    }
+
+    /// Char-literal body after the opening `'`.
+    fn char_body(&mut self, line: usize) {
+        while self.i < self.b.len() {
+            match self.peek(0) {
+                b'\\' => {
+                    self.bump();
+                    if self.i < self.b.len() {
+                        self.bump();
+                    }
+                }
+                b'\'' => {
+                    self.bump();
+                    break;
+                }
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+        self.push(line, TokKind::Char);
+    }
+
+    fn number(&mut self, line: usize) {
+        // A number directly after a single `.` token is a tuple index
+        // (`x.0`, nested `x.0.1`) — digits only, never a float. Two dots
+        // are a range (`0.0..1.0`), where a normal literal follows.
+        let after_dot = matches!(self.out.last().map(|t| &t.kind), Some(TokKind::Punct('.')))
+            && !matches!(
+                self.out.len().checked_sub(2).and_then(|j| self.out.get(j)).map(|t| &t.kind),
+                Some(TokKind::Punct('.'))
+            );
+        if after_dot {
+            while self.peek(0).is_ascii_digit() {
+                self.bump();
+            }
+            self.push(line, TokKind::Int);
+            return;
+        }
+        let start = self.i;
+        let mut float = false;
+        if self.peek(0) == b'0' && matches!(self.peek(1), b'x' | b'o' | b'b') {
+            // Radix literal: always an integer (covers `0x1e3`).
+            self.bump();
+            self.bump();
+            while is_ident_cont(self.peek(0)) {
+                self.bump();
+            }
+        } else {
+            while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                self.bump();
+            }
+            // Fractional part — but `0..n` is a range, `1.max(2)` a method
+            // call, and a field access never starts at a digit so `.`
+            // followed by ident-start is never a fraction.
+            if self.peek(0) == b'.' && self.peek(1) != b'.' && !is_ident_start(self.peek(1)) {
+                float = true;
+                self.bump();
+                while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                    self.bump();
+                }
+            }
+            // Exponent.
+            if matches!(self.peek(0), b'e' | b'E') {
+                let sign = matches!(self.peek(1), b'+' | b'-');
+                let digit_at = if sign { 2 } else { 1 };
+                if self.peek(digit_at).is_ascii_digit() {
+                    float = true;
+                    self.bump(); // e
+                    if sign {
+                        self.bump();
+                    }
+                    while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                        self.bump();
+                    }
+                }
+            }
+            // Suffix: `1f32` / `2.5f64` are floats; `7u32` stays an int.
+            if is_ident_start(self.peek(0)) {
+                let sfx_start = self.i;
+                while is_ident_cont(self.peek(0)) {
+                    self.bump();
+                }
+                let sfx = &self.b[sfx_start..self.i];
+                if sfx == b"f32" || sfx == b"f64" {
+                    float = true;
+                }
+            }
+        }
+        if float {
+            let text = String::from_utf8_lossy(&self.b[start..self.i]).into_owned();
+            self.push(line, TokKind::Float(text));
+        } else {
+            self.push(line, TokKind::Int);
+        }
+    }
+}
+
+/// The non-comment tokens of `src` (what most passes iterate).
+pub fn code_tokens(src: &str) -> Vec<Tok> {
+    lex(src).into_iter().filter(|t| !matches!(t.kind, TokKind::Comment(_))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn float_vs_int_disambiguation() {
+        // Ranges, tuple indexes, method calls on literals and hex digits
+        // that look like exponents must all stay integers.
+        assert!(kinds("0..n").iter().all(|k| !matches!(k, TokKind::Float(_))));
+        assert!(kinds("x.0").iter().all(|k| !matches!(k, TokKind::Float(_))));
+        assert!(kinds("x.0.1").iter().all(|k| !matches!(k, TokKind::Float(_))));
+        assert_eq!(
+            kinds("0.0..=1.0").iter().filter(|k| matches!(k, TokKind::Float(_))).count(),
+            2,
+            "floats on both sides of a range"
+        );
+        assert!(kinds("1.max(2)").iter().all(|k| !matches!(k, TokKind::Float(_))));
+        assert!(kinds("0x1e3 + 7u32").iter().all(|k| !matches!(k, TokKind::Float(_))));
+        for src in ["1.0", "1.", "1e-3", "2f32", "3.5e2f64", "1_000.5"] {
+            assert!(
+                kinds(src).iter().any(|k| matches!(k, TokKind::Float(_))),
+                "{src} must lex as a float"
+            );
+        }
+    }
+
+    #[test]
+    fn strings_and_chars_hide_their_contents() {
+        let toks = kinds(r#"let s = "f32 1.0 // not a comment"; let c = 'f';"#);
+        assert!(toks.iter().all(|k| !matches!(k, TokKind::Float(_))));
+        assert!(toks.iter().all(|k| !matches!(k, TokKind::Comment(_))));
+        assert!(!toks.iter().any(|k| matches!(k, TokKind::Ident(i) if i == "f32")));
+        assert!(toks
+            .iter()
+            .any(|k| matches!(k, TokKind::Str(s) if s.contains("f32"))));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = kinds(r##"let a = r#"raw "quoted" f64"#; let b = b"bytes"; let l: &'static str = "";"##);
+        assert_eq!(
+            toks.iter().filter(|k| matches!(k, TokKind::Str(_))).count(),
+            3
+        );
+        assert!(toks.iter().any(|k| matches!(k, TokKind::Lifetime)));
+        assert!(!toks.iter().any(|k| matches!(k, TokKind::Ident(i) if i == "f64")));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal() {
+        let toks = kinds(r"let q = '\''; let f = 1.5;");
+        assert!(toks.iter().any(|k| matches!(k, TokKind::Char)));
+        assert!(toks.iter().any(|k| matches!(k, TokKind::Float(f) if f == "1.5")));
+    }
+
+    #[test]
+    fn comments_carry_text_and_nest() {
+        let toks = lex("// AUDIT: int-only begin x\nlet y = 1; /* outer /* inner */ f32 */ let z = 2;");
+        let comments: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                TokKind::Comment(c) => Some(c.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(comments.len(), 2);
+        assert!(comments[0].contains("AUDIT: int-only begin x"));
+        assert!(comments[1].contains("inner"));
+        // The f32 inside the block comment is not an identifier token.
+        assert!(!toks.iter().any(|t| matches!(&t.kind, TokKind::Ident(i) if i == "f32")));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let toks = lex("a\nb\n  c");
+        let lines: Vec<usize> = toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,260 @@
+//! `intattn-audit` — the in-repo static-analysis gate (`cargo run --bin audit`).
+//!
+//! Three passes over the crate's own sources (`src/`, `tests/`,
+//! `benches/`), built on a small hand-rolled tokenizer ([`lexer`]) so the
+//! gate needs nothing from a registry:
+//!
+//! * [`purity`] — **integer-domain purity lint**: inside
+//!   `// AUDIT: int-only` fenced regions of the integer hot paths, any
+//!   `f32`/`f64` identifier or float literal is an error unless excused by
+//!   `rust/audit/int_only_allow.txt`. The audit's tests cross-check every
+//!   fenced region against a conversion-count claim in
+//!   [`crate::attention::counts`], so a fence is never decorative.
+//! * [`unsafety`] — **unsafe inventory**: every `unsafe` site carries a
+//!   `// SAFETY:` comment and an entry in
+//!   `rust/audit/unsafe_inventory.toml` (justification + exercising test);
+//!   stale entries fail too. See `docs/UNSAFE_POLICY.md`.
+//! * [`envscan`] — **env-var inventory**: every `INTATTN_*` read appears
+//!   in the [`crate::util::env`] module-doc table and in the generated
+//!   `rust/audit/env_vars.md`.
+//!
+//! Passes take `(file, source)` pairs, so unit tests drive them with
+//! in-memory seeded violations; the binary feeds them the real tree.
+
+pub mod envscan;
+pub mod lexer;
+pub mod purity;
+pub mod unsafety;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One audit violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Crate-relative path (or the data file the finding is about).
+    pub file: String,
+    /// 1-indexed line; 0 when the finding is about a whole file.
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: impl Into<String>, line: usize, message: impl Into<String>) -> Self {
+        Finding { file: file.into(), line, message: message.into() }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "{}:{}: {}", self.file, self.line, self.message)
+        } else {
+            write!(f, "{}: {}", self.file, self.message)
+        }
+    }
+}
+
+/// Everything one audit run produces.
+pub struct AuditOutcome {
+    pub findings: Vec<Finding>,
+    /// Every `int-only` fenced region found (file, name) — exposed for the
+    /// region↔claim cross-check.
+    pub regions: Vec<purity::Region>,
+    /// `INTATTN_*` variable -> referencing files.
+    pub env_vars: BTreeMap<String, Vec<String>>,
+}
+
+/// The crate root (where `Cargo.toml`, `src/` and `audit/` live), resolved
+/// at compile time so `cargo run --bin audit` works from any directory.
+pub fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// All `.rs` sources under `src/`, `tests/` and `benches/` as
+/// `(crate-relative path, contents)`, sorted by path for determinism.
+/// (`vendor/` is intentionally out of scope: the audit governs this
+/// crate's code, not vendored dependencies. The audit's own sources are
+/// excluded too — its unit tests deliberately embed seeded violations
+/// (floats in fences, uncommented `unsafe`, fabricated `INTATTN_*` names)
+/// that must not trip the real run.)
+pub fn collect_sources(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for top in ["src", "tests", "benches"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            walk(&dir, root, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<(String, String)>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            if rel.starts_with("src/audit/") || rel == "src/bin/audit.rs" {
+                continue;
+            }
+            out.push((rel, std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+fn read_data_file(root: &Path, rel: &str, findings: &mut Vec<Finding>) -> String {
+    let path = root.join(rel);
+    match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(_) => {
+            findings.push(Finding::new(format!("rust/{rel}"), 0, "required audit data file is missing"));
+            String::new()
+        }
+    }
+}
+
+/// Run all three passes over the crate rooted at `root`.
+pub fn run(root: &Path) -> std::io::Result<AuditOutcome> {
+    let files = collect_sources(root)?;
+    let mut findings = Vec::new();
+
+    let allow = read_data_file(root, "audit/int_only_allow.txt", &mut findings);
+    let inventory = read_data_file(root, "audit/unsafe_inventory.toml", &mut findings);
+    let committed_table = read_data_file(root, "audit/env_vars.md", &mut findings);
+
+    let (purity_findings, regions) = purity::run(&files, &allow);
+    findings.extend(purity_findings);
+    findings.extend(unsafety::run(&files, &inventory));
+
+    let env_rs = files
+        .iter()
+        .find(|(f, _)| f == "src/util/env.rs")
+        .map(|(_, s)| s.clone())
+        .unwrap_or_default();
+    let (env_findings, env_vars) = envscan::run(&files, &committed_table, &env_rs);
+    findings.extend(env_findings);
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(AuditOutcome { findings, regions, env_vars })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::counts;
+
+    // Reading the real tree needs the filesystem — pointless under Miri
+    // (the passes' logic is covered by the in-memory unit tests).
+    #[cfg(not(miri))]
+    #[test]
+    fn audit_passes_on_the_real_tree() {
+        let outcome = run(&crate_root()).expect("read crate sources");
+        assert!(
+            outcome.findings.is_empty(),
+            "audit findings on the committed tree:\n{}",
+            outcome
+                .findings
+                .iter()
+                .map(|f| format!("  {f}"))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+
+    /// Every `int-only` fence corresponds to a conversion-count claim in
+    /// `attention::counts` — deleting a fence, renaming a region, or
+    /// fencing code with no accounted claim all fail here. Zero-conversion
+    /// regions assert `dtype_conv == 0`; the two boundary regions (the
+    /// requantize detour helper and the final output rescale) are fenced
+    /// *with allowlisted floats* precisely because their conversions are
+    /// the ones the counts model bills.
+    #[cfg(not(miri))]
+    #[test]
+    fn every_fenced_region_is_backed_by_a_conversion_count_claim() {
+        let outcome = run(&crate_root()).expect("read crate sources");
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &outcome.regions {
+            seen.insert(r.name.clone());
+            let (v, rows, m, d) = (1000u64, 10u64, 4usize, 64usize);
+            match r.name.as_str() {
+                // IndexSoftmax proper: zero conversions, zero float exps.
+                "index-softmax-forward" | "index-softmax-row" | "index-softmax-online-push"
+                | "index-softmax-rescale-lane" | "int-decode-softmax" => {
+                    let c = counts::index_softmax(v, rows);
+                    assert_eq!(c.dtype_conv, 0, "{}", r.name);
+                    assert_eq!(c.fp32_exp, 0, "{}", r.name);
+                }
+                // i8 Q·Kᵀ kernels: integer MACs, no conversions.
+                "gemm-i8-paged" => {
+                    let c = counts::qk_gemm(m, v as usize, d, 1, 4);
+                    assert_eq!(c.dtype_conv, 0);
+                    assert!(c.int8_mac > 0 && c.fp32_mac == 0);
+                }
+                // P̂·V̂ aggregation kernels (u8/i8 and the fused i8 walk).
+                "gemm-u8i8-paged" | "gemm-i8-notrans-paged" | "gemm-fused-decode-i8" => {
+                    let c = counts::pv_gemm(v, v as usize, d, 1, 4);
+                    assert_eq!(c.dtype_conv, 0, "{}", r.name);
+                    assert!(c.int8_mac > 0 && c.fp32_mac == 0, "{}", r.name);
+                }
+                // EXAQ fused walk: float normalize stays (allowlisted),
+                // but the per-element ×255 requantize conversion is gone.
+                "gemm-fused-decode-exaq" => {
+                    assert_eq!(counts::exaq_softmax_fused(v, rows).dtype_conv, 0);
+                }
+                // Boundary regions: conversions exist and are counted.
+                "requantize-probs-i8" => {
+                    assert_eq!(counts::requantize_probs(v).dtype_conv, v);
+                }
+                "int-decode-output-rescale" => {
+                    assert_eq!(counts::output_rescale(m, d).dtype_conv, (m * d) as u64);
+                }
+                other => panic!(
+                    "fenced region `{other}` ({}:{}) has no conversion-count claim — \
+                     add one here and in attention::counts",
+                    r.file, r.begin_line
+                ),
+            }
+        }
+        // The fences the integer hot paths must carry; losing one (e.g. a
+        // refactor dropping the markers) breaks the audit's coverage.
+        for required in [
+            "index-softmax-forward",
+            "index-softmax-row",
+            "index-softmax-online-push",
+            "index-softmax-rescale-lane",
+            "int-decode-softmax",
+            "int-decode-output-rescale",
+            "gemm-i8-paged",
+            "gemm-u8i8-paged",
+            "gemm-i8-notrans-paged",
+            "gemm-fused-decode-i8",
+            "gemm-fused-decode-exaq",
+            "requantize-probs-i8",
+        ] {
+            assert!(seen.contains(required), "required int-only fence `{required}` is missing");
+        }
+    }
+
+    #[cfg(not(miri))]
+    #[test]
+    fn env_scan_sees_the_snapshot_knobs() {
+        let outcome = run(&crate_root()).expect("read crate sources");
+        for var in ["INTATTN_THREADS", "INTATTN_KV_PAGE", "INTATTN_FUSED_DECODE"] {
+            assert!(
+                outcome.env_vars.contains_key(var),
+                "{var} read not found by the env scan"
+            );
+        }
+        // The snapshot knobs are read in exactly one place.
+        assert_eq!(outcome.env_vars["INTATTN_THREADS"], vec!["src/util/env.rs".to_string()]);
+    }
+}

@@ -1,0 +1,289 @@
+//! Integer-domain purity lint.
+//!
+//! The paper's central claim is a softmax-to-output attention path with
+//! **zero** float↔int conversions (PAPER.md; `attention::counts` carries
+//! the per-stage arithmetic of that claim). This pass makes the claim
+//! mechanically checkable: hot-path code wrapped in
+//!
+//! ```text
+//! // AUDIT: int-only begin <region-name>
+//!     …
+//! // AUDIT: int-only end
+//! ```
+//!
+//! must contain no `f32`/`f64` identifier (which covers `as f32` casts and
+//! type ascriptions) and no float literal. Documented exceptions — the
+//! quantization *boundary* kernels whose conversions `attention::counts`
+//! explicitly counts, and EXAQ's float normalization — live in an allowlist
+//! file (`rust/audit/int_only_allow.txt`); every allowlist entry must fire,
+//! so stale exceptions rot loudly.
+//!
+//! The audit's own tests assert the reverse direction too: every fenced
+//! region name maps to a conversion-count claim in
+//! [`crate::attention::counts`] (see `super::tests`).
+
+use super::lexer::{lex, Tok, TokKind};
+use super::Finding;
+
+/// Fence marker prefixes (the full begin form is `AUDIT: int-only begin
+/// <name>`).
+const BEGIN: &str = "AUDIT: int-only begin";
+const END: &str = "AUDIT: int-only end";
+
+/// One fenced region of one file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub file: String,
+    pub name: String,
+    pub begin_line: usize,
+}
+
+/// One allowlist entry: `token` is permitted inside region `region`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    pub region: String,
+    pub token: String,
+}
+
+/// Parse the allowlist format: one `<region> <token>` pair per line,
+/// `#`-comments and blank lines ignored. The token field is the exact
+/// lexeme being excused (`f32`, `255.0`, …).
+pub fn parse_allowlist(text: &str) -> Result<Vec<Allow>, String> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match (parts.next(), parts.next(), parts.next()) {
+            (Some(region), Some(token), None) => {
+                out.push(Allow { region: region.to_string(), token: token.to_string() })
+            }
+            _ => {
+                return Err(format!(
+                    "int_only_allow.txt:{}: expected `<region> <token>`, got `{raw}`",
+                    i + 1
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The fenced regions of one file (no lint, just the fence structure).
+/// Fence errors (begin-inside-begin, end-without-begin, unterminated) are
+/// reported as findings.
+pub fn regions(file: &str, src: &str, findings: &mut Vec<Finding>) -> Vec<Region> {
+    let mut out = Vec::new();
+    let mut open: Option<Region> = None;
+    for t in lex(src) {
+        let TokKind::Comment(text) = &t.kind else { continue };
+        if let Some(pos) = text.find(BEGIN) {
+            let name = text[pos + BEGIN.len()..].trim().to_string();
+            if name.is_empty() {
+                findings.push(Finding::new(file, t.line, "int-only fence begin without a region name"));
+                continue;
+            }
+            if let Some(prev) = &open {
+                findings.push(Finding::new(
+                    file,
+                    t.line,
+                    format!("int-only fence `{name}` opened inside open fence `{}`", prev.name),
+                ));
+                continue;
+            }
+            open = Some(Region { file: file.to_string(), name, begin_line: t.line });
+        } else if text.contains(END) {
+            match open.take() {
+                Some(r) => out.push(r),
+                None => findings.push(Finding::new(file, t.line, "int-only fence end without begin")),
+            }
+        }
+    }
+    if let Some(r) = open {
+        findings.push(Finding::new(
+            file,
+            r.begin_line,
+            format!("int-only fence `{}` never closed", r.name),
+        ));
+    }
+    out
+}
+
+/// Lint one file's fenced regions. Returns findings for violations and
+/// marks used allowlist entries in `used` (same indexing as `allow`).
+pub fn check_file(
+    file: &str,
+    src: &str,
+    allow: &[Allow],
+    used: &mut [bool],
+    findings: &mut Vec<Finding>,
+) {
+    let mut open: Option<String> = None;
+    for t in lex(src) {
+        match &t.kind {
+            TokKind::Comment(text) => {
+                if let Some(pos) = text.find(BEGIN) {
+                    // Structure errors are reported by `regions`; here just
+                    // track state (ignore a nested begin).
+                    if open.is_none() {
+                        open = Some(text[pos + BEGIN.len()..].trim().to_string());
+                    }
+                } else if text.contains(END) {
+                    open = None;
+                }
+            }
+            _ => {
+                let Some(region) = &open else { continue };
+                if let Some(lexeme) = violating_lexeme(&t) {
+                    match allow.iter().position(|a| a.region == *region && a.token == lexeme) {
+                        Some(i) => used[i] = true,
+                        None => findings.push(Finding::new(
+                            file,
+                            t.line,
+                            format!(
+                                "float `{lexeme}` inside int-only region `{region}` \
+                                 (allowlist: rust/audit/int_only_allow.txt)"
+                            ),
+                        )),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The lexeme of a float-domain token, if `t` is one.
+fn violating_lexeme(t: &Tok) -> Option<String> {
+    match &t.kind {
+        TokKind::Ident(i) if i == "f32" || i == "f64" => Some(i.clone()),
+        TokKind::Float(f) => Some(f.clone()),
+        _ => None,
+    }
+}
+
+/// Run the purity lint over `(file, src)` pairs against `allow_text`.
+/// Returns all findings plus every fenced region found (for the
+/// region↔claim cross-check).
+pub fn run(files: &[(String, String)], allow_text: &str) -> (Vec<Finding>, Vec<Region>) {
+    let mut findings = Vec::new();
+    let allow = match parse_allowlist(allow_text) {
+        Ok(a) => a,
+        Err(e) => {
+            findings.push(Finding::new("rust/audit/int_only_allow.txt", 0, e));
+            return (findings, Vec::new());
+        }
+    };
+    let mut used = vec![false; allow.len()];
+    let mut all_regions = Vec::new();
+    for (file, src) in files {
+        all_regions.extend(regions(file, src, &mut findings));
+        check_file(file, src, &allow, &mut used, &mut findings);
+    }
+    for (a, u) in allow.iter().zip(&used) {
+        if !u {
+            findings.push(Finding::new(
+                "rust/audit/int_only_allow.txt",
+                0,
+                format!(
+                    "unused allowlist entry `{} {}` — the exception no longer exists; remove it",
+                    a.region, a.token
+                ),
+            ));
+        }
+    }
+    (findings, all_regions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn files(src: &str) -> Vec<(String, String)> {
+        vec![("src/x.rs".to_string(), src.to_string())]
+    }
+
+    #[test]
+    fn clean_region_passes() {
+        let src = "
+// AUDIT: int-only begin demo
+fn f(a: i32) -> i32 { let b = a + 1; b / 2 }
+// AUDIT: int-only end
+fn g() -> f32 { 1.0 }  // floats outside the fence are fine
+";
+        let (findings, regions) = run(&files(src), "");
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].name, "demo");
+    }
+
+    #[test]
+    fn seeded_float_violation_is_caught() {
+        // The ISSUE's acceptance seed: inject a float into a fenced region.
+        let src = "
+// AUDIT: int-only begin demo
+fn f(a: i32) -> f32 { let x = 0.5; a as f32 * x }
+// AUDIT: int-only end
+";
+        let (findings, _) = run(&files(src), "");
+        // f32 (return type), 0.5, f32 (cast) — three violations.
+        assert_eq!(findings.len(), 3, "{findings:?}");
+        assert!(findings.iter().all(|f| f.message.contains("int-only region `demo`")));
+    }
+
+    #[test]
+    fn allowlist_excuses_exactly_the_listed_lexeme() {
+        let src = "
+// AUDIT: int-only begin exaq
+fn f(a: i32) -> f32 { a as f32 * 0.5 }
+// AUDIT: int-only end
+";
+        // f32 excused, 0.5 not.
+        let (findings, _) = run(&files(src), "exaq f32\n");
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("0.5"));
+        // Excusing both clears the lint.
+        let (findings, _) = run(&files(src), "exaq f32\nexaq 0.5\n");
+        assert!(findings.is_empty(), "{findings:?}");
+        // The same token in a *different* region is not excused.
+        let (findings, _) = run(&files(src), "other f32\nexaq 0.5\n");
+        assert_eq!(findings.len(), 2, "violation + unused entry: {findings:?}");
+    }
+
+    #[test]
+    fn unused_allowlist_entry_is_an_error() {
+        let (findings, _) = run(&files("fn f() {}"), "ghost f32\n");
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("unused allowlist entry"));
+    }
+
+    #[test]
+    fn fence_structure_errors() {
+        let src = "
+// AUDIT: int-only begin a
+// AUDIT: int-only begin b
+// AUDIT: int-only end
+// AUDIT: int-only end
+// AUDIT: int-only begin c
+";
+        let (findings, regions) = run(&files(src), "");
+        assert_eq!(regions.len(), 1, "only `a` closes cleanly");
+        let msgs: Vec<_> = findings.iter().map(|f| f.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("opened inside open fence")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("end without begin")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("never closed")), "{msgs:?}");
+    }
+
+    #[test]
+    fn floats_in_comments_and_strings_inside_fence_are_fine() {
+        let src = r#"
+// AUDIT: int-only begin demo
+// eq. 10 uses alpha = 0.125 (f32) — prose, not code
+fn f(a: i32) -> i32 { let _m = "f32 1.0"; a }
+// AUDIT: int-only end
+"#;
+        let (findings, _) = run(&files(src), "");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

@@ -1,0 +1,71 @@
+//! `intattn-audit` — run the in-repo static-analysis gate.
+//!
+//! ```text
+//! cargo run --bin audit                      # check; exit 1 on findings
+//! cargo run --bin audit -- --write-env-table # regenerate rust/audit/env_vars.md
+//! ```
+//!
+//! Passes (see `intattention::audit` for the full story):
+//! integer-domain purity lint over `// AUDIT: int-only` fences, the unsafe
+//! inventory (`rust/audit/unsafe_inventory.toml`), and the `INTATTN_*`
+//! env-var inventory (`rust/audit/env_vars.md`).
+
+use std::process::ExitCode;
+
+use intattention::audit;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let write_table = match args.iter().map(String::as_str).collect::<Vec<_>>()[..] {
+        [] => false,
+        ["--write-env-table"] => true,
+        _ => {
+            eprintln!("usage: audit [--write-env-table]");
+            return ExitCode::from(2);
+        }
+    };
+
+    let root = audit::crate_root();
+    let outcome = match audit::run(&root) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("audit: failed to read crate sources: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if write_table {
+        let table = audit::envscan::render_table(&outcome.env_vars);
+        let path = root.join("audit/env_vars.md");
+        if let Err(e) = std::fs::write(&path, table) {
+            eprintln!("audit: failed to write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!("audit: wrote {}", path.display());
+        // Fall through: still report findings (a freshly written table
+        // clears only the staleness finding on the *next* run, so filter
+        // it here to keep `--write-env-table` usable as a fix-up step).
+    }
+
+    let findings: Vec<_> = outcome
+        .findings
+        .iter()
+        .filter(|f| !(write_table && f.message.contains("table is stale")))
+        .collect();
+
+    println!(
+        "audit: {} files, {} int-only regions, {} env vars",
+        audit::collect_sources(&root).map(|f| f.len()).unwrap_or(0),
+        outcome.regions.len(),
+        outcome.env_vars.len(),
+    );
+    if findings.is_empty() {
+        println!("audit: OK");
+        return ExitCode::SUCCESS;
+    }
+    eprintln!("audit: {} finding(s):", findings.len());
+    for f in &findings {
+        eprintln!("  {f}");
+    }
+    ExitCode::FAILURE
+}

@@ -38,7 +38,6 @@
 
 use crate::model::lm::KvCache;
 use std::collections::{HashMap, VecDeque};
-use std::sync::OnceLock;
 
 /// Entries the index keeps before evicting the oldest (each entry pins its
 /// snapshot's pages until evicted).
@@ -46,18 +45,13 @@ pub const PREFIX_INDEX_CAP: usize = 32;
 
 /// Default on/off for prefix sharing: `INTATTN_PREFIX_SHARE` (`0`/`false`/
 /// `off` disable; anything else — including unset — enables). Snapshotted
-/// once per process like the page-size and thread-count knobs; tests that
-/// need both modes set [`crate::coordinator::batcher::BatchPolicy::prefix_share`]
-/// directly instead of mutating the environment.
+/// once per process with the page-size and thread-count knobs
+/// ([`crate::util::env::knobs`]); tests that need both modes set
+/// [`crate::coordinator::batcher::BatchPolicy::prefix_share`] directly
+/// instead of mutating the environment (parse policy:
+/// [`crate::util::env::prefix_share_from`]).
 pub fn default_prefix_share() -> bool {
-    static ON: OnceLock<bool> = OnceLock::new();
-    *ON.get_or_init(|| prefix_share_from(std::env::var("INTATTN_PREFIX_SHARE").ok().as_deref()))
-}
-
-/// Pure policy behind [`default_prefix_share`], unit-testable without
-/// touching the process environment.
-pub(crate) fn prefix_share_from(env: Option<&str>) -> bool {
-    !matches!(env, Some("0") | Some("false") | Some("off"))
+    crate::util::env::knobs().prefix_share
 }
 
 fn gcd(a: usize, b: usize) -> usize {
@@ -276,12 +270,9 @@ mod tests {
 
     #[test]
     fn prefix_share_env_policy() {
-        assert!(prefix_share_from(None));
-        assert!(prefix_share_from(Some("1")));
-        assert!(prefix_share_from(Some("yes")));
-        assert!(!prefix_share_from(Some("0")));
-        assert!(!prefix_share_from(Some("false")));
-        assert!(!prefix_share_from(Some("off")));
+        // The parse policy lives (and is exercised) in `crate::util::env`;
+        // this checks only the snapshot wiring.
+        assert_eq!(default_prefix_share(), crate::util::env::knobs().prefix_share);
     }
 
     #[test]

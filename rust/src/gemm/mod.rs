@@ -137,7 +137,9 @@ pub fn par_gemm_f32(a: &MatF32, bt: &MatF32, c: &mut MatF32, pool: &ParallelPool
     // Split output rows into disjoint &mut chunks across the workers.
     let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
     pool.parallel_for(m, work, |r0, r1| {
-        // Each chunk writes only rows [r0, r1): disjoint slices.
+        // SAFETY: each chunk reconstructs only rows [r0, r1) of C, and the
+        // pool claims every chunk exactly once — the &mut views are
+        // disjoint, in-bounds, and live while the caller blocks.
         let c_chunk =
             unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(r0 * n), (r1 - r0) * n) };
         gemm_f32_rows_raw(a, bt, c_chunk, r0, r1);
@@ -250,7 +252,9 @@ pub fn par_gemm_f32_slices(
     }
     let c_ptr = SendPtr(c.as_mut_ptr());
     pool.parallel_for(m, work, |r0, r1| {
-        // Each chunk writes only rows [r0, r1): disjoint regions of C.
+        // SAFETY: the full-C view is written only on rows [r0, r1), which
+        // the atomic cursor hands to exactly one worker; C outlives the
+        // launch (the caller blocks on the completion latch).
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_f32_slices_rows(a, bt, c_full, n, k, r0, r1);
     });
@@ -345,25 +349,35 @@ fn has_avx512() -> bool {
 /// AVX-512 i8 dot product: sign-extend 32 i8 lanes to i16, then `vpmaddwd`
 /// (32 i16 products pairwise-summed into 16 i32 lanes) with a vector
 /// accumulator. ~32 MACs per 3 instructions.
+///
+/// # Safety
+///
+/// The CPU must support `avx512bw` — every call site gates on
+/// [`has_avx512`]'s cpuid probe.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512bw")]
 unsafe fn dot_i8_avx512(a: &[i8], b: &[i8]) -> i32 {
     use std::arch::x86_64::*;
     let n = a.len().min(b.len());
     let chunks = n / 32;
-    let mut acc = _mm512_setzero_si512();
-    for c in 0..chunks {
-        let pa = a.as_ptr().add(c * 32) as *const __m256i;
-        let pb = b.as_ptr().add(c * 32) as *const __m256i;
-        let va = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pa));
-        let vb = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pb));
-        acc = _mm512_add_epi32(acc, _mm512_madd_epi16(va, vb));
+    // SAFETY: avx512bw is available per this fn's contract, and every
+    // access stays inside `a[..n]`/`b[..n]` — the vector loads cover
+    // `chunks*32 <= n` bytes and the unchecked tail indexes are `< n`.
+    unsafe {
+        let mut acc = _mm512_setzero_si512();
+        for c in 0..chunks {
+            let pa = a.as_ptr().add(c * 32) as *const __m256i;
+            let pb = b.as_ptr().add(c * 32) as *const __m256i;
+            let va = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pa));
+            let vb = _mm512_cvtepi8_epi16(_mm256_loadu_si256(pb));
+            acc = _mm512_add_epi32(acc, _mm512_madd_epi16(va, vb));
+        }
+        let mut s = _mm512_reduce_add_epi32(acc);
+        for i in chunks * 32..n {
+            s += (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32);
+        }
+        s
     }
-    let mut s = _mm512_reduce_add_epi32(acc);
-    for i in chunks * 32..n {
-        s += (*a.get_unchecked(i) as i32) * (*b.get_unchecked(i) as i32);
-    }
-    s
 }
 
 /// Portable fallback with explicit accumulator lanes.
@@ -408,6 +422,13 @@ fn gemm_i8_rows(a: &[i8], bt: &[i8], c: &mut [i32], _m: usize, n: usize, k: usiz
 /// AVX-512 i8 GEMM row kernel with 4-wide N blocking: the A-row tile is
 /// sign-extended once and reused across four B rows, amortizing the
 /// load+convert overhead that dominates the single-row dot kernel.
+///
+/// # Safety
+///
+/// The CPU must support `avx512bw` (call sites gate on [`has_avx512`]),
+/// and the operands must satisfy the row-kernel shape contract:
+/// `a` holds at least `r1` rows of `k`, `bt` holds `n` rows of `k`, and
+/// `c` holds at least `r1` rows of `n`.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx512bw")]
 unsafe fn gemm_i8_rows_avx512(
@@ -421,59 +442,66 @@ unsafe fn gemm_i8_rows_avx512(
 ) {
     use std::arch::x86_64::*;
     let chunks = k / 32;
-    for i in r0..r1 {
-        let arow = a.as_ptr().add(i * k);
-        let crow = &mut c[i * n..(i + 1) * n];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = bt.as_ptr().add(j * k);
-            let b1 = bt.as_ptr().add((j + 1) * k);
-            let b2 = bt.as_ptr().add((j + 2) * k);
-            let b3 = bt.as_ptr().add((j + 3) * k);
-            let mut acc0 = _mm512_setzero_si512();
-            let mut acc1 = _mm512_setzero_si512();
-            let mut acc2 = _mm512_setzero_si512();
-            let mut acc3 = _mm512_setzero_si512();
-            for ch in 0..chunks {
-                let off = ch * 32;
-                let va =
-                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(arow.add(off) as *const __m256i));
-                let v0 =
-                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b0.add(off) as *const __m256i));
-                let v1 =
-                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b1.add(off) as *const __m256i));
-                let v2 =
-                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b2.add(off) as *const __m256i));
-                let v3 =
-                    _mm512_cvtepi8_epi16(_mm256_loadu_si256(b3.add(off) as *const __m256i));
-                acc0 = _mm512_add_epi32(acc0, _mm512_madd_epi16(va, v0));
-                acc1 = _mm512_add_epi32(acc1, _mm512_madd_epi16(va, v1));
-                acc2 = _mm512_add_epi32(acc2, _mm512_madd_epi16(va, v2));
-                acc3 = _mm512_add_epi32(acc3, _mm512_madd_epi16(va, v3));
+    // SAFETY: avx512bw is available per this fn's contract; the shape
+    // contract keeps every A pointer inside row i (i < r1), every B
+    // pointer inside rows j..j+4 (j+4 <= n), the vector loads within
+    // `chunks*32 <= k` of each row start, the scalar tail within `k`, and
+    // the `from_raw_parts` views are full in-bounds rows of live slices.
+    unsafe {
+        for i in r0..r1 {
+            let arow = a.as_ptr().add(i * k);
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j + 4 <= n {
+                let b0 = bt.as_ptr().add(j * k);
+                let b1 = bt.as_ptr().add((j + 1) * k);
+                let b2 = bt.as_ptr().add((j + 2) * k);
+                let b3 = bt.as_ptr().add((j + 3) * k);
+                let mut acc0 = _mm512_setzero_si512();
+                let mut acc1 = _mm512_setzero_si512();
+                let mut acc2 = _mm512_setzero_si512();
+                let mut acc3 = _mm512_setzero_si512();
+                for ch in 0..chunks {
+                    let off = ch * 32;
+                    let va =
+                        _mm512_cvtepi8_epi16(_mm256_loadu_si256(arow.add(off) as *const __m256i));
+                    let v0 =
+                        _mm512_cvtepi8_epi16(_mm256_loadu_si256(b0.add(off) as *const __m256i));
+                    let v1 =
+                        _mm512_cvtepi8_epi16(_mm256_loadu_si256(b1.add(off) as *const __m256i));
+                    let v2 =
+                        _mm512_cvtepi8_epi16(_mm256_loadu_si256(b2.add(off) as *const __m256i));
+                    let v3 =
+                        _mm512_cvtepi8_epi16(_mm256_loadu_si256(b3.add(off) as *const __m256i));
+                    acc0 = _mm512_add_epi32(acc0, _mm512_madd_epi16(va, v0));
+                    acc1 = _mm512_add_epi32(acc1, _mm512_madd_epi16(va, v1));
+                    acc2 = _mm512_add_epi32(acc2, _mm512_madd_epi16(va, v2));
+                    acc3 = _mm512_add_epi32(acc3, _mm512_madd_epi16(va, v3));
+                }
+                let mut s0 = _mm512_reduce_add_epi32(acc0);
+                let mut s1 = _mm512_reduce_add_epi32(acc1);
+                let mut s2 = _mm512_reduce_add_epi32(acc2);
+                let mut s3 = _mm512_reduce_add_epi32(acc3);
+                for idx in chunks * 32..k {
+                    let av = *arow.add(idx) as i32;
+                    s0 += av * (*b0.add(idx) as i32);
+                    s1 += av * (*b1.add(idx) as i32);
+                    s2 += av * (*b2.add(idx) as i32);
+                    s3 += av * (*b3.add(idx) as i32);
+                }
+                crow[j] = s0;
+                crow[j + 1] = s1;
+                crow[j + 2] = s2;
+                crow[j + 3] = s3;
+                j += 4;
             }
-            let mut s0 = _mm512_reduce_add_epi32(acc0);
-            let mut s1 = _mm512_reduce_add_epi32(acc1);
-            let mut s2 = _mm512_reduce_add_epi32(acc2);
-            let mut s3 = _mm512_reduce_add_epi32(acc3);
-            for idx in chunks * 32..k {
-                let av = *arow.add(idx) as i32;
-                s0 += av * (*b0.add(idx) as i32);
-                s1 += av * (*b1.add(idx) as i32);
-                s2 += av * (*b2.add(idx) as i32);
-                s3 += av * (*b3.add(idx) as i32);
+            while j < n {
+                crow[j] = dot_i8(
+                    std::slice::from_raw_parts(arow, k),
+                    std::slice::from_raw_parts(bt.as_ptr().add(j * k), k),
+                );
+                j += 1;
             }
-            crow[j] = s0;
-            crow[j + 1] = s1;
-            crow[j + 2] = s2;
-            crow[j + 3] = s3;
-            j += 4;
-        }
-        while j < n {
-            crow[j] = dot_i8(
-                std::slice::from_raw_parts(arow, k),
-                std::slice::from_raw_parts(bt.as_ptr().add(j * k), k),
-            );
-            j += 1;
         }
     }
 }
@@ -491,6 +519,8 @@ pub fn par_gemm_i8(a: &MatI8, bt: &MatI8, c: &mut MatI32, pool: &ParallelPool) {
     let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
     let (a_s, b_s) = (a.as_slice(), bt.as_slice());
     pool.parallel_for(m, work, |r0, r1| {
+        // SAFETY: the full-C view is written only on rows [r0, r1), claimed
+        // by exactly one worker; C outlives the blocking launch call.
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_i8_rows(a_s, b_s, c_full, m, n, k, r0, r1);
     });
@@ -524,6 +554,8 @@ pub fn par_gemm_i8_slices(
     }
     let c_ptr = SendPtr(c.as_mut_ptr());
     pool.parallel_for(m, work, |r0, r1| {
+        // SAFETY: the full-C view is written only on rows [r0, r1), claimed
+        // by exactly one worker; C outlives the blocking launch call.
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_i8_rows(a, bt, c_full, m, n, k, r0, r1);
     });
@@ -578,6 +610,8 @@ pub fn par_gemm_u8i8(p: &MatU8, v: &MatI8, c: &mut MatI32, pool: &ParallelPool) 
     let c_ptr = SendPtr(c.as_mut_slice().as_mut_ptr());
     let (p_s, v_s) = (p.as_slice(), v.as_slice());
     pool.parallel_for(m, work, |r0, r1| {
+        // SAFETY: the full-C view is written only on rows [r0, r1), claimed
+        // by exactly one worker; C outlives the blocking launch call.
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * d) };
         gemm_u8i8_rows(p_s, v_s, c_full, l, d, r0, r1);
     });
@@ -687,6 +721,7 @@ fn gemm_i8_paged_rows(
     r0: usize,
     r1: usize,
 ) {
+    // AUDIT: int-only begin gemm-i8-paged
     for i in r0..r1 {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -699,6 +734,7 @@ fn gemm_i8_paged_rows(
             off += np;
         }
     }
+    // AUDIT: int-only end
 }
 
 /// `Q̂·K̂ᵀ` against paged resident keys: `kp` is the page list (each page
@@ -731,7 +767,8 @@ pub fn par_gemm_i8_paged(
     }
     let c_ptr = SendPtr(c.as_mut_ptr());
     pool.parallel_for(m, work, |r0, r1| {
-        // Each chunk writes only rows [r0, r1): disjoint regions of C.
+        // SAFETY: the full-C view is written only on rows [r0, r1), claimed
+        // by exactly one worker; C outlives the blocking launch call.
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_i8_paged_rows(a, kp, c_full, n, k, r0, r1);
     });
@@ -788,6 +825,8 @@ pub fn par_gemm_f32_paged(
     }
     let c_ptr = SendPtr(c.as_mut_ptr());
     pool.parallel_for(m, work, |r0, r1| {
+        // SAFETY: the full-C view is written only on rows [r0, r1), claimed
+        // by exactly one worker; C outlives the blocking launch call.
         let c_full = unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), m * n) };
         gemm_f32_paged_rows(a, kp, c_full, n, k, r0, r1);
     });
@@ -830,6 +869,7 @@ pub fn gemm_f16_paged(a: &[F16], kp: &[&[F16]], m: usize, n: usize, k: usize, c:
 /// byte-equal to it over the concatenated pages: the ascending-`j`
 /// accumulation order is preserved across page boundaries.
 pub fn gemm_u8i8_paged(p: &[u8], vp: &[&[i8]], c: &mut [i32], m: usize, l: usize, d: usize) {
+    // AUDIT: int-only begin gemm-u8i8-paged
     assert_eq!(p.len(), m * l, "P shape");
     assert_eq!(paged_rows(vp, d), l, "V̂ page rows");
     assert_eq!(c.len(), m * d, "C shape");
@@ -852,11 +892,13 @@ pub fn gemm_u8i8_paged(p: &[u8], vp: &[&[i8]], c: &mut [i32], m: usize, l: usize
             }
         }
     }
+    // AUDIT: int-only end
 }
 
 /// Signed-P̂ aggregation over paged resident values (Quant-Only's PV side);
 /// byte-equal to [`gemm_i8_notrans_slices`] over the concatenated pages.
 pub fn gemm_i8_notrans_paged(p: &[i8], vp: &[&[i8]], c: &mut [i32], m: usize, l: usize, d: usize) {
+    // AUDIT: int-only begin gemm-i8-notrans-paged
     assert_eq!(p.len(), m * l, "P shape");
     assert_eq!(paged_rows(vp, d), l, "V̂ page rows");
     assert_eq!(c.len(), m * d, "C shape");
@@ -879,6 +921,7 @@ pub fn gemm_i8_notrans_paged(p: &[i8], vp: &[&[i8]], c: &mut [i32], m: usize, l:
             }
         }
     }
+    // AUDIT: int-only end
 }
 
 /// `P·V` over paged resident f32 values (natural layout, zero-skipping);
@@ -1127,6 +1170,7 @@ pub fn fused_decode_i8(
     acc: &mut [i64],
     tile: &mut [i32],
 ) {
+    // AUDIT: int-only begin gemm-fused-decode-i8
     let k = q.len();
     let d = acc.len();
     debug_assert_eq!(paged_rows(kp, k), paged_rows(vp, d), "K̂/V̂ row counts");
@@ -1160,6 +1204,7 @@ pub fn fused_decode_i8(
             }
         }
     }
+    // AUDIT: int-only end
 }
 
 /// EXAQ's fused flash-decode walk: same one-pass page structure as
@@ -1178,6 +1223,10 @@ pub fn fused_decode_exaq(
     acc: &mut [f32],
     tile: &mut [i32],
 ) {
+    // AUDIT: int-only begin gemm-fused-decode-exaq
+    // (EXAQ keeps a float accumulator by design — its floats are the
+    //  allowlisted exception; the point of the fence is that no float
+    //  *requantize* of P̂ sneaks back into the walk.)
     let k = q.len();
     let d = acc.len();
     debug_assert_eq!(paged_rows(kp, k), paged_rows(vp, d), "K̂/V̂ row counts");
@@ -1207,6 +1256,7 @@ pub fn fused_decode_exaq(
             }
         }
     }
+    // AUDIT: int-only end
 }
 
 /// One sequence's slice of a grouped fused flash-decode round

@@ -42,6 +42,18 @@
 //! let out = pipe.forward(&q, &k, &v);
 //! assert_eq!(out.rows(), 512);
 //! ```
+//!
+//! ## Unsafe code policy
+//!
+//! Every `unsafe` site in this crate carries a `// SAFETY:` comment and a
+//! matching entry in `rust/audit/unsafe_inventory.toml`, enforced by the
+//! in-repo [`audit`] pass (`cargo run --bin audit`). See
+//! `docs/UNSAFE_POLICY.md` for the full policy.
+
+// Unsafe operations inside `unsafe fn` bodies must still be wrapped in
+// explicit `unsafe {}` blocks, each with its own SAFETY justification
+// (audited by `intattn-audit`; see docs/UNSAFE_POLICY.md).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod util;
 pub mod tensor;
@@ -54,6 +66,7 @@ pub mod model;
 pub mod coordinator;
 pub mod runtime;
 pub mod harness;
+pub mod audit;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

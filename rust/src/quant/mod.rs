@@ -53,6 +53,13 @@ pub fn quantize_p_i8(p: &MatF32) -> MatI8 {
     p.map(|v| (v * 127.0).round().clamp(-127.0, 127.0) as i8)
 }
 
+// AUDIT: int-only begin requantize-probs-i8
+// This region IS the float→int boundary of the Quant-Only detour (the
+// conversions `attention::counts::requantize_probs` bills, one per valid
+// probability): its `f32` reads and ×127 constants are the allowlisted
+// exception, and the fence pins the boundary to exactly these two helpers —
+// a new float op here without an allowlist edit fails the audit.
+
 /// [`quantize_p_i8`] that also reports the nonzero count (the PV GEMM's
 /// exact zero-skipping work) so pipelines never re-scan the matrix.
 pub fn quantize_p_i8_counted(p: &MatF32) -> (MatI8, u64) {
@@ -78,6 +85,7 @@ pub fn quantize_p_i8_into(p: &[f32], out: &mut [i8]) -> u64 {
     }
     nnz
 }
+// AUDIT: int-only end
 
 /// Dequantize a ×255 UINT8 probability matrix.
 pub fn dequantize_p_u8(p: &MatU8) -> MatF32 {

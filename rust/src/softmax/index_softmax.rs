@@ -212,6 +212,7 @@ impl IndexSoftmax {
     /// sparsity leaves behind — so callers never re-scan the matrix for op
     /// accounting.
     pub fn forward_into(&self, logits: &MatI32, alpha: f32, mask: Mask, out: &mut MatU8) -> u64 {
+        // AUDIT: int-only begin index-softmax-forward
         assert_eq!((out.rows(), out.cols()), (logits.rows(), logits.cols()));
         let c_int = self.c_int(alpha);
         let l = logits.cols();
@@ -260,6 +261,7 @@ impl IndexSoftmax {
             }
         }
         nnz
+        // AUDIT: int-only end
     }
 
     /// Single fully-valid row over plain slices (the unfused decode hot
@@ -268,6 +270,7 @@ impl IndexSoftmax {
     /// place, and returns the nonzero-`P̂` count. Bit-identical to
     /// [`Self::forward_into`] on the same row as a `1×L` matrix.
     pub fn forward_row_into(&self, row: &[i32], alpha: f32, out: &mut [u8]) -> u64 {
+        // AUDIT: int-only begin index-softmax-row
         assert_eq!(row.len(), out.len());
         let c_int = self.c_int(alpha);
         let n1 = self.lut.max_index() as u64;
@@ -294,6 +297,7 @@ impl IndexSoftmax {
             nnz += (p != 0) as u64;
         }
         nnz
+        // AUDIT: int-only end
     }
 
     /// Group-wise forward (§3.3, eq. 16–18): `alphas[g]` is `α^(g)` for the
@@ -408,6 +412,7 @@ impl OnlineIndexRow {
     /// Stream one logit; `table` is the operator's `lut.u8_table`.
     #[inline]
     pub fn push(&mut self, a: i32, table: &[u8]) -> OnlinePush {
+        // AUDIT: int-only begin index-softmax-online-push
         if !self.started {
             // First element is its own max: Δ = 0 → LUT[0] = 255.
             self.started = true;
@@ -443,6 +448,7 @@ impl OnlineIndexRow {
         self.esum += e as u64;
         self.nnz += 1;
         OnlinePush::Acc { e }
+        // AUDIT: int-only end
     }
 
     /// Running `ΣÊ` (≥ 255 once any element was pushed).
@@ -477,12 +483,14 @@ impl OnlineIndexRow {
 /// same convention as [`MulShiftDiv::div_round`]).
 #[inline]
 pub fn rescale_lane_i64(x: i64, factor: u8) -> i64 {
+    // AUDIT: int-only begin index-softmax-rescale-lane
     let p = x * factor as i64;
     if p >= 0 {
         (p + 127) / 255
     } else {
         -((-p + 127) / 255)
     }
+    // AUDIT: int-only end
 }
 
 #[cfg(test)]

@@ -54,9 +54,10 @@ impl BenchConfig {
         }
     }
 
-    /// Honor the `INTATTN_BENCH_FAST` env toggle.
+    /// Honor the `INTATTN_BENCH_FAST` toggle (snapshotted once with the
+    /// other knobs, [`crate::util::env::knobs`]).
     pub fn from_env(base: Self) -> Self {
-        if std::env::var("INTATTN_BENCH_FAST").map(|v| v == "1").unwrap_or(false) {
+        if crate::util::env::knobs().bench_fast {
             Self::fast()
         } else {
             base

@@ -1,0 +1,185 @@
+//! Centralized `INTATTN_*` environment configuration.
+//!
+//! Every runtime knob the crate reads from the environment is listed here —
+//! this table is the source of truth, and `intattn-audit`'s env-var pass
+//! (see [`crate::audit`]) fails CI if a `std::env::var("INTATTN_…")` read
+//! appears anywhere that is not reflected in the generated inventory
+//! (`rust/audit/env_vars.md`).
+//!
+//! | Variable | Kind | Meaning | Default |
+//! |---|---|---|---|
+//! | `INTATTN_THREADS` | snapshot | computing threads in [`crate::util::threadpool::ParallelPool::global`] | available parallelism |
+//! | `INTATTN_PAR_GRAIN` | snapshot | work units per worker before a launch widens | `DEFAULT_GRAIN` (2^14) |
+//! | `INTATTN_KV_PAGE` | snapshot | rows per KV page | `DEFAULT_KV_PAGE_ROWS` (64) |
+//! | `INTATTN_PREFIX_SHARE` | snapshot | copy-on-write prefix sharing (`0`/`false`/`off` disable) | on |
+//! | `INTATTN_FUSED_DECODE` | snapshot | fused one-page-walk decode (`0`/`false`/`off` disable) | on |
+//! | `INTATTN_BENCH_FAST` | snapshot | `=1` shrinks every bench to CI smoke budgets | off |
+//! | `INTATTN_LOG` | per-read | log level (`error`/`warn`/`info`/`debug`/`trace`) | `info` |
+//! | `INTATTN_ARTIFACTS` | per-read | PJRT artifacts directory | `artifacts/` |
+//! | `INTATTN_REPORTS` | per-read | bench/experiment report directory | `reports/` |
+//! | `INTATTN_FULL` | per-read | `=1` enables the paper-scale 1K..16K sweeps | off |
+//!
+//! ## Snapshot semantics
+//!
+//! The six *snapshot* knobs configure process-lifetime singletons (the
+//! global pool, the page geometry every state must agree on, the serving
+//! defaults). They are read **exactly once**, together, on the first
+//! [`knobs`] call; later environment mutations are invisible. That is a
+//! feature twice over: every component sees one consistent configuration,
+//! and no hot path ever calls `getenv` (mutating the environment while
+//! another thread reads it is undefined behavior on glibc — which is also
+//! why **no test in this crate touches the real environment**: each knob's
+//! parsing lives in a pure `*_from(Option<&str>)` policy function below,
+//! and tests exercise those).
+//!
+//! The *per-read* variables gate cold paths (logger init, report/artifact
+//! directories, bench sweep sizes) where a fresh read per use is harmless;
+//! they stay at their call sites but are still inventoried.
+
+use std::sync::OnceLock;
+
+/// The six process-lifetime knobs, snapshotted together on first access.
+#[derive(Clone, Copy, Debug)]
+pub struct Knobs {
+    /// `INTATTN_THREADS` — computing threads for the global pool.
+    pub threads: usize,
+    /// `INTATTN_PAR_GRAIN` — launch-grain work units per worker.
+    pub par_grain: usize,
+    /// `INTATTN_KV_PAGE` — rows per KV page.
+    pub kv_page_rows: usize,
+    /// `INTATTN_PREFIX_SHARE` — copy-on-write prefix sharing default.
+    pub prefix_share: bool,
+    /// `INTATTN_FUSED_DECODE` — fused flash-decode default.
+    pub fused_decode: bool,
+    /// `INTATTN_BENCH_FAST` — CI smoke budgets for every bench harness.
+    pub bench_fast: bool,
+}
+
+/// The process-wide snapshot. First call reads all six variables; every
+/// later call returns the same values.
+pub fn knobs() -> &'static Knobs {
+    static K: OnceLock<Knobs> = OnceLock::new();
+    K.get_or_init(|| Knobs {
+        threads: threads_from(std::env::var("INTATTN_THREADS").ok().as_deref()),
+        par_grain: grain_from(std::env::var("INTATTN_PAR_GRAIN").ok().as_deref()),
+        kv_page_rows: page_rows_from(std::env::var("INTATTN_KV_PAGE").ok().as_deref()),
+        prefix_share: prefix_share_from(std::env::var("INTATTN_PREFIX_SHARE").ok().as_deref()),
+        fused_decode: fused_decode_from(std::env::var("INTATTN_FUSED_DECODE").ok().as_deref()),
+        bench_fast: bench_fast_from(std::env::var("INTATTN_BENCH_FAST").ok().as_deref()),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Pure policy functions — the parse/default logic, testable without getenv
+
+/// `INTATTN_THREADS`: positive integer (0 clamps to 1); junk or unset falls
+/// back to available parallelism.
+pub fn threads_from(env: Option<&str>) -> usize {
+    if let Some(n) = env.and_then(|v| v.parse::<usize>().ok()) {
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// `INTATTN_PAR_GRAIN`: positive integer (0 clamps to 1); junk or unset
+/// falls back to [`crate::util::threadpool::DEFAULT_GRAIN`].
+pub fn grain_from(env: Option<&str>) -> usize {
+    if let Some(n) = env.and_then(|v| v.parse::<usize>().ok()) {
+        return n.max(1);
+    }
+    crate::util::threadpool::DEFAULT_GRAIN
+}
+
+/// `INTATTN_KV_PAGE`: positive integer (0 clamps to 1); junk or unset falls
+/// back to [`crate::attention::state::DEFAULT_KV_PAGE_ROWS`].
+pub fn page_rows_from(env: Option<&str>) -> usize {
+    env.and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(crate::attention::state::DEFAULT_KV_PAGE_ROWS)
+}
+
+/// `INTATTN_PREFIX_SHARE`: `0`/`false`/`off` disable; anything else —
+/// including unset — enables.
+pub fn prefix_share_from(env: Option<&str>) -> bool {
+    !matches!(env, Some("0") | Some("false") | Some("off"))
+}
+
+/// `INTATTN_FUSED_DECODE`: `0`/`false`/`off` (whitespace-tolerant) disable;
+/// anything else — including unset — enables.
+pub fn fused_decode_from(env: Option<&str>) -> bool {
+    !matches!(env.map(str::trim), Some("0") | Some("false") | Some("off"))
+}
+
+/// `INTATTN_BENCH_FAST`: exactly `1` enables; anything else stays off.
+pub fn bench_fast_from(env: Option<&str>) -> bool {
+    env == Some("1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::state::DEFAULT_KV_PAGE_ROWS;
+    use crate::util::threadpool::DEFAULT_GRAIN;
+
+    #[test]
+    fn threads_policy() {
+        assert_eq!(threads_from(Some("3")), 3);
+        assert_eq!(threads_from(Some("0")), 1, "clamped to 1");
+        assert!(threads_from(Some("not-a-number")) >= 1, "junk falls back");
+        assert!(threads_from(None) >= 1);
+    }
+
+    #[test]
+    fn grain_policy() {
+        assert_eq!(grain_from(Some("123")), 123);
+        assert_eq!(grain_from(Some("0")), 1, "clamped to 1");
+        assert_eq!(grain_from(None), DEFAULT_GRAIN);
+        assert_eq!(grain_from(Some("junk")), DEFAULT_GRAIN);
+    }
+
+    #[test]
+    fn page_rows_policy() {
+        assert_eq!(page_rows_from(None), DEFAULT_KV_PAGE_ROWS);
+        assert_eq!(page_rows_from(Some("2")), 2);
+        assert_eq!(page_rows_from(Some("0")), 1, "clamped to 1");
+        assert_eq!(page_rows_from(Some("junk")), DEFAULT_KV_PAGE_ROWS);
+    }
+
+    #[test]
+    fn prefix_share_policy() {
+        assert!(prefix_share_from(None));
+        assert!(prefix_share_from(Some("1")));
+        assert!(prefix_share_from(Some("yes")));
+        assert!(!prefix_share_from(Some("0")));
+        assert!(!prefix_share_from(Some("false")));
+        assert!(!prefix_share_from(Some("off")));
+    }
+
+    #[test]
+    fn fused_decode_policy() {
+        assert!(fused_decode_from(None));
+        assert!(fused_decode_from(Some("1")));
+        assert!(fused_decode_from(Some("yes")));
+        assert!(!fused_decode_from(Some("0")));
+        assert!(!fused_decode_from(Some("false")));
+        assert!(!fused_decode_from(Some("off")));
+        assert!(!fused_decode_from(Some(" 0 ")));
+    }
+
+    #[test]
+    fn bench_fast_policy() {
+        assert!(bench_fast_from(Some("1")));
+        assert!(!bench_fast_from(Some("true")));
+        assert!(!bench_fast_from(None));
+    }
+
+    #[test]
+    fn knobs_snapshot_is_stable() {
+        let a = knobs();
+        let b = knobs();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.threads >= 1);
+        assert!(a.par_grain >= 1);
+        assert!(a.kv_page_rows >= 1);
+    }
+}

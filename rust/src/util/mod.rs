@@ -5,6 +5,7 @@
 //! project needs are implemented here from scratch (see DESIGN.md §3,
 //! "Offline-cache constraint").
 
+pub mod env;
 pub mod prng;
 pub mod stats;
 pub mod timer;

@@ -30,19 +30,28 @@ struct CountingAlloc;
 
 static ALLOCATED: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: pure pass-through to `System` plus a relaxed atomic counter — the
+// allocator obligations (layout fidelity, no unwinding, no reentrant
+// allocation) are exactly `System`'s, which the delegation preserves.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: `layout` is forwarded unmodified from our caller, who
+        // upholds `GlobalAlloc::alloc`'s contract (non-zero size).
+        unsafe { System.alloc(layout) }
     }
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr`/`layout` come from our caller's matching `alloc`,
+        // which delegated to `System`, so they denote a live System block.
+        unsafe { System.dealloc(ptr, layout) }
     }
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if new_size > layout.size() {
             ALLOCATED.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
         }
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: same delegation argument as `dealloc`, and `new_size`
+        // is forwarded under the caller's `realloc` contract.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }
 

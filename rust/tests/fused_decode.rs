@@ -122,9 +122,15 @@ fn fused_decode_page_invariant_and_faithful_under_remaps_sharing_and_ragged_batc
         (PipelineKind::ExaqInt2, None),
         (PipelineKind::ExaqInt3, None),
     ];
-    for (kind, scheme) in cases {
+    // Under Miri one fused kind and one page-boundary pair keep the
+    // UB-checking pass tractable while still walking every code path of
+    // the schedule (remaps, CoW forks, ragged batches).
+    let cases: &[(PipelineKind, Option<GroupScheme>)] =
+        if cfg!(miri) { &cases[..2] } else { &cases };
+    let page_list: &[usize] = if cfg!(miri) { &[1, 2] } else { &[1, 2, 64] };
+    for &(kind, scheme) in cases {
         let mut fused_outs: Vec<Vec<f32>> = Vec::new();
-        for page_rows in [1usize, 2, 64] {
+        for &page_rows in page_list {
             let f = run_schedule(kind, scheme, true, page_rows, d);
             let u = run_schedule(kind, scheme, false, page_rows, d);
             assert_eq!(f.len(), u.len());
@@ -142,15 +148,12 @@ fn fused_decode_page_invariant_and_faithful_under_remaps_sharing_and_ragged_batc
             fused_outs.push(f);
         }
         // Contract 1: the fused walk is pure layout over pages.
-        assert_eq!(
-            fused_outs[0], fused_outs[1],
-            "{} {scheme:?}: fused output must be byte-identical at page sizes 1 vs 2",
-            kind.name()
-        );
-        assert_eq!(
-            fused_outs[0], fused_outs[2],
-            "{} {scheme:?}: fused output must be byte-identical at page sizes 1 vs 64",
-            kind.name()
-        );
+        for (f, &p) in fused_outs.iter().zip(page_list).skip(1) {
+            assert_eq!(
+                &fused_outs[0], f,
+                "{} {scheme:?}: fused output must be byte-identical at page sizes 1 vs {p}",
+                kind.name()
+            );
+        }
     }
 }

@@ -1,0 +1,221 @@
+//! Exhaustive two-thread interleaving check of the `ParallelPool` shutdown
+//! protocol (loom-style model checking, hand-rolled — the offline image has
+//! no `loom`).
+//!
+//! The protocol under test is the one `ParallelPool`'s `Drop` impl and the
+//! worker loop implement (`src/util/threadpool.rs`):
+//!
+//! * **worker**: lock the queue mutex → (queue empty) check `shutdown` →
+//!   exit if set, else `Condvar::wait` (atomically unlock + park) → on
+//!   wakeup reacquire and re-check;
+//! * **dropper**: lock the queue mutex → store `shutdown = true` →
+//!   unlock → `notify_all` → join.
+//!
+//! The load-bearing detail is that the store happens **while holding the
+//! mutex**. A dropper that stores and notifies without the lock can race
+//! into the window between the worker's `shutdown` check and its `wait`:
+//! the notify finds nobody parked and is lost, the worker then parks
+//! forever, and the join deadlocks. These tests enumerate *every*
+//! interleaving of both variants and assert the correct protocol has no
+//! deadlock while the buggy one provably does — so a future refactor that
+//! "simplifies" the store out from under the lock fails CI here, not
+//! occasionally in production.
+//!
+//! The model gives each thread a program counter over atomic steps
+//! (mutex acquire, flag store, condvar wait/notify are each one step —
+//! matching the real primitives' atomicity) and DFS-explores every
+//! scheduler choice. State space: a handful of PCs × lock × flag — tiny,
+//! so exhaustiveness is cheap even under Miri.
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Worker {
+    /// Wants the queue mutex (initial state, and after a wakeup).
+    Acquire,
+    /// Holds the mutex; about to check the shutdown flag.
+    Check,
+    /// Read `shutdown == false`; still holds the mutex, about to enter
+    /// `Condvar::wait`. This read→park window is the race the locked
+    /// store closes: while the worker sits here the mutex is held, so a
+    /// store that needs the mutex cannot land in between — an unlocked
+    /// store can.
+    AboutToWait,
+    /// Parked in `Condvar::wait` (mutex released). Not runnable.
+    Parked,
+    /// Notified; wants to reacquire the mutex to re-check.
+    Reacquire,
+    Done,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Dropper {
+    /// Correct variant only: acquire the mutex before the store.
+    Lock,
+    /// Store `shutdown = true` (under the mutex iff `Lock` ran).
+    Store,
+    /// Correct variant only: release the mutex.
+    Unlock,
+    /// `Condvar::notify_all` — wakes the worker iff it is parked *now*.
+    Notify,
+    /// `JoinHandle::join` — runnable only once the worker is `Done`.
+    Join,
+    Done,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct State {
+    w: Worker,
+    d: Dropper,
+    /// Which thread holds the queue mutex.
+    lock: Option<Thread>,
+    shutdown: bool,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Thread {
+    W,
+    D,
+}
+
+impl State {
+    fn initial(locked_store: bool) -> State {
+        State {
+            w: Worker::Acquire,
+            d: if locked_store { Dropper::Lock } else { Dropper::Store },
+            lock: None,
+            shutdown: false,
+        }
+    }
+
+    fn worker_runnable(&self) -> bool {
+        match self.w {
+            Worker::Acquire | Worker::Reacquire => self.lock.is_none(),
+            Worker::Check | Worker::AboutToWait => true,
+            Worker::Parked | Worker::Done => false,
+        }
+    }
+
+    fn dropper_runnable(&self) -> bool {
+        match self.d {
+            Dropper::Lock => self.lock.is_none(),
+            Dropper::Store | Dropper::Unlock | Dropper::Notify => true,
+            Dropper::Join => self.w == Worker::Done,
+            Dropper::Done => false,
+        }
+    }
+
+    fn step_worker(mut self) -> State {
+        match self.w {
+            Worker::Acquire | Worker::Reacquire => {
+                debug_assert!(self.lock.is_none());
+                self.lock = Some(Thread::W);
+                self.w = Worker::Check;
+            }
+            Worker::Check => {
+                debug_assert_eq!(self.lock, Some(Thread::W));
+                if self.shutdown {
+                    self.lock = None;
+                    self.w = Worker::Done;
+                } else {
+                    // Flag read and park are distinct instructions in the
+                    // real loop; the mutex stays held across the gap.
+                    self.w = Worker::AboutToWait;
+                }
+            }
+            Worker::AboutToWait => {
+                // `Condvar::wait`: release + park is one atomic step —
+                // the guarantee the real condvar provides.
+                debug_assert_eq!(self.lock, Some(Thread::W));
+                self.lock = None;
+                self.w = Worker::Parked;
+            }
+            Worker::Parked | Worker::Done => unreachable!("not runnable"),
+        }
+        self
+    }
+
+    fn step_dropper(mut self) -> State {
+        match self.d {
+            Dropper::Lock => {
+                debug_assert!(self.lock.is_none());
+                self.lock = Some(Thread::D);
+                self.d = Dropper::Store;
+            }
+            Dropper::Store => {
+                self.shutdown = true;
+                self.d = if self.lock == Some(Thread::D) { Dropper::Unlock } else { Dropper::Notify };
+            }
+            Dropper::Unlock => {
+                debug_assert_eq!(self.lock, Some(Thread::D));
+                self.lock = None;
+                self.d = Dropper::Notify;
+            }
+            Dropper::Notify => {
+                if self.w == Worker::Parked {
+                    self.w = Worker::Reacquire;
+                }
+                self.d = Dropper::Join;
+            }
+            Dropper::Join => {
+                debug_assert_eq!(self.w, Worker::Done);
+                self.d = Dropper::Done;
+            }
+            Dropper::Done => unreachable!("not runnable"),
+        }
+        self
+    }
+}
+
+/// DFS every scheduler choice from `s`. Returns the number of complete
+/// interleavings explored and pushes any deadlock state found.
+fn explore(s: State, traces: &mut u64, deadlocks: &mut Vec<State>, depth: usize) {
+    // Longest possible trace is ~10 steps; a generous bound turns any
+    // modeling mistake into a loud failure instead of a hang.
+    assert!(depth < 64, "model does not terminate: {s:?}");
+    if s.w == Worker::Done && s.d == Dropper::Done {
+        *traces += 1;
+        return;
+    }
+    let wr = s.worker_runnable();
+    let dr = s.dropper_runnable();
+    if !wr && !dr {
+        deadlocks.push(s);
+        return;
+    }
+    if wr {
+        explore(s.step_worker(), traces, deadlocks, depth + 1);
+    }
+    if dr {
+        explore(s.step_dropper(), traces, deadlocks, depth + 1);
+    }
+}
+
+#[test]
+fn locked_shutdown_store_terminates_in_every_interleaving() {
+    let mut traces = 0;
+    let mut deadlocks = Vec::new();
+    explore(State::initial(true), &mut traces, &mut deadlocks, 0);
+    assert!(traces > 0);
+    assert!(
+        deadlocks.is_empty(),
+        "shutdown-under-mutex must never lose the wakeup, but: {deadlocks:?}"
+    );
+}
+
+#[test]
+fn unlocked_shutdown_store_has_a_lost_wakeup_interleaving() {
+    let mut traces = 0;
+    let mut deadlocks = Vec::new();
+    explore(State::initial(false), &mut traces, &mut deadlocks, 0);
+    // The bug is real: some schedules do finish, but at least one parks the
+    // worker after the notify already fired and the join never returns.
+    assert!(traces > 0, "some interleavings still complete");
+    assert!(
+        !deadlocks.is_empty(),
+        "the unlocked store is expected to admit a lost wakeup — if this \
+         starts passing, the model no longer matches the real protocol"
+    );
+    for s in &deadlocks {
+        assert_eq!(s.w, Worker::Parked, "deadlock must be the parked worker: {s:?}");
+        assert_eq!(s.d, Dropper::Join, "…with the dropper stuck joining: {s:?}");
+    }
+}
