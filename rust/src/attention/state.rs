@@ -171,6 +171,10 @@ impl<T: Copy + Default> PagePool<T> {
     }
 
     fn acquire(&self, cap: usize) -> Box<[T]> {
+        // Fault-injection point (inert unless a plan is armed): fires before
+        // any counter moves, so a simulated allocation failure never skews
+        // `allocated + recycled − released`.
+        crate::util::fault::on_pool_alloc();
         {
             let mut f = self.free.lock().unwrap();
             if let Some(page) = f

@@ -131,6 +131,8 @@ mod tests {
             temperature: 0.0,
             top_k: 1,
             arrived: Instant::now(),
+            deadline: None,
+            cancel: crate::coordinator::request::CancelToken::new(),
             reply: tx,
         }
     }

@@ -1,8 +1,67 @@
 //! The serving engine: a scheduler thread running continuous batching over
 //! the tiny LM, with bounded-queue admission (backpressure) and metrics.
 //!
+//! ## Request lifecycle
+//!
+//! ```text
+//! Queued ──► Prefill ──► Decode ──► Done / Length
+//!    │          │           │
+//!    └──────────┴───────────┴─────► Cancelled / DeadlineExceeded / Error
+//! ```
+//!
+//! Every submitted request receives **exactly one terminal [`Response`]**,
+//! whatever path it takes:
+//!
+//! * **Done / Length** — ran to `gen_len`, or the context filled first
+//!   (truncated, never padded).
+//! * **Cancelled** — the client called [`CancelToken::cancel`], dropped its
+//!   [`ResponseRx`] (hang-up = implicit cancel), or a drain/hard-stop
+//!   answered work the engine will not run. Partial tokens are returned.
+//! * **DeadlineExceeded** — the submit-relative deadline
+//!   ([`SubmitOptions::deadline`]) passed; checked at every round boundary
+//!   for queued and active requests alike.
+//! * **Error** — the request's model step panicked. The panic is caught
+//!   ([`std::panic::catch_unwind`]) and the poisoned request retired; the
+//!   scheduler, the other in-flight requests and the prefix index survive.
+//!
+//! Cancellation/deadline checks run at round boundaries; a retired
+//! request's [`KvCache`] drops the same round, returning its pages to the
+//! process-wide pool immediately.
+//!
+//! ## Panic isolation
+//!
+//! Prefill steps are caught per request, so a poisoned prefill touches
+//! nothing but its own cache. The batched decode step is caught around the
+//! whole batch; injected faults ([`crate::util::fault`]) fire at step entry
+//! — before any cache mutation — and carry their victim's id, so only the
+//! victim is poisoned and every other sequence decodes normally on the next
+//! round. A non-attributable panic mid-batch leaves the batch's caches
+//! indeterminate, so the whole batch retires as `Error` rather than decode
+//! from poisoned KV. Shared prefix pages a poisoned donor registered stay
+//! adoptable: index snapshots are complete page/scale sets refcounted
+//! independently of the donor's cache, and only aligned, fully-computed
+//! boundaries are ever registered.
+//!
+//! ## Graceful drain
+//!
+//! [`EngineHandle::shutdown`] (and handle drop) signals a drain: the
+//! scheduler stops admitting, answers every queued request with a terminal
+//! `Cancelled` response instead of dropping it on the floor, and finishes
+//! the in-flight prefills/decodes. A hard-stop knob
+//! ([`EngineOptions::drain_timeout`], default `INTATTN_DRAIN_TIMEOUT_MS`)
+//! bounds the drain: once exceeded, still-running requests retire
+//! `Cancelled` with their partial tokens. `shutdown` re-raises a scheduler
+//! panic ([`std::panic::resume_unwind`]); a drop-path join failure is
+//! logged and counted in [`scheduler_panics`] instead (never panic in
+//! drop), so a crashed engine cannot masquerade as a clean exit either way.
+//!
+//! ## Scheduling
+//!
 //! Scheduling loop (one "round"):
 //!   1. Drain the submit channel into the wait queue; reject on overflow.
+//!      Then the lifecycle sweep: cancelled/expired requests (queued or
+//!      active) retire with their terminal reason, and during a drain the
+//!      whole wait queue answers `Cancelled`.
 //!   2. Admit new requests per [`BatchPolicy`] (prefill phase; records
 //!      TTFT), under the **KV page budget**: each candidate charges its
 //!      projected footprint — [`KvCache::pages_for_tokens`] over prompt +
@@ -80,13 +139,17 @@ use crate::attention::{kv_page_rows, PipelineKind};
 use crate::coordinator::batcher::{select_admissions, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::prefix::{PrefixIndex, PREFIX_INDEX_CAP};
-use crate::coordinator::request::{FinishReason, Request, Response, SubmitError};
+use crate::coordinator::request::{
+    CancelToken, FinishReason, Request, Response, ResponseRx, SubmitError, SubmitOptions,
+};
 use crate::model::lm::{sample_row, KvCache, TinyLm};
 use crate::model::weights::Weights;
+use crate::util::fault;
 use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Engine configuration.
 #[derive(Clone, Debug)]
@@ -95,6 +158,11 @@ pub struct EngineOptions {
     pub policy: BatchPolicy,
     /// Bounded wait-queue depth; submits beyond this are rejected.
     pub max_queue: usize,
+    /// Hard stop for the shutdown drain: once a drain has run this long,
+    /// still-unfinished requests retire `Cancelled` with partial tokens
+    /// instead of holding the shutdown hostage. `Duration::ZERO` waits
+    /// forever. Defaults from `INTATTN_DRAIN_TIMEOUT_MS`.
+    pub drain_timeout: Duration,
 }
 
 impl Default for EngineOptions {
@@ -103,8 +171,21 @@ impl Default for EngineOptions {
             attention: PipelineKind::IntAttention,
             policy: BatchPolicy::default(),
             max_queue: 64,
+            drain_timeout: Duration::from_millis(crate::util::env::knobs().drain_timeout_ms),
         }
     }
+}
+
+/// Scheduler threads that terminated by panic, observed at handle drop
+/// (process-wide, monotone). [`EngineHandle::shutdown`] re-raises the panic
+/// instead of counting it here.
+static SCHEDULER_PANICS: AtomicU64 = AtomicU64::new(0);
+
+/// How many engine scheduler threads have died by panic (and were detected
+/// on the handle-drop path, which must not itself panic). A supervisor can
+/// watch this the way it watches the page-pool counters.
+pub fn scheduler_panics() -> u64 {
+    SCHEDULER_PANICS.load(Ordering::SeqCst)
 }
 
 /// A request in flight. Admission starts it in the prefill phase
@@ -125,6 +206,10 @@ struct Active {
     /// request retires with what it actually generated
     /// ([`FinishReason::Length`]) — the tail is never padded.
     capped: bool,
+    /// Set when this request's model step panicked: it is poisoned and
+    /// retires with [`FinishReason::Error`] this round, partial tokens
+    /// attached; nothing else shares its fate.
+    failed: bool,
     queue_us: u64,
     prefill_started: Instant,
     /// Set when the prefill phase completes (admission → first token).
@@ -152,14 +237,29 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Submit a generation request; returns the response channel.
+    /// Submit a generation request with default [`SubmitOptions`] (no
+    /// deadline). Dropping the returned [`ResponseRx`] cancels the request.
     pub fn submit(
         &self,
         prompt: Vec<u16>,
         gen_len: usize,
         temperature: f32,
         top_k: usize,
-    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+    ) -> Result<ResponseRx, SubmitError> {
+        self.submit_with(prompt, gen_len, temperature, top_k, SubmitOptions::default())
+    }
+
+    /// Submit a generation request; returns the response handle (receiver +
+    /// cancel lever). Exactly one terminal [`Response`] arrives per
+    /// accepted submit.
+    pub fn submit_with(
+        &self,
+        prompt: Vec<u16>,
+        gen_len: usize,
+        temperature: f32,
+        top_k: usize,
+        opts: SubmitOptions,
+    ) -> Result<ResponseRx, SubmitError> {
         if self.shutdown.load(Ordering::SeqCst) {
             return Err(SubmitError::ShuttingDown);
         }
@@ -177,8 +277,8 @@ impl EngineHandle {
             return Err(SubmitError::QueueFull);
         }
         self.queue_len.fetch_add(1, Ordering::SeqCst);
-        self.metrics.on_submit();
         let (tx, rx) = mpsc::channel();
+        let cancel = CancelToken::new();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
             prompt,
@@ -186,21 +286,37 @@ impl EngineHandle {
             temperature,
             top_k: top_k.max(1),
             arrived: Instant::now(),
+            deadline: opts.deadline,
+            cancel: cancel.clone(),
             reply: tx,
         };
-        self.tx.send(req).map_err(|_| SubmitError::ShuttingDown)?;
-        Ok(rx)
+        if self.tx.send(req).is_err() {
+            // The scheduler thread is gone (it only exits by shutdown or
+            // panic): roll back the queue-length charge — a leaked
+            // increment would eventually wedge every later submit on a
+            // phantom-full queue — and report the engine down rather than
+            // hand out a receiver nothing will ever answer.
+            self.queue_len.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitError::ShuttingDown);
+        }
+        self.metrics.on_submit();
+        Ok(ResponseRx::new(rx, cancel))
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
     }
 
-    /// Signal shutdown and join the scheduler (drains in-flight work).
+    /// Signal a drain and join the scheduler: queued requests answer
+    /// `Cancelled`, in-flight requests finish (bounded by
+    /// [`EngineOptions::drain_timeout`]). A scheduler panic is re-raised
+    /// here — a crashed engine must not masquerade as a clean shutdown.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
-            let _ = j.join();
+            if let Err(payload) = j.join() {
+                std::panic::resume_unwind(payload);
+            }
         }
         self.metrics.snapshot()
     }
@@ -210,7 +326,13 @@ impl Drop for EngineHandle {
     fn drop(&mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(j) = self.join.take() {
-            let _ = j.join();
+            // Drop must not panic (it may already be running during an
+            // unwind): a scheduler panic on this path is logged and counted
+            // instead of resumed — see [`scheduler_panics`].
+            if j.join().is_err() {
+                SCHEDULER_PANICS.fetch_add(1, Ordering::SeqCst);
+                crate::log_error!("scheduler thread panicked (detected at handle drop)");
+            }
         }
     }
 }
@@ -222,6 +344,9 @@ impl Engine {
     /// Start the scheduler thread and return a handle. The handle enforces
     /// `opts.max_queue` on every submit (bounded queue → backpressure).
     pub fn start(weights: Weights, opts: EngineOptions) -> EngineHandle {
+        // First engine in the process arms the environment's fault plan (a
+        // no-op unless `INTATTN_FAULT` is set; tests arm programmatically).
+        fault::ensure_env_armed();
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Metrics::new();
         let queue_len = Arc::new(AtomicU64::new(0));
@@ -259,6 +384,49 @@ impl Engine {
     }
 }
 
+/// Answer a request that never ran (swept from the wait queue) with its
+/// terminal response: empty tokens, its whole life counted as queueing.
+fn send_terminal(metrics: &Metrics, req: Request, finish: FinishReason) {
+    let queue_us = req.arrived.elapsed().as_micros() as u64;
+    let resp = Response {
+        id: req.id,
+        tokens: Vec::new(),
+        finish,
+        queue_us,
+        prefill_us: 0,
+        decode_us: 0,
+        total_us: queue_us,
+    };
+    metrics.on_complete(&resp);
+    let _ = req.reply.send(resp); // receiver may have gone away
+}
+
+/// Retire an in-flight request with `finish` and its partial (or full)
+/// output. Dropping `a` — and with it the [`KvCache`] — returns every page
+/// the sequence held to the process-wide pool this same round.
+fn retire_active(metrics: &Metrics, a: Active, finish: FinishReason) {
+    let decode_us = if a.prefilling() {
+        0
+    } else {
+        a.decode_started.elapsed().as_micros() as u64
+    };
+    let total_us = a.req.arrived.elapsed().as_micros() as u64;
+    let resp = Response {
+        id: a.req.id,
+        finish,
+        tokens: a.generated,
+        queue_us: a.queue_us,
+        prefill_us: a.prefill_us,
+        decode_us,
+        total_us,
+    };
+    metrics.on_complete(&resp);
+    // A failed send means the receiver is gone — the client's hang-up is an
+    // implicit cancel, normally caught earlier via the CancelToken; at this
+    // point the request is retiring anyway, so delivery is best-effort.
+    let _ = a.req.reply.send(resp);
+}
+
 fn scheduler_loop(
     weights: Weights,
     opts: EngineOptions,
@@ -284,8 +452,12 @@ fn scheduler_loop(
     // ahead of it on any later round (shortest-first would otherwise let a
     // stream of small requests starve it forever).
     let mut kv_head: Option<u64> = None;
+    // Set the round the shutdown flag is first observed; the drain's
+    // hard-stop clock and the `drain_duration` metric both run from here.
+    let mut drain_started: Option<Instant> = None;
 
     loop {
+        fault::on_round();
         // (1) drain submissions.
         loop {
             match rx.try_recv() {
@@ -302,12 +474,82 @@ fn scheduler_loop(
                 }
             }
         }
-        if shutdown.load(Ordering::SeqCst) && active.is_empty() && waiting.is_empty() {
-            return;
+        let draining = shutdown.load(Ordering::SeqCst);
+        if draining && drain_started.is_none() {
+            drain_started = Some(Instant::now());
+        }
+
+        // (1b) lifecycle sweep — wait queue: cancelled or expired requests
+        // answer immediately, and during a drain *every* queued request
+        // answers `Cancelled` instead of being dropped on the floor.
+        if !waiting.is_empty() {
+            let mut keep: VecDeque<Request> = VecDeque::with_capacity(waiting.len());
+            for req in waiting.drain(..) {
+                let finish = if req.cancel.is_cancelled() {
+                    Some(FinishReason::Cancelled)
+                } else if req.deadline_exceeded() {
+                    Some(FinishReason::DeadlineExceeded)
+                } else if draining {
+                    Some(FinishReason::Cancelled)
+                } else {
+                    None
+                };
+                match finish {
+                    Some(f) => send_terminal(&metrics, req, f),
+                    None => keep.push_back(req),
+                }
+            }
+            waiting = keep;
+        }
+        // (1c) lifecycle sweep — active set: a cancelled/expired request
+        // retires right now, partial tokens attached; dropping its cache
+        // returns the pages to the pool this round (the freed budget is
+        // visible to this very round's admissions).
+        let mut i = 0;
+        while i < active.len() {
+            let finish = if active[i].req.cancel.is_cancelled() {
+                Some(FinishReason::Cancelled)
+            } else if active[i].req.deadline_exceeded() {
+                Some(FinishReason::DeadlineExceeded)
+            } else {
+                None
+            };
+            if let Some(f) = finish {
+                let a = active.swap_remove(i);
+                retire_active(&metrics, a, f);
+            } else {
+                i += 1;
+            }
+        }
+
+        if draining {
+            if active.is_empty() && waiting.is_empty() {
+                let us = drain_started.map_or(0, |t| t.elapsed().as_micros() as u64);
+                metrics.on_drain(us);
+                return;
+            }
+            // Hard stop: the drain has run past its budget — answer
+            // everything still in flight `Cancelled` (partial tokens) and
+            // exit rather than hold the shutdown hostage to a stuck step.
+            if opts.drain_timeout != Duration::ZERO
+                && drain_started.is_some_and(|t| t.elapsed() >= opts.drain_timeout)
+            {
+                crate::log_warn!(
+                    "drain hard stop after {:?}: cancelling {} in-flight request(s)",
+                    opts.drain_timeout,
+                    active.len()
+                );
+                for a in active.drain(..) {
+                    retire_active(&metrics, a, FinishReason::Cancelled);
+                }
+                let us = drain_started.map_or(0, |t| t.elapsed().as_micros() as u64);
+                metrics.on_drain(us);
+                return;
+            }
         }
         if waiting.is_empty() && active.is_empty() {
             // Idle: block briefly for the next request to avoid spinning.
-            match rx.recv_timeout(std::time::Duration::from_millis(5)) {
+            match rx.recv_timeout(Duration::from_millis(5)) {
                 Ok(req) => {
                     queue_len.fetch_sub(1, Ordering::SeqCst);
                     waiting.push_back(req);
@@ -322,20 +564,24 @@ fn scheduler_loop(
             }
         }
 
-        // (2) admissions, under the KV page budget. While a KV-deferred
-        // request is pinned as kv_head, it is the *only* admission
-        // candidate: selecting others and then vetoing them post-hoc would
-        // livelock under sustained load (shortest-first may never re-select
-        // the pinned id while shorter prompts keep arriving, and the veto
-        // would bounce every selected request forever).
-        let admitted: Vec<Request> = if let Some(id) = kv_head {
+        // (2) admissions, under the KV page budget — none during a drain.
+        // While a KV-deferred request is pinned as kv_head, it is the
+        // *only* admission candidate: selecting others and then vetoing
+        // them post-hoc would livelock under sustained load
+        // (shortest-first may never re-select the pinned id while shorter
+        // prompts keep arriving, and the veto would bounce every selected
+        // request forever).
+        let admitted: Vec<Request> = if draining {
+            Vec::new()
+        } else if let Some(id) = kv_head {
             if active.len() >= opts.policy.max_active {
                 Vec::new()
             } else if let Some(pos) = waiting.iter().position(|r| r.id == id) {
                 vec![waiting.remove(pos).expect("position valid")]
             } else {
-                // Pinned id no longer queued (defensive; ids only leave the
-                // queue via admission) — unpin and admit normally.
+                // Pinned id no longer queued (a sweep may have answered it,
+                // and ids otherwise only leave the queue via admission) —
+                // unpin and admit normally.
                 kv_head = None;
                 select_admissions(&mut waiting, active.len(), &opts.policy)
             }
@@ -438,6 +684,7 @@ fn scheduler_loop(
                 adopted_rows,
                 generated: Vec::new(),
                 capped: false,
+                failed: false,
                 queue_us,
                 prefill_started: Instant::now(),
                 prefill_us: 0,
@@ -455,8 +702,10 @@ fn scheduler_loop(
         // (3a) advance prefills: at most one chunk per request per round, so
         // a long prompt shares the round with concurrent decodes instead of
         // monopolizing it (chunked prefill over the offset-causal mask).
+        // Each step is caught per request: a panic poisons only its own
+        // request (the step mutates nothing but that request's cache).
         for a in active.iter_mut() {
-            if !a.prefilling() {
+            if !a.prefilling() || a.failed {
                 continue;
             }
             // Mid-prefill adoption upgrade: a donor ahead of us (possibly in
@@ -488,13 +737,28 @@ fn scheduler_loop(
                 opts.policy.prefill_chunk.max(1)
             };
             let end = (a.prompt_pos + chunk).min(a.req.prompt.len());
-            let logits = lm.forward(&a.req.prompt[a.prompt_pos..end], Some(&mut a.cache));
+            let step = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                fault::on_prefill_step(a.req.id);
+                lm.forward(&a.req.prompt[a.prompt_pos..end], Some(&mut a.cache))
+            }));
+            let logits = match step {
+                Ok(logits) => logits,
+                Err(payload) => {
+                    if payload.downcast_ref::<fault::Injected>().is_none() {
+                        crate::log_error!("prefill step panicked; request {} poisoned", a.req.id);
+                    }
+                    a.failed = true;
+                    continue;
+                }
+            };
             metrics.on_prefill_tokens(end - a.prompt_pos);
             a.prompt_pos = end;
             // Register a snapshot at every aligned chunk boundary: page
             // references plus the running scales that cover exactly the
             // rows prefilled so far (the byte-identity precondition for
-            // later adopters).
+            // later adopters). Only fully-computed boundaries register, so
+            // a later panic can never strand a partial snapshot — donated
+            // prefix pages stay adoptable after their donor dies.
             if let Some(ix) = prefix_index.as_mut() {
                 if ix.aligned(a.prompt_pos) {
                     ix.register(&a.req.prompt[..a.prompt_pos], &a.cache);
@@ -524,6 +788,7 @@ fn scheduler_loop(
             // the last position and fills the final KV slot); cap only once
             // the context is actually full.
             if !a.prefilling()
+                && !a.failed
                 && a.generated.len() < a.req.gen_len
                 && a.cache.len >= cfg.max_seq
             {
@@ -534,20 +799,64 @@ fn scheduler_loop(
         }
         let mut decoding: Vec<&mut Active> = active
             .iter_mut()
-            .filter(|a| !a.prefilling() && !a.capped && a.generated.len() < a.req.gen_len)
+            .filter(|a| {
+                !a.prefilling() && !a.capped && !a.failed && a.generated.len() < a.req.gen_len
+            })
             .collect();
         if !decoding.is_empty() {
             let tokens: Vec<u16> =
                 decoding.iter().map(|a| *a.generated.last().unwrap()).collect();
-            let logits = {
+            let ids: Vec<u64> = decoding.iter().map(|a| a.req.id).collect();
+            // The batch is caught as a whole. Injected decode faults fire
+            // at step entry — before any cache mutation — and name their
+            // victim, so only the victim is poisoned and the untouched rest
+            // of the batch decodes next round. An unattributed panic leaves
+            // the batch's caches indeterminate: everyone in it fails rather
+            // than decode from poisoned KV.
+            let step = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                for &id in &ids {
+                    fault::on_decode_step(id);
+                }
                 let mut caches: Vec<&mut KvCache> =
                     decoding.iter_mut().map(|a| &mut a.cache).collect();
                 lm.decode_step_batch(&tokens, &mut caches)
-            };
-            for (i, a) in decoding.iter_mut().enumerate() {
-                let next =
-                    sample_row(logits.row(i), a.req.temperature, a.req.top_k, &mut a.rng);
-                a.generated.push(next);
+            }));
+            match step {
+                Ok(logits) => {
+                    for (i, a) in decoding.iter_mut().enumerate() {
+                        let next = sample_row(
+                            logits.row(i),
+                            a.req.temperature,
+                            a.req.top_k,
+                            &mut a.rng,
+                        );
+                        a.generated.push(next);
+                    }
+                }
+                Err(payload) => {
+                    let victim =
+                        payload.downcast_ref::<fault::Injected>().and_then(|inj| inj.victim);
+                    match victim {
+                        Some(id) => {
+                            for a in decoding.iter_mut() {
+                                if a.req.id == id {
+                                    a.failed = true;
+                                }
+                            }
+                        }
+                        None => {
+                            if payload.downcast_ref::<fault::Injected>().is_none() {
+                                crate::log_error!(
+                                    "batched decode step panicked; {} sequence(s) poisoned",
+                                    decoding.len()
+                                );
+                            }
+                            for a in decoding.iter_mut() {
+                                a.failed = true;
+                            }
+                        }
+                    }
+                }
             }
         }
         // Sample KV usage at the round's high-water mark: after prefill
@@ -561,29 +870,27 @@ fn scheduler_loop(
             active.iter().map(|a| a.cache.capacity_rows()).sum(),
         );
 
-        // (4) retire finished (gen_len reached, or cut off by the context).
+        // (4) retire finished (gen_len reached, cut off by the context, or
+        // poisoned by a caught panic).
         let mut i = 0;
         while i < active.len() {
-            let done = active[i].generated.len() >= active[i].req.gen_len || active[i].capped;
+            let done = active[i].failed
+                || active[i].capped
+                || active[i].generated.len() >= active[i].req.gen_len;
             if done {
                 let a = active.swap_remove(i);
-                let decode_us = a.decode_started.elapsed().as_micros() as u64;
-                let total_us = a.req.arrived.elapsed().as_micros() as u64;
-                let resp = Response {
-                    id: a.req.id,
-                    finish: if a.capped { FinishReason::Length } else { FinishReason::Done },
-                    tokens: a.generated,
-                    queue_us: a.queue_us,
-                    prefill_us: a.prefill_us,
-                    decode_us,
-                    total_us,
+                let finish = if a.failed {
+                    FinishReason::Error
+                } else if a.capped {
+                    FinishReason::Length
+                } else {
+                    FinishReason::Done
                 };
-                metrics.on_complete(&resp);
-                let _ = a.req.reply.send(resp); // receiver may have gone away
-                // `a` (and its KvCache) drops here: every page the sequence
-                // held returns to the process-wide pool this round, so the
-                // freed budget — and the pages themselves — are available
-                // to the next admission.
+                // `a` (and its KvCache) drops inside retire_active: every
+                // page the sequence held returns to the process-wide pool
+                // this round, so the freed budget — and the pages
+                // themselves — are available to the next admission.
+                retire_active(&metrics, a, finish);
             } else {
                 i += 1;
             }
@@ -601,6 +908,23 @@ mod tests {
         Weights::random(cfg, 11)
     }
 
+    /// A handle whose scheduler is already gone (receiver dropped), for the
+    /// submit/shutdown failure paths no live engine can deterministically
+    /// produce.
+    fn dead_handle(join: Option<std::thread::JoinHandle<()>>) -> EngineHandle {
+        let (tx, _) = mpsc::channel();
+        EngineHandle {
+            tx,
+            metrics: Metrics::new(),
+            queue_len: Arc::new(AtomicU64::new(0)),
+            max_queue: 4,
+            next_id: AtomicU64::new(1),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            join,
+            max_context: 64,
+        }
+    }
+
     #[test]
     fn serves_a_request_end_to_end() {
         let h = Engine::start(small_weights(), EngineOptions::default());
@@ -611,6 +935,7 @@ mod tests {
         assert!(resp.ttft_us() <= resp.total_us + 1000);
         let snap = h.shutdown();
         assert_eq!(snap.completed, 1);
+        assert_eq!(snap.finished_done, 1);
     }
 
     #[test]
@@ -663,6 +988,8 @@ mod tests {
         // 4 real decode steps for the capped request + 3 for the Done one —
         // fabricated tokens must not inflate the decode metric.
         assert_eq!(snap.decode_tokens, 7);
+        assert_eq!(snap.finished_length, 1);
+        assert_eq!(snap.finished_done, 1);
     }
 
     #[test]
@@ -774,5 +1101,94 @@ mod tests {
         assert_eq!(snap.decode_tokens, 2);
         assert!(snap.throughput_tok_s > 0.0);
         assert!(snap.render().contains("tok/s"));
+    }
+
+    #[test]
+    fn cancel_token_retires_request_as_cancelled() {
+        // A long chunked prefill (30 rounds for the 60-token prompt) keeps
+        // the request in flight while the cancel lands; the engine must
+        // retire it at a round boundary, not run it to completion.
+        let opts = EngineOptions {
+            policy: BatchPolicy { prefill_chunk: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let h = Engine::start(small_weights(), opts);
+        let rx = h.submit(vec![1; 60], 2, 0.0, 1).unwrap();
+        rx.cancel();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.tokens.len() < 2, "cancelled before completion");
+        // The engine keeps serving after the cancellation.
+        let rx = h.submit(vec![1, 2, 3], 3, 0.0, 1).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Done);
+        let snap = h.shutdown();
+        assert_eq!(snap.finished_cancelled, 1);
+        assert_eq!(snap.finished_done, 1);
+        assert_eq!(snap.completed, 2);
+    }
+
+    #[test]
+    fn expired_deadline_yields_deadline_exceeded() {
+        let h = Engine::start(small_weights(), EngineOptions::default());
+        // A zero deadline is already exceeded at the first lifecycle sweep,
+        // before the request can admit — deterministic terminal reason.
+        let expired = SubmitOptions { deadline: Some(Duration::ZERO) };
+        let rx = h.submit_with(vec![1, 2, 3], 4, 0.0, 1, expired).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.finish, FinishReason::DeadlineExceeded);
+        assert!(resp.tokens.is_empty(), "never ran: no partial output");
+        // A generous deadline does not trip.
+        let generous = SubmitOptions { deadline: Some(Duration::from_secs(3600)) };
+        let rx = h.submit_with(vec![1, 2, 3], 4, 0.0, 1, generous).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Done);
+        let snap = h.shutdown();
+        assert_eq!(snap.finished_deadline, 1);
+        assert_eq!(snap.finished_done, 1);
+    }
+
+    #[test]
+    fn submit_rolls_back_queue_len_when_scheduler_is_gone() {
+        // Regression: a send failure used to leave the queue-length charge
+        // behind, so enough raced submits against a dead scheduler would
+        // wedge the handle on a phantom-full queue.
+        let h = dead_handle(None);
+        for _ in 0..10 {
+            assert_eq!(h.submit(vec![1, 2], 2, 0.0, 1).unwrap_err(), SubmitError::ShuttingDown);
+        }
+        assert_eq!(h.queue_len.load(Ordering::SeqCst), 0, "charge rolled back");
+        let snap = h.metrics();
+        assert_eq!(snap.submitted, 0, "a failed submit is not a submit");
+        assert_eq!(snap.rejected, 0, "shutdown is not a client error");
+    }
+
+    /// A thread that dies with a typed [`fault::Injected`] payload — stands
+    /// in for a panicked scheduler, and lets the asserts identify the exact
+    /// panic they re-raised/observed.
+    fn panicking_thread() -> std::thread::JoinHandle<()> {
+        std::thread::Builder::new()
+            .spawn(|| {
+                std::panic::panic_any(fault::Injected { site: fault::Site::Round, victim: None })
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn shutdown_propagates_scheduler_panic() {
+        // `let _ = j.join()` used to swallow this: a crashed engine looked
+        // like a clean exit.
+        let h = dead_handle(Some(panicking_thread()));
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| h.shutdown()));
+        let payload = outcome.expect_err("shutdown must re-raise the scheduler panic");
+        assert!(payload.downcast_ref::<fault::Injected>().is_some());
+    }
+
+    #[test]
+    fn drop_counts_scheduler_panic_without_panicking() {
+        let before = scheduler_panics();
+        drop(dead_handle(Some(panicking_thread())));
+        // `>=`: other tests may exercise this path concurrently.
+        assert!(scheduler_panics() >= before + 1, "drop must flag the crashed scheduler");
     }
 }

@@ -13,6 +13,16 @@ pub struct MetricsInner {
     pub submitted: u64,
     pub rejected: u64,
     pub completed: u64,
+    /// Terminal-response counts by [`crate::coordinator::request::FinishReason`]
+    /// — the five always sum to `completed` (every terminal response is
+    /// counted exactly once).
+    pub finished_done: u64,
+    pub finished_length: u64,
+    pub finished_cancelled: u64,
+    pub finished_deadline: u64,
+    pub finished_error: u64,
+    /// Wall time of the last shutdown drain (signal → scheduler exit), µs.
+    pub drain_us: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub ttft_us: LogHistogram,
@@ -50,6 +60,12 @@ impl Default for MetricsInner {
             submitted: 0,
             rejected: 0,
             completed: 0,
+            finished_done: 0,
+            finished_length: 0,
+            finished_cancelled: 0,
+            finished_deadline: 0,
+            finished_error: 0,
+            drain_us: 0,
             prefill_tokens: 0,
             decode_tokens: 0,
             ttft_us: LogHistogram::new(),
@@ -107,16 +123,38 @@ impl Metrics {
         }
     }
 
+    /// Record a terminal response — `completed` counts every lifecycle
+    /// outcome (the per-reason counters break it down), while the latency
+    /// histograms only sample successful runs: a request cancelled in the
+    /// wait queue has no time-to-first-token, and mixing aborted lifetimes
+    /// into the percentiles would make the tail look arbitrarily good or
+    /// bad depending on when clients hang up.
     pub fn on_complete(&self, resp: &crate::coordinator::request::Response) {
+        use crate::coordinator::request::FinishReason;
         let mut m = self.0.lock().unwrap();
         m.completed += 1;
-        m.decode_tokens += resp.tokens.len().saturating_sub(1) as u64;
-        m.ttft_us.record_us(resp.ttft_us() as f64);
-        m.e2e_us.record_us(resp.total_us as f64);
-        let pt = resp.decode_per_token_us();
-        if pt > 0.0 {
-            m.per_token_us.record_us(pt);
+        match resp.finish {
+            FinishReason::Done => m.finished_done += 1,
+            FinishReason::Length => m.finished_length += 1,
+            FinishReason::Cancelled => m.finished_cancelled += 1,
+            FinishReason::DeadlineExceeded => m.finished_deadline += 1,
+            FinishReason::Error => m.finished_error += 1,
         }
+        // Partial output still reflects real decode rounds spent.
+        m.decode_tokens += resp.tokens.len().saturating_sub(1) as u64;
+        if resp.finish.is_ok() {
+            m.ttft_us.record_us(resp.ttft_us() as f64);
+            m.e2e_us.record_us(resp.total_us as f64);
+            let pt = resp.decode_per_token_us();
+            if pt > 0.0 {
+                m.per_token_us.record_us(pt);
+            }
+        }
+    }
+
+    /// Record the wall time of a completed shutdown drain.
+    pub fn on_drain(&self, us: u64) {
+        self.0.lock().unwrap().drain_us = us;
     }
 
     pub fn on_prefill_tokens(&self, n: usize) {
@@ -133,16 +171,24 @@ impl Metrics {
     }
 
     /// Snapshot for reporting. Page-pool counters come from the
-    /// process-wide pools ([`crate::attention::page_pool_stats`]) — they
-    /// are monotone process totals, not per-engine deltas.
+    /// process-wide pools ([`crate::attention::page_pool_stats`]) and the
+    /// fault counters from [`crate::util::fault::stats`] — both are
+    /// monotone process totals, not per-engine deltas.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.0.lock().unwrap();
         let elapsed_s = m.started.elapsed().as_secs_f64().max(1e-9);
         let pool = crate::attention::page_pool_stats();
+        let faults = crate::util::fault::stats();
         MetricsSnapshot {
             submitted: m.submitted,
             rejected: m.rejected,
             completed: m.completed,
+            finished_done: m.finished_done,
+            finished_length: m.finished_length,
+            finished_cancelled: m.finished_cancelled,
+            finished_deadline: m.finished_deadline,
+            finished_error: m.finished_error,
+            drain_us: m.drain_us,
             prefill_tokens: m.prefill_tokens,
             decode_tokens: m.decode_tokens,
             elapsed_s,
@@ -163,6 +209,9 @@ impl Metrics {
             kv_pages_allocated: pool.allocated,
             kv_pages_recycled: pool.recycled,
             kv_cow_forks: pool.cow_forks,
+            fault_injected_panics: faults.injected_panics,
+            fault_failed_allocs: faults.failed_allocs,
+            fault_injected_delays: faults.injected_delays,
         }
     }
 }
@@ -173,6 +222,15 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub rejected: u64,
     pub completed: u64,
+    /// Terminal responses by [`crate::coordinator::request::FinishReason`];
+    /// the five sum to `completed`.
+    pub finished_done: u64,
+    pub finished_length: u64,
+    pub finished_cancelled: u64,
+    pub finished_deadline: u64,
+    pub finished_error: u64,
+    /// Wall time of the last shutdown drain (signal → scheduler exit), µs.
+    pub drain_us: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub elapsed_s: f64,
@@ -203,6 +261,13 @@ pub struct MetricsSnapshot {
     /// Process-wide copy-on-write page forks — shared pages copied before a
     /// divergent append or re-scale remap (monotone).
     pub kv_cow_forks: u64,
+    /// Process-wide injected step panics that fired (monotone; see
+    /// [`crate::util::fault`] — 0 unless a fault plan is armed).
+    pub fault_injected_panics: u64,
+    /// Process-wide injected page-acquisition failures that fired.
+    pub fault_failed_allocs: u64,
+    /// Process-wide injected delays slept.
+    pub fault_injected_delays: u64,
 }
 
 impl MetricsSnapshot {
@@ -211,7 +276,9 @@ impl MetricsSnapshot {
             "requests: {} ok / {} rejected / {} submitted | tokens: {} prefill + {} decode \
              | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms | peak batch {} \
              | peak kv {:.1} KiB ({} pages, {:.0}% util) | pool {} alloc / {} recycled \
-             | prefix hits {} ({} pages shared, {} cow forks)",
+             | prefix hits {} ({} pages shared, {} cow forks) \
+             | finish: {} done, {} length, {} cancelled, {} deadline, {} error \
+             | drain {:.1} ms | faults: {} panics / {} allocs / {} delays",
             self.completed,
             self.rejected,
             self.submitted,
@@ -230,6 +297,15 @@ impl MetricsSnapshot {
             self.prefix_hits,
             self.shared_kv_pages,
             self.kv_cow_forks,
+            self.finished_done,
+            self.finished_length,
+            self.finished_cancelled,
+            self.finished_deadline,
+            self.finished_error,
+            self.drain_us as f64 / 1e3,
+            self.fault_injected_panics,
+            self.fault_failed_allocs,
+            self.fault_injected_delays,
         )
     }
 }
@@ -282,5 +358,50 @@ mod tests {
         assert!(rendered.contains("10 pages"), "{rendered}");
         assert!(rendered.contains("recycled"), "{rendered}");
         assert!(rendered.contains("prefix hits 2"), "{rendered}");
+    }
+
+    #[test]
+    fn finish_reasons_partition_completed_and_histograms_skip_aborts() {
+        use crate::coordinator::request::FinishReason;
+        let m = Metrics::new();
+        let resp = |finish, tokens: Vec<u16>| Response {
+            id: 0,
+            tokens,
+            finish,
+            queue_us: 5,
+            prefill_us: 5,
+            decode_us: 10,
+            total_us: 20,
+        };
+        m.on_complete(&resp(FinishReason::Done, vec![1, 2]));
+        m.on_complete(&resp(FinishReason::Length, vec![1]));
+        m.on_complete(&resp(FinishReason::Cancelled, vec![1, 2, 3]));
+        m.on_complete(&resp(FinishReason::DeadlineExceeded, vec![]));
+        m.on_complete(&resp(FinishReason::Error, vec![1]));
+        m.on_drain(2500);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 5);
+        assert_eq!(s.finished_done, 1);
+        assert_eq!(s.finished_length, 1);
+        assert_eq!(s.finished_cancelled, 1);
+        assert_eq!(s.finished_deadline, 1);
+        assert_eq!(s.finished_error, 1);
+        let by_reason = s.finished_done
+            + s.finished_length
+            + s.finished_cancelled
+            + s.finished_deadline
+            + s.finished_error;
+        assert_eq!(by_reason, s.completed, "reasons partition completed");
+        // Decode work is real whatever the outcome (3 aborted-path tokens
+        // beyond each first = 1+0+2+0+0), but latency histograms sample
+        // only the two successful runs.
+        assert_eq!(s.decode_tokens, 3);
+        assert_eq!(s.drain_us, 2500);
+        let rendered = s.render();
+        assert!(rendered.contains("1 cancelled"), "{rendered}");
+        assert!(rendered.contains("1 deadline"), "{rendered}");
+        assert!(rendered.contains("1 error"), "{rendered}");
+        assert!(rendered.contains("drain 2.5 ms"), "{rendered}");
+        assert!(rendered.contains("faults:"), "{rendered}");
     }
 }

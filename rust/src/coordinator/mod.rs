@@ -14,5 +14,7 @@ pub mod batcher;
 pub mod prefix;
 pub mod engine;
 
-pub use engine::{Engine, EngineHandle, EngineOptions};
-pub use request::{FinishReason, Request, Response, SubmitError};
+pub use engine::{scheduler_panics, Engine, EngineHandle, EngineOptions};
+pub use request::{
+    CancelToken, FinishReason, Request, Response, ResponseRx, SubmitError, SubmitOptions,
+};

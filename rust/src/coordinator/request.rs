@@ -1,7 +1,33 @@
-//! Request/response types of the serving engine.
+//! Request/response types of the serving engine, plus the client-side
+//! lifecycle levers: per-request cancellation ([`CancelToken`]), optional
+//! submit-relative deadlines ([`SubmitOptions`]), and a receiver wrapper
+//! ([`ResponseRx`]) whose drop is an implicit cancel — a client that hangs
+//! up stops burning KV pages and decode rounds.
 
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Cooperative cancellation flag, shared between a client and the scheduler
+/// (checked at round boundaries). Cloning shares the flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation. Idempotent; the scheduler retires the request
+    /// with [`FinishReason::Cancelled`] at the next round boundary.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
 
 /// A generation request.
 #[derive(Debug)]
@@ -17,8 +43,21 @@ pub struct Request {
     pub top_k: usize,
     /// Enqueue timestamp (set by the engine).
     pub arrived: Instant,
+    /// Optional deadline, relative to `arrived`: once exceeded the request
+    /// retires with [`FinishReason::DeadlineExceeded`] and whatever tokens
+    /// it generated so far.
+    pub deadline: Option<Duration>,
+    /// Cancellation flag shared with the submitting client.
+    pub cancel: CancelToken,
     /// Completion channel.
     pub reply: mpsc::Sender<Response>,
+}
+
+impl Request {
+    /// Whether the request's deadline (if any) has passed.
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline.is_some_and(|d| self.arrived.elapsed() >= d)
+    }
 }
 
 /// Why a generation stopped.
@@ -29,6 +68,24 @@ pub enum FinishReason {
     /// The model's context filled up first: `tokens` holds only what was
     /// actually generated (truncated — never padded with fabricated tokens).
     Length,
+    /// Cancelled — explicitly via [`CancelToken::cancel`], implicitly by the
+    /// client dropping its [`ResponseRx`], or by an engine drain/hard stop
+    /// answering work it will not run. `tokens` holds any partial output.
+    Cancelled,
+    /// The submit-relative deadline passed before the request finished.
+    /// `tokens` holds any partial output.
+    DeadlineExceeded,
+    /// The request's model step panicked (it is poisoned and retired); the
+    /// engine and every other in-flight request keep running.
+    Error,
+}
+
+impl FinishReason {
+    /// Whether the request ran to a successful completion (`Done`/`Length`)
+    /// as opposed to an aborted lifecycle.
+    pub fn is_ok(self) -> bool {
+        matches!(self, FinishReason::Done | FinishReason::Length)
+    }
 }
 
 /// Completed generation with timing breakdown.
@@ -60,6 +117,78 @@ impl Response {
             0.0
         } else {
             self.decode_us as f64 / (self.tokens.len() - 1) as f64
+        }
+    }
+}
+
+/// Per-submit options beyond the prompt/sampling parameters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Deadline relative to the submit instant; `None` = no deadline.
+    pub deadline: Option<Duration>,
+}
+
+/// The client's end of a request: a [`Response`] receiver tied to the
+/// request's [`CancelToken`]. Dropping it without [`ResponseRx::detach`]
+/// cancels the request — a vanished client must not keep decoding (the
+/// scheduler would otherwise burn rounds and KV pages on output nobody can
+/// ever read). Exactly one terminal [`Response`] arrives per request.
+#[derive(Debug)]
+pub struct ResponseRx {
+    /// `None` only after [`ResponseRx::detach`] consumed the receiver.
+    rx: Option<mpsc::Receiver<Response>>,
+    cancel: CancelToken,
+}
+
+impl ResponseRx {
+    pub(crate) fn new(rx: mpsc::Receiver<Response>, cancel: CancelToken) -> Self {
+        ResponseRx { rx: Some(rx), cancel }
+    }
+
+    fn rx(&self) -> &mpsc::Receiver<Response> {
+        self.rx.as_ref().expect("receiver present until detach consumes self")
+    }
+
+    /// Block for the terminal response.
+    pub fn recv(&self) -> Result<Response, mpsc::RecvError> {
+        self.rx().recv()
+    }
+
+    /// Block for the terminal response with a timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Response, mpsc::RecvTimeoutError> {
+        self.rx().recv_timeout(timeout)
+    }
+
+    /// Non-blocking poll for the terminal response.
+    pub fn try_recv(&self) -> Result<Response, mpsc::TryRecvError> {
+        self.rx().try_recv()
+    }
+
+    /// Cancel the request (keeping the receiver: the terminal
+    /// [`FinishReason::Cancelled`] response still arrives).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// A clone of the request's cancel token, e.g. to cancel from another
+    /// thread while this handle blocks in [`ResponseRx::recv`].
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Opt out of drop-cancels: take the raw receiver and let the request
+    /// run to completion even if the receiver is later dropped (fire-and-
+    /// forget submission).
+    pub fn detach(mut self) -> mpsc::Receiver<Response> {
+        self.rx.take().expect("receiver present until detach consumes self")
+    }
+}
+
+impl Drop for ResponseRx {
+    fn drop(&mut self) {
+        // Hang-up = implicit cancel; `detach` took `rx` and opted out.
+        if self.rx.is_some() {
+            self.cancel.cancel();
         }
     }
 }
@@ -98,6 +227,8 @@ mod tests {
             temperature: 0.0,
             top_k: 1,
             arrived: Instant::now(),
+            deadline: None,
+            cancel: CancelToken::new(),
             reply: tx,
         };
         let r = Response {
@@ -125,5 +256,62 @@ mod tests {
             total_us: 1,
         };
         assert_eq!(r.decode_per_token_us(), 0.0);
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!t.is_cancelled());
+        u.cancel();
+        assert!(t.is_cancelled());
+        t.cancel(); // idempotent
+        assert!(u.is_cancelled());
+    }
+
+    #[test]
+    fn deadline_exceeded_checks_against_arrival() {
+        let (tx, _rx) = mpsc::channel();
+        let mut req = Request {
+            id: 1,
+            prompt: vec![1],
+            gen_len: 1,
+            temperature: 0.0,
+            top_k: 1,
+            arrived: Instant::now(),
+            deadline: None,
+            cancel: CancelToken::new(),
+            reply: tx,
+        };
+        assert!(!req.deadline_exceeded(), "no deadline never expires");
+        req.deadline = Some(Duration::from_secs(3600));
+        assert!(!req.deadline_exceeded());
+        req.deadline = Some(Duration::ZERO);
+        assert!(req.deadline_exceeded());
+    }
+
+    #[test]
+    fn dropping_response_rx_cancels_detached_does_not() {
+        let (tx, rx) = mpsc::channel::<Response>();
+        let token = CancelToken::new();
+        drop(ResponseRx::new(rx, token.clone()));
+        assert!(token.is_cancelled(), "hang-up is an implicit cancel");
+        drop(tx);
+
+        let (tx, rx) = mpsc::channel::<Response>();
+        let token = CancelToken::new();
+        let raw = ResponseRx::new(rx, token.clone()).detach();
+        assert!(!token.is_cancelled(), "detach opts out of drop-cancel");
+        drop(raw);
+        drop(tx);
+    }
+
+    #[test]
+    fn finish_reason_ok_split() {
+        assert!(FinishReason::Done.is_ok());
+        assert!(FinishReason::Length.is_ok());
+        assert!(!FinishReason::Cancelled.is_ok());
+        assert!(!FinishReason::DeadlineExceeded.is_ok());
+        assert!(!FinishReason::Error.is_ok());
     }
 }

@@ -14,6 +14,8 @@
 //! | `INTATTN_PREFIX_SHARE` | snapshot | copy-on-write prefix sharing (`0`/`false`/`off` disable) | on |
 //! | `INTATTN_FUSED_DECODE` | snapshot | fused one-page-walk decode (`0`/`false`/`off` disable) | on |
 //! | `INTATTN_BENCH_FAST` | snapshot | `=1` shrinks every bench to CI smoke budgets | off |
+//! | `INTATTN_FAULT` | snapshot | fault-injection plan armed on engine start ([`crate::util::fault`]) | unset (inert) |
+//! | `INTATTN_DRAIN_TIMEOUT_MS` | snapshot | engine shutdown-drain hard stop, ms (`0` = unlimited) | `DEFAULT_DRAIN_TIMEOUT_MS` (10000) |
 //! | `INTATTN_LOG` | per-read | log level (`error`/`warn`/`info`/`debug`/`trace`) | `info` |
 //! | `INTATTN_ARTIFACTS` | per-read | PJRT artifacts directory | `artifacts/` |
 //! | `INTATTN_REPORTS` | per-read | bench/experiment report directory | `reports/` |
@@ -21,7 +23,7 @@
 //!
 //! ## Snapshot semantics
 //!
-//! The six *snapshot* knobs configure process-lifetime singletons (the
+//! The eight *snapshot* knobs configure process-lifetime singletons (the
 //! global pool, the page geometry every state must agree on, the serving
 //! defaults). They are read **exactly once**, together, on the first
 //! [`knobs`] call; later environment mutations are invisible. That is a
@@ -38,7 +40,11 @@
 
 use std::sync::OnceLock;
 
-/// The six process-lifetime knobs, snapshotted together on first access.
+/// Engine drain hard-stop default, milliseconds (`INTATTN_DRAIN_TIMEOUT_MS`
+/// overrides; `0` means wait forever).
+pub const DEFAULT_DRAIN_TIMEOUT_MS: u64 = 10_000;
+
+/// The eight process-lifetime knobs, snapshotted together on first access.
 #[derive(Clone, Copy, Debug)]
 pub struct Knobs {
     /// `INTATTN_THREADS` — computing threads for the global pool.
@@ -53,9 +59,16 @@ pub struct Knobs {
     pub fused_decode: bool,
     /// `INTATTN_BENCH_FAST` — CI smoke budgets for every bench harness.
     pub bench_fast: bool,
+    /// `INTATTN_FAULT` — fault-injection plan armed on the first engine
+    /// start ([`crate::util::fault::ensure_env_armed`]); `None` is inert.
+    /// Leaked to `'static` so the snapshot stays `Copy`.
+    pub fault: Option<&'static str>,
+    /// `INTATTN_DRAIN_TIMEOUT_MS` — engine shutdown-drain hard stop in
+    /// milliseconds (`0` = wait for in-flight work forever).
+    pub drain_timeout_ms: u64,
 }
 
-/// The process-wide snapshot. First call reads all six variables; every
+/// The process-wide snapshot. First call reads all eight variables; every
 /// later call returns the same values.
 pub fn knobs() -> &'static Knobs {
     static K: OnceLock<Knobs> = OnceLock::new();
@@ -66,6 +79,11 @@ pub fn knobs() -> &'static Knobs {
         prefix_share: prefix_share_from(std::env::var("INTATTN_PREFIX_SHARE").ok().as_deref()),
         fused_decode: fused_decode_from(std::env::var("INTATTN_FUSED_DECODE").ok().as_deref()),
         bench_fast: bench_fast_from(std::env::var("INTATTN_BENCH_FAST").ok().as_deref()),
+        fault: fault_from(std::env::var("INTATTN_FAULT").ok().as_deref())
+            .map(|s| &*Box::leak(s.into_boxed_str())),
+        drain_timeout_ms: drain_timeout_ms_from(
+            std::env::var("INTATTN_DRAIN_TIMEOUT_MS").ok().as_deref(),
+        ),
     })
 }
 
@@ -113,6 +131,21 @@ pub fn fused_decode_from(env: Option<&str>) -> bool {
 /// `INTATTN_BENCH_FAST`: exactly `1` enables; anything else stays off.
 pub fn bench_fast_from(env: Option<&str>) -> bool {
     env == Some("1")
+}
+
+/// `INTATTN_FAULT`: a fault-injection plan string for
+/// [`crate::util::fault`] (e.g. `pool_alloc@17,delay_prefill=2ms`); blank
+/// or whitespace-only is unset. Deliberately *not* validated here: a
+/// malformed plan must fail loudly at arm time
+/// ([`crate::util::fault::ensure_env_armed`]), not silently disarm.
+pub fn fault_from(env: Option<&str>) -> Option<String> {
+    env.map(str::trim).filter(|s| !s.is_empty()).map(str::to_owned)
+}
+
+/// `INTATTN_DRAIN_TIMEOUT_MS`: drain hard stop in milliseconds; `0` waits
+/// forever. Junk or unset falls back to [`DEFAULT_DRAIN_TIMEOUT_MS`].
+pub fn drain_timeout_ms_from(env: Option<&str>) -> u64 {
+    env.and_then(|v| v.trim().parse::<u64>().ok()).unwrap_or(DEFAULT_DRAIN_TIMEOUT_MS)
 }
 
 #[cfg(test)]
@@ -171,6 +204,25 @@ mod tests {
         assert!(bench_fast_from(Some("1")));
         assert!(!bench_fast_from(Some("true")));
         assert!(!bench_fast_from(None));
+    }
+
+    #[test]
+    fn fault_policy() {
+        assert_eq!(fault_from(None), None);
+        assert_eq!(fault_from(Some("")), None);
+        assert_eq!(fault_from(Some("   ")), None);
+        assert_eq!(fault_from(Some(" pool_alloc@1 ")), Some("pool_alloc@1".to_string()));
+        // Junk is preserved for arm time to reject loudly, not eaten here.
+        assert_eq!(fault_from(Some("not-a-plan")), Some("not-a-plan".to_string()));
+    }
+
+    #[test]
+    fn drain_timeout_policy() {
+        assert_eq!(drain_timeout_ms_from(None), DEFAULT_DRAIN_TIMEOUT_MS);
+        assert_eq!(drain_timeout_ms_from(Some("250")), 250);
+        assert_eq!(drain_timeout_ms_from(Some(" 250 ")), 250);
+        assert_eq!(drain_timeout_ms_from(Some("0")), 0, "0 = wait forever");
+        assert_eq!(drain_timeout_ms_from(Some("junk")), DEFAULT_DRAIN_TIMEOUT_MS);
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Deterministic fault injection for the serving engine's failure paths.
+//!
+//! Compiled always, inert unless armed: every hook is a relaxed atomic load
+//! on the hot path, and nothing fires until [`arm`] installs a [`Plan`].
+//! Plans come either from code (the chaos tests arm programmatically) or
+//! from the `INTATTN_FAULT` environment knob, read once via
+//! [`crate::util::env::knobs`] and armed by [`ensure_env_armed`] on the
+//! first engine start.
+//!
+//! A plan is a comma-separated clause string:
+//!
+//! | Clause | Effect |
+//! |---|---|
+//! | `pool_alloc@N` | the `N`-th page acquisition (1-based) panics — a simulated allocation failure |
+//! | `panic_prefill@N` | the `N`-th prefill step entry panics, attributed to its request |
+//! | `panic_decode@N` | the `N`-th per-sequence decode step entry panics, attributed to its sequence |
+//! | `delay_prefill=D` | every prefill step sleeps `D` (`2ms`, `500us`) first |
+//! | `delay_decode=D` | every per-sequence decode step sleeps `D` first |
+//! | `delay_round=D` | every scheduler round sleeps `D` at its top |
+//! | `seed=N` | no direct effect; the chaos property suite uses it as its PRNG base seed |
+//!
+//! e.g. `pool_alloc@17`, `panic_decode@3,delay_prefill=2ms`, `seed=7`.
+//!
+//! Injected panics carry an [`Injected`] payload, so the engine's
+//! `catch_unwind` wrappers can tell an injected fault (and its victim
+//! sequence) from a genuine bug, and panic hooks can silence the expected
+//! ones. Ordinals are one-shot by construction: an arrival counter is
+//! compared for equality, so each `@N` clause fires exactly once per [`arm`]
+//! (arming resets the arrival counters; the fired counters behind [`stats`]
+//! are monotone process totals, like the page-pool counters).
+//!
+//! The injection points live in [`crate::attention::state`] (`PagePool`
+//! acquisition) and [`crate::coordinator::engine`] (prefill entry, decode
+//! entry, round top) — the places real deployments fail: out of pages,
+//! poisoned model step, slow step tripping a deadline.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once};
+use std::time::Duration;
+
+/// Where a fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// `PagePool` page acquisition.
+    PoolAlloc,
+    /// Prefill step entry (one per request per round).
+    Prefill,
+    /// Decode step entry (one per decoding sequence per round).
+    Decode,
+    /// Scheduler round top.
+    Round,
+}
+
+/// Panic payload of an injected fault: lets `catch_unwind` attribute the
+/// unwind to the sequence whose step was poisoned (`victim`), and lets test
+/// panic hooks suppress expected injections without hiding real bugs.
+#[derive(Clone, Copy, Debug)]
+pub struct Injected {
+    pub site: Site,
+    /// Request id whose step hosted the fault; `None` when the fault is not
+    /// attributable to one sequence (a pool allocation can serve anyone).
+    pub victim: Option<u64>,
+}
+
+/// A parsed fault plan. `Default` is fully inert.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Plan {
+    /// `seed=N` — base seed handed to randomized chaos schedules.
+    pub seed: Option<u64>,
+    /// `pool_alloc@N` — the N-th page acquisition panics.
+    pub pool_alloc_at: Option<u64>,
+    /// `panic_prefill@N` — the N-th prefill step entry panics.
+    pub panic_prefill_at: Option<u64>,
+    /// `panic_decode@N` — the N-th decode step entry panics.
+    pub panic_decode_at: Option<u64>,
+    /// `delay_prefill=D` — sleep before every prefill step, µs.
+    pub delay_prefill_us: Option<u64>,
+    /// `delay_decode=D` — sleep before every decode step, µs.
+    pub delay_decode_us: Option<u64>,
+    /// `delay_round=D` — sleep at the top of every scheduler round, µs.
+    pub delay_round_us: Option<u64>,
+}
+
+const INERT: Plan = Plan {
+    seed: None,
+    pool_alloc_at: None,
+    panic_prefill_at: None,
+    panic_decode_at: None,
+    delay_prefill_us: None,
+    delay_decode_us: None,
+    delay_round_us: None,
+};
+
+/// Parse a plan string (see the module docs for the clause grammar). Pure:
+/// no global effect. Errors name the offending clause.
+pub fn parse_plan(s: &str) -> Result<Plan, String> {
+    let mut plan = Plan::default();
+    for clause in s.split(',') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        if let Some((site, n)) = clause.split_once('@') {
+            let n: u64 = n
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault clause `{clause}`: ordinal must be an integer"))?;
+            if n == 0 {
+                return Err(format!("fault clause `{clause}`: ordinals are 1-based"));
+            }
+            match site.trim() {
+                "pool_alloc" => plan.pool_alloc_at = Some(n),
+                "panic_prefill" => plan.panic_prefill_at = Some(n),
+                "panic_decode" => plan.panic_decode_at = Some(n),
+                other => return Err(format!("fault clause `{clause}`: unknown site `{other}`")),
+            }
+        } else if let Some((key, val)) = clause.split_once('=') {
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "seed" => {
+                    plan.seed = Some(val.parse().map_err(|_| {
+                        format!("fault clause `{clause}`: seed must be an integer")
+                    })?);
+                }
+                "delay_prefill" => plan.delay_prefill_us = Some(parse_duration_us(clause, val)?),
+                "delay_decode" => plan.delay_decode_us = Some(parse_duration_us(clause, val)?),
+                "delay_round" => plan.delay_round_us = Some(parse_duration_us(clause, val)?),
+                other => return Err(format!("fault clause `{clause}`: unknown key `{other}`")),
+            }
+        } else {
+            return Err(format!(
+                "fault clause `{clause}`: expected `site@ordinal` or `key=value`"
+            ));
+        }
+    }
+    Ok(plan)
+}
+
+/// `2ms` / `500us` → microseconds. A bare number is rejected: a unitless
+/// delay silently read as the wrong scale is exactly the kind of config bug
+/// a fault harness must not have.
+fn parse_duration_us(clause: &str, val: &str) -> Result<u64, String> {
+    let (digits, scale) = if let Some(d) = val.strip_suffix("ms") {
+        (d, 1000)
+    } else if let Some(d) = val.strip_suffix("us") {
+        (d, 1)
+    } else {
+        return Err(format!("fault clause `{clause}`: duration needs a `ms` or `us` suffix"));
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| format!("fault clause `{clause}`: duration must be an integer"))?;
+    Ok(n * scale)
+}
+
+/// Monotone injection totals since process start (mirrors the page-pool
+/// counter style; surfaced in the engine's metrics snapshot).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Injected step panics that fired (prefill + decode sites).
+    pub injected_panics: u64,
+    /// Injected page-acquisition failures that fired.
+    pub failed_allocs: u64,
+    /// Injected delays slept (one per delayed step/round).
+    pub injected_delays: u64,
+}
+
+/// The whole injection state, instantiable so unit tests exercise firing
+/// semantics on a private instance without racing the process-global one.
+struct State {
+    armed: AtomicBool,
+    plan: Mutex<Plan>,
+    pool_seen: AtomicU64,
+    prefill_seen: AtomicU64,
+    decode_seen: AtomicU64,
+    injected_panics: AtomicU64,
+    failed_allocs: AtomicU64,
+    injected_delays: AtomicU64,
+}
+
+impl State {
+    const fn new() -> Self {
+        State {
+            armed: AtomicBool::new(false),
+            plan: Mutex::new(INERT),
+            pool_seen: AtomicU64::new(0),
+            prefill_seen: AtomicU64::new(0),
+            decode_seen: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            failed_allocs: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+        }
+    }
+
+    fn arm(&self, plan: Plan) {
+        let mut p = self.plan.lock().unwrap_or_else(|e| e.into_inner());
+        *p = plan;
+        // Fresh arrival counters: `@N` ordinals count from this arming.
+        self.pool_seen.store(0, Ordering::SeqCst);
+        self.prefill_seen.store(0, Ordering::SeqCst);
+        self.decode_seen.store(0, Ordering::SeqCst);
+        self.armed.store(plan != INERT, Ordering::SeqCst);
+    }
+
+    fn disarm(&self) {
+        self.arm(INERT);
+    }
+
+    fn plan(&self) -> Plan {
+        *self.plan.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn stats(&self) -> FaultStats {
+        FaultStats {
+            injected_panics: self.injected_panics.load(Ordering::Relaxed),
+            failed_allocs: self.failed_allocs.load(Ordering::Relaxed),
+            injected_delays: self.injected_delays.load(Ordering::Relaxed),
+        }
+    }
+
+    fn delay(&self, us: Option<u64>) {
+        if let Some(us) = us {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(us));
+        }
+    }
+
+    fn on_pool_alloc(&self) {
+        if !self.armed.load(Ordering::Relaxed) {
+            return;
+        }
+        let plan = self.plan();
+        let arrival = self.pool_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        if plan.pool_alloc_at == Some(arrival) {
+            self.failed_allocs.fetch_add(1, Ordering::Relaxed);
+            std::panic::panic_any(Injected { site: Site::PoolAlloc, victim: None });
+        }
+    }
+
+    fn on_prefill_step(&self, victim: u64) {
+        if !self.armed.load(Ordering::Relaxed) {
+            return;
+        }
+        let plan = self.plan();
+        self.delay(plan.delay_prefill_us);
+        let arrival = self.prefill_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        if plan.panic_prefill_at == Some(arrival) {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+            std::panic::panic_any(Injected { site: Site::Prefill, victim: Some(victim) });
+        }
+    }
+
+    fn on_decode_step(&self, victim: u64) {
+        if !self.armed.load(Ordering::Relaxed) {
+            return;
+        }
+        let plan = self.plan();
+        self.delay(plan.delay_decode_us);
+        let arrival = self.decode_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        if plan.panic_decode_at == Some(arrival) {
+            self.injected_panics.fetch_add(1, Ordering::Relaxed);
+            std::panic::panic_any(Injected { site: Site::Decode, victim: Some(victim) });
+        }
+    }
+
+    fn on_round(&self) {
+        if !self.armed.load(Ordering::Relaxed) {
+            return;
+        }
+        self.delay(self.plan().delay_round_us);
+    }
+}
+
+static GLOBAL: State = State::new();
+
+/// Arm the process-global plan (resets arrival counters). An inert plan
+/// leaves the hooks on their no-op fast path.
+pub fn arm(plan: Plan) {
+    GLOBAL.arm(plan);
+}
+
+/// Parse and arm in one step.
+pub fn arm_str(s: &str) -> Result<(), String> {
+    parse_plan(s).map(arm)
+}
+
+/// Return every hook to its inert fast path.
+pub fn disarm() {
+    GLOBAL.disarm();
+}
+
+/// The currently armed plan (inert when disarmed).
+pub fn plan() -> Plan {
+    GLOBAL.plan()
+}
+
+/// Monotone process-wide injection totals.
+pub fn stats() -> FaultStats {
+    GLOBAL.stats()
+}
+
+/// The `seed=N` clause of the environment plan, if any — the chaos property
+/// suite's base seed, so a CI failure names a seed that reproduces locally.
+pub fn env_seed() -> Option<u64> {
+    crate::util::env::knobs().fault.and_then(|s| parse_plan(s).ok()).and_then(|p| p.seed)
+}
+
+/// Arm the `INTATTN_FAULT` environment plan, once per process. Called on
+/// engine start; a later explicit [`arm`]/[`disarm`] overrides it (the test
+/// harness forces this `Once` first, then arms its own scenario plans). A
+/// malformed plan must not be silently inert: it aborts engine start.
+pub fn ensure_env_armed() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        if let Some(s) = crate::util::env::knobs().fault {
+            arm_str(s).unwrap_or_else(|e| panic!("bad fault plan in environment: {e}"));
+        }
+    });
+}
+
+/// Injection point: `PagePool` page acquisition (before any counter moves,
+/// so an injected failure never skews the pool's outstanding accounting).
+#[inline]
+pub fn on_pool_alloc() {
+    GLOBAL.on_pool_alloc();
+}
+
+/// Injection point: prefill step entry for request `victim`.
+#[inline]
+pub fn on_prefill_step(victim: u64) {
+    GLOBAL.on_prefill_step(victim);
+}
+
+/// Injection point: decode step entry for sequence `victim`.
+#[inline]
+pub fn on_decode_step(victim: u64) {
+    GLOBAL.on_decode_step(victim);
+}
+
+/// Injection point: scheduler round top (delays only).
+#[inline]
+pub fn on_round() {
+    GLOBAL.on_round();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_clause_grammar() {
+        let p = parse_plan("pool_alloc@17, panic_decode@3 ,delay_prefill=2ms,seed=9").unwrap();
+        assert_eq!(p.pool_alloc_at, Some(17));
+        assert_eq!(p.panic_decode_at, Some(3));
+        assert_eq!(p.delay_prefill_us, Some(2000));
+        assert_eq!(p.seed, Some(9));
+        assert_eq!(p.panic_prefill_at, None);
+        let p = parse_plan("panic_prefill@1,delay_decode=500us,delay_round=1ms").unwrap();
+        assert_eq!(p.panic_prefill_at, Some(1));
+        assert_eq!(p.delay_decode_us, Some(500));
+        assert_eq!(p.delay_round_us, Some(1000));
+        assert_eq!(parse_plan("").unwrap(), Plan::default());
+        assert_eq!(parse_plan(" , ").unwrap(), Plan::default());
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for bad in [
+            "pool_alloc@0",     // ordinals are 1-based
+            "pool_alloc@x",     // non-integer ordinal
+            "panic_gemm@1",     // unknown site
+            "delay_prefill=2",  // unitless duration
+            "delay_prefill=2s", // unknown unit
+            "seed=abc",         // non-integer seed
+            "frobnicate=1",     // unknown key
+            "pool_alloc",       // no shape at all
+        ] {
+            let err = parse_plan(bad).unwrap_err();
+            assert!(err.contains("fault clause"), "{bad}: {err}");
+        }
+    }
+
+    /// Firing semantics on a private instance — no interference with (or
+    /// from) concurrently running tests that drive the global hooks.
+    #[test]
+    fn ordinal_faults_fire_exactly_once_at_their_arrival() {
+        let st = State::new();
+        st.arm(parse_plan("panic_decode@3").unwrap());
+        st.on_decode_step(7);
+        st.on_decode_step(8);
+        let hit = std::panic::catch_unwind(|| st.on_decode_step(9));
+        let payload = hit.unwrap_err();
+        let inj = payload.downcast_ref::<Injected>().expect("typed payload");
+        assert_eq!(inj.site, Site::Decode);
+        assert_eq!(inj.victim, Some(9));
+        // One-shot: later arrivals pass untouched.
+        st.on_decode_step(10);
+        assert_eq!(st.stats().injected_panics, 1);
+        // Other sites unaffected.
+        st.on_pool_alloc();
+        st.on_prefill_step(1);
+        assert_eq!(st.stats().failed_allocs, 0);
+    }
+
+    #[test]
+    fn rearming_resets_arrival_counters() {
+        let st = State::new();
+        st.arm(parse_plan("pool_alloc@2").unwrap());
+        st.on_pool_alloc();
+        assert!(std::panic::catch_unwind(|| st.on_pool_alloc()).is_err());
+        st.arm(parse_plan("pool_alloc@2").unwrap());
+        st.on_pool_alloc(); // arrival 1 of the new arming: no fire
+        assert!(std::panic::catch_unwind(|| st.on_pool_alloc()).is_err());
+        assert_eq!(st.stats().failed_allocs, 2);
+    }
+
+    #[test]
+    fn disarmed_state_is_inert_and_delays_count() {
+        let st = State::new();
+        st.arm(parse_plan("delay_decode=1us").unwrap());
+        st.on_decode_step(1);
+        st.on_decode_step(2);
+        assert_eq!(st.stats().injected_delays, 2);
+        st.disarm();
+        assert!(!st.armed.load(Ordering::SeqCst));
+        st.on_decode_step(3);
+        st.on_pool_alloc();
+        st.on_prefill_step(4);
+        st.on_round();
+        assert_eq!(st.stats().injected_delays, 2, "disarmed hooks are no-ops");
+    }
+
+    #[test]
+    fn seed_only_plan_is_armed_but_harmless() {
+        let st = State::new();
+        st.arm(parse_plan("seed=42").unwrap());
+        // Armed (the plan is not inert) but every hook passes through.
+        st.on_pool_alloc();
+        st.on_prefill_step(1);
+        st.on_decode_step(1);
+        st.on_round();
+        assert_eq!(st.stats(), FaultStats::default());
+    }
+}

@@ -6,6 +6,7 @@
 //! "Offline-cache constraint").
 
 pub mod env;
+pub mod fault;
 pub mod prng;
 pub mod stats;
 pub mod timer;

@@ -4,7 +4,7 @@
 use intattention::attention::{kv_page_rows, page_pool_stats, PipelineKind};
 use intattention::coordinator::batcher::BatchPolicy;
 use intattention::coordinator::prefix::PrefixIndex;
-use intattention::coordinator::{Engine, EngineOptions, SubmitError};
+use intattention::coordinator::{Engine, EngineOptions, FinishReason, SubmitError};
 use intattention::model::config::ModelConfig;
 use intattention::model::lm::KvCache;
 use intattention::model::weights::Weights;
@@ -323,6 +323,60 @@ fn oversized_and_empty_prompts_rejected_cleanly() {
     let rx = h.submit(vec![1, 2], 2, 0.0, 1).unwrap();
     rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
     h.shutdown();
+}
+
+#[test]
+fn dropped_receiver_cancels_and_frees_pages_for_the_next_request() {
+    // A client that hangs up mid-generation (drops its ResponseRx) must not
+    // keep burning rounds and KV pages: the engine treats the hang-up as an
+    // implicit cancel, retires the request at a round boundary, and the
+    // freed pages admit the next request.
+    //
+    // Determinism: the victim's prefill is made slow (512-token prompt,
+    // chunk 4, d_model 128 × 2 layers ⇒ ~128 multi-ms rounds), and the drop
+    // happens only after the live `prefill_tokens` counter proves the
+    // victim is mid-prefill — no sleep-and-hope timing.
+    let cfg = ModelConfig { vocab: 64, d_model: 128, n_layers: 2, n_heads: 4, max_seq: 600, mlp_mult: 2 };
+    let w = Weights::random(cfg, 7);
+    let victim_prompt: Vec<u16> = (0..512).map(|i| (i * 13 % 64) as u16).collect();
+    // Page budget = exactly the victim's projection: while the victim is
+    // resident nothing else can admit, so the follower finishing at all is
+    // proof the drop returned the victim's pages that round.
+    let budget = KvCache::pages_for_tokens(victim_prompt.len() + 8, &w.cfg);
+    let opts = EngineOptions {
+        attention: PipelineKind::IntAttention,
+        policy: BatchPolicy { prefill_chunk: 4, max_kv_pages: budget, ..Default::default() },
+        ..Default::default()
+    };
+    let h = Engine::start(w, opts);
+    let victim = h.submit(victim_prompt, 8, 0.0, 1).unwrap();
+    let started = std::time::Instant::now();
+    while h.metrics().prefill_tokens < 8 {
+        assert!(
+            started.elapsed() < std::time::Duration::from_secs(120),
+            "victim never started prefilling"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    drop(victim); // client hangs up mid-prefill
+    let follower = h.submit(vec![1, 2, 3, 4], 4, 0.0, 1).unwrap();
+    let resp = follower.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    assert_eq!(resp.finish, FinishReason::Done, "follower must be served after the hang-up");
+    assert_eq!(resp.tokens.len(), 4);
+    let snap = h.shutdown();
+    assert_eq!(snap.finished_cancelled, 1, "hang-up retired as Cancelled");
+    assert_eq!(snap.finished_done, 1);
+    assert_eq!(snap.completed, 2);
+    assert!(
+        snap.peak_kv_pages <= budget,
+        "victim and follower never resident together: peak {} > budget {budget}",
+        snap.peak_kv_pages
+    );
+    assert!(
+        snap.prefill_tokens < 512 + 4,
+        "cancelled prefill must stop early ({} tokens prefilled)",
+        snap.prefill_tokens
+    );
 }
 
 #[test]
