@@ -37,11 +37,74 @@
 //!    mode, where the unfused path's L-length score row hurts most) — the
 //!    `decode_fused` report, with the fused/unfused output cosine riding
 //!    along as a fidelity witness.
+//! 7. **Page-parallel fused decode + tiled prefill** — the span-split
+//!    headline: a threads × context grid of sequential-fused
+//!    (`decode_split(1)`) vs page-parallel (`decode_split(0)`) tok/s —
+//!    batch-of-1 deep-context decode scaling with the pool — plus a tiled
+//!    vs materialized prefill comparison with wall time and **peak heap
+//!    bytes** per arm, measured by this binary's peak-tracking global
+//!    allocator. Written as the `decode_parallel_fused` report.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use intattention::harness::experiments as exp;
 use intattention::harness::report::{kv_rows_json, write_report};
 use intattention::util::bench::black_box;
 use intattention::util::threadpool::{default_threads, scope_chunks_with, ParallelPool};
+
+struct PeakAlloc;
+
+static LIVE: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: pure pass-through to `System` plus relaxed atomic live/peak
+// watermarks — the allocator obligations (layout fidelity, no unwinding,
+// no reentrant allocation) are exactly `System`'s, which the delegation
+// preserves (same idiom as tests/decode_alloc.rs).
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let sz = layout.size() as u64;
+        let live = LIVE.fetch_add(sz, Ordering::Relaxed) + sz;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+        // SAFETY: `layout` is forwarded unmodified from our caller, who
+        // upholds `GlobalAlloc::alloc`'s contract (non-zero size).
+        unsafe { System.alloc(layout) }
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        // SAFETY: `ptr`/`layout` come from our caller's matching `alloc`,
+        // which delegated to `System`, so they denote a live System block.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > layout.size() {
+            let grow = (new_size - layout.size()) as u64;
+            let live = LIVE.fetch_add(grow, Ordering::Relaxed) + grow;
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        } else {
+            LIVE.fetch_sub((layout.size() - new_size) as u64, Ordering::Relaxed);
+        }
+        // SAFETY: same delegation argument as `dealloc`, and `new_size`
+        // is forwarded under the caller's `realloc` contract.
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static ALLOC: PeakAlloc = PeakAlloc;
+
+/// Peak heap bytes `f` adds on top of the live watermark at entry: the
+/// peak is rebased to the current live count, `f` runs, and the high-water
+/// delta comes back — so resident state built before the probe doesn't
+/// drown the per-call signal. Worker threads allocate against the same
+/// process-global counters, so pooled prefill arms are fully accounted.
+fn peak_during(f: &mut dyn FnMut()) -> u64 {
+    let base = LIVE.load(Ordering::Relaxed);
+    PEAK.store(base, Ordering::Relaxed);
+    f();
+    PEAK.load(Ordering::Relaxed).saturating_sub(base)
+}
 
 /// Mean ns/launch for `reps` `threads`-wide launches through each
 /// dispatcher. Every launch runs `threads` single-item chunks whose body is
@@ -214,5 +277,54 @@ fn main() {
         "decode_fused",
         &ftable.render(),
         Some(kv_rows_json(&exp::fused_decode_rows_json(&frows))),
+    );
+
+    // -- Mode 7: page-parallel fused decode + tiled prefill --------------
+    // (a) Threads × context grid: both arms run the fused walk, only the
+    // span-split policy differs — sequential one-span vs the page list cut
+    // across the pool with the exact integer merge. The acceptance regime
+    // is batch-of-1 deep context, where the sequential walk leaves every
+    // worker but one idle.
+    let thread_list: Vec<usize> = if fast {
+        vec![1, 2]
+    } else {
+        let t = default_threads().min(8);
+        let mut l = vec![1, 2, 4, 8];
+        l.retain(|&x| x <= t.max(2));
+        l
+    };
+    let pctxs: Vec<usize> = if fast {
+        vec![256]
+    } else if std::env::var("INTATTN_FULL").map(|v| v == "1").unwrap_or(false) {
+        vec![2048, 4096, 8192]
+    } else {
+        vec![2048, 4096]
+    };
+    let pgen = if fast { 8 } else { 64 };
+    let prows2 = exp::parallel_fused_sweep(&pctxs, exp::HEAD_DIM, pgen, &thread_list);
+    let ptable2 = exp::render_parallel_fused(&prows2);
+    ptable2.print();
+
+    // (b) Tiled vs materialized prefill: wall time per full-context block
+    // plus each arm's peak heap bytes from this binary's peak-tracking
+    // allocator — the materialized arm's m×L i32 score block dominates its
+    // peak, the tiled arm's working set stays O(tile).
+    let tctxs: Vec<usize> = if fast {
+        vec![256]
+    } else if std::env::var("INTATTN_FULL").map(|v| v == "1").unwrap_or(false) {
+        vec![1024, 4096, 8192]
+    } else {
+        vec![1024, 4096]
+    };
+    let trows = exp::tiled_prefill_sweep(&tctxs, exp::HEAD_DIM, threads, &mut peak_during);
+    let ttable = exp::render_tiled_prefill(&trows);
+    ttable.print();
+
+    let mut pjson = exp::parallel_fused_rows_json(&prows2);
+    pjson.extend(exp::tiled_prefill_rows_json(&trows));
+    let _ = write_report(
+        "decode_parallel_fused",
+        &format!("{}\n{}", ptable2.render(), ttable.render()),
+        Some(kv_rows_json(&pjson)),
     );
 }

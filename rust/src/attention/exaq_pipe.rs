@@ -17,8 +17,10 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_u8i8, gemm_u8i8_paged, par_fused_decode_exaq_grouped, par_gemm_i8, par_gemm_i8_grouped,
-    par_gemm_i8_paged, par_gemm_u8i8_grouped, FusedJobExaq, GroupI8, GroupU8I8,
+    decode_split_spans, gemm_u8i8, gemm_u8i8_paged, par_fused_decode_exaq_spans, par_gemm_i8,
+    par_gemm_i8_grouped, par_gemm_i8_paged, par_gemm_u8i8_grouped, par_tiled_prefill_exaq_pv,
+    par_tiled_prefill_exaq_stats, FusedJobExaq, GroupI8, GroupU8I8, TiledPrefillExaqJob,
+    TiledPrefillStatsJob, PREFILL_TILE_ROWS, ROW_BLOCK,
 };
 use crate::quant::quantize_i8;
 use crate::softmax::exaq::{ExaqConfig, ExaqSoftmax};
@@ -32,12 +34,13 @@ pub struct ExaqAttention {
     times: StageTimes,
     ops: OpCounts,
     /// Reusable decode-step scratch (see `IntAttention`): flat unfused
-    /// logit/prob/acc rows plus the fused path's f32 accumulators and QK
-    /// page tiles — allocation-free once capacities reach the working shape.
+    /// logit/prob/acc rows plus the fused path's bucketed i64 lane
+    /// accumulators (one `entries × d` block per span) and QK page tiles —
+    /// allocation-free once capacities reach the working shape.
     dec_logits: Vec<i32>,
     dec_probs: Vec<u8>,
     dec_acc: Vec<i32>,
-    dec_facc: Vec<f32>,
+    dec_facc: Vec<i64>,
     dec_tile: Vec<i32>,
 }
 
@@ -135,6 +138,118 @@ impl AttentionPipeline for ExaqAttention {
         let mask = Mask::CausalFrom(l - m);
         let alpha = qq.scale * st.k.scale / (d as f32).sqrt();
 
+        if self.cfg.tiled_prefill {
+            // Online-tiled EXAQ prefill: one pure-integer stats walk per row
+            // (running max + exact i128 Δ-moments), the running clip/LUT
+            // resolved once on the launching thread, then a gather + P̂V̂ walk
+            // that replays the materialized operator's f32 ops in order — no
+            // m×L score block is ever held.
+            let k_pages = st.k.data.page_list();
+            let v_pages = st.v.data.page_list();
+            let qdata = qq.data.as_slice();
+            let blocks: Vec<(usize, usize)> = (0..m)
+                .step_by(ROW_BLOCK)
+                .map(|r0| (r0, (r0 + ROW_BLOCK).min(m)))
+                .collect();
+            let mut maxes = vec![0i32; m];
+            let mut moments = vec![(0i128, 0i128, 0u64); m];
+            let mut tiles = vec![0i32; blocks.len() * PREFILL_TILE_ROWS];
+            {
+                let mut jobs: Vec<TiledPrefillStatsJob> = Vec::with_capacity(blocks.len());
+                let mut mx_rest: &mut [i32] = &mut maxes;
+                let mut mo_rest: &mut [(i128, i128, u64)] = &mut moments;
+                let mut tile_rest: &mut [i32] = &mut tiles;
+                for &(a, bb) in &blocks {
+                    let (mx, mxr) = mx_rest.split_at_mut(bb - a);
+                    mx_rest = mxr;
+                    let (mo, mor) = mo_rest.split_at_mut(bb - a);
+                    mo_rest = mor;
+                    let (tl, tr) = tile_rest.split_at_mut(PREFILL_TILE_ROWS);
+                    tile_rest = tr;
+                    jobs.push(TiledPrefillStatsJob {
+                        q: &qdata[a * d..bb * d],
+                        row0: a,
+                        mask,
+                        l,
+                        kp: &k_pages,
+                        maxes: mx,
+                        moments: mo,
+                        tile: tl,
+                    });
+                }
+                self.times.measure(Stage::QkGemm, || {
+                    par_tiled_prefill_exaq_stats(&mut jobs, pool);
+                });
+            }
+            self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+
+            // Fold the exact integer moments into `delta_stats` units in row
+            // order, merge into the running accumulator, clip from running σ.
+            let (lut, clip_int) = self.times.measure(Stage::Softmax, || {
+                let af = alpha as f64;
+                let (mut sum, mut sumsq, mut n) = (0f64, 0f64, 0u64);
+                for &(ds, dq, nn) in &moments {
+                    sum += ds as f64 * af;
+                    sumsq += dq as f64 * (af * af);
+                    n += nn;
+                }
+                st.exaq.merge(sum, sumsq, n);
+                let clip = self.softmax.clip_from_sigma(st.exaq.sigma());
+                let lut = self.softmax.lut_f32(clip);
+                let clip_int = (clip.max(1e-3) / alpha).max(1.0);
+                (lut, clip_int)
+            });
+            let valid = counts::valid_positions(m, l, mask);
+            self.ops.add(&counts::exaq_softmax(valid, m as u64));
+
+            let mut out_i32 = vec![0i32; m * d];
+            let nnz: u64;
+            {
+                let mut jobs: Vec<TiledPrefillExaqJob> = Vec::with_capacity(blocks.len());
+                let mut out_rest: &mut [i32] = &mut out_i32;
+                let mut tile_rest: &mut [i32] = &mut tiles;
+                for &(a, bb) in &blocks {
+                    let (orow, orest) = out_rest.split_at_mut((bb - a) * d);
+                    out_rest = orest;
+                    let (tl, tr) = tile_rest.split_at_mut(PREFILL_TILE_ROWS);
+                    tile_rest = tr;
+                    jobs.push(TiledPrefillExaqJob {
+                        q: &qdata[a * d..bb * d],
+                        row0: a,
+                        mask,
+                        l,
+                        kp: &k_pages,
+                        vp: &v_pages,
+                        maxes: &maxes[a..bb],
+                        lut: &lut,
+                        clip_int,
+                        out: orow,
+                        tile: tl,
+                        nnz: 0,
+                    });
+                }
+                self.times.measure(Stage::QkGemm, || {
+                    par_tiled_prefill_exaq_pv(&mut jobs, pool);
+                });
+                nnz = jobs.iter().map(|j| j.nnz).sum();
+            }
+            for _ in 0..2 {
+                self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+            }
+            self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+            let out_scale = st.v.scale / 255.0;
+            let o = self.times.measure(Stage::Output, || {
+                let mut o = MatF32::zeros(m, d);
+                for (ov, &av) in o.as_mut_slice().iter_mut().zip(&out_i32) {
+                    *ov = av as f32 * out_scale;
+                }
+                o
+            });
+            self.ops.add(&counts::output_rescale(m, d));
+            return o;
+        }
+
         let mut logits = MatI32::zeros(m, l);
         {
             let k_pages = st.k.data.page_list();
@@ -188,14 +303,16 @@ impl AttentionPipeline for ExaqAttention {
     /// running accumulator and clips from its own σ, so the result is
     /// bit-identical to single-lane [`AttentionPipeline::decode_step`].
     ///
-    /// With `cfg.fused_decode` set, each sequence's KV pages are walked
-    /// exactly once with an online float renormalization. The dynamic clip
-    /// then comes from the *pre-step* running σ (the fused walk cannot see
-    /// this step's Δ distribution before gathering) and the step's exact
-    /// Δ-moments are merged after the walk — stale by exactly one token
-    /// relative to the unfused oracle, which converges as L grows. The
-    /// fused output also skips the ×255 `P̂` requantization entirely
-    /// (`counts::exaq_softmax_fused`).
+    /// With `cfg.fused_decode` set, each sequence runs the two-phase fused
+    /// walk — `Q̂K̂ᵀ` tiles through the max fold, then a zipped re-walk
+    /// bucketing `V̂` lanes by LUT index into pure-i64 accumulators — split
+    /// into `cfg.decode_split` page spans merged exactly (byte-identical
+    /// for any split). The dynamic clip comes from the *pre-step* running σ
+    /// (the fused walk cannot see this step's Δ distribution before
+    /// gathering) and the step's exact Δ-moments are merged after the walk
+    /// — stale by exactly one token relative to the unfused oracle, which
+    /// converges as L grows. The fused output also skips the ×255 `P̂`
+    /// requantization entirely (`counts::exaq_softmax_fused`).
     fn decode_step_batch(
         &mut self,
         states: &mut [&mut KvState],
@@ -233,8 +350,11 @@ impl AttentionPipeline for ExaqAttention {
         let ls: Vec<usize> = states.iter().map(|st| st.len()).collect();
 
         if self.cfg.fused_decode {
-            // Fused flash-decode: pre-step clips/LUTs, one page-walk per
-            // sequence, exact Δ-moments merged afterwards.
+            // Fused flash-decode, span-parallel: pre-step clips/LUTs, each
+            // sequence's page list split into contiguous spans walked
+            // two-phase (max fold, then bucketed Ê·V̂ gather into pure-i64
+            // `entries × d` lane accumulators), merged exactly — the LUT
+            // floats touch the result once, in the final per-lane combine.
             let stats: Vec<(f64, f64, u64)>;
             let o;
             {
@@ -255,30 +375,49 @@ impl AttentionPipeline for ExaqAttention {
                 let luts: Vec<Vec<f32>> =
                     clips.iter().map(|&c| self.softmax.lut_f32(c)).collect();
 
-                let tile_rows: Vec<usize> = k_pages
+                let split = self.cfg.decode_split;
+                let spans: Vec<usize> = k_pages
                     .iter()
-                    .map(|kp| kp.iter().map(|p| p.len() / d).max().unwrap_or(0))
+                    .map(|kp| decode_split_spans(split, kp.len(), pool.size(), b))
                     .collect();
+                let total_spans: usize = spans.iter().sum();
+                let mut cuts: Vec<(usize, usize, usize)> = Vec::with_capacity(total_spans);
+                for (i, (&n, kp)) in spans.iter().zip(&k_pages).enumerate() {
+                    let (base, extra) = (kp.len() / n, kp.len() % n);
+                    let mut at = 0;
+                    for s in 0..n {
+                        let take = base + usize::from(s < extra);
+                        cuts.push((i, at, at + take));
+                        at += take;
+                    }
+                }
+                let tile_rows: Vec<usize> = cuts
+                    .iter()
+                    .map(|&(i, a, e)| {
+                        k_pages[i][a..e].iter().map(|p| p.len() / d).max().unwrap_or(0)
+                    })
+                    .collect();
+                let entries = self.softmax.entries();
                 let mut facc = std::mem::take(&mut self.dec_facc);
                 let mut tile = std::mem::take(&mut self.dec_tile);
                 facc.clear();
-                facc.resize(b * d, 0.0);
+                facc.resize(total_spans * entries * d, 0);
                 tile.clear();
                 tile.resize(tile_rows.iter().sum(), 0);
 
                 let softmax = &self.softmax;
-                let mut jobs: Vec<FusedJobExaq> = Vec::with_capacity(b);
-                let mut acc_rest: &mut [f32] = &mut facc;
+                let mut jobs: Vec<FusedJobExaq> = Vec::with_capacity(total_spans);
+                let mut acc_rest: &mut [i64] = &mut facc;
                 let mut tile_rest: &mut [i32] = &mut tile;
-                for (i, qq) in qqs.iter().enumerate() {
-                    let (acc, ar) = acc_rest.split_at_mut(d);
+                for (ci, &(i, a, e)) in cuts.iter().enumerate() {
+                    let (acc, ar) = acc_rest.split_at_mut(entries * d);
                     acc_rest = ar;
-                    let (tl, tr) = tile_rest.split_at_mut(tile_rows[i]);
+                    let (tl, tr) = tile_rest.split_at_mut(tile_rows[ci]);
                     tile_rest = tr;
                     jobs.push(FusedJobExaq {
-                        q: qq.data.as_slice(),
-                        kp: &k_pages[i],
-                        vp: &v_pages[i],
+                        q: qqs[i].data.as_slice(),
+                        kp: &k_pages[i][a..e],
+                        vp: &v_pages[i][a..e],
                         row: softmax.online_begin(alphas[i], clips[i]),
                         lut: &luts[i],
                         acc,
@@ -287,31 +426,45 @@ impl AttentionPipeline for ExaqAttention {
                 }
 
                 self.times.measure(Stage::QkGemm, || {
-                    par_fused_decode_exaq_grouped(&mut jobs, pool);
+                    par_fused_decode_exaq_spans(&mut jobs, &spans, pool);
                 });
-                for (job, &l) in jobs.iter().zip(&ls) {
+                // Each sequence's merged result lives in its first span job;
+                // the K̂ pages are walked twice (max + gather), so two QK
+                // walks are billed.
+                let mut firsts: Vec<usize> = Vec::with_capacity(b);
+                let mut at = 0;
+                for &n in &spans {
+                    firsts.push(at);
+                    at += n;
+                }
+                for (&f, &l) in firsts.iter().zip(&ls) {
+                    self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
                     self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
                     self.ops.add(&counts::exaq_softmax_fused(l as u64, 1));
-                    self.ops.add(&counts::pv_gemm(
-                        job.row.nnz() + job.row.rescales(),
-                        l,
-                        d,
-                        1,
-                        4,
-                    ));
+                    self.ops.add(&counts::pv_gemm(jobs[f].row.nnz(), l, d, 1, 4));
                 }
 
-                // Final `acc/Σe · s_V` per lane — no ×255 requantize, no
-                // /255 restore: the probabilities never left float.
+                // Final per-lane combine `Σ_t lut[t]·acc[t] / Σe · s_V` — no
+                // ×255 requantize, no /255 restore: the LUT floats meet the
+                // integer lane sums only here.
                 o = self.times.measure(Stage::Output, || {
                     let mut out = MatF32::zeros(b, d);
-                    for ((job, s), orow) in
-                        jobs.iter().zip(&ints).zip(out.as_mut_slice().chunks_mut(d))
+                    for ((&f, s), orow) in
+                        firsts.iter().zip(&ints).zip(out.as_mut_slice().chunks_mut(d))
                     {
-                        let inv = 1.0 / job.row.fsum();
+                        let job = &jobs[f];
+                        let inv = 1.0 / job.row.fsum(job.lut);
                         let out_scale = s.v.scale;
-                        for (ov, &av) in orow.iter_mut().zip(job.acc.iter()) {
-                            *ov = av * inv * out_scale;
+                        let zb = job.row.zero_bucket();
+                        let cnts = job.row.counts();
+                        for (lane, ov) in orow.iter_mut().enumerate() {
+                            let mut x = 0f32;
+                            for t in 0..zb {
+                                if cnts[t] != 0 {
+                                    x += job.lut[t] * (job.acc[t * d + lane] as f32);
+                                }
+                            }
+                            *ov = x * inv * out_scale;
                         }
                     }
                     out
@@ -319,10 +472,10 @@ impl AttentionPipeline for ExaqAttention {
                 for _ in 0..b {
                     self.ops.add(&counts::output_rescale(1, d));
                 }
-                stats = jobs
+                stats = firsts
                     .iter()
                     .zip(&alphas)
-                    .map(|(job, &a)| job.row.stats(a))
+                    .map(|(&f, &a)| jobs[f].row.stats(a))
                     .collect();
                 drop(jobs);
                 self.dec_facc = facc;

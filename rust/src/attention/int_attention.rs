@@ -26,13 +26,14 @@ use crate::attention::{
 };
 use crate::energy::OpCounts;
 use crate::gemm::{
-    gemm_u8i8, gemm_u8i8_paged, par_fused_decode_i8_grouped, par_gemm_i8, par_gemm_i8_grouped,
-    par_gemm_i8_paged, par_gemm_u8i8_grouped, FusedJobI8, GroupI8, GroupU8I8,
+    decode_split_spans, gemm_u8i8, gemm_u8i8_paged, par_fused_decode_i8_spans, par_gemm_i8,
+    par_gemm_i8_grouped, par_gemm_i8_paged, par_gemm_u8i8_grouped, par_tiled_prefill_i8,
+    FusedJobI8, GroupI8, GroupU8I8, TiledPrefillJobI8, PREFILL_TILE_ROWS, ROW_BLOCK,
 };
 use crate::quant::{
     quantize_grouped_i8, quantize_i8, GroupQuantizedI8, GroupScheme, QuantizedI8,
 };
-use crate::softmax::index_softmax::{IndexSoftmax, Mask};
+use crate::softmax::index_softmax::{IndexSoftmax, Mask, MulShiftDiv};
 use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
 use crate::util::timer::{Stage, StageTimes};
 
@@ -102,6 +103,37 @@ impl QQuant {
         match self {
             QQuant::PerTensor(t) => t.scale * k_scale / sqrt_d,
             QQuant::Grouped(g) => g.scales[0] * k_scale / sqrt_d,
+        }
+    }
+
+    /// Per-row `(c_int, idx_div)` IndexSoftmax parameters for the tiled
+    /// prefill walk — row `r`'s group under the configured scheme, so the
+    /// tiled path derives exactly the dividers [`Self::softmax`] would.
+    fn row_params(
+        &self,
+        softmax: &IndexSoftmax,
+        k_scale: f32,
+        sqrt_d: f32,
+        rows: usize,
+    ) -> Vec<(u64, MulShiftDiv)> {
+        let of = |alpha: f32| {
+            let ci = softmax.c_int(alpha) as u64;
+            (ci, MulShiftDiv::new(ci))
+        };
+        match self {
+            QQuant::PerTensor(t) => vec![of(t.scale * k_scale / sqrt_d); rows],
+            QQuant::Grouped(g) => {
+                let group: Vec<(u64, MulShiftDiv)> =
+                    g.scales.iter().map(|&s| of(s * k_scale / sqrt_d)).collect();
+                let scheme = g.scheme;
+                (0..rows)
+                    .map(|r| match scheme {
+                        GroupScheme::PerTensor => group[0],
+                        GroupScheme::PerRow => group[r],
+                        GroupScheme::PerRowBlock(bsz) => group[r / bsz],
+                    })
+                    .collect()
+            }
         }
     }
 }
@@ -239,10 +271,77 @@ impl AttentionPipeline for IntAttention {
         let st = state.as_int8();
         let l = st.len();
         let mask = Mask::CausalFrom(l - m);
+        let k_pages = st.k.data.page_list();
+
+        if self.cfg.tiled_prefill {
+            // Online-tiled prefill: per query row, three bounded-tile passes
+            // over the K̂/V̂ page walk (max, ΣÊ, normalize+P̂V̂) — no m×L
+            // score block at any context length, bit-identical output to
+            // the materialized path below (see `crate::gemm` module docs).
+            // Row blocks fan out across the pool.
+            let v_pages = st.v.data.page_list();
+            let params = qq.row_params(&self.softmax, st.k.scale, sqrt_d, m);
+            let n1 = self.softmax.lut.max_index() as u64;
+            let table = &self.softmax.lut.u8_table;
+            let qdata = qq.data().as_slice();
+            let blocks: Vec<(usize, usize)> = (0..m)
+                .step_by(ROW_BLOCK)
+                .map(|r0| (r0, (r0 + ROW_BLOCK).min(m)))
+                .collect();
+            let mut out_i32 = vec![0i32; m * d];
+            let mut tiles = vec![0i32; blocks.len() * PREFILL_TILE_ROWS];
+            let mut jobs: Vec<TiledPrefillJobI8> = Vec::with_capacity(blocks.len());
+            let mut out_rest: &mut [i32] = &mut out_i32;
+            let mut tile_rest: &mut [i32] = &mut tiles;
+            for &(a, bb) in &blocks {
+                let (orow, orest) = out_rest.split_at_mut((bb - a) * d);
+                out_rest = orest;
+                let (tl, tr) = tile_rest.split_at_mut(PREFILL_TILE_ROWS);
+                tile_rest = tr;
+                jobs.push(TiledPrefillJobI8 {
+                    q: &qdata[a * d..bb * d],
+                    row0: a,
+                    mask,
+                    l,
+                    kp: &k_pages,
+                    vp: &v_pages,
+                    params: &params[a..bb],
+                    n1,
+                    out: orow,
+                    tile: tl,
+                    nnz: 0,
+                });
+            }
+            // One launch covers QK, softmax and P̂V̂; booked under QkGemm
+            // (the dominating stage) like the fused decode walk. Op counts
+            // still split per operator: the row is recomputed three times,
+            // so three QK walks are billed.
+            self.times.measure(Stage::QkGemm, || {
+                par_tiled_prefill_i8(&mut jobs, table, pool);
+            });
+            let nnz: u64 = jobs.iter().map(|j| j.nnz).sum();
+            drop(jobs);
+            for _ in 0..3 {
+                self.ops.add(&counts::qk_gemm(m, l, d, 1, 4));
+            }
+            let valid = counts::valid_positions(m, l, mask);
+            self.ops.add(&counts::index_softmax(valid, m as u64));
+            self.ops.add(&counts::pv_gemm(nnz, l, d, 1, 4));
+
+            let out_scale = st.v.scale / 255.0;
+            let o = self.times.measure(Stage::Output, || {
+                let mut o = MatF32::zeros(m, d);
+                for (ov, &av) in o.as_mut_slice().iter_mut().zip(&out_i32) {
+                    *ov = av as f32 * out_scale;
+                }
+                o
+            });
+            self.ops.add(&counts::output_rescale(m, d));
+            return o;
+        }
 
         // (2) Q̂·K̂ᵀ against the resident INT8 keys — walking the K̂ page
         // list in place (an O(pages) pointer descriptor, never a copy).
-        let k_pages = st.k.data.page_list();
         let mut logits = MatI32::zeros(m, l);
         self.times.measure(Stage::QkGemm, || {
             par_gemm_i8_paged(qq.data().as_slice(), &k_pages, logits.as_mut_slice(), m, l, d, pool);
@@ -294,11 +393,13 @@ impl AttentionPipeline for IntAttention {
     /// per-sequence — only the launches are grouped, the kernels are walked
     /// sequentially per sequence, and integer arithmetic is exact.
     ///
-    /// With `cfg.fused_decode` set (the default) each sequence's KV pages
-    /// are walked exactly once: per-page `Q̂K̂ᵀ` tile → online IndexSoftmax
-    /// renormalization → `Ê·V̂` accumulation, never materializing an
-    /// L-length score row (see the module docs of `crate::attention` for
-    /// the fidelity contract against the unfused oracle).
+    /// With `cfg.fused_decode` set (the default) each sequence runs the
+    /// two-phase fused walk — `Q̂K̂ᵀ` tiles through the max fold, then a
+    /// zipped re-walk gathering `Ê·V̂` against the pinned max — never
+    /// materializing an L-length score row, and `cfg.decode_split` page
+    /// spans per sequence fan the walk itself across the pool with exact
+    /// integer merges (see the module docs of `crate::attention` for the
+    /// fidelity contract against the unfused oracle).
     fn decode_step_batch(
         &mut self,
         states: &mut [&mut KvState],
@@ -341,52 +442,83 @@ impl AttentionPipeline for IntAttention {
         let v_pages: Vec<Vec<&[i8]>> = ints.iter().map(|s| s.v.data.page_list()).collect();
 
         if self.cfg.fused_decode {
-            // Fused flash-decode: one K̂/V̂ page-walk per sequence. Working
-            // set per lane is the i64 accumulator (O(d)) plus a QK tile the
-            // size of the widest resident page — no L-length row anywhere.
-            let tile_rows: Vec<usize> = k_pages
+            // Fused flash-decode, span-parallel: each sequence's resident
+            // page list splits into `decode_split_spans` contiguous page
+            // spans (subslices of the page list — no copies), each span a
+            // job with its own online row + O(d) accumulator, merged
+            // exactly after the two-phase walk. Working set per span is the
+            // i64 accumulator plus a QK tile the size of its widest page —
+            // no L-length row anywhere.
+            let split = self.cfg.decode_split;
+            let spans: Vec<usize> = k_pages
                 .iter()
-                .map(|kp| kp.iter().map(|p| p.len() / d).max().unwrap_or(0))
+                .map(|kp| decode_split_spans(split, kp.len(), pool.size(), b))
+                .collect();
+            let total_spans: usize = spans.iter().sum();
+            // (sequence, first page, one-past-last page) per span, balanced
+            // by page count.
+            let mut cuts: Vec<(usize, usize, usize)> = Vec::with_capacity(total_spans);
+            for (i, (&n, kp)) in spans.iter().zip(&k_pages).enumerate() {
+                let (base, extra) = (kp.len() / n, kp.len() % n);
+                let mut at = 0;
+                for s in 0..n {
+                    let take = base + usize::from(s < extra);
+                    cuts.push((i, at, at + take));
+                    at += take;
+                }
+            }
+            let tile_rows: Vec<usize> = cuts
+                .iter()
+                .map(|&(i, a, e)| k_pages[i][a..e].iter().map(|p| p.len() / d).max().unwrap_or(0))
                 .collect();
             let tile_total: usize = tile_rows.iter().sum();
             let mut facc = std::mem::take(&mut self.dec_facc);
             let mut tile = std::mem::take(&mut self.dec_tile);
             facc.clear();
-            facc.resize(b * d, 0);
+            facc.resize(total_spans * d, 0);
             tile.clear();
             tile.resize(tile_total, 0);
 
             let softmax = &self.softmax;
-            let mut jobs: Vec<FusedJobI8> = Vec::with_capacity(b);
+            let mut jobs: Vec<FusedJobI8> = Vec::with_capacity(total_spans);
             let mut acc_rest: &mut [i64] = &mut facc;
             let mut tile_rest: &mut [i32] = &mut tile;
-            for (i, qq) in qqs.iter().enumerate() {
+            for (ci, &(i, a, e)) in cuts.iter().enumerate() {
                 let (acc, ar) = acc_rest.split_at_mut(d);
                 acc_rest = ar;
-                let (tl, tr) = tile_rest.split_at_mut(tile_rows[i]);
+                let (tl, tr) = tile_rest.split_at_mut(tile_rows[ci]);
                 tile_rest = tr;
                 jobs.push(FusedJobI8 {
-                    q: qq.data().as_slice(),
-                    kp: &k_pages[i],
-                    vp: &v_pages[i],
-                    row: softmax.online_begin(qq.decode_alpha(ints[i].k.scale, sqrt_d)),
+                    q: qqs[i].data().as_slice(),
+                    kp: &k_pages[i][a..e],
+                    vp: &v_pages[i][a..e],
+                    row: softmax.online_begin(qqs[i].decode_alpha(ints[i].k.scale, sqrt_d)),
                     acc,
                     tile: tl,
                 });
             }
 
             // The whole walk (QK tiles, online softmax, Ê·V̂ accumulation)
-            // is one launch; it is booked under QkGemm, the stage that
-            // dominates it. The op counters still split per operator.
+            // is one schedule of launches; it is booked under QkGemm, the
+            // stage that dominates it. The op counters still split per
+            // operator — the K̂ pages are walked twice (max phase + gather
+            // phase), so two QK walks are billed.
             let table = &softmax.lut.u8_table;
             self.times.measure(Stage::QkGemm, || {
-                par_fused_decode_i8_grouped(&mut jobs, table, pool);
+                par_fused_decode_i8_spans(&mut jobs, &spans, table, pool);
             });
-            for (job, &l) in jobs.iter().zip(&ls) {
+            // Each sequence's merged result lives in its first span job.
+            let mut firsts: Vec<usize> = Vec::with_capacity(b);
+            let mut at = 0;
+            for &n in &spans {
+                firsts.push(at);
+                at += n;
+            }
+            for (&f, &l) in firsts.iter().zip(&ls) {
+                self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
                 self.ops.add(&counts::qk_gemm(1, l, d, 1, 4));
                 self.ops.add(&counts::index_softmax(l as u64, 1));
-                self.ops
-                    .add(&counts::pv_gemm(job.row.nnz() + job.row.rescales(), l, d, 1, 4));
+                self.ops.add(&counts::pv_gemm(jobs[f].row.nnz(), l, d, 1, 4));
             }
 
             // Final per-lane normalize `round(255·acc/ΣÊ)` and the single
@@ -397,9 +529,10 @@ impl AttentionPipeline for IntAttention {
             //  bills — everything upstream of this closure is integer.)
             let o = self.times.measure(Stage::Output, || {
                 let mut out = MatF32::zeros(b, d);
-                for ((job, s), orow) in
-                    jobs.iter().zip(&ints).zip(out.as_mut_slice().chunks_mut(d))
+                for ((&f, s), orow) in
+                    firsts.iter().zip(&ints).zip(out.as_mut_slice().chunks_mut(d))
                 {
+                    let job = &jobs[f];
                     let nd = job.row.norm_div();
                     let out_scale = s.v.scale / 255.0;
                     for (ov, &av) in orow.iter_mut().zip(job.acc.iter()) {

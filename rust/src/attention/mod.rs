@@ -37,41 +37,67 @@
 //! `1×L` score row, IndexSoftmax normalizes it, and the paged `P̂V̂` reads it
 //! back. With [`AttentionConfig::fused_decode`] on (the default; env
 //! `INTATTN_FUSED_DECODE=0` turns it off, snapshotted once per process like
-//! the page size), the IntAttention and EXAQ pipelines instead run
-//! [`crate::gemm::fused_decode_i8`] / [`crate::gemm::fused_decode_exaq`]:
-//! **one** zipped K̂/V̂ page walk per sequence — per page a `1×rows` logit
-//! tile, each logit streamed through the online softmax row
+//! the page size), the IntAttention and EXAQ pipelines instead run the
+//! two-phase online walk ([`crate::gemm::fused_decode_i8`] /
+//! [`crate::gemm::fused_decode_exaq`]): phase 1 streams the `Q̂K̂ᵀ` logit
+//! tiles through a running-max fold
 //! ([`crate::softmax::index_softmax::OnlineIndexRow`] /
-//! [`crate::softmax::exaq::ExaqOnlineRow`]) straight onto a single `d`-lane
-//! accumulator, rescaling the accumulated partial `P̂V̂` by the LUT carry
-//! factor whenever the running max moves. No `L`-length score row exists at
-//! any point: the working set is O(d) + one page-sized tile. Batched rounds
-//! dispatch the per-sequence walks as grouped jobs on the pool
-//! ([`crate::gemm::par_fused_decode_i8_grouped`]); a single row's walk is
-//! sequential (the online renorm is a loop-carried dependence), so the
-//! running max advances per *element* and the fused output is byte-identical
-//! at every page size, pool width, and batch split.
+//! [`crate::softmax::exaq::ExaqOnlineRow`]); phase 2 re-walks the zipped
+//! K̂/V̂ pages with the max pinned, gathering each `Ê` against the *final*
+//! max straight onto an O(d) integer accumulator (K̂ is read twice — the
+//! classic flash recompute trade for never materializing an `L`-length
+//! row). Every partial quantity — max, `ΣÊ`, nnz, accumulator lanes — is
+//! an associative integer fold, so the page list also splits *within* a
+//! sequence: [`AttentionConfig::decode_split`] (env `INTATTN_DECODE_SPLIT`,
+//! auto-sized from the pool by default) cuts each sequence's page list into
+//! that many contiguous spans, the span jobs fan out across the pool
+//! ([`crate::gemm::par_fused_decode_i8_spans`] /
+//! [`crate::gemm::par_fused_decode_exaq_spans`]), span maxes merge and
+//! rebroadcast between the two phases, and the partial triples merge by
+//! plain integer adds afterwards — byte-identical to the sequential walk at
+//! every page size, pool width, batch split **and** span split, so
+//! batch-of-1 deep-context decode finally scales with threads.
 //!
-//! **Fidelity contract vs the unfused oracle.** The unfused path rounds each
-//! probability to UINT8 (`P̂ = round(255·Ê/ΣÊ)`) *before* the `P̂V̂` sum; the
-//! fused path accumulates un-normalized `Ê·V̂` and applies one final
-//! `round(255·acc/ΣÊ)` per output lane, composing LUT carry factors across
-//! max moves instead of re-gathering against the final max. The two paths
-//! are therefore **bit-exact only where that reordering is degenerate** — a
-//! single surviving entry (e.g. the first decode token: `acc = 255·V̂`,
+//! **Fidelity contract vs the unfused oracle.** The unfused path rounds
+//! each probability to UINT8 (`P̂ = round(255·Ê/ΣÊ)`) *before* the `P̂V̂`
+//! sum; the fused path accumulates un-normalized `Ê·V̂` (the gathered `Ê`
+//! are identical — both sides index the LUT against the same final max) and
+//! applies one final `round(255·acc/ΣÊ)` per output lane. The two paths are
+//! therefore **bit-exact only where that rounding reorder is degenerate** —
+//! a single surviving entry (e.g. the first decode token: `acc = 255·V̂`,
 //! `ΣÊ = 255`) — and elsewhere agree to a documented ε: per-step cosine
 //! ≥ 0.999 against the unfused oracle and per-lane error bounded by a few
 //! output quanta (asserted with explicit bounds in
 //! `tests/decode_equivalence.rs` and `tests/fused_decode.rs`). EXAQ's fused
-//! form additionally skips the ×255 P̂ requantization entirely (float
-//! `acc/Σe` normalization — one fewer dtype conversion per element, see
-//! [`counts::exaq_softmax_fused`]) and derives its dynamic clip from the
-//! *pre-step* running σ, merging the step's exact Δ-moments after the walk
-//! (the unfused path folds the new row's stats in before clipping — a
-//! stale-by-one-token clip difference that the equivalence tests bound).
-//! Quant-Only keeps the unfused three-pass dataflow: its purpose is to
-//! measure the FP32-softmax conversion detour, which a fused integer walk
-//! would define away.
+//! form additionally skips the ×255 P̂ requantization entirely (per-bucket
+//! integer `V̂` sums combined through the f32 LUT once at the end — one
+//! fewer dtype conversion per element, see [`counts::exaq_softmax_fused`])
+//! and derives its dynamic clip from the *pre-step* running σ, merging the
+//! step's exact Δ-moments after the walk (the unfused path folds the new
+//! row's stats in before clipping — a stale-by-one-token clip difference
+//! that the equivalence tests bound). Quant-Only keeps the unfused
+//! three-pass dataflow: its purpose is to measure the FP32-softmax
+//! conversion detour, which a fused integer walk would define away.
+//!
+//! ## Online-tiled prefill (integer pipelines)
+//!
+//! The same flash structure is the prefill default:
+//! [`AttentionConfig::tiled_prefill`] (env `INTATTN_TILED_PREFILL`, on
+//! unless disabled) routes IntAttention and EXAQ prefill through
+//! [`crate::gemm::tiled_prefill_i8`] /
+//! [`crate::gemm::tiled_prefill_exaq_stats`] +
+//! [`crate::gemm::tiled_prefill_exaq_pv`]: per query row, the KV pages are
+//! walked in bounded tiles (max pass, `ΣÊ`/stats pass, normalize-and-`P̂V̂`
+//! pass), so no `m×L` score block is ever allocated — the working set is
+//! O(tile + d) per row at any context length. Because every pass gathers
+//! against the final row max with exactly the materialized path's integer
+//! ops in the same order, tiled IndexSoftmax prefill is **bit-for-bit**
+//! equal to the unfused oracle (EXAQ agrees to cosine ≥ 0.999: its
+//! block-global dynamic clip is re-derived from exact integer Δ-moments,
+//! which can round the f64 clip differently). Query rows fan out across
+//! the pool in [`crate::gemm::ROW_BLOCK`]-row jobs. The materialized path
+//! stays as the oracle (`INTATTN_TILED_PREFILL=0`), and Quant-Only keeps it
+//! unconditionally.
 
 pub mod counts;
 pub mod state;
@@ -113,6 +139,17 @@ pub struct AttentionConfig {
     /// set to `0`/`false`/`off`); tests build both paths explicitly with
     /// [`Self::with_fused_decode`].
     pub fused_decode: bool,
+    /// Page spans per sequence in the fused decode walk (`0` = auto-size
+    /// from the pool and batch; see [`crate::gemm::decode_split_spans`]).
+    /// Defaults to the process-wide [`decode_split_default`] snapshot
+    /// (`INTATTN_DECODE_SPLIT`).
+    pub decode_split: usize,
+    /// Use the online-tiled prefill path in the integer pipelines (see the
+    /// module docs). Defaults to the process-wide [`tiled_prefill_default`]
+    /// snapshot (`INTATTN_TILED_PREFILL`, on unless set to
+    /// `0`/`false`/`off`); tests build both paths explicitly with
+    /// [`Self::with_tiled_prefill`].
+    pub tiled_prefill: bool,
 }
 
 /// Process-wide fused-decode default: `INTATTN_FUSED_DECODE` snapshotted
@@ -121,6 +158,20 @@ pub struct AttentionConfig {
 /// [`crate::util::env::fused_decode_from`]).
 pub fn fused_decode_default() -> bool {
     crate::util::env::knobs().fused_decode
+}
+
+/// Process-wide decode span-split default: `INTATTN_DECODE_SPLIT`
+/// snapshotted once (`0` = auto; parse policy:
+/// [`crate::util::env::decode_split_from`]).
+pub fn decode_split_default() -> usize {
+    crate::util::env::knobs().decode_split
+}
+
+/// Process-wide tiled-prefill default: `INTATTN_TILED_PREFILL` snapshotted
+/// once, on unless explicitly disabled (parse policy:
+/// [`crate::util::env::tiled_prefill_from`]).
+pub fn tiled_prefill_default() -> bool {
+    crate::util::env::knobs().tiled_prefill
 }
 
 impl AttentionConfig {
@@ -132,6 +183,8 @@ impl AttentionConfig {
             pool: ParallelPool::sized(1),
             isx: IndexSoftmaxConfig::default(),
             fused_decode: fused_decode_default(),
+            decode_split: decode_split_default(),
+            tiled_prefill: tiled_prefill_default(),
         }
     }
 
@@ -171,6 +224,22 @@ impl AttentionConfig {
     /// both sides of the comparison this way.
     pub fn with_fused_decode(mut self, on: bool) -> Self {
         self.fused_decode = on;
+        self
+    }
+
+    /// Force a fused-decode span-split width (`0` = auto by pool/batch;
+    /// `1` = the sequential one-span walk). The page-parallel equivalence
+    /// tests and the `decode_parallel_fused` bench sweep this.
+    pub fn with_decode_split(mut self, split: usize) -> Self {
+        self.decode_split = split;
+        self
+    }
+
+    /// Force the tiled (or materialized) prefill path regardless of the
+    /// process default — the prefill equivalence and allocation tests build
+    /// both sides this way.
+    pub fn with_tiled_prefill(mut self, on: bool) -> Self {
+        self.tiled_prefill = on;
         self
     }
 
@@ -491,6 +560,19 @@ mod tests {
         let cfg = AttentionConfig::new(8, 4).with_fused_decode(false);
         assert!(!cfg.fused_decode);
         assert!(cfg.with_fused_decode(true).fused_decode);
+    }
+
+    #[test]
+    fn decode_split_and_tiled_prefill_policy() {
+        // Snapshot wiring only — parse policies live in `crate::util::env`.
+        assert_eq!(decode_split_default(), crate::util::env::knobs().decode_split);
+        assert_eq!(tiled_prefill_default(), crate::util::env::knobs().tiled_prefill);
+        let cfg = AttentionConfig::new(8, 4).with_decode_split(4);
+        assert_eq!(cfg.decode_split, 4);
+        assert_eq!(cfg.with_decode_split(0).decode_split, 0, "0 = auto");
+        let cfg = AttentionConfig::new(8, 4).with_tiled_prefill(false);
+        assert!(!cfg.tiled_prefill);
+        assert!(cfg.with_tiled_prefill(true).tiled_prefill);
     }
 
     #[test]

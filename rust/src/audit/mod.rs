@@ -187,7 +187,8 @@ mod tests {
             let (v, rows, m, d) = (1000u64, 10u64, 4usize, 64usize);
             match r.name.as_str() {
                 // IndexSoftmax proper: zero conversions, zero float exps.
-                "index-softmax-forward" | "index-softmax-row" | "index-softmax-online-push"
+                "index-softmax-forward" | "index-softmax-row" | "index-softmax-observe-max"
+                | "index-softmax-gather" | "index-softmax-merge"
                 | "index-softmax-rescale-lane" | "int-decode-softmax" => {
                     let c = counts::index_softmax(v, rows);
                     assert_eq!(c.dtype_conv, 0, "{}", r.name);
@@ -199,16 +200,24 @@ mod tests {
                     assert_eq!(c.dtype_conv, 0);
                     assert!(c.int8_mac > 0 && c.fp32_mac == 0);
                 }
-                // P̂·V̂ aggregation kernels (u8/i8 and the fused i8 walk).
-                "gemm-u8i8-paged" | "gemm-i8-notrans-paged" | "gemm-fused-decode-i8" => {
+                // P̂·V̂ aggregation kernels (u8/i8, the fused i8 walk, and
+                // the tiled-prefill i8 walk).
+                "gemm-u8i8-paged" | "gemm-i8-notrans-paged" | "gemm-fused-decode-i8"
+                | "gemm-tiled-prefill-i8" => {
                     let c = counts::pv_gemm(v, v as usize, d, 1, 4);
                     assert_eq!(c.dtype_conv, 0, "{}", r.name);
                     assert!(c.int8_mac > 0 && c.fp32_mac == 0, "{}", r.name);
                 }
-                // EXAQ fused walk: float normalize stays (allowlisted),
-                // but the per-element ×255 requantize conversion is gone.
+                // EXAQ fused walk: now pure integer in the kernel (bucketed
+                // i64 lane sums); the per-element ×255 requantize is gone.
                 "gemm-fused-decode-exaq" => {
                     assert_eq!(counts::exaq_softmax_fused(v, rows).dtype_conv, 0);
+                }
+                // EXAQ tiled prefill: the stats walk is pure integer; the
+                // gather+P̂V̂ walk replays the materialized operator, whose
+                // ×255 requantize conversions the counts model bills.
+                "gemm-tiled-prefill-exaq" => {
+                    assert_eq!(counts::exaq_softmax(v, rows).dtype_conv, v);
                 }
                 // Boundary regions: conversions exist and are counted.
                 "requantize-probs-i8" => {
@@ -229,7 +238,9 @@ mod tests {
         for required in [
             "index-softmax-forward",
             "index-softmax-row",
-            "index-softmax-online-push",
+            "index-softmax-observe-max",
+            "index-softmax-gather",
+            "index-softmax-merge",
             "index-softmax-rescale-lane",
             "int-decode-softmax",
             "int-decode-output-rescale",
@@ -238,6 +249,8 @@ mod tests {
             "gemm-i8-notrans-paged",
             "gemm-fused-decode-i8",
             "gemm-fused-decode-exaq",
+            "gemm-tiled-prefill-i8",
+            "gemm-tiled-prefill-exaq",
             "requantize-probs-i8",
         ] {
             assert!(seen.contains(required), "required int-only fence `{required}` is missing");

@@ -1,0 +1,156 @@
+//! `benchdiff` — compare two bench report JSON files metric by metric.
+//!
+//! ```text
+//! cargo run --bin benchdiff -- old.json new.json
+//! cargo run --bin benchdiff -- --threshold 5 --fail-on-regression old.json new.json
+//! ```
+//!
+//! Both inputs are bench reports as written by `harness::report` — either
+//! the `[{"label": ..., "value": ...}, ...]` row form or any JSON tree
+//! whose numeric leaves become dotted-path metrics. Output is one line per
+//! metric with the old/new values and the relative delta; metrics whose
+//! |Δ%| meets the threshold (default 10%) are flagged, and labels present
+//! on only one side are reported as added/removed. With
+//! `--fail-on-regression` the process exits 1 when any metric is flagged
+//! (added/removed labels alone do not fail — wall-time metric sets grow
+//! with new bench modes). CI's bench-smoke job runs this as an
+//! informational step against the previous run's artifacts.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use intattention::util::json::Json;
+
+/// Flatten a report into `label -> value`. The `kv_rows_json` row form
+/// keeps its labels verbatim; anything else flattens numeric leaves into
+/// `a.b[2].c` paths.
+fn flatten(j: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Num(n) => {
+            out.insert(prefix.to_string(), *n);
+        }
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                // A {label, value} row keeps its own label as the metric
+                // name (prefixed when nested under a named section).
+                if let (Some(label), Some(value)) =
+                    (item.get("label").and_then(Json::as_str), item.get("value"))
+                {
+                    let key = if prefix.is_empty() {
+                        label.to_string()
+                    } else {
+                        format!("{prefix}.{label}")
+                    };
+                    flatten(value, &key, out);
+                } else {
+                    flatten(item, &format!("{prefix}[{i}]"), out);
+                }
+            }
+        }
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let key = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(v, &key, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn load(path: &str) -> Result<BTreeMap<String, f64>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let mut out = BTreeMap::new();
+    flatten(&json, "", &mut out);
+    Ok(out)
+}
+
+struct Args {
+    old: String,
+    new: String,
+    threshold: f64,
+    fail_on_regression: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut threshold = 10.0;
+    let mut fail_on_regression = false;
+    let mut paths = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--threshold" => {
+                let v = it.next().ok_or("--threshold needs a value")?;
+                threshold = v.parse::<f64>().map_err(|_| format!("bad threshold '{v}'"))?;
+                if threshold.is_nan() || threshold < 0.0 {
+                    return Err(format!("bad threshold '{v}'"));
+                }
+            }
+            "--fail-on-regression" => fail_on_regression = true,
+            _ if a.starts_with("--") => return Err(format!("unknown flag '{a}'")),
+            _ => paths.push(a),
+        }
+    }
+    match <[String; 2]>::try_from(paths) {
+        Ok([old, new]) => Ok(Args { old, new, threshold, fail_on_regression }),
+        Err(_) => Err("expected exactly two report files".into()),
+    }
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("benchdiff: {e}");
+            eprintln!(
+                "usage: benchdiff [--threshold PCT] [--fail-on-regression] old.json new.json"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    let (old, new) = match (load(&args.old), load(&args.new)) {
+        (Ok(o), Ok(n)) => (o, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("benchdiff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut flagged = 0usize;
+    let mut compared = 0usize;
+    for (label, &ov) in &old {
+        let Some(&nv) = new.get(label) else { continue };
+        compared += 1;
+        let pct = if ov != 0.0 {
+            (nv - ov) / ov.abs() * 100.0
+        } else if nv == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+        let flag = pct.abs() >= args.threshold;
+        if flag {
+            flagged += 1;
+        }
+        println!(
+            "{} {label}: {ov} -> {nv} ({pct:+.2}%)",
+            if flag { "FLAG" } else { "  ok" }
+        );
+    }
+    for label in old.keys().filter(|l| !new.contains_key(*l)) {
+        println!(" del {label}: only in {}", args.old);
+    }
+    for label in new.keys().filter(|l| !old.contains_key(*l)) {
+        println!(" add {label}: only in {}", args.new);
+    }
+    println!(
+        "benchdiff: {compared} metric(s) compared, {flagged} beyond {}%, {} removed, {} added",
+        args.threshold,
+        old.keys().filter(|l| !new.contains_key(*l)).count(),
+        new.keys().filter(|l| !old.contains_key(*l)).count(),
+    );
+    if args.fail_on_regression && flagged > 0 {
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}

@@ -65,9 +65,43 @@
 //! assignment. Worker count and claim order never affect results: every
 //! group owns a disjoint output slice and is computed by the same paged row
 //! kernel the sequential path uses.
+//!
+//! ## Online walk structure (fused decode + tiled prefill)
+//!
+//! The integer pipelines' flash-style paths never materialize a score row:
+//! they walk the resident K̂/V̂ page lists with **two-phase online softmax
+//! state** ([`OnlineIndexRow`] / [`ExaqOnlineRow`]). Phase 1 streams the
+//! `Q̂K̂ᵀ` tiles through the max fold ([`OnlineIndexRow::observe_max`]);
+//! phase 2 re-walks the same tiles with the row max pinned, gathering each
+//! logit's LUT weight straight onto the accumulator
+//! ([`OnlineIndexRow::gather`]). Recomputing the QK tiles once is the
+//! classic flash trade: it buys a state in which **every** partial quantity
+//! is an associative integer sum, so the walk can be split at arbitrary
+//! page boundaries and merged in any order, byte-identically:
+//!
+//! * **Fused decode** ([`fused_decode_i8`] / [`fused_decode_exaq`], span
+//!   drivers [`par_fused_decode_i8_spans`] / [`par_fused_decode_exaq_spans`]):
+//!   one decode row's page list is split into per-worker **spans** (one
+//!   [`FusedJobI8`]/[`FusedJobExaq`] each, width policy
+//!   `INTATTN_DECODE_SPLIT`). Launch A runs phase 1 per span; the span
+//!   maxes merge on the launching thread ([`OnlineIndexRow::merge_max`] —
+//!   `max` is associative/commutative) and the joint max is rebroadcast;
+//!   launch B runs phase 2 per span; the partial `(max, ΣÊ, acc)` triples
+//!   then merge by pure integer adds ([`OnlineIndexRow::merge`] at equal
+//!   maxes; EXAQ merges per-bucket counts and lane sums). Single-sequence
+//!   deep-context decode therefore scales with pool width while staying
+//!   byte-identical to the width-1 sequential walk.
+//! * **Tiled prefill** ([`tiled_prefill_i8`], [`tiled_prefill_exaq_stats`] +
+//!   [`tiled_prefill_exaq_pv`]): per query row, the same page walk runs
+//!   max → gather(ΣÊ) → normalize+`P̂·V̂` as three tile-sized passes (tiles
+//!   capped at [`PREFILL_TILE_ROWS`] rows so the scratch is O(1) even for
+//!   huge pages), reproducing the materialized path's integer ops in the
+//!   materialized order — bit-for-bit equal output for IndexSoftmax — with
+//!   no `m×L` score block ever allocated. Rows are independent, so the
+//!   drivers parallelize across row blocks ([`ROW_BLOCK`]).
 
-use crate::softmax::exaq::{ExaqOnlineRow, ExaqPush};
-use crate::softmax::index_softmax::{rescale_lane_i64, OnlineIndexRow, OnlinePush};
+use crate::softmax::exaq::ExaqOnlineRow;
+use crate::softmax::index_softmax::{Mask, MulShiftDiv, OnlineIndexRow};
 use crate::tensor::{MatF32, MatI32, MatI8, MatU8};
 use crate::util::f16::F16;
 use crate::util::threadpool::{ParallelPool, SendPtr};
@@ -1144,24 +1178,41 @@ pub fn par_gemm_f16_notrans_grouped(groups: &mut [GroupF16], d: usize, pool: &Pa
 // ---------------------------------------------------------------------------
 // Fused flash-decode kernels (one KV page-walk per head)
 
-/// One sequence's fused integer flash-decode walk: per K̂ page, one
+/// Phase 1 of the fused integer flash-decode walk: stream every K̂ page's
 /// `1×rows` `Q̂K̂ᵀ` tile (the same blocked — AVX-512 where available — row
-/// kernel the paged QK path uses), then every tile logit streams through the
-/// caller's [`OnlineIndexRow`] and its verdict lands directly on the
-/// `d`-lane i64 accumulator: `Ê·V̂_row` accumulate, skip (clipped / zero
-/// bucket), or running-max rescale ([`rescale_lane_i64`] per lane; factor 0
-/// resets the lanes, then the new max contributes `LÛT[0]·V̂_row = 255·V̂_row`).
-/// K̂ and V̂ pages pair up row-for-row (same [`crate::attention::state`]
-/// paging on both sides), so one zipped walk covers the whole history —
-/// the working set is the accumulator (O(d)) plus one page-sized logit tile
-/// (O(page_rows)); no L-length score row exists at any point.
+/// kernel the paged QK path uses) through the [`OnlineIndexRow`] max fold.
+/// Touches no V̂ data and no accumulator; after this pass `row` holds the
+/// span's logit max (and nothing else — `ΣÊ`/nnz stay zero).
+pub fn fused_decode_i8_max(q: &[i8], kp: &[&[i8]], row: &mut OnlineIndexRow, tile: &mut [i32]) {
+    // AUDIT: int-only begin gemm-fused-decode-i8
+    let k = q.len();
+    for kpage in kp {
+        let np = kpage.len() / k;
+        let t = &mut tile[..np];
+        gemm_i8_rows(q, kpage, t, 1, np, k, 0, 1);
+        for &a in t.iter() {
+            row.observe_max(a);
+        }
+    }
+    // AUDIT: int-only end
+}
+
+/// Phase 2 of the fused integer flash-decode walk: with the row max pinned
+/// (by [`fused_decode_i8_max`] plus any [`OnlineIndexRow::merge_max`]
+/// folds), re-walk the K̂ pages, gather each logit's `Ê` weight and land
+/// `Ê·V̂_row` directly on the `d`-lane i64 accumulator. K̂ and V̂ pages pair
+/// up row-for-row (same [`crate::attention::state`] paging on both sides),
+/// so one zipped walk covers the span — the working set is the accumulator
+/// (O(d)) plus one page-sized logit tile (O(page_rows)); no L-length score
+/// row exists at any point.
 ///
-/// The row max is updated per *element*, not per page, so the arithmetic —
-/// and therefore the output — is byte-identical at every page size. Final
-/// normalization (`round(255·acc/ΣÊ)` via [`OnlineIndexRow::norm_div`]) is
-/// the caller's job; `row` carries `ΣÊ` and the nnz/rescale op accounting
-/// out of the walk.
-pub fn fused_decode_i8(
+/// Because the max never moves inside this phase, `ΣÊ` and every
+/// accumulator lane are plain integer sums — associative, so partial
+/// states over disjoint page spans merge byte-identically
+/// ([`OnlineIndexRow::merge`]) in any order. Final normalization
+/// (`round(255·acc/ΣÊ)` via [`OnlineIndexRow::norm_div`]) is the caller's
+/// job; `row` carries `ΣÊ` and the nnz op accounting out of the walk.
+pub fn fused_decode_i8_gather(
     q: &[i8],
     kp: &[&[i8]],
     vp: &[&[i8]],
@@ -1181,25 +1232,11 @@ pub fn fused_decode_i8(
         let t = &mut tile[..np];
         gemm_i8_rows(q, kpage, t, 1, np, k, 0, 1);
         for (j, &a) in t.iter().enumerate() {
-            match row.push(a, table) {
-                OnlinePush::Skip => {}
-                OnlinePush::Acc { e } => {
-                    let w = e as i64;
-                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
-                        *x += w * (vx as i64);
-                    }
-                }
-                OnlinePush::Rescale { factor } => {
-                    if factor == 0 {
-                        acc.fill(0);
-                    } else {
-                        for x in acc.iter_mut() {
-                            *x = rescale_lane_i64(*x, factor);
-                        }
-                    }
-                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
-                        *x += 255 * (vx as i64);
-                    }
+            let e = row.gather(a, table);
+            if e != 0 {
+                let w = e as i64;
+                for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
+                    *x += w * (vx as i64);
                 }
             }
         }
@@ -1207,51 +1244,77 @@ pub fn fused_decode_i8(
     // AUDIT: int-only end
 }
 
-/// EXAQ's fused flash-decode walk: same one-pass page structure as
-/// [`fused_decode_i8`], but the streamed row is EXAQ's mixed-precision
-/// [`ExaqOnlineRow`] — f32 LUT gathers onto an f32 accumulator, exact
-/// integer Δ-moments riding along for the dynamic-clip statistics. On a
-/// running-max move every lane shrinks by the LUT carry factor and the new
-/// max contributes `LUT[0]·V̂_row = 1.0·V̂_row`. Final `acc/Σe` normalization
-/// (and the stats merge) is the caller's job.
-pub fn fused_decode_exaq(
+/// One sequence's (or span's) complete fused integer flash-decode walk:
+/// [`fused_decode_i8_max`] then [`fused_decode_i8_gather`]. The K̂ tiles are
+/// computed twice — the classic flash recompute trade, paid to make every
+/// partial quantity an associative integer sum (so the page-parallel span
+/// drivers are byte-identical to this sequential walk at any split width,
+/// including width 1: this *is* the width-1 case).
+pub fn fused_decode_i8(
+    q: &[i8],
+    kp: &[&[i8]],
+    vp: &[&[i8]],
+    row: &mut OnlineIndexRow,
+    table: &[u8],
+    acc: &mut [i64],
+    tile: &mut [i32],
+) {
+    fused_decode_i8_max(q, kp, row, tile);
+    fused_decode_i8_gather(q, kp, vp, row, table, acc, tile);
+}
+
+/// Phase 1 of EXAQ's fused flash-decode walk: the [`fused_decode_i8_max`]
+/// max fold over EXAQ's [`ExaqOnlineRow`].
+pub fn fused_decode_exaq_max(q: &[i8], kp: &[&[i8]], row: &mut ExaqOnlineRow, tile: &mut [i32]) {
+    // AUDIT: int-only begin gemm-fused-decode-exaq
+    let k = q.len();
+    for kpage in kp {
+        let np = kpage.len() / k;
+        let t = &mut tile[..np];
+        gemm_i8_rows(q, kpage, t, 1, np, k, 0, 1);
+        for &a in t.iter() {
+            row.observe_max(a);
+        }
+    }
+    // AUDIT: int-only end
+}
+
+/// Phase 2 of EXAQ's fused flash-decode walk: with the row max pinned,
+/// re-walk the zipped K̂/V̂ pages, bucket each logit by its LUT index
+/// ([`ExaqOnlineRow::gather`] — which also rides the exact integer
+/// Δ-moments for the dynamic-clip statistics) and add the V̂ row onto that
+/// bucket's `d` lanes of the `entries×d` i64 accumulator. The float LUT
+/// weights are applied **once per bucket** by the caller's final combine
+/// (`Σ_t LUT[t]·acc[t]`), not per element — so the walk itself is pure
+/// integer arithmetic and partial states over disjoint page spans merge
+/// byte-identically (bucket counts, moments and lane sums all add).
+pub fn fused_decode_exaq_gather(
     q: &[i8],
     kp: &[&[i8]],
     vp: &[&[i8]],
     row: &mut ExaqOnlineRow,
-    lut: &[f32],
-    acc: &mut [f32],
+    acc: &mut [i64],
     tile: &mut [i32],
 ) {
     // AUDIT: int-only begin gemm-fused-decode-exaq
-    // (EXAQ keeps a float accumulator by design — its floats are the
-    //  allowlisted exception; the point of the fence is that no float
-    //  *requantize* of P̂ sneaks back into the walk.)
     let k = q.len();
-    let d = acc.len();
+    let zb = row.zero_bucket();
+    let d = acc.len() / (zb + 1);
     debug_assert_eq!(paged_rows(kp, k), paged_rows(vp, d), "K̂/V̂ row counts");
-    acc.fill(0.0);
+    acc.fill(0);
     for (kpage, vpage) in kp.iter().zip(vp) {
         let np = kpage.len() / k;
         debug_assert_eq!(vpage.len() / d, np, "K̂/V̂ pages pair row-for-row");
         let t = &mut tile[..np];
         gemm_i8_rows(q, kpage, t, 1, np, k, 0, 1);
         for (j, &a) in t.iter().enumerate() {
-            match row.push(a, lut) {
-                ExaqPush::Skip => {}
-                ExaqPush::Acc { e } => {
-                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
-                        *x += e * (vx as f32);
-                    }
-                }
-                ExaqPush::Rescale { factor } => {
-                    for x in acc.iter_mut() {
-                        *x *= factor;
-                    }
-                    // The new max itself contributes LUT[0] = exp(0) = 1.
-                    for (x, &vx) in acc.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
-                        *x += vx as f32;
-                    }
+            let b = row.gather(a);
+            // The zero bucket's LUT weight is exactly 0 — skip the lanes
+            // (the gather already counted it for the Δ-moments).
+            if b != zb {
+                let lanes = &mut acc[b * d..(b + 1) * d];
+                for (x, &vx) in lanes.iter_mut().zip(&vpage[j * d..(j + 1) * d]) {
+                    *x += vx as i64;
                 }
             }
         }
@@ -1259,12 +1322,27 @@ pub fn fused_decode_exaq(
     // AUDIT: int-only end
 }
 
-/// One sequence's slice of a grouped fused flash-decode round
-/// (IndexSoftmax pipelines): its query row, its zipped K̂/V̂ page lists, its
-/// streaming softmax state (carried by value — read the `ΣÊ`/nnz/rescale
-/// accounting back out after the launch), and its disjoint accumulator +
-/// page-tile scratch. `OnlineIndexRow` bakes in the per-sequence `α` (and
-/// thus `c_int`), so grouped-Q batches need no extra per-job fields.
+/// One span's complete fused EXAQ decode walk: max phase then bucketed
+/// gather phase (see [`fused_decode_i8`] for the recompute trade).
+pub fn fused_decode_exaq(
+    q: &[i8],
+    kp: &[&[i8]],
+    vp: &[&[i8]],
+    row: &mut ExaqOnlineRow,
+    acc: &mut [i64],
+    tile: &mut [i32],
+) {
+    fused_decode_exaq_max(q, kp, row, tile);
+    fused_decode_exaq_gather(q, kp, vp, row, acc, tile);
+}
+
+/// One page **span** of one sequence's fused flash-decode walk
+/// (IndexSoftmax pipelines): the sequence's query row, the span's zipped
+/// K̂/V̂ page sub-lists, its streaming softmax state (carried by value —
+/// read the `ΣÊ`/nnz accounting back out after the launch), and its
+/// disjoint accumulator + page-tile scratch. `OnlineIndexRow` bakes in the
+/// per-sequence `α` (and thus `c_int`), so grouped-Q batches need no extra
+/// per-job fields. An unsplit sequence is the one-span case.
 pub struct FusedJobI8<'a> {
     pub q: &'a [i8],
     pub kp: &'a [&'a [i8]],
@@ -1274,71 +1352,460 @@ pub struct FusedJobI8<'a> {
     pub tile: &'a mut [i32],
 }
 
-/// One sequence's slice of a grouped fused EXAQ decode round. The f32 LUT
+/// One page span of one sequence's fused EXAQ decode walk. The f32 LUT
 /// rides in the job because each sequence's dynamic clip (and therefore its
-/// table) differs.
+/// table) differs; `acc` is the bucketed `entries×d` i64 lane accumulator
+/// of [`fused_decode_exaq_gather`].
 pub struct FusedJobExaq<'a> {
     pub q: &'a [i8],
     pub kp: &'a [&'a [i8]],
     pub vp: &'a [&'a [i8]],
     pub row: ExaqOnlineRow,
     pub lut: &'a [f32],
-    pub acc: &'a mut [f32],
+    pub acc: &'a mut [i64],
     pub tile: &'a mut [i32],
 }
 
 /// MAC-proportional work estimate of a fused grouped launch: the K̂ pages
-/// are read once for the QK tiles and the V̂ pages at most once for the
+/// are read for the QK tiles and the V̂ pages at most once for the
 /// accumulation, so the summed resident elements of both sides bound the
 /// walk — the same currency [`grouped_work`] reports for unfused launches.
 fn fused_work(kvs: impl Iterator<Item = (usize, usize)>) -> usize {
     kvs.map(|(kb, vb)| kb + vb).sum()
 }
 
-/// Sequential grouped [`fused_decode_i8`]: one job per sequence. The u8 LUT
-/// is shared across the batch (fixed `(b, c)` — that is IndexSoftmax's
-/// point).
+/// Span-width policy for the page-parallel fused decode walk: how many page
+/// spans one sequence's resident page list splits into. `split == 0` is the
+/// auto policy (`INTATTN_DECODE_SPLIT` unset/0): one span per pool worker
+/// left over after the batch itself is spread across workers. An explicit
+/// width is clamped to the page count (a span must own at least one page).
+pub fn decode_split_spans(split: usize, pages: usize, pool_size: usize, batch: usize) -> usize {
+    let w = if split == 0 { (pool_size / batch.max(1)).max(1) } else { split };
+    w.min(pages).max(1)
+}
+
+/// Sequential grouped [`fused_decode_i8`]: one one-span job per sequence.
+/// The u8 LUT is shared across the batch (fixed `(b, c)` — that is
+/// IndexSoftmax's point). The oracle the span drivers are tested against.
 pub fn fused_decode_i8_grouped(jobs: &mut [FusedJobI8], table: &[u8]) {
     for j in jobs.iter_mut() {
         fused_decode_i8(j.q, j.kp, j.vp, &mut j.row, table, j.acc, j.tile);
     }
 }
 
-/// Pool-parallel [`fused_decode_i8_grouped`]: workers claim whole jobs
-/// through the launch's atomic cursor ([`ParallelPool::parallel_groups`]) —
-/// a single decode row is walked sequentially (the online renorm is a
-/// loop-carried dependence), so the parallelism is across sequences, and
-/// worker count / claim order never affect results.
-pub fn par_fused_decode_i8_grouped(jobs: &mut [FusedJobI8], table: &[u8], pool: &ParallelPool) {
+/// Pool-parallel span-scheduled fused integer decode. `jobs` is the flat
+/// list of page-span jobs; `spans[s]` says how many consecutive jobs belong
+/// to sequence `s` (`Σ spans == jobs.len()`). Sequence results land in the
+/// **first** job of each sequence's run: its `row` and `acc` after the call
+/// are the fully merged `(max, ΣÊ, accumulator)` of the whole page list.
+///
+/// All-ones spans (no sequence split) run as a single launch of complete
+/// walks — the grouped fast path. Otherwise the walk runs as two launches
+/// around two merge points on the launching thread:
+///
+/// 1. launch A — phase 1 ([`fused_decode_i8_max`]) per span;
+/// 2. per sequence: fold the span maxes ([`OnlineIndexRow::merge_max`] —
+///    associative max) and rebroadcast the joint state to every span;
+/// 3. launch B — phase 2 ([`fused_decode_i8_gather`]) per span;
+/// 4. per sequence: merge the partial triples into the first span
+///    ([`OnlineIndexRow::merge`]) — pure integer adds at the equal maxes
+///    the rebroadcast guarantees.
+///
+/// Workers claim whole span jobs through the launch's atomic cursor
+/// ([`ParallelPool::parallel_groups`]), so worker count and claim order
+/// never affect results; neither do the split points (every partial
+/// quantity is an associative integer sum), so the output is byte-identical
+/// to the sequential walk at every split width.
+pub fn par_fused_decode_i8_spans(
+    jobs: &mut [FusedJobI8],
+    spans: &[usize],
+    table: &[u8],
+    pool: &ParallelPool,
+) {
+    debug_assert_eq!(spans.iter().sum::<usize>(), jobs.len(), "span/job mismatch");
     let work = fused_work(jobs.iter().map(|j| {
         (
             j.kp.iter().map(|p| p.len()).sum::<usize>(),
             j.vp.iter().map(|p| p.len()).sum::<usize>(),
         )
     }));
+    if spans.iter().all(|&s| s <= 1) {
+        pool.parallel_groups(jobs, work, |j| {
+            fused_decode_i8(j.q, j.kp, j.vp, &mut j.row, table, j.acc, j.tile)
+        });
+        return;
+    }
+    pool.parallel_groups(jobs, work, |j| fused_decode_i8_max(j.q, j.kp, &mut j.row, j.tile));
+    let mut at = 0;
+    for &s in spans {
+        let span = &mut jobs[at..at + s];
+        let mut root = span[0].row;
+        for j in &span[1..] {
+            root.merge_max(&j.row);
+        }
+        for j in span.iter_mut() {
+            j.row = root;
+        }
+        at += s;
+    }
     pool.parallel_groups(jobs, work, |j| {
-        fused_decode_i8(j.q, j.kp, j.vp, &mut j.row, table, j.acc, j.tile)
+        fused_decode_i8_gather(j.q, j.kp, j.vp, &mut j.row, table, j.acc, j.tile)
     });
-}
-
-/// Sequential grouped [`fused_decode_exaq`].
-pub fn fused_decode_exaq_grouped(jobs: &mut [FusedJobExaq]) {
-    for j in jobs.iter_mut() {
-        fused_decode_exaq(j.q, j.kp, j.vp, &mut j.row, j.lut, j.acc, j.tile);
+    let mut at = 0;
+    for &s in spans {
+        let (first, rest) = jobs[at..at + s].split_at_mut(1);
+        let f = &mut first[0];
+        for j in rest.iter() {
+            f.row.merge(&j.row, &mut *f.acc, &*j.acc, table);
+        }
+        at += s;
     }
 }
 
-/// Pool-parallel [`fused_decode_exaq_grouped`].
-pub fn par_fused_decode_exaq_grouped(jobs: &mut [FusedJobExaq], pool: &ParallelPool) {
+/// Sequential grouped [`fused_decode_exaq`] — the span drivers' oracle.
+pub fn fused_decode_exaq_grouped(jobs: &mut [FusedJobExaq]) {
+    for j in jobs.iter_mut() {
+        fused_decode_exaq(j.q, j.kp, j.vp, &mut j.row, j.acc, j.tile);
+    }
+}
+
+/// Pool-parallel span-scheduled fused EXAQ decode — the
+/// [`par_fused_decode_i8_spans`] schedule over [`ExaqOnlineRow`] states.
+/// The post-gather merge adds bucket counts, Δ-moments and the bucketed
+/// accumulator lanes — all integers, so the merged result is byte-identical
+/// to the sequential walk at every split width (the equal maxes the
+/// rebroadcast guarantees are a hard requirement here: EXAQ buckets cannot
+/// be re-binned, and [`ExaqOnlineRow::merge`] asserts it).
+pub fn par_fused_decode_exaq_spans(
+    jobs: &mut [FusedJobExaq],
+    spans: &[usize],
+    pool: &ParallelPool,
+) {
+    debug_assert_eq!(spans.iter().sum::<usize>(), jobs.len(), "span/job mismatch");
     let work = fused_work(jobs.iter().map(|j| {
         (
             j.kp.iter().map(|p| p.len()).sum::<usize>(),
             j.vp.iter().map(|p| p.len()).sum::<usize>(),
         )
     }));
+    if spans.iter().all(|&s| s <= 1) {
+        pool.parallel_groups(jobs, work, |j| {
+            fused_decode_exaq(j.q, j.kp, j.vp, &mut j.row, j.acc, j.tile)
+        });
+        return;
+    }
+    pool.parallel_groups(jobs, work, |j| fused_decode_exaq_max(j.q, j.kp, &mut j.row, j.tile));
+    let mut at = 0;
+    for &s in spans {
+        let span = &mut jobs[at..at + s];
+        let mut root = span[0].row;
+        for j in &span[1..] {
+            root.merge_max(&j.row);
+        }
+        for j in span.iter_mut() {
+            j.row = root;
+        }
+        at += s;
+    }
     pool.parallel_groups(jobs, work, |j| {
-        fused_decode_exaq(j.q, j.kp, j.vp, &mut j.row, j.lut, j.acc, j.tile)
+        fused_decode_exaq_gather(j.q, j.kp, j.vp, &mut j.row, j.acc, j.tile)
     });
+    let mut at = 0;
+    for &s in spans {
+        let (first, rest) = jobs[at..at + s].split_at_mut(1);
+        let f = &mut first[0];
+        for j in rest.iter() {
+            f.row.merge(&j.row);
+            for (x, &y) in f.acc.iter_mut().zip(j.acc.iter()) {
+                *x += y;
+            }
+        }
+        at += s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online-tiled prefill kernels (flash-style, no m×L score block)
+
+/// Upper bound on the QK tile width of the tiled-prefill walk, in KV rows.
+/// Pages larger than this are walked as sub-tiles, so the per-job scratch
+/// is O(1) — independent of both the context length *and* the configured
+/// page size (`tests/decode_alloc.rs` pins prefill with huge pages).
+pub const PREFILL_TILE_ROWS: usize = 256;
+
+/// Query rows per tiled-prefill job: rows are independent (each owns its
+/// max/ΣÊ/output), so the drivers parallelize across fixed-size row blocks
+/// — partition-invariant by construction.
+pub const ROW_BLOCK: usize = 8;
+
+/// Walk the `valid`-row prefix of a K̂ page list as `1×tw` Q̂K̂ᵀ logit tiles
+/// (`tw ≤ PREFILL_TILE_ROWS`, also capped by page and prefix bounds),
+/// calling `f(page_index, first_row_in_page, tile)` for each. The V̂ rows
+/// matching tile column `jj` are `vp[page_index]`'s rows
+/// `first_row_in_page + jj` — pages pair row-for-row across the two sides.
+fn prefill_qk_tiles(
+    qrow: &[i8],
+    kp: &[&[i8]],
+    k: usize,
+    valid: usize,
+    tile: &mut [i32],
+    mut f: impl FnMut(usize, usize, &[i32]),
+) {
+    let mut remaining = valid;
+    for (pi, page) in kp.iter().enumerate() {
+        if remaining == 0 {
+            break;
+        }
+        let np = page.len() / k;
+        let take = np.min(remaining);
+        let mut j0 = 0;
+        while j0 < take {
+            let tw = (take - j0).min(PREFILL_TILE_ROWS);
+            let t = &mut tile[..tw];
+            gemm_i8_rows(qrow, &page[j0 * k..(j0 + tw) * k], t, 1, tw, k, 0, 1);
+            f(pi, j0, t);
+            j0 += tw;
+        }
+        remaining -= take;
+    }
+}
+
+/// One row block of an IndexSoftmax tiled prefill: the query rows, their
+/// absolute position (`row0`, for the causal mask), the resident K̂/V̂ page
+/// lists, the per-row `(c_int, idx_div)` IndexSoftmax parameters (grouped-Q
+/// schemes vary them per row), the shared LUT geometry `n1`, the block's
+/// `rows×d` i32 output accumulator, and a [`PREFILL_TILE_ROWS`]-sized logit
+/// tile. `nnz` comes back with the block's nonzero-`P̂` count.
+pub struct TiledPrefillJobI8<'a> {
+    pub q: &'a [i8],
+    pub row0: usize,
+    pub mask: Mask,
+    pub l: usize,
+    pub kp: &'a [&'a [i8]],
+    pub vp: &'a [&'a [i8]],
+    pub params: &'a [(u64, MulShiftDiv)],
+    pub n1: u64,
+    pub out: &'a mut [i32],
+    pub tile: &'a mut [i32],
+    pub nnz: u64,
+}
+
+/// Online-tiled IndexSoftmax prefill of one row block: per query row, three
+/// tile-sized passes over the valid prefix of the page walk — (A) row max,
+/// (B) `ΣÊ` with the max pinned, (C) `P̂ = round(255·Ê/ΣÊ)` and the
+/// zero-skipping `P̂·V̂` accumulation. Pass C recomputes each `Ê` from the
+/// same logit recompute, so every integer op (and its order) is exactly
+/// what the materialized `forward_into` + paged `P̂·V̂` path performs —
+/// the output is **bit-for-bit** equal to the unfused oracle — while the
+/// working set stays O([`PREFILL_TILE_ROWS`] + d): no `m×L` score block,
+/// no L-length row, at any page size.
+pub fn tiled_prefill_i8(job: &mut TiledPrefillJobI8, table: &[u8]) {
+    let rows = job.params.len();
+    let k = job.q.len() / rows;
+    let d = job.out.len() / rows;
+    let (kp, vp, q, params) = (job.kp, job.vp, job.q, job.params);
+    let (n1, l, row0, mask) = (job.n1, job.l, job.row0, job.mask);
+    let mut nnz = 0u64;
+    // AUDIT: int-only begin gemm-tiled-prefill-i8
+    debug_assert_eq!(paged_rows(kp, k), l, "K̂ row count");
+    debug_assert_eq!(paged_rows(vp, d), l, "V̂ row count");
+    job.out.fill(0);
+    for r in 0..rows {
+        let qrow = &q[r * k..(r + 1) * k];
+        let valid = mask.valid_cols(row0 + r, l);
+        let (c_int, idx_div) = params[r];
+        // Pass A: the materialized path's row max over the valid prefix.
+        let mut m = i32::MIN;
+        prefill_qk_tiles(qrow, kp, k, valid, job.tile, |_, _, t| {
+            for &a in t {
+                if a > m {
+                    m = a;
+                }
+            }
+        });
+        // Pass B: ΣÊ with the max pinned (eq. 15's u32 accumulator).
+        let mut sum = 0u32;
+        prefill_qk_tiles(qrow, kp, k, valid, job.tile, |_, _, t| {
+            for &a in t {
+                let delta = (m as i64 - a as i64) as u64;
+                if delta < c_int {
+                    sum += table[idx_div.div_round(delta * n1) as usize] as u32;
+                }
+            }
+        });
+        // Pass C: normalize each re-gathered Ê and accumulate P̂·V̂ in
+        // ascending column order (the paged u8×i8 kernel's order).
+        debug_assert!(sum >= 255);
+        let norm_div = MulShiftDiv::new(sum as u64);
+        let orow = &mut job.out[r * d..(r + 1) * d];
+        prefill_qk_tiles(qrow, kp, k, valid, job.tile, |pi, j0, t| {
+            let vpage = vp[pi];
+            for (jj, &a) in t.iter().enumerate() {
+                let delta = (m as i64 - a as i64) as u64;
+                let e = if delta >= c_int {
+                    0
+                } else {
+                    table[idx_div.div_round(delta * n1) as usize]
+                };
+                let p = norm_div.div_round(255 * e as u64);
+                if p != 0 {
+                    nnz += 1;
+                    let vrow = &vpage[(j0 + jj) * d..(j0 + jj + 1) * d];
+                    for (x, &vx) in orow.iter_mut().zip(vrow) {
+                        *x += p as i32 * vx as i32;
+                    }
+                }
+            }
+        });
+    }
+    // AUDIT: int-only end
+    job.nnz = nnz;
+}
+
+/// Pool-parallel [`tiled_prefill_i8`] over independent row-block jobs.
+pub fn par_tiled_prefill_i8(jobs: &mut [TiledPrefillJobI8], table: &[u8], pool: &ParallelPool) {
+    // Three logit recomputes per row: 3·rows·L·k MAC-equivalents.
+    let work: usize = jobs.iter().map(|j| 3 * j.q.len() * j.l).sum();
+    pool.parallel_groups(jobs, work, |j| tiled_prefill_i8(j, table));
+}
+
+/// One row block of the EXAQ tiled prefill's **statistics** launch: a
+/// single pass per row producing the row max and the exact integer
+/// Δ-moments `(Σδ, Σδ², n)` about it (running-max shifted as the walk
+/// discovers larger logits — exact in i128). The launching thread folds
+/// the moments into the running clip statistics before the PV launch.
+pub struct TiledPrefillStatsJob<'a> {
+    pub q: &'a [i8],
+    pub row0: usize,
+    pub mask: Mask,
+    pub l: usize,
+    pub kp: &'a [&'a [i8]],
+    pub maxes: &'a mut [i32],
+    pub moments: &'a mut [(i128, i128, u64)],
+    pub tile: &'a mut [i32],
+}
+
+/// Max + exact Δ-moment pass of the EXAQ tiled prefill (one QK walk per
+/// row). When the running max moves by `s`, every prior `δ` grows by `s`:
+/// `Σδ² += 2sΣδ + n·s²` then `Σδ += n·s` — exact integer shifts, so the
+/// final moments equal a direct reduction against the final max.
+pub fn tiled_prefill_exaq_stats(job: &mut TiledPrefillStatsJob) {
+    let rows = job.maxes.len();
+    let k = job.q.len() / rows;
+    let (kp, q) = (job.kp, job.q);
+    let (l, row0, mask) = (job.l, job.row0, job.mask);
+    // AUDIT: int-only begin gemm-tiled-prefill-exaq
+    for r in 0..rows {
+        let qrow = &q[r * k..(r + 1) * k];
+        let valid = mask.valid_cols(row0 + r, l);
+        let mut m = i32::MIN;
+        let mut started = false;
+        let (mut dsum, mut dsumsq, mut n) = (0i128, 0i128, 0u64);
+        prefill_qk_tiles(qrow, kp, k, valid, job.tile, |_, _, t| {
+            for &a in t {
+                if !started || a > m {
+                    if started {
+                        let s = (a as i64 - m as i64) as i128;
+                        dsumsq += 2 * s * dsum + (n as i128) * s * s;
+                        dsum += (n as i128) * s;
+                    }
+                    m = a;
+                    started = true;
+                }
+                let delta = (m as i64 - a as i64) as i128;
+                dsum += delta;
+                dsumsq += delta * delta;
+                n += 1;
+            }
+        });
+        job.maxes[r] = m;
+        job.moments[r] = (dsum, dsumsq, n);
+    }
+    // AUDIT: int-only end
+}
+
+/// Pool-parallel [`tiled_prefill_exaq_stats`].
+pub fn par_tiled_prefill_exaq_stats(jobs: &mut [TiledPrefillStatsJob], pool: &ParallelPool) {
+    let work: usize = jobs.iter().map(|j| j.q.len() * j.l).sum();
+    pool.parallel_groups(jobs, work, tiled_prefill_exaq_stats);
+}
+
+/// One row block of the EXAQ tiled prefill's **PV** launch: with the per-row
+/// maxes pinned (from the stats launch) and the block-wide dynamic clip /
+/// f32 LUT resolved, two more passes per row — (B) the f32 row sum of LUT
+/// gathers in ascending column order (bit-equal to the materialized
+/// forward's), (C) `P̂ = round(255·LUT/Σ)` requantize + zero-skipping
+/// `P̂·V̂` accumulation.
+pub struct TiledPrefillExaqJob<'a> {
+    pub q: &'a [i8],
+    pub row0: usize,
+    pub mask: Mask,
+    pub l: usize,
+    pub kp: &'a [&'a [i8]],
+    pub vp: &'a [&'a [i8]],
+    pub maxes: &'a [i32],
+    pub lut: &'a [f32],
+    pub clip_int: f32,
+    pub out: &'a mut [i32],
+    pub tile: &'a mut [i32],
+    pub nnz: u64,
+}
+
+/// LUT-gather + requantize + `P̂·V̂` pass of the EXAQ tiled prefill. The
+/// float work here is exactly the materialized `forward_with_clip_counted`
+/// row arithmetic (EXAQ's mixed-precision dataflow — the fence's allowlist
+/// entries); everything else is integer.
+pub fn tiled_prefill_exaq_pv(job: &mut TiledPrefillExaqJob) {
+    let rows = job.maxes.len();
+    let k = job.q.len() / rows;
+    let d = job.out.len() / rows;
+    let (kp, vp, q, maxes, lut) = (job.kp, job.vp, job.q, job.maxes, job.lut);
+    let (l, row0, mask, clip_int) = (job.l, job.row0, job.mask, job.clip_int);
+    let n = lut.len();
+    let mut nnz = 0u64;
+    // AUDIT: int-only begin gemm-tiled-prefill-exaq
+    job.out.fill(0);
+    for r in 0..rows {
+        let qrow = &q[r * k..(r + 1) * k];
+        let valid = mask.valid_cols(row0 + r, l);
+        let m = maxes[r] as i64;
+        // Pass B: the materialized row's f32 LUT sum, same gathers in the
+        // same ascending order.
+        let mut fsum: f32 = 0.0;
+        prefill_qk_tiles(qrow, kp, k, valid, job.tile, |_, _, t| {
+            for &a in t {
+                let delta = (m - a as i64) as f32;
+                let idx = ((delta / clip_int * (n - 1) as f32).round() as usize).min(n - 1);
+                fsum += lut[idx];
+            }
+        });
+        let inv = 1.0 / fsum;
+        // Pass C: requantize each re-gathered weight and accumulate P̂·V̂.
+        let orow = &mut job.out[r * d..(r + 1) * d];
+        prefill_qk_tiles(qrow, kp, k, valid, job.tile, |pi, j0, t| {
+            let vpage = vp[pi];
+            for (jj, &a) in t.iter().enumerate() {
+                let delta = (m - a as i64) as f32;
+                let idx = ((delta / clip_int * (n - 1) as f32).round() as usize).min(n - 1);
+                let p = (lut[idx] * inv * 255.0).round().clamp(0.0, 255.0) as u8;
+                if p != 0 {
+                    nnz += 1;
+                    let vrow = &vpage[(j0 + jj) * d..(j0 + jj + 1) * d];
+                    for (x, &vx) in orow.iter_mut().zip(vrow) {
+                        *x += p as i32 * vx as i32;
+                    }
+                }
+            }
+        });
+    }
+    // AUDIT: int-only end
+    job.nnz = nnz;
+}
+
+/// Pool-parallel [`tiled_prefill_exaq_pv`].
+pub fn par_tiled_prefill_exaq_pv(jobs: &mut [TiledPrefillExaqJob], pool: &ParallelPool) {
+    let work: usize = jobs.iter().map(|j| 2 * j.q.len() * j.l).sum();
+    pool.parallel_groups(jobs, work, tiled_prefill_exaq_pv);
 }
 
 // ---------------------------------------------------------------------------
@@ -1982,9 +2449,9 @@ mod tests {
     use crate::softmax::exaq::{ExaqConfig, ExaqSoftmax};
     use crate::softmax::index_softmax::IndexSoftmax;
 
-    /// Flat-layout reference for the fused integer walk: the same online
-    /// row streamed over pre-computed whole-row logits. Any divergence from
-    /// [`fused_decode_i8`] is a paging/wiring bug (tile offsets, V̂-row
+    /// Flat-layout reference for the fused integer walk: the same two-phase
+    /// online row driven over pre-computed whole-row logits. Any divergence
+    /// from [`fused_decode_i8`] is a paging/wiring bug (tile offsets, V̂-row
     /// indexing), not an arithmetic one.
     fn fused_ref_i8(
         ix: &IndexSoftmax,
@@ -1992,28 +2459,21 @@ mod tests {
         logits: &[i32],
         v: &[i8],
         d: usize,
-    ) -> (Vec<i64>, u64, u64, u64) {
+    ) -> (Vec<i64>, u64, u64) {
         let mut row = ix.online_begin(alpha);
+        for &a in logits {
+            row.observe_max(a);
+        }
         let mut acc = vec![0i64; d];
         for (j, &a) in logits.iter().enumerate() {
-            match row.push(a, &ix.lut.u8_table) {
-                OnlinePush::Skip => {}
-                OnlinePush::Acc { e } => {
-                    for (x, &vx) in acc.iter_mut().zip(&v[j * d..(j + 1) * d]) {
-                        *x += e as i64 * vx as i64;
-                    }
-                }
-                OnlinePush::Rescale { factor } => {
-                    for x in acc.iter_mut() {
-                        *x = rescale_lane_i64(*x, factor);
-                    }
-                    for (x, &vx) in acc.iter_mut().zip(&v[j * d..(j + 1) * d]) {
-                        *x += 255 * vx as i64;
-                    }
+            let e = row.gather(a, &ix.lut.u8_table);
+            if e != 0 {
+                for (x, &vx) in acc.iter_mut().zip(&v[j * d..(j + 1) * d]) {
+                    *x += e as i64 * vx as i64;
                 }
             }
         }
-        (acc, row.esum(), row.nnz(), row.rescales())
+        (acc, row.esum(), row.nnz())
     }
 
     #[test]
@@ -2027,7 +2487,7 @@ mod tests {
             let vmat = rand_i8(&mut rng, l, d);
             let mut logits = MatI32::zeros(1, l);
             gemm_i8(&q, &kmat, &mut logits);
-            let (want_acc, want_esum, want_nnz, want_resc) =
+            let (want_acc, want_esum, want_nnz) =
                 fused_ref_i8(&ix, alpha, logits.as_slice(), vmat.as_slice(), d);
             for pr in [1usize, 2, 5, 64, 128] {
                 let kp = split_pages(kmat.as_slice(), k, pr);
@@ -2044,11 +2504,11 @@ mod tests {
                     &mut acc,
                     &mut tile,
                 );
-                // Per-element renorm ⇒ byte-identical at every page size.
+                // Max-then-gather against the final max ⇒ byte-identical at
+                // every page size.
                 assert_eq!(acc, want_acc, "l={l} pr={pr}");
                 assert_eq!(row.esum(), want_esum, "l={l} pr={pr}");
                 assert_eq!(row.nnz(), want_nnz, "l={l} pr={pr}");
-                assert_eq!(row.rescales(), want_resc, "l={l} pr={pr}");
             }
         }
     }
@@ -2083,26 +2543,20 @@ mod tests {
         let vmat = rand_i8(&mut rng, l, d);
         let mut logits = MatI32::zeros(1, l);
         gemm_i8(&q, &kmat, &mut logits);
-        // Flat reference: identical op sequence, so equality is exact (f32
-        // included — paging never reorders the per-element stream).
+        // Flat reference: same two-phase walk over whole-row logits. The
+        // bucketed accumulator is pure integer, so equality is exact.
         let mut rref = ex.online_begin(alpha, clip);
-        let mut want = vec![0f32; d];
+        for &a in logits.as_slice() {
+            rref.observe_max(a);
+        }
+        let zb = rref.zero_bucket();
+        let mut want = vec![0i64; (zb + 1) * d];
         for (j, &a) in logits.as_slice().iter().enumerate() {
-            let vrow = &vmat.as_slice()[j * d..(j + 1) * d];
-            match rref.push(a, &lut) {
-                ExaqPush::Skip => {}
-                ExaqPush::Acc { e } => {
-                    for (x, &vx) in want.iter_mut().zip(vrow) {
-                        *x += e * vx as f32;
-                    }
-                }
-                ExaqPush::Rescale { factor } => {
-                    for x in want.iter_mut() {
-                        *x *= factor;
-                    }
-                    for (x, &vx) in want.iter_mut().zip(vrow) {
-                        *x += vx as f32;
-                    }
+            let b = rref.gather(a);
+            if b != zb {
+                let vrow = &vmat.as_slice()[j * d..(j + 1) * d];
+                for (x, &vx) in want[b * d..(b + 1) * d].iter_mut().zip(vrow) {
+                    *x += vx as i64;
                 }
             }
         }
@@ -2110,17 +2564,22 @@ mod tests {
             let kp = split_pages(kmat.as_slice(), k, pr);
             let vp = split_pages(vmat.as_slice(), d, pr);
             let mut row = ex.online_begin(alpha, clip);
-            let mut acc = vec![0f32; d];
+            let mut acc = vec![0i64; (zb + 1) * d];
             let mut tile = vec![0i32; pr.min(l)];
-            fused_decode_exaq(q.as_slice(), &kp, &vp, &mut row, &lut, &mut acc, &mut tile);
+            fused_decode_exaq(q.as_slice(), &kp, &vp, &mut row, &mut acc, &mut tile);
             assert_eq!(acc, want, "pr={pr}");
-            assert_eq!(row.fsum(), rref.fsum(), "pr={pr}");
+            assert_eq!(row.counts(), rref.counts(), "pr={pr}");
+            assert_eq!(row.fsum(&lut).to_bits(), rref.fsum(&lut).to_bits(), "pr={pr}");
             assert_eq!(row.stats(alpha), rref.stats(alpha), "pr={pr}");
+            assert_eq!(row.nnz(), rref.nnz(), "pr={pr}");
         }
     }
 
     #[test]
-    fn fused_grouped_parallel_matches_sequential_exactly() {
+    fn fused_span_drivers_match_sequential_exactly() {
+        // Page-parallel span schedule vs the sequential grouped oracle: for
+        // every split width, every sequence's merged (ΣÊ, nnz, accumulator)
+        // must be byte-identical — the tentpole's core claim.
         let mut rng = Pcg64::seed_from_u64(42);
         let ix = IndexSoftmax::default();
         let (k, d, alpha) = (32usize, 8usize, 0.003f32);
@@ -2128,44 +2587,362 @@ mod tests {
         let qs: Vec<MatI8> = ls.iter().map(|_| rand_i8(&mut rng, 1, k)).collect();
         let ks: Vec<MatI8> = ls.iter().map(|&l| rand_i8(&mut rng, l, k)).collect();
         let vs: Vec<MatI8> = ls.iter().map(|&l| rand_i8(&mut rng, l, d)).collect();
-        let run = |pool: Option<&ParallelPool>| -> (Vec<Vec<i64>>, Vec<(u64, u64, u64)>) {
-            let kps: Vec<Vec<&[i8]>> =
-                ks.iter().map(|m| split_pages(m.as_slice(), k, 4)).collect();
-            let vps: Vec<Vec<&[i8]>> =
-                vs.iter().map(|m| split_pages(m.as_slice(), d, 4)).collect();
-            let mut accs: Vec<Vec<i64>> = ls.iter().map(|_| vec![0i64; d]).collect();
-            let mut tiles: Vec<Vec<i32>> = ls.iter().map(|&l| vec![0i32; l.min(4)]).collect();
+        let kps: Vec<Vec<&[i8]>> = ks.iter().map(|m| split_pages(m.as_slice(), k, 4)).collect();
+        let vps: Vec<Vec<&[i8]>> = vs.iter().map(|m| split_pages(m.as_slice(), d, 4)).collect();
+        // `width` page spans per sequence (clamped to its page count); each
+        // span job gets its own row/acc/tile, results land in span job 0.
+        let run = |width: usize, pool: Option<&ParallelPool>| {
+            let mut spans: Vec<usize> = Vec::new();
+            let mut cuts: Vec<(usize, usize, usize)> = Vec::new(); // (seq, page a, page b)
+            for (s, kp) in kps.iter().enumerate() {
+                let n = decode_split_spans(width, kp.len(), usize::MAX, 1).min(kp.len());
+                spans.push(n);
+                let (base, extra) = (kp.len() / n, kp.len() % n);
+                let mut at = 0;
+                for i in 0..n {
+                    let take = base + usize::from(i < extra);
+                    cuts.push((s, at, at + take));
+                    at += take;
+                }
+            }
+            let total = cuts.len();
+            let mut accs: Vec<Vec<i64>> = (0..total).map(|_| vec![0i64; d]).collect();
+            let mut tiles: Vec<Vec<i32>> = (0..total).map(|_| vec![0i32; 4]).collect();
             let mut jobs: Vec<FusedJobI8> = Vec::new();
-            for (((q, kp), vp), (acc, tile)) in qs
-                .iter()
-                .zip(&kps)
-                .zip(&vps)
-                .zip(accs.iter_mut().zip(tiles.iter_mut()))
+            for (&(s, a, b), (acc, tile)) in
+                cuts.iter().zip(accs.iter_mut().zip(tiles.iter_mut()))
             {
                 jobs.push(FusedJobI8 {
-                    q: q.as_slice(),
-                    kp,
-                    vp,
+                    q: qs[s].as_slice(),
+                    kp: &kps[s][a..b],
+                    vp: &vps[s][a..b],
                     row: ix.online_begin(alpha),
                     acc,
                     tile,
                 });
             }
             match pool {
-                Some(p) => par_fused_decode_i8_grouped(&mut jobs, &ix.lut.u8_table, p),
+                Some(p) => par_fused_decode_i8_spans(&mut jobs, &spans, &ix.lut.u8_table, p),
                 None => fused_decode_i8_grouped(&mut jobs, &ix.lut.u8_table),
             }
-            let stats =
-                jobs.iter().map(|j| (j.row.esum(), j.row.nnz(), j.row.rescales())).collect();
+            // Collect each sequence's result from its first span job.
+            let mut firsts: Vec<usize> = Vec::new();
+            let mut at = 0;
+            for &s in &spans {
+                firsts.push(at);
+                at += s;
+            }
+            let stats: Vec<(u64, u64)> =
+                firsts.iter().map(|&i| (jobs[i].row.esum(), jobs[i].row.nnz())).collect();
             drop(jobs);
+            let accs: Vec<Vec<i64>> = firsts.iter().map(|&i| accs[i].clone()).collect();
             (accs, stats)
         };
-        let (acc_ref, stats_ref) = run(None);
-        for threads in [2usize, 8] {
-            let pool = tpool(threads);
-            let (acc, stats) = run(Some(&pool));
-            assert_eq!(acc, acc_ref, "fused grouped @ {threads}");
-            assert_eq!(stats, stats_ref, "fused grouped stats @ {threads}");
+        let (acc_ref, stats_ref) = run(1, None);
+        for width in [1usize, 2, 4, 8] {
+            for threads in [2usize, 8] {
+                let pool = tpool(threads);
+                let (acc, stats) = run(width, Some(&pool));
+                assert_eq!(acc, acc_ref, "spans w={width} @ {threads}");
+                assert_eq!(stats, stats_ref, "span stats w={width} @ {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_exaq_span_drivers_match_sequential_exactly() {
+        let mut rng = Pcg64::seed_from_u64(43);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let (k, d, alpha, clip) = (32usize, 8usize, 0.004f32, 1.7f32);
+        let lut = ex.lut_f32(clip);
+        let entries = ex.online_begin(alpha, clip).zero_bucket() + 1;
+        let ls = [21usize, 1, 48];
+        let qs: Vec<MatI8> = ls.iter().map(|_| rand_i8(&mut rng, 1, k)).collect();
+        let ks: Vec<MatI8> = ls.iter().map(|&l| rand_i8(&mut rng, l, k)).collect();
+        let vs: Vec<MatI8> = ls.iter().map(|&l| rand_i8(&mut rng, l, d)).collect();
+        let kps: Vec<Vec<&[i8]>> = ks.iter().map(|m| split_pages(m.as_slice(), k, 4)).collect();
+        let vps: Vec<Vec<&[i8]>> = vs.iter().map(|m| split_pages(m.as_slice(), d, 4)).collect();
+        let run = |width: usize, pool: Option<&ParallelPool>| {
+            let mut spans: Vec<usize> = Vec::new();
+            let mut cuts: Vec<(usize, usize, usize)> = Vec::new();
+            for (s, kp) in kps.iter().enumerate() {
+                let n = decode_split_spans(width, kp.len(), usize::MAX, 1).min(kp.len());
+                spans.push(n);
+                let (base, extra) = (kp.len() / n, kp.len() % n);
+                let mut at = 0;
+                for i in 0..n {
+                    let take = base + usize::from(i < extra);
+                    cuts.push((s, at, at + take));
+                    at += take;
+                }
+            }
+            let total = cuts.len();
+            let mut accs: Vec<Vec<i64>> = (0..total).map(|_| vec![0i64; entries * d]).collect();
+            let mut tiles: Vec<Vec<i32>> = (0..total).map(|_| vec![0i32; 4]).collect();
+            let mut jobs: Vec<FusedJobExaq> = Vec::new();
+            for (&(s, a, b), (acc, tile)) in
+                cuts.iter().zip(accs.iter_mut().zip(tiles.iter_mut()))
+            {
+                jobs.push(FusedJobExaq {
+                    q: qs[s].as_slice(),
+                    kp: &kps[s][a..b],
+                    vp: &vps[s][a..b],
+                    row: ex.online_begin(alpha, clip),
+                    lut: &lut,
+                    acc,
+                    tile,
+                });
+            }
+            match pool {
+                Some(p) => par_fused_decode_exaq_spans(&mut jobs, &spans, p),
+                None => fused_decode_exaq_grouped(&mut jobs),
+            }
+            let mut firsts: Vec<usize> = Vec::new();
+            let mut at = 0;
+            for &s in &spans {
+                firsts.push(at);
+                at += s;
+            }
+            let stats: Vec<(Vec<u64>, u32, u64)> = firsts
+                .iter()
+                .map(|&i| {
+                    (
+                        jobs[i].row.counts().to_vec(),
+                        jobs[i].row.fsum(&lut).to_bits(),
+                        jobs[i].row.nnz(),
+                    )
+                })
+                .collect();
+            drop(jobs);
+            let accs: Vec<Vec<i64>> = firsts.iter().map(|&i| accs[i].clone()).collect();
+            (accs, stats)
+        };
+        let (acc_ref, stats_ref) = run(1, None);
+        for width in [1usize, 2, 4, 8] {
+            let pool = tpool(4);
+            let (acc, stats) = run(width, Some(&pool));
+            assert_eq!(acc, acc_ref, "exaq spans w={width}");
+            assert_eq!(stats, stats_ref, "exaq span stats w={width}");
+        }
+    }
+
+    #[test]
+    fn decode_split_spans_policy() {
+        // Explicit width clamps to the page count; zero means auto (pool
+        // workers over batch rows); everything is at least one span.
+        assert_eq!(decode_split_spans(4, 2, 8, 1), 2);
+        assert_eq!(decode_split_spans(4, 100, 8, 1), 4);
+        assert_eq!(decode_split_spans(0, 100, 8, 1), 8);
+        assert_eq!(decode_split_spans(0, 100, 8, 4), 2);
+        assert_eq!(decode_split_spans(0, 100, 8, 32), 1);
+        assert_eq!(decode_split_spans(0, 3, 8, 1), 3);
+        assert_eq!(decode_split_spans(1, 0, 8, 1), 1);
+        assert_eq!(decode_split_spans(0, 16, 0, 0), 1);
+    }
+
+    #[test]
+    fn tiled_prefill_i8_matches_materialized_oracle_bitwise() {
+        // Tiled prefill vs forward_into + paged P̂·V̂: identical integer ops
+        // in identical order ⇒ bit-for-bit equal i32 outputs, at every page
+        // size, under the causal mask, with per-row (grouped-Q) parameters.
+        let mut rng = Pcg64::seed_from_u64(44);
+        let ix = IndexSoftmax::default();
+        let (m, l, k, d) = (9usize, 37usize, 32usize, 8usize);
+        let alphas: Vec<f32> = (0..m).map(|r| 0.002 + 0.0005 * r as f32).collect();
+        let q = rand_i8(&mut rng, m, k);
+        let kmat = rand_i8(&mut rng, l, k);
+        let vmat = rand_i8(&mut rng, l, d);
+        let mut logits = MatI32::zeros(m, l);
+        gemm_i8(&q, &kmat, &mut logits);
+        let n1 = ix.lut.max_index() as u64;
+        for mask in [Mask::None, Mask::CausalFrom(l - m)] {
+            let (probs, want_nnz) = ix.forward_grouped(&logits, |r| r, &alphas, mask);
+            for pr in [1usize, 2, 64] {
+                let kp = split_pages(kmat.as_slice(), k, pr);
+                let vp = split_pages(vmat.as_slice(), d, pr);
+                let mut want = MatI32::zeros(m, d);
+                gemm_u8i8_paged(probs.as_slice(), &vp, want.as_mut_slice(), m, l, d);
+                let params: Vec<(u64, MulShiftDiv)> = alphas
+                    .iter()
+                    .map(|&a| {
+                        let ci = ix.c_int(a) as u64;
+                        (ci, MulShiftDiv::new(ci))
+                    })
+                    .collect();
+                let mut out = vec![0i32; m * d];
+                let mut tile = vec![0i32; PREFILL_TILE_ROWS];
+                let mut job = TiledPrefillJobI8 {
+                    q: q.as_slice(),
+                    row0: 0,
+                    mask,
+                    l,
+                    kp: &kp,
+                    vp: &vp,
+                    params: &params,
+                    n1,
+                    out: &mut out,
+                    tile: &mut tile,
+                    nnz: 0,
+                };
+                tiled_prefill_i8(&mut job, &ix.lut.u8_table);
+                let nnz = job.nnz;
+                drop(job);
+                assert_eq!(out, want.as_slice(), "tiled prefill pr={pr} mask={mask:?}");
+                assert_eq!(nnz, want_nnz, "tiled prefill nnz pr={pr} mask={mask:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_prefill_i8_row_blocks_compose() {
+        // Splitting the row range into ROW_BLOCK jobs (with row0 offsets
+        // into a causal mask) reproduces the single-job walk exactly, and
+        // the parallel driver matches at any pool width.
+        let mut rng = Pcg64::seed_from_u64(45);
+        let ix = IndexSoftmax::default();
+        let (m, l, k, d, alpha) = (13usize, 29usize, 16usize, 8usize, 0.003f32);
+        let q = rand_i8(&mut rng, m, k);
+        let kmat = rand_i8(&mut rng, l, k);
+        let vmat = rand_i8(&mut rng, l, d);
+        let mask = Mask::CausalFrom(l - m);
+        let mut logits = MatI32::zeros(m, l);
+        gemm_i8(&q, &kmat, &mut logits);
+        let probs = ix.forward(&logits, alpha, mask);
+        let kp = split_pages(kmat.as_slice(), k, 3);
+        let vp = split_pages(vmat.as_slice(), d, 3);
+        let mut want = MatI32::zeros(m, d);
+        gemm_u8i8_paged(probs.as_slice(), &vp, want.as_mut_slice(), m, l, d);
+        let ci = ix.c_int(alpha) as u64;
+        let n1 = ix.lut.max_index() as u64;
+        let blocks: Vec<(usize, usize)> = (0..m)
+            .step_by(ROW_BLOCK)
+            .map(|r0| (r0, (r0 + ROW_BLOCK).min(m)))
+            .collect();
+        let mut outs: Vec<Vec<i32>> = blocks.iter().map(|&(a, b)| vec![0i32; (b - a) * d]).collect();
+        let mut tiles: Vec<Vec<i32>> = blocks.iter().map(|_| vec![0i32; PREFILL_TILE_ROWS]).collect();
+        let params: Vec<Vec<(u64, MulShiftDiv)>> = blocks
+            .iter()
+            .map(|&(a, b)| (a..b).map(|_| (ci, MulShiftDiv::new(ci))).collect())
+            .collect();
+        let mut jobs: Vec<TiledPrefillJobI8> = Vec::new();
+        for ((&(a, b), out), (tile, params)) in blocks
+            .iter()
+            .zip(outs.iter_mut())
+            .zip(tiles.iter_mut().zip(params.iter()))
+        {
+            jobs.push(TiledPrefillJobI8 {
+                q: &q.as_slice()[a * k..b * k],
+                row0: a,
+                mask,
+                l,
+                kp: &kp,
+                vp: &vp,
+                params,
+                n1,
+                out,
+                tile,
+                nnz: 0,
+            });
+        }
+        let pool = tpool(4);
+        par_tiled_prefill_i8(&mut jobs, &ix.lut.u8_table, &pool);
+        drop(jobs);
+        let got: Vec<i32> = outs.concat();
+        assert_eq!(got, want.as_slice(), "row-block composition");
+    }
+
+    #[test]
+    fn tiled_prefill_exaq_matches_materialized_oracle() {
+        // Stats pass: exact integer moments about the final max (checked
+        // against a direct reduction). PV pass at a fixed clip: bit-equal to
+        // forward_with_clip_counted + paged P̂·V̂ (same f32 ops, same order).
+        let mut rng = Pcg64::seed_from_u64(46);
+        let ex = ExaqSoftmax::new(ExaqConfig::int3());
+        let (m, l, k, d, alpha, clip) = (6usize, 41usize, 16usize, 8usize, 0.004f32, 1.6f32);
+        let q = rand_i8(&mut rng, m, k);
+        let kmat = rand_i8(&mut rng, l, k);
+        let vmat = rand_i8(&mut rng, l, d);
+        let mask = Mask::CausalFrom(l - m);
+        let mut logits = MatI32::zeros(m, l);
+        gemm_i8(&q, &kmat, &mut logits);
+        for pr in [1usize, 2, 64] {
+            let kp = split_pages(kmat.as_slice(), k, pr);
+            let vp = split_pages(vmat.as_slice(), d, pr);
+            let mut maxes = vec![0i32; m];
+            let mut moments = vec![(0i128, 0i128, 0u64); m];
+            let mut tile = vec![0i32; PREFILL_TILE_ROWS];
+            let mut sjob = TiledPrefillStatsJob {
+                q: q.as_slice(),
+                row0: 0,
+                mask,
+                l,
+                kp: &kp,
+                maxes: &mut maxes,
+                moments: &mut moments,
+                tile: &mut tile,
+            };
+            tiled_prefill_exaq_stats(&mut sjob);
+            drop(sjob);
+            for r in 0..m {
+                let valid = mask.valid_cols(r, l);
+                let row = &logits.row(r)[..valid];
+                let wm = *row.iter().max().unwrap();
+                assert_eq!(maxes[r], wm, "max r={r} pr={pr}");
+                let (mut ds, mut dq) = (0i128, 0i128);
+                for &a in row {
+                    let delta = (wm as i64 - a as i64) as i128;
+                    ds += delta;
+                    dq += delta * delta;
+                }
+                assert_eq!(moments[r], (ds, dq, valid as u64), "moments r={r} pr={pr}");
+            }
+            let (probs, want_nnz) = ex.forward_with_clip_counted(&logits, alpha, mask, clip);
+            let mut want = MatI32::zeros(m, d);
+            gemm_u8i8_paged(probs.as_slice(), &vp, want.as_mut_slice(), m, l, d);
+            let lut = ex.lut_f32(clip);
+            let clip_int = (clip.max(1e-3) / alpha).max(1.0);
+            let mut out = vec![0i32; m * d];
+            let mut job = TiledPrefillExaqJob {
+                q: q.as_slice(),
+                row0: 0,
+                mask,
+                l,
+                kp: &kp,
+                vp: &vp,
+                maxes: &maxes,
+                lut: &lut,
+                clip_int,
+                out: &mut out,
+                tile: &mut tile,
+                nnz: 0,
+            };
+            tiled_prefill_exaq_pv(&mut job);
+            let nnz = job.nnz;
+            drop(job);
+            assert_eq!(out, want.as_slice(), "exaq tiled prefill pr={pr}");
+            assert_eq!(nnz, want_nnz, "exaq tiled prefill nnz pr={pr}");
+        }
+    }
+
+    #[test]
+    fn prefill_tile_walk_covers_valid_prefix_only() {
+        // The tile walk visits exactly the valid prefix, in order, in tiles
+        // no wider than PREFILL_TILE_ROWS, even when a page is bigger.
+        let (k, l) = (4usize, 600usize);
+        let q = vec![1i8; k];
+        let kbuf = vec![1i8; l * k];
+        let kp = split_pages(&kbuf, k, 512); // one huge page + remainder
+        let mut tile = vec![0i32; PREFILL_TILE_ROWS];
+        for valid in [0usize, 1, 255, 256, 257, 512, 600] {
+            let mut seen = 0usize;
+            prefill_qk_tiles(&q, &kp, k, valid, &mut tile, |_, _, t| {
+                assert!(t.len() <= PREFILL_TILE_ROWS);
+                for &a in t {
+                    assert_eq!(a, k as i32); // 1·1 dot over k lanes
+                    seen += 1;
+                }
+            });
+            assert_eq!(seen, valid, "valid={valid}");
         }
     }
 }

@@ -632,6 +632,235 @@ pub fn fused_decode_rows_json(rows: &[FusedDecodeRow]) -> Vec<(String, f64)> {
 }
 
 // ---------------------------------------------------------------------------
+// Page-parallel fused decode — span-split walk vs sequential one-span walk
+
+#[derive(Clone, Debug)]
+pub struct ParallelFusedRow {
+    pub pipeline: PipelineKind,
+    /// Pool width the arms dispatch on.
+    pub threads: usize,
+    /// Context length resident in the KV state when decoding starts.
+    pub ctx: usize,
+    /// Decoded tok/s through the sequential fused walk (`decode_split(1)`:
+    /// one span, one worker per sequence).
+    pub seq_tok_s: f64,
+    /// Decoded tok/s with the page list split across the pool
+    /// (`decode_split(0)`: auto span width, exact integer merge).
+    pub par_tok_s: f64,
+    /// Whether the two arms' final decode outputs were byte-identical —
+    /// the split-invariance contract riding along as a witness (the hard
+    /// assertions live in `tests/fused_decode.rs`).
+    pub identical: bool,
+}
+
+impl ParallelFusedRow {
+    pub fn speedup(&self) -> f64 {
+        if self.seq_tok_s > 0.0 {
+            self.par_tok_s / self.seq_tok_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Sequential-fused vs page-parallel decode throughput over a threads ×
+/// context grid — the batch-of-1 deep-context scaling the span split
+/// exists for. Both arms run the fused walk; only the split policy
+/// differs, so any tok/s gap is pure dispatch. Uses the process page
+/// geometry (`INTATTN_KV_PAGE`, default 64 rows), so the page count — the
+/// parallelism grain — grows with `ctx`.
+pub fn parallel_fused_sweep(
+    ctx_lens: &[usize],
+    d: usize,
+    gen_tokens: usize,
+    thread_list: &[usize],
+) -> Vec<ParallelFusedRow> {
+    let mut rng = Pcg64::seed_from_u64(53);
+    let mut rows = Vec::new();
+    for &threads in thread_list {
+        for &ctx in ctx_lens {
+            let kind = PipelineKind::IntAttention;
+            let cfg = AttentionConfig::new(ctx + gen_tokens, d)
+                .with_threads(threads)
+                .with_fused_decode(true);
+            let mut seq = build_pipeline(kind, cfg.with_decode_split(1));
+            let mut par = build_pipeline(kind, cfg.with_decode_split(0));
+            let mut st_s = seq.begin_state();
+            let (q, k, v) = random_qkv(&mut rng, ctx, d, 1.0);
+            let _ = seq.prefill(&mut st_s, &q, &k, &v);
+            let mut st_p = st_s.clone();
+            let steps: Vec<_> = (0..gen_tokens).map(|_| random_qkv(&mut rng, 1, d, 1.0)).collect();
+
+            let mut last_s = MatF32::zeros(0, 0);
+            let t0 = std::time::Instant::now();
+            for (q1, k1, v1) in &steps {
+                last_s = seq.decode_step(&mut st_s, q1, k1, v1);
+                crate::util::bench::black_box(&last_s);
+            }
+            let dt_s = t0.elapsed().as_secs_f64().max(1e-12);
+
+            let mut last_p = MatF32::zeros(0, 0);
+            let t0 = std::time::Instant::now();
+            for (q1, k1, v1) in &steps {
+                last_p = par.decode_step(&mut st_p, q1, k1, v1);
+                crate::util::bench::black_box(&last_p);
+            }
+            let dt_p = t0.elapsed().as_secs_f64().max(1e-12);
+
+            rows.push(ParallelFusedRow {
+                pipeline: kind,
+                threads,
+                ctx,
+                seq_tok_s: gen_tokens as f64 / dt_s,
+                par_tok_s: gen_tokens as f64 / dt_p,
+                identical: last_s.as_slice() == last_p.as_slice(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn render_parallel_fused(rows: &[ParallelFusedRow]) -> Table {
+    let mut t = Table::new(
+        "Page-parallel fused decode — span-split walk vs sequential walk (tok/s)",
+        &["pipeline", "threads", "ctx", "seq tok/s", "parallel tok/s", "speedup", "identical"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.pipeline.name().into(),
+            r.threads.to_string(),
+            r.ctx.to_string(),
+            format!("{:.0}", r.seq_tok_s),
+            format!("{:.0}", r.par_tok_s),
+            format!("{:.2}x", r.speedup()),
+            if r.identical { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    t
+}
+
+/// JSON payload for the page-parallel decode bench (label/value rows).
+pub fn parallel_fused_rows_json(rows: &[ParallelFusedRow]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for r in rows {
+        let key = format!("{}@t{}ctx{}", r.pipeline.name(), r.threads, r.ctx);
+        out.push((format!("{key}:seq_tok_s"), r.seq_tok_s));
+        out.push((format!("{key}:par_tok_s"), r.par_tok_s));
+        out.push((format!("{key}:speedup"), r.speedup()));
+        out.push((format!("{key}:identical"), if r.identical { 1.0 } else { 0.0 }));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Online-tiled prefill — flash-style loop vs materialized m×L score block
+
+#[derive(Clone, Debug)]
+pub struct TiledPrefillRow {
+    pub pipeline: PipelineKind,
+    /// Rows prefilled in the measured block (the whole context, one call).
+    pub ctx: usize,
+    /// Wall seconds per arm.
+    pub tiled_s: f64,
+    pub materialized_s: f64,
+    /// Peak heap bytes observed during each arm's prefill, when the caller
+    /// can measure them — the `decode_throughput` bench binary installs a
+    /// peak-tracking allocator and probes these; callers without one pass a
+    /// probe returning 0 and the render shows `-`.
+    pub tiled_peak: u64,
+    pub materialized_peak: u64,
+}
+
+/// Tiled vs materialized prefill, one full-context block per arm over
+/// identical inputs. `peak_probe` runs the supplied closure and reports
+/// the peak heap bytes during it (0 = unmeasured) — allocator hooks are
+/// per-binary, so the probe is injected rather than owned here. Wall time
+/// is measured around the same call.
+pub fn tiled_prefill_sweep(
+    ctx_lens: &[usize],
+    d: usize,
+    threads: usize,
+    peak_probe: &mut dyn FnMut(&mut dyn FnMut()) -> u64,
+) -> Vec<TiledPrefillRow> {
+    let mut rng = Pcg64::seed_from_u64(61);
+    let mut rows = Vec::new();
+    for &ctx in ctx_lens {
+        for kind in [PipelineKind::IntAttention, PipelineKind::ExaqInt3] {
+            let cfg = AttentionConfig::new(ctx, d).with_threads(threads);
+            let (q, k, v) = random_qkv(&mut rng, ctx, d, 1.0);
+            // Index 0 = tiled, 1 = materialized.
+            let mut wall = [0f64; 2];
+            let mut peak = [0u64; 2];
+            for (i, tiled) in [true, false].into_iter().enumerate() {
+                let mut pipe = build_pipeline(kind, cfg.with_tiled_prefill(tiled));
+                let mut st = pipe.begin_state();
+                let t0 = std::time::Instant::now();
+                peak[i] = peak_probe(&mut || {
+                    let o = pipe.prefill(&mut st, &q, &k, &v);
+                    crate::util::bench::black_box(&o);
+                });
+                wall[i] = t0.elapsed().as_secs_f64().max(1e-12);
+            }
+            rows.push(TiledPrefillRow {
+                pipeline: kind,
+                ctx,
+                tiled_s: wall[0],
+                materialized_s: wall[1],
+                tiled_peak: peak[0],
+                materialized_peak: peak[1],
+            });
+        }
+    }
+    rows
+}
+
+fn fmt_peak(bytes: u64) -> String {
+    if bytes == 0 {
+        "-".into()
+    } else {
+        format!("{:.2} MiB", bytes as f64 / (1024.0 * 1024.0))
+    }
+}
+
+pub fn render_tiled_prefill(rows: &[TiledPrefillRow]) -> Table {
+    let mut t = Table::new(
+        "Online-tiled prefill — flash-style loop vs materialized m×L block",
+        &["pipeline", "ctx", "mat wall", "tiled wall", "speedup", "mat peak", "tiled peak"],
+    );
+    for r in rows {
+        let speedup =
+            if r.tiled_s > 0.0 { r.materialized_s / r.tiled_s } else { 0.0 };
+        t.row(vec![
+            r.pipeline.name().into(),
+            r.ctx.to_string(),
+            format!("{:.1} ms", r.materialized_s * 1e3),
+            format!("{:.1} ms", r.tiled_s * 1e3),
+            format!("{speedup:.2}x"),
+            fmt_peak(r.materialized_peak),
+            fmt_peak(r.tiled_peak),
+        ]);
+    }
+    t
+}
+
+/// JSON payload for the tiled-prefill bench (label/value rows).
+pub fn tiled_prefill_rows_json(rows: &[TiledPrefillRow]) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for r in rows {
+        let key = format!("prefill:{}@ctx{}", r.pipeline.name(), r.ctx);
+        out.push((format!("{key}:materialized_ms"), r.materialized_s * 1e3));
+        out.push((format!("{key}:tiled_ms"), r.tiled_s * 1e3));
+        if r.materialized_peak > 0 {
+            out.push((format!("{key}:materialized_peak_b"), r.materialized_peak as f64));
+        }
+        if r.tiled_peak > 0 {
+            out.push((format!("{key}:tiled_peak_b"), r.tiled_peak as f64));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Shared-system-prompt admission — prefix sharing vs unshared
 
 #[derive(Clone, Debug)]

@@ -223,22 +223,21 @@ impl ExaqSoftmax {
         nnz
     }
 
-    /// Begin a streamed row for the fused decode walk: online float softmax
-    /// over the EXAQ LUT plus **exact** integer Δ-moment accounting about
-    /// the running max, so the per-sequence running statistics (and thus the
-    /// next dynamic clip) come out of the same single page walk.
+    /// Begin a streamed row for the fused decode walk: a two-phase,
+    /// bucketed online softmax over the EXAQ LUT plus **exact** integer
+    /// Δ-moment accounting about the row max, so the per-sequence running
+    /// statistics (and thus the next dynamic clip) come out of the same
+    /// page walk.
     pub fn online_begin(&self, alpha: f32, clip: f32) -> ExaqOnlineRow {
         ExaqOnlineRow {
             clip_int: (clip.max(1e-3) / alpha).max(1.0),
             entries: self.entries(),
             m: 0,
             started: false,
-            fsum: 0.0,
+            counts: [0; ExaqOnlineRow::MAX_ENTRIES],
             n: 0,
             dsum: 0,
             dsumsq: 0,
-            nnz: 0,
-            rescales: 0,
         }
     }
 
@@ -248,23 +247,18 @@ impl ExaqSoftmax {
     }
 }
 
-/// What the fused EXAQ accumulator must do with one streamed logit.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum ExaqPush {
-    /// Zero contribution: skip the `d`-wide accumulate.
-    Skip,
-    /// Accumulate `e · V̂_row` into the float accumulator.
-    Acc { e: f32 },
-    /// The running max moved: multiply every accumulator lane by `factor`
-    /// (`exp(−αΔm)` through the LUT), then accumulate `1.0 · V̂_row`.
-    Rescale { factor: f32 },
-}
-
-/// Streaming row state for EXAQ's fused decode walk. Tracks the running
-/// max, the float `Σe`, and integer Δ-moments `(n, ΣΔ, ΣΔ²)` **about the
-/// running max**, shifted exactly when the max moves
-/// (`ΣΔ² += 2·Δm·ΣΔ + n·Δm²`, then `ΣΔ += n·Δm`) — so [`Self::stats`]
-/// reproduces `delta_stats` semantics without a second pass, with exact
+/// Streaming row state for EXAQ's fused decode walk, operated in two
+/// phases like `OnlineIndexRow` (max phase, then gather phase) so that
+/// partial states over disjoint page spans merge byte-identically. The
+/// gather phase is *bucketed*: the EXAQ LUT holds at most
+/// [`Self::MAX_ENTRIES`] distinct values, so each element only records its
+/// LUT bucket — per-bucket counts here, per-bucket integer `V̂` lane sums
+/// in the caller's accumulator — and the float combine
+/// `Σ_t LUT[t]·(count_t, acc_t)` happens once, in fixed ascending-bucket
+/// order, after every span has merged. Bucket counts, lane sums and the
+/// Δ-moments `(n, ΣΔ, ΣΔ²)` about the row max are all plain integer adds,
+/// so any split of the walk produces the same bytes; [`Self::stats`]
+/// reproduces `delta_stats` semantics from the same walk with exact
 /// integer arithmetic where the two-pass form sums rounded f64 terms.
 #[derive(Clone, Copy, Debug)]
 pub struct ExaqOnlineRow {
@@ -272,42 +266,42 @@ pub struct ExaqOnlineRow {
     entries: usize,
     m: i32,
     started: bool,
-    fsum: f32,
+    counts: [u64; ExaqOnlineRow::MAX_ENTRIES],
     n: u64,
     dsum: i128,
     dsumsq: i128,
-    nnz: u64,
-    rescales: u64,
 }
 
 impl ExaqOnlineRow {
-    /// Stream one logit; `lut` is [`ExaqSoftmax::lut_f32`] at this row's clip.
+    /// Largest LUT the online form supports (int3 → 8 entries).
+    pub const MAX_ENTRIES: usize = 8;
+
+    /// Max phase: stream one logit, keeping the running row max.
     #[inline]
-    pub fn push(&mut self, a: i32, lut: &[f32]) -> ExaqPush {
-        if !self.started {
+    pub fn observe_max(&mut self, a: i32) {
+        if !self.started || a > self.m {
+            self.m = a;
             self.started = true;
-            self.m = a;
-            self.fsum = lut[0]; // Δ = 0 → exp(0) = 1
-            self.n = 1;
-            self.nnz = 1;
-            return ExaqPush::Acc { e: lut[0] };
         }
-        if a > self.m {
-            let dm = (a as i64 - self.m as i64) as i128;
-            self.m = a;
-            self.rescales += 1;
-            // Shift the exact moments to the new max, then admit Δ = 0.
-            self.dsumsq += 2 * dm * self.dsum + self.n as i128 * dm * dm;
-            self.dsum += self.n as i128 * dm;
-            self.n += 1;
-            let idx = ((dm as f32 / self.clip_int * (self.entries - 1) as f32).round()
-                as usize)
-                .min(self.entries - 1);
-            let factor = lut[idx];
-            self.fsum = self.fsum * factor + lut[0];
-            self.nnz += 1;
-            return ExaqPush::Rescale { factor };
+    }
+
+    /// Fold another span's max phase into this one (associative and
+    /// commutative — every split and merge order yields the same max).
+    #[inline]
+    pub fn merge_max(&mut self, other: &Self) {
+        if other.started {
+            self.observe_max(other.m);
         }
+    }
+
+    /// Gather phase: classify one logit into its LUT bucket — returned so
+    /// the caller can accumulate `V̂` into that bucket's integer lane sums
+    /// (skip when it equals [`Self::zero_bucket`]) — updating the bucket
+    /// counts and the exact Δ-moments. Requires `a ≤ m`, i.e. the max
+    /// phase saw the span first (debug-asserted).
+    #[inline]
+    pub fn gather(&mut self, a: i32) -> usize {
+        debug_assert!(self.started && a <= self.m, "gather before max phase");
         let delta = (self.m as i64 - a as i64) as u64;
         self.dsum += delta as i128;
         self.dsumsq += (delta as i128) * (delta as i128);
@@ -315,31 +309,65 @@ impl ExaqOnlineRow {
         let idx = ((delta as f32 / self.clip_int * (self.entries - 1) as f32).round()
             as usize)
             .min(self.entries - 1);
-        let e = lut[idx];
-        if e == 0.0 {
-            return ExaqPush::Skip;
-        }
-        self.fsum += e;
-        self.nnz += 1;
-        ExaqPush::Acc { e }
+        self.counts[idx] += 1;
+        idx
     }
 
-    /// Running `Σe` for the final `acc/Σe` normalization.
+    /// Bucket index of the LUT's zero entry: gathers landing there carry
+    /// no weight, so callers skip the `V̂` accumulate.
     #[inline]
-    pub fn fsum(&self) -> f32 {
-        self.fsum
+    pub fn zero_bucket(&self) -> usize {
+        self.entries - 1
     }
 
-    /// Elements accumulated with nonzero weight (`pv_gemm` op-count basis).
+    /// Merge another span's partial state. Equal maxes only — the
+    /// two-phase schedule guarantees them, and unlike the IndexSoftmax
+    /// merge a lower-max span's LUT buckets cannot be re-binned exactly.
+    /// Bucket counts and moments add as plain integers, so the merge is
+    /// associative, commutative and byte-exact; the caller adds the
+    /// per-bucket accumulator lanes the same way.
+    pub fn merge(&mut self, other: &Self) {
+        if !other.started {
+            return;
+        }
+        if !self.started {
+            *self = *other;
+            return;
+        }
+        assert_eq!(self.m, other.m, "EXAQ span merge requires equal maxes");
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.n += other.n;
+        self.dsum += other.dsum;
+        self.dsumsq += other.dsumsq;
+    }
+
+    /// Per-bucket element counts (length `entries`).
+    #[inline]
+    pub fn counts(&self) -> &[u64] {
+        &self.counts[..self.entries]
+    }
+
+    /// `Σe` of the merged row: the fixed ascending-bucket combine
+    /// `Σ_t count_t·LUT[t]` — the same bytes for every split of the walk.
+    /// `lut` is [`ExaqSoftmax::lut_f32`] at this row's clip.
+    pub fn fsum(&self, lut: &[f32]) -> f32 {
+        debug_assert_eq!(lut.len(), self.entries);
+        let mut sum = 0f32;
+        for (&c, &w) in self.counts[..self.entries].iter().zip(lut) {
+            if c != 0 {
+                sum += c as f32 * w;
+            }
+        }
+        sum
+    }
+
+    /// Elements carrying nonzero weight — everything outside the LUT's
+    /// zero bucket (`pv_gemm` op-count basis).
     #[inline]
     pub fn nnz(&self) -> u64 {
-        self.nnz
-    }
-
-    /// Times the running max moved.
-    #[inline]
-    pub fn rescales(&self) -> u64 {
-        self.rescales
+        self.n - self.counts[self.entries - 1]
     }
 
     /// The row's Δ-statistics in [`ExaqSoftmax::delta_stats`] units
@@ -519,24 +547,21 @@ mod tests {
     }
 
     #[test]
-    fn online_stats_match_delta_stats_exactly_under_moves() {
-        // Max arrives mid-stream twice; the shifted integer moments must
-        // equal a direct final-max reduction (delta_stats) to the last bit
-        // of the integer sums.
+    fn online_stats_match_delta_stats_exactly() {
+        // Two-phase gather about the global max must equal a direct
+        // final-max reduction (delta_stats) to the last bit of the integer
+        // sums, however the values are ordered.
         let ex = ExaqSoftmax::new(ExaqConfig::int3());
         let alpha = 0.004f32;
         let vals = [100i32, -50, 900, 250, 1800, 1800 - 3, -2000];
         let clip = 2.0f32;
-        let lut = ex.lut_f32(clip);
         let mut row = ex.online_begin(alpha, clip);
-        let mut moves = 0;
         for &a in &vals {
-            if let ExaqPush::Rescale { .. } = row.push(a, &lut) {
-                moves += 1;
-            }
+            row.observe_max(a);
         }
-        assert_eq!(moves, 2);
-        assert_eq!(row.rescales(), 2);
+        for &a in &vals {
+            let _ = row.gather(a);
+        }
         let (sum, sumsq, n) = row.stats(alpha);
         let m = *vals.iter().max().unwrap() as i64;
         let dsum: i64 = vals.iter().map(|&a| m - a as i64).sum();
@@ -547,26 +572,59 @@ mod tests {
     }
 
     #[test]
-    fn online_fsum_matches_two_pass_when_max_first() {
-        // Max first → no rescales → fsum accumulates the same lut gathers in
-        // the same order as the two-pass row sum.
+    fn online_buckets_match_two_pass_gathers_and_merge_exactly() {
+        // Gather indices must equal the two-pass form's, the bucketed fsum
+        // must equal the ascending-bucket combine of those gathers, and a
+        // span-split walk (merge_max + merge) must reproduce the sequential
+        // state byte-for-byte.
         let ex = ExaqSoftmax::new(ExaqConfig::int2());
         let alpha = 0.01f32;
-        let vals = [500i32, 400, 100, 480, -100];
+        let vals = [400i32, 500, 100, 480, -100, 20, 499];
         let clip = 3.0f32;
         let lut = ex.lut_f32(clip);
-        let mut row = ex.online_begin(alpha, clip);
+        let mut seq = ex.online_begin(alpha, clip);
         for &a in &vals {
-            assert!(!matches!(row.push(a, &lut), ExaqPush::Rescale { .. }));
+            seq.observe_max(a);
         }
+        let idxs: Vec<usize> = vals.iter().map(|&a| seq.gather(a)).collect();
         let clip_int = (clip / alpha).max(1.0);
         let n = ex.entries();
-        let mut want = 0f32;
-        for &a in &vals {
+        let mut want_counts = vec![0u64; n];
+        for (&a, &got) in vals.iter().zip(&idxs) {
             let delta = (500 - a) as f32;
             let idx = ((delta / clip_int * (n - 1) as f32).round() as usize).min(n - 1);
-            want += lut[idx];
+            assert_eq!(got, idx);
+            want_counts[idx] += 1;
         }
-        assert_eq!(row.fsum(), want);
+        assert_eq!(seq.counts(), &want_counts[..]);
+        let want_fsum: f32 =
+            want_counts.iter().zip(&lut).map(|(&c, &w)| c as f32 * w).sum();
+        assert_eq!(seq.fsum(&lut), want_fsum);
+        assert_eq!(seq.nnz(), vals.len() as u64 - want_counts[n - 1]);
+
+        for split in 1..vals.len() {
+            let (lo, hi) = vals.split_at(split);
+            let mut a = ex.online_begin(alpha, clip);
+            let mut b = ex.online_begin(alpha, clip);
+            for &x in lo {
+                a.observe_max(x);
+            }
+            for &x in hi {
+                b.observe_max(x);
+            }
+            let mut root = a;
+            root.merge_max(&b);
+            let (mut a, mut b) = (root, root);
+            for &x in lo {
+                let _ = a.gather(x);
+            }
+            for &x in hi {
+                let _ = b.gather(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.counts(), seq.counts(), "split {split}");
+            assert_eq!(a.stats(alpha), seq.stats(alpha), "split {split}");
+            assert_eq!(a.fsum(&lut).to_bits(), seq.fsum(&lut).to_bits(), "split {split}");
+        }
     }
 }

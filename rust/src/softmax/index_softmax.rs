@@ -21,28 +21,41 @@
 //!
 //! ## Online (fused-decode) form
 //!
-//! The fused decode path walks the KV page list once, so the softmax can
-//! never see a whole row before normalizing — there is no materialized row
-//! to normalize. [`OnlineIndexRow`] is the streaming counterpart: it keeps
-//! the running row max `m`, the running sum `ΣÊ`, and tells the caller's
-//! `P̂V̂` accumulator what to do with each streamed logit ([`OnlinePush`]):
+//! The fused decode path walks the KV page list without ever materializing
+//! the L-length row, and the page-parallel driver additionally splits that
+//! list into spans walked by different workers — so the softmax state must
+//! be *mergeable*: partial results over disjoint spans combine in any
+//! order with no change to the bytes. [`OnlineIndexRow`] is that state,
+//! operated in two phases:
 //!
-//! * `a ≤ m`: gather `Ê = LÛT[idx(m − a)]` exactly as the two-pass form
-//!   would, and accumulate `Ê·V̂` (skipped when the gather lands in a zero
-//!   bucket — the same §3.1 sparsity).
-//! * `a > m`: the max moved by `Δm`. All prior mass shrinks by
-//!   `Ê(Δm)/255` — one LUT gather plus one rounded integer multiply per
-//!   accumulator lane ([`rescale_lane_i64`]), the integer analogue of online
-//!   softmax's `e^{m_old − m_new}` carry factor — and the element itself
-//!   contributes `LÛT[0] = 255`.
+//! * **Max phase** ([`OnlineIndexRow::observe_max`]): stream a span's
+//!   logits keeping the running row max. Span maxes combine with
+//!   [`OnlineIndexRow::merge_max`] — `max` is associative and commutative,
+//!   so every split and merge order yields the same global max.
+//! * **Gather phase** ([`OnlineIndexRow::gather`]): with the merged row
+//!   max pinned, re-walk the span gathering `Ê = LÛT[idx(m − a)]` exactly
+//!   as the two-pass form would (zero-bucket entries skipped — the same
+//!   §3.1 sparsity), accumulating the span's `ΣÊ`/`nnz` and handing the
+//!   caller each `Ê` for its `Ê·V̂` accumulator lanes.
+//!
+//! Partial `(max, ΣÊ, acc)` triples combine with [`OnlineIndexRow::merge`].
+//! At equal maxes — which the two-phase schedule guarantees, every span
+//! having been pinned to the merged global max before gathering — the
+//! carry factor is `LÛT[0] = 255` and the merge is a pure integer add:
+//! associative, commutative, and byte-identical to the width-1 sequential
+//! walk for any split points. The operator also accepts unequal maxes,
+//! scaling the lower-max side by `Ê(Δm)/255` — one LUT gather plus one
+//! rounded integer multiply per lane ([`rescale_lane_i64`]), the integer
+//! analogue of online softmax's `e^{m_old − m_new}` carry factor; that
+//! general form composes a LUT-quantized factor and is therefore only
+//! ε-accurate, so the drivers never rely on it.
 //!
 //! The final outputs are produced by a single `round(255·acc / ΣÊ)` per
 //! lane ([`OnlineIndexRow::norm_div`]) instead of rounding each `P̂` before
-//! the `P̂V̂` sum. That reordering (plus the LUT-composed carry factors) is
-//! why the fused path is ε-bounded rather than bit-identical against the
-//! two-pass oracle except in degenerate rows (single surviving entry); the
-//! exact contract lives in the `attention` module docs and is asserted in
-//! `tests/decode_equivalence.rs`.
+//! the `P̂V̂` sum. That reordering is why the fused path is ε-bounded rather
+//! than bit-identical against the two-pass oracle except in degenerate rows
+//! (single surviving entry); the exact contract lives in the `attention`
+//! module docs and is asserted in `tests/decode_equivalence.rs`.
 
 use crate::softmax::lut::ExpLut;
 use crate::tensor::{MatF32, MatI32, MatU8};
@@ -360,8 +373,9 @@ impl IndexSoftmax {
     }
 
     /// Begin a streamed row for the fused decode path (see module docs).
-    /// One per (sequence, decode step); elements are fed with
-    /// [`OnlineIndexRow::push`].
+    /// One per (sequence, decode step) — or one per page span on the
+    /// page-parallel path, the span states combined afterwards with
+    /// [`OnlineIndexRow::merge_max`] and [`OnlineIndexRow::merge`].
     pub fn online_begin(&self, alpha: f32) -> OnlineIndexRow {
         let c_int = self.c_int(alpha) as u64;
         OnlineIndexRow {
@@ -371,31 +385,17 @@ impl IndexSoftmax {
             m: 0,
             esum: 0,
             nnz: 0,
-            rescales: 0,
             started: false,
         }
     }
 }
 
-/// What the fused `P̂V̂` accumulator must do with one streamed logit.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum OnlinePush {
-    /// Contribution is zero (clipped, or the gather landed in a zero
-    /// bucket): nothing to accumulate.
-    Skip,
-    /// Accumulate `e · V̂_row` (`e > 0`) into the accumulator.
-    Acc { e: u8 },
-    /// The element raised the running max: first rescale every accumulator
-    /// lane by `factor/255`, round to nearest ([`rescale_lane_i64`];
-    /// `factor == 0` means all prior mass clipped away — reset the lanes),
-    /// then accumulate `255 · V̂_row` for the element itself.
-    Rescale { factor: u8 },
-}
-
 /// Streaming (online) row state for the fused decode walk: running row max,
-/// running `ΣÊ`, and the sparsity/rescale accounting the op counters need.
-/// The LUT is passed per [`Self::push`] so the state stays `'static` and can
-/// live inside per-sequence job descriptors.
+/// running `ΣÊ`, and the sparsity accounting the op counters need. Operated
+/// in two phases — max, then gather (see the module docs) — so that partial
+/// states over disjoint page spans merge exactly. The LUT is passed per
+/// [`Self::gather`] so the state stays `'static` and `Copy` and can live
+/// inside per-span job descriptors.
 #[derive(Clone, Copy, Debug)]
 pub struct OnlineIndexRow {
     c_int: u64,
@@ -404,54 +404,116 @@ pub struct OnlineIndexRow {
     m: i32,
     esum: u64,
     nnz: u64,
-    rescales: u64,
     started: bool,
 }
 
 impl OnlineIndexRow {
-    /// Stream one logit; `table` is the operator's `lut.u8_table`.
+    /// Max phase: stream one logit, keeping the running row max.
     #[inline]
-    pub fn push(&mut self, a: i32, table: &[u8]) -> OnlinePush {
-        // AUDIT: int-only begin index-softmax-online-push
-        if !self.started {
-            // First element is its own max: Δ = 0 → LUT[0] = 255.
+    pub fn observe_max(&mut self, a: i32) {
+        // AUDIT: int-only begin index-softmax-observe-max
+        if !self.started || a > self.m {
+            self.m = a;
             self.started = true;
-            self.m = a;
-            self.esum = 255;
-            self.nnz = 1;
-            return OnlinePush::Acc { e: 255 };
         }
-        if a > self.m {
-            let dm = (a as i64 - self.m as i64) as u64;
-            self.m = a;
-            self.rescales += 1;
-            let factor = if dm >= self.c_int {
-                0
-            } else {
-                table[self.idx_div.div_round(dm * self.n1) as usize]
-            };
-            // Prior mass shrinks by factor/255 (round to nearest — the same
-            // rounding the lanes apply); the new max contributes LUT[0]=255.
-            self.esum = (self.esum * factor as u64 + 127) / 255 + 255;
-            self.nnz += 1;
-            return OnlinePush::Rescale { factor };
+        // AUDIT: int-only end
+    }
+
+    /// Fold another span's max phase into this one. `max` is associative
+    /// and commutative, so every split and merge order yields the same
+    /// global max.
+    #[inline]
+    pub fn merge_max(&mut self, other: &Self) {
+        if other.started {
+            self.observe_max(other.m);
         }
+    }
+
+    /// Gather phase: with the row max pinned, stream one logit and return
+    /// its `Ê` weight (0 when clipped or in the LUT's zero bucket — nothing
+    /// to accumulate). `table` is the operator's `lut.u8_table`.
+    ///
+    /// Requires `a ≤ m`, i.e. every logit of the span was first seen by the
+    /// max phase (debug-asserted).
+    #[inline]
+    pub fn gather(&mut self, a: i32, table: &[u8]) -> u8 {
+        // AUDIT: int-only begin index-softmax-gather
+        debug_assert!(self.started && a <= self.m, "gather before max phase");
         let delta = (self.m as i64 - a as i64) as u64;
         let e = if delta >= self.c_int {
             0
         } else {
             table[self.idx_div.div_round(delta * self.n1) as usize]
         };
-        if e == 0 {
-            return OnlinePush::Skip;
+        if e != 0 {
+            self.esum += e as u64;
+            self.nnz += 1;
         }
-        self.esum += e as u64;
-        self.nnz += 1;
-        OnlinePush::Acc { e }
+        e
         // AUDIT: int-only end
     }
 
-    /// Running `ΣÊ` (≥ 255 once any element was pushed).
+    /// Merge another span's partial `(max, ΣÊ, acc)` triple into this one —
+    /// the page-parallel combine. At equal maxes (what the two-phase
+    /// schedule always produces) the carry factor is `LÛT[0] = 255` and the
+    /// merge is a pure integer add — associative, commutative, and
+    /// byte-identical to the sequential walk for any split points. With
+    /// unequal maxes the lower-max side's `ΣÊ` and lanes are first scaled
+    /// by `Ê(Δm)/255` ([`rescale_lane_i64`]); that general form composes a
+    /// LUT-quantized factor and is only ε-accurate.
+    pub fn merge(&mut self, other: &Self, acc: &mut [i64], other_acc: &[i64], table: &[u8]) {
+        // AUDIT: int-only begin index-softmax-merge
+        debug_assert_eq!(acc.len(), other_acc.len());
+        if !other.started {
+            return;
+        }
+        if !self.started {
+            self.started = true;
+            self.m = other.m;
+            self.esum = other.esum;
+            self.nnz = other.nnz;
+            acc.copy_from_slice(other_acc);
+            return;
+        }
+        // `nnz` counts accumulated elements (the MACs already spent), so it
+        // adds regardless of which side holds the joint max.
+        self.nnz += other.nnz;
+        let (self_holds_max, dm) = if other.m > self.m {
+            (false, (other.m as i64 - self.m as i64) as u64)
+        } else {
+            (true, (self.m as i64 - other.m as i64) as u64)
+        };
+        let factor = if dm == 0 {
+            255 // LUT[0]: the exact-identity carry of the equal-max case
+        } else if dm >= self.c_int {
+            0
+        } else {
+            table[self.idx_div.div_round(dm * self.n1) as usize]
+        };
+        if self_holds_max {
+            if factor == 255 {
+                self.esum += other.esum;
+                for (x, &y) in acc.iter_mut().zip(other_acc) {
+                    *x += y;
+                }
+            } else {
+                self.esum += (other.esum * factor as u64 + 127) / 255;
+                for (x, &y) in acc.iter_mut().zip(other_acc) {
+                    *x += rescale_lane_i64(y, factor);
+                }
+            }
+        } else {
+            self.m = other.m;
+            self.esum = (self.esum * factor as u64 + 127) / 255 + other.esum;
+            for (x, &y) in acc.iter_mut().zip(other_acc) {
+                *x = rescale_lane_i64(*x, factor) + y;
+            }
+        }
+        // AUDIT: int-only end
+    }
+
+    /// Running `ΣÊ` (≥ 255 on any state whose span holds the row max, since
+    /// the max element gathers `LÛT[0] = 255`).
     #[inline]
     pub fn esum(&self) -> u64 {
         self.esum
@@ -464,16 +526,11 @@ impl OnlineIndexRow {
         self.nnz
     }
 
-    /// Times the running max moved (each cost `d` rescale multiplies).
-    #[inline]
-    pub fn rescales(&self) -> u64 {
-        self.rescales
-    }
-
     /// Divider for the final `P̂V̂ = round(255·acc / ΣÊ)` normalization —
-    /// one per row, like the two-pass form's `norm_div`.
+    /// one per row, like the two-pass form's `norm_div`. Call only on the
+    /// fully merged root state (a partial span may hold `ΣÊ < 255`).
     pub fn norm_div(&self) -> MulShiftDiv {
-        debug_assert!(self.esum >= 255, "norm_div before any push");
+        debug_assert!(self.esum >= 255, "norm_div before the max span was merged");
         MulShiftDiv::new(self.esum)
     }
 }
@@ -821,28 +878,23 @@ mod tests {
     }
 
     #[test]
-    fn online_row_tracks_two_pass_e_values_when_max_comes_first() {
-        // With the row max streamed first the running max never moves, so
-        // every gathered Ê (and the final ΣÊ) must equal the two-pass form's.
+    fn online_gather_matches_two_pass_e_values() {
+        // Max phase over the whole stream, then gathers: every Ê (and the
+        // final ΣÊ) must equal the two-pass form's, in any stream order.
         let ix = IndexSoftmax::default();
         let alpha = 0.002f32;
-        let vals = [9000i32, 2000, 8999, -500, 5000, 9000 - 3200];
+        let vals = [2000i32, 9000, 8999, -500, 5000, 9000 - 3200];
         let mut row = ix.online_begin(alpha);
-        let mut got_e = Vec::new();
         for &a in &vals {
-            match row.push(a, &ix.lut.u8_table) {
-                OnlinePush::Acc { e } => got_e.push(e),
-                OnlinePush::Skip => got_e.push(0),
-                OnlinePush::Rescale { .. } => panic!("max never moves"),
-            }
+            row.observe_max(a);
         }
-        assert_eq!(row.rescales(), 0);
+        let got_e: Vec<u8> = vals.iter().map(|&a| row.gather(a, &ix.lut.u8_table)).collect();
         // Two-pass reference over the same values.
-        let logits = MatI32::from_vec(1, vals.len(), vals.to_vec());
         let c_int = ix.c_int(alpha) as i64;
         let n1 = ix.lut.max_index() as i64;
         let m = *vals.iter().max().unwrap() as i64;
         let mut esum = 0u64;
+        let mut nnz = 0u64;
         for (i, &a) in vals.iter().enumerate() {
             let delta = m - a as i64;
             let want = if delta >= c_int {
@@ -852,28 +904,91 @@ mod tests {
             };
             assert_eq!(got_e[i], want, "element {i}");
             esum += want as u64;
+            nnz += (want != 0) as u64;
         }
         assert_eq!(row.esum(), esum);
-        let _ = ix.forward(&logits, alpha, Mask::None); // sanity: same shapes
+        assert_eq!(row.nnz(), nnz);
     }
 
     #[test]
-    fn online_rescale_factor_matches_lut_of_max_delta() {
+    fn online_merge_is_exact_at_equal_maxes_and_rescales_otherwise() {
         let ix = IndexSoftmax::default();
         let alpha = 0.002f32; // c_int = 3300
-        let mut row = ix.online_begin(alpha);
-        assert_eq!(row.push(100, &ix.lut.u8_table), OnlinePush::Acc { e: 255 });
-        // Max moves by 1000 → factor = LUT[round(1000·31/3300)] = LUT[9].
-        let p = row.push(1100, &ix.lut.u8_table);
-        assert_eq!(p, OnlinePush::Rescale { factor: ix.lut.u8_table[9] });
-        assert_eq!(row.rescales(), 1);
-        // ΣÊ = round(255·factor/255) + 255.
-        let f = ix.lut.u8_table[9] as u64;
-        assert_eq!(row.esum(), (255 * f + 127) / 255 + 255);
-        // A move past c_int clips all prior mass: factor 0, ΣÊ resets to 255.
-        let p = row.push(1100 + 3300, &ix.lut.u8_table);
-        assert_eq!(p, OnlinePush::Rescale { factor: 0 });
-        assert_eq!(row.esum(), 255);
+        let table = &ix.lut.u8_table;
+        let vals = [9000i32, 2000, 8999, -500, 5000, 9000 - 3200];
+
+        // Sequential walk: max phase + gathers over the whole stream, with
+        // a toy 2-lane accumulator weighting each element by (1, i).
+        let mut seq = ix.online_begin(alpha);
+        for &a in &vals {
+            seq.observe_max(a);
+        }
+        let mut seq_acc = [0i64; 2];
+        for (i, &a) in vals.iter().enumerate() {
+            let e = seq.gather(a, table) as i64;
+            seq_acc[0] += e;
+            seq_acc[1] += e * i as i64;
+        }
+
+        // Split into two spans, merge maxes, rebroadcast, gather, merge the
+        // partial triples: byte-identical to the sequential walk.
+        for split in 1..vals.len() {
+            let (lo, hi) = vals.split_at(split);
+            let mut a = ix.online_begin(alpha);
+            let mut b = ix.online_begin(alpha);
+            for &x in lo {
+                a.observe_max(x);
+            }
+            for &x in hi {
+                b.observe_max(x);
+            }
+            let mut root = a;
+            root.merge_max(&b);
+            let (mut a, mut b) = (root, root);
+            let (mut acc_a, mut acc_b) = ([0i64; 2], [0i64; 2]);
+            for (i, &x) in lo.iter().enumerate() {
+                let e = a.gather(x, table) as i64;
+                acc_a[0] += e;
+                acc_a[1] += e * i as i64;
+            }
+            for (i, &x) in hi.iter().enumerate() {
+                let e = b.gather(x, table) as i64;
+                acc_b[0] += e;
+                acc_b[1] += e * (split + i) as i64;
+            }
+            a.merge(&b, &mut acc_a, &acc_b, table);
+            assert_eq!(a.esum(), seq.esum(), "split {split}");
+            assert_eq!(a.nnz(), seq.nnz(), "split {split}");
+            assert_eq!(acc_a, seq_acc, "split {split}");
+        }
+
+        // General (unequal-max) operator: the lower-max side's ΣÊ and lanes
+        // scale by LUT[idx(Δm)]/255 with div_round rounding, then add.
+        let mut lo = ix.online_begin(alpha);
+        lo.observe_max(100);
+        let mut lo_acc = [0i64; 2];
+        let e = lo.gather(100, table) as i64; // Δ=0 → 255
+        lo_acc[0] += e;
+        let mut hi = ix.online_begin(alpha);
+        hi.observe_max(1100);
+        let mut hi_acc = [0i64; 2];
+        let e = hi.gather(1100, table) as i64;
+        hi_acc[0] += e;
+        // Δm = 1000 → factor = LUT[round(1000·31/3300)] = LUT[9].
+        let f = table[9] as u64;
+        let mut merged = hi;
+        merged.merge(&lo, &mut hi_acc, &lo_acc, table);
+        assert_eq!(merged.esum(), (255 * f + 127) / 255 + 255);
+        assert_eq!(hi_acc[0], rescale_lane_i64(255, f as u8) + 255);
+        // A gap past c_int clips the lower side away entirely.
+        let mut far = ix.online_begin(alpha);
+        far.observe_max(100 + 3300);
+        let mut far_acc = [0i64; 2];
+        let _ = far.gather(100 + 3300, table);
+        far_acc[0] = 255;
+        far.merge(&lo, &mut far_acc, &lo_acc, table);
+        assert_eq!(far.esum(), 255);
+        assert_eq!(far_acc[0], 255);
     }
 
     #[test]

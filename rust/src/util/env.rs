@@ -13,6 +13,8 @@
 //! | `INTATTN_KV_PAGE` | snapshot | rows per KV page | `DEFAULT_KV_PAGE_ROWS` (64) |
 //! | `INTATTN_PREFIX_SHARE` | snapshot | copy-on-write prefix sharing (`0`/`false`/`off` disable) | on |
 //! | `INTATTN_FUSED_DECODE` | snapshot | fused one-page-walk decode (`0`/`false`/`off` disable) | on |
+//! | `INTATTN_DECODE_SPLIT` | snapshot | page spans per sequence in the fused decode walk (`0` = auto by pool workers per batch row) | `0` (auto) |
+//! | `INTATTN_TILED_PREFILL` | snapshot | online-tiled (flash-style) prefill (`0`/`false`/`off` fall back to the materialized score block) | on |
 //! | `INTATTN_BENCH_FAST` | snapshot | `=1` shrinks every bench to CI smoke budgets | off |
 //! | `INTATTN_FAULT` | snapshot | fault-injection plan armed on engine start ([`crate::util::fault`]) | unset (inert) |
 //! | `INTATTN_DRAIN_TIMEOUT_MS` | snapshot | engine shutdown-drain hard stop, ms (`0` = unlimited) | `DEFAULT_DRAIN_TIMEOUT_MS` (10000) |
@@ -23,7 +25,7 @@
 //!
 //! ## Snapshot semantics
 //!
-//! The eight *snapshot* knobs configure process-lifetime singletons (the
+//! The ten *snapshot* knobs configure process-lifetime singletons (the
 //! global pool, the page geometry every state must agree on, the serving
 //! defaults). They are read **exactly once**, together, on the first
 //! [`knobs`] call; later environment mutations are invisible. That is a
@@ -44,7 +46,7 @@ use std::sync::OnceLock;
 /// overrides; `0` means wait forever).
 pub const DEFAULT_DRAIN_TIMEOUT_MS: u64 = 10_000;
 
-/// The eight process-lifetime knobs, snapshotted together on first access.
+/// The ten process-lifetime knobs, snapshotted together on first access.
 #[derive(Clone, Copy, Debug)]
 pub struct Knobs {
     /// `INTATTN_THREADS` — computing threads for the global pool.
@@ -57,6 +59,11 @@ pub struct Knobs {
     pub prefix_share: bool,
     /// `INTATTN_FUSED_DECODE` — fused flash-decode default.
     pub fused_decode: bool,
+    /// `INTATTN_DECODE_SPLIT` — page spans per sequence in the fused decode
+    /// walk (`0` = auto: pool workers left over per batch row).
+    pub decode_split: usize,
+    /// `INTATTN_TILED_PREFILL` — online-tiled (flash-style) prefill default.
+    pub tiled_prefill: bool,
     /// `INTATTN_BENCH_FAST` — CI smoke budgets for every bench harness.
     pub bench_fast: bool,
     /// `INTATTN_FAULT` — fault-injection plan armed on the first engine
@@ -68,7 +75,7 @@ pub struct Knobs {
     pub drain_timeout_ms: u64,
 }
 
-/// The process-wide snapshot. First call reads all eight variables; every
+/// The process-wide snapshot. First call reads all ten variables; every
 /// later call returns the same values.
 pub fn knobs() -> &'static Knobs {
     static K: OnceLock<Knobs> = OnceLock::new();
@@ -78,6 +85,10 @@ pub fn knobs() -> &'static Knobs {
         kv_page_rows: page_rows_from(std::env::var("INTATTN_KV_PAGE").ok().as_deref()),
         prefix_share: prefix_share_from(std::env::var("INTATTN_PREFIX_SHARE").ok().as_deref()),
         fused_decode: fused_decode_from(std::env::var("INTATTN_FUSED_DECODE").ok().as_deref()),
+        decode_split: decode_split_from(std::env::var("INTATTN_DECODE_SPLIT").ok().as_deref()),
+        tiled_prefill: tiled_prefill_from(
+            std::env::var("INTATTN_TILED_PREFILL").ok().as_deref(),
+        ),
         bench_fast: bench_fast_from(std::env::var("INTATTN_BENCH_FAST").ok().as_deref()),
         fault: fault_from(std::env::var("INTATTN_FAULT").ok().as_deref())
             .map(|s| &*Box::leak(s.into_boxed_str())),
@@ -125,6 +136,21 @@ pub fn prefix_share_from(env: Option<&str>) -> bool {
 /// `INTATTN_FUSED_DECODE`: `0`/`false`/`off` (whitespace-tolerant) disable;
 /// anything else — including unset — enables.
 pub fn fused_decode_from(env: Option<&str>) -> bool {
+    !matches!(env.map(str::trim), Some("0") | Some("false") | Some("off"))
+}
+
+/// `INTATTN_DECODE_SPLIT`: page spans per sequence in the fused decode
+/// walk. `0` — and junk or unset — means auto (the split policy divides
+/// the pool's workers across the batch; see
+/// [`crate::gemm::decode_split_spans`]).
+pub fn decode_split_from(env: Option<&str>) -> usize {
+    env.and_then(|v| v.trim().parse::<usize>().ok()).unwrap_or(0)
+}
+
+/// `INTATTN_TILED_PREFILL`: `0`/`false`/`off` (whitespace-tolerant) fall
+/// back to the materialized-score-block prefill; anything else — including
+/// unset — keeps the online-tiled walk.
+pub fn tiled_prefill_from(env: Option<&str>) -> bool {
     !matches!(env.map(str::trim), Some("0") | Some("false") | Some("off"))
 }
 
@@ -197,6 +223,26 @@ mod tests {
         assert!(!fused_decode_from(Some("false")));
         assert!(!fused_decode_from(Some("off")));
         assert!(!fused_decode_from(Some(" 0 ")));
+    }
+
+    #[test]
+    fn decode_split_policy() {
+        assert_eq!(decode_split_from(None), 0, "unset = auto");
+        assert_eq!(decode_split_from(Some("0")), 0);
+        assert_eq!(decode_split_from(Some("4")), 4);
+        assert_eq!(decode_split_from(Some(" 2 ")), 2);
+        assert_eq!(decode_split_from(Some("junk")), 0, "junk falls back to auto");
+    }
+
+    #[test]
+    fn tiled_prefill_policy() {
+        assert!(tiled_prefill_from(None));
+        assert!(tiled_prefill_from(Some("1")));
+        assert!(tiled_prefill_from(Some("yes")));
+        assert!(!tiled_prefill_from(Some("0")));
+        assert!(!tiled_prefill_from(Some("false")));
+        assert!(!tiled_prefill_from(Some("off")));
+        assert!(!tiled_prefill_from(Some(" 0 ")));
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //! constant. A reintroduced per-step `Vec` of logits (4·L bytes) fails this
 //! immediately at either context size.
 //!
+//! The same accounting holds the **online-tiled prefill** to its
+//! acceptance criterion: a prefill block's heap traffic must not scale
+//! with the resident context it attends over (no `m×L` score block),
+//! while the materialized arm — kept as the oracle — demonstrably does.
+//!
 //! This file stays a single `#[test]`: the byte counter is process-global,
 //! and sibling tests running on other threads would bleed into the
 //! measurement windows.
@@ -144,6 +149,95 @@ fn decode_step_heap_traffic_does_not_scale_with_context() {
                  buffer is being materialized per token",
                 kind.name()
             );
+        }
+    }
+
+    prefill_heap_traffic_does_not_scale_with_context();
+}
+
+/// Bytes allocated by one m-row prefill block against an already-resident
+/// context: minimum over 6 measured blocks (K/V damped so the re-scale
+/// remap cannot fire inside a window). Each block grows the context by m,
+/// which is negligible against the contexts compared.
+fn steady_prefill_bytes(
+    pipe: &mut dyn AttentionPipeline,
+    st: &mut KvState,
+    rng: &mut Pcg64,
+    m: usize,
+    d: usize,
+) -> u64 {
+    let mut samples = Vec::new();
+    for i in 0..8 {
+        let q = rand_mat(rng, m, d);
+        let mut k = rand_mat(rng, m, d);
+        let mut v = rand_mat(rng, m, d);
+        for x in k.as_mut_slice().iter_mut().chain(v.as_mut_slice()) {
+            *x *= 0.5;
+        }
+        let before = allocated();
+        let o = pipe.prefill(st, &q, &k, &v);
+        let delta = allocated() - before;
+        assert!(o.as_slice().iter().all(|x| x.is_finite()));
+        if i >= 2 {
+            samples.push(delta);
+        }
+    }
+    samples.into_iter().min().unwrap()
+}
+
+/// Called from the single `#[test]` above (same process-global counter):
+/// with the page count pinned, a tiled prefill block's allocation minimum
+/// at a much larger resident context must match the small-context one —
+/// while the materialized arm must visibly pay the `m×L` score block.
+fn prefill_heap_traffic_does_not_scale_with_context() {
+    let d = 32;
+    let m = 8usize;
+    let page_rows = 1usize << 14;
+    let (small_ctx, large_ctx) = (128usize, 1024);
+    for kind in [PipelineKind::IntAttention, PipelineKind::ExaqInt3] {
+        for tiled in [true, false] {
+            let mut rng = Pcg64::seed_from_u64(13);
+            let mut pipe = build_pipeline(
+                kind,
+                AttentionConfig::new(0, d).with_tiled_prefill(tiled),
+            );
+            let mut small = KvState::with_page_rows(kind, d, page_rows);
+            let (q, k, v) = (
+                rand_mat(&mut rng, small_ctx, d),
+                rand_mat(&mut rng, small_ctx, d),
+                rand_mat(&mut rng, small_ctx, d),
+            );
+            let _ = pipe.prefill(&mut small, &q, &k, &v);
+            let mut large = KvState::with_page_rows(kind, d, page_rows);
+            let (q, k, v) = (
+                rand_mat(&mut rng, large_ctx, d),
+                rand_mat(&mut rng, large_ctx, d),
+                rand_mat(&mut rng, large_ctx, d),
+            );
+            let _ = pipe.prefill(&mut large, &q, &k, &v);
+
+            let small_bytes = steady_prefill_bytes(pipe.as_mut(), &mut small, &mut rng, m, d);
+            let large_bytes = steady_prefill_bytes(pipe.as_mut(), &mut large, &mut rng, m, d);
+            if tiled {
+                assert!(
+                    large_bytes <= small_bytes + 64,
+                    "{} tiled prefill allocates {large_bytes} B/block at ctx {large_ctx} vs \
+                     {small_bytes} B/block at ctx {small_ctx} — an L-dependent buffer is \
+                     being materialized",
+                    kind.name()
+                );
+            } else {
+                // The materialized oracle must actually pay ≥ the m×L i32
+                // logit block's growth — guards the contrast from a silent
+                // no-op (e.g. the toggle wiring breaking).
+                let floor = (m * (large_ctx - small_ctx) * 4) as u64;
+                assert!(
+                    large_bytes >= small_bytes + floor,
+                    "{} materialized prefill: {large_bytes} vs {small_bytes} B/block — \
+                     expected the m×L score block to grow by ≥ {floor} B",
+                    kind.name()
+                );
+            }
         }
     }
 }

@@ -53,9 +53,14 @@ fn run_schedule(
     fused: bool,
     page_rows: usize,
     d: usize,
+    split: usize,
 ) -> Vec<f32> {
     let mut rng = Pcg64::seed_from_u64(42);
-    let mut pipe = make(kind, scheme, AttentionConfig::new(0, d).with_fused_decode(fused));
+    let mut pipe = make(
+        kind,
+        scheme,
+        AttentionConfig::new(0, d).with_fused_decode(fused).with_decode_split(split),
+    );
 
     // Donor prefix with ramping K/V magnitudes: the running abs-max grows
     // repeatedly, so the INT8 re-scale remap runs during prefill too.
@@ -131,8 +136,8 @@ fn fused_decode_page_invariant_and_faithful_under_remaps_sharing_and_ragged_batc
     for &(kind, scheme) in cases {
         let mut fused_outs: Vec<Vec<f32>> = Vec::new();
         for &page_rows in page_list {
-            let f = run_schedule(kind, scheme, true, page_rows, d);
-            let u = run_schedule(kind, scheme, false, page_rows, d);
+            let f = run_schedule(kind, scheme, true, page_rows, d, 1);
+            let u = run_schedule(kind, scheme, false, page_rows, d, 1);
             assert_eq!(f.len(), u.len());
             if kind == PipelineKind::QuantOnly {
                 // No fused form: the toggle must be a no-op.
@@ -154,6 +159,35 @@ fn fused_decode_page_invariant_and_faithful_under_remaps_sharing_and_ragged_batc
                 "{} {scheme:?}: fused output must be byte-identical at page sizes 1 vs {p}",
                 kind.name()
             );
+        }
+    }
+}
+
+/// Contract 3 (page-parallel spans): the split width is pure schedule. The
+/// same serving schedule — re-scale remaps, CoW shared prefixes, ragged
+/// batches — run at split widths 1/2/4/8 (and auto) must produce
+/// **byte-identical** outputs for every integer kind at every page size:
+/// the two-phase walk's partials are associative integer sums, so where the
+/// page list is cut (and how many workers gather) can never show up in the
+/// output.
+#[test]
+fn fused_decode_split_width_is_pure_schedule() {
+    let d = 16;
+    let kinds = [PipelineKind::IntAttention, PipelineKind::ExaqInt2, PipelineKind::ExaqInt3];
+    let kinds: &[PipelineKind] = if cfg!(miri) { &kinds[..1] } else { &kinds };
+    let page_list: &[usize] = if cfg!(miri) { &[2] } else { &[1, 2, 64] };
+    let splits: &[usize] = if cfg!(miri) { &[2, 4] } else { &[2, 4, 8, 0] };
+    for &kind in kinds {
+        for &page_rows in page_list {
+            let base = run_schedule(kind, None, true, page_rows, d, 1);
+            for &split in splits {
+                let got = run_schedule(kind, None, true, page_rows, d, split);
+                assert_eq!(
+                    base, got,
+                    "{} page {page_rows} split {split}: split width leaked into the output",
+                    kind.name()
+                );
+            }
         }
     }
 }

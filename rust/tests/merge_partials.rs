@@ -1,0 +1,327 @@
+//! Property test for the page-parallel fused-decode **merge operator**: for
+//! random logit streams, any contiguous partition of the KV page walk,
+//! combined in any associative order (left fold, right fold, balanced
+//! tree), must be **byte-identical** to the sequential two-phase walk —
+//! IndexSoftmax exactly (`ΣÊ`, nnz and every i64 accumulator lane), EXAQ
+//! exactly on its bucketed integer state (lane sums, bucket counts, exact
+//! Δ-moments, and the final `fsum` float bit pattern). Page sizes 1/2/64 ×
+//! split widths 1/2/4/8, L chosen so every split is ragged.
+//!
+//! The general unequal-max form of [`OnlineIndexRow::merge`] (spans that
+//! ran their own max phases, combined via the `rescale_lane_i64` carry) is
+//! LUT-quantized and only ε-accurate — covered here by its algebraic
+//! contracts: identity on unstarted states, the merged max is the global
+//! max, nnz adds, and the result stays close to the pinned-max walk.
+//!
+//! End-to-end split invariance at pipeline level (CoW prefixes, remaps,
+//! every integer `PipelineKind`) lives in `tests/fused_decode.rs`.
+
+use intattention::gemm::{
+    fused_decode_exaq, fused_decode_exaq_gather, fused_decode_exaq_max, fused_decode_i8,
+    fused_decode_i8_gather, fused_decode_i8_max,
+};
+use intattention::softmax::exaq::{ExaqConfig, ExaqOnlineRow, ExaqSoftmax};
+use intattention::softmax::index_softmax::{IndexSoftmax, OnlineIndexRow};
+use intattention::util::prng::Pcg64;
+
+const D: usize = 8;
+const K: usize = 16;
+
+fn rand_rows(rng: &mut Pcg64, rows: usize, width: usize) -> Vec<i8> {
+    (0..rows * width).map(|_| rng.range_i64(-127, 128) as i8).collect()
+}
+
+/// Split a contiguous `rows×width` buffer into pages of at most
+/// `rows_per_page` whole rows (the layout `PagedRows` hands the kernels).
+fn split_pages<T>(buf: &[T], width: usize, rows_per_page: usize) -> Vec<&[T]> {
+    assert_eq!(buf.len() % width, 0);
+    buf.chunks(rows_per_page.max(1) * width).collect()
+}
+
+/// Balanced contiguous partition of a page list into `w.min(len)` spans.
+fn partition<'a>(pages: &'a [&'a [i8]], w: usize) -> Vec<&'a [&'a [i8]]> {
+    let n = w.min(pages.len()).max(1);
+    let (base, extra) = (pages.len() / n, pages.len() % n);
+    let mut out = Vec::with_capacity(n);
+    let mut at = 0;
+    for s in 0..n {
+        let take = base + usize::from(s < extra);
+        out.push(&pages[at..at + take]);
+        at += take;
+    }
+    assert_eq!(at, pages.len());
+    out
+}
+
+// --------------------------- IndexSoftmax ---------------------------
+
+#[derive(Clone)]
+struct PartI8 {
+    row: OnlineIndexRow,
+    acc: Vec<i64>,
+}
+
+fn merge_i8(mut a: PartI8, b: &PartI8, table: &[u8]) -> PartI8 {
+    a.row.merge(&b.row, &mut a.acc, &b.acc, table);
+    a
+}
+
+fn tree_merge_i8(parts: &[PartI8], table: &[u8]) -> PartI8 {
+    if parts.len() == 1 {
+        return parts[0].clone();
+    }
+    let mid = parts.len() / 2;
+    let left = tree_merge_i8(&parts[..mid], table);
+    let right = tree_merge_i8(&parts[mid..], table);
+    merge_i8(left, &right, table)
+}
+
+/// Run the split walk: per-span max phases, max folds, rebroadcast, per-span
+/// gathers — returning the unmerged partials (the span drivers' state just
+/// before the combine).
+fn partials_i8(
+    sx: &IndexSoftmax,
+    alpha: f32,
+    q: &[i8],
+    kp: &[&[i8]],
+    vp: &[&[i8]],
+    w: usize,
+    tile: &mut [i32],
+) -> Vec<PartI8> {
+    let table = &sx.lut.u8_table;
+    let kspans = partition(kp, w);
+    let vspans = partition(vp, w);
+    let mut rows: Vec<OnlineIndexRow> = kspans
+        .iter()
+        .map(|span| {
+            let mut row = sx.online_begin(alpha);
+            fused_decode_i8_max(q, span, &mut row, tile);
+            row
+        })
+        .collect();
+    let mut root = rows[0];
+    for r in &rows[1..] {
+        root.merge_max(r);
+    }
+    for r in rows.iter_mut() {
+        *r = root;
+    }
+    kspans
+        .iter()
+        .zip(&vspans)
+        .zip(rows)
+        .map(|((ks, vs), mut row)| {
+            let mut acc = vec![0i64; D];
+            fused_decode_i8_gather(q, ks, vs, &mut row, table, &mut acc, tile);
+            PartI8 { row, acc }
+        })
+        .collect()
+}
+
+#[test]
+fn index_softmax_partition_merges_byte_identical_in_any_order() {
+    let mut rng = Pcg64::seed_from_u64(7);
+    let l = if cfg!(miri) { 19 } else { 37 };
+    let page_list: &[usize] = if cfg!(miri) { &[1, 2] } else { &[1, 2, 64] };
+    let splits: &[usize] = if cfg!(miri) { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let sx = IndexSoftmax::default();
+    let table = &sx.lut.u8_table;
+    for trial in 0..if cfg!(miri) { 2 } else { 8 } {
+        let alpha = 0.004 + 0.003 * trial as f32;
+        let q: Vec<i8> = rand_rows(&mut rng, 1, K);
+        let kbuf = rand_rows(&mut rng, l, K);
+        let vbuf = rand_rows(&mut rng, l, D);
+        for &pr in page_list {
+            let kp = split_pages(&kbuf, K, pr);
+            let vp = split_pages(&vbuf, D, pr);
+            let mut tile = vec![0i32; pr.min(l)];
+
+            let mut seq_row = sx.online_begin(alpha);
+            let mut seq_acc = vec![0i64; D];
+            fused_decode_i8(&q, &kp, &vp, &mut seq_row, table, &mut seq_acc, &mut tile);
+
+            for &w in splits {
+                let parts = partials_i8(&sx, alpha, &q, &kp, &vp, w, &mut tile);
+                // Left fold, right fold, balanced tree: same bytes.
+                let left = parts[1..]
+                    .iter()
+                    .fold(parts[0].clone(), |a, b| merge_i8(a, b, table));
+                let right = parts[..parts.len() - 1]
+                    .iter()
+                    .rev()
+                    .fold(parts[parts.len() - 1].clone(), |a, b| merge_i8(a, b, table));
+                let tree = tree_merge_i8(&parts, table);
+                for (name, got) in [("left", &left), ("right", &right), ("tree", &tree)] {
+                    assert_eq!(
+                        got.acc, seq_acc,
+                        "trial {trial} page {pr} split {w} {name}: accumulator lanes"
+                    );
+                    assert_eq!(got.row.esum(), seq_row.esum(), "trial {trial} page {pr} split {w} {name}");
+                    assert_eq!(got.row.nnz(), seq_row.nnz(), "trial {trial} page {pr} split {w} {name}");
+                }
+            }
+        }
+    }
+}
+
+/// The general (unequal-max) merge form: spans that ran their own max
+/// phases. LUT-quantized carry — ε-accurate, plus exact algebraic edges.
+#[test]
+fn index_softmax_general_merge_algebra() {
+    let mut rng = Pcg64::seed_from_u64(11);
+    let l = 24;
+    let alpha = 0.01f32;
+    let sx = IndexSoftmax::default();
+    let table = &sx.lut.u8_table;
+    let q: Vec<i8> = rand_rows(&mut rng, 1, K);
+    let kbuf = rand_rows(&mut rng, l, K);
+    let vbuf = rand_rows(&mut rng, l, D);
+    let kp = split_pages(&kbuf, K, 2);
+    let vp = split_pages(&vbuf, D, 2);
+    let mut tile = vec![0i32; 2];
+
+    // Sequential single-max oracle.
+    let mut seq_row = sx.online_begin(alpha);
+    let mut seq_acc = vec![0i64; D];
+    fused_decode_i8(&q, &kp, &vp, &mut seq_row, table, &mut seq_acc, &mut tile);
+
+    // Two spans, each a full independent walk against its own span max.
+    let kspans = partition(&kp, 2);
+    let vspans = partition(&vp, 2);
+    let mut parts: Vec<PartI8> = kspans
+        .iter()
+        .zip(&vspans)
+        .map(|(ks, vs)| {
+            let mut row = sx.online_begin(alpha);
+            let mut acc = vec![0i64; D];
+            fused_decode_i8(&q, ks, vs, &mut row, table, &mut acc, &mut tile);
+            PartI8 { row, acc }
+        })
+        .collect();
+
+    // Merging an unstarted row is an identity; merging into one copies.
+    let empty = sx.online_begin(alpha);
+    let before = parts[0].clone();
+    let merged = merge_i8(before.clone(), &PartI8 { row: empty, acc: vec![0; D] }, table);
+    assert_eq!(merged.acc, before.acc);
+    assert_eq!(merged.row.esum(), before.row.esum());
+    let adopted = merge_i8(PartI8 { row: empty, acc: vec![0; D] }, &before, table);
+    assert_eq!(adopted.acc, before.acc);
+    assert_eq!(adopted.row.esum(), before.row.esum());
+
+    // The general carry: merged state tracks the pinned-max walk closely
+    // (the carry factor is LUT-quantized, so not bit-exact in general).
+    let b = parts.pop().unwrap();
+    let a = parts.pop().unwrap();
+    let nnz_sum = a.row.nnz() + b.row.nnz();
+    let g = merge_i8(a, &b, table);
+    assert_eq!(g.row.nnz(), nnz_sum, "nnz adds regardless of carry");
+    let dot: f64 = g.acc.iter().zip(&seq_acc).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = g.acc.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = seq_acc.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(dot / (na * nb) > 0.99, "general merge strays from the oracle");
+    let rel = (g.row.esum() as f64 - seq_row.esum() as f64).abs() / seq_row.esum() as f64;
+    assert!(rel < 0.05, "ΣÊ relative error {rel}");
+}
+
+// ------------------------------- EXAQ -------------------------------
+
+#[derive(Clone)]
+struct PartExaq {
+    row: ExaqOnlineRow,
+    acc: Vec<i64>,
+}
+
+fn merge_exaq(mut a: PartExaq, b: &PartExaq) -> PartExaq {
+    a.row.merge(&b.row);
+    for (x, &y) in a.acc.iter_mut().zip(&b.acc) {
+        *x += y;
+    }
+    a
+}
+
+fn tree_merge_exaq(parts: &[PartExaq]) -> PartExaq {
+    if parts.len() == 1 {
+        return parts[0].clone();
+    }
+    let mid = parts.len() / 2;
+    merge_exaq(tree_merge_exaq(&parts[..mid]), &tree_merge_exaq(&parts[mid..]))
+}
+
+#[test]
+fn exaq_partition_merges_byte_identical_in_any_order() {
+    let mut rng = Pcg64::seed_from_u64(23);
+    let l = if cfg!(miri) { 19 } else { 37 };
+    let page_list: &[usize] = if cfg!(miri) { &[1, 2] } else { &[1, 2, 64] };
+    let splits: &[usize] = if cfg!(miri) { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    for (bits, clip) in [(2u32, 2.5f32), (3, 4.0)] {
+        let sx = ExaqSoftmax::new(if bits == 2 { ExaqConfig::int2() } else { ExaqConfig::int3() });
+        let entries = sx.entries();
+        let alpha = 0.02f32;
+        let lut = sx.lut_f32(clip);
+        let q: Vec<i8> = rand_rows(&mut rng, 1, K);
+        let kbuf = rand_rows(&mut rng, l, K);
+        let vbuf = rand_rows(&mut rng, l, D);
+        for &pr in page_list {
+            let kp = split_pages(&kbuf, K, pr);
+            let vp = split_pages(&vbuf, D, pr);
+            let mut tile = vec![0i32; pr.min(l)];
+
+            let mut seq_row = sx.online_begin(alpha, clip);
+            let mut seq_acc = vec![0i64; entries * D];
+            fused_decode_exaq(&q, &kp, &vp, &mut seq_row, &mut seq_acc, &mut tile);
+
+            for &w in splits {
+                let kspans = partition(&kp, w);
+                let vspans = partition(&vp, w);
+                let mut rows: Vec<ExaqOnlineRow> = kspans
+                    .iter()
+                    .map(|span| {
+                        let mut row = sx.online_begin(alpha, clip);
+                        fused_decode_exaq_max(&q, span, &mut row, &mut tile);
+                        row
+                    })
+                    .collect();
+                let mut root = rows[0];
+                for r in &rows[1..] {
+                    root.merge_max(r);
+                }
+                for r in rows.iter_mut() {
+                    *r = root;
+                }
+                let parts: Vec<PartExaq> = kspans
+                    .iter()
+                    .zip(&vspans)
+                    .zip(rows)
+                    .map(|((ks, vs), mut row)| {
+                        let mut acc = vec![0i64; entries * D];
+                        fused_decode_exaq_gather(&q, ks, vs, &mut row, &mut acc, &mut tile);
+                        PartExaq { row, acc }
+                    })
+                    .collect();
+                let left = parts[1..].iter().fold(parts[0].clone(), |a, b| merge_exaq(a, b));
+                let right = parts[..parts.len() - 1]
+                    .iter()
+                    .rev()
+                    .fold(parts[parts.len() - 1].clone(), |a, b| merge_exaq(a, b));
+                let tree = tree_merge_exaq(&parts);
+                for (name, got) in [("left", &left), ("right", &right), ("tree", &tree)] {
+                    assert_eq!(
+                        got.acc, seq_acc,
+                        "int{bits} page {pr} split {w} {name}: bucket lanes"
+                    );
+                    assert_eq!(got.row.counts(), seq_row.counts(), "int{bits} page {pr} split {w} {name}");
+                    assert_eq!(got.row.nnz(), seq_row.nnz(), "int{bits} page {pr} split {w} {name}");
+                    assert_eq!(
+                        got.row.fsum(&lut).to_bits(),
+                        seq_row.fsum(&lut).to_bits(),
+                        "int{bits} page {pr} split {w} {name}: fsum bits"
+                    );
+                    let (gs, gq, gn) = got.row.stats(alpha);
+                    let (ss, sq, sn) = seq_row.stats(alpha);
+                    assert_eq!((gs.to_bits(), gq.to_bits(), gn), (ss.to_bits(), sq.to_bits(), sn));
+                }
+            }
+        }
+    }
+}
