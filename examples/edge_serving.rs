@@ -10,7 +10,7 @@
 
 use intattention::attention::PipelineKind;
 use intattention::coordinator::batcher::BatchPolicy;
-use intattention::coordinator::{Engine, EngineOptions};
+use intattention::coordinator::{Engine, EngineOptions, SubmitOptions};
 use intattention::harness::experiments::load_or_random_weights;
 use intattention::harness::workload::request_trace;
 use intattention::model::tokenizer;
@@ -35,6 +35,7 @@ fn main() {
             attention: kind,
             policy: BatchPolicy { max_active: 6, ..Default::default() },
             max_queue: 64,
+            ..Default::default()
         };
         let handle = Engine::start(weights.clone(), opts);
         let t0 = std::time::Instant::now();
@@ -49,14 +50,14 @@ fn main() {
             let plen = r.prompt_len.min(cfg.max_seq.saturating_sub(r.gen_len + 1)).max(1);
             let start = (r.arrival_us as usize) % (corpus_tokens.len() - plen - 1);
             let prompt = corpus_tokens[start..start + plen].to_vec();
-            match handle.submit(prompt, r.gen_len, 0.7, 12) {
+            match handle.submit(prompt, r.gen_len, SubmitOptions::sampling(0.7, 12)) {
                 Ok(rx) => receivers.push(rx),
                 Err(_) => rejected += 1,
             }
         }
         let mut ttfts = Vec::new();
-        for rx in receivers {
-            if let Ok(resp) = rx.recv() {
+        for mut rx in receivers {
+            if let Ok(resp) = rx.recv_final() {
                 ttfts.push(resp.ttft_us() as f64 / 1e3);
             }
         }

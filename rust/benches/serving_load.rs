@@ -1,0 +1,166 @@
+//! Serving load generator — the standing "heavy traffic" benchmark over
+//! the streaming engine. Open-loop Poisson arrivals (submission times come
+//! from the trace, never from request completion — queueing delay is part
+//! of the measurement, as in real serving load tests) with Zipf-mixed
+//! prompt lengths, one collector thread per request consuming its event
+//! stream the way a network client would. Reports, per pipeline:
+//!
+//! * **TTFT p50/p95/p99** — client-observed submit → first Token event;
+//! * **inter-token latency p50/p95/p99** — client-observed gaps between
+//!   consecutive Token events of one request;
+//! * **aggregate tok/s** — streamed tokens over the wall clock;
+//! * rejected submits (backpressure at the configured queue bound).
+//!
+//! Written as the `serving_load` report (rows keyed
+//! `<pipeline>/<metric>`), compared across commits by `benchdiff`.
+
+use intattention::attention::PipelineKind;
+use intattention::coordinator::batcher::BatchPolicy;
+use intattention::coordinator::{Engine, EngineOptions, StreamEvent, SubmitOptions};
+use intattention::harness::experiments::load_or_random_weights;
+use intattention::harness::report::{kv_rows_json, write_report};
+use intattention::harness::workload::request_trace;
+use intattention::util::prng::Pcg64;
+use intattention::util::stats::percentile;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// What one simulated client saw of its own stream.
+struct ClientObs {
+    ttft_ms: Option<f64>,
+    gaps_ms: Vec<f64>,
+    tokens: usize,
+    ok: bool,
+}
+
+fn pct(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        percentile(xs, p)
+    }
+}
+
+fn main() {
+    let fast = intattention::util::env::knobs().bench_fast;
+    // Fast mode keeps the report shape identical on a fraction of the load.
+    let (n_requests, rate_per_s, max_gen) = if fast { (16, 32.0, 6) } else { (96, 24.0, 16) };
+    let weights = load_or_random_weights();
+    let max_seq = weights.cfg.max_seq;
+
+    let mut lines = vec![
+        "serving_load — open-loop Poisson arrivals against the streaming engine".to_string(),
+        format!("requests {n_requests} | rate {rate_per_s}/s | max gen {max_gen}"),
+        String::new(),
+    ];
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    for kind in [PipelineKind::QuantOnly, PipelineKind::IntAttention] {
+        let opts = EngineOptions {
+            attention: kind,
+            policy: BatchPolicy { max_active: 6, ..Default::default() },
+            max_queue: 64,
+            ..Default::default()
+        };
+        let h = Engine::start(weights.clone(), opts);
+        let mut rng = Pcg64::seed_from_u64(0x10AD);
+        let trace = request_trace(&mut rng, n_requests, rate_per_s, &[8, 24, 48], max_gen);
+        let (obs_tx, obs_rx) = mpsc::channel::<ClientObs>();
+        let mut collectors = Vec::new();
+        let mut rejected = 0usize;
+        let t0 = Instant::now();
+        for r in &trace {
+            // Open loop: pace by the trace's arrival stamp, regardless of
+            // how far behind the engine is.
+            if let Some(sleep) = Duration::from_micros(r.arrival_us).checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            let plen = r.prompt_len.min(max_seq.saturating_sub(r.gen_len + 1)).max(1);
+            let prompt: Vec<u16> = (0..plen).map(|i| (i * 31 % 64) as u16).collect();
+            match h.submit(prompt, r.gen_len, SubmitOptions::default()) {
+                Ok(mut rx) => {
+                    let tx = obs_tx.clone();
+                    let submitted = Instant::now();
+                    collectors.push(std::thread::spawn(move || {
+                        let mut obs = ClientObs {
+                            ttft_ms: None,
+                            gaps_ms: Vec::new(),
+                            tokens: 0,
+                            ok: false,
+                        };
+                        let mut last: Option<Instant> = None;
+                        loop {
+                            match rx.recv() {
+                                Ok(StreamEvent::Token { .. }) => {
+                                    let now = Instant::now();
+                                    if obs.ttft_ms.is_none() {
+                                        obs.ttft_ms = Some((now - submitted).as_secs_f64() * 1e3);
+                                    }
+                                    if let Some(prev) = last {
+                                        obs.gaps_ms.push((now - prev).as_secs_f64() * 1e3);
+                                    }
+                                    last = Some(now);
+                                    obs.tokens += 1;
+                                }
+                                Ok(StreamEvent::Final(resp)) => {
+                                    obs.ok = resp.finish.is_ok();
+                                    break;
+                                }
+                                Ok(_) => {}
+                                Err(_) => break,
+                            }
+                        }
+                        let _ = tx.send(obs);
+                    }));
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        drop(obs_tx);
+        for c in collectors {
+            let _ = c.join();
+        }
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let snap = h.shutdown();
+
+        let all: Vec<ClientObs> = obs_rx.try_iter().collect();
+        let ttfts: Vec<f64> = all.iter().filter(|o| o.ok).filter_map(|o| o.ttft_ms).collect();
+        let gaps: Vec<f64> = all.iter().flat_map(|o| o.gaps_ms.iter().copied()).collect();
+        let streamed: usize = all.iter().map(|o| o.tokens).sum();
+        let tok_s = streamed as f64 / wall_s;
+
+        let label = match kind {
+            PipelineKind::QuantOnly => "quant_only",
+            _ => "int_attention",
+        };
+        lines.push(format!(
+            "{:<14} ttft p50 {:>7.2} ms  p95 {:>7.2} ms  p99 {:>7.2} ms | \
+             itl p50 {:>6.2} ms  p95 {:>6.2} ms  p99 {:>6.2} ms | \
+             {:>8.1} tok/s streamed | {} rejected",
+            kind.name(),
+            pct(&ttfts, 50.0),
+            pct(&ttfts, 95.0),
+            pct(&ttfts, 99.0),
+            pct(&gaps, 50.0),
+            pct(&gaps, 95.0),
+            pct(&gaps, 99.0),
+            tok_s,
+            rejected,
+        ));
+        lines.push(format!("  engine: {}", snap.render()));
+        rows.push((format!("{label}/ttft_p50_ms"), pct(&ttfts, 50.0)));
+        rows.push((format!("{label}/ttft_p95_ms"), pct(&ttfts, 95.0)));
+        rows.push((format!("{label}/ttft_p99_ms"), pct(&ttfts, 99.0)));
+        rows.push((format!("{label}/itl_p50_ms"), pct(&gaps, 50.0)));
+        rows.push((format!("{label}/itl_p95_ms"), pct(&gaps, 95.0)));
+        rows.push((format!("{label}/itl_p99_ms"), pct(&gaps, 99.0)));
+        rows.push((format!("{label}/tok_s"), tok_s));
+        rows.push((format!("{label}/rejected"), rejected as f64));
+    }
+
+    let table = lines.join("\n");
+    println!("{table}");
+    let path = write_report("serving_load", &table, Some(kv_rows_json(&rows)))
+        .expect("write serving_load report");
+    println!("report: {}", path.display());
+}

@@ -1,0 +1,103 @@
+//! `serve` — the TCP front-end binary: start the IntAttention serving
+//! engine and expose it over the length-prefixed wire protocol of
+//! [`intattention::coordinator::tcp`] (see the README's "serving
+//! front-end" section for the frame tables).
+//!
+//! ```sh
+//! cargo run --release --bin serve -- --addr 127.0.0.1:7411
+//! # in another shell: one streamed smoke request
+//! cargo run --release --bin serve -- --client --addr 127.0.0.1:7411
+//! ```
+//!
+//! The listen address comes from `--addr`, falling back to
+//! `INTATTN_SERVE_ADDR`, then `127.0.0.1:7411`. The server runs until the
+//! process is killed; `--client` instead connects to `--addr`, drives one
+//! streamed request, prints every frame, and exits 0 iff the stream
+//! terminated with a FINAL frame.
+
+use intattention::attention::PipelineKind;
+use intattention::coordinator::batcher::BatchPolicy;
+use intattention::coordinator::tcp::{run_client, ServerMsg, TcpServer};
+use intattention::coordinator::{Engine, EngineOptions, SubmitOptions};
+use intattention::harness::experiments::load_or_random_weights;
+use intattention::util::cli::Command;
+use std::sync::Arc;
+
+const DEFAULT_ADDR: &str = "127.0.0.1:7411";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = Command::new("serve", "TCP front-end for the IntAttention serving engine")
+        .opt("addr", "listen/connect address (default INTATTN_SERVE_ADDR)", None)
+        .opt("pipeline", "attention backend", Some("int"))
+        .opt("max-active", "max concurrent decodes", Some("8"))
+        .opt("max-queue", "wait-queue bound (backpressure)", Some("64"))
+        .opt("gen", "--client: tokens to request", Some("8"))
+        .flag("client", "drive one streamed request against --addr and exit");
+    let args = match cmd.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => std::env::var("INTATTN_SERVE_ADDR").unwrap_or_else(|_| DEFAULT_ADDR.into()),
+    };
+    let run = || -> anyhow::Result<()> {
+        if args.flag("client") {
+            client(&addr, args.get_usize("gen", 8)?)
+        } else {
+            server(&addr, &args)
+        }
+    };
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn server(addr: &str, args: &intattention::util::cli::Args) -> anyhow::Result<()> {
+    let kind = args.get_or("pipeline", "int");
+    let kind = PipelineKind::parse(kind)
+        .ok_or_else(|| anyhow::anyhow!("unknown pipeline '{kind}'"))?;
+    let opts = EngineOptions {
+        attention: kind,
+        policy: BatchPolicy {
+            max_active: args.get_usize("max-active", 8)?,
+            ..Default::default()
+        },
+        max_queue: args.get_usize("max-queue", 64)?,
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::start(load_or_random_weights(), opts));
+    let server = TcpServer::spawn(Arc::clone(&engine), addr)?;
+    println!("serving on {} (pipeline {})", server.local_addr(), kind.name());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+        println!("{}", engine.metrics().render());
+    }
+}
+
+fn client(addr: &str, gen: usize) -> anyhow::Result<()> {
+    let prompt: Vec<u16> = (1..=8).collect();
+    let events = run_client(addr, &prompt, gen, SubmitOptions::default())?;
+    let mut ok = false;
+    for ev in &events {
+        match ev {
+            ServerMsg::Queued { id, .. } => println!("queued id={id}"),
+            ServerMsg::Prefilling { ts_us, .. } => println!("prefilling at {ts_us}us"),
+            ServerMsg::Token { index, token, ts_us, .. } => {
+                println!("token[{index}] = {token} at {ts_us}us")
+            }
+            ServerMsg::Final { finish, total_us, tokens, .. } => {
+                println!("final: finish={finish} tokens={tokens:?} total={total_us}us");
+                ok = *finish == 0 && !tokens.is_empty();
+            }
+            ServerMsg::Rejected { code, .. } => println!("rejected: code {code}"),
+        }
+    }
+    anyhow::ensure!(ok, "stream did not end in a successful FINAL frame");
+    Ok(())
+}

@@ -52,6 +52,18 @@ pub struct BatchPolicy {
     /// `prefill_chunk > 0`. Defaults from `INTATTN_PREFIX_SHARE`
     /// ([`crate::coordinator::prefix::default_prefix_share`]).
     pub prefix_share: bool,
+    /// Prefill/decode interleaving gate (TGI's `waiting_served_ratio`):
+    /// while decodes are in flight, hold new admissions back until the
+    /// waiting set is at least `waiting_served_ratio` × the active set, so
+    /// a busy decode batch is not stalled by a prefill for every lone
+    /// straggler — prefill work amortizes over a worthwhile cohort. An idle
+    /// engine always admits immediately. 0 disables the gate (admit
+    /// greedily every round). Defaults from `INTATTN_WAITING_RATIO`.
+    pub waiting_served_ratio: f32,
+    /// Age valve for the ratio gate: a request that has waited this many
+    /// scheduling rounds is admitted regardless of the ratio, so the gate
+    /// bounds added queueing delay instead of starving stragglers.
+    pub max_waiting_rounds: u64,
 }
 
 impl Default for BatchPolicy {
@@ -63,6 +75,8 @@ impl Default for BatchPolicy {
             prefill_chunk: 256,
             max_kv_pages: 0,
             prefix_share: crate::coordinator::prefix::default_prefix_share(),
+            waiting_served_ratio: crate::util::env::knobs().waiting_ratio,
+            max_waiting_rounds: 8,
         }
     }
 }
@@ -81,6 +95,17 @@ pub fn select_admissions(
     let slots = policy.max_active.saturating_sub(active);
     if slots == 0 || queue.is_empty() {
         return Vec::new();
+    }
+    // Interleaving gate: with decodes in flight, defer prefills until the
+    // waiting cohort is worth the stall (or a straggler has aged out).
+    if policy.waiting_served_ratio > 0.0 && active > 0 {
+        let cohort_ready =
+            queue.len() as f32 >= policy.waiting_served_ratio * active as f32;
+        let aged_out =
+            queue.iter().any(|r| r.waited_rounds >= policy.max_waiting_rounds);
+        if !cohort_ready && !aged_out {
+            return Vec::new();
+        }
     }
     // Candidate indices in admission order.
     let mut order: Vec<usize> = (0..queue.len()).collect();
@@ -117,12 +142,14 @@ pub fn select_admissions(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+    use crate::coordinator::request::{CancelToken, StreamTx};
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{mpsc, Arc};
     use std::time::Instant;
 
     fn req(id: u64, plen: usize) -> Request {
         let (tx, _rx) = mpsc::channel();
-        // Keep the receiver alive is unnecessary for batcher tests.
+        // Keeping the receiver alive is unnecessary for batcher tests.
         std::mem::forget(_rx);
         Request {
             id,
@@ -132,8 +159,9 @@ mod tests {
             top_k: 1,
             arrived: Instant::now(),
             deadline: None,
-            cancel: crate::coordinator::request::CancelToken::new(),
-            reply: tx,
+            waited_rounds: 0,
+            cancel: CancelToken::new(),
+            stream: StreamTx::new(tx, Arc::new(AtomicUsize::new(0)), 0),
         }
     }
 
@@ -177,8 +205,15 @@ mod tests {
 
     #[test]
     fn oversized_prompt_not_starved() {
+        // Ratio gate disabled so this exercises the token budget alone.
+        let policy = BatchPolicy {
+            max_active: 4,
+            prefill_token_budget: 1000,
+            shortest_first: true,
+            waiting_served_ratio: 0.0,
+            ..Default::default()
+        };
         let mut queue = q(vec![req(1, 5000)]);
-        let policy = BatchPolicy { max_active: 4, prefill_token_budget: 1000, shortest_first: true, ..Default::default() };
         // Nothing active → must still admit.
         let adm = select_admissions(&mut queue, 0, &policy);
         assert_eq!(adm.len(), 1);
@@ -186,6 +221,61 @@ mod tests {
         let mut queue = q(vec![req(1, 5000)]);
         let adm = select_admissions(&mut queue, 1, &policy);
         assert!(adm.is_empty());
+    }
+
+    #[test]
+    fn ratio_gate_defers_until_cohort_is_worthwhile() {
+        let policy = BatchPolicy {
+            max_active: 8,
+            waiting_served_ratio: 1.2,
+            max_waiting_rounds: 1000,
+            ..Default::default()
+        };
+        // 2 active, 1 waiting: 1 < 1.2 × 2 → hold the prefill back.
+        let mut queue = q(vec![req(1, 10)]);
+        assert!(select_admissions(&mut queue, 2, &policy).is_empty());
+        assert_eq!(queue.len(), 1, "deferred request stays queued");
+        // 2 active, 3 waiting: 3 ≥ 2.4 → the cohort admits together.
+        let mut queue = q(vec![req(1, 10), req(2, 10), req(3, 10)]);
+        assert_eq!(select_admissions(&mut queue, 2, &policy).len(), 3);
+    }
+
+    #[test]
+    fn ratio_gate_age_valve_admits_stragglers() {
+        let policy = BatchPolicy {
+            max_active: 8,
+            waiting_served_ratio: 4.0,
+            max_waiting_rounds: 8,
+            ..Default::default()
+        };
+        let mut old = req(1, 10);
+        old.waited_rounds = 8;
+        let mut queue = q(vec![old]);
+        let adm = select_admissions(&mut queue, 2, &policy);
+        assert_eq!(adm.len(), 1, "aged-out straggler bypasses the ratio");
+    }
+
+    #[test]
+    fn ratio_gate_never_delays_an_idle_engine() {
+        let policy = BatchPolicy {
+            max_active: 8,
+            waiting_served_ratio: 100.0,
+            max_waiting_rounds: 1000,
+            ..Default::default()
+        };
+        let mut queue = q(vec![req(1, 10)]);
+        assert_eq!(select_admissions(&mut queue, 0, &policy).len(), 1);
+    }
+
+    #[test]
+    fn ratio_gate_disabled_at_zero() {
+        let policy = BatchPolicy {
+            max_active: 8,
+            waiting_served_ratio: 0.0,
+            ..Default::default()
+        };
+        let mut queue = q(vec![req(1, 10)]);
+        assert_eq!(select_admissions(&mut queue, 7, &policy).len(), 1);
     }
 
     #[test]

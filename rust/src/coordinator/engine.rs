@@ -1,22 +1,51 @@
 //! The serving engine: a scheduler thread running continuous batching over
-//! the tiny LM, with bounded-queue admission (backpressure) and metrics.
+//! the tiny LM, with bounded-queue admission (backpressure), per-token
+//! streamed delivery, and metrics.
 //!
-//! ## Request lifecycle
+//! ## Request lifecycle (streaming states)
+//!
+//! Every accepted submit returns a [`StreamRx`] over which the scheduler
+//! narrates the request's life as [`StreamEvent`]s — the states below *are*
+//! the events on the wire:
 //!
 //! ```text
-//! Queued ──► Prefill ──► Decode ──► Done / Length
-//!    │          │           │
-//!    └──────────┴───────────┴─────► Cancelled / DeadlineExceeded / Error
+//!            submit            admission            prefill done
+//! (accepted) ──────► Queued ──────────► Prefilling ─────────────► Token #0
+//!                      │                    │                        │
+//!                      │                    │              batched decode rounds
+//!                      │                    │                        ▼
+//!                      │                    │                 Token #1 … #n ──► Final{Done|Length}
+//!                      │                    │                        │
+//!                      ▼                    ▼                        ▼
+//!                   Final{Cancelled | DeadlineExceeded}    Final{Cancelled |
+//!                    (swept from the wait queue)            DeadlineExceeded | Error}
 //! ```
 //!
-//! Every submitted request receives **exactly one terminal [`Response`]**,
-//! whatever path it takes:
+//! * `Queued` is emitted by the handle the moment a submit is accepted;
+//!   it is always the stream's first event.
+//! * `Prefilling` is emitted when the request admits into the active set;
+//!   its timestamp is the queueing delay. A request swept from the wait
+//!   queue (cancel/deadline/drain) retires without ever reaching this
+//!   state, so the event is absent from its stream.
+//! * One `Token` event per decoded token, emitted **as each round's
+//!   batched decode lands** (the first token is sampled at prefill
+//!   completion): strictly sequential indexes, decode order, µs
+//!   timestamps on the request's arrival clock.
+//! * Exactly one terminal `Final` per accepted submit, whatever path the
+//!   request takes, carrying the full [`Response`] (token sequence +
+//!   timing breakdown derived from the same stamps as the events — see
+//!   [`Response`]). Nothing follows `Final`.
+//!
+//! Terminal reasons:
 //!
 //! * **Done / Length** — ran to `gen_len`, or the context filled first
 //!   (truncated, never padded).
 //! * **Cancelled** — the client called [`CancelToken::cancel`], dropped its
-//!   [`ResponseRx`] (hang-up = implicit cancel), or a drain/hard-stop
-//!   answered work the engine will not run. Partial tokens are returned.
+//!   [`StreamRx`] (hang-up = implicit cancel), fell behind a bounded
+//!   [`SubmitOptions::stream_buffer`] (a client that stopped reading is
+//!   indistinguishable from one that vanished — the engine must not buffer
+//!   without bound), or a drain/hard-stop answered work the engine will
+//!   not run. Partial tokens are returned.
 //! * **DeadlineExceeded** — the submit-relative deadline
 //!   ([`SubmitOptions::deadline`]) passed; checked at every round boundary
 //!   for queued and active requests alike.
@@ -24,9 +53,11 @@
 //!   ([`std::panic::catch_unwind`]) and the poisoned request retired; the
 //!   scheduler, the other in-flight requests and the prefix index survive.
 //!
-//! Cancellation/deadline checks run at round boundaries; a retired
-//! request's [`KvCache`] drops the same round, returning its pages to the
-//! process-wide pool immediately.
+//! Cancellation/deadline/overflow checks run at round boundaries; a
+//! retired request's [`KvCache`] drops the same round, returning its pages
+//! to the process-wide pool immediately. Clients that only want the
+//! terminal response call [`StreamRx::recv_all`] — the whole-`Response`
+//! compatibility shim over the same stream.
 //!
 //! ## Panic isolation
 //!
@@ -62,8 +93,14 @@
 //!      Then the lifecycle sweep: cancelled/expired requests (queued or
 //!      active) retire with their terminal reason, and during a drain the
 //!      whole wait queue answers `Cancelled`.
-//!   2. Admit new requests per [`BatchPolicy`] (prefill phase; records
-//!      TTFT), under the **KV page budget**: each candidate charges its
+//!   2. Admit new requests per [`BatchPolicy`] (prefill phase; emits
+//!      `Prefilling` and records TTFT). Admissions interleave into
+//!      in-flight decode under the `waiting_served_ratio` gate
+//!      ([`BatchPolicy::waiting_served_ratio`]): while decodes run, new
+//!      prefills wait until the waiting set is worth the stall (or a
+//!      straggler ages past [`BatchPolicy::max_waiting_rounds`]), so token
+//!      streams keep flowing instead of hiccuping for every lone arrival.
+//!      Admission also runs under the **KV page budget**: each candidate charges its
 //!      projected footprint — [`KvCache::pages_for_tokens`] over prompt +
 //!      full generation — against [`BatchPolicy::max_kv_pages`], and a
 //!      request that would overflow waits (pinned head-of-line, so smaller
@@ -89,8 +126,11 @@
 //!      GEMM pairs per round. Per sequence the results are bit-identical to
 //!      the sequential loop; only the kernel shapes change. Appends fill
 //!      each state's tail page in place, so a long-running sequence never
-//!      re-copies its history the way contiguous `Vec` growth did.
-//!   4. Retire finished requests, replying on their channels. Dropping a
+//!      re-copies its history the way contiguous `Vec` growth did. Every
+//!      token sampled this round — prefill-completion firsts and decode
+//!      nexts alike — is emitted as a `Token` event before the round ends:
+//!      clients observe tokens at decode cadence, not at request end.
+//!   4. Retire finished requests, emitting their terminal `Final`. Dropping a
 //!      retired request's [`KvCache`] returns its pages to the pool **that
 //!      same round**, which is what lets the next KV-deferred request in
 //!      the queue admit (and reuse those very pages); pages the prefix
@@ -140,14 +180,15 @@ use crate::coordinator::batcher::{select_admissions, BatchPolicy};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::prefix::{PrefixIndex, PREFIX_INDEX_CAP};
 use crate::coordinator::request::{
-    CancelToken, FinishReason, Request, Response, ResponseRx, SubmitError, SubmitOptions,
+    CancelToken, FinishReason, Request, Response, StreamEvent, StreamRx, StreamTx, SubmitError,
+    SubmitOptions,
 };
 use crate::model::lm::{sample_row, KvCache, TinyLm};
 use crate::model::weights::Weights;
 use crate::util::fault;
 use std::collections::VecDeque;
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -210,11 +251,16 @@ struct Active {
     /// retires with [`FinishReason::Error`] this round, partial tokens
     /// attached; nothing else shares its fate.
     failed: bool,
-    queue_us: u64,
-    prefill_started: Instant,
-    /// Set when the prefill phase completes (admission → first token).
-    prefill_us: u64,
-    decode_started: Instant,
+    /// Admission stamp (µs since arrival) — the `Prefilling` event's
+    /// timestamp and the response's `queue_us`, one and the same.
+    admitted_us: u64,
+    /// First-token stamp (µs since arrival) — the `Token { index: 0 }`
+    /// event's timestamp; `None` while still prefilling. The response's
+    /// `prefill_us`/`decode_us` split derives from it at retirement.
+    first_token_us: Option<u64>,
+    /// Stamp of the most recent token (µs since arrival), for the
+    /// engine-side inter-token latency histogram.
+    last_token_us: u64,
     rng: crate::util::prng::Pcg64,
 }
 
@@ -237,29 +283,17 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Submit a generation request with default [`SubmitOptions`] (no
-    /// deadline). Dropping the returned [`ResponseRx`] cancels the request.
+    /// Submit a generation request; returns the stream handle (event
+    /// receiver + cancel lever). Sampling, deadline and stream-buffer
+    /// parameters all ride on the [`SubmitOptions`] builder; exactly one
+    /// terminal [`StreamEvent::Final`] arrives per accepted submit, and
+    /// dropping the returned [`StreamRx`] before it cancels the request.
     pub fn submit(
         &self,
         prompt: Vec<u16>,
         gen_len: usize,
-        temperature: f32,
-        top_k: usize,
-    ) -> Result<ResponseRx, SubmitError> {
-        self.submit_with(prompt, gen_len, temperature, top_k, SubmitOptions::default())
-    }
-
-    /// Submit a generation request; returns the response handle (receiver +
-    /// cancel lever). Exactly one terminal [`Response`] arrives per
-    /// accepted submit.
-    pub fn submit_with(
-        &self,
-        prompt: Vec<u16>,
-        gen_len: usize,
-        temperature: f32,
-        top_k: usize,
         opts: SubmitOptions,
-    ) -> Result<ResponseRx, SubmitError> {
+    ) -> Result<StreamRx, SubmitError> {
         if self.shutdown.load(Ordering::SeqCst) {
             return Err(SubmitError::ShuttingDown);
         }
@@ -279,16 +313,24 @@ impl EngineHandle {
         self.queue_len.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = mpsc::channel();
         let cancel = CancelToken::new();
+        let pending = Arc::new(AtomicUsize::new(0));
+        let stream = StreamTx::new(tx, Arc::clone(&pending), opts.stream_buffer);
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        // `Queued` is the stream's first event — emitted here, before the
+        // scheduler can see the request, so it causally precedes every
+        // scheduler-side event on the same channel.
+        stream.send(StreamEvent::Queued { id });
         let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::SeqCst),
+            id,
             prompt,
             gen_len: gen_len.max(1),
-            temperature,
-            top_k: top_k.max(1),
+            temperature: opts.temperature,
+            top_k: opts.top_k.max(1),
             arrived: Instant::now(),
             deadline: opts.deadline,
+            waited_rounds: 0,
             cancel: cancel.clone(),
-            reply: tx,
+            stream,
         };
         if self.tx.send(req).is_err() {
             // The scheduler thread is gone (it only exits by shutdown or
@@ -300,7 +342,7 @@ impl EngineHandle {
             return Err(SubmitError::ShuttingDown);
         }
         self.metrics.on_submit();
-        Ok(ResponseRx::new(rx, cancel))
+        Ok(StreamRx::new(rx, cancel, pending))
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -373,19 +415,10 @@ impl Engine {
             max_context,
         }
     }
-
-    /// Deprecated alias of [`Engine::start`]. Historically `start` hardcoded
-    /// an effectively unbounded queue (1 M entries) and only this entry
-    /// point applied `opts.max_queue`; `start` now enforces the bound
-    /// itself, so the two are identical.
-    #[deprecated(note = "Engine::start now enforces opts.max_queue; call it directly")]
-    pub fn start_bounded(weights: Weights, opts: EngineOptions) -> EngineHandle {
-        Self::start(weights, opts)
-    }
 }
 
 /// Answer a request that never ran (swept from the wait queue) with its
-/// terminal response: empty tokens, its whole life counted as queueing.
+/// terminal `Final`: empty tokens, its whole life counted as queueing.
 fn send_terminal(metrics: &Metrics, req: Request, finish: FinishReason) {
     let queue_us = req.arrived.elapsed().as_micros() as u64;
     let resp = Response {
@@ -398,25 +431,33 @@ fn send_terminal(metrics: &Metrics, req: Request, finish: FinishReason) {
         total_us: queue_us,
     };
     metrics.on_complete(&resp);
-    let _ = req.reply.send(resp); // receiver may have gone away
+    req.stream.send(StreamEvent::Final(resp)); // receiver may have gone away
 }
 
 /// Retire an in-flight request with `finish` and its partial (or full)
-/// output. Dropping `a` — and with it the [`KvCache`] — returns every page
-/// the sequence held to the process-wide pool this same round.
+/// output, emitting the stream's terminal `Final`. The µs timing fields are
+/// derived here from the request's event stamps — admission, first token,
+/// and the retirement stamp taken now, all on the arrival clock — so the
+/// stream and the terminal breakdown agree by construction and
+/// `queue_us + prefill_us + decode_us == total_us` holds exactly. Dropping
+/// `a` — and with it the [`KvCache`] — returns every page the sequence held
+/// to the process-wide pool this same round.
 fn retire_active(metrics: &Metrics, a: Active, finish: FinishReason) {
-    let decode_us = if a.prefilling() {
-        0
-    } else {
-        a.decode_started.elapsed().as_micros() as u64
-    };
     let total_us = a.req.arrived.elapsed().as_micros() as u64;
+    let queue_us = a.admitted_us;
+    let (prefill_us, decode_us) = match a.first_token_us {
+        // Prefill completed: the first-token stamp splits the post-queue
+        // life into prefill and decode.
+        Some(first) => (first.saturating_sub(queue_us), total_us.saturating_sub(first)),
+        // Cut mid-prefill: the whole post-queue life was prefill.
+        None => (total_us.saturating_sub(queue_us), 0),
+    };
     let resp = Response {
         id: a.req.id,
         finish,
         tokens: a.generated,
-        queue_us: a.queue_us,
-        prefill_us: a.prefill_us,
+        queue_us,
+        prefill_us,
         decode_us,
         total_us,
     };
@@ -424,7 +465,7 @@ fn retire_active(metrics: &Metrics, a: Active, finish: FinishReason) {
     // A failed send means the receiver is gone — the client's hang-up is an
     // implicit cancel, normally caught earlier via the CancelToken; at this
     // point the request is retiring anyway, so delivery is best-effort.
-    let _ = a.req.reply.send(resp);
+    a.req.stream.send(StreamEvent::Final(resp));
 }
 
 fn scheduler_loop(
@@ -484,7 +525,7 @@ fn scheduler_loop(
         // answers `Cancelled` instead of being dropped on the floor.
         if !waiting.is_empty() {
             let mut keep: VecDeque<Request> = VecDeque::with_capacity(waiting.len());
-            for req in waiting.drain(..) {
+            for mut req in waiting.drain(..) {
                 let finish = if req.cancel.is_cancelled() {
                     Some(FinishReason::Cancelled)
                 } else if req.deadline_exceeded() {
@@ -496,21 +537,29 @@ fn scheduler_loop(
                 };
                 match finish {
                     Some(f) => send_terminal(&metrics, req, f),
-                    None => keep.push_back(req),
+                    None => {
+                        // Age for the admission gate's straggler valve.
+                        req.waited_rounds += 1;
+                        keep.push_back(req);
+                    }
                 }
             }
             waiting = keep;
         }
-        // (1c) lifecycle sweep — active set: a cancelled/expired request
-        // retires right now, partial tokens attached; dropping its cache
-        // returns the pages to the pool this round (the freed budget is
-        // visible to this very round's admissions).
+        // (1c) lifecycle sweep — active set: a cancelled/expired request —
+        // or one whose client stopped reading a bounded stream — retires
+        // right now, partial tokens attached; dropping its cache returns
+        // the pages to the pool this round (the freed budget is visible to
+        // this very round's admissions).
         let mut i = 0;
         while i < active.len() {
             let finish = if active[i].req.cancel.is_cancelled() {
                 Some(FinishReason::Cancelled)
             } else if active[i].req.deadline_exceeded() {
                 Some(FinishReason::DeadlineExceeded)
+            } else if active[i].req.stream.overflowed() {
+                metrics.on_stream_overflow();
+                Some(FinishReason::Cancelled)
             } else {
                 None
             };
@@ -661,6 +710,8 @@ fn scheduler_loop(
                 kv_head = None;
             }
             kv_reserved += projected;
+            let admitted_us = req.arrived.elapsed().as_micros() as u64;
+            req.stream.send(StreamEvent::Prefilling { id: req.id, ts_us: admitted_us });
             // Materialize the adoption the projection was charged for
             // (nothing registers between the peek and here, and eviction
             // spared the candidate's own match, so the peeked length is
@@ -677,7 +728,6 @@ fn scheduler_loop(
                 }
                 None => lm.new_cache(),
             };
-            let queue_us = req.arrived.elapsed().as_micros() as u64;
             active.push(Active {
                 cache,
                 prompt_pos: adopted_rows,
@@ -685,10 +735,9 @@ fn scheduler_loop(
                 generated: Vec::new(),
                 capped: false,
                 failed: false,
-                queue_us,
-                prefill_started: Instant::now(),
-                prefill_us: 0,
-                decode_started: Instant::now(),
+                admitted_us,
+                first_token_us: None,
+                last_token_us: admitted_us,
                 rng: crate::util::prng::Pcg64::seed_from_u64(req.id ^ 0x5EED),
                 req,
             });
@@ -698,6 +747,11 @@ fn scheduler_loop(
             waiting.push_front(req);
         }
         metrics.on_active(active.len());
+
+        // Round-local stream accounting: tokens delivered onto streams and
+        // the inter-token gaps observed, folded into metrics once per round.
+        let mut streamed: u64 = 0;
+        let mut itl_gaps: Vec<u64> = Vec::new();
 
         // (3a) advance prefills: at most one chunk per request per round, so
         // a long prompt shares the round with concurrent decodes instead of
@@ -765,7 +819,8 @@ fn scheduler_loop(
                 }
             }
             if !a.prefilling() {
-                // Prefill complete: sample the first token.
+                // Prefill complete: sample the first token and stream it —
+                // its stamp is the request's TTFT.
                 let first = sample_row(
                     logits.row(logits.rows() - 1),
                     a.req.temperature,
@@ -773,8 +828,13 @@ fn scheduler_loop(
                     &mut a.rng,
                 );
                 a.generated.push(first);
-                a.prefill_us = a.prefill_started.elapsed().as_micros() as u64;
-                a.decode_started = Instant::now();
+                let ts_us = a.req.arrived.elapsed().as_micros() as u64;
+                a.first_token_us = Some(ts_us);
+                a.last_token_us = ts_us;
+                let ev = StreamEvent::Token { id: a.req.id, index: 0, token: first, ts_us };
+                if a.req.stream.send(ev) {
+                    streamed += 1;
+                }
             }
         }
         // (3b) one *batched* decode step over every decoding request
@@ -831,6 +891,20 @@ fn scheduler_loop(
                             &mut a.rng,
                         );
                         a.generated.push(next);
+                        // Stream the token as this round's batched decode
+                        // lands — clients observe decode cadence.
+                        let ts_us = a.req.arrived.elapsed().as_micros() as u64;
+                        itl_gaps.push(ts_us.saturating_sub(a.last_token_us));
+                        a.last_token_us = ts_us;
+                        let ev = StreamEvent::Token {
+                            id: a.req.id,
+                            index: (a.generated.len() - 1) as u32,
+                            token: next,
+                            ts_us,
+                        };
+                        if a.req.stream.send(ev) {
+                            streamed += 1;
+                        }
                     }
                 }
                 Err(payload) => {
@@ -859,6 +933,7 @@ fn scheduler_loop(
                 }
             }
         }
+        metrics.on_stream_round(streamed, &itl_gaps);
         // Sample KV usage at the round's high-water mark: after prefill
         // chunks AND the decode step grew the caches, before retirement
         // frees them (sampling pre-decode missed every sequence's final,
@@ -928,37 +1003,127 @@ mod tests {
     #[test]
     fn serves_a_request_end_to_end() {
         let h = Engine::start(small_weights(), EngineOptions::default());
-        let rx = h.submit(vec![1, 2, 3], 5, 0.8, 8).unwrap();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let rx = h.submit(vec![1, 2, 3], 5, SubmitOptions::sampling(0.8, 8)).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert_eq!(resp.tokens.len(), 5);
         assert!(resp.total_us > 0);
-        assert!(resp.ttft_us() <= resp.total_us + 1000);
+        assert!(resp.ttft_us() <= resp.total_us);
+        assert_eq!(
+            resp.queue_us + resp.prefill_us + resp.decode_us,
+            resp.total_us,
+            "derived timings partition the end-to-end latency exactly"
+        );
         let snap = h.shutdown();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.finished_done, 1);
     }
 
     #[test]
+    fn streams_tokens_in_order_and_final_agrees_with_event_stamps() {
+        // The satellite invariant: `Final` is the single source of truth,
+        // derived from the same stamps the stream events carry — drain the
+        // whole stream and check they agree exactly.
+        let h = Engine::start(small_weights(), EngineOptions::default());
+        let mut rx = h.submit(vec![1, 2, 3, 4], 5, SubmitOptions::default()).unwrap();
+        let mut events = Vec::new();
+        loop {
+            let ev = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            let done = matches!(ev, StreamEvent::Final(_));
+            events.push(ev);
+            if done {
+                break;
+            }
+        }
+        assert!(matches!(events[0], StreamEvent::Queued { .. }), "stream opens with Queued");
+        let prefill_ts = match events[1] {
+            StreamEvent::Prefilling { ts_us, .. } => ts_us,
+            ref ev => panic!("expected Prefilling second, got {ev:?}"),
+        };
+        let tokens: Vec<(u32, u16, u64)> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                StreamEvent::Token { index, token, ts_us, .. } => Some((*index, *token, *ts_us)),
+                _ => None,
+            })
+            .collect();
+        let resp = match events.last().unwrap() {
+            StreamEvent::Final(r) => r.clone(),
+            ev => panic!("expected Final last, got {ev:?}"),
+        };
+        assert_eq!(tokens.len(), 5, "one Token event per generated token");
+        for (i, &(index, token, ts)) in tokens.iter().enumerate() {
+            assert_eq!(index as usize, i, "strictly sequential decode order");
+            assert_eq!(token, resp.tokens[i], "streamed tokens match the Final");
+            assert!(ts <= resp.total_us);
+        }
+        assert!(tokens.windows(2).all(|w| w[0].2 <= w[1].2), "non-decreasing stamps");
+        assert_eq!(resp.queue_us, prefill_ts, "queue_us IS the Prefilling stamp");
+        assert_eq!(resp.ttft_us(), tokens[0].2, "TTFT IS the first Token stamp");
+        assert_eq!(resp.queue_us + resp.prefill_us + resp.decode_us, resp.total_us);
+        assert!(
+            matches!(rx.try_recv(), Err(std::sync::mpsc::TryRecvError::Disconnected)),
+            "nothing follows Final"
+        );
+        h.shutdown();
+    }
+
+    #[test]
+    fn drop_after_final_is_not_a_cancel() {
+        // Satellite regression: the drop-cancel guard must not fire once
+        // the terminal was received — no Cancelled double-terminal, no
+        // spurious finished_cancelled increment.
+        let h = Engine::start(small_weights(), EngineOptions::default());
+        let mut rx = h.submit(vec![1, 2, 3], 3, SubmitOptions::default()).unwrap();
+        let resp = rx.recv_final_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Done);
+        drop(rx);
+        let snap = h.shutdown();
+        assert_eq!(snap.completed, 1, "exactly one terminal");
+        assert_eq!(snap.finished_done, 1);
+        assert_eq!(snap.finished_cancelled, 0, "drop after Final must not count as a cancel");
+    }
+
+    #[test]
+    fn bounded_stream_buffer_cancels_a_client_that_stopped_reading() {
+        let h = Engine::start(small_weights(), EngineOptions::default());
+        // Buffer of 2 with an un-read stream: Queued + Prefilling + the
+        // first Token overflow it, so the sweep cancels the request long
+        // before its 30 tokens finish.
+        let rx = h.submit(vec![1, 2, 3], 30, SubmitOptions::default().with_stream_buffer(2));
+        let resp = rx.unwrap().recv_all_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.finish, FinishReason::Cancelled);
+        assert!(resp.tokens.len() < 30, "cancelled well before completion");
+        let snap = h.shutdown();
+        assert_eq!(snap.stream_overflow_cancels, 1);
+        assert_eq!(snap.finished_cancelled, 1);
+    }
+
+    #[test]
     fn serves_concurrent_requests() {
         let h = Engine::start(small_weights(), EngineOptions::default());
         let rxs: Vec<_> = (0..6)
-            .map(|i| h.submit(vec![1, 2, (i % 30) as u16 + 1], 4, 0.5, 4).unwrap())
+            .map(|i| {
+                h.submit(vec![1, 2, (i % 30) as u16 + 1], 4, SubmitOptions::sampling(0.5, 4))
+                    .unwrap()
+            })
             .collect();
         for rx in rxs {
-            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
             assert_eq!(resp.tokens.len(), 4);
         }
         let snap = h.shutdown();
         assert_eq!(snap.completed, 6);
         assert!(snap.peak_active >= 2, "batching should overlap requests");
+        assert!(snap.tokens_streamed > 0, "token events were delivered");
     }
 
     #[test]
     fn rejects_bad_requests() {
         let h = Engine::start(small_weights(), EngineOptions::default());
-        assert_eq!(h.submit(vec![], 4, 0.0, 1).unwrap_err(), SubmitError::BadRequest);
+        let opts = SubmitOptions::default();
+        assert_eq!(h.submit(vec![], 4, opts).unwrap_err(), SubmitError::BadRequest);
         assert_eq!(
-            h.submit(vec![1; 64], 1, 0.0, 1).unwrap_err(),
+            h.submit(vec![1; 64], 1, opts).unwrap_err(),
             SubmitError::BadRequest,
             "prompt leaves no room to generate"
         );
@@ -975,13 +1140,13 @@ mod tests {
         // missing tail by duplicating the last token and report all 10 as
         // generated.
         let h = Engine::start(small_weights(), EngineOptions::default());
-        let rx = h.submit(vec![1; 60], 10, 0.0, 1).unwrap();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let rx = h.submit(vec![1; 60], 10, SubmitOptions::default()).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.finish, FinishReason::Length);
         assert_eq!(resp.tokens.len(), 5, "truncated, not padded: {:?}", resp.tokens);
         // An in-budget request on the same engine finishes Done.
-        let rx = h.submit(vec![1, 2, 3], 4, 0.0, 1).unwrap();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let rx = h.submit(vec![1, 2, 3], 4, SubmitOptions::default()).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.finish, FinishReason::Done);
         assert_eq!(resp.tokens.len(), 4);
         let snap = h.shutdown();
@@ -993,27 +1158,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn start_bounded_alias_still_enforces_bound() {
-        let opts = EngineOptions { max_queue: 1, ..Default::default() };
-        let h = Engine::start_bounded(small_weights(), opts);
-        let mut saw_full = false;
-        let mut receivers = Vec::new();
-        for _ in 0..20 {
-            match h.submit(vec![1, 2], 2, 0.0, 1) {
-                Ok(rx) => receivers.push(rx),
-                Err(SubmitError::QueueFull) => saw_full = true,
-                Err(e) => panic!("unexpected {e:?}"),
-            }
-        }
-        assert!(saw_full, "deprecated alias must keep the queue bound");
-        for rx in receivers {
-            let _ = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
-        }
-        h.shutdown();
-    }
-
-    #[test]
     fn backpressure_rejects_on_full_queue() {
         let opts = EngineOptions { max_queue: 2, ..Default::default() };
         let h = Engine::start(small_weights(), opts);
@@ -1021,7 +1165,7 @@ mod tests {
         let mut rejected = 0;
         let mut receivers = Vec::new();
         for i in 0..40 {
-            match h.submit(vec![1, 2, (i % 30) as u16 + 1], 2, 0.0, 1) {
+            match h.submit(vec![1, 2, (i % 30) as u16 + 1], 2, SubmitOptions::default()) {
                 Ok(rx) => receivers.push(rx),
                 Err(SubmitError::QueueFull) => rejected += 1,
                 Err(e) => panic!("unexpected {e:?}"),
@@ -1029,7 +1173,7 @@ mod tests {
         }
         assert!(rejected > 0, "queue bound must trigger backpressure");
         for rx in receivers {
-            let _ = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            let _ = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
         }
         h.shutdown();
     }
@@ -1048,10 +1192,10 @@ mod tests {
         };
         let h = Engine::start(w, opts);
         let rxs: Vec<_> = (0..4)
-            .map(|i| h.submit(vec![1, 2, (i + 1) as u16], 4, 0.0, 1).unwrap())
+            .map(|i| h.submit(vec![1, 2, (i + 1) as u16], 4, SubmitOptions::default()).unwrap())
             .collect();
         for rx in rxs {
-            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
             assert_eq!(resp.tokens.len(), 4);
         }
         let snap = h.shutdown();
@@ -1081,8 +1225,8 @@ mod tests {
                 ..Default::default()
             };
             let h = Engine::start(w.clone(), opts);
-            let rx = h.submit(prompt.clone(), 5, 0.0, 1).unwrap();
-            let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+            let rx = h.submit(prompt.clone(), 5, SubmitOptions::default()).unwrap();
+            let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
             h.shutdown();
             resp.tokens
         };
@@ -1094,11 +1238,12 @@ mod tests {
     #[test]
     fn metrics_snapshot_coherent() {
         let h = Engine::start(small_weights(), EngineOptions::default());
-        let rx = h.submit(vec![5, 6, 7, 8], 3, 0.0, 1).unwrap();
-        let _ = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let rx = h.submit(vec![5, 6, 7, 8], 3, SubmitOptions::default()).unwrap();
+        let _ = rx.recv_all_timeout(std::time::Duration::from_secs(30)).unwrap();
         let snap = h.shutdown();
         assert_eq!(snap.prefill_tokens, 4);
         assert_eq!(snap.decode_tokens, 2);
+        assert_eq!(snap.tokens_streamed, 3, "every generated token was streamed");
         assert!(snap.throughput_tok_s > 0.0);
         assert!(snap.render().contains("tok/s"));
     }
@@ -1113,14 +1258,14 @@ mod tests {
             ..Default::default()
         };
         let h = Engine::start(small_weights(), opts);
-        let rx = h.submit(vec![1; 60], 2, 0.0, 1).unwrap();
+        let rx = h.submit(vec![1; 60], 2, SubmitOptions::default()).unwrap();
         rx.cancel();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.finish, FinishReason::Cancelled);
         assert!(resp.tokens.len() < 2, "cancelled before completion");
         // The engine keeps serving after the cancellation.
-        let rx = h.submit(vec![1, 2, 3], 3, 0.0, 1).unwrap();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let rx = h.submit(vec![1, 2, 3], 3, SubmitOptions::default()).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.finish, FinishReason::Done);
         let snap = h.shutdown();
         assert_eq!(snap.finished_cancelled, 1);
@@ -1133,15 +1278,15 @@ mod tests {
         let h = Engine::start(small_weights(), EngineOptions::default());
         // A zero deadline is already exceeded at the first lifecycle sweep,
         // before the request can admit — deterministic terminal reason.
-        let expired = SubmitOptions { deadline: Some(Duration::ZERO) };
-        let rx = h.submit_with(vec![1, 2, 3], 4, 0.0, 1, expired).unwrap();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let expired = SubmitOptions::default().with_deadline(Duration::ZERO);
+        let rx = h.submit(vec![1, 2, 3], 4, expired).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.finish, FinishReason::DeadlineExceeded);
         assert!(resp.tokens.is_empty(), "never ran: no partial output");
         // A generous deadline does not trip.
-        let generous = SubmitOptions { deadline: Some(Duration::from_secs(3600)) };
-        let rx = h.submit_with(vec![1, 2, 3], 4, 0.0, 1, generous).unwrap();
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+        let generous = SubmitOptions::default().with_deadline(Duration::from_secs(3600));
+        let rx = h.submit(vec![1, 2, 3], 4, generous).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.finish, FinishReason::Done);
         let snap = h.shutdown();
         assert_eq!(snap.finished_deadline, 1);
@@ -1155,7 +1300,8 @@ mod tests {
         // wedge the handle on a phantom-full queue.
         let h = dead_handle(None);
         for _ in 0..10 {
-            assert_eq!(h.submit(vec![1, 2], 2, 0.0, 1).unwrap_err(), SubmitError::ShuttingDown);
+            let err = h.submit(vec![1, 2], 2, SubmitOptions::default()).unwrap_err();
+            assert_eq!(err, SubmitError::ShuttingDown);
         }
         assert_eq!(h.queue_len.load(Ordering::SeqCst), 0, "charge rolled back");
         let snap = h.metrics();

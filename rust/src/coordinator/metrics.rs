@@ -25,9 +25,19 @@ pub struct MetricsInner {
     pub drain_us: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
+    /// Token events actually delivered to a live stream receiver (a token
+    /// generated after the client hung up is decoded but not streamed).
+    pub tokens_streamed: u64,
+    /// Requests cancelled because their bounded stream buffer overflowed
+    /// (`SubmitOptions::with_stream_buffer`): the client stopped reading.
+    pub stream_overflow_cancels: u64,
     pub ttft_us: LogHistogram,
     pub e2e_us: LogHistogram,
     pub per_token_us: LogHistogram,
+    /// Inter-token gaps as streamed (per Token event past the first of a
+    /// request, scheduler-side stamps) — the client-facing cadence the
+    /// `serving_load` bench reports percentiles of.
+    pub itl_us: LogHistogram,
     /// Max concurrent active (decoding) requests observed.
     pub peak_active: usize,
     /// Max total KV-cache bytes held by active requests (allocated page
@@ -68,9 +78,12 @@ impl Default for MetricsInner {
             drain_us: 0,
             prefill_tokens: 0,
             decode_tokens: 0,
+            tokens_streamed: 0,
+            stream_overflow_cancels: 0,
             ttft_us: LogHistogram::new(),
             e2e_us: LogHistogram::new(),
             per_token_us: LogHistogram::new(),
+            itl_us: LogHistogram::new(),
             peak_active: 0,
             peak_kv_bytes: 0,
             peak_kv_pages: 0,
@@ -161,6 +174,26 @@ impl Metrics {
         self.0.lock().unwrap().prefill_tokens += n as u64;
     }
 
+    /// Fold one scheduling round's streaming deltas in: `streamed` Token
+    /// events delivered and the inter-token `gaps` (µs between consecutive
+    /// Token stamps of the same request) observed this round.
+    pub fn on_stream_round(&self, streamed: u64, gaps: &[u64]) {
+        if streamed == 0 && gaps.is_empty() {
+            return;
+        }
+        let mut m = self.0.lock().unwrap();
+        m.tokens_streamed += streamed;
+        for &g in gaps {
+            m.itl_us.record_us(g as f64);
+        }
+    }
+
+    /// Record one slow-consumer cancellation (bounded stream buffer
+    /// overflowed; the lifecycle sweep retires the request as `Cancelled`).
+    pub fn on_stream_overflow(&self) {
+        self.0.lock().unwrap().stream_overflow_cancels += 1;
+    }
+
     /// Record one prefix adoption: `tokens` prompt positions and `pages` KV
     /// pages taken by reference instead of recomputed/allocated.
     pub fn on_prefix_hit(&self, tokens: usize, pages: usize) {
@@ -191,6 +224,8 @@ impl Metrics {
             drain_us: m.drain_us,
             prefill_tokens: m.prefill_tokens,
             decode_tokens: m.decode_tokens,
+            tokens_streamed: m.tokens_streamed,
+            stream_overflow_cancels: m.stream_overflow_cancels,
             elapsed_s,
             throughput_tok_s: (m.prefill_tokens + m.decode_tokens) as f64 / elapsed_s,
             requests_per_s: m.completed as f64 / elapsed_s,
@@ -199,6 +234,9 @@ impl Metrics {
             e2e_p50_us: m.e2e_us.percentile_us(50.0),
             e2e_p99_us: m.e2e_us.percentile_us(99.0),
             per_token_mean_us: m.per_token_us.mean_us(),
+            itl_p50_us: m.itl_us.percentile_us(50.0),
+            itl_p95_us: m.itl_us.percentile_us(95.0),
+            itl_p99_us: m.itl_us.percentile_us(99.0),
             peak_active: m.peak_active,
             peak_kv_bytes: m.peak_kv_bytes,
             peak_kv_pages: m.peak_kv_pages,
@@ -233,6 +271,10 @@ pub struct MetricsSnapshot {
     pub drain_us: u64,
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
+    /// Token events delivered to live stream receivers.
+    pub tokens_streamed: u64,
+    /// Requests cancelled for overflowing their bounded stream buffer.
+    pub stream_overflow_cancels: u64,
     pub elapsed_s: f64,
     pub throughput_tok_s: f64,
     pub requests_per_s: f64,
@@ -241,6 +283,10 @@ pub struct MetricsSnapshot {
     pub e2e_p50_us: f64,
     pub e2e_p99_us: f64,
     pub per_token_mean_us: f64,
+    /// Inter-token latency percentiles over streamed Token stamps.
+    pub itl_p50_us: f64,
+    pub itl_p95_us: f64,
+    pub itl_p99_us: f64,
     pub peak_active: usize,
     pub peak_kv_bytes: usize,
     /// Peak concurrent KV pages across active requests (per holder: a
@@ -274,20 +320,24 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
             "requests: {} ok / {} rejected / {} submitted | tokens: {} prefill + {} decode \
-             | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms | peak batch {} \
+             ({} streamed) | {:.1} tok/s | ttft p50 {:.1} ms p99 {:.1} ms | e2e p50 {:.1} ms \
+             | itl p50 {:.1} ms p99 {:.1} ms | peak batch {} \
              | peak kv {:.1} KiB ({} pages, {:.0}% util) | pool {} alloc / {} recycled \
              | prefix hits {} ({} pages shared, {} cow forks) \
-             | finish: {} done, {} length, {} cancelled, {} deadline, {} error \
+             | finish: {} done, {} length, {} cancelled ({} overflow), {} deadline, {} error \
              | drain {:.1} ms | faults: {} panics / {} allocs / {} delays",
             self.completed,
             self.rejected,
             self.submitted,
             self.prefill_tokens,
             self.decode_tokens,
+            self.tokens_streamed,
             self.throughput_tok_s,
             self.ttft_p50_us / 1e3,
             self.ttft_p99_us / 1e3,
             self.e2e_p50_us / 1e3,
+            self.itl_p50_us / 1e3,
+            self.itl_p99_us / 1e3,
             self.peak_active,
             self.peak_kv_bytes as f64 / 1024.0,
             self.peak_kv_pages,
@@ -300,6 +350,7 @@ impl MetricsSnapshot {
             self.finished_done,
             self.finished_length,
             self.finished_cancelled,
+            self.stream_overflow_cancels,
             self.finished_deadline,
             self.finished_error,
             self.drain_us as f64 / 1e3,
@@ -334,6 +385,9 @@ mod tests {
             total_us: 400,
         };
         m.on_complete(&r);
+        m.on_stream_round(1, &[]); // first token of a request: no gap yet
+        m.on_stream_round(3, &[120, 80, 100]);
+        m.on_stream_round(0, &[]); // idle round: no-op
         m.on_kv_bytes(2048);
         m.on_kv_pages(10, 18, 20);
         m.on_kv_pages(4, 4, 8); // below peak: utilization sample kept
@@ -353,11 +407,25 @@ mod tests {
         assert_eq!(s.shared_prefix_tokens, 128);
         assert_eq!(s.shared_kv_pages, 24);
         assert!(s.ttft_p50_us > 0.0);
+        assert_eq!(s.tokens_streamed, 4);
+        assert!(s.itl_p50_us > 0.0, "three gaps were recorded");
+        assert!(s.itl_p50_us <= s.itl_p99_us);
         let rendered = s.render();
         assert!(rendered.contains("requests: 1 ok"));
+        assert!(rendered.contains("4 streamed"), "{rendered}");
+        assert!(rendered.contains("itl p50"), "{rendered}");
         assert!(rendered.contains("10 pages"), "{rendered}");
         assert!(rendered.contains("recycled"), "{rendered}");
         assert!(rendered.contains("prefix hits 2"), "{rendered}");
+    }
+
+    #[test]
+    fn stream_overflow_cancels_counted_separately() {
+        let m = Metrics::new();
+        m.on_stream_overflow();
+        let s = m.snapshot();
+        assert_eq!(s.stream_overflow_cancels, 1);
+        assert!(s.render().contains("(1 overflow)"), "{}", s.render());
     }
 
     #[test]

@@ -13,8 +13,10 @@ pub mod metrics;
 pub mod batcher;
 pub mod prefix;
 pub mod engine;
+pub mod tcp;
 
 pub use engine::{scheduler_panics, Engine, EngineHandle, EngineOptions};
 pub use request::{
-    CancelToken, FinishReason, Request, Response, ResponseRx, SubmitError, SubmitOptions,
+    CancelToken, FinishReason, Request, Response, StreamEvent, StreamRx, StreamTx, SubmitError,
+    SubmitOptions,
 };

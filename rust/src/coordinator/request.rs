@@ -1,10 +1,24 @@
-//! Request/response types of the serving engine, plus the client-side
-//! lifecycle levers: per-request cancellation ([`CancelToken`]), optional
-//! submit-relative deadlines ([`SubmitOptions`]), and a receiver wrapper
-//! ([`ResponseRx`]) whose drop is an implicit cancel — a client that hangs
-//! up stops burning KV pages and decode rounds.
+//! Request types and the streaming client API of the serving engine.
+//!
+//! A submit returns a [`StreamRx`]: a per-request event stream over which
+//! the scheduler delivers [`StreamEvent`]s as they happen — `Queued` at
+//! accept, `Prefilling` at admission, one `Token` per decoded token as each
+//! round's batched decode lands, and exactly one terminal `Final` carrying
+//! the whole [`Response`]. Clients that only want the terminal response use
+//! the [`StreamRx::recv_all`] compatibility shim.
+//!
+//! Lifecycle levers ride on the stream: per-request cancellation
+//! ([`CancelToken`]), submit-relative deadlines and a bounded stream buffer
+//! ([`SubmitOptions`]), and drop-of-receiver = implicit cancel — a client
+//! that hangs up stops burning KV pages and decode rounds.
+//!
+//! All event timestamps (`ts_us`) are µs since the request arrived, stamped
+//! on one monotonic clock by the scheduler. The µs fields of the terminal
+//! [`Response`] are *derived from the same stamps* (see [`Response`]), so
+//! `queue_us + prefill_us + decode_us == total_us` holds exactly and the
+//! stream and the terminal timings can never drift apart.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -47,10 +61,13 @@ pub struct Request {
     /// retires with [`FinishReason::DeadlineExceeded`] and whatever tokens
     /// it generated so far.
     pub deadline: Option<Duration>,
+    /// Scheduler rounds this request has spent in the wait queue (maintained
+    /// by the scheduler; the admission gate's age valve reads it).
+    pub waited_rounds: u64,
     /// Cancellation flag shared with the submitting client.
     pub cancel: CancelToken,
-    /// Completion channel.
-    pub reply: mpsc::Sender<Response>,
+    /// Event stream back to the client.
+    pub stream: StreamTx,
 }
 
 impl Request {
@@ -69,8 +86,9 @@ pub enum FinishReason {
     /// actually generated (truncated — never padded with fabricated tokens).
     Length,
     /// Cancelled — explicitly via [`CancelToken::cancel`], implicitly by the
-    /// client dropping its [`ResponseRx`], or by an engine drain/hard stop
-    /// answering work it will not run. `tokens` holds any partial output.
+    /// client dropping its [`StreamRx`] or falling behind a bounded stream
+    /// buffer, or by an engine drain/hard stop answering work it will not
+    /// run. `tokens` holds any partial output.
     Cancelled,
     /// The submit-relative deadline passed before the request finished.
     /// `tokens` holds any partial output.
@@ -89,6 +107,15 @@ impl FinishReason {
 }
 
 /// Completed generation with timing breakdown.
+///
+/// The µs fields are derived from the request's stream timestamps — three
+/// stamps on one monotonic clock (admission, first token, retirement), so:
+///
+/// - `queue_us` = arrival → admission (→ retirement if never admitted),
+/// - `prefill_us` = admission → first token (→ retirement if the request
+///   was cut mid-prefill),
+/// - `decode_us` = first token → retirement (0 if no token was produced),
+/// - `total_us` ≡ `queue_us + prefill_us + decode_us`, exactly.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
@@ -121,73 +148,285 @@ impl Response {
     }
 }
 
-/// Per-submit options beyond the prompt/sampling parameters.
-#[derive(Clone, Copy, Debug, Default)]
+/// One event on a request's stream. Timestamps are µs since the request's
+/// arrival, stamped by the scheduler on the arrival clock.
+///
+/// Per accepted submit the stream is exactly:
+/// `Queued (Prefilling (Token)*)? Final` — `Prefilling` is absent when the
+/// request retires straight from the wait queue, `Token`s carry strictly
+/// sequential `index`es (0, 1, 2, …) in decode order, and nothing follows
+/// `Final`.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// Accepted by the engine handle; always the first event.
+    Queued { id: u64 },
+    /// Admitted into the active set; prefill starts. `ts_us` is the
+    /// queueing delay.
+    Prefilling { id: u64, ts_us: u64 },
+    /// One decoded token, in decode order. `index` 0 is the token sampled
+    /// when prefill completes; its `ts_us` is the request's TTFT.
+    Token { id: u64, index: u32, token: u16, ts_us: u64 },
+    /// Terminal event: exactly one per accepted submit, carrying the full
+    /// token sequence and the derived timing breakdown.
+    Final(Response),
+}
+
+impl StreamEvent {
+    /// The id of the request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            StreamEvent::Queued { id }
+            | StreamEvent::Prefilling { id, .. }
+            | StreamEvent::Token { id, .. } => *id,
+            StreamEvent::Final(resp) => resp.id,
+        }
+    }
+}
+
+/// Per-submit options: sampling parameters plus the lifecycle levers.
+///
+/// ```
+/// # use std::time::Duration;
+/// # use intattention::coordinator::SubmitOptions;
+/// let opts = SubmitOptions::default() // greedy
+///     .with_deadline(Duration::from_millis(500))
+///     .with_stream_buffer(64);
+/// let sampled = SubmitOptions::sampling(0.7, 16);
+/// # let _ = (opts, sampled);
+/// ```
+#[derive(Clone, Copy, Debug)]
 pub struct SubmitOptions {
+    /// Sampling temperature; 0 = greedy (the default).
+    pub temperature: f32,
+    /// Top-k truncation (clamped to ≥ 1 at submit).
+    pub top_k: usize,
     /// Deadline relative to the submit instant; `None` = no deadline.
     pub deadline: Option<Duration>,
+    /// Bound on un-consumed stream events before the scheduler treats the
+    /// client as gone and cancels the request; 0 = unbounded (the default).
+    pub stream_buffer: usize,
 }
 
-/// The client's end of a request: a [`Response`] receiver tied to the
-/// request's [`CancelToken`]. Dropping it without [`ResponseRx::detach`]
-/// cancels the request — a vanished client must not keep decoding (the
-/// scheduler would otherwise burn rounds and KV pages on output nobody can
-/// ever read). Exactly one terminal [`Response`] arrives per request.
-#[derive(Debug)]
-pub struct ResponseRx {
-    /// `None` only after [`ResponseRx::detach`] consumed the receiver.
-    rx: Option<mpsc::Receiver<Response>>,
-    cancel: CancelToken,
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        SubmitOptions { temperature: 0.0, top_k: 1, deadline: None, stream_buffer: 0 }
+    }
 }
 
-impl ResponseRx {
-    pub(crate) fn new(rx: mpsc::Receiver<Response>, cancel: CancelToken) -> Self {
-        ResponseRx { rx: Some(rx), cancel }
+impl SubmitOptions {
+    /// Greedy decoding, no deadline, unbounded stream.
+    pub fn new() -> Self {
+        Self::default()
     }
 
-    fn rx(&self) -> &mpsc::Receiver<Response> {
+    /// Shorthand for temperature/top-k sampling.
+    pub fn sampling(temperature: f32, top_k: usize) -> Self {
+        Self::default().with_temperature(temperature).with_top_k(top_k)
+    }
+
+    pub fn with_temperature(mut self, temperature: f32) -> Self {
+        self.temperature = temperature;
+        self
+    }
+
+    pub fn with_top_k(mut self, top_k: usize) -> Self {
+        self.top_k = top_k;
+        self
+    }
+
+    /// Retire with [`FinishReason::DeadlineExceeded`] (and partial output)
+    /// once `deadline` has passed since submit.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Bound the stream buffer: if more than `events` sent events sit
+    /// un-received, the scheduler cancels the request rather than buffer
+    /// without limit for a client that stopped reading. 0 = unbounded.
+    pub fn with_stream_buffer(mut self, events: usize) -> Self {
+        self.stream_buffer = events;
+        self
+    }
+}
+
+/// The scheduler's end of a request stream. Sends never block: events go
+/// onto an unbounded channel and the `pending` counter (decremented by the
+/// receiver) is what enforces [`SubmitOptions::stream_buffer`].
+#[derive(Debug)]
+pub struct StreamTx {
+    tx: mpsc::Sender<StreamEvent>,
+    /// Events sent but not yet received; shared with the [`StreamRx`].
+    pending: Arc<AtomicUsize>,
+    /// Overflow threshold; 0 = unbounded.
+    buffer: usize,
+    /// Set once `Final` is sent; no event may follow it.
+    final_sent: AtomicBool,
+}
+
+impl StreamTx {
+    pub(crate) fn new(
+        tx: mpsc::Sender<StreamEvent>,
+        pending: Arc<AtomicUsize>,
+        buffer: usize,
+    ) -> Self {
+        StreamTx { tx, pending, buffer, final_sent: AtomicBool::new(false) }
+    }
+
+    /// Send one event; returns whether a receiver still exists. `Final`
+    /// seals the stream — sending anything after it is a logic error.
+    pub(crate) fn send(&self, ev: StreamEvent) -> bool {
+        debug_assert!(
+            !self.final_sent.load(Ordering::Relaxed),
+            "no event may follow Final on a request stream"
+        );
+        if matches!(ev, StreamEvent::Final(_)) {
+            self.final_sent.store(true, Ordering::Relaxed);
+        }
+        let delivered = self.tx.send(ev).is_ok();
+        if delivered {
+            self.pending.fetch_add(1, Ordering::SeqCst);
+        }
+        delivered
+    }
+
+    /// Whether the client has fallen behind a bounded stream buffer
+    /// (strictly more sent-but-unread events than the bound).
+    pub(crate) fn overflowed(&self) -> bool {
+        self.buffer > 0 && self.pending.load(Ordering::SeqCst) > self.buffer
+    }
+}
+
+/// The client's end of a request: a [`StreamEvent`] receiver tied to the
+/// request's [`CancelToken`]. Dropping it before the stream's `Final` (and
+/// without [`StreamRx::detach`]) cancels the request — a vanished client
+/// must not keep decoding. Dropping it *after* receiving `Final` is a
+/// normal hang-up: the request already retired and no cancel fires.
+/// Exactly one terminal [`StreamEvent::Final`] arrives per request.
+#[derive(Debug)]
+pub struct StreamRx {
+    /// `None` only after [`StreamRx::detach`] consumed the receiver.
+    rx: Option<mpsc::Receiver<StreamEvent>>,
+    cancel: CancelToken,
+    pending: Arc<AtomicUsize>,
+    /// Whether this receiver has seen the terminal `Final`.
+    saw_final: bool,
+}
+
+impl StreamRx {
+    pub(crate) fn new(
+        rx: mpsc::Receiver<StreamEvent>,
+        cancel: CancelToken,
+        pending: Arc<AtomicUsize>,
+    ) -> Self {
+        StreamRx { rx: Some(rx), cancel, pending, saw_final: false }
+    }
+
+    fn rx(&self) -> &mpsc::Receiver<StreamEvent> {
         self.rx.as_ref().expect("receiver present until detach consumes self")
     }
 
-    /// Block for the terminal response.
-    pub fn recv(&self) -> Result<Response, mpsc::RecvError> {
-        self.rx().recv()
+    fn note(&mut self, ev: &StreamEvent) {
+        self.pending.fetch_sub(1, Ordering::SeqCst);
+        if matches!(ev, StreamEvent::Final(_)) {
+            self.saw_final = true;
+        }
     }
 
-    /// Block for the terminal response with a timeout.
-    pub fn recv_timeout(&self, timeout: Duration) -> Result<Response, mpsc::RecvTimeoutError> {
-        self.rx().recv_timeout(timeout)
+    /// Block for the next event.
+    pub fn recv(&mut self) -> Result<StreamEvent, mpsc::RecvError> {
+        let ev = self.rx().recv()?;
+        self.note(&ev);
+        Ok(ev)
     }
 
-    /// Non-blocking poll for the terminal response.
-    pub fn try_recv(&self) -> Result<Response, mpsc::TryRecvError> {
-        self.rx().try_recv()
+    /// Block for the next event with a timeout.
+    pub fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<StreamEvent, mpsc::RecvTimeoutError> {
+        let ev = self.rx().recv_timeout(timeout)?;
+        self.note(&ev);
+        Ok(ev)
     }
 
-    /// Cancel the request (keeping the receiver: the terminal
-    /// [`FinishReason::Cancelled`] response still arrives).
+    /// Non-blocking poll for the next event.
+    pub fn try_recv(&mut self) -> Result<StreamEvent, mpsc::TryRecvError> {
+        let ev = self.rx().try_recv()?;
+        self.note(&ev);
+        Ok(ev)
+    }
+
+    /// Drain events until the terminal `Final` and return its [`Response`]
+    /// — the whole-response compatibility shim for callers that do not care
+    /// about per-token delivery. The receiver stays usable afterwards (e.g.
+    /// to assert the stream is exhausted).
+    pub fn recv_final(&mut self) -> Result<Response, mpsc::RecvError> {
+        loop {
+            if let StreamEvent::Final(resp) = self.recv()? {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// [`StreamRx::recv_final`] with a total (not per-event) timeout.
+    pub fn recv_final_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> Result<Response, mpsc::RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if let StreamEvent::Final(resp) = self.recv_timeout(left)? {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// Consume the stream and return the terminal [`Response`].
+    pub fn recv_all(mut self) -> Result<Response, mpsc::RecvError> {
+        self.recv_final()
+    }
+
+    /// [`StreamRx::recv_all`] with a total timeout.
+    pub fn recv_all_timeout(
+        mut self,
+        timeout: Duration,
+    ) -> Result<Response, mpsc::RecvTimeoutError> {
+        self.recv_final_timeout(timeout)
+    }
+
+    /// Cancel the request (keeping the receiver: the stream still ends with
+    /// a [`FinishReason::Cancelled`] `Final`).
     pub fn cancel(&self) {
         self.cancel.cancel();
     }
 
     /// A clone of the request's cancel token, e.g. to cancel from another
-    /// thread while this handle blocks in [`ResponseRx::recv`].
+    /// thread while this handle blocks in [`StreamRx::recv`].
     pub fn cancel_token(&self) -> CancelToken {
         self.cancel.clone()
     }
 
     /// Opt out of drop-cancels: take the raw receiver and let the request
     /// run to completion even if the receiver is later dropped (fire-and-
-    /// forget submission).
-    pub fn detach(mut self) -> mpsc::Receiver<Response> {
+    /// forget submission). Note the raw receiver no longer decrements the
+    /// stream-buffer counter, so don't combine with a bounded
+    /// [`SubmitOptions::stream_buffer`].
+    pub fn detach(mut self) -> mpsc::Receiver<StreamEvent> {
         self.rx.take().expect("receiver present until detach consumes self")
     }
 }
 
-impl Drop for ResponseRx {
+impl Drop for StreamRx {
     fn drop(&mut self) {
-        // Hang-up = implicit cancel; `detach` took `rx` and opted out.
-        if self.rx.is_some() {
+        // Hang-up before `Final` = implicit cancel. After `Final` the
+        // request has already retired — cancelling then would at best be a
+        // no-op and at worst (if `try_recv` raced a just-sent `Final` that
+        // this receiver *did* consume) mislabel a completed request, so the
+        // guard is skipped once the terminal event was seen. `detach` took
+        // `rx` and opted out entirely.
+        if self.rx.is_some() && !self.saw_final {
             self.cancel.cancel();
         }
     }
@@ -217,30 +456,33 @@ impl std::error::Error for SubmitError {}
 mod tests {
     use super::*;
 
-    #[test]
-    fn ttft_is_queue_plus_prefill() {
-        let (tx, _rx) = mpsc::channel();
-        let _req = Request {
-            id: 1,
-            prompt: vec![1],
-            gen_len: 4,
-            temperature: 0.0,
-            top_k: 1,
-            arrived: Instant::now(),
-            deadline: None,
-            cancel: CancelToken::new(),
-            reply: tx,
-        };
-        let r = Response {
+    fn pair(buffer: usize) -> (StreamTx, StreamRx) {
+        let (tx, rx) = mpsc::channel();
+        let cancel = CancelToken::new();
+        let pending = Arc::new(AtomicUsize::new(0));
+        (
+            StreamTx::new(tx, Arc::clone(&pending), buffer),
+            StreamRx::new(rx, cancel, pending),
+        )
+    }
+
+    fn resp(finish: FinishReason) -> Response {
+        Response {
             id: 1,
             tokens: vec![1, 2, 3],
-            finish: FinishReason::Done,
+            finish,
             queue_us: 100,
             prefill_us: 400,
             decode_us: 600,
             total_us: 1100,
-        };
+        }
+    }
+
+    #[test]
+    fn ttft_is_queue_plus_prefill() {
+        let r = resp(FinishReason::Done);
         assert_eq!(r.ttft_us(), 500);
+        assert_eq!(r.queue_us + r.prefill_us + r.decode_us, r.total_us);
         assert!((r.decode_per_token_us() - 300.0).abs() < 1e-9);
     }
 
@@ -271,7 +513,7 @@ mod tests {
 
     #[test]
     fn deadline_exceeded_checks_against_arrival() {
-        let (tx, _rx) = mpsc::channel();
+        let (tx, _rx) = pair(0);
         let mut req = Request {
             id: 1,
             prompt: vec![1],
@@ -280,8 +522,9 @@ mod tests {
             top_k: 1,
             arrived: Instant::now(),
             deadline: None,
+            waited_rounds: 0,
             cancel: CancelToken::new(),
-            reply: tx,
+            stream: tx,
         };
         assert!(!req.deadline_exceeded(), "no deadline never expires");
         req.deadline = Some(Duration::from_secs(3600));
@@ -291,19 +534,99 @@ mod tests {
     }
 
     #[test]
-    fn dropping_response_rx_cancels_detached_does_not() {
-        let (tx, rx) = mpsc::channel::<Response>();
-        let token = CancelToken::new();
-        drop(ResponseRx::new(rx, token.clone()));
+    fn dropping_stream_rx_cancels_detached_does_not() {
+        let (tx, rx) = pair(0);
+        let token = rx.cancel_token();
+        drop(rx);
         assert!(token.is_cancelled(), "hang-up is an implicit cancel");
         drop(tx);
 
-        let (tx, rx) = mpsc::channel::<Response>();
-        let token = CancelToken::new();
-        let raw = ResponseRx::new(rx, token.clone()).detach();
+        let (tx, rx) = pair(0);
+        let token = rx.cancel_token();
+        let raw = rx.detach();
         assert!(!token.is_cancelled(), "detach opts out of drop-cancel");
         drop(raw);
         drop(tx);
+    }
+
+    #[test]
+    fn drop_after_final_does_not_cancel() {
+        // The satellite regression: receive `Final`, then drop — the
+        // drop-cancel guard must not fire (no Cancelled double-terminal).
+        let (tx, mut rx) = pair(0);
+        let token = rx.cancel_token();
+        assert!(tx.send(StreamEvent::Queued { id: 1 }));
+        assert!(tx.send(StreamEvent::Final(resp(FinishReason::Done))));
+        assert!(matches!(rx.recv().unwrap(), StreamEvent::Queued { .. }));
+        assert!(matches!(rx.recv().unwrap(), StreamEvent::Final(_)));
+        drop(rx);
+        assert!(!token.is_cancelled(), "drop after Final must not cancel");
+    }
+
+    #[test]
+    fn drop_before_buffered_final_still_cancels() {
+        // A `Final` that was sent but never read does not disarm the
+        // guard: the client hung up without consuming the terminal, and
+        // cancelling an already-retired request is a no-op anyway.
+        let (tx, rx) = pair(0);
+        let token = rx.cancel_token();
+        assert!(tx.send(StreamEvent::Final(resp(FinishReason::Done))));
+        drop(rx);
+        assert!(token.is_cancelled());
+    }
+
+    #[test]
+    fn recv_all_drains_to_final() {
+        let (tx, rx) = pair(0);
+        assert!(tx.send(StreamEvent::Queued { id: 7 }));
+        assert!(tx.send(StreamEvent::Prefilling { id: 7, ts_us: 10 }));
+        assert!(tx.send(StreamEvent::Token { id: 7, index: 0, token: 42, ts_us: 20 }));
+        assert!(tx.send(StreamEvent::Final(resp(FinishReason::Done))));
+        let r = rx.recv_all().unwrap();
+        assert_eq!(r.finish, FinishReason::Done);
+        assert_eq!(r.tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn stream_buffer_overflow_is_pending_minus_received() {
+        let (tx, mut rx) = pair(2);
+        assert!(!tx.overflowed(), "empty stream is within any bound");
+        assert!(tx.send(StreamEvent::Queued { id: 1 }));
+        assert!(tx.send(StreamEvent::Prefilling { id: 1, ts_us: 1 }));
+        assert!(!tx.overflowed(), "at the bound is not over it");
+        assert!(tx.send(StreamEvent::Token { id: 1, index: 0, token: 5, ts_us: 2 }));
+        assert!(tx.overflowed(), "three unread events exceed a bound of 2");
+        rx.recv().unwrap();
+        assert!(!tx.overflowed(), "receiving drains the pending count");
+        let (unbounded, _rx) = pair(0);
+        for _ in 0..64 {
+            assert!(unbounded.send(StreamEvent::Queued { id: 1 }));
+        }
+        assert!(!unbounded.overflowed(), "0 = unbounded");
+    }
+
+    #[test]
+    fn submit_options_builder() {
+        let o = SubmitOptions::default();
+        assert_eq!(o.temperature, 0.0);
+        assert_eq!(o.top_k, 1);
+        assert!(o.deadline.is_none());
+        assert_eq!(o.stream_buffer, 0);
+        let o = SubmitOptions::sampling(0.7, 16)
+            .with_deadline(Duration::from_millis(250))
+            .with_stream_buffer(8);
+        assert_eq!(o.temperature, 0.7);
+        assert_eq!(o.top_k, 16);
+        assert_eq!(o.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(o.stream_buffer, 8);
+    }
+
+    #[test]
+    fn event_id_covers_all_variants() {
+        assert_eq!(StreamEvent::Queued { id: 3 }.id(), 3);
+        assert_eq!(StreamEvent::Prefilling { id: 4, ts_us: 0 }.id(), 4);
+        assert_eq!(StreamEvent::Token { id: 5, index: 0, token: 1, ts_us: 0 }.id(), 5);
+        assert_eq!(StreamEvent::Final(resp(FinishReason::Done)).id(), 1);
     }
 
     #[test]

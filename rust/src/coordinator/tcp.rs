@@ -1,0 +1,747 @@
+//! TCP front-end for the serving engine: a dependency-free (no tokio)
+//! wire protocol that maps submit/stream/cancel verbs onto
+//! [`EngineHandle`], one OS thread per connection plus one forwarder
+//! thread per in-flight request.
+//!
+//! ## Wire format
+//!
+//! Every message is a length-prefixed frame: a `u32` little-endian body
+//! length followed by the body; the body's first byte is the verb. All
+//! integers are little-endian. Client verbs:
+//!
+//! | verb | name | payload |
+//! |---|---|---|
+//! | `0x01` | SUBMIT | `u64 tag`, `u32 gen_len`, `u32 top_k`, `u32 temp_milli`, `u64 deadline_ms` (0 = none), `u32 stream_buffer` (0 = unbounded), `u32 n`, `n × u16` prompt tokens |
+//! | `0x02` | CANCEL | `u64 tag` |
+//!
+//! Server verbs (one frame per [`StreamEvent`], same order as the stream):
+//!
+//! | verb | name | payload |
+//! |---|---|---|
+//! | `0x81` | QUEUED | `u64 tag`, `u64 id` |
+//! | `0x82` | PREFILLING | `u64 tag`, `u64 ts_us` |
+//! | `0x83` | TOKEN | `u64 tag`, `u32 index`, `u16 token`, `u64 ts_us` |
+//! | `0x84` | FINAL | `u64 tag`, `u8 finish`, `u64 queue_us`, `u64 prefill_us`, `u64 decode_us`, `u64 total_us`, `u32 n`, `n × u16` tokens |
+//! | `0x85` | REJECTED | `u64 tag`, `u8 code` |
+//!
+//! The `tag` is a client-chosen request correlator echoed on every server
+//! frame, so one connection can interleave many streams. `finish` codes:
+//! 0 Done, 1 Length, 2 Cancelled, 3 DeadlineExceeded, 4 Error. Reject
+//! codes: 0 BadRequest, 1 QueueFull, 2 ShuttingDown.
+//!
+//! Lifecycle mapping: a client that disconnects (or whose socket write
+//! fails) drops the forwarder's [`StreamRx`], which cancels the request —
+//! the TCP hang-up is the same signal as an in-process receiver drop.
+//! Exactly one terminal frame (FINAL or REJECTED) answers every SUBMIT.
+
+use crate::coordinator::request::{FinishReason, StreamEvent, SubmitError, SubmitOptions};
+use crate::coordinator::EngineHandle;
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Upper bound on a frame body; larger prefixes are a protocol error (a
+/// desynced or hostile peer), not an allocation request.
+pub const MAX_FRAME: usize = 1 << 20;
+
+pub const VERB_SUBMIT: u8 = 0x01;
+pub const VERB_CANCEL: u8 = 0x02;
+pub const VERB_QUEUED: u8 = 0x81;
+pub const VERB_PREFILLING: u8 = 0x82;
+pub const VERB_TOKEN: u8 = 0x83;
+pub const VERB_FINAL: u8 = 0x84;
+pub const VERB_REJECTED: u8 = 0x85;
+
+/// A client→server message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ClientMsg {
+    Submit {
+        tag: u64,
+        gen_len: u32,
+        top_k: u32,
+        /// Sampling temperature × 1000, keeping the wire integer-only
+        /// (0 = greedy).
+        temp_milli: u32,
+        /// 0 = no deadline.
+        deadline_ms: u64,
+        /// 0 = unbounded stream buffer.
+        stream_buffer: u32,
+        prompt: Vec<u16>,
+    },
+    Cancel { tag: u64 },
+}
+
+/// A server→client message; one per [`StreamEvent`], plus REJECTED for
+/// submits the engine refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServerMsg {
+    Queued { tag: u64, id: u64 },
+    Prefilling { tag: u64, ts_us: u64 },
+    Token { tag: u64, index: u32, token: u16, ts_us: u64 },
+    Final {
+        tag: u64,
+        finish: u8,
+        queue_us: u64,
+        prefill_us: u64,
+        decode_us: u64,
+        total_us: u64,
+        tokens: Vec<u16>,
+    },
+    Rejected { tag: u64, code: u8 },
+}
+
+pub fn finish_code(f: FinishReason) -> u8 {
+    match f {
+        FinishReason::Done => 0,
+        FinishReason::Length => 1,
+        FinishReason::Cancelled => 2,
+        FinishReason::DeadlineExceeded => 3,
+        FinishReason::Error => 4,
+    }
+}
+
+pub fn finish_from_code(c: u8) -> Option<FinishReason> {
+    Some(match c {
+        0 => FinishReason::Done,
+        1 => FinishReason::Length,
+        2 => FinishReason::Cancelled,
+        3 => FinishReason::DeadlineExceeded,
+        4 => FinishReason::Error,
+        _ => return None,
+    })
+}
+
+pub fn reject_code(e: SubmitError) -> u8 {
+    match e {
+        SubmitError::BadRequest => 0,
+        SubmitError::QueueFull => 1,
+        SubmitError::ShuttingDown => 2,
+    }
+}
+
+/// Little-endian cursor over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], &'static str> {
+        let end = self.i.checked_add(n).ok_or("length overflow")?;
+        if end > self.b.len() {
+            return Err("frame truncated");
+        }
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, &'static str> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, &'static str> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, &'static str> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, &'static str> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u16s(&mut self) -> Result<Vec<u16>, &'static str> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / 2 {
+            return Err("token list longer than the frame bound");
+        }
+        let raw = self.take(n * 2)?;
+        Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    fn done(&self) -> Result<(), &'static str> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err("trailing bytes after message")
+        }
+    }
+}
+
+fn put_u16s(out: &mut Vec<u8>, tokens: &[u16]) {
+    out.extend_from_slice(&(tokens.len() as u32).to_le_bytes());
+    for &t in tokens {
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+}
+
+impl ClientMsg {
+    /// Frame body (verb + payload, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ClientMsg::Submit {
+                tag,
+                gen_len,
+                top_k,
+                temp_milli,
+                deadline_ms,
+                stream_buffer,
+                prompt,
+            } => {
+                out.push(VERB_SUBMIT);
+                out.extend_from_slice(&tag.to_le_bytes());
+                out.extend_from_slice(&gen_len.to_le_bytes());
+                out.extend_from_slice(&top_k.to_le_bytes());
+                out.extend_from_slice(&temp_milli.to_le_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
+                out.extend_from_slice(&stream_buffer.to_le_bytes());
+                put_u16s(&mut out, prompt);
+            }
+            ClientMsg::Cancel { tag } => {
+                out.push(VERB_CANCEL);
+                out.extend_from_slice(&tag.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Self, &'static str> {
+        let mut c = Cur::new(body);
+        let msg = match c.u8()? {
+            VERB_SUBMIT => ClientMsg::Submit {
+                tag: c.u64()?,
+                gen_len: c.u32()?,
+                top_k: c.u32()?,
+                temp_milli: c.u32()?,
+                deadline_ms: c.u64()?,
+                stream_buffer: c.u32()?,
+                prompt: c.u16s()?,
+            },
+            VERB_CANCEL => ClientMsg::Cancel { tag: c.u64()? },
+            _ => return Err("unknown client verb"),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+impl ServerMsg {
+    /// The wire form of one stream event, tagged for the client.
+    pub fn from_event(tag: u64, ev: StreamEvent) -> ServerMsg {
+        match ev {
+            StreamEvent::Queued { id } => ServerMsg::Queued { tag, id },
+            StreamEvent::Prefilling { ts_us, .. } => ServerMsg::Prefilling { tag, ts_us },
+            StreamEvent::Token { index, token, ts_us, .. } => {
+                ServerMsg::Token { tag, index, token, ts_us }
+            }
+            StreamEvent::Final(r) => ServerMsg::Final {
+                tag,
+                finish: finish_code(r.finish),
+                queue_us: r.queue_us,
+                prefill_us: r.prefill_us,
+                decode_us: r.decode_us,
+                total_us: r.total_us,
+                tokens: r.tokens,
+            },
+        }
+    }
+
+    /// Frame body (verb + payload, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ServerMsg::Queued { tag, id } => {
+                out.push(VERB_QUEUED);
+                out.extend_from_slice(&tag.to_le_bytes());
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            ServerMsg::Prefilling { tag, ts_us } => {
+                out.push(VERB_PREFILLING);
+                out.extend_from_slice(&tag.to_le_bytes());
+                out.extend_from_slice(&ts_us.to_le_bytes());
+            }
+            ServerMsg::Token { tag, index, token, ts_us } => {
+                out.push(VERB_TOKEN);
+                out.extend_from_slice(&tag.to_le_bytes());
+                out.extend_from_slice(&index.to_le_bytes());
+                out.extend_from_slice(&token.to_le_bytes());
+                out.extend_from_slice(&ts_us.to_le_bytes());
+            }
+            ServerMsg::Final { tag, finish, queue_us, prefill_us, decode_us, total_us, tokens } => {
+                out.push(VERB_FINAL);
+                out.extend_from_slice(&tag.to_le_bytes());
+                out.push(*finish);
+                out.extend_from_slice(&queue_us.to_le_bytes());
+                out.extend_from_slice(&prefill_us.to_le_bytes());
+                out.extend_from_slice(&decode_us.to_le_bytes());
+                out.extend_from_slice(&total_us.to_le_bytes());
+                put_u16s(&mut out, tokens);
+            }
+            ServerMsg::Rejected { tag, code } => {
+                out.push(VERB_REJECTED);
+                out.extend_from_slice(&tag.to_le_bytes());
+                out.push(*code);
+            }
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Self, &'static str> {
+        let mut c = Cur::new(body);
+        let msg = match c.u8()? {
+            VERB_QUEUED => ServerMsg::Queued { tag: c.u64()?, id: c.u64()? },
+            VERB_PREFILLING => ServerMsg::Prefilling { tag: c.u64()?, ts_us: c.u64()? },
+            VERB_TOKEN => ServerMsg::Token {
+                tag: c.u64()?,
+                index: c.u32()?,
+                token: c.u16()?,
+                ts_us: c.u64()?,
+            },
+            VERB_FINAL => ServerMsg::Final {
+                tag: c.u64()?,
+                finish: c.u8()?,
+                queue_us: c.u64()?,
+                prefill_us: c.u64()?,
+                decode_us: c.u64()?,
+                total_us: c.u64()?,
+                tokens: c.u16s()?,
+            },
+            VERB_REJECTED => ServerMsg::Rejected { tag: c.u64()?, code: c.u8()? },
+            _ => return Err("unknown server verb"),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+
+    /// The request tag this frame answers.
+    pub fn tag(&self) -> u64 {
+        match self {
+            ServerMsg::Queued { tag, .. }
+            | ServerMsg::Prefilling { tag, .. }
+            | ServerMsg::Token { tag, .. }
+            | ServerMsg::Final { tag, .. }
+            | ServerMsg::Rejected { tag, .. } => *tag,
+        }
+    }
+
+    /// True for the terminal frames (FINAL and REJECTED).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, ServerMsg::Final { .. } | ServerMsg::Rejected { .. })
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    debug_assert!(body.len() <= MAX_FRAME);
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame (blocking until complete).
+pub fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame length"));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Incremental frame reassembly over a byte stream. Unlike
+/// [`read_frame`], a read that times out (socket read-timeout used to
+/// poll a stop flag) never loses partially-received bytes: they stay
+/// buffered until the frame completes.
+pub struct FrameReader<R> {
+    src: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(src: R) -> Self {
+        FrameReader { src, buf: Vec::new() }
+    }
+
+    /// The next complete frame body; `Ok(None)` when the peer closed the
+    /// stream cleanly or `stop` was raised while idle between frames.
+    pub fn next_frame(&mut self, stop: &AtomicBool) -> io::Result<Option<Vec<u8>>> {
+        loop {
+            if let Some(frame) = self.take_buffered()? {
+                return Ok(Some(frame));
+            }
+            if stop.load(Ordering::SeqCst) {
+                return Ok(None);
+            }
+            let mut chunk = [0u8; 4096];
+            match self.src.read(&mut chunk) {
+                Ok(0) => return Ok(None),
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn take_buffered(&mut self) -> io::Result<Option<Vec<u8>>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[..4].try_into().unwrap()) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad frame length"));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = self.buf[4..4 + len].to_vec();
+        self.buf.drain(..4 + len);
+        Ok(Some(frame))
+    }
+}
+
+/// How often blocked reads/accepts wake to check the stop flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// A running TCP front-end: accepts connections and serves the wire
+/// protocol on top of a shared [`EngineHandle`]. The engine outlives the
+/// server (the `Arc` lets the caller recover and `shutdown()` it after
+/// [`TcpServer::stop`]).
+pub struct TcpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port) and
+    /// start accepting.
+    pub fn spawn(engine: Arc<EngineHandle>, addr: &str) -> io::Result<TcpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_l = Arc::clone(&stop);
+        let join = thread::Builder::new()
+            .name("intattn-serve-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+                while !stop_l.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let engine = Arc::clone(&engine);
+                            let stop_c = Arc::clone(&stop_l);
+                            conns.push(thread::spawn(move || {
+                                handle_conn(stream, engine, stop_c)
+                            }));
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(POLL),
+                        Err(_) => break,
+                    }
+                }
+                for c in conns {
+                    let _ = c.join();
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(TcpServer { addr: local, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wait for open connections to drain, and join the
+    /// accept thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Serve one connection: read verbs, fan submits out to per-request
+/// forwarder threads writing to the shared (mutexed) socket.
+fn handle_conn(stream: TcpStream, engine: Arc<EngineHandle>, stop: Arc<AtomicBool>) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let out = Arc::new(Mutex::new(write_half));
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut reader = FrameReader::new(stream);
+    let mut cancels: HashMap<u64, crate::coordinator::request::CancelToken> = HashMap::new();
+    let mut forwarders: Vec<thread::JoinHandle<()>> = Vec::new();
+    loop {
+        let body = match reader.next_frame(&stop) {
+            Ok(Some(b)) => b,
+            Ok(None) | Err(_) => break,
+        };
+        let Ok(msg) = ClientMsg::decode(&body) else { break };
+        match msg {
+            ClientMsg::Submit {
+                tag,
+                gen_len,
+                top_k,
+                temp_milli,
+                deadline_ms,
+                stream_buffer,
+                prompt,
+            } => {
+                let mut opts =
+                    SubmitOptions::sampling(temp_milli as f32 / 1000.0, (top_k as usize).max(1))
+                        .with_stream_buffer(stream_buffer as usize);
+                if deadline_ms > 0 {
+                    opts = opts.with_deadline(Duration::from_millis(deadline_ms));
+                }
+                match engine.submit(prompt, gen_len as usize, opts) {
+                    Ok(rx) => {
+                        cancels.insert(tag, rx.cancel_token());
+                        let out = Arc::clone(&out);
+                        forwarders.push(thread::spawn(move || forward_stream(rx, tag, out)));
+                    }
+                    Err(e) => {
+                        let reject = ServerMsg::Rejected { tag, code: reject_code(e) };
+                        if write_shared(&out, &reject).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            ClientMsg::Cancel { tag } => {
+                if let Some(tok) = cancels.get(&tag) {
+                    tok.cancel();
+                }
+            }
+        }
+    }
+    // Reader gone (hang-up, stop, or protocol error). Forwarders terminate
+    // on their own: the engine delivers every stream a Final, and a dead
+    // socket fails their writes (dropping the StreamRx = cancel).
+    for f in forwarders {
+        let _ = f.join();
+    }
+}
+
+/// Relay one request's stream to the socket until `Final` (or until the
+/// socket dies — dropping the receiver then cancels the request).
+fn forward_stream(
+    mut rx: crate::coordinator::request::StreamRx,
+    tag: u64,
+    out: Arc<Mutex<TcpStream>>,
+) {
+    loop {
+        let Ok(ev) = rx.recv() else { return };
+        let done = matches!(ev, StreamEvent::Final(_));
+        if write_shared(&out, &ServerMsg::from_event(tag, ev)).is_err() {
+            return;
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+fn write_shared(out: &Arc<Mutex<TcpStream>>, msg: &ServerMsg) -> io::Result<()> {
+    let mut w = out.lock().unwrap_or_else(|e| e.into_inner());
+    write_frame(&mut *w, &msg.encode())
+}
+
+/// Drive one streamed request over TCP as a client: connect, SUBMIT, and
+/// collect every frame for our tag through the terminal one. The shared
+/// smoke-test path for `serve --client` and the integration tests.
+pub fn run_client(
+    addr: &str,
+    prompt: &[u16],
+    gen_len: usize,
+    opts: SubmitOptions,
+) -> io::Result<Vec<ServerMsg>> {
+    let mut stream = TcpStream::connect(addr)?;
+    let submit = ClientMsg::Submit {
+        tag: 1,
+        gen_len: gen_len as u32,
+        top_k: opts.top_k as u32,
+        temp_milli: (opts.temperature * 1000.0) as u32,
+        deadline_ms: opts.deadline.map(|d| d.as_millis() as u64).unwrap_or(0),
+        stream_buffer: opts.stream_buffer as u32,
+        prompt: prompt.to_vec(),
+    };
+    write_frame(&mut stream, &submit.encode())?;
+    let mut events = Vec::new();
+    loop {
+        let body = read_frame(&mut stream)?;
+        let msg = ServerMsg::decode(&body)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        let done = msg.is_terminal();
+        events.push(msg);
+        if done {
+            return Ok(events);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_messages_roundtrip() {
+        let msgs = [
+            ClientMsg::Submit {
+                tag: 7,
+                gen_len: 16,
+                top_k: 8,
+                temp_milli: 700,
+                deadline_ms: 250,
+                stream_buffer: 64,
+                prompt: vec![1, 2, 300, 65535],
+            },
+            ClientMsg::Cancel { tag: 7 },
+        ];
+        for m in msgs {
+            let body = m.encode();
+            assert_eq!(ClientMsg::decode(&body).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn server_messages_roundtrip() {
+        let msgs = [
+            ServerMsg::Queued { tag: 1, id: 42 },
+            ServerMsg::Prefilling { tag: 1, ts_us: 123 },
+            ServerMsg::Token { tag: 1, index: 3, token: 999, ts_us: 456 },
+            ServerMsg::Final {
+                tag: 1,
+                finish: finish_code(FinishReason::Length),
+                queue_us: 1,
+                prefill_us: 2,
+                decode_us: 3,
+                total_us: 6,
+                tokens: vec![4, 5, 6],
+            },
+            ServerMsg::Rejected { tag: 2, code: reject_code(SubmitError::QueueFull) },
+        ];
+        for m in msgs {
+            let body = m.encode();
+            let back = ServerMsg::decode(&body).unwrap();
+            assert_eq!(back, m);
+            assert_eq!(back.tag(), m.tag());
+        }
+        assert!(ServerMsg::Rejected { tag: 0, code: 0 }.is_terminal());
+        assert!(!ServerMsg::Queued { tag: 0, id: 0 }.is_terminal());
+    }
+
+    #[test]
+    fn finish_codes_roundtrip() {
+        for f in [
+            FinishReason::Done,
+            FinishReason::Length,
+            FinishReason::Cancelled,
+            FinishReason::DeadlineExceeded,
+            FinishReason::Error,
+        ] {
+            assert_eq!(finish_from_code(finish_code(f)), Some(f));
+        }
+        assert_eq!(finish_from_code(9), None);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_frames() {
+        assert!(ClientMsg::decode(&[]).is_err(), "empty body");
+        assert!(ClientMsg::decode(&[0x7f]).is_err(), "unknown verb");
+        let mut body = ClientMsg::Cancel { tag: 3 }.encode();
+        body.push(0); // trailing garbage
+        assert!(ClientMsg::decode(&body).is_err());
+        let body = ClientMsg::Submit {
+            tag: 1,
+            gen_len: 1,
+            top_k: 1,
+            temp_milli: 0,
+            deadline_ms: 0,
+            stream_buffer: 0,
+            prompt: vec![1, 2, 3],
+        }
+        .encode();
+        assert!(ClientMsg::decode(&body[..body.len() - 1]).is_err(), "truncated");
+    }
+
+    /// A reader that hands out its script one byte at a time with a fake
+    /// timeout between bytes — the worst case a socket with a read
+    /// timeout produces, which must never desync the framing.
+    struct Trickle {
+        data: Vec<u8>,
+        at: usize,
+        hiccup: bool,
+    }
+
+    impl Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.at >= self.data.len() {
+                return Ok(0);
+            }
+            self.hiccup = !self.hiccup;
+            if self.hiccup {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "trickle"));
+            }
+            buf[0] = self.data[self.at];
+            self.at += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_reader_reassembles_byte_at_a_time() {
+        let m1 = ServerMsg::Token { tag: 9, index: 0, token: 17, ts_us: 5 };
+        let m2 = ServerMsg::Rejected { tag: 9, code: 2 };
+        let mut data = Vec::new();
+        for m in [&m1, &m2] {
+            let body = m.encode();
+            data.extend_from_slice(&(body.len() as u32).to_le_bytes());
+            data.extend_from_slice(&body);
+        }
+        let stop = AtomicBool::new(false);
+        let mut fr = FrameReader::new(Trickle { data, at: 0, hiccup: false });
+        let f1 = fr.next_frame(&stop).unwrap().expect("first frame");
+        assert_eq!(ServerMsg::decode(&f1).unwrap(), m1);
+        let f2 = fr.next_frame(&stop).unwrap().expect("second frame");
+        assert_eq!(ServerMsg::decode(&f2).unwrap(), m2);
+        assert!(fr.next_frame(&stop).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversized_prefix() {
+        let mut data = Vec::new();
+        data.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        data.extend_from_slice(&[0; 8]);
+        let stop = AtomicBool::new(false);
+        let mut fr = FrameReader::new(Trickle { data, at: 0, hiccup: false });
+        assert!(fr.next_frame(&stop).is_err());
+    }
+}

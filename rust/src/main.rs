@@ -5,7 +5,7 @@
 //! `cargo bench` target; see DESIGN.md §5).
 
 use intattention::attention::PipelineKind;
-use intattention::coordinator::{Engine, EngineOptions};
+use intattention::coordinator::{Engine, EngineOptions, SubmitOptions};
 use intattention::harness::experiments as exp;
 use intattention::harness::workload::request_trace;
 use intattention::model::lm::TinyLm;
@@ -157,13 +157,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let prompt: Vec<u16> = (0..r.prompt_len.min(max_seq / 2))
             .map(|i| (i * 31 % 256) as u16)
             .collect();
-        match handle.submit(prompt, r.gen_len, 0.7, 16) {
+        match handle.submit(prompt, r.gen_len, SubmitOptions::sampling(0.7, 16)) {
             Ok(rx) => receivers.push(rx),
             Err(e) => eprintln!("rejected: {e}"),
         }
     }
-    for rx in receivers {
-        let _ = rx.recv();
+    for mut rx in receivers {
+        let _ = rx.recv_final();
     }
     let snap = handle.shutdown();
     println!("{}", snap.render());

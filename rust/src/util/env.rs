@@ -18,14 +18,16 @@
 //! | `INTATTN_BENCH_FAST` | snapshot | `=1` shrinks every bench to CI smoke budgets | off |
 //! | `INTATTN_FAULT` | snapshot | fault-injection plan armed on engine start ([`crate::util::fault`]) | unset (inert) |
 //! | `INTATTN_DRAIN_TIMEOUT_MS` | snapshot | engine shutdown-drain hard stop, ms (`0` = unlimited) | `DEFAULT_DRAIN_TIMEOUT_MS` (10000) |
+//! | `INTATTN_WAITING_RATIO` | snapshot | admission interleaving gate: waiting/active ratio below which in-flight decode is not stalled for new prefills (`0` = admit greedily) | `DEFAULT_WAITING_RATIO` (1.2) |
 //! | `INTATTN_LOG` | per-read | log level (`error`/`warn`/`info`/`debug`/`trace`) | `info` |
 //! | `INTATTN_ARTIFACTS` | per-read | PJRT artifacts directory | `artifacts/` |
 //! | `INTATTN_REPORTS` | per-read | bench/experiment report directory | `reports/` |
 //! | `INTATTN_FULL` | per-read | `=1` enables the paper-scale 1K..16K sweeps | off |
+//! | `INTATTN_SERVE_ADDR` | per-read | TCP listen address of the `serve` front-end binary | `127.0.0.1:7411` |
 //!
 //! ## Snapshot semantics
 //!
-//! The ten *snapshot* knobs configure process-lifetime singletons (the
+//! The eleven *snapshot* knobs configure process-lifetime singletons (the
 //! global pool, the page geometry every state must agree on, the serving
 //! defaults). They are read **exactly once**, together, on the first
 //! [`knobs`] call; later environment mutations are invisible. That is a
@@ -46,7 +48,12 @@ use std::sync::OnceLock;
 /// overrides; `0` means wait forever).
 pub const DEFAULT_DRAIN_TIMEOUT_MS: u64 = 10_000;
 
-/// The ten process-lifetime knobs, snapshotted together on first access.
+/// Default admission interleaving gate (`INTATTN_WAITING_RATIO` overrides;
+/// `0` disables): TGI ships 1.2 waiting per active as the point where a
+/// prefill stall starts paying for itself.
+pub const DEFAULT_WAITING_RATIO: f32 = 1.2;
+
+/// The eleven process-lifetime knobs, snapshotted together on first access.
 #[derive(Clone, Copy, Debug)]
 pub struct Knobs {
     /// `INTATTN_THREADS` — computing threads for the global pool.
@@ -73,9 +80,13 @@ pub struct Knobs {
     /// `INTATTN_DRAIN_TIMEOUT_MS` — engine shutdown-drain hard stop in
     /// milliseconds (`0` = wait for in-flight work forever).
     pub drain_timeout_ms: u64,
+    /// `INTATTN_WAITING_RATIO` — default
+    /// [`crate::coordinator::BatchPolicy::waiting_served_ratio`] admission
+    /// gate (`0` = admit greedily every round).
+    pub waiting_ratio: f32,
 }
 
-/// The process-wide snapshot. First call reads all ten variables; every
+/// The process-wide snapshot. First call reads all eleven variables; every
 /// later call returns the same values.
 pub fn knobs() -> &'static Knobs {
     static K: OnceLock<Knobs> = OnceLock::new();
@@ -95,6 +106,7 @@ pub fn knobs() -> &'static Knobs {
         drain_timeout_ms: drain_timeout_ms_from(
             std::env::var("INTATTN_DRAIN_TIMEOUT_MS").ok().as_deref(),
         ),
+        waiting_ratio: waiting_ratio_from(std::env::var("INTATTN_WAITING_RATIO").ok().as_deref()),
     })
 }
 
@@ -172,6 +184,15 @@ pub fn fault_from(env: Option<&str>) -> Option<String> {
 /// forever. Junk or unset falls back to [`DEFAULT_DRAIN_TIMEOUT_MS`].
 pub fn drain_timeout_ms_from(env: Option<&str>) -> u64 {
     env.and_then(|v| v.trim().parse::<u64>().ok()).unwrap_or(DEFAULT_DRAIN_TIMEOUT_MS)
+}
+
+/// `INTATTN_WAITING_RATIO`: waiting/active admission gate; `0` disables
+/// (admit greedily). Junk, negatives, NaN or unset fall back to
+/// [`DEFAULT_WAITING_RATIO`].
+pub fn waiting_ratio_from(env: Option<&str>) -> f32 {
+    env.and_then(|v| v.trim().parse::<f32>().ok())
+        .filter(|r| r.is_finite() && *r >= 0.0)
+        .unwrap_or(DEFAULT_WAITING_RATIO)
 }
 
 #[cfg(test)]
@@ -269,6 +290,17 @@ mod tests {
         assert_eq!(drain_timeout_ms_from(Some(" 250 ")), 250);
         assert_eq!(drain_timeout_ms_from(Some("0")), 0, "0 = wait forever");
         assert_eq!(drain_timeout_ms_from(Some("junk")), DEFAULT_DRAIN_TIMEOUT_MS);
+    }
+
+    #[test]
+    fn waiting_ratio_policy() {
+        assert_eq!(waiting_ratio_from(None), DEFAULT_WAITING_RATIO);
+        assert_eq!(waiting_ratio_from(Some("2.5")), 2.5);
+        assert_eq!(waiting_ratio_from(Some(" 2.5 ")), 2.5);
+        assert_eq!(waiting_ratio_from(Some("0")), 0.0, "0 = admit greedily");
+        assert_eq!(waiting_ratio_from(Some("-1")), DEFAULT_WAITING_RATIO, "negatives fall back");
+        assert_eq!(waiting_ratio_from(Some("NaN")), DEFAULT_WAITING_RATIO);
+        assert_eq!(waiting_ratio_from(Some("junk")), DEFAULT_WAITING_RATIO);
     }
 
     #[test]

@@ -96,11 +96,11 @@ fn injected_prefill_panic_poisons_only_its_request() {
     // victim. The 10-token request must be untouched.
     fault::arm_str("panic_prefill@1").unwrap();
     let h = engine();
-    let victim = h.submit(vec![1, 2, 3], 3, 0.0, 1).unwrap();
+    let victim = h.submit(vec![1, 2, 3], 3, SubmitOptions::default()).unwrap();
     let bystander_prompt: Vec<u16> = (0..10).map(|i| (i * 3 % 32) as u16).collect();
-    let bystander = h.submit(bystander_prompt.clone(), 4, 0.0, 1).unwrap();
-    let v = victim.recv_timeout(LONG).unwrap();
-    let b = bystander.recv_timeout(LONG).unwrap();
+    let bystander = h.submit(bystander_prompt.clone(), 4, SubmitOptions::default()).unwrap();
+    let v = victim.recv_all_timeout(LONG).unwrap();
+    let b = bystander.recv_all_timeout(LONG).unwrap();
     assert_eq!(v.finish, FinishReason::Error, "victim retires poisoned");
     assert!(v.tokens.is_empty(), "panicked before its first token");
     assert_eq!(b.finish, FinishReason::Done);
@@ -113,8 +113,8 @@ fn injected_prefill_panic_poisons_only_its_request() {
     // caught panic touched nothing outside the victim's own cache.
     fault::disarm();
     let clean = engine();
-    let rx = clean.submit(bystander_prompt, 4, 0.0, 1).unwrap();
-    assert_eq!(rx.recv_timeout(LONG).unwrap().tokens, b.tokens);
+    let rx = clean.submit(bystander_prompt, 4, SubmitOptions::default()).unwrap();
+    assert_eq!(rx.recv_all_timeout(LONG).unwrap().tokens, b.tokens);
     clean.shutdown();
     c.assert_drained("prefill panic");
 }
@@ -128,11 +128,11 @@ fn injected_decode_panic_spares_the_rest_of_the_batch() {
     // the victim may fail.
     fault::arm_str("panic_decode@1").unwrap();
     let h = engine();
-    let victim = h.submit(vec![1, 2, 3], 6, 0.0, 1).unwrap();
+    let victim = h.submit(vec![1, 2, 3], 6, SubmitOptions::default()).unwrap();
     let bystander_prompt: Vec<u16> = (0..9).map(|i| (i * 5 % 32) as u16).collect();
-    let bystander = h.submit(bystander_prompt.clone(), 6, 0.0, 1).unwrap();
-    let v = victim.recv_timeout(LONG).unwrap();
-    let b = bystander.recv_timeout(LONG).unwrap();
+    let bystander = h.submit(bystander_prompt.clone(), 6, SubmitOptions::default()).unwrap();
+    let v = victim.recv_all_timeout(LONG).unwrap();
+    let b = bystander.recv_all_timeout(LONG).unwrap();
     assert_eq!(v.finish, FinishReason::Error);
     assert!(
         !v.tokens.is_empty() && v.tokens.len() < 6,
@@ -142,8 +142,8 @@ fn injected_decode_panic_spares_the_rest_of_the_batch() {
     assert_eq!(b.finish, FinishReason::Done);
     assert_eq!(b.tokens.len(), 6);
     // The engine keeps serving after the caught panic.
-    let rx = h.submit(vec![4, 5], 2, 0.0, 1).unwrap();
-    assert_eq!(rx.recv_timeout(LONG).unwrap().finish, FinishReason::Done);
+    let rx = h.submit(vec![4, 5], 2, SubmitOptions::default()).unwrap();
+    assert_eq!(rx.recv_all_timeout(LONG).unwrap().finish, FinishReason::Done);
     let snap = h.shutdown();
     assert_eq!(snap.finished_error, 1);
     assert_eq!(snap.finished_done, 2);
@@ -151,8 +151,8 @@ fn injected_decode_panic_spares_the_rest_of_the_batch() {
     // entry, before any batch-mate's cache was touched.
     fault::disarm();
     let clean = engine();
-    let rx = clean.submit(bystander_prompt, 6, 0.0, 1).unwrap();
-    assert_eq!(rx.recv_timeout(LONG).unwrap().tokens, b.tokens);
+    let rx = clean.submit(bystander_prompt, 6, SubmitOptions::default()).unwrap();
+    assert_eq!(rx.recv_all_timeout(LONG).unwrap().tokens, b.tokens);
     clean.shutdown();
     c.assert_drained("decode panic");
 }
@@ -166,13 +166,13 @@ fn injected_page_allocation_failure_is_survivable() {
     // next request survive.
     fault::arm_str("pool_alloc@1").unwrap();
     let h = engine();
-    let rx = h.submit(vec![1, 2, 3, 4], 3, 0.0, 1).unwrap();
-    let resp = rx.recv_timeout(LONG).unwrap();
+    let rx = h.submit(vec![1, 2, 3, 4], 3, SubmitOptions::default()).unwrap();
+    let resp = rx.recv_all_timeout(LONG).unwrap();
     assert_eq!(resp.finish, FinishReason::Error);
     assert!(resp.tokens.is_empty());
     // Ordinal faults are one-shot: the retry allocates normally.
-    let rx = h.submit(vec![1, 2, 3, 4], 3, 0.0, 1).unwrap();
-    let resp = rx.recv_timeout(LONG).unwrap();
+    let rx = h.submit(vec![1, 2, 3, 4], 3, SubmitOptions::default()).unwrap();
+    let resp = rx.recv_all_timeout(LONG).unwrap();
     assert_eq!(resp.finish, FinishReason::Done);
     assert_eq!(resp.tokens.len(), 3);
     let snap = h.shutdown();
@@ -194,7 +194,7 @@ fn graceful_drain_finishes_inflight_and_answers_queued() {
         ..Default::default()
     };
     let h = Engine::start(weights(), opts);
-    let inflight = h.submit(vec![1, 2, 3], 30, 0.0, 1).unwrap();
+    let inflight = h.submit(vec![1, 2, 3], 30, SubmitOptions::default()).unwrap();
     // Only proceed once that request is provably in flight: submitted later,
     // the shorter prompts below would win shortest-first admission, and a
     // drain before admission legitimately answers it Cancelled instead.
@@ -204,13 +204,13 @@ fn graceful_drain_finishes_inflight_and_answers_queued() {
         std::thread::sleep(Duration::from_millis(1));
     }
     let queued: Vec<_> =
-        (0..2).map(|i| h.submit(vec![4, (5 + i) as u16], 2, 0.0, 1).unwrap()).collect();
+        (0..2).map(|i| h.submit(vec![4, (5 + i) as u16], 2, SubmitOptions::default()).unwrap()).collect();
     let snap = h.shutdown();
-    let r = inflight.recv_timeout(LONG).unwrap();
+    let r = inflight.recv_all_timeout(LONG).unwrap();
     assert_eq!(r.finish, FinishReason::Done, "in-flight decode runs to completion");
     assert_eq!(r.tokens.len(), 30);
     for rx in queued {
-        let r = rx.recv_timeout(LONG).unwrap();
+        let r = rx.recv_all_timeout(LONG).unwrap();
         assert_eq!(r.finish, FinishReason::Cancelled, "queued work answered, not dropped");
         assert!(r.tokens.is_empty());
     }
@@ -229,14 +229,14 @@ fn drain_hard_stop_cancels_a_stuck_request() {
     fault::arm_str("delay_decode=5ms").unwrap();
     let opts = EngineOptions { drain_timeout: Duration::from_millis(30), ..Default::default() };
     let h = Engine::start(weights(), opts);
-    let rx = h.submit(vec![1, 2, 3], 1000, 0.0, 1).unwrap();
+    let rx = h.submit(vec![1, 2, 3], 1000, SubmitOptions::default()).unwrap();
     let started = std::time::Instant::now();
     while h.metrics().prefill_tokens < 3 {
         assert!(started.elapsed() < LONG, "request never admitted");
         std::thread::sleep(Duration::from_millis(1));
     }
     let snap = h.shutdown();
-    let r = rx.recv_timeout(LONG).unwrap();
+    let r = rx.recv_all_timeout(LONG).unwrap();
     assert_eq!(r.finish, FinishReason::Cancelled, "hard stop answers the stuck request");
     assert!(!r.tokens.is_empty(), "partial output survives the hard stop");
     assert_eq!(snap.finished_cancelled, 1);
@@ -250,14 +250,14 @@ fn deadline_trips_mid_decode_with_partial_output() {
     let c = chaos();
     fault::arm_str("delay_decode=5ms").unwrap();
     let h = engine();
-    let opts = SubmitOptions { deadline: Some(Duration::from_millis(60)) };
-    let rx = h.submit_with(vec![1, 2, 3], 50, 0.0, 1, opts).unwrap();
-    let r = rx.recv_timeout(LONG).unwrap();
+    let opts = SubmitOptions::default().with_deadline(Duration::from_millis(60));
+    let rx = h.submit(vec![1, 2, 3], 50, opts).unwrap();
+    let r = rx.recv_all_timeout(LONG).unwrap();
     assert_eq!(r.finish, FinishReason::DeadlineExceeded);
     assert!(r.tokens.len() < 50, "deadline must cut the run short");
     // The engine keeps serving; an undeadlined request completes.
-    let rx = h.submit(vec![4, 5, 6], 2, 0.0, 1).unwrap();
-    assert_eq!(rx.recv_timeout(LONG).unwrap().finish, FinishReason::Done);
+    let rx = h.submit(vec![4, 5, 6], 2, SubmitOptions::default()).unwrap();
+    assert_eq!(rx.recv_all_timeout(LONG).unwrap().finish, FinishReason::Done);
     let snap = h.shutdown();
     assert_eq!(snap.finished_deadline, 1);
     assert_eq!(snap.finished_done, 1);
@@ -302,13 +302,11 @@ fn randomized_fault_schedules_never_lose_or_duplicate_a_response() {
                 let prompt: Vec<u16> =
                     (0..plen).map(|j| ((i * 7 + j * 3) % 32) as u16).collect();
                 let gen = 1 + rng.below(5) as usize;
-                let deadline = if rng.below(5) == 0 {
-                    Some(Duration::from_millis(rng.below(3)))
-                } else {
-                    None
-                };
-                let rx =
-                    h.submit_with(prompt, gen, 0.0, 1, SubmitOptions { deadline }).unwrap();
+                let mut opts = SubmitOptions::default();
+                if rng.below(5) == 0 {
+                    opts = opts.with_deadline(Duration::from_millis(rng.below(3)));
+                }
+                let rx = h.submit(prompt, gen, opts).unwrap();
                 if rng.below(4) == 0 {
                     rx.cancel();
                 }
@@ -317,9 +315,9 @@ fn randomized_fault_schedules_never_lose_or_duplicate_a_response() {
             let snap = h.shutdown();
             // Invariant 1: exactly one terminal response each — present
             // after the drain, and never followed by a second.
-            for (i, rx) in rxs.into_iter().enumerate() {
+            for (i, mut rx) in rxs.into_iter().enumerate() {
                 let resp = rx
-                    .recv_timeout(LONG)
+                    .recv_final_timeout(LONG)
                     .unwrap_or_else(|e| panic!("request {i} got no terminal response: {e:?}"));
                 assert!(
                     resp.tokens.len() <= 64,

@@ -1,0 +1,134 @@
+//! TCP front-end integration: a real engine behind a real
+//! [`intattention::coordinator::tcp::TcpServer`] on an ephemeral port,
+//! driven by real sockets. Asserts the wire stream mirrors the in-process
+//! event grammar (QUEUED, PREFILLING, sequential TOKENs, one terminal
+//! FINAL), that rejects surface as REJECTED frames, and that the CANCEL
+//! verb terminates a stream inside the grammar.
+
+use intattention::coordinator::batcher::BatchPolicy;
+use intattention::coordinator::tcp::{
+    read_frame, run_client, write_frame, ClientMsg, ServerMsg, TcpServer,
+};
+use intattention::coordinator::{Engine, EngineHandle, EngineOptions, SubmitOptions};
+use intattention::model::config::ModelConfig;
+use intattention::model::weights::Weights;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn engine() -> Arc<EngineHandle> {
+    let cfg =
+        ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, max_seq: 64, mlp_mult: 2 };
+    let opts = EngineOptions {
+        policy: BatchPolicy { max_active: 4, ..Default::default() },
+        ..Default::default()
+    };
+    Arc::new(Engine::start(Weights::random(cfg, 37), opts))
+}
+
+/// Stop the server, then recover and shut down the engine it was holding.
+fn teardown(server: TcpServer, engine: Arc<EngineHandle>) {
+    server.stop();
+    Arc::try_unwrap(engine).ok().expect("server released the engine").shutdown();
+}
+
+#[test]
+fn streamed_request_over_tcp_matches_the_wire_grammar() {
+    let engine = engine();
+    let server = TcpServer::spawn(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let gen = 5usize;
+    let events = run_client(&addr, &[1, 2, 3, 4], gen, SubmitOptions::default()).unwrap();
+    assert!(events.len() >= 3, "expected at least QUEUED/PREFILLING/FINAL, got {events:?}");
+    assert!(matches!(events[0], ServerMsg::Queued { tag: 1, .. }), "first frame: {:?}", events[0]);
+    assert!(
+        matches!(events[1], ServerMsg::Prefilling { tag: 1, .. }),
+        "second frame: {:?}",
+        events[1]
+    );
+    let mut streamed = Vec::new();
+    for (k, ev) in events[2..events.len() - 1].iter().enumerate() {
+        match ev {
+            ServerMsg::Token { tag, index, token, .. } => {
+                assert_eq!(*tag, 1);
+                assert_eq!(*index as usize, k, "token indexes must be sequential");
+                streamed.push(*token);
+            }
+            other => panic!("unexpected mid-stream frame {other:?}"),
+        }
+    }
+    match events.last().unwrap() {
+        ServerMsg::Final { tag, finish, tokens, total_us, .. } => {
+            assert_eq!(*tag, 1);
+            assert_eq!(*finish, 0, "greedy short request finishes Done");
+            assert_eq!(tokens.len(), gen);
+            assert_eq!(*tokens, streamed, "FINAL tokens != streamed TOKEN frames");
+            assert!(*total_us > 0);
+        }
+        other => panic!("stream must end with FINAL, got {other:?}"),
+    }
+
+    teardown(server, engine);
+}
+
+#[test]
+fn bad_request_surfaces_as_a_rejected_frame() {
+    let engine = engine();
+    let server = TcpServer::spawn(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let events = run_client(&addr, &[], 2, SubmitOptions::default()).unwrap();
+    let expect = vec![ServerMsg::Rejected { tag: 1, code: 0 }];
+    assert_eq!(events, expect, "empty prompt must answer REJECTED(BadRequest)");
+
+    teardown(server, engine);
+}
+
+#[test]
+fn cancel_verb_terminates_the_stream_in_grammar() {
+    let engine = engine();
+    let server = TcpServer::spawn(Arc::clone(&engine), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let submit = ClientMsg::Submit {
+        tag: 7,
+        gen_len: 40,
+        top_k: 1,
+        temp_milli: 0,
+        deadline_ms: 0,
+        stream_buffer: 0,
+        prompt: vec![1, 2, 3],
+    };
+    write_frame(&mut stream, &submit.encode()).unwrap();
+    // Cancel races the decode loop: the stream must still terminate with
+    // exactly one FINAL, whichever side wins.
+    write_frame(&mut stream, &ClientMsg::Cancel { tag: 7 }.encode()).unwrap();
+
+    let mut finals = 0;
+    let mut next_index = 0u32;
+    loop {
+        let body = read_frame(&mut stream).unwrap();
+        let msg = ServerMsg::decode(&body).unwrap();
+        assert_eq!(msg.tag(), 7, "all frames carry the submit tag");
+        match msg {
+            ServerMsg::Token { index, .. } => {
+                assert_eq!(index, next_index, "token order survives the cancel race");
+                next_index += 1;
+            }
+            ServerMsg::Final { finish, tokens, .. } => {
+                finals += 1;
+                // Done(0), Length(1) or Cancelled(2) depending on the race.
+                assert!(finish <= 2, "unexpected finish code {finish}");
+                assert_eq!(tokens.len() as u32, next_index);
+                break;
+            }
+            ServerMsg::Rejected { .. } => panic!("valid submit must not be rejected"),
+            ServerMsg::Queued { .. } | ServerMsg::Prefilling { .. } => {}
+        }
+    }
+    assert_eq!(finals, 1);
+    drop(stream);
+
+    teardown(server, engine);
+}

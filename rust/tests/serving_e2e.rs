@@ -4,7 +4,9 @@
 use intattention::attention::{kv_page_rows, page_pool_stats, PipelineKind};
 use intattention::coordinator::batcher::BatchPolicy;
 use intattention::coordinator::prefix::PrefixIndex;
-use intattention::coordinator::{Engine, EngineOptions, FinishReason, SubmitError};
+use intattention::coordinator::{
+    Engine, EngineOptions, FinishReason, StreamEvent, SubmitError, SubmitOptions,
+};
 use intattention::model::config::ModelConfig;
 use intattention::model::lm::KvCache;
 use intattention::model::weights::Weights;
@@ -23,11 +25,11 @@ fn trace_replay_completes_all_requests() {
             .map(|i| {
                 let plen = 4 + (i % 5) * 8;
                 let prompt: Vec<u16> = (0..plen).map(|j| (j * 13 % 64) as u16).collect();
-                h.submit(prompt, 4, 0.5, 8).unwrap()
+                h.submit(prompt, 4, SubmitOptions::sampling(0.5, 8)).unwrap()
             })
             .collect();
         for rx in rxs {
-            let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+            let resp = rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap();
             assert_eq!(resp.tokens.len(), 4);
             assert!(resp.total_us >= resp.prefill_us);
         }
@@ -46,10 +48,10 @@ fn continuous_batching_overlaps_decodes() {
     };
     let h = Engine::start(weights(), opts);
     let rxs: Vec<_> = (0..8)
-        .map(|_| h.submit(vec![1, 2, 3, 4], 12, 0.0, 1).unwrap())
+        .map(|_| h.submit(vec![1, 2, 3, 4], 12, SubmitOptions::default()).unwrap())
         .collect();
     for rx in rxs {
-        rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap();
     }
     let snap = h.shutdown();
     assert!(snap.peak_active >= 2, "peak_active={}", snap.peak_active);
@@ -63,7 +65,7 @@ fn queue_bound_produces_backpressure_not_deadlock() {
     let mut ok = Vec::new();
     let mut full = 0;
     for _ in 0..30 {
-        match h.submit(vec![1; 32], 8, 0.0, 1) {
+        match h.submit(vec![1; 32], 8, SubmitOptions::default()) {
             Ok(rx) => ok.push(rx),
             Err(SubmitError::QueueFull) => full += 1,
             Err(e) => panic!("{e}"),
@@ -71,7 +73,7 @@ fn queue_bound_produces_backpressure_not_deadlock() {
     }
     assert!(full > 0, "expected rejections with queue depth 1");
     for rx in ok {
-        rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap();
     }
     let snap = h.shutdown();
     assert_eq!(snap.rejected as usize, full);
@@ -100,19 +102,19 @@ fn kv_budget_head_of_line_big_request_not_starved() {
     let h = Engine::start(w, opts);
     let mut rxs = Vec::new();
     for i in 0..2 {
-        rxs.push(h.submit(vec![1, 2, (i + 1) as u16, 4], 4, 0.0, 1).unwrap());
+        rxs.push(h.submit(vec![1, 2, (i + 1) as u16, 4], 4, SubmitOptions::default()).unwrap());
     }
-    rxs.push(h.submit(vec![7; 40], 8, 0.0, 1).unwrap()); // the big one
+    rxs.push(h.submit(vec![7; 40], 8, SubmitOptions::default()).unwrap()); // the big one
     // Keep the queue deeper than max_active (8) with shorter prompts, so
     // shortest-first on its own would never re-select the big request —
     // regression for the kv_head livelock (selected-then-vetoed rounds
     // admitting nothing, forever).
     for i in 0..12 {
-        rxs.push(h.submit(vec![1, 2, (i + 10) as u16, 4], 4, 0.0, 1).unwrap());
+        rxs.push(h.submit(vec![1, 2, (i + 10) as u16, 4], 4, SubmitOptions::default()).unwrap());
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx
-            .recv_timeout(std::time::Duration::from_secs(120))
+            .recv_all_timeout(std::time::Duration::from_secs(120))
             .unwrap_or_else(|e| panic!("request {i} starved: {e:?}"));
         assert!(!resp.tokens.is_empty());
     }
@@ -144,10 +146,10 @@ fn page_recycling_lets_queued_request_admit_after_another_finishes() {
     };
     let h = Engine::start(w, opts);
     let rxs: Vec<_> = (0..3)
-        .map(|i| h.submit(vec![1, 2, 3, (4 + i) as u16], 4, 0.0, 1).unwrap())
+        .map(|i| h.submit(vec![1, 2, 3, (4 + i) as u16], 4, SubmitOptions::default()).unwrap())
         .collect();
     for rx in rxs {
-        let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        let resp = rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap();
         assert_eq!(resp.tokens.len(), 4);
     }
     let snap = h.shutdown();
@@ -188,11 +190,11 @@ fn batched_decode_rounds_preserve_greedy_outputs() {
         let h = Engine::start(w.clone(), opts);
         let rxs: Vec<_> = prompts
             .iter()
-            .map(|p| h.submit(p.clone(), 6, 0.0, 1).unwrap())
+            .map(|p| h.submit(p.clone(), 6, SubmitOptions::default()).unwrap())
             .collect();
         let out = rxs
             .into_iter()
-            .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().tokens)
+            .map(|rx| rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap().tokens)
             .collect();
         h.shutdown();
         out
@@ -243,8 +245,8 @@ fn prefix_sharing_is_invisible_and_charges_prefix_pages_once() {
             for _ in 0..2 {
                 // Sequential: the second submit only enters after the first
                 // completed, so its adoption length is deterministic.
-                let rx = h.submit(prompt.clone(), 4, 0.0, 1).unwrap();
-                outs.push(rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().tokens);
+                let rx = h.submit(prompt.clone(), 4, SubmitOptions::default()).unwrap();
+                outs.push(rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap().tokens);
             }
             (outs, h.shutdown())
         };
@@ -291,10 +293,10 @@ fn concurrent_same_prompt_requests_converge_on_shared_prefix() {
         ..Default::default()
     };
     let h = Engine::start(w, opts);
-    let rxs: Vec<_> = (0..4).map(|_| h.submit(prompt.clone(), 5, 0.0, 1).unwrap()).collect();
+    let rxs: Vec<_> = (0..4).map(|_| h.submit(prompt.clone(), 5, SubmitOptions::default()).unwrap()).collect();
     let outs: Vec<Vec<u16>> = rxs
         .into_iter()
-        .map(|rx| rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap().tokens)
+        .map(|rx| rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap().tokens)
         .collect();
     let snap = h.shutdown();
     assert_eq!(snap.completed, 4);
@@ -314,20 +316,20 @@ fn concurrent_same_prompt_requests_converge_on_shared_prefix() {
 #[test]
 fn oversized_and_empty_prompts_rejected_cleanly() {
     let h = Engine::start(weights(), EngineOptions::default());
-    assert!(matches!(h.submit(vec![], 1, 0.0, 1), Err(SubmitError::BadRequest)));
+    assert!(matches!(h.submit(vec![], 1, SubmitOptions::default()), Err(SubmitError::BadRequest)));
     assert!(matches!(
-        h.submit(vec![1; 200], 1, 0.0, 1),
+        h.submit(vec![1; 200], 1, SubmitOptions::default()),
         Err(SubmitError::BadRequest)
     ));
     // Engine still serves after rejections.
-    let rx = h.submit(vec![1, 2], 2, 0.0, 1).unwrap();
-    rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    let rx = h.submit(vec![1, 2], 2, SubmitOptions::default()).unwrap();
+    rx.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
     h.shutdown();
 }
 
 #[test]
 fn dropped_receiver_cancels_and_frees_pages_for_the_next_request() {
-    // A client that hangs up mid-generation (drops its ResponseRx) must not
+    // A client that hangs up mid-generation (drops its StreamRx) must not
     // keep burning rounds and KV pages: the engine treats the hang-up as an
     // implicit cancel, retires the request at a round boundary, and the
     // freed pages admit the next request.
@@ -349,7 +351,7 @@ fn dropped_receiver_cancels_and_frees_pages_for_the_next_request() {
         ..Default::default()
     };
     let h = Engine::start(w, opts);
-    let victim = h.submit(victim_prompt, 8, 0.0, 1).unwrap();
+    let victim = h.submit(victim_prompt, 8, SubmitOptions::default()).unwrap();
     let started = std::time::Instant::now();
     while h.metrics().prefill_tokens < 8 {
         assert!(
@@ -359,8 +361,8 @@ fn dropped_receiver_cancels_and_frees_pages_for_the_next_request() {
         std::thread::sleep(std::time::Duration::from_millis(1));
     }
     drop(victim); // client hangs up mid-prefill
-    let follower = h.submit(vec![1, 2, 3, 4], 4, 0.0, 1).unwrap();
-    let resp = follower.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    let follower = h.submit(vec![1, 2, 3, 4], 4, SubmitOptions::default()).unwrap();
+    let resp = follower.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap();
     assert_eq!(resp.finish, FinishReason::Done, "follower must be served after the hang-up");
     assert_eq!(resp.tokens.len(), 4);
     let snap = h.shutdown();
@@ -380,12 +382,57 @@ fn dropped_receiver_cancels_and_frees_pages_for_the_next_request() {
 }
 
 #[test]
+fn streamed_tokens_are_byte_identical_to_the_final_response() {
+    // Streaming is pure delivery, not a numerics change: per pipeline, the
+    // Token-event sequence a client consumes incrementally must equal the
+    // terminal `Final.tokens` byte-for-byte, and must equal the greedy
+    // output of a second engine whose client only reads the terminal via
+    // the `recv_all` shim.
+    let w = weights();
+    let prompts: Vec<Vec<u16>> = (0..4u16)
+        .map(|i| (0..6 + i).map(|j| (j * 11 + i) % 64).collect())
+        .collect();
+    for kind in [PipelineKind::QuantOnly, PipelineKind::IntAttention] {
+        let opts = || EngineOptions { attention: kind, ..Default::default() };
+        // Engine A: drain event-by-event.
+        let h = Engine::start(w.clone(), opts());
+        let mut streamed_outs = Vec::new();
+        for p in &prompts {
+            let mut rx = h.submit(p.clone(), 6, SubmitOptions::default()).unwrap();
+            let mut tokens = Vec::new();
+            let resp = loop {
+                match rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap() {
+                    StreamEvent::Token { token, .. } => tokens.push(token),
+                    StreamEvent::Final(r) => break r,
+                    _ => {}
+                }
+            };
+            assert_eq!(tokens, resp.tokens, "{}: stream vs Final drifted", kind.name());
+            streamed_outs.push(tokens);
+        }
+        h.shutdown();
+        // Engine B: terminal-only clients via the shim.
+        let h = Engine::start(w.clone(), opts());
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| h.submit(p.clone(), 6, SubmitOptions::default()).unwrap())
+            .collect();
+        let shim_outs: Vec<Vec<u16>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv_all_timeout(std::time::Duration::from_secs(120)).unwrap().tokens)
+            .collect();
+        h.shutdown();
+        assert_eq!(streamed_outs, shim_outs, "{}: delivery mode changed outputs", kind.name());
+    }
+}
+
+#[test]
 fn ttft_reported_smaller_for_short_prompts() {
     let h = Engine::start(weights(), EngineOptions::default());
-    let short = h.submit(vec![1, 2], 2, 0.0, 1).unwrap();
-    let r_short = short.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
-    let long = h.submit(vec![1; 80], 2, 0.0, 1).unwrap();
-    let r_long = long.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    let short = h.submit(vec![1, 2], 2, SubmitOptions::default()).unwrap();
+    let r_short = short.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
+    let long = h.submit(vec![1; 80], 2, SubmitOptions::default()).unwrap();
+    let r_long = long.recv_all_timeout(std::time::Duration::from_secs(60)).unwrap();
     assert!(
         r_long.prefill_us > r_short.prefill_us,
         "80-token prefill {}us !> 2-token {}us",

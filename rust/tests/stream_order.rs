@@ -1,0 +1,230 @@
+//! Stream-grammar property suite: every event stream a request observes —
+//! fault-free or under chaos schedules ([`intattention::util::fault`]) —
+//! must match the grammar
+//!
+//! ```text
+//! Queued ( Prefilling Token* )? Final
+//! ```
+//!
+//! with Token indexes strictly sequential from 0, timestamps
+//! non-decreasing, **exactly one** Final as the last event, and the Final
+//! response byte-identical to (and timing-consistent with) the per-token
+//! events that preceded it. Whatever aborts the request — injected
+//! panics, allocation failures, cancels, deadlines, drains, hard stops —
+//! the stream must still terminate inside that grammar.
+
+use intattention::coordinator::batcher::BatchPolicy;
+use intattention::coordinator::{
+    Engine, EngineOptions, FinishReason, Response, StreamEvent, StreamRx, SubmitOptions,
+};
+use intattention::model::config::ModelConfig;
+use intattention::model::weights::Weights;
+use intattention::util::fault;
+use intattention::util::proptest::{check, Config};
+use std::sync::{Mutex, MutexGuard, Once};
+use std::time::Duration;
+
+const LONG: Duration = Duration::from_secs(120);
+
+fn weights() -> Weights {
+    let cfg =
+        ModelConfig { vocab: 32, d_model: 16, n_layers: 1, n_heads: 2, max_seq: 64, mlp_mult: 2 };
+    Weights::random(cfg, 31)
+}
+
+/// Silence the *expected* injected panics (typed payload) only.
+fn install_quiet_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<fault::Injected>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// The fault plan is process-global: serialize scenarios within this file.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    install_quiet_hook();
+    fault::ensure_env_armed();
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm();
+    guard
+}
+
+/// Drain a stream to (and including) its Final, then assert it is closed.
+fn collect(rx: &mut StreamRx, i: usize) -> Vec<StreamEvent> {
+    let mut events = Vec::new();
+    loop {
+        let ev = rx
+            .recv_timeout(LONG)
+            .unwrap_or_else(|e| panic!("request {i}: stream died before Final: {e:?}"));
+        let terminal = matches!(ev, StreamEvent::Final(_));
+        events.push(ev);
+        if terminal {
+            break;
+        }
+    }
+    assert!(rx.try_recv().is_err(), "request {i}: event after Final");
+    events
+}
+
+/// Assert the grammar over one collected stream and hand back its Final.
+fn assert_grammar(i: usize, events: &[StreamEvent]) -> &Response {
+    let id = events[0].id();
+    assert!(
+        matches!(events[0], StreamEvent::Queued { .. }),
+        "request {i}: stream must open with Queued, got {:?}",
+        events[0]
+    );
+    let mut prefilling_ts = None;
+    let mut tokens: Vec<u16> = Vec::new();
+    let mut token_ts: Vec<u64> = Vec::new();
+    let mut resp = None;
+    for (k, ev) in events.iter().enumerate() {
+        assert_eq!(ev.id(), id, "request {i}: stream mixes request ids");
+        match ev {
+            StreamEvent::Queued { .. } => {
+                assert_eq!(k, 0, "request {i}: duplicate Queued");
+            }
+            StreamEvent::Prefilling { ts_us, .. } => {
+                // The only event that may sit between Queued and the tokens.
+                assert_eq!(k, 1, "request {i}: Prefilling out of place");
+                assert!(prefilling_ts.is_none(), "request {i}: duplicate Prefilling");
+                prefilling_ts = Some(*ts_us);
+            }
+            StreamEvent::Token { index, token, ts_us, .. } => {
+                assert!(prefilling_ts.is_some(), "request {i}: Token before Prefilling");
+                assert!(resp.is_none(), "request {i}: Token after Final");
+                assert_eq!(
+                    *index as usize,
+                    tokens.len(),
+                    "request {i}: token indexes must be 0,1,2,…"
+                );
+                if let Some(&prev) = token_ts.last() {
+                    assert!(*ts_us >= prev, "request {i}: token timestamps went backwards");
+                }
+                tokens.push(*token);
+                token_ts.push(*ts_us);
+            }
+            StreamEvent::Final(r) => {
+                assert_eq!(k, events.len() - 1, "request {i}: Final must be the last event");
+                resp = Some(r);
+            }
+        }
+    }
+    let resp = resp.unwrap_or_else(|| panic!("request {i}: stream ended without Final"));
+    assert_eq!(resp.id, id, "request {i}: Final carries the wrong id");
+    assert_eq!(resp.tokens, tokens, "request {i}: Final tokens != streamed tokens");
+    // Timing agreement, conditional on how far the request got: the Final's
+    // derived breakdown is computed from the same stamps the events carried.
+    if let Some(ts) = prefilling_ts {
+        assert_eq!(resp.queue_us, ts, "request {i}: Prefilling ts != queue_us");
+    }
+    if let Some(&first) = token_ts.first() {
+        assert_eq!(resp.ttft_us(), first, "request {i}: first Token ts != TTFT");
+    }
+    assert_eq!(
+        resp.queue_us + resp.prefill_us + resp.decode_us,
+        resp.total_us,
+        "request {i}: timing phases must partition the total"
+    );
+    resp
+}
+
+#[test]
+fn fault_free_streams_obey_the_grammar() {
+    let _g = lock();
+    let h = Engine::start(weights(), EngineOptions::default());
+    let mut rxs = Vec::new();
+    for i in 0..4usize {
+        let prompt: Vec<u16> = (0..3 + i).map(|j| ((i * 5 + j) % 32) as u16).collect();
+        rxs.push((i, 2 + i, h.submit(prompt, 2 + i, SubmitOptions::default()).unwrap()));
+    }
+    for (i, gen, mut rx) in rxs {
+        let events = collect(&mut rx, i);
+        let resp = assert_grammar(i, &events);
+        assert_eq!(resp.finish, FinishReason::Done);
+        assert_eq!(resp.tokens.len(), gen, "request {i}: fault-free run yields every token");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn randomized_fault_schedules_preserve_stream_grammar() {
+    let _g = lock();
+    let cases = if cfg!(miri) { 2 } else { 12 };
+    let base_seed = fault::env_seed().unwrap_or(0x57E4);
+    check(
+        "stream grammar holds under chaos fault schedules",
+        Config { cases, base_seed },
+        |rng| {
+            let mut clauses: Vec<String> = Vec::new();
+            if rng.below(2) == 0 {
+                clauses.push(format!("pool_alloc@{}", 1 + rng.below(12)));
+            }
+            if rng.below(2) == 0 {
+                clauses.push(format!("panic_prefill@{}", 1 + rng.below(6)));
+            }
+            if rng.below(2) == 0 {
+                clauses.push(format!("panic_decode@{}", 1 + rng.below(20)));
+            }
+            if !cfg!(miri) && rng.below(3) == 0 {
+                let site = ["delay_prefill", "delay_decode", "delay_round"][rng.below(3) as usize];
+                clauses.push(format!("{site}={}us", 100 * (1 + rng.below(8))));
+            }
+            fault::arm_str(&clauses.join(",")).unwrap();
+
+            // Sometimes a tight hard-stop window, so drains cut requests off.
+            let drain_timeout = if rng.below(3) == 0 {
+                Duration::from_millis(rng.below(5))
+            } else {
+                Duration::from_secs(30)
+            };
+            let max_active = 1 + rng.below(4) as usize;
+            let opts = EngineOptions {
+                drain_timeout,
+                policy: BatchPolicy { max_active, ..Default::default() },
+                ..Default::default()
+            };
+            let h = Engine::start(weights(), opts);
+            let n = if cfg!(miri) { 2 } else { 3 + rng.below(4) as usize };
+            let mut rxs = Vec::with_capacity(n);
+            for i in 0..n {
+                let plen = 2 + rng.below(10) as usize;
+                let prompt: Vec<u16> = (0..plen).map(|j| ((i * 7 + j * 3) % 32) as u16).collect();
+                let gen = 1 + rng.below(6) as usize;
+                let mut sopts = SubmitOptions::default();
+                if rng.below(5) == 0 {
+                    sopts = sopts.with_deadline(Duration::from_millis(rng.below(3)));
+                }
+                let rx = h.submit(prompt, gen, sopts).unwrap();
+                if rng.below(4) == 0 {
+                    rx.cancel();
+                }
+                rxs.push((i, gen, rx));
+            }
+            // Half the cases shut down while requests are still in flight —
+            // the drain (or hard stop) must terminate every stream in
+            // grammar, not just completed ones.
+            let mut h = Some(h);
+            if rng.below(2) == 0 {
+                h.take().unwrap().shutdown();
+            }
+            for (i, gen, mut rx) in rxs {
+                let events = collect(&mut rx, i);
+                let resp = assert_grammar(i, &events);
+                assert!(resp.tokens.len() <= gen, "request {i}: more tokens than asked for");
+                if resp.finish == FinishReason::Done {
+                    assert_eq!(resp.tokens.len(), gen, "request {i}: Done implies full output");
+                }
+            }
+            if let Some(h) = h.take() {
+                h.shutdown();
+            }
+        },
+    );
+}
